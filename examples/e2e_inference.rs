@@ -1,0 +1,139 @@
+//! END-TO-END driver: every layer of the stack composed on a real small
+//! workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_inference -- [requests]
+//! ```
+//!
+//! What runs, layer by layer:
+//!   L1  Pallas output-stationary bf16 matmul kernels (inside the HLO),
+//!   L2  the TinyConvNet JAX graph (im2col convs + ReLU + FC head),
+//!       AOT-lowered once by `make artifacts` to HLO text,
+//!   L3  this rust process: PJRT loads + compiles the artifact, a
+//!       dedicated inference thread serves batched requests, and the SA
+//!       power engine analyzes the *actual* activations of every request
+//!       (emergent ReLU zero fractions — the paper's ZVCG driver).
+//!
+//! Reported: per-request latency/throughput, logits, per-layer zero
+//! fractions, per-layer SA energy (baseline vs proposed), and a
+//! rust-vs-XLA functional cross-check. Recorded in EXPERIMENTS.md §E2E.
+
+use std::path::Path;
+
+use sa_lowpower::bf16::{matmul_f32acc, Bf16};
+use sa_lowpower::coordinator::{
+    analyze_layer_with_data, paper_configs, synthetic_image, AnalysisOptions,
+    InferenceServer, TinycnnParams,
+};
+use sa_lowpower::workload::im2col_same;
+
+fn main() {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("artifacts/ not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let seed = 7u64;
+    let params = TinycnnParams::generate(seed);
+    let t0 = std::time::Instant::now();
+    let server = InferenceServer::start(dir, params.clone()).expect("server start");
+    println!(
+        "inference server up in {:?} (compile-once artifact cache)",
+        t0.elapsed()
+    );
+    let net = server.network.clone();
+    let opts = AnalysisOptions { seed, max_tiles_per_layer: 24, ..Default::default() };
+    let configs = paper_configs();
+
+    // ---- functional cross-check: rust bf16 GEMM vs the XLA layer-1 ----
+    let img0 = synthetic_image(seed);
+    let resp0 = server.infer(img0.clone()).expect("infer");
+    {
+        let l = &net.layers[0];
+        let a = im2col_same(&img0, l.h, l.w, l.cin, l.kh, l.kw, l.stride);
+        let g = l.gemm();
+        let a16: Vec<Bf16> = a.iter().map(|&x| Bf16::from_f32(x)).collect();
+        let b16: Vec<Bf16> =
+            params.gemm_weights(0).iter().map(|&x| Bf16::from_f32(x)).collect();
+        let c = matmul_f32acc(&a16, &b16, g.m, g.k, g.n);
+        let max_err = c
+            .iter()
+            .zip(&resp0.activations[0])
+            .map(|(r, x)| (r.max(0.0) - x).abs())
+            .fold(0f32, f32::max);
+        println!("rust-vs-XLA layer-1 cross-check: max abs err {max_err:.2e} ✓");
+        assert!(max_err < 2e-2);
+    }
+
+    // ---- serve a batch of requests, measure latency + power ----
+    let mut per_layer_base = vec![0f64; resp0.activations.len()];
+    let mut per_layer_prop = vec![0f64; resp0.activations.len()];
+    let mut zero_sums = vec![0f64; resp0.activations.len()];
+    let t_batch = std::time::Instant::now();
+    for r in 0..requests {
+        let image = synthetic_image(seed.wrapping_add(1 + r as u64));
+        let resp = server.infer(image.clone()).expect("infer");
+        println!(
+            "req {r:>2}: {:>9.3?}  logits[0]={:+.3}  zeros={:?}",
+            resp.latency,
+            resp.logits[0],
+            resp.zero_fractions
+                .iter()
+                .map(|z| format!("{:.0}%", z * 100.0))
+                .collect::<Vec<_>>()
+        );
+        // SA power on this request's real data flow
+        let mut fm = image;
+        for (i, layer) in net.layers.iter().enumerate().take(resp.activations.len()) {
+            let rep = analyze_layer_with_data(
+                layer,
+                i,
+                fm,
+                params.gemm_weights(i).to_vec(),
+                &configs,
+                &opts,
+            );
+            per_layer_base[i] += rep.energy_of("baseline").unwrap().total();
+            per_layer_prop[i] += rep.energy_of("proposed").unwrap().total();
+            zero_sums[i] += rep.input_zero_frac;
+            fm = resp.activations[i].clone();
+        }
+    }
+    let wall = t_batch.elapsed();
+
+    println!("\nper-layer SA energy over {requests} requests (real activations):");
+    println!("layer   zeros_in  baseline_nJ  proposed_nJ  saved_%");
+    let mut tb = 0.0;
+    let mut tp = 0.0;
+    for i in 0..per_layer_base.len() {
+        let (b, p) = (per_layer_base[i], per_layer_prop[i]);
+        tb += b;
+        tp += p;
+        println!(
+            "conv{}   {:>6.1}%  {:>11.3}  {:>11.3}  {:>6.2}",
+            i + 1,
+            100.0 * zero_sums[i] / requests as f64,
+            b * 1e-6,
+            p * 1e-6,
+            100.0 * (b - p) / b
+        );
+    }
+    println!(
+        "TOTAL             {:>11.3}  {:>11.3}  {:>6.2}",
+        tb * 1e-6,
+        tp * 1e-6,
+        100.0 * (tb - tp) / tb
+    );
+    println!(
+        "\nthroughput: {:.1} req/s  | mean latency {:?} | max {:?} | errors {}",
+        requests as f64 / wall.as_secs_f64(),
+        server.metrics.mean_latency(),
+        server.metrics.max_latency(),
+        server.metrics.errors()
+    );
+}

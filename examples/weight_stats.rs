@@ -1,0 +1,67 @@
+//! Paper Fig. 2: weight / exponent / mantissa value distributions of
+//! ResNet50 and MobileNet in Bfloat16 — the statistical foundation of
+//! the paper's *selective* (mantissa-only) bus-invert coding.
+//!
+//! ```bash
+//! cargo run --release --example weight_stats
+//! ```
+
+use sa_lowpower::report::fig2_tables;
+use sa_lowpower::stats::WeightFieldStats;
+use sa_lowpower::workload::{gen_weights, Network};
+
+fn ascii_hist(label: &str, hist: &[u64], max_rows: usize) {
+    println!("  {label}:");
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return;
+    }
+    // group into max_rows buckets for display
+    let group = hist.len().div_ceil(max_rows);
+    let peak = hist
+        .chunks(group)
+        .map(|c| c.iter().sum::<u64>())
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    for (gi, chunk) in hist.chunks(group).enumerate() {
+        let mass: u64 = chunk.iter().sum();
+        if mass == 0 {
+            continue;
+        }
+        let bar = "#".repeat((mass * 48 / peak) as usize);
+        println!(
+            "    [{:>3}..{:>3}] {:>7} {bar}",
+            gi * group,
+            (gi * group + group - 1).min(hist.len() - 1),
+            mass
+        );
+    }
+}
+
+fn main() {
+    for name in ["resnet50", "mobilenet"] {
+        let net = Network::by_name(name).unwrap();
+        let mut weights = Vec::new();
+        for (i, l) in net.layers.iter().enumerate() {
+            weights.extend(gen_weights(l, 0xCAFE, i));
+        }
+        let stats = WeightFieldStats::from_f32(&weights);
+        let (summary, _, _) = fig2_tables(name, &stats);
+        println!("================ Fig. 2 — {name} ================");
+        summary.print();
+        ascii_hist("bf16 exponent distribution (concentrated)", &stats.exp_hist, 16);
+        ascii_hist("bf16 mantissa distribution (near-uniform)", &stats.man_hist, 16);
+        println!();
+        // The selective-coding decision, quantified:
+        println!(
+            "  -> expected unencoded toggles/transfer: mantissa {:.2} of 7, exponent {:.2} of 8",
+            stats.mantissa_expected_hamming(),
+            stats.exponent_expected_hamming()
+        );
+        println!(
+            "  -> BIC on the mantissa attacks {:.1}x more switching than on the exponent\n",
+            stats.mantissa_expected_hamming() / stats.exponent_expected_hamming().max(1e-9)
+        );
+    }
+}

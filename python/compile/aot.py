@@ -1,0 +1,106 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+This is the only place python touches the system; `make artifacts` runs it
+once and the rust binary is self-contained afterwards.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is lowered with return_tuple=True, so the rust side always
+unwraps a tuple. All artifact interfaces are f32 (casts to bf16 happen
+inside the graph) so the rust side never needs bf16 literal support.
+
+A plain-text manifest (artifacts/manifest.txt) records, per artifact:
+name, file, input shapes, output shapes — parsed by rust/src/runtime/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _fmt_aval(aval) -> str:
+    dt = jnp.dtype(aval.dtype).name
+    dims = ",".join(str(d) for d in aval.shape)
+    return f"{dt}[{dims}]"
+
+
+# Fixed shapes for the statistics cross-check artifacts. The rust side pads
+# to these shapes and corrects the zero/exponent-0 counts for the padding.
+WEIGHT_STATS_LEN = 16384
+ACTIVITY_LANES = 16
+ACTIVITY_LEN = 1024
+
+GEMM_DIM = 256
+
+
+def entry_points():
+    """(name, fn, arg_specs) for every artifact."""
+    x_spec = _spec(model.TINYCNN_INPUT)
+    param_specs = [_spec(s) for s in model.tinycnn_param_shapes()]
+    g = _spec((GEMM_DIM, GEMM_DIM))
+    return [
+        ("tinycnn_forward", model.tinycnn_forward, [x_spec, *param_specs]),
+        ("gemm_256", model.gemm, [g, g]),
+        ("gemm_zero_skip_256", model.gemm_zero_skip, [g, g]),
+        ("weight_stats", model.weight_stats, [_spec((WEIGHT_STATS_LEN,))]),
+        (
+            "activity_stats",
+            model.activity_stats,
+            [_spec((ACTIVITY_LANES, ACTIVITY_LEN))],
+        ),
+    ]
+
+
+def lower_all(outdir: str) -> list[str]:
+    os.makedirs(outdir, exist_ok=True)
+    manifest_lines = []
+    for name, fn, specs in entry_points():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        outs = jax.tree_util.tree_leaves(out_avals)
+        ins = ";".join(_fmt_aval(s) for s in specs)
+        os_ = ";".join(_fmt_aval(o) for o in outs)
+        manifest_lines.append(f"name={name} file={fname} inputs={ins} outputs={os_}")
+        print(f"  {name}: {len(text)} chars, in=[{ins}] out=[{os_}]")
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return manifest_lines
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--outdir", default="../artifacts")
+    args = p.parse_args()
+    print(f"lowering artifacts to {args.outdir}")
+    lower_all(args.outdir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: switching-activity + zero measurement over bf16 streams.
+
+The paper's entire claim is phrased in terms of the switching activity of
+the value streams entering the systolic array (Hamming distance between
+consecutive bus values) and the fraction of zero-valued inputs. This kernel
+is the measurement hot-spot: given a (lanes, length) stream matrix of
+bfloat16 values (one lane per SA row/column), it computes per lane
+
+  * the total number of bit toggles between consecutive stream elements
+    (sum of popcount(bits[t] ^ bits[t+1]))
+  * the number of zero elements (+0.0 or -0.0, matching the paper's
+    zero-detector which fires on magnitude zero).
+
+It is used to cross-check the rust activity model (rust/src/activity/)
+through the AOT artifact `activity_stats`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _activity_kernel(bits_ref, tog_ref, zer_ref):
+    bits = bits_ref[...]
+    x = bits[:, 1:] ^ bits[:, :-1]
+    tog_ref[...] = jnp.sum(
+        jax.lax.population_count(x).astype(jnp.int32), axis=1
+    )
+    # bf16 magnitude mask (everything but the sign bit), as a python int so
+    # the kernel captures no traced constants (pallas lowering requirement).
+    zer_ref[...] = jnp.sum(
+        ((bits & 0x7FFF) == 0).astype(jnp.int32), axis=1
+    )
+
+
+@jax.jit
+def stream_activity(streams: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-lane (toggles, zeros) of a (lanes, length) bf16 stream matrix.
+
+    Toggles count transitions *within* each lane's sequence (length-1
+    transitions per lane), exactly what a pipeline register at the array
+    edge would experience as the stream passes through it.
+    """
+    if streams.ndim != 2:
+        raise ValueError(f"streams must be 2-D, got {streams.shape}")
+    lanes, _ = streams.shape
+    bits = jax.lax.bitcast_convert_type(
+        streams.astype(jnp.bfloat16), jnp.uint16
+    )
+    return pl.pallas_call(
+        _activity_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((lanes,), jnp.int32),
+            jax.ShapeDtypeStruct((lanes,), jnp.int32),
+        ),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(bits)

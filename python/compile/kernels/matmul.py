@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: output-stationary tiled bf16 matmul.
+
+This is the compute hot-spot of the paper's systolic array, re-expressed for
+a TPU-style memory hierarchy (DESIGN.md §Hardware-Adaptation):
+
+  * the paper's 16x16 PE array  ->  a (TILE_M, TILE_N) output block that
+    stays resident ("output-stationary") while K blocks stream through;
+  * the paper's West/North operand streaming  ->  the BlockSpec-scheduled
+    HBM->VMEM movement of A row-blocks and B column-blocks;
+  * the paper's zero-value clock gating  ->  block-level zero skipping:
+    when an entire A block is zero the MXU dot is skipped (`pl.when`),
+    which is the granularity a systolic TPU pipeline can actually exploit.
+
+Numerics: operands are bfloat16, accumulation is float32 (MXU-style).
+Kernels are always lowered with interpret=True: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and correctness (not wallclock) is what the
+interpret path validates. Real-TPU efficiency is *estimated* from the VMEM
+footprint / MXU shape in DESIGN.md, never measured here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper's SA is 16x16 PEs. We default the output tile to the same shape
+# so one grid step corresponds to one SA tile of the GEMM tiling that the
+# rust coordinator performs (rust/src/workload/tiler.rs).
+TILE_M = 16
+TILE_N = 16
+TILE_K = 16
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, skip_zero_blocks: bool):
+    """One (i, j, k) grid step: o[i,j] += a[i,k] @ b[k,j].
+
+    The (i, j) output block is output-stationary across the innermost k
+    dimension, mirroring the paper's accumulation inside each PE.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    def _mac():
+        a = a_ref[...].astype(jnp.float32)
+        b = b_ref[...].astype(jnp.float32)
+        o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    if skip_zero_blocks:
+        # Zero-value gating at block granularity: a block of zero inputs
+        # contributes nothing; skip the MXU op entirely.
+        nonzero = jnp.any(a_ref[...] != 0)
+
+        @pl.when(nonzero)
+        def _():
+            _mac()
+    else:
+        _mac()
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile_m", "tile_n", "tile_k", "skip_zero_blocks"),
+)
+def matmul_bf16(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tile_m: int = TILE_M,
+    tile_n: int = TILE_N,
+    tile_k: int = TILE_K,
+    skip_zero_blocks: bool = False,
+) -> jax.Array:
+    """Tiled bf16 x bf16 -> f32 matmul via the Pallas kernel.
+
+    Accepts any (M, K) x (K, N); pads to tile multiples and slices back.
+    Inputs are cast to bfloat16 (the paper's arithmetic format); the
+    accumulator is float32, as in the paper's PE (bf16 multiply, wider add).
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad matmul shapes: {a.shape} x {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    a = a.astype(jnp.bfloat16)
+    b = b.astype(jnp.bfloat16)
+
+    mp, kp, np_ = _ceil_to(m, tile_m), _ceil_to(k, tile_k), _ceil_to(n, tile_n)
+    a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+
+    grid = (mp // tile_m, np_ // tile_n, kp // tile_k)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, skip_zero_blocks=skip_zero_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, b)
+    return out[:m, :n]

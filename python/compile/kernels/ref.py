@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (the L1 correctness signal).
+
+Everything here is deliberately boring: plain jnp ops, no pallas, no
+cleverness. pytest (python/tests/) asserts the kernels match these
+references over hypothesis-generated shapes, dtypes and value patterns.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """bf16 x bf16 -> f32 matmul, the paper's PE arithmetic."""
+    a = a.astype(jnp.bfloat16).astype(jnp.float32)
+    b = b.astype(jnp.bfloat16).astype(jnp.float32)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def stream_activity_ref(streams: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-lane (toggles, zeros) of a (lanes, length) bf16 stream matrix."""
+    bits = jax.lax.bitcast_convert_type(
+        streams.astype(jnp.bfloat16), jnp.uint16
+    )
+    x = bits[:, 1:] ^ bits[:, :-1]
+    toggles = jax.lax.population_count(x).astype(jnp.int32).sum(axis=1)
+    zeros = ((bits & jnp.uint16(0x7FFF)) == 0).astype(jnp.int32).sum(axis=1)
+    return toggles, zeros
+
+
+def conv2d_ref(
+    x: jax.Array, w: jax.Array, stride: int, padding: str
+) -> jax.Array:
+    """NHWC x HWIO conv via lax.conv_general_dilated, bf16 operands."""
+    xf = x.astype(jnp.bfloat16).astype(jnp.float32)
+    wf = w.astype(jnp.bfloat16).astype(jnp.float32)
+    return jax.lax.conv_general_dilated(
+        xf,
+        wf,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

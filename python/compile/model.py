@@ -1,0 +1,191 @@
+"""L2: JAX model layer — CNN building blocks on top of the L1 Pallas matmul.
+
+Convolutions are lowered to GEMM by explicit im2col (the same lowering the
+rust coordinator performs in rust/src/workload/im2col.rs), so that every
+multiply-accumulate in the network flows through the Pallas output-
+stationary matmul kernel — i.e. through the "systolic array" compute path.
+
+The e2e demo network (TinyConvNet, 32x32 inputs) is deliberately small:
+it is the functional workload of examples/e2e_inference.rs, where the rust
+coordinator runs XLA inference and SA power analysis side by side. The
+per-layer ReLU activations are returned so the coordinator can measure the
+*emergent* zero fractions that drive the paper's zero-value clock gating.
+
+Also defined here: the weight-statistics graph behind Fig. 2 (bf16
+exponent/mantissa histograms) used to cross-check the rust stats module.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.activity import stream_activity
+from .kernels.matmul import matmul_bf16
+
+
+# ---------------------------------------------------------------------------
+# im2col convolution on top of the Pallas matmul
+# ---------------------------------------------------------------------------
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """Explicit im2col: NHWC (pre-padded) -> (N*OH*OW, KH*KW*C) patches.
+
+    Patch features are ordered (kh, kw, c), matching both the HWIO weight
+    reshape below and the rust lowering (workload/im2col.rs) bit-for-bit.
+    """
+    n, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    slices = []
+    for i in range(kh):
+        for j in range(kw):
+            s = x[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            slices.append(s)  # (n, oh, ow, c)
+    patches = jnp.stack(slices, axis=3)  # (n, oh, ow, kh*kw, c)
+    return patches.reshape(n * oh * ow, kh * kw * c)
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    skip_zero_blocks: bool = False,
+) -> jax.Array:
+    """NHWC x HWIO convolution via im2col + the Pallas bf16 GEMM."""
+    n, h, wdt, c = x.shape
+    kh, kw, ci, co = w.shape
+    assert ci == c, f"channel mismatch {ci} vs {c}"
+    if padding == "SAME":
+        oh = -(-h // stride)
+        ow = -(-wdt // stride)
+        pad_h = max(0, (oh - 1) * stride + kh - h)
+        pad_w = max(0, (ow - 1) * stride + kw - wdt)
+        x = jnp.pad(
+            x,
+            (
+                (0, 0),
+                (pad_h // 2, pad_h - pad_h // 2),
+                (pad_w // 2, pad_w - pad_w // 2),
+                (0, 0),
+            ),
+        )
+    elif padding != "VALID":
+        raise ValueError(f"unsupported padding {padding!r}")
+    _, hp, wp, _ = x.shape
+    oh = (hp - kh) // stride + 1
+    ow = (wp - kw) // stride + 1
+
+    a = im2col(x, kh, kw, stride)  # (M, K) with M = n*oh*ow
+    b = w.reshape(kh * kw * c, co)  # (K, N)
+    y = matmul_bf16(a, b, skip_zero_blocks=skip_zero_blocks)
+    return y.reshape(n, oh, ow, co)
+
+
+# ---------------------------------------------------------------------------
+# TinyConvNet: the e2e demo workload
+# ---------------------------------------------------------------------------
+
+
+class ConvSpec(NamedTuple):
+    kh: int
+    kw: int
+    cin: int
+    cout: int
+    stride: int
+
+
+# 32x32x3 input. Five conv layers + GAP + FC head. Matches
+# rust/src/workload/tinycnn.rs layer-for-layer.
+TINYCNN_CONVS: tuple[ConvSpec, ...] = (
+    ConvSpec(3, 3, 3, 16, 1),
+    ConvSpec(3, 3, 16, 32, 2),
+    ConvSpec(3, 3, 32, 32, 1),
+    ConvSpec(3, 3, 32, 64, 2),
+    ConvSpec(3, 3, 64, 64, 1),
+)
+TINYCNN_CLASSES = 10
+TINYCNN_INPUT = (1, 32, 32, 3)
+
+
+def tinycnn_param_shapes() -> list[tuple[int, ...]]:
+    """Shapes of the forward-pass parameters, in argument order."""
+    shapes: list[tuple[int, ...]] = []
+    for s in TINYCNN_CONVS:
+        shapes.append((s.kh, s.kw, s.cin, s.cout))
+    shapes.append((TINYCNN_CONVS[-1].cout, TINYCNN_CLASSES))  # fc weight
+    shapes.append((TINYCNN_CLASSES,))  # fc bias
+    return shapes
+
+
+def tinycnn_forward(x: jax.Array, *params: jax.Array):
+    """Forward pass. Returns (logits, act_1, ..., act_5).
+
+    All conv GEMMs run through the Pallas kernel; per-layer post-ReLU
+    activations are returned so the rust coordinator can measure emergent
+    zero fractions (the input of the paper's zero-value clock gating).
+    """
+    assert len(params) == len(TINYCNN_CONVS) + 2
+    conv_ws = params[: len(TINYCNN_CONVS)]
+    fc_w, fc_b = params[-2], params[-1]
+
+    acts = []
+    h = x
+    for spec, w in zip(TINYCNN_CONVS, conv_ws):
+        h = conv2d(h, w, stride=spec.stride, padding="SAME")
+        h = jax.nn.relu(h)
+        acts.append(h)
+    # Global average pool + FC head (also through the Pallas GEMM).
+    g = jnp.mean(h, axis=(1, 2))  # (N, C)
+    logits = matmul_bf16(g, fc_w) + fc_b
+    return (logits, *acts)
+
+
+# ---------------------------------------------------------------------------
+# Statistics graphs (Fig. 2 cross-check + activity cross-check)
+# ---------------------------------------------------------------------------
+
+
+def weight_stats(w: jax.Array):
+    """bf16 field histograms of a flat weight vector (Fig. 2 oracle).
+
+    Returns (exp_hist[256], man_hist[128], zeros, total). Zero-magnitude
+    values are excluded from the exponent histogram's "concentration"
+    reading by being counted separately (exponent 0 with zero mantissa is
+    the encoding of 0.0, not a small normal).
+    """
+    bits = jax.lax.bitcast_convert_type(w.astype(jnp.bfloat16), jnp.uint16)
+    bits = bits.reshape(-1)
+    exp = ((bits >> 7) & 0xFF).astype(jnp.int32)
+    man = (bits & 0x7F).astype(jnp.int32)
+    exp_hist = jnp.zeros(256, jnp.int32).at[exp].add(1)
+    man_hist = jnp.zeros(128, jnp.int32).at[man].add(1)
+    zeros = ((bits & 0x7FFF) == 0).astype(jnp.int32).sum()
+    total = jnp.int32(bits.shape[0])
+    return exp_hist, man_hist, zeros, total
+
+
+def activity_stats(streams: jax.Array):
+    """(toggles[lanes], zeros[lanes]) via the L1 activity kernel."""
+    return stream_activity(streams)
+
+
+# ---------------------------------------------------------------------------
+# Standalone GEMM entry point (validation workload for the rust runtime)
+# ---------------------------------------------------------------------------
+
+
+def gemm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain bf16 GEMM through the Pallas kernel (f32 in/out interface)."""
+    return matmul_bf16(a, b)
+
+
+def gemm_zero_skip(a: jax.Array, b: jax.Array) -> jax.Array:
+    """GEMM with block-level zero skipping enabled (must be numerically
+    identical to `gemm` — zero blocks contribute nothing)."""
+    return matmul_bf16(a, b, skip_zero_blocks=True)

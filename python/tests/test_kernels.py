@@ -1,0 +1,176 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes, dtypes, tile sizes and value patterns; every case
+asserts allclose against ref.py. This is the CORE correctness signal for
+the compute path that the AOT artifacts freeze.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels.activity import stream_activity
+from compile.kernels.matmul import matmul_bf16
+from compile.kernels.ref import matmul_ref, stream_activity_ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# matmul kernel
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+    dtype=st.sampled_from([np.float32, np.float64]),
+)
+def test_matmul_matches_ref_shapes(m, k, n, seed, dtype):
+    r = _rng(seed)
+    a = r.standard_normal((m, k)).astype(dtype)
+    b = r.standard_normal((k, n)).astype(dtype)
+    got = matmul_bf16(a, b)
+    want = matmul_ref(a, b)
+    # bf16 products are exact in f32; only the f32 accumulation order
+    # differs between the K-blocked kernel and the single jnp.dot.
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    tile=st.sampled_from([(8, 8, 8), (16, 16, 16), (16, 8, 32), (32, 32, 16)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_tile_invariance(tile, seed):
+    """The result must not depend on the tiling (pure schedule change),
+    up to f32 accumulation-order rounding."""
+    r = _rng(seed)
+    a = r.standard_normal((40, 56)).astype(np.float32)
+    b = r.standard_normal((56, 24)).astype(np.float32)
+    tm, tn, tk = tile
+    got = matmul_bf16(a, b, tile_m=tm, tile_n=tn, tile_k=tk)
+    want = matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    sparsity=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_zero_skip_is_exact(sparsity, seed):
+    """Zero-block skipping is a pure power optimization: results must be
+    bit-identical to the non-skipping kernel, at any input sparsity."""
+    r = _rng(seed)
+    a = r.standard_normal((48, 64)).astype(np.float32)
+    mask = r.random(a.shape) < sparsity
+    a = np.where(mask, 0.0, a).astype(np.float32)
+    b = r.standard_normal((64, 32)).astype(np.float32)
+    base = np.asarray(matmul_bf16(a, b))
+    skip = np.asarray(matmul_bf16(a, b, skip_zero_blocks=True))
+    np.testing.assert_array_equal(base, skip)
+
+
+def test_matmul_all_zero_a():
+    a = np.zeros((16, 16), np.float32)
+    b = np.ones((16, 16), np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(matmul_bf16(a, b, skip_zero_blocks=True)), np.zeros((16, 16))
+    )
+
+
+def test_matmul_identity():
+    a = np.eye(16, dtype=np.float32)
+    b = np.arange(256, dtype=np.float32).reshape(16, 16)
+    # bf16 can represent integers up to 256 exactly
+    np.testing.assert_array_equal(np.asarray(matmul_bf16(a, b)), b)
+
+
+def test_matmul_bf16_rounding_is_applied():
+    """Inputs must be rounded to bf16 before multiplying (paper format)."""
+    a = np.array([[1.0 + 2**-10]], np.float32)  # rounds to 1.0 in bf16
+    b = np.array([[1.0]], np.float32)
+    got = float(np.asarray(matmul_bf16(a, b))[0, 0])
+    assert got == 1.0
+
+
+def test_matmul_bad_shapes_raise():
+    a = np.zeros((4, 5), np.float32)
+    b = np.zeros((6, 4), np.float32)
+    with pytest.raises(ValueError):
+        matmul_bf16(a, b)
+
+
+# ---------------------------------------------------------------------------
+# activity kernel
+# ---------------------------------------------------------------------------
+
+
+@given(
+    lanes=st.integers(1, 16),
+    length=st.integers(2, 128),
+    seed=st.integers(0, 2**31 - 1),
+    sparsity=st.floats(0.0, 1.0),
+)
+def test_activity_matches_ref(lanes, length, seed, sparsity):
+    r = _rng(seed)
+    s = r.standard_normal((lanes, length)).astype(np.float32)
+    s = np.where(r.random(s.shape) < sparsity, 0.0, s).astype(np.float32)
+    got_t, got_z = stream_activity(s)
+    want_t, want_z = stream_activity_ref(s)
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(want_t))
+    np.testing.assert_array_equal(np.asarray(got_z), np.asarray(want_z))
+
+
+def test_activity_constant_stream_has_no_toggles():
+    s = np.full((4, 64), 0.5, np.float32)
+    t, z = stream_activity(s)
+    np.testing.assert_array_equal(np.asarray(t), np.zeros(4, np.int32))
+    np.testing.assert_array_equal(np.asarray(z), np.zeros(4, np.int32))
+
+
+def test_activity_counts_negative_zero_as_zero():
+    """The paper's zero detector fires on magnitude zero; -0.0 qualifies."""
+    s = np.array([[0.0, -0.0, 1.0, 0.0]], np.float32)
+    _, z = stream_activity(s)
+    assert int(np.asarray(z)[0]) == 3
+
+
+def test_activity_known_toggle_count():
+    # bf16(1.0) = 0x3F80, bf16(-1.0) = 0xBF80 -> 1 toggle (sign bit)
+    s = np.array([[1.0, -1.0, 1.0]], np.float32)
+    t, _ = stream_activity(s)
+    assert int(np.asarray(t)[0]) == 2
+
+
+def test_activity_hand_model():
+    """Cross-check against a from-scratch numpy bit model (not jax)."""
+    r = _rng(1234)
+    s = r.standard_normal((3, 50)).astype(np.float32)
+    bits = (
+        jnp.asarray(s).astype(jnp.bfloat16).view(jnp.uint16)
+    )
+    bits = np.asarray(bits).astype(np.uint16)
+    want = np.zeros(3, np.int64)
+    for lane in range(3):
+        for i in range(49):
+            want[lane] += bin(int(bits[lane, i]) ^ int(bits[lane, i + 1])).count("1")
+    t, _ = stream_activity(s)
+    np.testing.assert_array_equal(np.asarray(t).astype(np.int64), want)
+
+
+def test_activity_rejects_1d():
+    with pytest.raises(ValueError):
+        stream_activity(np.zeros(8, np.float32))

@@ -1,0 +1,157 @@
+"""L2 model correctness: im2col conv vs lax conv, TinyConvNet invariants,
+weight statistics oracle."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from compile import model
+from compile.kernels.ref import conv2d_ref
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# conv2d (im2col + Pallas GEMM) vs lax.conv oracle
+# ---------------------------------------------------------------------------
+
+
+@given(
+    h=st.integers(4, 14),
+    w=st.integers(4, 14),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_lax(h, w, cin, cout, k, stride, padding, seed):
+    if padding == "VALID" and (h < k or w < k):
+        return
+    r = _rng(seed)
+    x = r.standard_normal((1, h, w, cin)).astype(np.float32)
+    wgt = (r.standard_normal((k, k, cin, cout)) * 0.2).astype(np.float32)
+    got = model.conv2d(x, wgt, stride=stride, padding=padding)
+    want = conv2d_ref(x, wgt, stride, padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-3)
+
+
+def test_im2col_ordering():
+    """Patch features must be ordered (kh, kw, c) — the rust lowering
+    (workload/im2col.rs) depends on this exact ordering."""
+    x = np.arange(2 * 2 * 2, dtype=np.float32).reshape(1, 2, 2, 2)
+    p = np.asarray(model.im2col(jnp.asarray(x), 2, 2, 1))
+    assert p.shape == (1, 8)
+    # row-major over (kh, kw, c): x[0,0,0,:], x[0,0,1,:], x[0,1,0,:], x[0,1,1,:]
+    np.testing.assert_array_equal(p[0], np.arange(8, dtype=np.float32))
+
+
+def test_conv2d_channel_mismatch_raises():
+    x = np.zeros((1, 8, 8, 3), np.float32)
+    w = np.zeros((3, 3, 4, 8), np.float32)
+    with pytest.raises(AssertionError):
+        model.conv2d(x, w)
+
+
+# ---------------------------------------------------------------------------
+# TinyConvNet
+# ---------------------------------------------------------------------------
+
+
+def _tiny_params(seed=7):
+    r = _rng(seed)
+    params = []
+    for shp in model.tinycnn_param_shapes():
+        fan_in = int(np.prod(shp[:-1])) if len(shp) > 1 else shp[0]
+        params.append(
+            (r.standard_normal(shp) * np.sqrt(2.0 / max(fan_in, 1))).astype(
+                np.float32
+            )
+        )
+    return params
+
+
+def test_tinycnn_shapes():
+    params = _tiny_params()
+    x = _rng(0).random(model.TINYCNN_INPUT).astype(np.float32)
+    outs = model.tinycnn_forward(x, *params)
+    logits, acts = outs[0], outs[1:]
+    assert logits.shape == (1, model.TINYCNN_CLASSES)
+    assert len(acts) == len(model.TINYCNN_CONVS)
+    # SAME padding: spatial halves at the two stride-2 layers
+    assert acts[0].shape == (1, 32, 32, 16)
+    assert acts[1].shape == (1, 16, 16, 32)
+    assert acts[2].shape == (1, 16, 16, 32)
+    assert acts[3].shape == (1, 8, 8, 64)
+    assert acts[4].shape == (1, 8, 8, 64)
+
+
+def test_tinycnn_relu_invariants():
+    params = _tiny_params(11)
+    x = _rng(1).random(model.TINYCNN_INPUT).astype(np.float32)
+    outs = model.tinycnn_forward(x, *params)
+    for i, a in enumerate(outs[1:]):
+        a = np.asarray(a)
+        assert (a >= 0).all(), f"act {i} has negative values after ReLU"
+        zfrac = float((a == 0).mean())
+        # ReLU of a roughly-centered pre-activation: a meaningful fraction
+        # of zeros must appear (this drives the paper's ZVCG technique).
+        assert 0.05 < zfrac < 0.95, f"act {i} zero fraction {zfrac}"
+
+
+def test_tinycnn_deterministic():
+    params = _tiny_params(3)
+    x = _rng(2).random(model.TINYCNN_INPUT).astype(np.float32)
+    o1 = model.tinycnn_forward(x, *params)
+    o2 = model.tinycnn_forward(x, *params)
+    for a, b in zip(o1, o2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# weight statistics (Fig. 2 oracle)
+# ---------------------------------------------------------------------------
+
+
+def test_weight_stats_totals():
+    r = _rng(5)
+    w = (r.standard_normal(4096) * 0.05).astype(np.float32)
+    exp_h, man_h, zeros, total = model.weight_stats(w)
+    assert int(total) == 4096
+    assert int(np.asarray(exp_h).sum()) == 4096
+    assert int(np.asarray(man_h).sum()) == 4096
+
+
+def test_weight_stats_known_values():
+    # 1.0 -> exp 127, man 0; 0.5 -> exp 126; 1.5 -> man 0x40; 0.0 -> zero
+    w = np.array([1.0, 0.5, 1.5, 0.0], np.float32)
+    exp_h, man_h, zeros, total = model.weight_stats(w)
+    exp_h = np.asarray(exp_h)
+    man_h = np.asarray(man_h)
+    assert exp_h[127] == 2  # 1.0 and 1.5
+    assert exp_h[126] == 1  # 0.5
+    assert man_h[0x40] == 1  # 1.5
+    assert int(zeros) == 1
+
+
+def test_weight_stats_concentration_smallweights():
+    """Fan-in-scaled weights: exponents concentrated (paper Fig. 2 top),
+    mantissas near-uniform (paper Fig. 2 bottom)."""
+    r = _rng(9)
+    w = np.clip(r.standard_normal(1 << 15) * 0.08, -1, 1).astype(np.float32)
+    exp_h, man_h, _, total = model.weight_stats(w)
+    exp_h = np.asarray(exp_h).astype(np.float64)
+    man_h = np.asarray(man_h).astype(np.float64)
+    # exponent mass concentrated in a narrow band below the bias
+    top8 = np.sort(exp_h)[-8:].sum() / exp_h.sum()
+    assert top8 > 0.9, f"exponent concentration too weak: {top8}"
+    # mantissa approximately uniform: no bin wildly over/under-represented
+    p = man_h / man_h.sum()
+    assert p.max() < 3.0 / 128 and p[p > 0].min() > 0.2 / 128

@@ -1,0 +1,28 @@
+//! Bench + regeneration of paper Fig. 2 (weight value distributions).
+//!
+//! `cargo bench --bench fig2_weight_stats`
+
+use sa_lowpower::report::fig2_tables;
+use sa_lowpower::stats::WeightFieldStats;
+use sa_lowpower::util::bench::{bench, black_box};
+use sa_lowpower::workload::{gen_weights, Network};
+
+fn main() {
+    println!("=== Fig. 2 regeneration + stats throughput ===\n");
+    for name in ["resnet50", "mobilenet"] {
+        let net = Network::by_name(name).unwrap();
+        let mut weights = Vec::new();
+        for (i, l) in net.layers.iter().enumerate() {
+            weights.extend(gen_weights(l, 0xCAFE, i));
+        }
+        println!("{name}: {} weights", weights.len());
+        let m = bench(&format!("fig2/{name}/field-stats"), 1, 5, || {
+            black_box(WeightFieldStats::from_f32(black_box(&weights)));
+        });
+        let stats = WeightFieldStats::from_f32(&weights);
+        let (summary, _, _) = fig2_tables(name, &stats);
+        summary.print();
+        let throughput = weights.len() as f64 / m.mean.as_secs_f64() / 1e6;
+        println!("throughput: {throughput:.0} Mweights/s\n");
+    }
+}

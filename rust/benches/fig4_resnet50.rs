@@ -1,0 +1,25 @@
+//! Bench + regeneration of paper Fig. 4 (per-layer power, ResNet50).
+//!
+//! `cargo bench --bench fig4_resnet50`
+
+use sa_lowpower::coordinator::{paper_configs, sweep_network, AnalysisOptions};
+use sa_lowpower::report::fig45_table;
+use sa_lowpower::sa::SaConfig;
+use sa_lowpower::util::bench::time_once;
+use sa_lowpower::workload::Network;
+
+fn main() {
+    println!("=== Fig. 4: ResNet50 per-layer power sweep ===\n");
+    let net = Network::by_name("resnet50").unwrap();
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let opts = AnalysisOptions { max_tiles_per_layer: 64, ..Default::default() };
+    let (sweep, _) = time_once("fig4/resnet50/full-sweep(64 tiles/layer)", || {
+        sweep_network(&net, &paper_configs(), &opts, threads)
+    });
+    fig45_table(&sweep, &SaConfig::default()).print();
+    println!(
+        "\noverall savings {:.1} % (paper 9.4 %) | activity cut {:.1} % (paper ~29 %)",
+        sweep.overall_savings_pct("baseline", "proposed"),
+        sweep.streaming_activity_reduction_pct("baseline", "proposed"),
+    );
+}

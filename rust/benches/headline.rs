@@ -1,0 +1,35 @@
+//! Bench + regeneration of the paper's headline claims table
+//! (§I / §IV: 9.4 % / 6.2 % overall savings, ~29 % activity cut,
+//! 1–19 % per layer, 5.7 % area overhead).
+//!
+//! `cargo bench --bench headline`
+
+use sa_lowpower::coordinator::{paper_configs, sweep_network, AnalysisOptions};
+use sa_lowpower::report::headline_table;
+use sa_lowpower::sa::SaConfig;
+use sa_lowpower::util::bench::time_once;
+use sa_lowpower::workload::Network;
+
+fn main() {
+    println!("=== Headline claims: paper vs reproduced ===\n");
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let opts = AnalysisOptions { max_tiles_per_layer: 64, ..Default::default() };
+    let (resnet, _) = time_once("headline/resnet50-sweep", || {
+        sweep_network(
+            &Network::by_name("resnet50").unwrap(),
+            &paper_configs(),
+            &opts,
+            threads,
+        )
+    });
+    let (mobilenet, _) = time_once("headline/mobilenet-sweep", || {
+        sweep_network(
+            &Network::by_name("mobilenet").unwrap(),
+            &paper_configs(),
+            &opts,
+            threads,
+        )
+    });
+    println!();
+    headline_table(&resnet, &mobilenet, &SaConfig::default()).print();
+}

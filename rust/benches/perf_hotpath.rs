@@ -1,0 +1,99 @@
+//! Hot-path microbenchmarks — the profile targets of EXPERIMENTS.md §Perf.
+//!
+//! `cargo bench --bench perf_hotpath`
+//!
+//! Covers the four hot paths of the analysis engine:
+//!   1. analytic tile model (the figure-sweep workhorse),
+//!   2. the cycle-accurate simulator (golden; speed bounds proptest),
+//!   3. packed Hamming distance over bus words,
+//!   4. BIC stream encoding + im2col lowering.
+
+use sa_lowpower::activity::ham16_slice;
+use sa_lowpower::bf16::Bf16;
+use sa_lowpower::coding::{BicEncoder, BicMode, BicPolicy, SaCodingConfig};
+use sa_lowpower::sa::{analyze_tile, simulate_tile, Tile};
+use sa_lowpower::util::bench::{bench, black_box};
+use sa_lowpower::util::Rng64;
+use sa_lowpower::workload::im2col_same;
+
+fn random_tile(rng: &mut Rng64, m: usize, k: usize, n: usize, pz: f64) -> Tile {
+    let a: Vec<f32> = (0..m * k)
+        .map(|_| if rng.chance(pz) { 0.0 } else { rng.normal() as f32 })
+        .collect();
+    let b: Vec<f32> = (0..k * n).map(|_| (rng.normal() * 0.1) as f32).collect();
+    Tile::from_f32(&a, &b, m, k, n)
+}
+
+fn main() {
+    let mut rng = Rng64::new(42);
+    println!("=== hot-path microbenchmarks (see EXPERIMENTS.md §Perf) ===\n");
+
+    // 1. analytic model, paper geometry, dense + sparse
+    let t_dense = random_tile(&mut rng, 16, 1024, 16, 0.0);
+    let t_sparse = random_tile(&mut rng, 16, 1024, 16, 0.5);
+    for (tag, t) in [("dense", &t_dense), ("sparse50", &t_sparse)] {
+        for cfg_name in ["baseline", "proposed"] {
+            let cfg = SaCodingConfig::by_name(cfg_name).unwrap();
+            let m = bench(
+                &format!("analytic/16x1024x16/{tag}/{cfg_name}"),
+                3,
+                20,
+                || {
+                    black_box(analyze_tile(black_box(t), &cfg));
+                },
+            );
+            let slots = t.mac_slots() as f64;
+            println!(
+                "    -> {:.0} Mslots/s",
+                slots / m.mean.as_secs_f64() / 1e6
+            );
+        }
+    }
+
+    // 2. cycle-accurate simulator (golden reference)
+    let t_small = random_tile(&mut rng, 16, 256, 16, 0.5);
+    for cfg_name in ["baseline", "proposed"] {
+        let cfg = SaCodingConfig::by_name(cfg_name).unwrap();
+        let m = bench(&format!("cycle-sim/16x256x16/{cfg_name}"), 2, 10, || {
+            black_box(simulate_tile(black_box(&t_small), &cfg));
+        });
+        println!(
+            "    -> {:.1} Mslots/s",
+            t_small.mac_slots() as f64 / m.mean.as_secs_f64() / 1e6
+        );
+    }
+
+    // 3. packed hamming over bus words
+    let xa: Vec<u16> = (0..65536).map(|_| rng.next_u32() as u16).collect();
+    let xb: Vec<u16> = (0..65536).map(|_| rng.next_u32() as u16).collect();
+    let m = bench("hamming/packed-64k-words", 3, 50, || {
+        black_box(ham16_slice(black_box(&xa), black_box(&xb)));
+    });
+    println!(
+        "    -> {:.1} Gwords/s",
+        xa.len() as f64 / m.mean.as_secs_f64() / 1e9
+    );
+
+    // 4a. BIC encoding throughput
+    let stream: Vec<Bf16> = (0..65536)
+        .map(|_| Bf16::from_f32((rng.normal() * 0.1) as f32))
+        .collect();
+    let m = bench("bic/encode-64k-mantissa-only", 3, 50, || {
+        let mut enc = BicEncoder::new(BicMode::MantissaOnly, BicPolicy::Classic);
+        black_box(enc.encode_stream(black_box(&stream)));
+    });
+    println!(
+        "    -> {:.1} Mwords/s",
+        stream.len() as f64 / m.mean.as_secs_f64() / 1e6
+    );
+
+    // 4b. im2col lowering (ResNet50 conv2_1b-like layer)
+    let fm: Vec<f32> = (0..56 * 56 * 64).map(|_| rng.normal() as f32).collect();
+    let m = bench("im2col/56x56x64-k3s1", 2, 10, || {
+        black_box(im2col_same(black_box(&fm), 56, 56, 64, 3, 3, 1));
+    });
+    println!(
+        "    -> {:.0} Mpatch-elems/s",
+        (56.0 * 56.0 * 9.0 * 64.0) / m.mean.as_secs_f64() / 1e6
+    );
+}

@@ -1,0 +1,154 @@
+//! The activity event ledger: exact, integer-valued switching/clocking
+//! counts, split by SA component.
+//!
+//! Both power-estimation engines produce an `ActivityCounts`:
+//!   * `sa::cycle` — the golden cycle-accurate simulator, by observing
+//!     every register every cycle;
+//!   * `sa::analytic` — the fast vectorized model, by closed-form stream
+//!     accounting.
+//! Property tests assert the two are **identical integers** on random
+//! tiles; energy is then `counts · EnergyModel` (crate::power).
+
+/// Exact switching/clocking event counts for one SA run (one tile stream,
+/// or any aggregation of runs — the type is additive).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ActivityCounts {
+    // ---- West (input/activation) streaming ----
+    /// Bit toggles in the horizontal 16-bit data pipeline registers.
+    pub west_data_toggles: u64,
+    /// Clock events (FF·cycles actually clocked) in the West data pipeline.
+    pub west_clock_events: u64,
+    /// Bit toggles in the 1-bit `is-zero` sideband pipeline (proposed only).
+    pub west_sideband_toggles: u64,
+    /// Clock events in the sideband pipeline.
+    pub west_sideband_clock_events: u64,
+    /// Zero-detector evaluations at the West edge (proposed only).
+    pub zero_detect_ops: u64,
+    /// Clock-gate cells active (cell·cycles) on gated West registers.
+    pub west_cg_cell_cycles: u64,
+
+    // ---- North (weight) streaming ----
+    /// Bit toggles in the vertical 16-bit weight pipeline registers.
+    pub north_data_toggles: u64,
+    /// Clock events in the North data pipeline.
+    pub north_clock_events: u64,
+    /// Bit toggles in the 1-bit `inv` sideband pipeline (BIC designs only).
+    pub north_sideband_toggles: u64,
+    /// Clock events in the `inv` sideband pipeline.
+    pub north_sideband_clock_events: u64,
+    /// BIC encoder evaluations at the North edge.
+    pub encoder_ops: u64,
+    /// XOR-recovery gate input toggles inside PEs (BIC designs only).
+    pub decoder_toggles: u64,
+    /// Clock-gate cells active on gated North registers (weight-ZVCG
+    /// ablation only).
+    pub north_cg_cell_cycles: u64,
+
+    // ---- Compute (multiplier / adder / accumulator) ----
+    /// Multiplier operand-input bit toggles (post data-gating).
+    pub mult_input_toggles: u64,
+    /// MAC operations whose product is consumed (not zero-gated).
+    pub active_macs: u64,
+    /// MAC slots that were zero-gated away (proposed) — these cost only
+    /// the gating overhead.
+    pub gated_macs: u64,
+    /// MAC slots whose product is structurally zero in the *baseline*
+    /// (an operand is zero but nothing is gated): the multiplier sees
+    /// operand toggles (already counted) but the adder input stays 0.
+    pub zero_product_macs: u64,
+    /// Accumulator register clock events (32-bit FFs · cycles clocked).
+    pub acc_clock_events: u64,
+    /// Clock-gate cells active on gated accumulators.
+    pub acc_cg_cell_cycles: u64,
+
+    // ---- Unloading (identical in both designs; kept for totals) ----
+    /// Result values moved out of the array (accumulator reads).
+    pub unload_values: u64,
+
+    /// Total cycles the array was clocked for this run.
+    pub cycles: u64,
+}
+
+macro_rules! add_fields {
+    ($self:ident, $o:ident; $($f:ident),+ $(,)?) => {
+        $( $self.$f += $o.$f; )+
+    };
+}
+
+impl ActivityCounts {
+    /// Accumulate another run's counts into this one.
+    pub fn add(&mut self, o: &ActivityCounts) {
+        add_fields!(self, o;
+            west_data_toggles, west_clock_events, west_sideband_toggles,
+            west_sideband_clock_events, zero_detect_ops, west_cg_cell_cycles,
+            north_data_toggles, north_clock_events, north_sideband_toggles,
+            north_sideband_clock_events, encoder_ops, decoder_toggles,
+            north_cg_cell_cycles,
+            mult_input_toggles, active_macs, gated_macs, zero_product_macs,
+            acc_clock_events, acc_cg_cell_cycles, unload_values, cycles,
+        );
+    }
+
+    /// All data-pipeline toggles attributable to *streaming* (the paper's
+    /// target quantity: West + North data + sidebands).
+    pub fn streaming_toggles(&self) -> u64 {
+        self.west_data_toggles
+            + self.west_sideband_toggles
+            + self.north_data_toggles
+            + self.north_sideband_toggles
+    }
+
+    /// Total MAC slots examined.
+    pub fn total_mac_slots(&self) -> u64 {
+        self.active_macs + self.gated_macs + self.zero_product_macs
+    }
+}
+
+impl std::ops::Add for ActivityCounts {
+    type Output = ActivityCounts;
+    fn add(mut self, rhs: ActivityCounts) -> ActivityCounts {
+        ActivityCounts::add(&mut self, &rhs);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(x: u64) -> ActivityCounts {
+        ActivityCounts {
+            west_data_toggles: x,
+            north_data_toggles: 2 * x,
+            west_sideband_toggles: 3,
+            north_sideband_toggles: 4,
+            active_macs: x,
+            cycles: 10,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn add_is_fieldwise() {
+        let mut a = sample(5);
+        a.add(&sample(7));
+        assert_eq!(a.west_data_toggles, 12);
+        assert_eq!(a.north_data_toggles, 24);
+        assert_eq!(a.cycles, 20);
+        assert_eq!(a.active_macs, 12);
+    }
+
+    #[test]
+    fn streaming_toggles_sums_the_four_pipelines() {
+        let a = sample(5);
+        assert_eq!(a.streaming_toggles(), 5 + 10 + 3 + 4);
+    }
+
+    #[test]
+    fn operator_add_matches_method() {
+        let a = sample(1) + sample(2);
+        let mut b = sample(1);
+        b.add(&sample(2));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,109 @@
+//! Hamming-distance primitives over bus words.
+
+use crate::bf16::Bf16;
+
+/// Bit transitions between two 16-bit bus states.
+#[inline]
+pub fn ham16(a: u16, b: u16) -> u32 {
+    (a ^ b).count_ones()
+}
+
+/// Bit transitions between two bf16 bus states (full 16-bit word).
+#[inline]
+pub fn ham_bf16(a: Bf16, b: Bf16) -> u32 {
+    ham16(a.0, b.0)
+}
+
+/// Bit transitions restricted to a masked field of the bus (e.g. the
+/// mantissa lines only).
+#[inline]
+pub fn ham16_masked(a: u16, b: u16, mask: u16) -> u32 {
+    ((a ^ b) & mask).count_ones()
+}
+
+/// Transitions between two 32-bit words (accumulator registers).
+#[inline]
+pub fn ham32(a: u32, b: u32) -> u32 {
+    (a ^ b).count_ones()
+}
+
+/// Transitions on a single-bit sideband line.
+#[inline]
+pub fn ham1(a: bool, b: bool) -> u32 {
+    (a != b) as u32
+}
+
+/// Total Hamming distance between two equal-length u16 slices, packed in
+/// u64 lanes for throughput (hot path of the analytic model).
+pub fn ham16_slice(a: &[u16], b: &[u16]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut total = 0u64;
+    let chunks = a.len() / 4;
+    // Process 4 u16 lanes per u64 XOR + popcount.
+    for c in 0..chunks {
+        let i = c * 4;
+        let pa = (a[i] as u64)
+            | ((a[i + 1] as u64) << 16)
+            | ((a[i + 2] as u64) << 32)
+            | ((a[i + 3] as u64) << 48);
+        let pb = (b[i] as u64)
+            | ((b[i + 1] as u64) << 16)
+            | ((b[i + 2] as u64) << 32)
+            | ((b[i + 3] as u64) << 48);
+        total += (pa ^ pb).count_ones() as u64;
+    }
+    for i in chunks * 4..a.len() {
+        total += ham16(a[i], b[i]) as u64;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn ham16_known() {
+        assert_eq!(ham16(0x0000, 0xFFFF), 16);
+        assert_eq!(ham16(0xAAAA, 0x5555), 16);
+        assert_eq!(ham16(0x1234, 0x1234), 0);
+        assert_eq!(ham16(0x0001, 0x0003), 1);
+    }
+
+    #[test]
+    fn masked_restricts() {
+        // only mantissa lines (low 7 bits) count
+        assert_eq!(ham16_masked(0x0000, 0xFFFF, 0x007F), 7);
+        assert_eq!(ham16_masked(0xFF80, 0x0000, 0x007F), 0);
+    }
+
+    #[test]
+    fn ham_is_metric() {
+        check("hamming symmetry + triangle", 1000, |rng| {
+            let (a, b, c) = (
+                rng.next_u32() as u16,
+                rng.next_u32() as u16,
+                rng.next_u32() as u16,
+            );
+            assert_eq!(ham16(a, b), ham16(b, a));
+            assert_eq!(ham16(a, a), 0);
+            assert!(ham16(a, c) <= ham16(a, b) + ham16(b, c));
+        });
+    }
+
+    #[test]
+    fn slice_matches_scalar() {
+        check("packed hamming == scalar hamming", 200, |rng| {
+            let n = rng.below(40);
+            let a: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+            let b: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+            let want: u64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| ham16(x, y) as u64)
+                .sum();
+            assert_eq!(ham16_slice(&a, &b), want);
+        });
+    }
+}

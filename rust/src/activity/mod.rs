@@ -1,0 +1,16 @@
+//! Switching-activity measurement: Hamming distances, stream transition
+//! counts, and the event ledger shared by the cycle-accurate simulator and
+//! the analytic model.
+//!
+//! Dynamic power of data movement is `0.5 * C * Vdd^2 * f * alpha` with
+//! `alpha` the toggle rate; everything in this module computes exact
+//! toggle counts so the power model (crate::power) only has to multiply by
+//! calibrated per-toggle energies.
+
+mod events;
+mod hamming;
+mod stream;
+
+pub use events::*;
+pub use hamming::*;
+pub use stream::*;

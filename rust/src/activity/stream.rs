@@ -1,0 +1,145 @@
+//! Stream-level transition accounting.
+//!
+//! A pipeline register that a value stream passes through experiences, over
+//! the whole stream, exactly the toggles of the stream's consecutive-pair
+//! Hamming distances (each register sees the same sequence, time-shifted).
+//! This observation is what makes the analytic model (sa::analytic) exact:
+//! per-register simulation is unnecessary for *stream* pipelines.
+
+use crate::bf16::Bf16;
+
+use super::hamming::{ham1, ham_bf16};
+
+/// Toggle count of a bf16 value sequence passing through one register,
+/// starting from the given reset state.
+pub fn stream_toggles(reset: Bf16, stream: &[Bf16]) -> u64 {
+    let mut prev = reset;
+    let mut total = 0u64;
+    for &v in stream {
+        total += ham_bf16(prev, v) as u64;
+        prev = v;
+    }
+    total
+}
+
+/// Toggle count of a 1-bit sideband sequence through one register.
+pub fn stream_toggles_1bit(reset: bool, stream: &[bool]) -> u64 {
+    let mut prev = reset;
+    let mut total = 0u64;
+    for &v in stream {
+        total += ham1(prev, v) as u64;
+        prev = v;
+    }
+    total
+}
+
+/// Number of magnitude-zero values in a stream (what the West-edge
+/// zero-detectors fire on).
+pub fn count_zeros(stream: &[Bf16]) -> u64 {
+    stream.iter().filter(|v| v.is_zero()).count() as u64
+}
+
+/// The gated view of an input stream under zero-value clock gating: the
+/// data registers only ever load the non-zero values (zeros freeze the
+/// pipeline), so the register sees the subsequence of non-zero values.
+pub fn gated_subsequence(stream: &[Bf16]) -> Vec<Bf16> {
+    stream.iter().copied().filter(|v| !v.is_zero()).collect()
+}
+
+/// The `is-zero` sideband sequence for an input stream.
+pub fn zero_sideband(stream: &[Bf16]) -> Vec<bool> {
+    stream.iter().map(|v| v.is_zero()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Rng64;
+
+    fn bf(v: f32) -> Bf16 {
+        Bf16::from_f32(v)
+    }
+
+    fn random_stream(rng: &mut Rng64, n: usize, sparsity: f64) -> Vec<Bf16> {
+        (0..n)
+            .map(|_| {
+                if rng.chance(sparsity) {
+                    Bf16::ZERO
+                } else {
+                    bf(rng.normal() as f32)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn constant_stream_toggles_once_from_reset() {
+        let s = vec![bf(1.0); 10];
+        // reset 0x0000 -> 0x3F80 toggles popcount(0x3F80)=7, then constant
+        assert_eq!(stream_toggles(Bf16::ZERO, &s), 7);
+        assert_eq!(stream_toggles(bf(1.0), &s), 0);
+    }
+
+    #[test]
+    fn alternating_signs_toggle_sign_bit() {
+        let s = vec![bf(1.0), bf(-1.0), bf(1.0), bf(-1.0)];
+        assert_eq!(stream_toggles(bf(1.0), &s), 3);
+    }
+
+    #[test]
+    fn sideband_toggles() {
+        let s = vec![false, true, true, false];
+        assert_eq!(stream_toggles_1bit(false, &s), 2);
+    }
+
+    #[test]
+    fn gated_subsequence_drops_exactly_zeros() {
+        check("gated subsequence = nonzeros", 300, |rng| {
+            let s = random_stream(rng, 64, 0.5);
+            let g = gated_subsequence(&s);
+            assert_eq!(g.len() as u64, s.len() as u64 - count_zeros(&s));
+            assert!(g.iter().all(|v| !v.is_zero()));
+            // order preserved
+            let nz: Vec<Bf16> = s.iter().copied().filter(|v| !v.is_zero()).collect();
+            assert_eq!(g, nz);
+        });
+    }
+
+    #[test]
+    fn gating_never_increases_toggles() {
+        // The core power argument of ZVCG: freezing on zeros can only
+        // reduce register toggles — the Hamming metric's triangle
+        // inequality H(a,b) <= H(a,z) + H(z,b) holds through any skipped
+        // intermediate word z, so dropping values never adds transitions.
+        check("ZVCG reduces toggles on ReLU-like streams", 300, |rng| {
+            let p = 0.3 + 0.5 * rng.uniform();
+            let s = random_stream(rng, 128, p);
+            let raw = stream_toggles(Bf16::ZERO, &s);
+            let gated = stream_toggles(Bf16::ZERO, &gated_subsequence(&s));
+            assert!(
+                gated <= raw,
+                "gated {gated} > raw {raw} for stream {s:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn zero_sideband_marks_zeros() {
+        let s = vec![bf(0.0), bf(2.0), bf(-0.0), bf(1.0)];
+        assert_eq!(zero_sideband(&s), vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn toggles_additive_under_concatenation() {
+        check("stream toggles additive", 200, |rng| {
+            let s1 = random_stream(rng, 20, 0.2);
+            let s2 = random_stream(rng, 20, 0.2);
+            let whole: Vec<Bf16> = s1.iter().chain(&s2).copied().collect();
+            let joined = stream_toggles(Bf16::ZERO, &whole);
+            let split = stream_toggles(Bf16::ZERO, &s1)
+                + stream_toggles(*s1.last().unwrap(), &s2);
+            assert_eq!(joined, split);
+        });
+    }
+}

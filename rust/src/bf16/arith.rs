@@ -1,0 +1,166 @@
+//! bf16 arithmetic: the paper's PE datapath (bf16 multiply, f32 accumulate).
+//!
+//! The multiply is *exact* when performed in f32: a bf16 significand has 8
+//! bits (implicit leading 1 + 7 fraction), so a product needs at most 16 —
+//! comfortably inside f32's 24. Accumulation is plain f32 addition, which
+//! is what the evaluated SA (and the Pallas kernel with
+//! `preferred_element_type=f32`) does.
+
+use super::Bf16;
+
+/// Exact bf16 × bf16 product, widened to f32 (never rounds).
+#[inline]
+pub fn mul_widen(a: Bf16, b: Bf16) -> f32 {
+    a.to_f32() * b.to_f32()
+}
+
+/// Fused PE step: acc + a*b in f32 (one f32 rounding, at the add).
+#[inline]
+pub fn mac(acc: f32, a: Bf16, b: Bf16) -> f32 {
+    acc + mul_widen(a, b)
+}
+
+/// bf16 multiply with bf16 result (RNE) — used where a narrow datapath is
+/// modelled end-to-end.
+#[inline]
+pub fn mul(a: Bf16, b: Bf16) -> Bf16 {
+    Bf16::from_f32(mul_widen(a, b))
+}
+
+/// bf16 add with bf16 result (RNE).
+#[inline]
+pub fn add(a: Bf16, b: Bf16) -> Bf16 {
+    Bf16::from_f32(a.to_f32() + b.to_f32())
+}
+
+/// Matrix multiply C = A × B over bf16 with f32 accumulation.
+/// `a` is row-major (m × k), `b` is row-major (k × n); result m × n f32.
+/// This is the functional (non-simulated) reference used to check the
+/// cycle-accurate SA and to cross-validate the XLA artifacts.
+pub fn matmul_f32acc(a: &[Bf16], b: &[Bf16], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A dims");
+    assert_eq!(b.len(), k * n, "B dims");
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk].to_f32();
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j].to_f32();
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn mul_known() {
+        assert_eq!(mul_widen(Bf16::ONE, Bf16::ONE), 1.0);
+        assert_eq!(mul_widen(Bf16::from_f32(2.0), Bf16::from_f32(3.0)), 6.0);
+        assert_eq!(mul_widen(Bf16::NEG_ONE, Bf16::from_f32(0.5)), -0.5);
+    }
+
+    #[test]
+    fn mul_by_zero_is_zero() {
+        check("x*0 == 0", 500, |rng| {
+            let x = Bf16::from_bits(rng.next_u32() as u16);
+            if x.is_nan() || x.exponent() == 0xFF {
+                return;
+            }
+            assert_eq!(mul_widen(x, Bf16::ZERO), 0.0 * x.to_f32());
+        });
+    }
+
+    #[test]
+    fn mul_widen_is_exact() {
+        // product of two bf16s must be exactly representable: check vs f64
+        check("bf16 product exact in f32", 2000, |rng| {
+            let a = Bf16::from_bits(rng.next_u32() as u16);
+            let b = Bf16::from_bits(rng.next_u32() as u16);
+            if a.is_nan() || b.is_nan() {
+                return;
+            }
+            let p32 = mul_widen(a, b) as f64;
+            let p64 = a.to_f32() as f64 * b.to_f32() as f64;
+            if p64.abs() > f32::MAX as f64 || (p64 != 0.0 && p64.abs() < f32::MIN_POSITIVE as f64) {
+                return; // overflow/underflow of the f32 range
+            }
+            assert_eq!(p32, p64);
+        });
+    }
+
+    #[test]
+    fn mac_matches_manual() {
+        let acc = 1.5f32;
+        let a = Bf16::from_f32(0.25);
+        let b = Bf16::from_f32(8.0);
+        assert_eq!(mac(acc, a, b), 3.5);
+    }
+
+    #[test]
+    fn narrow_ops_commute() {
+        check("bf16 mul/add commutativity", 1000, |rng| {
+            let a = Bf16::from_bits(rng.next_u32() as u16);
+            let b = Bf16::from_bits(rng.next_u32() as u16);
+            if a.is_nan() || b.is_nan() {
+                return;
+            }
+            assert_eq!(mul(a, b).0, mul(b, a).0);
+            assert_eq!(add(a, b).0, add(b, a).0);
+        });
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let n = 8;
+        let mut eye = vec![Bf16::ZERO; n * n];
+        for i in 0..n {
+            eye[i * n + i] = Bf16::ONE;
+        }
+        let b: Vec<Bf16> = (0..n * n).map(|i| Bf16::from_f32(i as f32)).collect();
+        let c = matmul_f32acc(&eye, &b, n, n, n);
+        for i in 0..n * n {
+            assert_eq!(c[i], i as f32);
+        }
+    }
+
+    #[test]
+    fn matmul_matches_f64_reference() {
+        check("matmul vs f64 reference", 50, |rng| {
+            let (m, k, n) = (
+                1 + rng.below(6),
+                1 + rng.below(6),
+                1 + rng.below(6),
+            );
+            let a: Vec<Bf16> = (0..m * k)
+                .map(|_| Bf16::from_f32(rng.normal() as f32))
+                .collect();
+            let b: Vec<Bf16> = (0..k * n)
+                .map(|_| Bf16::from_f32(rng.normal() as f32))
+                .collect();
+            let c = matmul_f32acc(&a, &b, m, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut want = 0f32;
+                    for kk in 0..k {
+                        want += a[i * k + kk].to_f32() * b[kk * n + j].to_f32();
+                    }
+                    let got = c[i * n + j];
+                    assert!(
+                        (got - want).abs() <= want.abs() * 1e-6 + 1e-6,
+                        "({i},{j}): {got} vs {want}"
+                    );
+                }
+            }
+        });
+    }
+}

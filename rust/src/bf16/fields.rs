@@ -1,0 +1,120 @@
+//! bf16 bit-field access: sign / exponent / mantissa.
+//!
+//! The paper's selective coding is defined on these fields: BIC is applied
+//! to the 7-bit mantissa of the weights only, because CNN weight exponents
+//! are concentrated near the bias while mantissas are near-uniform
+//! (paper Fig. 2). The field layout here is the single source of truth for
+//! the coding module and the statistics module.
+
+use super::Bf16;
+
+/// Number of mantissa (fraction) bits in bfloat16.
+pub const MANTISSA_BITS: u32 = 7;
+/// Number of exponent bits in bfloat16.
+pub const EXPONENT_BITS: u32 = 8;
+/// Exponent bias.
+pub const EXPONENT_BIAS: i32 = 127;
+
+/// Mask of the mantissa field within the 16-bit pattern.
+pub const MANTISSA_MASK: u16 = 0x007F;
+/// Mask of the exponent field within the 16-bit pattern.
+pub const EXPONENT_MASK: u16 = 0x7F80;
+/// Mask of the sign bit.
+pub const SIGN_MASK: u16 = 0x8000;
+
+impl Bf16 {
+    /// Sign bit (0 or 1).
+    #[inline]
+    pub const fn sign(self) -> u16 {
+        self.0 >> 15
+    }
+
+    /// Biased exponent field (0..=255).
+    #[inline]
+    pub const fn exponent(self) -> u16 {
+        (self.0 & EXPONENT_MASK) >> MANTISSA_BITS
+    }
+
+    /// Unbiased exponent of a normal number.
+    #[inline]
+    pub const fn exponent_unbiased(self) -> i32 {
+        self.exponent() as i32 - EXPONENT_BIAS
+    }
+
+    /// Mantissa (fraction) field (0..=127).
+    #[inline]
+    pub const fn mantissa(self) -> u16 {
+        self.0 & MANTISSA_MASK
+    }
+
+    /// Reassemble from fields (values are masked into range).
+    #[inline]
+    pub const fn from_fields(sign: u16, exponent: u16, mantissa: u16) -> Self {
+        Bf16(
+            ((sign & 1) << 15)
+                | ((exponent & 0xFF) << MANTISSA_BITS)
+                | (mantissa & MANTISSA_MASK),
+        )
+    }
+
+    /// Replace the mantissa field, keeping sign and exponent.
+    #[inline]
+    pub const fn with_mantissa(self, mantissa: u16) -> Self {
+        Bf16((self.0 & !MANTISSA_MASK) | (mantissa & MANTISSA_MASK))
+    }
+
+    /// Mantissa with all 7 bits complemented (the BIC inversion).
+    #[inline]
+    pub const fn invert_mantissa(self) -> Self {
+        Bf16(self.0 ^ MANTISSA_MASK)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn field_extraction_known_values() {
+        let one = Bf16::ONE; // 0x3F80
+        assert_eq!(one.sign(), 0);
+        assert_eq!(one.exponent(), 127);
+        assert_eq!(one.mantissa(), 0);
+        let x = Bf16::from_f32(-1.5); // sign 1, exp 127, man 0x40
+        assert_eq!(x.sign(), 1);
+        assert_eq!(x.exponent(), 127);
+        assert_eq!(x.mantissa(), 0x40);
+        let h = Bf16::from_f32(0.5);
+        assert_eq!(h.exponent(), 126);
+        assert_eq!(h.exponent_unbiased(), -1);
+    }
+
+    #[test]
+    fn fields_partition_the_word() {
+        assert_eq!(SIGN_MASK | EXPONENT_MASK | MANTISSA_MASK, 0xFFFF);
+        assert_eq!(SIGN_MASK & EXPONENT_MASK, 0);
+        assert_eq!(EXPONENT_MASK & MANTISSA_MASK, 0);
+    }
+
+    #[test]
+    fn from_fields_roundtrip() {
+        check("bf16 field split/reassemble", 2000, |rng| {
+            let b = Bf16::from_bits(rng.next_u32() as u16);
+            let r = Bf16::from_fields(b.sign(), b.exponent(), b.mantissa());
+            assert_eq!(b.0, r.0);
+        });
+    }
+
+    #[test]
+    fn invert_mantissa_is_involution_and_preserves_other_fields() {
+        check("BIC mantissa inversion involution", 2000, |rng| {
+            let b = Bf16::from_bits(rng.next_u32() as u16);
+            let inv = b.invert_mantissa();
+            assert_eq!(inv.invert_mantissa().0, b.0);
+            assert_eq!(inv.sign(), b.sign());
+            assert_eq!(inv.exponent(), b.exponent());
+            assert_eq!(inv.mantissa(), b.mantissa() ^ 0x7F);
+        });
+    }
+}

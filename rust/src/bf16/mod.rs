@@ -1,0 +1,184 @@
+//! Bit-exact Bfloat16 arithmetic — the paper's number format.
+//!
+//! The SA streams, encodes and multiplies bf16 values; every power number
+//! in the reproduction derives from the *bit patterns* of these values, so
+//! the representation is explicit: a `Bf16` is a `u16` in IEEE-754
+//! bfloat16 layout (1 sign / 8 exponent / 7 mantissa bits).
+//!
+//! Rounding matches JAX/XLA: float32 -> bf16 uses round-to-nearest-even.
+//! Multiplication is exact in f32 (8+8 mantissa bits always fit in f32's
+//! 24), which is precisely the paper's PE: bf16 multiply feeding a wider
+//! accumulator.
+
+mod arith;
+mod fields;
+
+pub use arith::*;
+pub use fields::*;
+
+/// A bfloat16 value, stored as its raw bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3F80);
+    pub const NEG_ONE: Bf16 = Bf16(0xBF80);
+
+    /// Construct from raw bits.
+    #[inline]
+    pub const fn from_bits(bits: u16) -> Self {
+        Bf16(bits)
+    }
+
+    /// Raw bit pattern.
+    #[inline]
+    pub const fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// Round a float32 to bfloat16 (round-to-nearest-even, like XLA).
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Quiet NaN, preserving sign.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // RNE on the low 16 bits being dropped.
+        let round_bit = 0x0000_8000u32;
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+        let _ = round_bit;
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Exact widening to float32 (bit shift; always exact).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    /// Magnitude-zero test (+0.0 or -0.0) — what the paper's zero-value
+    /// detector at the West edge checks.
+    #[inline]
+    pub const fn is_zero(self) -> bool {
+        self.0 & 0x7FFF == 0
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.exponent() == 0xFF && self.mantissa() != 0
+    }
+}
+
+impl std::fmt::Debug for Bf16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bf16({:#06x} = {})", self.0, self.to_f32())
+    }
+}
+
+impl std::fmt::Display for Bf16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+
+impl From<Bf16> for f32 {
+    fn from(x: Bf16) -> f32 {
+        x.to_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn constants() {
+        assert_eq!(Bf16::ONE.to_f32(), 1.0);
+        assert_eq!(Bf16::NEG_ONE.to_f32(), -1.0);
+        assert_eq!(Bf16::ZERO.to_f32(), 0.0);
+    }
+
+    #[test]
+    fn zero_detector_covers_both_zeros() {
+        assert!(Bf16::from_f32(0.0).is_zero());
+        assert!(Bf16::from_f32(-0.0).is_zero());
+        assert!(!Bf16::from_f32(1e-30).is_zero() || Bf16::from_f32(1e-30).0 & 0x7FFF == 0);
+        assert!(!Bf16::ONE.is_zero());
+    }
+
+    #[test]
+    fn roundtrip_exact_for_bf16_values() {
+        // Every bf16 bit pattern (except NaNs) must round-trip via f32.
+        for bits in 0..=u16::MAX {
+            let b = Bf16::from_bits(bits);
+            if b.is_nan() {
+                continue;
+            }
+            assert_eq!(Bf16::from_f32(b.to_f32()).0, bits, "bits {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn rne_rounding_examples() {
+        // bf16 ulp at 1.0 is 2^-7; 1.0 + 2^-8 is exactly halfway between
+        // bf16(1.0) and the next value up; RNE picks the even mantissa (0).
+        assert_eq!(Bf16::from_f32(1.0 + 0.00390625).0, Bf16::ONE.0);
+        // slightly above halfway rounds up
+        assert_eq!(Bf16::from_f32(1.0 + 0.0040).0, Bf16::ONE.0 + 1);
+        // below halfway rounds down
+        assert_eq!(Bf16::from_f32(1.0 + 0.0038).0, Bf16::ONE.0);
+        // tie at an odd mantissa rounds *up* to the even neighbour:
+        // 1 + 2^-7 (mantissa 1) + 2^-8 (halfway) -> mantissa 2
+        assert_eq!(Bf16::from_f32(1.0117188).0, Bf16::ONE.0 + 2);
+    }
+
+    #[test]
+    fn nan_is_preserved() {
+        let n = Bf16::from_f32(f32::NAN);
+        assert!(n.is_nan());
+    }
+
+    #[test]
+    fn matches_reference_truncate_plus_rne_property() {
+        // from_f32 must equal the "add 0x7FFF + lsb then shift" scheme used
+        // by XLA; cross-check against an independent implementation that
+        // decides by comparing the two neighbouring bf16 values as f64.
+        check("bf16 RNE vs neighbour comparison", 2000, |rng| {
+            let x = f32::from_bits(rng.next_u32());
+            if x.is_nan() {
+                return;
+            }
+            let got = Bf16::from_f32(x);
+            let lo = Bf16((x.to_bits() >> 16) as u16); // truncation
+            let hi = Bf16(lo.0.wrapping_add(1));
+            // pick nearer of lo/hi in f64, ties to even mantissa
+            let (dlo, dhi) = (
+                (x as f64 - lo.to_f32() as f64).abs(),
+                (hi.to_f32() as f64 - x as f64).abs(),
+            );
+            let want = if x.is_infinite() {
+                lo
+            } else if dlo < dhi {
+                lo
+            } else if dhi < dlo {
+                hi
+            } else if lo.0 & 1 == 0 {
+                lo
+            } else {
+                hi
+            };
+            // hi may overflow exponent into inf; RNE overflow to inf is valid.
+            assert_eq!(got.0, want.0, "x={x} ({:#010x})", x.to_bits());
+        });
+    }
+}

@@ -1,0 +1,300 @@
+//! Bus-Invert Coding (Stan & Burleson, 1995) and its segmented variants
+//! (Shin, Chae, Choi, 2001), specialized to bf16 buses.
+//!
+//! The encoder sits at the array edge (one per SA column for weights); it
+//! compares the next bus word against the *previously transmitted* word
+//! and complements the covered field when that lowers the transition
+//! count. One `inv` sideband bit per segment travels with the data; each
+//! PE recovers the original value with XOR gates (`decode`).
+
+use crate::bf16::{Bf16, EXPONENT_MASK, MANTISSA_MASK, SIGN_MASK};
+
+/// Which part of the bf16 bus is covered by BIC.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BicMode {
+    /// No encoding (conventional SA).
+    None,
+    /// BIC over the 7 mantissa lines only — the paper's choice for
+    /// weights (exponents are concentrated, mantissas near-uniform).
+    MantissaOnly,
+    /// Classic BIC over all 16 lines as one segment.
+    FullBus,
+    /// Segmented BIC: mantissa (7 lines) and sign+exponent (9 lines)
+    /// encoded independently, one inv bit each.
+    Segmented,
+    /// BIC over the exponent+sign lines only (ablation: the paper argues
+    /// this is non-beneficial for CNN weights).
+    ExponentOnly,
+}
+
+impl BicMode {
+    /// The masked segments this mode encodes (each gets one inv line).
+    pub fn segments(self) -> &'static [u16] {
+        match self {
+            BicMode::None => &[],
+            BicMode::MantissaOnly => &[MANTISSA_MASK],
+            BicMode::FullBus => &[0xFFFF],
+            BicMode::Segmented => &[MANTISSA_MASK, EXPONENT_MASK | SIGN_MASK],
+            BicMode::ExponentOnly => &[EXPONENT_MASK | SIGN_MASK],
+        }
+    }
+
+    /// Number of inv sideband lines.
+    pub fn inv_lines(self) -> u32 {
+        self.segments().len() as u32
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BicMode::None => "none",
+            BicMode::MantissaOnly => "bic-mantissa",
+            BicMode::FullBus => "bic-full",
+            BicMode::Segmented => "bic-segmented",
+            BicMode::ExponentOnly => "bic-exponent",
+        }
+    }
+}
+
+/// Inversion decision rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BicPolicy {
+    /// Stan–Burleson: invert when the data-line Hamming distance exceeds
+    /// half the segment width (strictly more than w/2).
+    #[default]
+    Classic,
+    /// Minimize total transitions including the inv line itself.
+    MinTransitions,
+}
+
+/// One encoded bus transfer: the transmitted word plus the inv sideband
+/// bits (bit s of `inv` corresponds to segment s of the mode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Encoded {
+    pub tx: Bf16,
+    pub inv: u8,
+}
+
+/// Stateful BIC encoder for one bus (one SA column edge).
+#[derive(Clone, Debug)]
+pub struct BicEncoder {
+    mode: BicMode,
+    policy: BicPolicy,
+    prev_tx: u16,
+    prev_inv: u8,
+}
+
+impl BicEncoder {
+    /// New encoder with an all-zero reset bus state (matches the register
+    /// reset state assumed by the activity model).
+    pub fn new(mode: BicMode, policy: BicPolicy) -> Self {
+        Self { mode, policy, prev_tx: 0, prev_inv: 0 }
+    }
+
+    pub fn mode(&self) -> BicMode {
+        self.mode
+    }
+
+    /// Encode the next bus word.
+    pub fn encode(&mut self, value: Bf16) -> Encoded {
+        let mut tx = value.0;
+        let mut inv = 0u8;
+        for (s, &mask) in self.mode.segments().iter().enumerate() {
+            let width = mask.count_ones();
+            let d_plain = ((self.prev_tx ^ value.0) & mask).count_ones();
+            let invert = match self.policy {
+                BicPolicy::Classic => 2 * d_plain > width,
+                BicPolicy::MinTransitions => {
+                    let prev_inv_bit = (self.prev_inv >> s) & 1;
+                    let d_inv = width - d_plain;
+                    let cost_plain = d_plain + (prev_inv_bit != 0) as u32;
+                    let cost_inv = d_inv + (prev_inv_bit != 1) as u32;
+                    cost_inv < cost_plain
+                }
+            };
+            if invert {
+                tx ^= mask;
+                inv |= 1 << s;
+            }
+        }
+        self.prev_tx = tx;
+        self.prev_inv = inv;
+        Encoded { tx: Bf16(tx), inv }
+    }
+
+    /// Encode a whole stream (one weight column), returning the encoded
+    /// words and the sideband sequence.
+    pub fn encode_stream(&mut self, stream: &[Bf16]) -> (Vec<Bf16>, Vec<u8>) {
+        let mut tx = Vec::with_capacity(stream.len());
+        let mut inv = Vec::with_capacity(stream.len());
+        for &v in stream {
+            let e = self.encode(v);
+            tx.push(e.tx);
+            inv.push(e.inv);
+        }
+        (tx, inv)
+    }
+}
+
+/// PE-side recovery: XOR the inverted segments back (paper Fig. 3's XOR
+/// gates inside each PE). Stateless and involutive.
+pub fn decode(mode: BicMode, e: Encoded) -> Bf16 {
+    let mut v = e.tx.0;
+    for (s, &mask) in mode.segments().iter().enumerate() {
+        if (e.inv >> s) & 1 == 1 {
+            v ^= mask;
+        }
+    }
+    Bf16(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::activity::{ham16, ham16_masked};
+    use crate::util::prop::check;
+    use crate::util::Rng64;
+
+    const MODES: [BicMode; 5] = [
+        BicMode::None,
+        BicMode::MantissaOnly,
+        BicMode::FullBus,
+        BicMode::Segmented,
+        BicMode::ExponentOnly,
+    ];
+
+    fn random_stream(rng: &mut Rng64, n: usize) -> Vec<Bf16> {
+        (0..n).map(|_| Bf16::from_bits(rng.next_u32() as u16)).collect()
+    }
+
+    #[test]
+    fn decode_inverts_encode() {
+        check("BIC decode(encode(x)) == x", 500, |rng| {
+            for mode in MODES {
+                let mut enc =
+                    BicEncoder::new(mode, BicPolicy::Classic);
+                for v in random_stream(rng, 32) {
+                    let e = enc.encode(v);
+                    assert_eq!(decode(mode, e).0, v.0, "{mode:?}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn none_mode_is_identity() {
+        let mut enc = BicEncoder::new(BicMode::None, BicPolicy::Classic);
+        let v = Bf16::from_f32(-3.25);
+        let e = enc.encode(v);
+        assert_eq!(e.tx.0, v.0);
+        assert_eq!(e.inv, 0);
+    }
+
+    #[test]
+    fn classic_bound_per_transfer() {
+        // Stan–Burleson guarantee: after encoding, each transfer toggles
+        // at most floor(w/2) data lines per segment.
+        check("classic BIC per-transfer bound", 300, |rng| {
+            for mode in MODES {
+                let mut enc = BicEncoder::new(mode, BicPolicy::Classic);
+                let mut prev = 0u16;
+                for v in random_stream(rng, 64) {
+                    let e = enc.encode(v);
+                    for &mask in mode.segments() {
+                        let w = mask.count_ones();
+                        let d = ham16_masked(prev, e.tx.0, mask);
+                        assert!(
+                            2 * d <= w,
+                            "{mode:?}: {d} toggles on width-{w} segment"
+                        );
+                    }
+                    prev = e.tx.0;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn encoded_stream_never_worse_including_inv_line() {
+        // MinTransitions policy: total transitions (data + inv lines) of
+        // the encoded stream never exceed those of the raw stream.
+        check("BIC min-transitions never worse", 300, |rng| {
+            for mode in MODES {
+                let stream = random_stream(rng, 64);
+                let mut enc = BicEncoder::new(mode, BicPolicy::MinTransitions);
+                let (tx, inv) = enc.encode_stream(&stream);
+                let mut raw = 0u64;
+                let mut coded = 0u64;
+                let (mut pr, mut pt, mut pi) = (0u16, 0u16, 0u8);
+                for i in 0..stream.len() {
+                    raw += ham16(pr, stream[i].0) as u64;
+                    coded += ham16(pt, tx[i].0) as u64
+                        + (pi ^ inv[i]).count_ones() as u64;
+                    pr = stream[i].0;
+                    pt = tx[i].0;
+                    pi = inv[i];
+                }
+                assert!(
+                    coded <= raw,
+                    "{mode:?}: coded {coded} > raw {raw}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn mantissa_only_never_touches_sign_exponent() {
+        check("mantissa BIC preserves sign/exp lines", 500, |rng| {
+            let mut enc = BicEncoder::new(BicMode::MantissaOnly, BicPolicy::Classic);
+            for v in random_stream(rng, 16) {
+                let e = enc.encode(v);
+                assert_eq!(e.tx.sign(), v.sign());
+                assert_eq!(e.tx.exponent(), v.exponent());
+            }
+        });
+    }
+
+    #[test]
+    fn known_inversion_example() {
+        // prev=0, next mantissa = 0b1111111 (7 ones): distance 7 > 3.5
+        // -> inverted to 0, inv bit set.
+        let mut enc = BicEncoder::new(BicMode::MantissaOnly, BicPolicy::Classic);
+        let v = Bf16::from_fields(0, 0, 0x7F);
+        let e = enc.encode(v);
+        assert_eq!(e.inv, 1);
+        assert_eq!(e.tx.mantissa(), 0);
+        assert_eq!(decode(BicMode::MantissaOnly, e).mantissa(), 0x7F);
+    }
+
+    #[test]
+    fn tie_is_not_inverted() {
+        // FullBus width 16, distance exactly 8 must NOT invert (classic
+        // rule is strict >).
+        let mut enc = BicEncoder::new(BicMode::FullBus, BicPolicy::Classic);
+        let e = enc.encode(Bf16::from_bits(0x00FF)); // 8 ones from reset 0
+        assert_eq!(e.inv, 0);
+        assert_eq!(e.tx.0, 0x00FF);
+    }
+
+    #[test]
+    fn segmented_decides_per_segment() {
+        let mut enc = BicEncoder::new(BicMode::Segmented, BicPolicy::Classic);
+        // mantissa: 7 ones (invert); sign+exp: 1 one (keep)
+        let v = Bf16::from_bits(0x007F | 0x0080);
+        let e = enc.encode(v);
+        assert_eq!(e.inv & 1, 1, "mantissa segment inverted");
+        assert_eq!(e.inv >> 1, 0, "exp segment kept");
+        assert_eq!(decode(BicMode::Segmented, e).0, v.0);
+    }
+
+    #[test]
+    fn encoder_state_is_prev_transmitted_not_prev_raw() {
+        // Two identical raw words in a row: the second must cause zero
+        // data-line toggles even if the first was inverted.
+        let mut enc = BicEncoder::new(BicMode::MantissaOnly, BicPolicy::Classic);
+        let v = Bf16::from_fields(0, 3, 0x7F);
+        let e1 = enc.encode(v);
+        let e2 = enc.encode(v);
+        assert_eq!(ham16(e1.tx.0, e2.tx.0), 0);
+        assert_eq!(decode(BicMode::MantissaOnly, e2).0, v.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Coding configuration of an SA instance: which stream gets which
+//! power-saving technique. The paper's design space in one struct.
+
+use super::bic::{BicMode, BicPolicy};
+
+/// Full coding configuration of an SA (inputs = West, weights = North).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SaCodingConfig {
+    /// BIC mode applied to the weight (North) streams.
+    pub weight_bic: BicMode,
+    /// BIC mode applied to the input (West) streams (ablation only; the
+    /// paper applies no BIC to inputs).
+    pub input_bic: BicMode,
+    /// Inversion decision policy for all BIC encoders.
+    pub bic_policy: BicPolicy,
+    /// Zero-value clock gating on the input (West) streams.
+    pub input_zvcg: bool,
+    /// Zero-value clock gating on the weight (North) streams (ablation;
+    /// CNN weights are rarely exactly zero without pruning).
+    pub weight_zvcg: bool,
+}
+
+impl SaCodingConfig {
+    /// The conventional SA: no power-saving features (paper's baseline).
+    pub const fn baseline() -> Self {
+        Self {
+            weight_bic: BicMode::None,
+            input_bic: BicMode::None,
+            bic_policy: BicPolicy::Classic,
+            input_zvcg: false,
+            weight_zvcg: false,
+        }
+    }
+
+    /// The paper's proposed design: mantissa-only BIC on weights +
+    /// zero-value clock gating on inputs.
+    pub const fn proposed() -> Self {
+        Self {
+            weight_bic: BicMode::MantissaOnly,
+            input_bic: BicMode::None,
+            bic_policy: BicPolicy::Classic,
+            input_zvcg: true,
+            weight_zvcg: false,
+        }
+    }
+
+    /// BIC-only ablation (no gating).
+    pub const fn bic_only() -> Self {
+        Self { input_zvcg: false, ..Self::proposed() }
+    }
+
+    /// ZVCG-only ablation (no coding).
+    pub const fn zvcg_only() -> Self {
+        Self { weight_bic: BicMode::None, ..Self::proposed() }
+    }
+
+    /// Named configuration lookup (CLI / bench parameter).
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "baseline" | "conventional" => Self::baseline(),
+            "proposed" => Self::proposed(),
+            "bic-only" => Self::bic_only(),
+            "zvcg-only" => Self::zvcg_only(),
+            "bic-full" => Self {
+                weight_bic: BicMode::FullBus,
+                ..Self::proposed()
+            },
+            "bic-segmented" => Self {
+                weight_bic: BicMode::Segmented,
+                ..Self::proposed()
+            },
+            "bic-exponent" => Self {
+                weight_bic: BicMode::ExponentOnly,
+                ..Self::proposed()
+            },
+            _ => return None,
+        })
+    }
+
+    /// Short display name.
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        if self.weight_bic != BicMode::None {
+            parts.push(format!("w:{}", self.weight_bic.name()));
+        }
+        if self.input_bic != BicMode::None {
+            parts.push(format!("i:{}", self.input_bic.name()));
+        }
+        if self.input_zvcg {
+            parts.push("i:zvcg".into());
+        }
+        if self.weight_zvcg {
+            parts.push("w:zvcg".into());
+        }
+        if parts.is_empty() {
+            "baseline".into()
+        } else {
+            parts.join("+")
+        }
+    }
+
+    /// True if any extra logic (encoders/detectors/gates) is present.
+    pub fn has_overhead(&self) -> bool {
+        self.weight_bic != BicMode::None
+            || self.input_bic != BicMode::None
+            || self.input_zvcg
+            || self.weight_zvcg
+    }
+}
+
+impl Default for SaCodingConfig {
+    fn default() -> Self {
+        Self::baseline()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs() {
+        let p = SaCodingConfig::proposed();
+        assert_eq!(p.weight_bic, BicMode::MantissaOnly);
+        assert!(p.input_zvcg);
+        assert!(!p.weight_zvcg);
+        assert_eq!(p.input_bic, BicMode::None);
+        let b = SaCodingConfig::baseline();
+        assert!(!b.has_overhead());
+        assert_eq!(b.describe(), "baseline");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in [
+            "baseline", "proposed", "bic-only", "zvcg-only", "bic-full",
+            "bic-segmented", "bic-exponent",
+        ] {
+            assert!(SaCodingConfig::by_name(n).is_some(), "{n}");
+        }
+        assert!(SaCodingConfig::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn describe_proposed() {
+        assert_eq!(
+            SaCodingConfig::proposed().describe(),
+            "w:bic-mantissa+i:zvcg"
+        );
+    }
+}

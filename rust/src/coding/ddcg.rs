@@ -1,0 +1,156 @@
+//! Data-Driven Clock Gating (paper §III-A(a)) — the technique the paper
+//! *dismisses* for CNN streams, implemented so the dismissal can be
+//! quantified (see the `ddcg` CLI subcommand and EXPERIMENTS.md).
+//!
+//! DDCG gates a flip-flop's clock when its next state equals its current
+//! state (Wimer & Koren, 2014). To amortize the comparator + ICG, FFs
+//! are grouped: the group's clock is gated only when *no* FF in the
+//! group changes. The paper's argument: CNN value streams have no
+//! correlated bit groups — fine groups cost too much logic, coarse
+//! groups almost never gate. This module measures exactly that tradeoff
+//! on real bf16 streams.
+
+use crate::bf16::Bf16;
+
+/// Analysis of DDCG applied to one 16-bit value stream register.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DdcgReport {
+    /// FF·cycles whose clock was gated (state unchanged for the whole
+    /// group).
+    pub gated_ff_cycles: u64,
+    /// Total FF·cycles (16 × stream length).
+    pub total_ff_cycles: u64,
+    /// Comparator evaluations (one per group per cycle; each comparator
+    /// spans the group width).
+    pub comparator_bit_cycles: u64,
+    /// Number of gating groups.
+    pub groups: usize,
+}
+
+impl DdcgReport {
+    /// Fraction of FF clock events eliminated.
+    pub fn gating_effectiveness(&self) -> f64 {
+        if self.total_ff_cycles == 0 {
+            return 0.0;
+        }
+        self.gated_ff_cycles as f64 / self.total_ff_cycles as f64
+    }
+
+    /// Net clock-energy change in femtojoules (negative = DDCG loses):
+    /// savings from gated FF clocks minus comparator (XOR+OR per bit) and
+    /// ICG burn. Uses the same constants family as `EnergyModel`.
+    pub fn net_saving_fj(&self, e_ff_clk: f64, e_cmp_bit: f64, e_cg_cell: f64) -> f64 {
+        let saved = self.gated_ff_cycles as f64 * e_ff_clk;
+        let cycles = self.total_ff_cycles as f64 / 16.0;
+        let overhead = self.comparator_bit_cycles as f64 * e_cmp_bit
+            + self.groups as f64 * cycles * e_cg_cell;
+        saved - overhead
+    }
+}
+
+/// Apply group-level DDCG to a bf16 stream: `group_bits` must divide 16.
+/// Groups are contiguous bit fields (LSB-first), matching how a
+/// synthesis flow would slice a register.
+pub fn ddcg_analyze(stream: &[Bf16], group_bits: usize) -> DdcgReport {
+    assert!(group_bits > 0 && 16 % group_bits == 0, "group must divide 16");
+    let groups = 16 / group_bits;
+    let mask = if group_bits == 16 { 0xFFFF } else { ((1u32 << group_bits) - 1) as u16 };
+
+    let mut gated = 0u64;
+    let mut prev = 0u16;
+    for &v in stream {
+        for g in 0..groups {
+            let shift = g * group_bits;
+            let unchanged = ((prev >> shift) ^ (v.0 >> shift)) & mask == 0;
+            if unchanged {
+                gated += group_bits as u64;
+            }
+        }
+        prev = v.0;
+    }
+    DdcgReport {
+        gated_ff_cycles: gated,
+        total_ff_cycles: 16 * stream.len() as u64,
+        comparator_bit_cycles: 16 * stream.len() as u64,
+        groups,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Rng64;
+
+    fn bf(v: f32) -> Bf16 {
+        Bf16::from_f32(v)
+    }
+
+    #[test]
+    fn constant_stream_fully_gates() {
+        let s = vec![bf(1.5); 10];
+        // first cycle differs from reset 0, rest identical
+        let r = ddcg_analyze(&s, 16);
+        assert_eq!(r.total_ff_cycles, 160);
+        assert_eq!(r.gated_ff_cycles, 9 * 16);
+        assert!(r.gating_effectiveness() > 0.89);
+    }
+
+    #[test]
+    fn finer_groups_gate_at_least_as_much() {
+        check("DDCG monotone in granularity", 100, |rng| {
+            let s: Vec<Bf16> = (0..64)
+                .map(|_| bf((rng.normal() * 0.1) as f32))
+                .collect();
+            let mut prev_gated = 0;
+            for g in [16usize, 8, 4, 2, 1] {
+                let r = ddcg_analyze(&s, g);
+                assert!(
+                    r.gated_ff_cycles >= prev_gated,
+                    "group {g}: {} < {prev_gated}",
+                    r.gated_ff_cycles
+                );
+                prev_gated = r.gated_ff_cycles;
+            }
+        });
+    }
+
+    #[test]
+    fn cnn_streams_defeat_coarse_ddcg() {
+        // The paper's dismissal: on CNN-like weight streams, word-level
+        // (or byte-level) groups almost never hold still.
+        let mut rng = Rng64::new(5);
+        let s: Vec<Bf16> = (0..4096)
+            .map(|_| bf((rng.normal() * 0.08).clamp(-1.0, 1.0) as f32))
+            .collect();
+        let word = ddcg_analyze(&s, 16);
+        assert!(
+            word.gating_effectiveness() < 0.02,
+            "word-level DDCG gated {:.3}",
+            word.gating_effectiveness()
+        );
+        let byte = ddcg_analyze(&s, 8);
+        assert!(byte.gating_effectiveness() < 0.15);
+    }
+
+    #[test]
+    fn bit_level_gates_a_lot_but_net_loses() {
+        // Bit-level DDCG gates ~50 % of FF clocks on random-ish data but
+        // pays a comparator per bit — net negative with realistic costs.
+        let mut rng = Rng64::new(6);
+        let s: Vec<Bf16> = (0..4096)
+            .map(|_| bf((rng.normal() * 0.08).clamp(-1.0, 1.0) as f32))
+            .collect();
+        let bit = ddcg_analyze(&s, 1);
+        assert!(bit.gating_effectiveness() > 0.35);
+        // e_ff_clk=0.9, comparator ~0.6 fJ/bit/cycle, ICG 0.5/group
+        let net = bit.net_saving_fj(0.9, 0.6, 0.5);
+        assert!(net < 0.0, "bit-level DDCG should net-lose: {net}");
+    }
+
+    #[test]
+    #[should_panic(expected = "group must divide 16")]
+    fn bad_group_size_panics() {
+        ddcg_analyze(&[Bf16::ZERO], 3);
+    }
+}

@@ -1,0 +1,18 @@
+//! Low-power stream coding: Bus-Invert Coding variants and zero-value
+//! clock gating (paper §III).
+//!
+//! The paper's *proposed* configuration is `SaCodingConfig::proposed()`:
+//! mantissa-only BIC on the weight (North) streams + ZVCG on the input
+//! (West) streams. Every other combination is implemented as a baseline
+//! or ablation point (full-bus BIC, segmented BIC, exponent-only BIC,
+//! ZVCG on weights, BIC on inputs).
+
+mod bic;
+mod config;
+mod ddcg;
+mod zvcg;
+
+pub use bic::*;
+pub use config::*;
+pub use ddcg::*;
+pub use zvcg::*;

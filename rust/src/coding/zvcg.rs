@@ -1,0 +1,152 @@
+//! Zero-Value Clock Gating (paper §III-A(2), applied to the SA inputs).
+//!
+//! A zero detector at the West edge checks each incoming value; on zero it
+//! asserts the `is-zero` sideband bit and freezes the data pipeline (the
+//! 16-bit registers are clock-gated and hold their previous value), while
+//! the 1-bit sideband travels through the array. Inside each PE the
+//! sideband data-gates the multiplier operands and clock-gates the
+//! accumulator: a multiply-by-zero contributes nothing and is skipped
+//! entirely.
+
+use crate::bf16::Bf16;
+
+/// The edge view of one input stream under ZVCG: what the data registers
+/// actually see (`held`), and the sideband sequence (`is_zero`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GatedStream {
+    /// Value held in (or loaded into) the data register at each cycle.
+    /// On gated cycles this repeats the previous value.
+    pub held: Vec<Bf16>,
+    /// The `is-zero` sideband bit per cycle.
+    pub is_zero: Vec<bool>,
+}
+
+impl GatedStream {
+    /// Apply ZVCG semantics to a raw input stream (reset state 0).
+    pub fn from_stream(stream: &[Bf16]) -> Self {
+        let mut held = Vec::with_capacity(stream.len());
+        let mut is_zero = Vec::with_capacity(stream.len());
+        let mut last = Bf16::ZERO;
+        for &v in stream {
+            if v.is_zero() {
+                is_zero.push(true);
+                held.push(last);
+            } else {
+                is_zero.push(false);
+                held.push(v);
+                last = v;
+            }
+        }
+        GatedStream { held, is_zero }
+    }
+
+    /// The effective operand at cycle `t` as the PE multiplier sees it
+    /// (gated: the original value if non-zero, else "skip").
+    pub fn operand(&self, t: usize) -> Option<Bf16> {
+        if self.is_zero[t] {
+            None
+        } else {
+            Some(self.held[t])
+        }
+    }
+
+    /// Number of gated (skipped) cycles.
+    pub fn gated_cycles(&self) -> u64 {
+        self.is_zero.iter().filter(|&&z| z).count() as u64
+    }
+
+    /// Number of load (clocked) cycles of the data registers.
+    pub fn load_cycles(&self) -> u64 {
+        self.is_zero.len() as u64 - self.gated_cycles()
+    }
+}
+
+/// Reconstruct the functional stream (zeros restored) — the PE's effective
+/// multiplicand sequence. Used by tests to prove ZVCG is functionally
+/// transparent.
+pub fn ungate(g: &GatedStream) -> Vec<Bf16> {
+    g.is_zero
+        .iter()
+        .zip(&g.held)
+        .map(|(&z, &h)| if z { Bf16::ZERO } else { h })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::activity::stream_toggles;
+    use crate::util::prop::check;
+    use crate::util::Rng64;
+
+    fn bf(v: f32) -> Bf16 {
+        Bf16::from_f32(v)
+    }
+
+    fn random_sparse(rng: &mut Rng64, n: usize, p: f64) -> Vec<Bf16> {
+        (0..n)
+            .map(|_| if rng.chance(p) { Bf16::ZERO } else { bf(rng.normal() as f32) })
+            .collect()
+    }
+
+    #[test]
+    fn holds_previous_value_on_zero() {
+        let s = vec![bf(1.0), bf(0.0), bf(0.0), bf(2.0)];
+        let g = GatedStream::from_stream(&s);
+        assert_eq!(g.held, vec![bf(1.0), bf(1.0), bf(1.0), bf(2.0)]);
+        assert_eq!(g.is_zero, vec![false, true, true, false]);
+    }
+
+    #[test]
+    fn leading_zeros_hold_reset_state() {
+        let s = vec![bf(0.0), bf(3.0)];
+        let g = GatedStream::from_stream(&s);
+        assert_eq!(g.held[0], Bf16::ZERO);
+        assert_eq!(g.held[1], bf(3.0));
+    }
+
+    #[test]
+    fn functionally_transparent() {
+        check("ungate(gate(s)) == s up to zero sign", 300, |rng| {
+            let s = random_sparse(rng, 64, 0.5);
+            let g = GatedStream::from_stream(&s);
+            let u = ungate(&g);
+            for (a, b) in s.iter().zip(&u) {
+                // -0.0 is gated like +0.0; functional value is equal
+                assert_eq!(a.to_f32(), b.to_f32());
+            }
+        });
+    }
+
+    #[test]
+    fn register_sees_subsequence_of_nonzeros() {
+        check("held-stream toggles == gated-subsequence toggles", 300, |rng| {
+            let s = random_sparse(rng, 64, 0.4);
+            let g = GatedStream::from_stream(&s);
+            let nz: Vec<Bf16> = s.iter().copied().filter(|v| !v.is_zero()).collect();
+            assert_eq!(
+                stream_toggles(Bf16::ZERO, &g.held),
+                stream_toggles(Bf16::ZERO, &nz)
+            );
+        });
+    }
+
+    #[test]
+    fn counts_partition_cycles() {
+        check("gated + load cycles == stream length", 200, |rng| {
+            let p = rng.uniform();
+            let s = random_sparse(rng, 100, p);
+            let g = GatedStream::from_stream(&s);
+            assert_eq!(g.gated_cycles() + g.load_cycles(), s.len() as u64);
+        });
+    }
+
+    #[test]
+    fn operand_is_none_exactly_on_zero() {
+        let s = vec![bf(0.0), bf(5.0), bf(-0.0)];
+        let g = GatedStream::from_stream(&s);
+        assert_eq!(g.operand(0), None);
+        assert_eq!(g.operand(1), Some(bf(5.0)));
+        assert_eq!(g.operand(2), None);
+    }
+}

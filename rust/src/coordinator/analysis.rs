@@ -1,0 +1,331 @@
+//! Per-layer SA power analysis: layer → im2col GEMM → tiles → analytic
+//! activity model → energy, for a set of coding configurations at once.
+
+use crate::activity::ActivityCounts;
+use crate::coding::SaCodingConfig;
+use crate::power::EnergyBreakdown;
+use crate::sa::{analyze_tile, SaConfig};
+use crate::workload::{
+    extract_channel, extract_tile, gen_feature_map, gen_weights, im2col_same,
+    zero_fraction, Gemm, GemmShape, Layer, LayerKind, TileGrid,
+    TilePlan,
+};
+
+/// Options controlling a sweep (sampling granularity, geometry, seed).
+#[derive(Clone, Debug)]
+pub struct AnalysisOptions {
+    /// Base seed for all synthetic data (figures regenerate identically).
+    pub seed: u64,
+    /// Max tiles analyzed per layer GEMM (energy is scaled up).
+    pub max_tiles_per_layer: usize,
+    /// Max depthwise channels analyzed per layer (scaled up).
+    pub max_dw_channels: usize,
+    /// SA geometry + models.
+    pub sa: SaConfig,
+}
+
+impl Default for AnalysisOptions {
+    fn default() -> Self {
+        Self {
+            seed: 0xCAFE,
+            max_tiles_per_layer: 64,
+            max_dw_channels: 4,
+            sa: SaConfig::default(),
+        }
+    }
+}
+
+/// Result of analyzing one layer under one coding configuration.
+#[derive(Clone, Debug)]
+pub struct ConfigResult {
+    pub config: SaCodingConfig,
+    pub config_name: String,
+    /// Scaled activity counts (integers scaled → f64 kept in energy; the
+    /// raw sampled counts are preserved here).
+    pub counts: ActivityCounts,
+    /// Scaled energy (femtojoules) for the whole layer.
+    pub energy: EnergyBreakdown,
+}
+
+/// Per-layer analysis output.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub layer_name: String,
+    pub layer_index: usize,
+    pub gemm: GemmShape,
+    /// Measured zero fraction of the layer's input stream (A matrix).
+    pub input_zero_frac: f64,
+    /// Tiles analyzed / total tiles (sampling transparency).
+    pub sampled_tiles: usize,
+    pub total_tiles: usize,
+    pub results: Vec<ConfigResult>,
+}
+
+impl LayerReport {
+    pub fn energy_of(&self, config_name: &str) -> Option<&EnergyBreakdown> {
+        self.results
+            .iter()
+            .find(|r| r.config_name == config_name)
+            .map(|r| &r.energy)
+    }
+
+    /// Percent total-energy savings of `b` relative to `a`.
+    pub fn savings_pct(&self, a: &str, b: &str) -> Option<f64> {
+        let ea = self.energy_of(a)?.total();
+        let eb = self.energy_of(b)?.total();
+        if ea == 0.0 {
+            return None;
+        }
+        Some(100.0 * (ea - eb) / ea)
+    }
+}
+
+/// Scale an energy breakdown by a sampling factor.
+fn scale_energy(e: &EnergyBreakdown, s: f64) -> EnergyBreakdown {
+    EnergyBreakdown {
+        west_data: e.west_data * s,
+        west_clock: e.west_clock * s,
+        west_gating: e.west_gating * s,
+        north_data: e.north_data * s,
+        north_clock: e.north_clock * s,
+        north_coding: e.north_coding * s,
+        mult: e.mult * s,
+        add_acc: e.add_acc * s,
+        acc_clock: e.acc_clock * s,
+        unload: e.unload * s,
+    }
+}
+
+/// Build the layer's GEMM instance(s) from synthetic data. Depthwise
+/// layers return one GEMM per *sampled* channel plus the channel scale.
+pub fn build_layer_gemms(
+    layer: &Layer,
+    layer_idx: usize,
+    opts: &AnalysisOptions,
+) -> (Vec<Gemm>, f64) {
+    let seed = opts.seed;
+    let fm = gen_feature_map(layer, seed, layer_idx);
+    let w = gen_weights(layer, seed, layer_idx);
+    build_gemms_from_data(layer, fm, w, opts)
+}
+
+/// Lower a layer with *given* input feature map + weights (used by the
+/// e2e path, where activations come from the real XLA forward pass).
+pub fn build_gemms_from_data(
+    layer: &Layer,
+    fm: Vec<f32>,
+    w: Vec<f32>,
+    opts: &AnalysisOptions,
+) -> (Vec<Gemm>, f64) {
+    match layer.kind {
+        LayerKind::Conv => {
+            let a = im2col_same(
+                &fm,
+                layer.h,
+                layer.w,
+                layer.cin,
+                layer.kh,
+                layer.kw,
+                layer.stride,
+            );
+            (vec![Gemm::new(a, w, layer.gemm())], 1.0)
+        }
+        LayerKind::Dense => {
+            let shape = layer.gemm();
+            (vec![Gemm::new(fm, w, shape)], 1.0)
+        }
+        LayerKind::Depthwise => {
+            let shape = layer.gemm();
+            let channels = layer.cin.min(opts.max_dw_channels.max(1));
+            let gemms = (0..channels)
+                .map(|ch| {
+                    let chan = extract_channel(&fm, layer.h, layer.w, layer.cin, ch);
+                    let a = im2col_same(
+                        &chan,
+                        layer.h,
+                        layer.w,
+                        1,
+                        layer.kh,
+                        layer.kw,
+                        layer.stride,
+                    );
+                    let b = w[ch * shape.k..(ch + 1) * shape.k].to_vec();
+                    Gemm::new(a, b, shape)
+                })
+                .collect();
+            (gemms, layer.cin as f64 / channels as f64)
+        }
+    }
+}
+
+/// Analyze one layer under every configuration in `configs`, using
+/// synthetic data.
+pub fn analyze_layer(
+    layer: &Layer,
+    layer_idx: usize,
+    configs: &[(String, SaCodingConfig)],
+    opts: &AnalysisOptions,
+) -> LayerReport {
+    let (gemms, channel_scale) = build_layer_gemms(layer, layer_idx, opts);
+    analyze_gemms(layer, layer_idx, gemms, channel_scale, configs, opts)
+}
+
+/// Analyze one layer with caller-provided input data (e2e path).
+pub fn analyze_layer_with_data(
+    layer: &Layer,
+    layer_idx: usize,
+    fm: Vec<f32>,
+    weights: Vec<f32>,
+    configs: &[(String, SaCodingConfig)],
+    opts: &AnalysisOptions,
+) -> LayerReport {
+    let (gemms, channel_scale) = build_gemms_from_data(layer, fm, weights, opts);
+    analyze_gemms(layer, layer_idx, gemms, channel_scale, configs, opts)
+}
+
+fn analyze_gemms(
+    layer: &Layer,
+    layer_idx: usize,
+    gemms: Vec<Gemm>,
+    channel_scale: f64,
+    configs: &[(String, SaCodingConfig)],
+    opts: &AnalysisOptions,
+) -> LayerReport {
+    let rows = opts.sa.rows;
+    let cols = opts.sa.cols;
+
+    let mut per_config: Vec<(ActivityCounts, EnergyBreakdown)> =
+        configs.iter().map(|_| Default::default()).collect();
+    let mut sampled_tiles = 0usize;
+    let mut total_tiles = 0usize;
+    let mut zero_acc = 0.0f64;
+
+    // Spread the per-layer tile budget across the layer's GEMMs.
+    let budget = (opts.max_tiles_per_layer / gemms.len()).max(1);
+    for (gi, g) in gemms.iter().enumerate() {
+        let grid = TileGrid::of(g.shape, rows, cols);
+        let plan = TilePlan::sample(
+            &grid,
+            budget,
+            opts.seed ^ (layer_idx as u64) ^ ((gi as u64) << 32),
+        );
+        total_tiles += grid.total();
+        sampled_tiles += plan.picks.len();
+        zero_acc += zero_fraction(&g.a);
+        let scale = plan.scale * channel_scale;
+        for &(mi, ni) in &plan.picks {
+            let tile = extract_tile(g, &grid, mi, ni);
+            for (ci, (_, cfg)) in configs.iter().enumerate() {
+                let counts = analyze_tile(&tile, cfg);
+                let energy = opts.sa.energy.energy(&counts);
+                per_config[ci].0.add(&counts);
+                per_config[ci].1.add(&scale_energy(&energy, scale));
+            }
+        }
+    }
+
+    let results = configs
+        .iter()
+        .zip(per_config)
+        .map(|((name, cfg), (counts, energy))| ConfigResult {
+            config: *cfg,
+            config_name: name.clone(),
+            counts,
+            energy,
+        })
+        .collect();
+
+    LayerReport {
+        layer_name: layer.name.clone(),
+        layer_index: layer_idx,
+        gemm: layer.gemm(),
+        input_zero_frac: zero_acc / gemms.len() as f64,
+        sampled_tiles,
+        total_tiles,
+        results,
+    }
+}
+
+/// The two-config set used by the paper's figures.
+pub fn paper_configs() -> Vec<(String, SaCodingConfig)> {
+    vec![
+        ("baseline".into(), SaCodingConfig::baseline()),
+        ("proposed".into(), SaCodingConfig::proposed()),
+    ]
+}
+
+/// The full ablation set.
+pub fn ablation_configs() -> Vec<(String, SaCodingConfig)> {
+    [
+        "baseline",
+        "proposed",
+        "bic-only",
+        "zvcg-only",
+        "bic-full",
+        "bic-segmented",
+        "bic-exponent",
+    ]
+    .iter()
+    .map(|n| (n.to_string(), SaCodingConfig::by_name(n).unwrap()))
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::tinycnn;
+
+    fn small_opts() -> AnalysisOptions {
+        AnalysisOptions { max_tiles_per_layer: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn analyze_conv_layer_basics() {
+        let net = tinycnn();
+        let r = analyze_layer(&net.layers[1], 1, &paper_configs(), &small_opts());
+        assert_eq!(r.results.len(), 2);
+        assert!(r.sampled_tiles > 0 && r.sampled_tiles <= 4);
+        assert!(r.total_tiles >= r.sampled_tiles);
+        let base = r.energy_of("baseline").unwrap().total();
+        let prop = r.energy_of("proposed").unwrap().total();
+        assert!(base > 0.0 && prop > 0.0);
+        // sparse ReLU inputs: proposed must save energy
+        assert!(prop < base, "proposed {prop} !< baseline {base}");
+        let s = r.savings_pct("baseline", "proposed").unwrap();
+        assert!((0.0..60.0).contains(&s), "savings {s}%");
+    }
+
+    #[test]
+    fn depthwise_layer_analyzes() {
+        let net = crate::workload::mobilenet_v1();
+        let dw = net
+            .layers
+            .iter()
+            .position(|l| l.kind == LayerKind::Depthwise)
+            .unwrap();
+        let r = analyze_layer(&net.layers[dw], dw, &paper_configs(), &small_opts());
+        assert!(r.energy_of("baseline").unwrap().total() > 0.0);
+        assert!(r.input_zero_frac > 0.0);
+    }
+
+    #[test]
+    fn deterministic_reports() {
+        let net = tinycnn();
+        let r1 = analyze_layer(&net.layers[2], 2, &paper_configs(), &small_opts());
+        let r2 = analyze_layer(&net.layers[2], 2, &paper_configs(), &small_opts());
+        assert_eq!(
+            r1.energy_of("proposed").unwrap().total(),
+            r2.energy_of("proposed").unwrap().total()
+        );
+        assert_eq!(r1.results[0].counts, r2.results[0].counts);
+    }
+
+    #[test]
+    fn dense_layer_analyzes() {
+        let net = tinycnn();
+        let fc = net.layers.len() - 1;
+        let r = analyze_layer(&net.layers[fc], fc, &paper_configs(), &small_opts());
+        assert_eq!(r.gemm.m, 1);
+        assert!(r.energy_of("baseline").unwrap().total() > 0.0);
+    }
+}

@@ -1,0 +1,225 @@
+//! The e2e inference server: a dedicated PJRT thread serving TinyConvNet
+//! forward passes from the AOT artifacts, with batched request handling
+//! over channels.
+//!
+//! PJRT handles are not `Send`, so the runtime lives on one thread; the
+//! public handle is cheap to clone and thread-safe. Each response carries
+//! the per-layer activations, from which the SA power model measures the
+//! *emergent* zero fractions — the quantity the paper's ZVCG exploits.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Rng64;
+use crate::workload::{tinycnn, tinycnn_param_shapes, zero_fraction, Network};
+
+use super::Metrics;
+
+/// Synthetic TinyConvNet parameters (He-scaled; mirrors the python-side
+/// test initializer and the workload generator).
+#[derive(Clone, Debug)]
+pub struct TinycnnParams {
+    /// Conv weights (HWIO, flattened) + fc weight + fc bias, in artifact
+    /// argument order.
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl TinycnnParams {
+    pub fn generate(seed: u64) -> Self {
+        let mut rng = Rng64::new(seed);
+        let tensors = tinycnn_param_shapes()
+            .iter()
+            .map(|shape| {
+                let n: usize = shape.iter().product();
+                let fan_in: usize = if shape.len() > 1 {
+                    shape[..shape.len() - 1].iter().product()
+                } else {
+                    shape[0]
+                };
+                let std = (2.0 / fan_in.max(1) as f64).sqrt();
+                (0..n)
+                    .map(|_| (rng.normal_ms(0.0, std)).clamp(-1.0, 1.0) as f32)
+                    .collect()
+            })
+            .collect();
+        TinycnnParams { tensors }
+    }
+
+    /// The GEMM-layout weight matrix of conv layer `i` (HWIO flattening
+    /// IS the K×N row-major layout).
+    pub fn gemm_weights(&self, layer: usize) -> &[f32] {
+        &self.tensors[layer]
+    }
+}
+
+/// One inference result.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub logits: Vec<f32>,
+    /// Post-ReLU activations per conv layer (NHWC, flattened).
+    pub activations: Vec<Vec<f32>>,
+    /// Zero fraction of each activation tensor.
+    pub zero_fractions: Vec<f64>,
+    pub latency: Duration,
+}
+
+enum Cmd {
+    Infer {
+        image: Vec<f32>,
+        respond: mpsc::Sender<Result<InferResponse>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the inference thread.
+pub struct InferenceServer {
+    tx: mpsc::Sender<Cmd>,
+    join: Option<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    pub network: Network,
+    pub params: TinycnnParams,
+}
+
+impl InferenceServer {
+    /// Spawn the server: opens the artifact dir, compiles
+    /// `tinycnn_forward` once, then serves requests until dropped.
+    pub fn start(artifact_dir: &Path, params: TinycnnParams) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir = artifact_dir.to_path_buf();
+        let thread_params = params.clone();
+        let metrics = Arc::new(Metrics::default());
+        let thread_metrics = Arc::clone(&metrics);
+
+        let join = std::thread::spawn(move || {
+            let mut runtime = match crate::runtime::Runtime::open(&dir) {
+                Ok(r) => r,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            if let Err(e) = runtime.load("tinycnn_forward") {
+                let _ = ready_tx.send(Err(e));
+                return;
+            }
+            let _ = ready_tx.send(Ok(()));
+
+            while let Ok(cmd) = rx.recv() {
+                match cmd {
+                    Cmd::Shutdown => break,
+                    Cmd::Infer { image, respond } => {
+                        let t0 = Instant::now();
+                        let result =
+                            run_forward(&mut runtime, &image, &thread_params);
+                        let latency = t0.elapsed();
+                        thread_metrics.record_request(latency, result.is_ok());
+                        let result = result.map(|(logits, acts)| {
+                            let zero_fractions =
+                                acts.iter().map(|a| zero_fraction(a)).collect();
+                            InferResponse {
+                                logits,
+                                activations: acts,
+                                zero_fractions,
+                                latency,
+                            }
+                        });
+                        let _ = respond.send(result);
+                    }
+                }
+            }
+        });
+
+        ready_rx
+            .recv()
+            .context("inference thread died during startup")??;
+        Ok(InferenceServer {
+            tx,
+            join: Some(join),
+            metrics,
+            network: tinycnn(),
+            params,
+        })
+    }
+
+    /// Synchronous inference of one 32×32×3 image.
+    pub fn infer(&self, image: Vec<f32>) -> Result<InferResponse> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Infer { image, respond: tx })
+            .map_err(|_| anyhow!("inference thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("inference thread dropped request"))?
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn run_forward(
+    runtime: &mut crate::runtime::Runtime,
+    image: &[f32],
+    params: &TinycnnParams,
+) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+    let mut inputs: Vec<&[f32]> = vec![image];
+    for t in &params.tensors {
+        inputs.push(t);
+    }
+    let outputs = runtime.run("tinycnn_forward", &inputs)?;
+    let logits = outputs[0].as_f32()?.to_vec();
+    let acts = outputs[1..]
+        .iter()
+        .map(|o| o.as_f32().map(|s| s.to_vec()))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((logits, acts))
+}
+
+/// Generate a synthetic "image" (dense, normalized-pixel-like).
+pub fn synthetic_image(seed: u64) -> Vec<f32> {
+    let mut rng = Rng64::new(seed ^ 0x1336);
+    (0..32 * 32 * 3)
+        .map(|_| (rng.normal().clamp(-2.5, 2.5)) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_match_artifact_arity() {
+        let p = TinycnnParams::generate(1);
+        assert_eq!(p.tensors.len(), 7);
+        assert_eq!(p.tensors[0].len(), 3 * 3 * 3 * 16);
+        assert_eq!(p.tensors[5].len(), 64 * 10);
+        assert_eq!(p.tensors[6].len(), 10);
+        assert!(p.tensors.iter().flatten().all(|v| (-1.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn params_deterministic() {
+        assert_eq!(
+            TinycnnParams::generate(5).tensors,
+            TinycnnParams::generate(5).tensors
+        );
+    }
+
+    #[test]
+    fn synthetic_image_shape_and_density() {
+        let img = synthetic_image(3);
+        assert_eq!(img.len(), 3072);
+        assert!(zero_fraction(&img) < 0.01);
+    }
+
+    // Live server tests (need artifacts) are in
+    // rust/tests/integration_coordinator.rs.
+}

@@ -1,0 +1,71 @@
+//! Lightweight runtime metrics for the inference server.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Thread-safe counters + latency aggregation.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    /// Total latency in nanoseconds (for mean computation).
+    latency_ns: AtomicU64,
+    /// Max observed latency in nanoseconds.
+    latency_max_ns: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record_request(&self, latency: Duration, ok: bool) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let ns = latency.as_nanos() as u64;
+        self.latency_ns.fetch_add(ns, Ordering::Relaxed);
+        self.latency_max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_latency(&self) -> Duration {
+        let n = self.requests();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.latency_ns.load(Ordering::Relaxed) / n)
+    }
+
+    pub fn max_latency(&self) -> Duration {
+        Duration::from_nanos(self.latency_max_ns.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let m = Metrics::default();
+        m.record_request(Duration::from_millis(10), true);
+        m.record_request(Duration::from_millis(30), true);
+        m.record_request(Duration::from_millis(20), false);
+        assert_eq!(m.requests(), 3);
+        assert_eq!(m.errors(), 1);
+        assert_eq!(m.mean_latency(), Duration::from_millis(20));
+        assert_eq!(m.max_latency(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = Metrics::default();
+        assert_eq!(m.mean_latency(), Duration::ZERO);
+        assert_eq!(m.requests(), 0);
+    }
+}

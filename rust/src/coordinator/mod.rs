@@ -1,0 +1,22 @@
+//! L3 coordinator: the analysis pipeline and the e2e inference server.
+//!
+//! Two orchestrations live here:
+//!
+//! * [`analysis`] + [`pipeline`] — the paper's evaluation: per-layer SA
+//!   power analysis of whole CNNs, fanned out over a worker pool
+//!   (std::thread + channels; tokio is not available in this offline
+//!   environment — see DESIGN.md) with deterministic per-layer seeding.
+//! * [`inference`] — the e2e demo: a dedicated PJRT inference thread
+//!   serving TinyConvNet forward passes from the AOT artifacts, with the
+//!   SA power model analyzing the *actual* activations produced by each
+//!   request (emergent zero fractions, not synthetic ones).
+
+mod analysis;
+mod inference;
+mod metrics;
+mod pipeline;
+
+pub use analysis::*;
+pub use inference::*;
+pub use metrics::*;
+pub use pipeline::*;

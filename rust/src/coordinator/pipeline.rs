@@ -1,0 +1,172 @@
+//! Network sweep pipeline: fan per-layer analyses out over a worker
+//! pool, merge into a `SweepReport` (the data behind Figs. 4–5 and the
+//! headline numbers).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::coding::SaCodingConfig;
+use crate::workload::Network;
+
+use super::{analyze_layer, AnalysisOptions, LayerReport};
+
+/// Whole-network sweep result.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub network: String,
+    pub layers: Vec<LayerReport>,
+}
+
+impl SweepReport {
+    /// Total energy of one configuration over all layers (femtojoules).
+    pub fn total_energy(&self, config_name: &str) -> f64 {
+        self.layers
+            .iter()
+            .filter_map(|l| l.energy_of(config_name))
+            .map(|e| e.total())
+            .sum()
+    }
+
+    /// Overall percent savings of `b` vs `a` (the paper's 9.4 % / 6.2 %).
+    pub fn overall_savings_pct(&self, a: &str, b: &str) -> f64 {
+        let ea = self.total_energy(a);
+        let eb = self.total_energy(b);
+        if ea == 0.0 {
+            return 0.0;
+        }
+        100.0 * (ea - eb) / ea
+    }
+
+    /// Streaming switching-activity reduction of `b` vs `a`, in percent
+    /// (the paper's "29 % average" claim). Computed over the sampled
+    /// tiles' exact toggle counts.
+    pub fn streaming_activity_reduction_pct(&self, a: &str, b: &str) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        let mut ta = 0u64;
+        let mut tb = 0u64;
+        for l in &self.layers {
+            for r in &l.results {
+                if r.config_name == a {
+                    ta += r.counts.streaming_toggles();
+                } else if r.config_name == b {
+                    tb += r.counts.streaming_toggles();
+                }
+            }
+        }
+        if ta == 0 {
+            return 0.0;
+        }
+        100.0 * (ta - tb) as f64 / ta as f64
+    }
+
+    /// (min, max) per-layer percent savings (the paper's 1–19 % range).
+    pub fn per_layer_savings_range(&self, a: &str, b: &str) -> (f64, f64) {
+        let mut lo = f64::MAX;
+        let mut hi = f64::MIN;
+        for l in &self.layers {
+            if let Some(s) = l.savings_pct(a, b) {
+                lo = lo.min(s);
+                hi = hi.max(s);
+            }
+        }
+        if lo > hi {
+            (0.0, 0.0)
+        } else {
+            (lo, hi)
+        }
+    }
+}
+
+/// Analyze every layer of a network, `threads`-wide. Results are
+/// deterministic and ordered regardless of thread count.
+pub fn sweep_network(
+    net: &Network,
+    configs: &[(String, SaCodingConfig)],
+    opts: &AnalysisOptions,
+    threads: usize,
+) -> SweepReport {
+    let threads = threads.max(1).min(net.layers.len().max(1));
+    let work = Arc::new(Mutex::new(
+        (0..net.layers.len()).collect::<Vec<usize>>(),
+    ));
+    let (tx, rx) = mpsc::channel::<LayerReport>();
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let work = Arc::clone(&work);
+            let tx = tx.clone();
+            let layers = &net.layers;
+            s.spawn(move || loop {
+                let idx = {
+                    let mut q = work.lock().unwrap();
+                    match q.pop() {
+                        Some(i) => i,
+                        None => break,
+                    }
+                };
+                let report = analyze_layer(&layers[idx], idx, configs, opts);
+                if tx.send(report).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+    });
+
+    let mut layers: Vec<LayerReport> = rx.into_iter().collect();
+    layers.sort_by_key(|l| l.layer_index);
+    SweepReport { network: net.name.clone(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::paper_configs;
+    use crate::workload::tinycnn;
+
+    fn opts() -> AnalysisOptions {
+        AnalysisOptions { max_tiles_per_layer: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn sweep_covers_all_layers_in_order() {
+        let net = tinycnn();
+        let r = sweep_network(&net, &paper_configs(), &opts(), 3);
+        assert_eq!(r.layers.len(), net.layers.len());
+        for (i, l) in r.layers.iter().enumerate() {
+            assert_eq!(l.layer_index, i);
+            assert_eq!(l.layer_name, net.layers[i].name);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let net = tinycnn();
+        let r1 = sweep_network(&net, &paper_configs(), &opts(), 1);
+        let r4 = sweep_network(&net, &paper_configs(), &opts(), 4);
+        assert_eq!(
+            r1.total_energy("proposed"),
+            r4.total_energy("proposed")
+        );
+        assert_eq!(
+            r1.total_energy("baseline"),
+            r4.total_energy("baseline")
+        );
+    }
+
+    #[test]
+    fn aggregate_metrics_sane() {
+        let net = tinycnn();
+        let r = sweep_network(&net, &paper_configs(), &opts(), 2);
+        let overall = r.overall_savings_pct("baseline", "proposed");
+        assert!(overall > 0.0, "expected savings, got {overall}");
+        let act = r.streaming_activity_reduction_pct("baseline", "proposed");
+        assert!(act > 0.0, "activity reduction {act}");
+        // a config compared to itself reduces nothing
+        assert_eq!(r.streaming_activity_reduction_pct("baseline", "baseline"), 0.0);
+        let (lo, hi) = r.per_layer_savings_range("baseline", "proposed");
+        assert!(lo <= hi);
+    }
+}

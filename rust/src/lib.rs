@@ -1,0 +1,39 @@
+//! # sa-lowpower
+//!
+//! Reproduction of *"Low-Power Data Streaming in Systolic Arrays with
+//! Bus-Invert Coding and Zero-Value Clock Gating"* (MOCAST 2023).
+//!
+//! The crate models an output-stationary bf16 systolic array at the bit
+//! level, applies the paper's selective bus-invert coding (weights,
+//! mantissa-only) and zero-value clock gating (inputs), and regenerates
+//! every figure of the paper's evaluation from exact switching-activity
+//! accounting. Functional compute for the end-to-end examples runs through
+//! AOT-compiled XLA artifacts (JAX + Pallas at build time, PJRT at run
+//! time) — python is never on the runtime path.
+//!
+//! Module map (see DESIGN.md §4 for the full inventory):
+//! * [`bf16`] — bit-exact bfloat16 arithmetic.
+//! * [`activity`] — Hamming/toggle accounting, the event ledger.
+//! * [`coding`] — BIC variants + zero-value clock gating.
+//! * [`power`] — energy + area models (45 nm-calibrated).
+//! * [`sa`] — the systolic array: cycle-accurate sim + analytic model.
+//! * [`workload`] — CNN layer tables (ResNet50, MobileNet), generators,
+//!   im2col lowering, GEMM tiling.
+//! * [`stats`] — value-distribution statistics (paper Fig. 2).
+//! * [`runtime`] — PJRT client wrapper, AOT artifact loading.
+//! * [`coordinator`] — the L3 pipeline: tile scheduling, worker pool,
+//!   report aggregation.
+//! * [`report`] — table / CSV emitters for the paper's figures.
+//! * [`util`] — in-tree RNG, CLI, bench and property-test harnesses.
+
+pub mod activity;
+pub mod bf16;
+pub mod coding;
+pub mod coordinator;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod sa;
+pub mod stats;
+pub mod util;
+pub mod workload;

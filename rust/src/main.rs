@@ -1,0 +1,541 @@
+//! `sa-lowpower` CLI — the L3 entry point.
+//!
+//! Subcommands regenerate the paper's figures and run the system:
+//!
+//! ```text
+//! sa-lowpower fig2      [--net resnet50|mobilenet] [--seed N] [--csv-dir D]
+//! sa-lowpower fig4      [--tiles N] [--threads N] [--seed N] [--csv-dir D]
+//! sa-lowpower fig5      [--tiles N] [--threads N] [--seed N] [--csv-dir D]
+//! sa-lowpower headline  [--tiles N] [--threads N] [--seed N]
+//! sa-lowpower ablation  [--net X] [--tiles N] [--threads N] [--seed N]
+//! sa-lowpower area      [--rows N] [--cols N]
+//! sa-lowpower simulate  [--m N] [--k N] [--n N] [--sparsity F] [--config C]
+//! sa-lowpower e2e       [--requests N] [--artifacts DIR] [--seed N]
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use sa_lowpower::coding::SaCodingConfig;
+use sa_lowpower::coordinator::{
+    ablation_configs, analyze_layer_with_data, paper_configs, sweep_network,
+    synthetic_image, AnalysisOptions, InferenceServer, TinycnnParams,
+};
+use sa_lowpower::power::AreaModel;
+use sa_lowpower::report::{ablation_table, fig2_tables, fig45_table, headline_table, Table};
+use sa_lowpower::sa::{analyze_tile, simulate_tile, SaConfig, Tile};
+use sa_lowpower::stats::WeightFieldStats;
+use sa_lowpower::util::cli::Args;
+use sa_lowpower::util::Rng64;
+use sa_lowpower::workload::{gen_weights, Network};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("fig2") => fig2(args),
+        Some("fig4") => fig45(args, "resnet50"),
+        Some("fig5") => fig45(args, "mobilenet"),
+        Some("headline") => headline(args),
+        Some("ablation") => ablation(args),
+        Some("area") => area(args),
+        Some("simulate") => simulate(args),
+        Some("e2e") => e2e(args),
+        Some("trace") => trace(args),
+        Some("ddcg") => ddcg(args),
+        Some("pruning") => pruning(args),
+        Some("sweep-size") => sweep_size(args),
+        Some(other) => bail!("unknown subcommand '{other}'\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage: sa-lowpower <subcommand> [options]
+  fig2 | fig4 | fig5 | headline | ablation | area   paper figures/claims
+  simulate | e2e | trace                            drivers
+  ddcg | pruning | sweep-size                       extension experiments
+Reproduction of 'Low-Power Data Streaming in Systolic Arrays with Bus-Invert
+Coding and Zero-Value Clock Gating' (MOCAST 2023). See README.md.";
+
+fn opts_from(args: &Args) -> Result<AnalysisOptions> {
+    Ok(AnalysisOptions {
+        seed: args.get_parse("seed", 0xCAFEu64).map_err(|e| anyhow!(e))?,
+        max_tiles_per_layer: args.get_parse("tiles", 64usize).map_err(|e| anyhow!(e))?,
+        max_dw_channels: args.get_parse("dw-channels", 4usize).map_err(|e| anyhow!(e))?,
+        sa: SaConfig::default(),
+    })
+}
+
+fn threads_from(args: &Args) -> Result<usize> {
+    let dflt = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    args.get_parse("threads", dflt).map_err(|e| anyhow!(e))
+}
+
+fn maybe_csv(args: &Args, name: &str, t: &Table) -> Result<()> {
+    if let Some(dir) = args.get("csv-dir") {
+        let path = std::path::Path::new(dir).join(format!("{name}.csv"));
+        t.write_csv(&path)?;
+        println!("(wrote {})", path.display());
+    }
+    Ok(())
+}
+
+fn network_weights(net: &Network, seed: u64) -> Vec<f32> {
+    let mut all = Vec::new();
+    for (i, l) in net.layers.iter().enumerate() {
+        all.extend(gen_weights(l, seed, i));
+    }
+    all
+}
+
+fn fig2(args: &Args) -> Result<()> {
+    args.validate(&["net", "seed", "csv-dir"]).map_err(|e| anyhow!(e))?;
+    let seed = args.get_parse("seed", 0xCAFEu64).map_err(|e| anyhow!(e))?;
+    let nets = match args.get("net") {
+        Some(n) => vec![n.to_string()],
+        None => vec!["resnet50".into(), "mobilenet".into()],
+    };
+    for name in nets {
+        let net = Network::by_name(&name)
+            .ok_or_else(|| anyhow!("unknown network '{name}'"))?;
+        let w = network_weights(&net, seed);
+        let stats = WeightFieldStats::from_f32(&w);
+        let (summary, exp, man) = fig2_tables(&name, &stats);
+        println!("== Fig. 2 — weight value distributions: {name} ==");
+        summary.print();
+        println!();
+        maybe_csv(args, &format!("fig2_{name}_summary"), &summary)?;
+        maybe_csv(args, &format!("fig2_{name}_exponent_hist"), &exp)?;
+        maybe_csv(args, &format!("fig2_{name}_mantissa_hist"), &man)?;
+    }
+    Ok(())
+}
+
+fn fig45(args: &Args, net_name: &str) -> Result<()> {
+    args.validate(&["tiles", "threads", "seed", "csv-dir", "dw-channels"])
+        .map_err(|e| anyhow!(e))?;
+    let opts = opts_from(args)?;
+    let net = Network::by_name(net_name).unwrap();
+    let figno = if net_name == "resnet50" { 4 } else { 5 };
+    println!(
+        "== Fig. {figno} — per-layer power, conventional vs proposed: {net_name} =="
+    );
+    let sweep = sweep_network(&net, &paper_configs(), &opts, threads_from(args)?);
+    let t = fig45_table(&sweep, &opts.sa);
+    t.print();
+    println!();
+    println!(
+        "overall dynamic power reduction: {:.1} %  (paper: {})",
+        sweep.overall_savings_pct("baseline", "proposed"),
+        if figno == 4 { "9.4 %" } else { "6.2 %" }
+    );
+    println!(
+        "streaming activity reduction:    {:.1} %  (paper avg: ~29 %)",
+        sweep.streaming_activity_reduction_pct("baseline", "proposed")
+    );
+    let (lo, hi) = sweep.per_layer_savings_range("baseline", "proposed");
+    println!("per-layer savings range:         {lo:.1} % – {hi:.1} %  (paper: 1–19 %)");
+    maybe_csv(args, &format!("fig{figno}_{net_name}"), &t)?;
+    Ok(())
+}
+
+fn headline(args: &Args) -> Result<()> {
+    args.validate(&["tiles", "threads", "seed", "csv-dir", "dw-channels"])
+        .map_err(|e| anyhow!(e))?;
+    let opts = opts_from(args)?;
+    let threads = threads_from(args)?;
+    let resnet = sweep_network(
+        &Network::by_name("resnet50").unwrap(),
+        &paper_configs(),
+        &opts,
+        threads,
+    );
+    let mobilenet = sweep_network(
+        &Network::by_name("mobilenet").unwrap(),
+        &paper_configs(),
+        &opts,
+        threads,
+    );
+    println!("== Headline claims (paper §I / §IV) ==");
+    let t = headline_table(&resnet, &mobilenet, &opts.sa);
+    t.print();
+    maybe_csv(args, "headline", &t)?;
+    Ok(())
+}
+
+fn ablation(args: &Args) -> Result<()> {
+    args.validate(&["net", "tiles", "threads", "seed", "csv-dir", "dw-channels"])
+        .map_err(|e| anyhow!(e))?;
+    let opts = opts_from(args)?;
+    let name = args.get_or("net", "resnet50");
+    let net = Network::by_name(name).ok_or_else(|| anyhow!("unknown network '{name}'"))?;
+    let configs = ablation_configs();
+    println!("== Ablation — coding design space on {name} ==");
+    let sweep = sweep_network(&net, &configs, &opts, threads_from(args)?);
+    let names: Vec<String> = configs.iter().map(|(n, _)| n.clone()).collect();
+    let t = ablation_table(&sweep, &names);
+    t.print();
+    maybe_csv(args, &format!("ablation_{name}"), &t)?;
+    Ok(())
+}
+
+fn area(args: &Args) -> Result<()> {
+    args.validate(&["rows", "cols"]).map_err(|e| anyhow!(e))?;
+    let rows = args.get_parse("rows", 16usize).map_err(|e| anyhow!(e))?;
+    let cols = args.get_parse("cols", 16usize).map_err(|e| anyhow!(e))?;
+    let model = AreaModel::default();
+    println!("== Area overhead (paper §IV: 5.7 % at 16x16, shrinking with size) ==");
+    let mut t = Table::new(["array", "baseline_GE", "overhead_GE", "overhead_%"]);
+    for n in [4usize, 8, 16, 32, 64, 128] {
+        let a = model.area(n, n, &SaCodingConfig::proposed());
+        t.row([
+            format!("{n}x{n}"),
+            format!("{:.0}", a.baseline_ge),
+            format!("{:.0}", a.overhead_ge),
+            format!("{:.2}", a.overhead_pct()),
+        ]);
+    }
+    let custom = model.area(rows, cols, &SaCodingConfig::proposed());
+    t.row([
+        format!("{rows}x{cols} (requested)"),
+        format!("{:.0}", custom.baseline_ge),
+        format!("{:.0}", custom.overhead_ge),
+        format!("{:.2}", custom.overhead_pct()),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    args.validate(&["m", "k", "n", "sparsity", "config", "seed"])
+        .map_err(|e| anyhow!(e))?;
+    let m = args.get_parse("m", 16usize).map_err(|e| anyhow!(e))?;
+    let k = args.get_parse("k", 64usize).map_err(|e| anyhow!(e))?;
+    let n = args.get_parse("n", 16usize).map_err(|e| anyhow!(e))?;
+    let sp = args.get_parse("sparsity", 0.5f64).map_err(|e| anyhow!(e))?;
+    let seed = args.get_parse("seed", 1u64).map_err(|e| anyhow!(e))?;
+    let cfg_name = args.get_or("config", "proposed");
+    let cfg = SaCodingConfig::by_name(cfg_name)
+        .ok_or_else(|| anyhow!("unknown config '{cfg_name}'"))?;
+
+    let mut rng = Rng64::new(seed);
+    let a: Vec<f32> = (0..m * k)
+        .map(|_| if rng.chance(sp) { 0.0 } else { rng.normal() as f32 })
+        .collect();
+    let b: Vec<f32> = (0..k * n).map(|_| (rng.normal() * 0.08) as f32).collect();
+    let tile = Tile::from_f32(&a, &b, m, k, n);
+
+    println!("== simulate: {m}x{k}x{n} tile, sparsity {sp}, config {cfg_name} ==");
+    let t0 = std::time::Instant::now();
+    let golden = simulate_tile(&tile, &cfg);
+    let t_cycle = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let fast = analyze_tile(&tile, &cfg);
+    let t_fast = t1.elapsed();
+    assert_eq!(golden.counts, fast, "analytic model must equal cycle sim");
+    println!("cycle-accurate sim: {t_cycle:?}; analytic model: {t_fast:?} (identical counts)");
+    println!("{fast:#?}");
+    let sa = SaConfig::default().with_coding(cfg);
+    let e = sa.energy.energy(&fast);
+    println!(
+        "energy: total {:.3} nJ  (streaming {:.3} nJ, compute {:.3} nJ)",
+        e.total() * 1e-6,
+        e.streaming() * 1e-6,
+        e.compute() * 1e-6
+    );
+    println!("power @1GHz: {:.3} mW", sa.energy.power_mw(&fast, sa.clock_ghz));
+    Ok(())
+}
+
+/// Debug driver: render a lane waveform (what the edge logic drives onto
+/// one stream's bus, slot by slot).
+fn trace(args: &Args) -> Result<()> {
+    args.validate(&["k", "sparsity", "seed", "side"]).map_err(|e| anyhow!(e))?;
+    let k = args.get_parse("k", 24usize).map_err(|e| anyhow!(e))?;
+    let sp = args.get_parse("sparsity", 0.4f64).map_err(|e| anyhow!(e))?;
+    let seed = args.get_parse("seed", 1u64).map_err(|e| anyhow!(e))?;
+    let side = args.get_or("side", "west");
+    use sa_lowpower::bf16::Bf16;
+    use sa_lowpower::coding::{BicMode, BicPolicy};
+    use sa_lowpower::sa::{render_trace, trace_lane};
+
+    let mut rng = Rng64::new(seed);
+    let (stream, zvcg, bic): (Vec<Bf16>, bool, BicMode) = match side {
+        "west" => (
+            (0..k)
+                .map(|_| {
+                    if rng.chance(sp) {
+                        Bf16::ZERO
+                    } else {
+                        Bf16::from_f32(rng.normal().abs() as f32 * 0.5)
+                    }
+                })
+                .collect(),
+            true,
+            BicMode::None,
+        ),
+        "north" => (
+            (0..k)
+                .map(|_| Bf16::from_f32((rng.normal() * 0.08).clamp(-1.0, 1.0) as f32))
+                .collect(),
+            false,
+            BicMode::MantissaOnly,
+        ),
+        other => bail!("--side must be west|north, got '{other}'"),
+    };
+    println!(
+        "== {side} lane trace: {} (K={k}) ==",
+        if side == "west" { "ZVCG on ReLU inputs" } else { "mantissa BIC on weights" }
+    );
+    let rows = trace_lane(&stream, zvcg, bic, BicPolicy::Classic);
+    print!("{}", render_trace(&rows));
+    Ok(())
+}
+
+/// Extension: quantify the paper's §III-A(a) dismissal of data-driven
+/// clock gating on real CNN streams.
+fn ddcg(args: &Args) -> Result<()> {
+    args.validate(&["seed", "len"]).map_err(|e| anyhow!(e))?;
+    let seed = args.get_parse("seed", 0xCAFEu64).map_err(|e| anyhow!(e))?;
+    let len = args.get_parse("len", 16384usize).map_err(|e| anyhow!(e))?;
+    use sa_lowpower::bf16::Bf16;
+    use sa_lowpower::coding::ddcg_analyze;
+
+    println!("== DDCG (paper §III-A(a)): why data-driven clock gating fails on CNN streams ==");
+    let mut rng = Rng64::new(seed);
+    // CNN-like weight stream and ReLU-like input stream
+    let weights: Vec<Bf16> = (0..len)
+        .map(|_| Bf16::from_f32((rng.normal() * 0.08).clamp(-1.0, 1.0) as f32))
+        .collect();
+    let inputs: Vec<Bf16> = (0..len)
+        .map(|_| {
+            if rng.chance(0.5) {
+                Bf16::ZERO
+            } else {
+                Bf16::from_f32(rng.normal().abs() as f32 * 0.5)
+            }
+        })
+        .collect();
+
+    // comparator ~0.6 fJ/bit/cycle (XOR + OR-tree share), ICG 0.5 fJ
+    let (e_ff_clk, e_cmp, e_cg) = (0.9, 0.6, 0.5);
+    for (name, stream) in [("weights", &weights), ("relu-inputs", &inputs)] {
+        let mut t = Table::new([
+            "group_bits",
+            "clock_gated_%",
+            "net_saving_fJ_per_value",
+        ]);
+        for g in [16usize, 8, 4, 2, 1] {
+            let r = ddcg_analyze(stream, g);
+            t.row([
+                g.to_string(),
+                format!("{:.1}", 100.0 * r.gating_effectiveness()),
+                format!(
+                    "{:+.2}",
+                    r.net_saving_fj(e_ff_clk, e_cmp, e_cg) / len as f64
+                ),
+            ]);
+        }
+        println!("\n{name} stream ({len} values):");
+        t.print();
+    }
+    println!(
+        "\ncoarse groups never gate (values always change); fine groups gate\n\
+         but the per-bit comparators cost more than the gated clocks save —\n\
+         the paper's rationale for BIC + zero-value gating instead."
+    );
+    Ok(())
+}
+
+/// Extension: the paper's future-work lever — weight pruning increases
+/// weight zeros, which weight-side ZVCG can then exploit.
+fn pruning(args: &Args) -> Result<()> {
+    args.validate(&["seed", "tiles", "net"]).map_err(|e| anyhow!(e))?;
+    let opts = AnalysisOptions {
+        seed: args.get_parse("seed", 0xCAFEu64).map_err(|e| anyhow!(e))?,
+        max_tiles_per_layer: args.get_parse("tiles", 16usize).map_err(|e| anyhow!(e))?,
+        ..Default::default()
+    };
+    let name = args.get_or("net", "resnet50");
+    let net = Network::by_name(name).ok_or_else(|| anyhow!("unknown network '{name}'"))?;
+    use sa_lowpower::coordinator::analyze_layer_with_data;
+    use sa_lowpower::workload::{gen_feature_map, prune_weights, LayerKind};
+
+    // representative conv layers (skip stem, dw, fc)
+    let picks: Vec<usize> = net
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(i, l)| *i > 0 && l.kind == LayerKind::Conv)
+        .map(|(i, _)| i)
+        .step_by(7)
+        .collect();
+
+    let mut configs = paper_configs();
+    configs.push((
+        "proposed+w-zvcg".into(),
+        SaCodingConfig { weight_zvcg: true, ..SaCodingConfig::proposed() },
+    ));
+
+    println!("== Pruning extension (paper §III-B future work) on {name} ==");
+    let mut t = Table::new([
+        "prune_%",
+        "weight_zeros_%",
+        "proposed_savings_%",
+        "proposed+w-zvcg_savings_%",
+    ]);
+    for prune in [0.0f64, 0.2, 0.4, 0.6, 0.8] {
+        let (mut base, mut prop, mut propw) = (0.0, 0.0, 0.0);
+        let mut wz = 0.0;
+        for &i in &picks {
+            let layer = &net.layers[i];
+            let fm = gen_feature_map(layer, opts.seed, i);
+            let mut w = gen_weights(layer, opts.seed, i);
+            prune_weights(&mut w, prune);
+            wz += w.iter().filter(|&&v| v == 0.0).count() as f64 / w.len() as f64;
+            let rep = analyze_layer_with_data(layer, i, fm, w, &configs, &opts);
+            base += rep.energy_of("baseline").unwrap().total();
+            prop += rep.energy_of("proposed").unwrap().total();
+            propw += rep.energy_of("proposed+w-zvcg").unwrap().total();
+        }
+        t.row([
+            format!("{:.0}", prune * 100.0),
+            format!("{:.1}", 100.0 * wz / picks.len() as f64),
+            format!("{:.2}", 100.0 * (base - prop) / base),
+            format!("{:.2}", 100.0 * (base - propw) / base),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nweight-side ZVCG is dead weight at 0 % pruning but compounds with\n\
+         the proposed design as pruning raises weight sparsity."
+    );
+    Ok(())
+}
+
+/// Extension: savings and area overhead vs. SA size (the paper's scaling
+/// argument, §IV).
+fn sweep_size(args: &Args) -> Result<()> {
+    args.validate(&["seed", "tiles"]).map_err(|e| anyhow!(e))?;
+    let seed = args.get_parse("seed", 0xCAFEu64).map_err(|e| anyhow!(e))?;
+    let tiles = args.get_parse("tiles", 8usize).map_err(|e| anyhow!(e))?;
+    let net = Network::by_name("resnet50").unwrap();
+    // a spread of layers across the network
+    let picks: Vec<usize> = (1..net.layers.len() - 1).step_by(9).collect();
+
+    println!("== SA size sweep: savings & overhead vs array dimension ==");
+    let mut t = Table::new([
+        "array",
+        "power_savings_%",
+        "area_overhead_%",
+    ]);
+    for dim in [4usize, 8, 16, 32, 64] {
+        let opts = AnalysisOptions {
+            seed,
+            max_tiles_per_layer: tiles,
+            sa: SaConfig { rows: dim, cols: dim, ..SaConfig::default() },
+            ..Default::default()
+        };
+        let (mut base, mut prop) = (0.0, 0.0);
+        for &i in &picks {
+            let rep = sa_lowpower::coordinator::analyze_layer(
+                &net.layers[i],
+                i,
+                &paper_configs(),
+                &opts,
+            );
+            base += rep.energy_of("baseline").unwrap().total();
+            prop += rep.energy_of("proposed").unwrap().total();
+        }
+        let area = AreaModel::default()
+            .area(dim, dim, &SaCodingConfig::proposed())
+            .overhead_pct();
+        t.row([
+            format!("{dim}x{dim}"),
+            format!("{:.2}", 100.0 * (base - prop) / base),
+            format!("{area:.2}"),
+        ]);
+    }
+    t.print();
+    println!("\nsavings hold across sizes while the overhead shrinks (paper §IV).");
+    Ok(())
+}
+
+fn e2e(args: &Args) -> Result<()> {
+    args.validate(&["requests", "artifacts", "seed", "tiles"])
+        .map_err(|e| anyhow!(e))?;
+    let n_req = args.get_parse("requests", 4usize).map_err(|e| anyhow!(e))?;
+    let seed = args.get_parse("seed", 7u64).map_err(|e| anyhow!(e))?;
+    let dir = args.get_or("artifacts", "artifacts");
+    let opts = AnalysisOptions {
+        seed,
+        max_tiles_per_layer: args.get_parse("tiles", 16usize).map_err(|e| anyhow!(e))?,
+        ..Default::default()
+    };
+
+    println!("== e2e: XLA inference (AOT artifacts) + SA power analysis ==");
+    let params = TinycnnParams::generate(seed);
+    let server = InferenceServer::start(std::path::Path::new(dir), params.clone())?;
+    let net = server.network.clone();
+
+    let mut total_base = 0.0;
+    let mut total_prop = 0.0;
+    for r in 0..n_req {
+        let image = synthetic_image(seed ^ r as u64);
+        let resp = server.infer(image.clone())?;
+        print!(
+            "req {r}: latency {:?}, logits[0..3] = {:?}, zeros/layer = [",
+            resp.latency,
+            &resp.logits[..3.min(resp.logits.len())]
+        );
+        for z in &resp.zero_fractions {
+            print!("{:.0}% ", z * 100.0);
+        }
+        println!("]");
+        // SA power on the *real* activations of this request.
+        let mut fm = image;
+        for (i, layer) in net.layers.iter().enumerate() {
+            if i >= resp.activations.len() {
+                break; // fc head: skip in per-request power detail
+            }
+            let rep = analyze_layer_with_data(
+                layer,
+                i,
+                fm.clone(),
+                params.gemm_weights(i).to_vec(),
+                &paper_configs(),
+                &opts,
+            );
+            total_base += rep.energy_of("baseline").unwrap().total();
+            total_prop += rep.energy_of("proposed").unwrap().total();
+            fm = resp.activations[i].clone();
+        }
+    }
+    println!(
+        "\nSA energy over {n_req} requests: baseline {:.3} nJ, proposed {:.3} nJ ({:.1} % saved)",
+        total_base * 1e-6,
+        total_prop * 1e-6,
+        100.0 * (total_base - total_prop) / total_base
+    );
+    println!(
+        "served {} requests, mean latency {:?}, max {:?}",
+        server.metrics.requests(),
+        server.metrics.mean_latency(),
+        server.metrics.max_latency()
+    );
+    Ok(())
+}

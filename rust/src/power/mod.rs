@@ -1,0 +1,15 @@
+//! Power and area modelling (the substitute for the paper's PowerPro /
+//! Oasys flow — see DESIGN.md §2).
+//!
+//! `EnergyModel` converts the exact `ActivityCounts` ledger into energy,
+//! component by component, using per-event constants calibrated to 45 nm
+//! standard-cell data. `AreaModel` reproduces the paper's 5.7 % overhead
+//! claim from NAND2-equivalent gate counts. The *relative* quantities the
+//! paper reports (percent savings, overhead ratios) are what these models
+//! are calibrated for; absolute numbers are model units.
+
+mod area;
+mod energy;
+
+pub use area::*;
+pub use energy::*;

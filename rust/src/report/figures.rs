@@ -1,0 +1,195 @@
+//! Figure-specific report builders: one function per paper figure/claim.
+
+use crate::coordinator::SweepReport;
+use crate::power::AreaModel;
+use crate::sa::SaConfig;
+use crate::stats::WeightFieldStats;
+
+use super::table::{f, fj_as_nj, Table};
+
+/// Paper Fig. 2: weight / exponent / mantissa distributions of a network.
+/// Returns (summary table, exponent histogram table, mantissa histogram
+/// table).
+pub fn fig2_tables(network: &str, stats: &WeightFieldStats) -> (Table, Table, Table) {
+    let mut summary = Table::new(["metric", "value"]);
+    summary.row(["network", network]);
+    summary.row(["weights analyzed", &stats.total.to_string()]);
+    summary.row(["zero weights", &stats.zeros.to_string()]);
+    summary.row([
+        "exponent concentration (top-8 codes)",
+        &f(stats.exponent_concentration(8), 4),
+    ]);
+    summary.row(["mantissa uniformity (entropy/7b)", &f(stats.mantissa_uniformity(), 4)]);
+    summary.row([
+        "E[Hamming] mantissa (7 lines)",
+        &f(stats.mantissa_expected_hamming(), 3),
+    ]);
+    summary.row([
+        "E[Hamming] exponent (8 lines)",
+        &f(stats.exponent_expected_hamming(), 3),
+    ]);
+
+    let mut exp = Table::new(["exponent_code", "count"]);
+    for (code, &c) in stats.exp_hist.iter().enumerate() {
+        if c > 0 {
+            exp.row([code.to_string(), c.to_string()]);
+        }
+    }
+    let mut man = Table::new(["mantissa_code", "count"]);
+    for (code, &c) in stats.man_hist.iter().enumerate() {
+        if c > 0 {
+            man.row([code.to_string(), c.to_string()]);
+        }
+    }
+    (summary, exp, man)
+}
+
+/// Paper Figs. 4/5: per-layer power (baseline vs proposed) + % zeros.
+pub fn fig45_table(sweep: &SweepReport, sa: &SaConfig) -> Table {
+    let mut t = Table::new([
+        "layer",
+        "gemm (MxKxN)",
+        "zeros_%",
+        "baseline_nJ",
+        "proposed_nJ",
+        "savings_%",
+        "streaming_base_nJ",
+        "streaming_prop_nJ",
+    ]);
+    let _ = sa;
+    for l in &sweep.layers {
+        let base = l.energy_of("baseline").expect("baseline config");
+        let prop = l.energy_of("proposed").expect("proposed config");
+        t.row([
+            l.layer_name.clone(),
+            format!("{}x{}x{}", l.gemm.m, l.gemm.k, l.gemm.n),
+            f(100.0 * l.input_zero_frac, 1),
+            fj_as_nj(base.total()),
+            fj_as_nj(prop.total()),
+            f(l.savings_pct("baseline", "proposed").unwrap_or(0.0), 2),
+            fj_as_nj(base.streaming()),
+            fj_as_nj(prop.streaming()),
+        ]);
+    }
+    t
+}
+
+/// The headline claims table (paper §I / §IV text).
+pub fn headline_table(
+    resnet: &SweepReport,
+    mobilenet: &SweepReport,
+    sa: &SaConfig,
+) -> Table {
+    let area = AreaModel::default();
+    let proposed = SaConfig::proposed();
+    let overhead = area
+        .area(sa.rows, sa.cols, &proposed.coding)
+        .overhead_pct();
+    let mut t = Table::new(["claim", "paper", "reproduced"]);
+    t.row([
+        "overall dynamic power reduction, ResNet50".to_string(),
+        "9.4 %".to_string(),
+        format!("{:.1} %", resnet.overall_savings_pct("baseline", "proposed")),
+    ]);
+    t.row([
+        "overall dynamic power reduction, MobileNet".to_string(),
+        "6.2 %".to_string(),
+        format!(
+            "{:.1} %",
+            mobilenet.overall_savings_pct("baseline", "proposed")
+        ),
+    ]);
+    let act = 0.5
+        * (resnet.streaming_activity_reduction_pct("baseline", "proposed")
+            + mobilenet.streaming_activity_reduction_pct("baseline", "proposed"));
+    t.row([
+        "streaming switching-activity reduction (avg)".to_string(),
+        "~29 %".to_string(),
+        format!("{act:.1} %"),
+    ]);
+    let (rlo, rhi) = resnet.per_layer_savings_range("baseline", "proposed");
+    let (mlo, mhi) = mobilenet.per_layer_savings_range("baseline", "proposed");
+    t.row([
+        "per-layer power savings range".to_string(),
+        "1 % - 19 %".to_string(),
+        format!("{:.1} % - {:.1} %", rlo.min(mlo), rhi.max(mhi)),
+    ]);
+    t.row([
+        "area overhead (16x16)".to_string(),
+        "5.7 %".to_string(),
+        format!("{overhead:.1} %"),
+    ]);
+    t
+}
+
+/// Ablation table: energy per coding configuration, relative to baseline.
+pub fn ablation_table(sweep: &SweepReport, configs: &[String]) -> Table {
+    let mut t = Table::new([
+        "config",
+        "total_nJ",
+        "vs_baseline_%",
+        "streaming_nJ",
+        "streaming_activity_reduction_%",
+    ]);
+    let base_total = sweep.total_energy("baseline");
+    for name in configs {
+        let total = sweep.total_energy(name);
+        let streaming: f64 = sweep
+            .layers
+            .iter()
+            .filter_map(|l| l.energy_of(name))
+            .map(|e| e.streaming())
+            .sum();
+        t.row([
+            name.clone(),
+            fj_as_nj(total),
+            f(100.0 * (base_total - total) / base_total, 2),
+            fj_as_nj(streaming),
+            f(
+                sweep.streaming_activity_reduction_pct("baseline", name),
+                2,
+            ),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{paper_configs, sweep_network, AnalysisOptions};
+    use crate::util::Rng64;
+    use crate::workload::tinycnn;
+
+    fn tiny_sweep() -> SweepReport {
+        let opts = AnalysisOptions { max_tiles_per_layer: 2, ..Default::default() };
+        sweep_network(&tinycnn(), &paper_configs(), &opts, 2)
+    }
+
+    #[test]
+    fn fig2_tables_build() {
+        let mut r = Rng64::new(1);
+        let w: Vec<f32> = (0..4096).map(|_| (r.normal() * 0.05) as f32).collect();
+        let stats = WeightFieldStats::from_f32(&w);
+        let (s, e, m) = fig2_tables("test", &stats);
+        assert!(s.render().contains("exponent concentration"));
+        assert!(!e.rows.is_empty());
+        assert!(!m.rows.is_empty());
+    }
+
+    #[test]
+    fn fig45_table_builds() {
+        let sweep = tiny_sweep();
+        let t = fig45_table(&sweep, &SaConfig::default());
+        assert_eq!(t.rows.len(), sweep.layers.len());
+        assert!(t.render().contains("conv1"));
+    }
+
+    #[test]
+    fn headline_table_builds() {
+        let sweep = tiny_sweep();
+        let t = headline_table(&sweep, &sweep, &SaConfig::default());
+        assert_eq!(t.rows.len(), 5);
+        assert!(t.render().contains("5.7"));
+    }
+}

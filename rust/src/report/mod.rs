@@ -1,0 +1,9 @@
+//! Report emitters: aligned console tables + CSV files for every figure
+//! the paper reports. Each bench/example prints the same rows/series as
+//! the corresponding paper figure.
+
+mod figures;
+mod table;
+
+pub use figures::*;
+pub use table::*;

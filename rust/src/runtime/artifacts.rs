@@ -1,0 +1,195 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! Plain-text format, one artifact per line:
+//! `name=<id> file=<path> inputs=<spec>;<spec>... outputs=<spec>;...`
+//! where `<spec>` is `dtype[d0,d1,...]` (e.g. `float32[1,32,32,3]`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element type of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" | "float32" => Ok(DType::F32),
+            "i32" | "int32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype '{s}'"),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    /// Parse `float32[1,32,32,3]` / `int32[]`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dt, rest) = s
+            .split_once('[')
+            .ok_or_else(|| anyhow!("bad tensor spec '{s}'"))?;
+        let dims_str = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("bad tensor spec '{s}'"))?;
+        let dims = if dims_str.is_empty() {
+            vec![]
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| d.parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { dtype: DType::parse(dt)?, dims })
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    by_name: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`; file paths are resolved against `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut by_name = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut fields: BTreeMap<&str, &str> = BTreeMap::new();
+            for kv in line.split_whitespace() {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("line {}: bad field '{kv}'", lineno + 1))?;
+                fields.insert(k, v);
+            }
+            let get = |k: &str| {
+                fields
+                    .get(k)
+                    .copied()
+                    .ok_or_else(|| anyhow!("line {}: missing '{k}'", lineno + 1))
+            };
+            let parse_specs = |s: &str| -> Result<Vec<TensorSpec>> {
+                if s.is_empty() {
+                    return Ok(vec![]);
+                }
+                s.split(';').map(TensorSpec::parse).collect()
+            };
+            let spec = ArtifactSpec {
+                name: get("name")?.to_string(),
+                file: dir.join(get("file")?),
+                inputs: parse_specs(get("inputs")?)?,
+                outputs: parse_specs(get("outputs")?)?,
+            };
+            if by_name.insert(spec.name.clone(), spec).is_some() {
+                bail!("duplicate artifact at line {}", lineno + 1);
+            }
+        }
+        Ok(Manifest { by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parse() {
+        let t = TensorSpec::parse("float32[1,32,32,3]").unwrap();
+        assert_eq!(t.dtype, DType::F32);
+        assert_eq!(t.dims, vec![1, 32, 32, 3]);
+        assert_eq!(t.elements(), 3072);
+        let s = TensorSpec::parse("int32[]").unwrap();
+        assert_eq!(s.dtype, DType::I32);
+        assert!(s.dims.is_empty());
+        assert_eq!(s.elements(), 1);
+        assert!(TensorSpec::parse("float32").is_err());
+        assert!(TensorSpec::parse("f64[2]").is_err());
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let text = "name=gemm file=gemm.hlo.txt inputs=float32[2,2];float32[2,2] outputs=float32[2,2]\n\
+                    name=stats file=s.hlo.txt inputs=float32[16] outputs=int32[256];int32[]\n";
+        let m = Manifest::parse(text, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.len(), 2);
+        let g = m.get("gemm").unwrap();
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.file, PathBuf::from("/tmp/a/gemm.hlo.txt"));
+        let s = m.get("stats").unwrap();
+        assert_eq!(s.outputs[1].dims.len(), 0);
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let text = "name=x file=a inputs=float32[1] outputs=float32[1]\n\
+                    name=x file=b inputs=float32[1] outputs=float32[1]\n";
+        assert!(Manifest::parse(text, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Validates the actual artifacts/ directory when present.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for name in ["tinycnn_forward", "gemm_256", "weight_stats", "activity_stats"] {
+            let a = m.get(name).unwrap();
+            assert!(a.file.exists(), "{:?} missing", a.file);
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! PJRT client wrapper: compile-once / execute-many over the artifact set.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// Output tensor data from an artifact execution.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with f32 inputs (all artifact interfaces are f32 by
+    /// design — casts happen inside the graphs). Inputs are validated
+    /// against the manifest shapes.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<TensorData>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact '{}' wants {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if spec.dtype != DType::F32 {
+                bail!("artifact '{}' has a non-f32 input", self.spec.name);
+            }
+            if data.len() != spec.elements() {
+                bail!(
+                    "artifact '{}': input needs {} elements, got {}",
+                    self.spec.name,
+                    spec.elements(),
+                    data.len()
+                );
+            }
+            let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .context("reshaping input literal")?,
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact '{}'", self.spec.name))?;
+        // AOT lowering uses return_tuple=True: unwrap the tuple.
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.to_tuple().context("untupling result")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact '{}' returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| extract(lit, spec))
+            .collect()
+    }
+}
+
+fn extract(lit: xla::Literal, spec: &TensorSpec) -> Result<TensorData> {
+    Ok(match spec.dtype {
+        DType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+        DType::I32 => TensorData::I32(lit.to_vec::<i32>()?),
+    })
+}
+
+/// The runtime: a PJRT CPU client plus a compile-once executable cache.
+///
+/// NOTE: PJRT handles are not `Send`; the coordinator keeps the runtime
+/// on a dedicated inference thread and talks to it over channels
+/// (`crate::coordinator`).
+pub struct Runtime {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, LoadedArtifact>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/`) and create the
+    /// PJRT CPU client.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { manifest, client, cache: HashMap::new(), dir: dir.to_path_buf() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedArtifact> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.get(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            self.cache.insert(name.to_string(), LoadedArtifact { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Convenience: load + run.
+    pub fn run(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<TensorData>> {
+        self.load(name)?;
+        self.cache[name].run(inputs)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_data_accessors() {
+        let f = TensorData::F32(vec![1.0, 2.0]);
+        assert_eq!(f.as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(f.as_i32().is_err());
+        assert_eq!(f.len(), 2);
+        let i = TensorData::I32(vec![3]);
+        assert_eq!(i.as_i32().unwrap(), &[3]);
+        assert!(!i.is_empty());
+    }
+
+    // Execution tests against the real artifacts live in
+    // rust/tests/integration_runtime.rs (they need `make artifacts`).
+}

@@ -1,0 +1,13 @@
+//! Runtime: load and execute the AOT-compiled XLA artifacts via PJRT.
+//!
+//! `make artifacts` (python, build time only) lowers the L2 JAX graphs —
+//! which embed the L1 Pallas kernels — to HLO *text*; this module loads
+//! them with `HloModuleProto::from_text_file`, compiles once per artifact
+//! on the PJRT CPU client, caches the executables, and runs them from the
+//! L3 hot path. Python never runs here.
+
+mod artifacts;
+mod client;
+
+pub use artifacts::*;
+pub use client::*;

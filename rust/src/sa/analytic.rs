@@ -1,0 +1,403 @@
+//! Analytic (closed-form) activity model — the fast engine behind the
+//! full-CNN sweeps of paper Figs. 4 and 5.
+//!
+//! Key observation: every register of a stream pipeline sees the same
+//! value sequence, time-shifted, so its lifetime toggle count is the
+//! stream's consecutive-pair Hamming sum — no per-cycle simulation
+//! needed. Compute-side counts reduce to per-slot set algebra
+//! (`active = Σ_k nnz_A(·,k)·nnz_B(k,·)`), and multiplier operand
+//! activity reduces to pairwise row-of-B Hamming sums that are memoized
+//! across rows of A.
+//!
+//! The model is **exact**: `rust/tests/property_tests.rs` asserts equal
+//! `ActivityCounts` integers against the cycle-accurate simulator for
+//! every coding configuration over random tiles.
+
+use crate::activity::{
+    ham16_masked, ham16_slice, ham_bf16, stream_toggles, ActivityCounts,
+};
+use crate::bf16::Bf16;
+use crate::coding::{decode, BicEncoder, BicMode, Encoded, SaCodingConfig};
+
+use super::Tile;
+
+/// Exact activity counts for one tile under a coding configuration.
+pub fn analyze_tile(tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts {
+    let (m, k, n) = (tile.m, tile.k, tile.n);
+    let mut c = ActivityCounts::default();
+
+    // ---------------- West (input) lanes ----------------
+    for i in 0..m {
+        lane_counts(
+            tile.a_row(i),
+            cfg.input_zvcg,
+            cfg.input_bic,
+            cfg,
+            n as u64, // registers per West lane = one per column
+            LaneSide::West,
+            &mut c,
+        );
+    }
+
+    // ---------------- North (weight) lanes ----------------
+    let mut col: Vec<Bf16> = Vec::with_capacity(k);
+    for j in 0..n {
+        col.clear();
+        col.extend(tile.b_col(j));
+        lane_counts(
+            &col,
+            cfg.weight_zvcg,
+            cfg.weight_bic,
+            cfg,
+            m as u64, // registers per North lane = one per row
+            LaneSide::North,
+            &mut c,
+        );
+    }
+
+    // ---------------- Compute-side counts ----------------
+    // Non-zero counts per k-slot.
+    let nnz_a_col: Vec<u64> = (0..k)
+        .map(|kk| (0..m).filter(|&i| !tile.a_at(i, kk).is_zero()).count() as u64)
+        .collect();
+    let nnz_b_row: Vec<u64> = (0..k)
+        .map(|kk| (0..n).filter(|&j| !tile.b_at(kk, j).is_zero()).count() as u64)
+        .collect();
+
+    let slots = tile.mac_slots();
+    let active: u64 = (0..k).map(|kk| nnz_a_col[kk] * nnz_b_row[kk]).sum();
+    let gated: u64 = match (cfg.input_zvcg, cfg.weight_zvcg) {
+        (false, false) => 0,
+        (true, false) => {
+            (0..k).map(|kk| (m as u64 - nnz_a_col[kk]) * n as u64).sum()
+        }
+        (false, true) => {
+            (0..k).map(|kk| (n as u64 - nnz_b_row[kk]) * m as u64).sum()
+        }
+        (true, true) => slots - active,
+    };
+    let non_gated = slots - gated;
+    c.active_macs = active;
+    c.gated_macs = gated;
+    c.zero_product_macs = non_gated - active;
+    c.acc_clock_events = 32 * non_gated;
+    if cfg.input_zvcg || cfg.weight_zvcg {
+        c.acc_cg_cell_cycles = slots;
+    }
+
+    // ---------------- Multiplier operand activity ----------------
+    if cfg.weight_zvcg {
+        // Generic per-PE walk (ablation configs only): both latches.
+        c.mult_input_toggles = mult_toggles_generic(tile, cfg);
+    } else {
+        // a-side: every PE of row i sees the same decoded-a sequence —
+        // which, without input BIC, is exactly the sequence the West data
+        // registers load, so the toggle total equals west_data_toggles
+        // (same registers-per-lane factor N).
+        if cfg.input_bic == BicMode::None {
+            c.mult_input_toggles += c.west_data_toggles;
+        } else {
+            let mut seq: Vec<Bf16> = Vec::with_capacity(k);
+            for i in 0..m {
+                let row = tile.a_row(i);
+                let toggles = if cfg.input_zvcg {
+                    seq.clear();
+                    seq.extend(row.iter().copied().filter(|v| !v.is_zero()));
+                    stream_toggles(Bf16::ZERO, &seq)
+                } else {
+                    stream_toggles(Bf16::ZERO, row)
+                };
+                c.mult_input_toggles += n as u64 * toggles;
+            }
+        }
+        // b-side: pairwise row-of-B Hamming sums over each row's slot set.
+        // D(p, q) = Σ_j Ham(B[p,j], B[q,j]). A direct 16-lane packed
+        // popcount (~4 u64 ops at n=16) is cheaper than memoizing, except
+        // for the adjacent pairs which every dense row repays M times —
+        // those are precomputed once.
+        let b_bits: Vec<u16> = tile.b.iter().map(|v| v.0).collect();
+        let row_bits = |p: usize| &b_bits[p * n..(p + 1) * n];
+        let zero_row = vec![0u16; n];
+        let d_direct = |p: usize, q: usize| {
+            let prev = if p == usize::MAX { &zero_row[..] } else { row_bits(p) };
+            ham16_slice(prev, row_bits(q))
+        };
+        if cfg.input_zvcg {
+            // adjacent-pair distances (the overwhelmingly common case at
+            // moderate sparsity), D(k-1, k), plus reset distances D(⊥, k)
+            let mut d_adj: Vec<u64> = Vec::with_capacity(k);
+            let mut d_rst: Vec<u64> = Vec::with_capacity(k);
+            for kk in 0..k {
+                d_rst.push(ham16_slice(&zero_row, row_bits(kk)));
+                d_adj.push(if kk == 0 {
+                    0
+                } else {
+                    ham16_slice(row_bits(kk - 1), row_bits(kk))
+                });
+            }
+            for i in 0..m {
+                let arow = tile.a_row(i);
+                let mut prev = usize::MAX;
+                let mut total = 0u64;
+                for (kk, a) in arow.iter().enumerate() {
+                    if a.is_zero() {
+                        continue;
+                    }
+                    total += if prev == usize::MAX {
+                        d_rst[kk]
+                    } else if prev + 1 == kk {
+                        d_adj[kk]
+                    } else {
+                        d_direct(prev, kk)
+                    };
+                    prev = kk;
+                }
+                c.mult_input_toggles += total;
+            }
+        } else {
+            // All rows see all slots: M × adjacent-pair sums.
+            let mut col_total = 0u64;
+            let mut prev = usize::MAX;
+            for kk in 0..k {
+                col_total += d_direct(prev, kk);
+                prev = kk;
+            }
+            c.mult_input_toggles += m as u64 * col_total;
+        }
+    }
+
+    c.unload_values = (m * n) as u64;
+    c.cycles = tile.cycles();
+    c
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum LaneSide {
+    West,
+    North,
+}
+
+/// Stream-pipeline counts for one lane (a West row or a North column),
+/// charged to the matching side of the ledger. Single pass, no
+/// intermediate allocation — this is the sweep hot path.
+fn lane_counts(
+    raw: &[Bf16],
+    zvcg: bool,
+    bic: BicMode,
+    cfg: &SaCodingConfig,
+    regs: u64,
+    side: LaneSide,
+    c: &mut ActivityCounts,
+) {
+    let k = raw.len() as u64;
+
+    // Zero detector examines every incoming value.
+    if zvcg {
+        c.zero_detect_ops += k;
+    }
+
+    let mask = bic.segments().iter().fold(0u16, |a, &s| a | s);
+    let mut enc = BicEncoder::new(bic, cfg.bic_policy);
+    let mut prev_word = 0u16;
+    let mut prev_inv = 0u8;
+    let mut prev_zero = false;
+    let mut raw_toggles = 0u64; // data-line toggles per register
+    let mut loads = 0u64; // register load slots (non-gated values)
+    let mut inv_toggles = 0u64;
+    let mut dec_toggles = 0u64;
+    let mut zero_sb_toggles = 0u64;
+
+    for &v in raw {
+        if zvcg {
+            let z = v.is_zero();
+            zero_sb_toggles += (z != prev_zero) as u64;
+            prev_zero = z;
+            if z {
+                continue; // pipeline frozen: nothing loads
+            }
+        }
+        let e: Encoded = if bic != BicMode::None {
+            c.encoder_ops += 1;
+            let e = enc.encode(v);
+            debug_assert_eq!(decode(bic, e).0, v.0);
+            let inv_diff = (prev_inv ^ e.inv).count_ones() as u64;
+            inv_toggles += inv_diff;
+            dec_toggles +=
+                ham16_masked(prev_word, e.tx.0, mask) as u64 + inv_diff;
+            prev_inv = e.inv;
+            e
+        } else {
+            Encoded { tx: v, inv: 0 }
+        };
+        raw_toggles += (prev_word ^ e.tx.0).count_ones() as u64;
+        prev_word = e.tx.0;
+        loads += 1;
+    }
+
+    let data_toggles = regs * raw_toggles;
+    let data_clocks = regs * 16 * loads;
+    let lines = bic.inv_lines() as u64;
+    let inv_sideband_toggles = regs * inv_toggles;
+    let inv_sideband_clocks = regs * lines * loads;
+    let decoder_toggles = regs * dec_toggles;
+
+    // is-zero sideband: always clocked, one bit; ICG burns every slot.
+    let (zero_sb_toggles, zero_sb_clocks, cg_cells) = if zvcg {
+        (regs * zero_sb_toggles, regs * k, regs * k)
+    } else {
+        (0, 0, 0)
+    };
+
+    match side {
+        LaneSide::West => {
+            c.west_data_toggles += data_toggles;
+            c.west_clock_events += data_clocks;
+            c.west_sideband_toggles += inv_sideband_toggles + zero_sb_toggles;
+            c.west_sideband_clock_events += inv_sideband_clocks + zero_sb_clocks;
+            c.west_cg_cell_cycles += cg_cells;
+            c.decoder_toggles += decoder_toggles;
+        }
+        LaneSide::North => {
+            c.north_data_toggles += data_toggles;
+            c.north_clock_events += data_clocks;
+            c.north_sideband_toggles += inv_sideband_toggles + zero_sb_toggles;
+            c.north_sideband_clock_events += inv_sideband_clocks + zero_sb_clocks;
+            c.north_cg_cell_cycles += cg_cells;
+            c.decoder_toggles += decoder_toggles;
+        }
+    }
+}
+
+/// Per-PE operand-latch walk, used when weight-side gating makes the
+/// slot sets column-dependent. O(M·N·K) but exact for every config.
+fn mult_toggles_generic(tile: &Tile, cfg: &SaCodingConfig) -> u64 {
+    let (m, k, n) = (tile.m, tile.k, tile.n);
+    let mut total = 0u64;
+    for i in 0..m {
+        for j in 0..n {
+            let mut lat_a = Bf16::ZERO;
+            let mut lat_b = Bf16::ZERO;
+            for kk in 0..k {
+                let a = tile.a_at(i, kk);
+                let b = tile.b_at(kk, j);
+                let gated = (cfg.input_zvcg && a.is_zero())
+                    || (cfg.weight_zvcg && b.is_zero());
+                if gated {
+                    continue;
+                }
+                total += (ham_bf16(lat_a, a) + ham_bf16(lat_b, b)) as u64;
+                lat_a = a;
+                lat_b = b;
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sa::simulate_tile;
+    use crate::util::prop::check;
+    use crate::util::Rng64;
+
+    fn random_tile(rng: &mut Rng64, m: usize, k: usize, n: usize, pz: f64, pzw: f64) -> Tile {
+        let a: Vec<f32> = (0..m * k)
+            .map(|_| if rng.chance(pz) { 0.0 } else { rng.normal() as f32 })
+            .collect();
+        let b: Vec<f32> = (0..k * n)
+            .map(|_| if rng.chance(pzw) { 0.0 } else { (rng.normal() * 0.1) as f32 })
+            .collect();
+        Tile::from_f32(&a, &b, m, k, n)
+    }
+
+    const ALL_CONFIGS: [&str; 7] = [
+        "baseline",
+        "proposed",
+        "bic-only",
+        "zvcg-only",
+        "bic-full",
+        "bic-segmented",
+        "bic-exponent",
+    ];
+
+    #[test]
+    fn matches_cycle_sim_exactly() {
+        check("analytic == cycle sim (all configs)", 25, |rng| {
+            let (m, k, n) = (1 + rng.below(5), 1 + rng.below(16), 1 + rng.below(5));
+            let pz = rng.uniform();
+            let t = random_tile(rng, m, k, n, pz, 0.1);
+            for name in ALL_CONFIGS {
+                let cfg = SaCodingConfig::by_name(name).unwrap();
+                let golden = simulate_tile(&t, &cfg).counts;
+                let fast = analyze_tile(&t, &cfg);
+                assert_eq!(fast, golden, "config {name}, tile {m}x{k}x{n}");
+            }
+        });
+    }
+
+    #[test]
+    fn matches_cycle_sim_weight_zvcg() {
+        check("analytic == cycle sim (weight gating ablations)", 15, |rng| {
+            let t = random_tile(rng, 4, 12, 4, 0.5, 0.4);
+            for cfg in [
+                SaCodingConfig {
+                    weight_zvcg: true,
+                    ..SaCodingConfig::baseline()
+                },
+                SaCodingConfig {
+                    weight_zvcg: true,
+                    ..SaCodingConfig::proposed()
+                },
+            ] {
+                let golden = simulate_tile(&t, &cfg).counts;
+                let fast = analyze_tile(&t, &cfg);
+                assert_eq!(fast, golden, "config {cfg:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn active_macs_config_invariant() {
+        check("active MACs independent of coding", 20, |rng| {
+            let t = random_tile(rng, 6, 10, 6, 0.5, 0.2);
+            let base = analyze_tile(&t, &SaCodingConfig::baseline());
+            for name in ALL_CONFIGS {
+                let c = analyze_tile(&t, &SaCodingConfig::by_name(name).unwrap());
+                assert_eq!(c.active_macs, base.active_macs, "{name}");
+            }
+        });
+    }
+
+    #[test]
+    fn dense_tile_has_no_gating_effect() {
+        let mut rng = Rng64::new(3);
+        let t = random_tile(&mut rng, 8, 24, 8, 0.0, 0.0);
+        let base = analyze_tile(&t, &SaCodingConfig::baseline());
+        let zv = analyze_tile(&t, &SaCodingConfig::zvcg_only());
+        assert_eq!(base.west_data_toggles, zv.west_data_toggles);
+        assert_eq!(base.active_macs, zv.active_macs);
+        assert_eq!(zv.gated_macs, 0);
+        // but ZVCG still pays detectors + sideband clocks
+        assert!(zv.zero_detect_ops > 0);
+        assert!(zv.west_sideband_clock_events > 0);
+    }
+
+    #[test]
+    fn mantissa_bic_reduces_north_toggles_on_cnn_like_weights() {
+        // CNN-like weights: small magnitudes, exponents concentrated,
+        // mantissas uniform -> mantissa BIC must help the North pipelines.
+        check("BIC helps on CNN-like weights", 10, |rng| {
+            let (m, k, n) = (8, 64, 8);
+            let t = random_tile(rng, m, k, n, 0.2, 0.0);
+            let base = analyze_tile(&t, &SaCodingConfig::baseline());
+            let bic = analyze_tile(&t, &SaCodingConfig::bic_only());
+            assert!(
+                bic.north_data_toggles < base.north_data_toggles,
+                "BIC {} vs base {}",
+                bic.north_data_toggles,
+                base.north_data_toggles
+            );
+        });
+    }
+}

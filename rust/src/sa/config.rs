@@ -1,0 +1,78 @@
+//! SA instance configuration: array geometry + coding + models.
+
+use crate::coding::SaCodingConfig;
+use crate::power::{AreaModel, EnergyModel};
+
+/// Geometry and model bundle for one SA instance. The paper's evaluated
+/// design is 16×16 PEs at 45 nm (the `Default`).
+#[derive(Clone, Debug)]
+pub struct SaConfig {
+    /// PE rows (West streams).
+    pub rows: usize,
+    /// PE columns (North streams).
+    pub cols: usize,
+    /// Coding / gating configuration.
+    pub coding: SaCodingConfig,
+    /// Energy constants.
+    pub energy: EnergyModel,
+    /// Area constants.
+    pub area: AreaModel,
+    /// Clock in GHz (for power reporting).
+    pub clock_ghz: f64,
+}
+
+impl Default for SaConfig {
+    fn default() -> Self {
+        Self {
+            rows: 16,
+            cols: 16,
+            coding: SaCodingConfig::baseline(),
+            energy: EnergyModel::default(),
+            area: AreaModel::default(),
+            clock_ghz: 1.0,
+        }
+    }
+}
+
+impl SaConfig {
+    /// 16×16 conventional SA (the paper's baseline).
+    pub fn baseline() -> Self {
+        Self::default()
+    }
+
+    /// 16×16 SA with the paper's proposed coding.
+    pub fn proposed() -> Self {
+        Self { coding: SaCodingConfig::proposed(), ..Self::default() }
+    }
+
+    /// Same geometry/models, different coding.
+    pub fn with_coding(&self, coding: SaCodingConfig) -> Self {
+        Self { coding, ..self.clone() }
+    }
+
+    /// Area report for this instance.
+    pub fn area_report(&self) -> crate::power::AreaReport {
+        self.area.area(self.rows, self.cols, &self.coding)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let c = SaConfig::default();
+        assert_eq!((c.rows, c.cols), (16, 16));
+        assert_eq!(c.clock_ghz, 1.0);
+        assert!(!c.coding.has_overhead());
+        assert!(SaConfig::proposed().coding.has_overhead());
+    }
+
+    #[test]
+    fn with_coding_keeps_geometry() {
+        let c = SaConfig { rows: 8, cols: 4, ..SaConfig::default() };
+        let p = c.with_coding(SaCodingConfig::proposed());
+        assert_eq!((p.rows, p.cols), (8, 4));
+    }
+}

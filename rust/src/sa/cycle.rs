@@ -1,0 +1,409 @@
+//! Cycle-accurate, bit-level simulator of the output-stationary SA —
+//! the golden reference (substitute for the paper's RTL simulation).
+//!
+//! Every architectural element of paper Fig. 3 is explicit state:
+//!
+//! * per-PE 16-bit `a` (input) and `b` (weight) pipeline registers,
+//! * the 1-bit `is-zero` (West) and `inv` (North) sideband flip-flops,
+//! * the BIC encoders at the North edge / zero detectors at the West edge,
+//! * per-PE operand-isolation latches feeding the multiplier,
+//! * the 32-bit f32 accumulator of each PE.
+//!
+//! The simulator advances clock edge by clock edge with the skewed
+//! injection schedule (row i delayed i cycles, column j delayed j cycles)
+//! and records every toggle/clock event into an [`ActivityCounts`].
+//! It also produces the functional result C = A×B, asserted against the
+//! plain matmul reference in tests — gating and coding must be
+//! functionally transparent.
+
+use crate::activity::{ham1, ham_bf16, ActivityCounts};
+use crate::bf16::Bf16;
+use crate::coding::{decode, BicEncoder, BicMode, Encoded, SaCodingConfig};
+
+use super::Tile;
+
+/// What the edge logic presents to the first register of a lane at one
+/// stream slot.
+#[derive(Clone, Copy, Debug)]
+struct EdgeSlot {
+    /// Gated by the zero detector (ZVCG lanes only).
+    gated: bool,
+    /// The (possibly BIC-encoded) word to load when not gated.
+    data: Bf16,
+    /// The inv sideband bits accompanying the word (BIC lanes only).
+    inv: u8,
+}
+
+/// Precompute what one edge (West row or North column) feeds into the
+/// array, applying the detector and encoder in hardware order:
+/// zero-detect first (zeros never reach the encoder), then BIC.
+fn edge_stream(
+    raw: &[Bf16],
+    zvcg: bool,
+    bic: BicMode,
+    policy: crate::coding::BicPolicy,
+    counts: &mut ActivityCounts,
+) -> Vec<EdgeSlot> {
+    let mut enc = BicEncoder::new(bic, policy);
+    raw.iter()
+        .map(|&v| {
+            if zvcg {
+                counts.zero_detect_ops += 1;
+            }
+            if zvcg && v.is_zero() {
+                return EdgeSlot { gated: true, data: Bf16::ZERO, inv: 0 };
+            }
+            let e: Encoded = if bic != BicMode::None {
+                // input-side encoders (ablation only) and weight-side
+                // encoders are charged to the same counter.
+                counts.encoder_ops += 1;
+                enc.encode(v)
+            } else {
+                Encoded { tx: v, inv: 0 }
+            };
+            EdgeSlot { gated: false, data: e.tx, inv: e.inv }
+        })
+        .collect()
+}
+
+/// One lane register stage: data word + sidebands.
+#[derive(Clone, Copy, Debug, Default)]
+struct Stage {
+    data: Bf16,
+    zero: bool,
+    inv: u8,
+}
+
+/// Result of a cycle-accurate tile run.
+#[derive(Clone, Debug)]
+pub struct CycleResult {
+    pub counts: ActivityCounts,
+    /// Functional output C = A×B, row-major M×N, f32 accumulation.
+    pub c: Vec<f32>,
+}
+
+/// Simulate one tile through an M×N output-stationary SA with the given
+/// coding configuration. Array geometry equals the tile geometry (the
+/// tiler pads tiles to the physical array size).
+pub fn simulate_tile(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
+    let (m, k, n) = (tile.m, tile.k, tile.n);
+    let mut counts = ActivityCounts::default();
+
+    // ---- Edge logic (detectors + encoders), in stream order ----
+    let west: Vec<Vec<EdgeSlot>> = (0..m)
+        .map(|i| {
+            edge_stream(
+                tile.a_row(i),
+                cfg.input_zvcg,
+                cfg.input_bic,
+                cfg.bic_policy,
+                &mut counts,
+            )
+        })
+        .collect();
+    let north: Vec<Vec<EdgeSlot>> = (0..n)
+        .map(|j| {
+            let col: Vec<Bf16> = tile.b_col(j).collect();
+            edge_stream(
+                &col,
+                cfg.weight_zvcg,
+                cfg.weight_bic,
+                cfg.bic_policy,
+                &mut counts,
+            )
+        })
+        .collect();
+
+    // ---- Register state ----
+    let mut a_st = vec![Stage::default(); m * n];
+    let mut b_st = vec![Stage::default(); m * n];
+    let mut mlat_a = vec![Bf16::ZERO; m * n];
+    let mut mlat_b = vec![Bf16::ZERO; m * n];
+    let mut acc = vec![0f32; m * n];
+
+    let idx = |i: usize, j: usize| i * n + j;
+    let total_cycles = (k + m + n) as i64;
+
+    for c in 0..total_cycles {
+        // ---- Phase 1: MAC (combinational during cycle c) ----
+        // PE(i,j) holds the slot-k operand pair during cycle i+j+k+1.
+        for i in 0..m {
+            for j in 0..n {
+                let kk = c - 1 - i as i64 - j as i64;
+                if kk < 0 || kk >= k as i64 {
+                    continue;
+                }
+                let p = idx(i, j);
+                // Accumulator ICG cell burns once per MAC slot whenever
+                // any zero-gating is configured.
+                if cfg.input_zvcg || cfg.weight_zvcg {
+                    counts.acc_cg_cell_cycles += 1;
+                }
+                let gated = a_st[p].zero || b_st[p].zero;
+                if gated {
+                    counts.gated_macs += 1;
+                    continue;
+                }
+                // XOR recovery of the original operands (paper Fig. 3).
+                let a = decode(
+                    cfg.input_bic,
+                    Encoded { tx: a_st[p].data, inv: a_st[p].inv },
+                );
+                let b = decode(
+                    cfg.weight_bic,
+                    Encoded { tx: b_st[p].data, inv: b_st[p].inv },
+                );
+                // Operand-isolation latches feeding the multiplier.
+                counts.mult_input_toggles +=
+                    (ham_bf16(mlat_a[p], a) + ham_bf16(mlat_b[p], b)) as u64;
+                mlat_a[p] = a;
+                mlat_b[p] = b;
+                // Accumulator is clocked on every non-gated slot.
+                counts.acc_clock_events += 32;
+                if a.is_zero() || b.is_zero() {
+                    counts.zero_product_macs += 1;
+                } else {
+                    counts.active_macs += 1;
+                    acc[p] += a.to_f32() * b.to_f32();
+                }
+            }
+        }
+
+        // ---- Phase 2: clock edge at the end of cycle c ----
+        // West (a) pipeline: row i, stage j loads slot kk = c - i - j.
+        // Process stages in descending j so each reads its neighbour's
+        // pre-edge state.
+        for i in 0..m {
+            for j in (0..n).rev() {
+                let kk = c - i as i64 - j as i64;
+                if kk < 0 || kk >= k as i64 {
+                    continue;
+                }
+                let p = idx(i, j);
+                let incoming = if j == 0 {
+                    let s = west[i][kk as usize];
+                    Stage { data: s.data, zero: s.gated, inv: s.inv }
+                } else {
+                    a_st[idx(i, j - 1)]
+                };
+                if cfg.input_zvcg {
+                    // is-zero sideband FF: always clocked (it carries the
+                    // gating decision), toggles by its own sequence.
+                    counts.west_sideband_toggles +=
+                        ham1(a_st[p].zero, incoming.zero) as u64;
+                    counts.west_sideband_clock_events += 1;
+                    // The ICG on the data register burns every slot.
+                    counts.west_cg_cell_cycles += 1;
+                }
+                let gate = cfg.input_zvcg && incoming.zero;
+                if gate {
+                    a_st[p].zero = true;
+                } else {
+                    counts.west_data_toggles +=
+                        ham_bf16(a_st[p].data, incoming.data) as u64;
+                    counts.west_clock_events += 16;
+                    if cfg.input_bic != BicMode::None {
+                        let lines = cfg.input_bic.inv_lines() as u64;
+                        counts.decoder_toggles += crate::activity::ham16_masked(
+                            a_st[p].data.0,
+                            incoming.data.0,
+                            bic_cover_mask(cfg.input_bic),
+                        )
+                            as u64
+                            + (a_st[p].inv ^ incoming.inv).count_ones() as u64;
+                        counts.west_sideband_toggles +=
+                            (a_st[p].inv ^ incoming.inv).count_ones() as u64;
+                        counts.west_sideband_clock_events += lines;
+                    }
+                    a_st[p].data = incoming.data;
+                    a_st[p].inv = incoming.inv;
+                    a_st[p].zero = false;
+                }
+            }
+        }
+
+        // North (b) pipeline: column j, stage i loads slot kk = c - i - j.
+        for j in 0..n {
+            for i in (0..m).rev() {
+                let kk = c - i as i64 - j as i64;
+                if kk < 0 || kk >= k as i64 {
+                    continue;
+                }
+                let p = idx(i, j);
+                let incoming = if i == 0 {
+                    let s = north[j][kk as usize];
+                    Stage { data: s.data, zero: s.gated, inv: s.inv }
+                } else {
+                    b_st[idx(i - 1, j)]
+                };
+                if cfg.weight_zvcg {
+                    counts.north_sideband_toggles +=
+                        ham1(b_st[p].zero, incoming.zero) as u64;
+                    counts.north_sideband_clock_events += 1;
+                    // The ICG on the weight register burns every slot.
+                    counts.north_cg_cell_cycles += 1;
+                }
+                let gate = cfg.weight_zvcg && incoming.zero;
+                if gate {
+                    b_st[p].zero = true;
+                } else {
+                    counts.north_data_toggles +=
+                        ham_bf16(b_st[p].data, incoming.data) as u64;
+                    counts.north_clock_events += 16;
+                    if cfg.weight_bic != BicMode::None {
+                        let lines = cfg.weight_bic.inv_lines() as u64;
+                        counts.decoder_toggles += crate::activity::ham16_masked(
+                            b_st[p].data.0,
+                            incoming.data.0,
+                            bic_cover_mask(cfg.weight_bic),
+                        )
+                            as u64
+                            + (b_st[p].inv ^ incoming.inv).count_ones() as u64;
+                        counts.north_sideband_toggles +=
+                            (b_st[p].inv ^ incoming.inv).count_ones() as u64;
+                        counts.north_sideband_clock_events += lines;
+                    }
+                    b_st[p].data = incoming.data;
+                    b_st[p].inv = incoming.inv;
+                    b_st[p].zero = false;
+                }
+            }
+        }
+    }
+
+    counts.unload_values += (m * n) as u64;
+    counts.cycles += total_cycles as u64;
+    CycleResult { counts, c: acc }
+}
+
+/// Union mask of the lines a BIC mode covers (for XOR-recovery toggles).
+fn bic_cover_mask(mode: BicMode) -> u16 {
+    mode.segments().iter().fold(0u16, |acc, &m| acc | m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Rng64;
+
+    fn random_tile(rng: &mut Rng64, m: usize, k: usize, n: usize, pz: f64) -> Tile {
+        let a: Vec<f32> = (0..m * k)
+            .map(|_| if rng.chance(pz) { 0.0 } else { rng.normal() as f32 })
+            .collect();
+        let b: Vec<f32> = (0..k * n).map(|_| (rng.normal() * 0.1) as f32).collect();
+        Tile::from_f32(&a, &b, m, k, n)
+    }
+
+    #[test]
+    fn functional_correctness_baseline() {
+        check("cycle sim computes A×B (baseline)", 40, |rng| {
+            let (m, k, n) = (1 + rng.below(6), 1 + rng.below(12), 1 + rng.below(6));
+            let t = random_tile(rng, m, k, n, 0.3);
+            let r = simulate_tile(&t, &SaCodingConfig::baseline());
+            assert_eq!(r.c, t.reference_result());
+        });
+    }
+
+    #[test]
+    fn functional_correctness_all_configs() {
+        let configs = [
+            "baseline",
+            "proposed",
+            "bic-only",
+            "zvcg-only",
+            "bic-full",
+            "bic-segmented",
+            "bic-exponent",
+        ];
+        check("coding/gating are functionally transparent", 20, |rng| {
+            let t = random_tile(rng, 4, 10, 5, 0.4);
+            let want = t.reference_result();
+            for name in configs {
+                let cfg = SaCodingConfig::by_name(name).unwrap();
+                let r = simulate_tile(&t, &cfg);
+                assert_eq!(r.c, want, "config {name}");
+            }
+        });
+    }
+
+    #[test]
+    fn zvcg_reduces_streaming_toggles() {
+        check("ZVCG strictly helps on sparse inputs", 20, |rng| {
+            let t = random_tile(rng, 8, 32, 8, 0.5);
+            let base = simulate_tile(&t, &SaCodingConfig::baseline());
+            let prop = simulate_tile(&t, &SaCodingConfig::zvcg_only());
+            assert!(
+                prop.counts.west_data_toggles <= base.counts.west_data_toggles
+            );
+            assert!(prop.counts.west_clock_events <= base.counts.west_clock_events);
+        });
+    }
+
+    #[test]
+    fn gated_plus_active_partition_slots() {
+        check("MAC slots partition", 20, |rng| {
+            let t = random_tile(rng, 5, 20, 7, 0.5);
+            for cfg in [SaCodingConfig::baseline(), SaCodingConfig::proposed()] {
+                let r = simulate_tile(&t, &cfg);
+                assert_eq!(r.counts.total_mac_slots(), t.mac_slots());
+            }
+        });
+    }
+
+    #[test]
+    fn baseline_has_no_overhead_events() {
+        let mut rng = Rng64::new(1);
+        let t = random_tile(&mut rng, 4, 8, 4, 0.3);
+        let r = simulate_tile(&t, &SaCodingConfig::baseline());
+        assert_eq!(r.counts.zero_detect_ops, 0);
+        assert_eq!(r.counts.encoder_ops, 0);
+        assert_eq!(r.counts.decoder_toggles, 0);
+        assert_eq!(r.counts.gated_macs, 0);
+        assert_eq!(r.counts.west_sideband_toggles, 0);
+        assert_eq!(r.counts.west_cg_cell_cycles, 0);
+    }
+
+    #[test]
+    fn clock_event_totals_baseline() {
+        // Baseline: every data register is clocked on each of its K slots.
+        let mut rng = Rng64::new(2);
+        let (m, k, n) = (3, 7, 4);
+        let t = random_tile(&mut rng, m, k, n, 0.2);
+        let r = simulate_tile(&t, &SaCodingConfig::baseline());
+        assert_eq!(r.counts.west_clock_events, (16 * m * n * k) as u64);
+        assert_eq!(r.counts.north_clock_events, (16 * m * n * k) as u64);
+        assert_eq!(r.counts.acc_clock_events, (32 * m * n * k) as u64);
+        assert_eq!(r.counts.cycles, (m + n + k) as u64);
+        assert_eq!(r.counts.unload_values, (m * n) as u64);
+    }
+
+    #[test]
+    fn all_zero_input_gates_everything() {
+        let a = vec![0f32; 4 * 8];
+        let b: Vec<f32> = (0..8 * 4).map(|i| i as f32 * 0.1).collect();
+        let t = Tile::from_f32(&a, &b, 4, 8, 4);
+        let r = simulate_tile(&t, &SaCodingConfig::proposed());
+        assert_eq!(r.counts.gated_macs, t.mac_slots());
+        assert_eq!(r.counts.active_macs, 0);
+        assert_eq!(r.counts.west_data_toggles, 0);
+        assert_eq!(r.counts.west_clock_events, 0);
+        assert_eq!(r.c, vec![0f32; 16]);
+    }
+
+    #[test]
+    fn bic_decodes_to_same_mult_activity() {
+        // BIC must not change multiplier operand activity (values are
+        // recovered before the multiplier).
+        check("BIC transparent to multiplier", 20, |rng| {
+            let t = random_tile(rng, 4, 16, 4, 0.0);
+            let base = simulate_tile(&t, &SaCodingConfig::baseline());
+            let bic = simulate_tile(&t, &SaCodingConfig::bic_only());
+            assert_eq!(
+                base.counts.mult_input_toggles,
+                bic.counts.mult_input_toggles
+            );
+            assert_eq!(base.counts.active_macs, bic.counts.active_macs);
+        });
+    }
+}

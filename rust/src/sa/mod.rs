@@ -1,0 +1,28 @@
+//! The systolic array: output-stationary dataflow, modelled twice.
+//!
+//! * [`cycle`] — the **golden** cycle-accurate simulator: every pipeline
+//!   register, sideband flip-flop, operand-isolation latch and
+//!   accumulator is explicit state, advanced clock edge by clock edge.
+//!   This is the substitute for the paper's RTL simulation.
+//! * [`analytic`] — the **fast** model: closed-form stream accounting
+//!   that produces *identical* `ActivityCounts` (proven by property tests
+//!   over random tiles, `rust/tests/property_tests.rs`). Full-CNN sweeps
+//!   (Figs. 4, 5) run through this engine.
+//!
+//! Shared semantics (DESIGN.md §6): a register is charged one clock event
+//! per *load slot* (K slots per tile stream) and data toggles by Hamming
+//! distance from its previous state; zero-gated slots are not clocked;
+//! the pair of operands reaching PE(i,j) at slot k is (A[i,k], B[k,j]),
+//! exactly the matmul pairing of the skewed dataflow.
+
+mod analytic;
+mod config;
+mod cycle;
+mod tile;
+mod trace;
+
+pub use analytic::*;
+pub use config::*;
+pub use cycle::*;
+pub use tile::*;
+pub use trace::*;

@@ -1,0 +1,128 @@
+//! The unit of SA work: one (M×K) × (K×N) tile of a GEMM.
+
+use crate::bf16::Bf16;
+
+/// One GEMM tile streamed through the array: `A` enters from the West
+/// (one row per SA row), `B` from the North (one column per SA column).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tile {
+    /// Row-major M×K activations (West streams).
+    pub a: Vec<Bf16>,
+    /// Row-major K×N weights (North streams).
+    pub b: Vec<Bf16>,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl Tile {
+    pub fn new(a: Vec<Bf16>, b: Vec<Bf16>, m: usize, k: usize, n: usize) -> Self {
+        assert_eq!(a.len(), m * k, "A must be m*k");
+        assert_eq!(b.len(), k * n, "B must be k*n");
+        assert!(m > 0 && k > 0 && n > 0, "empty tile");
+        Tile { a, b, m, k, n }
+    }
+
+    /// Build from f32 matrices (values rounded to bf16).
+    pub fn from_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Self {
+        Self::new(
+            a.iter().map(|&x| Bf16::from_f32(x)).collect(),
+            b.iter().map(|&x| Bf16::from_f32(x)).collect(),
+            m,
+            k,
+            n,
+        )
+    }
+
+    /// West stream of row `i`: A[i, 0..k].
+    pub fn a_row(&self, i: usize) -> &[Bf16] {
+        &self.a[i * self.k..(i + 1) * self.k]
+    }
+
+    /// North stream of column `j`: B[0..k, j] (strided).
+    pub fn b_col(&self, j: usize) -> impl Iterator<Item = Bf16> + '_ {
+        (0..self.k).map(move |kk| self.b[kk * self.n + j])
+    }
+
+    /// Row `kk` of B (the bus word set presented to all columns at slot k).
+    pub fn b_row(&self, kk: usize) -> &[Bf16] {
+        &self.b[kk * self.n..(kk + 1) * self.n]
+    }
+
+    /// Element accessors.
+    #[inline]
+    pub fn a_at(&self, i: usize, kk: usize) -> Bf16 {
+        self.a[i * self.k + kk]
+    }
+
+    #[inline]
+    pub fn b_at(&self, kk: usize, j: usize) -> Bf16 {
+        self.b[kk * self.n + j]
+    }
+
+    /// The functional result C = A×B with f32 accumulation (reference for
+    /// the simulators).
+    pub fn reference_result(&self) -> Vec<f32> {
+        crate::bf16::matmul_f32acc(&self.a, &self.b, self.m, self.k, self.n)
+    }
+
+    /// Fraction of zero-magnitude input (A) values — the quantity plotted
+    /// alongside power in paper Figs. 4–5.
+    pub fn input_zero_fraction(&self) -> f64 {
+        let zeros = self.a.iter().filter(|v| v.is_zero()).count();
+        zeros as f64 / self.a.len() as f64
+    }
+
+    /// Total MAC slots (M·N·K).
+    pub fn mac_slots(&self) -> u64 {
+        (self.m * self.n * self.k) as u64
+    }
+
+    /// Streaming cycles per tile run (fill + stream + drain): K + M + N.
+    pub fn cycles(&self) -> u64 {
+        (self.k + self.m + self.n) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bf(v: f32) -> Bf16 {
+        Bf16::from_f32(v)
+    }
+
+    #[test]
+    fn accessors_are_consistent() {
+        let t = Tile::from_f32(
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], // 2x3
+            &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0], // 3x2
+            2,
+            3,
+            2,
+        );
+        assert_eq!(t.a_row(1), &[bf(4.0), bf(5.0), bf(6.0)]);
+        assert_eq!(t.b_col(1).collect::<Vec<_>>(), vec![bf(0.0), bf(1.0), bf(1.0)]);
+        assert_eq!(t.b_row(2), &[bf(1.0), bf(1.0)]);
+        assert_eq!(t.a_at(0, 2), bf(3.0));
+        assert_eq!(t.b_at(1, 1), bf(1.0));
+    }
+
+    #[test]
+    fn reference_result_small() {
+        let t = Tile::from_f32(&[1.0, 2.0, 3.0, 4.0], &[1.0, 0.0, 0.0, 1.0], 2, 2, 2);
+        assert_eq!(t.reference_result(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_fraction() {
+        let t = Tile::from_f32(&[0.0, 1.0, 0.0, 2.0], &[1.0, 1.0], 2, 2, 1);
+        assert!((t.input_zero_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "A must be m*k")]
+    fn bad_dims_panic() {
+        Tile::from_f32(&[1.0], &[1.0], 2, 2, 1);
+    }
+}

@@ -1,0 +1,180 @@
+//! Lane waveform tracing — a human-readable view of what the edge logic
+//! does to one stream, slot by slot (the debugging artifact an RTL
+//! engineer would pull from a simulation dump).
+//!
+//! The tracer replays the exact edge semantics of the simulators
+//! (zero-detect first, then BIC on the surviving values) and reports,
+//! per stream slot: the raw word, gating, the transmitted word, the inv
+//! sideband, and the cumulative data-line toggles — which are asserted
+//! (tests + `trace` CLI) to match the analytic model's lane accounting.
+
+use crate::activity::ham16;
+use crate::bf16::Bf16;
+use crate::coding::{BicEncoder, BicMode, BicPolicy};
+
+/// One stream slot as seen at the array edge.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRow {
+    pub slot: usize,
+    /// Raw incoming value.
+    pub raw: Bf16,
+    /// Zero-gated (pipeline frozen, is-zero sideband asserted)?
+    pub gated: bool,
+    /// Word actually driven onto the bus (None when gated).
+    pub tx: Option<Bf16>,
+    /// inv sideband bits driven with the word.
+    pub inv: u8,
+    /// Data-line toggles this slot contributed (per register).
+    pub toggles: u32,
+    /// Running toggle total (per register).
+    pub cumulative_toggles: u64,
+}
+
+/// Trace one lane under the given per-lane coding (zvcg + BIC mode).
+pub fn trace_lane(
+    stream: &[Bf16],
+    zvcg: bool,
+    bic: BicMode,
+    policy: BicPolicy,
+) -> Vec<TraceRow> {
+    let mut enc = BicEncoder::new(bic, policy);
+    let mut prev = 0u16;
+    let mut total = 0u64;
+    stream
+        .iter()
+        .enumerate()
+        .map(|(slot, &raw)| {
+            if zvcg && raw.is_zero() {
+                return TraceRow {
+                    slot,
+                    raw,
+                    gated: true,
+                    tx: None,
+                    inv: 0,
+                    toggles: 0,
+                    cumulative_toggles: total,
+                };
+            }
+            let e = if bic != BicMode::None {
+                enc.encode(raw)
+            } else {
+                crate::coding::Encoded { tx: raw, inv: 0 }
+            };
+            let toggles = ham16(prev, e.tx.0);
+            prev = e.tx.0;
+            total += toggles as u64;
+            TraceRow {
+                slot,
+                raw,
+                gated: false,
+                tx: Some(e.tx),
+                inv: e.inv,
+                toggles,
+                cumulative_toggles: total,
+            }
+        })
+        .collect()
+}
+
+/// Render a trace as a fixed-width text waveform.
+pub fn render_trace(rows: &[TraceRow]) -> String {
+    let mut out = String::from(
+        "slot  raw_bits           value      gate  tx_bits            inv  tog  cum\n",
+    );
+    for r in rows {
+        let raw_b = format!("{:016b}", r.raw.0);
+        let (tx_b, gate) = match r.tx {
+            Some(t) => (format!("{:016b}", t.0), "    "),
+            None => ("----------------".to_string(), "ZERO"),
+        };
+        out.push_str(&format!(
+            "{:>4}  {raw_b}  {:>9.4}  {gate}  {tx_b}  {:>3}  {:>3}  {:>4}\n",
+            r.slot,
+            r.raw.to_f32(),
+            r.inv,
+            r.toggles,
+            r.cumulative_toggles
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::SaCodingConfig;
+    use crate::sa::{analyze_tile, Tile};
+    use crate::util::prop::check;
+    use crate::util::Rng64;
+
+    fn random_stream(rng: &mut Rng64, n: usize, pz: f64) -> Vec<Bf16> {
+        (0..n)
+            .map(|_| {
+                if rng.chance(pz) {
+                    Bf16::ZERO
+                } else {
+                    Bf16::from_f32((rng.normal() * 0.1) as f32)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn trace_matches_analytic_lane_accounting() {
+        // A 1×K×1 tile has exactly one West lane with one register; its
+        // trace's cumulative toggles must equal the model's count.
+        check("trace == analytic on single lanes", 50, |rng| {
+            let s = random_stream(rng, 48, 0.4);
+            let b = vec![Bf16::ONE; 48];
+            let tile = Tile::new(s.clone(), b, 1, 48, 1);
+            for (zvcg, cfg) in [
+                (false, SaCodingConfig::baseline()),
+                (true, SaCodingConfig::zvcg_only()),
+            ] {
+                let rows = trace_lane(&s, zvcg, BicMode::None, BicPolicy::Classic);
+                let counts = analyze_tile(&tile, &cfg);
+                assert_eq!(
+                    rows.last().unwrap().cumulative_toggles,
+                    counts.west_data_toggles,
+                    "zvcg={zvcg}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn trace_bic_matches_north_accounting() {
+        check("trace(BIC) == analytic north lane", 50, |rng| {
+            let s = random_stream(rng, 32, 0.0);
+            let a = vec![Bf16::ONE; 32];
+            let tile = Tile::new(a, s.clone(), 1, 32, 1);
+            let rows =
+                trace_lane(&s, false, BicMode::MantissaOnly, BicPolicy::Classic);
+            let counts = analyze_tile(&tile, &SaCodingConfig::bic_only());
+            assert_eq!(
+                rows.last().unwrap().cumulative_toggles,
+                counts.north_data_toggles
+            );
+        });
+    }
+
+    #[test]
+    fn gated_rows_drive_nothing() {
+        let s = vec![Bf16::ZERO, Bf16::ONE, Bf16::ZERO];
+        let rows = trace_lane(&s, true, BicMode::None, BicPolicy::Classic);
+        assert!(rows[0].gated && rows[2].gated);
+        assert_eq!(rows[0].tx, None);
+        assert_eq!(rows[0].toggles, 0);
+        assert_eq!(rows[1].tx, Some(Bf16::ONE));
+    }
+
+    #[test]
+    fn render_is_line_per_slot() {
+        let mut rng = Rng64::new(1);
+        let s = random_stream(&mut rng, 8, 0.3);
+        let rows = trace_lane(&s, true, BicMode::MantissaOnly, BicPolicy::Classic);
+        let text = render_trace(&rows);
+        assert_eq!(text.lines().count(), 9); // header + 8 slots
+        assert!(text.contains("tog"));
+    }
+}

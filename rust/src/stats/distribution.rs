@@ -1,0 +1,196 @@
+//! bf16 field-distribution analysis (paper Fig. 2).
+//!
+//! The paper's argument: CNN weight values concentrate near zero, so
+//! their bf16 *exponents* concentrate just below the bias (few bit
+//! transitions — BIC not worthwhile), while their *mantissas* are almost
+//! uniform over the full range (many transitions — BIC worthwhile).
+//! `WeightFieldStats` measures exactly those two distributions plus the
+//! concentration/uniformity scores the selective-coding decision rests on.
+
+use crate::bf16::Bf16;
+
+use super::Histogram;
+
+/// Exponent / mantissa / value distributions of a weight set in bf16.
+#[derive(Clone, Debug)]
+pub struct WeightFieldStats {
+    /// Biased-exponent histogram (256 bins, one per exponent code).
+    pub exp_hist: Vec<u64>,
+    /// Mantissa histogram (128 bins, one per 7-bit code).
+    pub man_hist: Vec<u64>,
+    /// Value histogram over [-1, 1] (Fig. 2 top row).
+    pub value_hist: Histogram,
+    /// Magnitude-zero values (excluded from exponent concentration).
+    pub zeros: u64,
+    pub total: u64,
+}
+
+impl WeightFieldStats {
+    pub fn from_f32(values: &[f32]) -> Self {
+        Self::from_bf16(values.iter().map(|&v| Bf16::from_f32(v)))
+    }
+
+    pub fn from_bf16<I: IntoIterator<Item = Bf16>>(values: I) -> Self {
+        let mut exp_hist = vec![0u64; 256];
+        let mut man_hist = vec![0u64; 128];
+        let mut value_hist = Histogram::new(-1.0, 1.0 + 1e-9, 64);
+        let mut zeros = 0u64;
+        let mut total = 0u64;
+        for v in values {
+            total += 1;
+            value_hist.add(v.to_f32() as f64);
+            if v.is_zero() {
+                zeros += 1;
+                continue;
+            }
+            exp_hist[v.exponent() as usize] += 1;
+            man_hist[v.mantissa() as usize] += 1;
+        }
+        WeightFieldStats { exp_hist, man_hist, value_hist, zeros, total }
+    }
+
+    /// Mass of the `k` most populated exponent codes among non-zeros —
+    /// the paper's "highly concentrated" claim scores ≳0.9 at k=8.
+    pub fn exponent_concentration(&self, k: usize) -> f64 {
+        let total: u64 = self.exp_hist.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut s = self.exp_hist.clone();
+        s.sort_unstable_by(|a, b| b.cmp(a));
+        s.iter().take(k).sum::<u64>() as f64 / total as f64
+    }
+
+    /// Uniformity of the mantissa distribution: ratio of the actual
+    /// Shannon entropy to the maximum (7 bits). Near 1.0 = uniform.
+    pub fn mantissa_uniformity(&self) -> f64 {
+        let total: u64 = self.man_hist.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let h: f64 = self
+            .man_hist
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / total as f64;
+                -p * p.log2()
+            })
+            .sum();
+        h / 7.0
+    }
+
+    /// Expected per-transfer Hamming distance between two independent
+    /// draws of the mantissa distribution (the unencoded switching cost
+    /// BIC attacks). Uniform ⇒ 3.5 for 7 bits.
+    pub fn mantissa_expected_hamming(&self) -> f64 {
+        let total: u64 = self.man_hist.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        // per-bit marginal probabilities
+        let mut p1 = [0f64; 7];
+        for (code, &c) in self.man_hist.iter().enumerate() {
+            for (b, p) in p1.iter_mut().enumerate() {
+                if (code >> b) & 1 == 1 {
+                    *p += c as f64;
+                }
+            }
+        }
+        p1.iter()
+            .map(|&ones| {
+                let p = ones / total as f64;
+                2.0 * p * (1.0 - p)
+            })
+            .sum()
+    }
+
+    /// Same measure for the exponent field (8 bits). Concentrated ⇒ ≪4.
+    pub fn exponent_expected_hamming(&self) -> f64 {
+        let total: u64 = self.exp_hist.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut p1 = [0f64; 8];
+        for (code, &c) in self.exp_hist.iter().enumerate() {
+            for (b, p) in p1.iter_mut().enumerate() {
+                if (code >> b) & 1 == 1 {
+                    *p += c as f64;
+                }
+            }
+        }
+        p1.iter()
+            .map(|&ones| {
+                let p = ones / total as f64;
+                2.0 * p * (1.0 - p)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    fn cnn_like_weights(n: usize, std: f64, seed: u64) -> Vec<f32> {
+        let mut r = Rng64::new(seed);
+        (0..n)
+            .map(|_| (r.normal_ms(0.0, std)).clamp(-1.0, 1.0) as f32)
+            .collect()
+    }
+
+    #[test]
+    fn totals_partition() {
+        let w = [0.5f32, -0.25, 0.0, 1.0];
+        let s = WeightFieldStats::from_f32(&w);
+        assert_eq!(s.total, 4);
+        assert_eq!(s.zeros, 1);
+        assert_eq!(s.exp_hist.iter().sum::<u64>(), 3);
+        assert_eq!(s.man_hist.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn fig2_claims_hold_for_cnn_like_weights() {
+        // The core statistical claims behind the paper's selective BIC:
+        let s = WeightFieldStats::from_f32(&cnn_like_weights(1 << 16, 0.05, 7));
+        assert!(
+            s.exponent_concentration(8) > 0.85,
+            "exp concentration {}",
+            s.exponent_concentration(8)
+        );
+        assert!(
+            s.mantissa_uniformity() > 0.97,
+            "mantissa uniformity {}",
+            s.mantissa_uniformity()
+        );
+        // switching economics: mantissa ~3.5 expected toggles, exponent far less
+        assert!(s.mantissa_expected_hamming() > 3.0);
+        assert!(s.exponent_expected_hamming() < 1.5);
+    }
+
+    #[test]
+    fn uniform_full_range_values_do_not_concentrate() {
+        // Anti-test: wide-range values (not CNN-like) spread exponents.
+        let mut r = Rng64::new(3);
+        let w: Vec<f32> = (0..1 << 14)
+            .map(|_| (r.normal() * 1e4) as f32)
+            .collect();
+        let s = WeightFieldStats::from_f32(&w);
+        assert!(s.exponent_concentration(4) < 0.9);
+    }
+
+    #[test]
+    fn expected_hamming_bounds() {
+        let s = WeightFieldStats::from_f32(&cnn_like_weights(4096, 0.1, 9));
+        assert!(s.mantissa_expected_hamming() <= 7.0);
+        assert!(s.exponent_expected_hamming() <= 8.0);
+    }
+
+    #[test]
+    fn known_codes() {
+        let s = WeightFieldStats::from_f32(&[1.5f32]);
+        assert_eq!(s.exp_hist[127], 1);
+        assert_eq!(s.man_hist[0x40], 1);
+    }
+}

@@ -1,0 +1,103 @@
+//! Fixed-bin histogram used by the distribution analyses.
+
+/// Histogram over equal-width bins covering [lo, hi).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    /// Samples outside [lo, hi).
+    pub outliers: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], outliers: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo || x >= self.hi {
+            self.outliers += 1;
+            return;
+        }
+        let idx = ((x - self.lo) / (self.hi - self.lo) * self.bins.len() as f64)
+            as usize;
+        let idx = idx.min(self.bins.len() - 1);
+        self.bins[idx] += 1;
+    }
+
+    pub fn add_all<'a, I: IntoIterator<Item = &'a f32>>(&mut self, xs: I) {
+        for &x in xs {
+            self.add(x as f64);
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.outliers
+    }
+
+    /// Fraction of in-range mass in the heaviest `k` bins (a
+    /// concentration measure, used for the Fig. 2 claims).
+    pub fn top_k_mass(&self, k: usize) -> f64 {
+        let total: u64 = self.bins.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut sorted = self.bins.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        sorted.iter().take(k).sum::<u64>() as f64 / total as f64
+    }
+
+    /// Bin centres (for plotting/CSV).
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        (0..self.bins.len())
+            .map(|i| self.lo + (i as f64 + 0.5) * w)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_and_outliers() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        for x in [0.1, 0.3, 0.6, 0.9, -0.5, 1.5] {
+            h.add(x);
+        }
+        assert_eq!(h.bins, vec![1, 1, 1, 1]);
+        assert_eq!(h.outliers, 2);
+        assert_eq!(h.total(), 6);
+    }
+
+    #[test]
+    fn top_k_mass() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        for _ in 0..90 {
+            h.add(0.55);
+        }
+        for i in 0..10 {
+            h.add(i as f64 / 10.0 + 0.001);
+        }
+        assert!(h.top_k_mass(1) > 0.9);
+        assert!((h.top_k_mass(10) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn centers() {
+        let h = Histogram::new(0.0, 1.0, 2);
+        assert_eq!(h.centers(), vec![0.25, 0.75]);
+    }
+
+    #[test]
+    fn edge_values() {
+        let mut h = Histogram::new(0.0, 1.0, 2);
+        h.add(0.0); // in (first bin)
+        h.add(1.0); // out (hi is exclusive)
+        assert_eq!(h.bins[0], 1);
+        assert_eq!(h.outliers, 1);
+    }
+}

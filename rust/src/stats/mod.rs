@@ -1,0 +1,8 @@
+//! Value-distribution statistics — the machinery behind paper Fig. 2
+//! (weight / exponent / mantissa histograms in bf16).
+
+mod distribution;
+mod histogram;
+
+pub use distribution::*;
+pub use histogram::*;

@@ -1,0 +1,96 @@
+//! Minimal benchmark harness (criterion is not vendored offline).
+//!
+//! Used by the `rust/benches/*.rs` targets (`harness = false`): warm-up,
+//! repeated timed runs, mean / stddev / min reporting, and a simple
+//! `row`/`table` facility so each bench prints the paper table or figure
+//! series it regenerates.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} {:>12.3?} ±{:>10.3?} (min {:>10.3?}, n={})",
+            self.name, self.mean, self.stddev, self.min, self.iters
+        );
+    }
+}
+
+/// Time `f` with `iters` measured runs after `warmup` unmeasured ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    let total: Duration = samples.iter().sum();
+    let mean = total / samples.len() as u32;
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|d| {
+            let x = d.as_secs_f64() - mean_s;
+            x * x
+        })
+        .sum::<f64>()
+        / samples.len() as f64;
+    let m = Measurement {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: samples.iter().min().copied().unwrap_or_default(),
+    };
+    m.report();
+    m
+}
+
+/// Convenience: run-once timing for long end-to-end sweeps.
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed();
+    println!("bench {name:<44} {dt:>12.3?} (single run)");
+    (out, dt)
+}
+
+/// Prevent the optimizer from discarding a value (std::hint variant).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("noop-ish", 1, 5, || {
+            black_box((0..1000u32).sum::<u32>());
+        });
+        assert_eq!(m.iters, 5);
+        assert!(m.min <= m.mean);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once("id", || 42);
+        assert_eq!(v, 42);
+        assert!(dt.as_nanos() > 0);
+    }
+}

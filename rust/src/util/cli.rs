@@ -1,0 +1,136 @@
+//! Minimal CLI argument parser (clap is not vendored offline).
+//!
+//! Supports `binary <subcommand> [--key value] [--flag]`. Unknown options
+//! are reported with the valid set. Typed getters parse with error
+//! context.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: one optional subcommand + options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("empty option name '--'".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                return Err(format!("unexpected positional argument '{a}'"));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| format!("invalid value for --{name}: '{s}' ({e})")),
+        }
+    }
+
+    /// All option keys + flags seen (for unknown-option validation).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(|s| s.as_str()).chain(self.flags.iter().map(|s| s.as_str()))
+    }
+
+    /// Error unless every provided option is in `known`.
+    pub fn validate(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.keys() {
+            if !known.contains(&k) {
+                return Err(format!(
+                    "unknown option --{k}; valid options: {}",
+                    known.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = parse(&["fig4", "--seed", "7", "--verbose", "--net=resnet50"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig4"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get("net"), Some("resnet50"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getter() {
+        let a = parse(&["x", "--n", "12"]);
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 12);
+        assert_eq!(a.get_parse("m", 5usize).unwrap(), 5);
+        let bad = parse(&["x", "--n", "zzz"]);
+        assert!(bad.get_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn rejects_double_positional() {
+        assert!(Args::parse(["a".into(), "b".into()]).is_err());
+    }
+
+    #[test]
+    fn validate_unknown() {
+        let a = parse(&["x", "--bogus", "1"]);
+        assert!(a.validate(&["seed"]).is_err());
+        assert!(a.validate(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&["x", "--dry-run", "--seed", "3"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get("seed"), Some("3"));
+    }
+}

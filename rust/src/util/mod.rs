@@ -1,0 +1,12 @@
+//! Small in-tree utilities.
+//!
+//! The build environment is fully offline and only the `xla` crate closure
+//! is vendored, so the usual ecosystem crates (rand, proptest, serde,
+//! clap, criterion) are replaced by the minimal implementations here.
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng64;

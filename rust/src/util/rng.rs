@@ -1,0 +1,186 @@
+//! Deterministic PRNG (xoshiro256**) + distribution helpers.
+//!
+//! Every experiment in this repository is seeded, so figures regenerate
+//! bit-identically. The generator is Blackman/Vigna's xoshiro256**, seeded
+//! through SplitMix64 (the reference seeding procedure).
+
+/// xoshiro256** pseudo-random generator.
+#[derive(Clone, Debug)]
+pub struct Rng64 {
+    s: [u64; 4],
+    /// Cached second Box–Muller output (normal() produces pairs).
+    spare_normal: Option<f64>,
+}
+
+impl Rng64 {
+    /// Create a generator from a seed; any seed (including 0) is valid.
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 to fill the state, per the xoshiro reference code.
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()], spare_normal: None }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform u32.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style without bias correction is fine for experiment
+        // sampling; use 64-bit multiply-shift.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller. Each transform yields two
+    /// normals; the second is cached (synthetic-workload generation is a
+    /// measured hot path of the figure sweeps — EXPERIMENTS.md §Perf).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-12 {
+                let u2 = self.uniform();
+                let r = (-2.0 * u1.ln()).sqrt();
+                let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+                self.spare_normal = Some(r * s);
+                return r * c;
+            }
+        }
+    }
+
+    /// Normal with the given mean / standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Bernoulli event with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Derive an independent child generator (for per-layer / per-tile
+    /// streams that must not depend on generation order).
+    pub fn fork(&mut self, tag: u64) -> Rng64 {
+        Rng64::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng64::new(42);
+        let mut b = Rng64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng64::new(1);
+        let mut b = Rng64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_in_range_and_covers() {
+        let mut r = Rng64::new(7);
+        let mut lo = f64::MAX;
+        let mut hi = f64::MIN;
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            lo = lo.min(u);
+            hi = hi.max(u);
+        }
+        assert!(lo < 0.01 && hi > 0.99);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng64::new(11);
+        let n = 100_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng64::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn chance_extremes() {
+        let mut r = Rng64::new(5);
+        for _ in 0..100 {
+            assert!(!r.chance(0.0));
+            assert!(r.chance(1.0));
+        }
+    }
+
+    #[test]
+    fn fork_independent() {
+        let mut r = Rng64::new(9);
+        let mut c1 = r.fork(1);
+        let mut c2 = r.fork(2);
+        assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+}

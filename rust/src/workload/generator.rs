@@ -1,0 +1,196 @@
+//! Synthetic workload data (the DESIGN.md §2 substitution for trained
+//! weights and ImageNet activations).
+//!
+//! * **Weights**: He-style fan-in-scaled Gaussians clipped to [-1, 1].
+//!   This reproduces the two distributional facts the paper's Fig. 2
+//!   exploits: bf16 exponents concentrated just below the bias, mantissas
+//!   near-uniform (asserted by `stats` tests and the Fig. 2 bench).
+//! * **Activations**: post-ReLU statistics — a per-layer zero fraction
+//!   plus half-normal magnitudes for the non-zeros. The first layer of a
+//!   network sees image-like (dense, positive) values instead.
+//!
+//! Everything is seeded per (network, layer) so figures regenerate
+//! bit-identically and are independent of evaluation order.
+
+use crate::util::Rng64;
+
+use super::layer::{Layer, LayerKind};
+
+/// Deterministic per-layer RNG: seed ⊕ layer index.
+pub fn layer_rng(seed: u64, layer_idx: usize) -> Rng64 {
+    Rng64::new(seed ^ (layer_idx as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93))
+}
+
+/// Synthetic per-layer zero fraction of the *input* activations.
+///
+/// The paper (Figs. 4–5) measures 10–80 % zeros depending on the layer,
+/// with deeper layers typically sparser. We model that with a
+/// deterministic per-layer draw in [0.35, 0.80] for ReLU-fed layers and
+/// ~0 for image-fed layers.
+pub fn layer_zero_fraction(layer: &Layer, seed: u64, layer_idx: usize) -> f64 {
+    if !layer.relu_input {
+        // Image-fed stem: normalized ImageNet pixels contain a small
+        // fraction of exact zeros (saturated black regions); the paper's
+        // Figs. 4–5 likewise show a small non-zero percentage at layer 1.
+        return 0.08;
+    }
+    let mut r = layer_rng(seed ^ 0x5A5A, layer_idx);
+    0.35 + 0.45 * r.uniform()
+}
+
+/// Generate the layer's weight tensor in GEMM layout (K×N row-major,
+/// K = kh·kw·cin): fan-in-scaled Gaussian, clipped to [-1, 1] (the
+/// paper notes trained weights are bounded to this range).
+pub fn gen_weights(layer: &Layer, seed: u64, layer_idx: usize) -> Vec<f32> {
+    let mut r = layer_rng(seed ^ 0x57E1, layer_idx);
+    let g = layer.gemm();
+    let std = (2.0 / layer.fan_in() as f64).sqrt();
+    let count = match layer.kind {
+        LayerKind::Depthwise => g.k * layer.cin, // per-channel K×1 columns
+        _ => g.k * g.n,
+    };
+    (0..count)
+        .map(|_| (r.normal_ms(0.0, std)).clamp(-1.0, 1.0) as f32)
+        .collect()
+}
+
+/// Magnitude-prune a weight tensor: zero the `frac` smallest |w| values
+/// (the paper's future-work lever: "the abundance of zeros can be
+/// artificially increased in the weights by enabling weight pruning").
+pub fn prune_weights(weights: &mut [f32], frac: f64) {
+    assert!((0.0..=1.0).contains(&frac));
+    let cut = ((weights.len() as f64) * frac) as usize;
+    if cut == 0 {
+        return;
+    }
+    let mut mags: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+    mags.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let threshold = mags[cut - 1];
+    let mut zeroed = 0usize;
+    for w in weights.iter_mut() {
+        if w.abs() <= threshold && zeroed < cut {
+            *w = 0.0;
+            zeroed += 1;
+        }
+    }
+}
+
+/// Generate a single-image NHWC feature map for the layer's input:
+/// image-like for the stem, post-ReLU-like elsewhere.
+pub fn gen_feature_map(layer: &Layer, seed: u64, layer_idx: usize) -> Vec<f32> {
+    let mut r = layer_rng(seed ^ 0xFEED, layer_idx);
+    let zf = layer_zero_fraction(layer, seed, layer_idx);
+    let count = layer.h * layer.w * layer.cin;
+    (0..count)
+        .map(|_| {
+            if layer.relu_input {
+                if r.chance(zf) {
+                    0.0
+                } else {
+                    // half-normal magnitudes, like ReLU(N(0, σ))
+                    (r.normal().abs() * 0.5) as f32
+                }
+            } else if r.chance(zf) {
+                // saturated black pixels normalize to exactly zero
+                0.0
+            } else {
+                // normalized image pixels: roughly N(0,1) clipped
+                (r.normal().clamp(-2.5, 2.5)) as f32
+            }
+        })
+        .collect()
+}
+
+/// Measured zero fraction of a feature map (sanity/reporting).
+pub fn zero_fraction(values: &[f32]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().filter(|&&v| v == 0.0).count() as f64 / values.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::resnet50;
+
+    #[test]
+    fn deterministic_per_layer() {
+        let net = resnet50();
+        let w1 = gen_weights(&net.layers[3], 7, 3);
+        let w2 = gen_weights(&net.layers[3], 7, 3);
+        assert_eq!(w1, w2);
+        let w3 = gen_weights(&net.layers[3], 8, 3);
+        assert_ne!(w1, w3);
+    }
+
+    #[test]
+    fn weights_bounded_and_scaled() {
+        let net = resnet50();
+        let l = &net.layers[5];
+        let w = gen_weights(l, 42, 5);
+        assert_eq!(w.len(), l.gemm().k * l.gemm().n);
+        assert!(w.iter().all(|v| (-1.0..=1.0).contains(v)));
+        let std = (w.iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+            / w.len() as f64)
+            .sqrt();
+        let want = (2.0 / l.fan_in() as f64).sqrt();
+        assert!((std - want).abs() / want < 0.1, "std {std} vs {want}");
+    }
+
+    #[test]
+    fn feature_map_zero_fraction_matches_model() {
+        let net = resnet50();
+        let l = &net.layers[10];
+        let fm = gen_feature_map(l, 11, 10);
+        let want = layer_zero_fraction(l, 11, 10);
+        let got = zero_fraction(&fm);
+        assert!((got - want).abs() < 0.03, "{got} vs {want}");
+        assert!(fm.iter().all(|&v| v >= 0.0), "ReLU outputs nonneg");
+    }
+
+    #[test]
+    fn prune_weights_zeros_exact_fraction() {
+        let net = resnet50();
+        let mut w = gen_weights(&net.layers[5], 1, 5);
+        let n = w.len();
+        prune_weights(&mut w, 0.6);
+        let zeros = w.iter().filter(|&&v| v == 0.0).count();
+        assert!((zeros as f64 / n as f64 - 0.6).abs() < 0.01, "{zeros}/{n}");
+        // survivors are the largest magnitudes
+        let max_zeroed = 0.0f32; // all zeroed entries are exactly 0 now
+        let min_kept = w
+            .iter()
+            .filter(|&&v| v != 0.0)
+            .map(|v| v.abs())
+            .fold(f32::MAX, f32::min);
+        assert!(min_kept > max_zeroed);
+    }
+
+    #[test]
+    fn prune_zero_frac_is_noop() {
+        let net = resnet50();
+        let mut w = gen_weights(&net.layers[5], 1, 5);
+        let orig = w.clone();
+        prune_weights(&mut w, 0.0);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn stem_input_is_nearly_dense() {
+        let net = resnet50();
+        let fm = gen_feature_map(&net.layers[0], 1, 0);
+        let z = zero_fraction(&fm);
+        assert!((0.04..0.13).contains(&z), "stem zeros {z}");
+        assert_eq!(layer_zero_fraction(&net.layers[0], 1, 0), 0.08);
+    }
+
+    #[test]
+    fn zero_fraction_range_is_papers() {
+        let net = resnet50();
+        for (i, l) in net.layers.iter().enumerate().skip(1) {
+            let z = layer_zero_fraction(l, 100, i);
+            assert!((0.35..=0.80).contains(&z), "layer {i}: {z}");
+        }
+    }
+}

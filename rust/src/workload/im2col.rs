@@ -1,0 +1,116 @@
+//! im2col lowering: NHWC feature map → GEMM A-matrix.
+//!
+//! Patch features are ordered (kh, kw, c) — bit-for-bit the same layout
+//! as `python/compile/model.py::im2col` (pytest pins the python side;
+//! `rust/tests/integration_runtime.rs` pins the cross-language
+//! agreement through the XLA artifacts).
+
+/// SAME-padding amounts (top/left biased like XLA): returns
+/// (pad_begin, pad_end) for one spatial dim.
+pub fn same_padding(size: usize, k: usize, stride: usize) -> (usize, usize) {
+    let out = size.div_ceil(stride);
+    let needed = ((out - 1) * stride + k).saturating_sub(size);
+    (needed / 2, needed - needed / 2)
+}
+
+/// Lower one single-image NHWC feature map (h×w×c, row-major) to the
+/// im2col matrix (M×K, M = oh·ow, K = kh·kw·c) under SAME padding.
+pub fn im2col_same(
+    fm: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+) -> Vec<f32> {
+    assert_eq!(fm.len(), h * w * c, "feature map shape");
+    let (ph, _) = same_padding(h, kh, stride);
+    let (pw, _) = same_padding(w, kw, stride);
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    let kdim = kh * kw * c;
+    let mut out = vec![0f32; oh * ow * kdim];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = &mut out[(oy * ow + ox) * kdim..(oy * ow + ox + 1) * kdim];
+            for ky in 0..kh {
+                let iy = (oy * stride + ky) as isize - ph as isize;
+                for kx in 0..kw {
+                    let ix = (ox * stride + kx) as isize - pw as isize;
+                    let dst = &mut row[(ky * kw + kx) * c..(ky * kw + kx + 1) * c];
+                    if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                        let src =
+                            &fm[(iy as usize * w + ix as usize) * c..][..c];
+                        dst.copy_from_slice(src);
+                    }
+                    // else: stays zero (padding)
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extract channel `ch` of an NHWC feature map as a single-channel map
+/// (for depthwise lowering).
+pub fn extract_channel(fm: &[f32], h: usize, w: usize, c: usize, ch: usize) -> Vec<f32> {
+    assert!(ch < c);
+    (0..h * w).map(|p| fm[p * c + ch]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_matches_xla_convention() {
+        assert_eq!(same_padding(32, 3, 1), (1, 1));
+        assert_eq!(same_padding(32, 3, 2), (0, 1));
+        assert_eq!(same_padding(224, 7, 2), (2, 3));
+        assert_eq!(same_padding(5, 1, 1), (0, 0));
+    }
+
+    #[test]
+    fn ordering_matches_python_side() {
+        // Mirror of python/tests/test_model.py::test_im2col_ordering:
+        // 1×2×2×2 input, 2×2 kernel VALID-equivalent (SAME with even k
+        // pads at the end; centre patch picks the raw values in order).
+        let fm: Vec<f32> = (0..8).map(|x| x as f32).collect(); // 2x2x2
+        let a = im2col_same(&fm, 2, 2, 2, 2, 2, 1);
+        // oh=ow=2; patch (0,0) covers the full map with no padding:
+        // ordered (kh,kw,c) = 0,1,2,...,7
+        assert_eq!(&a[0..8], &[0., 1., 2., 3., 4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn identity_conv_1x1() {
+        // 1×1 conv im2col is the feature map itself, row-major.
+        let fm: Vec<f32> = (0..3 * 3 * 4).map(|x| x as f32 * 0.5).collect();
+        let a = im2col_same(&fm, 3, 3, 4, 1, 1, 1);
+        assert_eq!(a, fm);
+    }
+
+    #[test]
+    fn stride_two_shape() {
+        let fm = vec![1f32; 8 * 8 * 2];
+        let a = im2col_same(&fm, 8, 8, 2, 3, 3, 2);
+        assert_eq!(a.len(), 4 * 4 * 9 * 2);
+    }
+
+    #[test]
+    fn padding_contributes_zeros() {
+        let fm = vec![1f32; 4 * 4];
+        let a = im2col_same(&fm, 4, 4, 1, 3, 3, 1);
+        // corner patch (0,0): top row + left col of the 3x3 window are pad
+        let first = &a[0..9];
+        assert_eq!(first, &[0., 0., 0., 0., 1., 1., 0., 1., 1.]);
+    }
+
+    #[test]
+    fn extract_channel_works() {
+        let fm: Vec<f32> = (0..2 * 2 * 3).map(|x| x as f32).collect();
+        let c1 = extract_channel(&fm, 2, 2, 3, 1);
+        assert_eq!(c1, vec![1., 4., 7., 10.]);
+    }
+}

@@ -1,0 +1,224 @@
+//! CNN layer descriptors and their GEMM lowering.
+
+/// Kind of CNN layer, as it maps onto the SA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Standard convolution (kh×kw×cin per output channel).
+    Conv,
+    /// Depthwise convolution (one kh×kw filter per channel; lowers to
+    /// `cin` independent skinny GEMMs — a known poor fit for SAs).
+    Depthwise,
+    /// Fully connected (M=1 GEMM).
+    Dense,
+}
+
+/// One layer of a CNN, with everything needed to lower it to GEMM.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    /// Human-readable name (matches the x-axis labels of Figs. 4–5).
+    pub name: String,
+    pub kind: LayerKind,
+    /// Kernel height/width (1 for Dense).
+    pub kh: usize,
+    pub kw: usize,
+    /// Input / output channels (for Depthwise, cout == cin).
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    /// Input spatial size (square feature maps; 1 for Dense).
+    pub h: usize,
+    pub w: usize,
+    /// Whether this layer's inputs come from a ReLU (zero-rich) — drives
+    /// the synthetic activation generator and matches the paper's
+    /// zero-percentage plots.
+    pub relu_input: bool,
+}
+
+/// GEMM problem dimensions after im2col lowering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl GemmShape {
+    pub fn macs(&self) -> u64 {
+        (self.m * self.k * self.n) as u64
+    }
+}
+
+impl Layer {
+    pub fn conv(
+        name: &str,
+        kh: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        h: usize,
+        relu_input: bool,
+    ) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            kh,
+            kw: kh,
+            cin,
+            cout,
+            stride,
+            h,
+            w: h,
+            relu_input,
+        }
+    }
+
+    pub fn depthwise(name: &str, c: usize, stride: usize, h: usize) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Depthwise,
+            kh: 3,
+            kw: 3,
+            cin: c,
+            cout: c,
+            stride,
+            h,
+            w: h,
+            relu_input: true,
+        }
+    }
+
+    pub fn dense(name: &str, cin: usize, cout: usize) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Dense,
+            kh: 1,
+            kw: 1,
+            cin,
+            cout,
+            stride: 1,
+            h: 1,
+            w: 1,
+            relu_input: true,
+        }
+    }
+
+    /// Output spatial size under SAME padding.
+    pub fn out_h(&self) -> usize {
+        self.h.div_ceil(self.stride)
+    }
+
+    pub fn out_w(&self) -> usize {
+        self.w.div_ceil(self.stride)
+    }
+
+    /// The GEMM this layer lowers to (per channel for Depthwise).
+    pub fn gemm(&self) -> GemmShape {
+        match self.kind {
+            LayerKind::Conv => GemmShape {
+                m: self.out_h() * self.out_w(),
+                k: self.kh * self.kw * self.cin,
+                n: self.cout,
+            },
+            LayerKind::Depthwise => GemmShape {
+                m: self.out_h() * self.out_w(),
+                k: self.kh * self.kw,
+                n: 1,
+            },
+            LayerKind::Dense => GemmShape { m: 1, k: self.cin, n: self.cout },
+        }
+    }
+
+    /// Number of independent GEMMs (channels for Depthwise, else 1).
+    pub fn gemm_count(&self) -> usize {
+        match self.kind {
+            LayerKind::Depthwise => self.cin,
+            _ => 1,
+        }
+    }
+
+    /// Total multiply-accumulates of the layer.
+    pub fn macs(&self) -> u64 {
+        self.gemm().macs() * self.gemm_count() as u64
+    }
+
+    /// Weight parameter count.
+    pub fn params(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv => (self.kh * self.kw * self.cin * self.cout) as u64,
+            LayerKind::Depthwise => (self.kh * self.kw * self.cin) as u64,
+            LayerKind::Dense => (self.cin * self.cout) as u64,
+        }
+    }
+
+    /// Fan-in (for He-style synthetic weight scaling).
+    pub fn fan_in(&self) -> usize {
+        match self.kind {
+            LayerKind::Depthwise => self.kh * self.kw,
+            _ => self.kh * self.kw * self.cin,
+        }
+    }
+}
+
+/// A whole network: named layer list.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    pub fn by_name(name: &str) -> Option<Network> {
+        match name {
+            "resnet50" => Some(super::resnet50()),
+            "mobilenet" => Some(super::mobilenet_v1()),
+            "tinycnn" => Some(super::tinycnn()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_gemm_lowering() {
+        let l = Layer::conv("c", 3, 64, 128, 2, 56, true);
+        let g = l.gemm();
+        assert_eq!(g, GemmShape { m: 28 * 28, k: 3 * 3 * 64, n: 128 });
+        assert_eq!(l.macs(), (28 * 28 * 576 * 128) as u64);
+        assert_eq!(l.gemm_count(), 1);
+    }
+
+    #[test]
+    fn depthwise_lowering() {
+        let l = Layer::depthwise("dw", 256, 1, 14);
+        assert_eq!(l.gemm(), GemmShape { m: 196, k: 9, n: 1 });
+        assert_eq!(l.gemm_count(), 256);
+        assert_eq!(l.fan_in(), 9);
+        assert_eq!(l.params(), 9 * 256);
+    }
+
+    #[test]
+    fn dense_lowering() {
+        let l = Layer::dense("fc", 2048, 1000);
+        assert_eq!(l.gemm(), GemmShape { m: 1, k: 2048, n: 1000 });
+        assert_eq!(l.params(), 2048 * 1000);
+    }
+
+    #[test]
+    fn same_padding_output() {
+        let l = Layer::conv("c", 7, 3, 64, 2, 224, false);
+        assert_eq!(l.out_h(), 112);
+        let s1 = Layer::conv("c", 3, 8, 8, 1, 15, true);
+        assert_eq!(s1.out_h(), 15);
+    }
+}

@@ -1,0 +1,88 @@
+//! MobileNet v1 layer table (Howard et al., 2017), ImageNet 224×224 —
+//! the paper's second evaluation workload.
+//!
+//! Standard 3×3/2 stem, then 13 depthwise-separable pairs (depthwise 3×3
+//! + pointwise 1×1), then the classifier. 27 conv layers + fc.
+
+use super::layer::{Layer, Network};
+
+/// (depthwise stride, pointwise cout, input spatial size, cin).
+const PAIRS: [(usize, usize, usize, usize); 13] = [
+    (1, 64, 112, 32),
+    (2, 128, 112, 64),
+    (1, 128, 56, 128),
+    (2, 256, 56, 128),
+    (1, 256, 28, 256),
+    (2, 512, 28, 256),
+    (1, 512, 14, 512),
+    (1, 512, 14, 512),
+    (1, 512, 14, 512),
+    (1, 512, 14, 512),
+    (1, 512, 14, 512),
+    (2, 1024, 14, 512),
+    (1, 1024, 7, 1024),
+];
+
+/// Build the full MobileNet v1 (1.0, 224) layer list.
+pub fn mobilenet_v1() -> Network {
+    let mut layers = Vec::new();
+    layers.push(Layer::conv("conv1", 3, 3, 32, 2, 224, false));
+    for (i, &(s, cout, h, cin)) in PAIRS.iter().enumerate() {
+        let n = i + 1;
+        layers.push(Layer::depthwise(&format!("dw{n}"), cin, s, h));
+        let out_h = h.div_ceil(s);
+        layers.push(Layer::conv(&format!("pw{n}"), 1, cin, cout, 1, out_h, true));
+    }
+    layers.push(Layer::dense("fc", 1024, 1000));
+    Network { name: "mobilenet".into(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::LayerKind;
+
+    #[test]
+    fn layer_counts() {
+        let net = mobilenet_v1();
+        assert_eq!(net.layers.len(), 28); // 1 stem + 13 dw + 13 pw + fc
+        let dw = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Depthwise)
+            .count();
+        assert_eq!(dw, 13);
+    }
+
+    #[test]
+    fn channel_chain_consistent() {
+        let net = mobilenet_v1();
+        let mut cin = 32;
+        for l in net.layers.iter().skip(1) {
+            match l.kind {
+                LayerKind::Depthwise => {
+                    assert_eq!(l.cin, cin, "layer {}", l.name);
+                }
+                LayerKind::Conv | LayerKind::Dense => {
+                    assert_eq!(l.cin, cin, "layer {}", l.name);
+                    cin = l.cout;
+                }
+            }
+        }
+        assert_eq!(cin, 1000);
+    }
+
+    #[test]
+    fn param_count_close_to_reference() {
+        // MobileNet v1 1.0/224: ~4.2M params (convs + fc, no BN).
+        let p = mobilenet_v1().total_params();
+        assert!((3_800_000..4_600_000).contains(&p), "params {p}");
+    }
+
+    #[test]
+    fn mac_count_close_to_reference() {
+        // ~569 MMACs at 224×224.
+        let m = mobilenet_v1().total_macs();
+        assert!((480_000_000..650_000_000).contains(&m), "macs {m}");
+    }
+}

@@ -1,0 +1,26 @@
+//! CNN workloads: layer tables, synthetic data generation, im2col
+//! lowering and GEMM tiling.
+//!
+//! The paper evaluates complete ResNet50 and MobileNet inference
+//! (ImageNet resolution, Bfloat16). The real trained weights and test
+//! images are substituted per DESIGN.md §2: fan-in-scaled synthetic
+//! weights (which reproduce the Fig. 2 exponent/mantissa distributions)
+//! and post-ReLU-statistics synthetic activations with per-layer zero
+//! fractions. Every layer of both networks is lowered to GEMM exactly as
+//! a real SA compiler would (im2col), then tiled to the 16×16 array.
+
+mod generator;
+mod im2col;
+mod layer;
+mod mobilenet;
+mod resnet50;
+mod tiler;
+mod tinycnn;
+
+pub use generator::*;
+pub use im2col::*;
+pub use layer::*;
+pub use mobilenet::*;
+pub use resnet50::*;
+pub use tiler::*;
+pub use tinycnn::*;

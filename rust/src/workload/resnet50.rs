@@ -1,0 +1,129 @@
+//! ResNet50 layer table (He et al., CVPR 2016; v1.5 stride placement),
+//! ImageNet 224×224 input — the paper's first evaluation workload.
+//!
+//! 53 convolutions (including the downsample projections) + the final
+//! fully-connected layer. Spatial sizes follow conv1 (112) → maxpool
+//! (56) → stages at 56/28/14/7.
+
+use super::layer::{Layer, Network};
+
+/// Bottleneck stage description: (blocks, mid channels, out channels,
+/// input spatial size, first-block stride).
+const STAGES: [(usize, usize, usize, usize, usize); 4] = [
+    (3, 64, 256, 56, 1),
+    (4, 128, 512, 56, 2),
+    (6, 256, 1024, 28, 2),
+    (3, 512, 2048, 14, 2),
+];
+
+/// Build the full ResNet50 layer list.
+pub fn resnet50() -> Network {
+    let mut layers = Vec::new();
+    // conv1: 7×7/2, 3→64, on the raw image (not ReLU input).
+    layers.push(Layer::conv("conv1", 7, 3, 64, 2, 224, false));
+
+    let mut cin = 64; // after maxpool, 56×56×64
+    for (si, &(blocks, mid, cout, in_h, stride1)) in STAGES.iter().enumerate() {
+        let stage = si + 2; // conv2_x .. conv5_x
+        let mut h = in_h;
+        for b in 0..blocks {
+            let stride = if b == 0 { stride1 } else { 1 };
+            let prefix = format!("conv{stage}_{}", b + 1);
+            // v1.5: stride lives in the 3×3 middle conv.
+            layers.push(Layer::conv(&format!("{prefix}a"), 1, cin, mid, 1, h, true));
+            layers.push(Layer::conv(
+                &format!("{prefix}b"),
+                3,
+                mid,
+                mid,
+                stride,
+                h,
+                true,
+            ));
+            let out_h = h.div_ceil(stride);
+            layers.push(Layer::conv(
+                &format!("{prefix}c"),
+                1,
+                mid,
+                cout,
+                1,
+                out_h,
+                true,
+            ));
+            if b == 0 {
+                // projection shortcut
+                layers.push(Layer::conv(
+                    &format!("{prefix}p"),
+                    1,
+                    cin,
+                    cout,
+                    stride,
+                    h,
+                    true,
+                ));
+            }
+            cin = cout;
+            h = out_h;
+        }
+    }
+    layers.push(Layer::dense("fc", 2048, 1000));
+    Network { name: "resnet50".into(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::LayerKind;
+
+    #[test]
+    fn layer_count_matches_architecture() {
+        let net = resnet50();
+        // 1 stem + Σ blocks(3 convs) + 4 projections + 1 fc
+        let convs = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Conv)
+            .count();
+        assert_eq!(convs, 1 + (3 + 4 + 6 + 3) * 3 + 4); // = 53
+        assert_eq!(net.layers.len(), 54);
+    }
+
+    #[test]
+    fn param_count_close_to_reference() {
+        // torchvision resnet50 has ~25.6M params; conv+fc (no BN/bias)
+        // is ~25.5M.
+        let p = resnet50().total_params();
+        assert!(
+            (24_000_000..27_000_000).contains(&p),
+            "params {p}"
+        );
+    }
+
+    #[test]
+    fn mac_count_close_to_reference() {
+        // ~4.1 GMACs at 224×224.
+        let m = resnet50().total_macs();
+        assert!(
+            (3_600_000_000..4_600_000_000).contains(&m),
+            "macs {m}"
+        );
+    }
+
+    #[test]
+    fn spatial_chain_is_consistent() {
+        let net = resnet50();
+        // conv2_1a expects 56×56 input, conv5 last block 7×7 output
+        let c21a = net.layers.iter().find(|l| l.name == "conv2_1a").unwrap();
+        assert_eq!(c21a.h, 56);
+        let c53c = net.layers.iter().find(|l| l.name == "conv5_3c").unwrap();
+        assert_eq!(c53c.h, 7);
+        assert_eq!(c53c.cout, 2048);
+    }
+
+    #[test]
+    fn first_layer_is_not_relu_fed() {
+        let net = resnet50();
+        assert!(!net.layers[0].relu_input);
+        assert!(net.layers[1].relu_input);
+    }
+}

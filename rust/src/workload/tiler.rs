@@ -1,0 +1,215 @@
+//! GEMM tiling onto the physical SA, plus the sampled layer analysis
+//! used by the figure sweeps.
+//!
+//! Output-stationary tiling: the M and N dimensions are cut into
+//! rows×cols blocks (padded with zeros at the edges — padding rows/cols
+//! stream zeros, which the simulators handle like any other value); the
+//! K dimension streams through the array unbounded.
+//!
+//! Full per-layer GEMMs reach billions of MAC slots; like the paper's
+//! own 100-image sampling, the sweeps analyze a deterministic sample of
+//! tiles per layer and scale, with the sample size configurable
+//! (`TilePlan::sample`).
+
+use crate::bf16::Bf16;
+use crate::sa::Tile;
+use crate::util::Rng64;
+
+use super::layer::GemmShape;
+
+/// A GEMM instance in f32 (row-major A: M×K, B: K×N).
+#[derive(Clone, Debug)]
+pub struct Gemm {
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub shape: GemmShape,
+}
+
+impl Gemm {
+    pub fn new(a: Vec<f32>, b: Vec<f32>, shape: GemmShape) -> Self {
+        assert_eq!(a.len(), shape.m * shape.k);
+        assert_eq!(b.len(), shape.k * shape.n);
+        Gemm { a, b, shape }
+    }
+}
+
+/// The tile grid of a GEMM on a rows×cols SA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileGrid {
+    pub m_tiles: usize,
+    pub n_tiles: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl TileGrid {
+    pub fn of(shape: GemmShape, rows: usize, cols: usize) -> Self {
+        TileGrid {
+            m_tiles: shape.m.div_ceil(rows),
+            n_tiles: shape.n.div_ceil(cols),
+            rows,
+            cols,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.m_tiles * self.n_tiles
+    }
+}
+
+/// Extract tile (mi, ni) of a GEMM at *partial occupancy*: edge tiles
+/// use only the rows/columns that carry real data (m_eff × k × n_eff).
+/// Unused PE rows/columns of the physical array are clock-gated off
+/// identically in every design variant, so modelling them would only add
+/// an equal constant to both sides — and padding them with zeros instead
+/// would let ZVCG "save" power on data that never exists.
+pub fn extract_tile(g: &Gemm, grid: &TileGrid, mi: usize, ni: usize) -> Tile {
+    assert!(mi < grid.m_tiles && ni < grid.n_tiles);
+    let k = g.shape.k;
+    let m_eff = grid.rows.min(g.shape.m - mi * grid.rows);
+    let n_eff = grid.cols.min(g.shape.n - ni * grid.cols);
+    let mut a = vec![Bf16::ZERO; m_eff * k];
+    for r in 0..m_eff {
+        let src_row = mi * grid.rows + r;
+        for c in 0..k {
+            a[r * k + c] = Bf16::from_f32(g.a[src_row * g.shape.k + c]);
+        }
+    }
+    let mut b = vec![Bf16::ZERO; k * n_eff];
+    for r in 0..k {
+        for c in 0..n_eff {
+            let src_col = ni * grid.cols + c;
+            b[r * n_eff + c] = Bf16::from_f32(g.b[r * g.shape.n + src_col]);
+        }
+    }
+    Tile::new(a, b, m_eff, k, n_eff)
+}
+
+/// Which tiles of a grid to analyze: all, or a deterministic sample.
+#[derive(Clone, Debug)]
+pub struct TilePlan {
+    /// (mi, ni) pairs to run.
+    pub picks: Vec<(usize, usize)>,
+    /// Scale factor total_tiles / picked_tiles for extrapolating energy.
+    pub scale: f64,
+}
+
+impl TilePlan {
+    /// Every tile, scale 1.
+    pub fn exhaustive(grid: &TileGrid) -> Self {
+        let picks = (0..grid.m_tiles)
+            .flat_map(|mi| (0..grid.n_tiles).map(move |ni| (mi, ni)))
+            .collect::<Vec<_>>();
+        TilePlan { picks, scale: 1.0 }
+    }
+
+    /// A deterministic sample of at most `max_tiles` tiles (without
+    /// replacement), scale = total/picked.
+    pub fn sample(grid: &TileGrid, max_tiles: usize, seed: u64) -> Self {
+        let total = grid.total();
+        if total <= max_tiles {
+            return Self::exhaustive(grid);
+        }
+        let mut rng = Rng64::new(seed ^ 0x7117);
+        // partial Fisher–Yates over the flattened index space
+        let mut indices: Vec<usize> = (0..total).collect();
+        for i in 0..max_tiles {
+            let j = i + rng.below(total - i);
+            indices.swap(i, j);
+        }
+        let picks = indices[..max_tiles]
+            .iter()
+            .map(|&f| (f / grid.n_tiles, f % grid.n_tiles))
+            .collect();
+        TilePlan { picks, scale: total as f64 / max_tiles as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::GemmShape;
+
+    fn small_gemm() -> Gemm {
+        let shape = GemmShape { m: 5, k: 3, n: 7 };
+        let a: Vec<f32> = (0..15).map(|x| x as f32).collect();
+        let b: Vec<f32> = (0..21).map(|x| x as f32 * 0.5).collect();
+        Gemm::new(a, b, shape)
+    }
+
+    #[test]
+    fn grid_covers_with_padding() {
+        let g = TileGrid::of(GemmShape { m: 33, k: 10, n: 16 }, 16, 16);
+        assert_eq!((g.m_tiles, g.n_tiles), (3, 1));
+        assert_eq!(g.total(), 3);
+    }
+
+    #[test]
+    fn extract_tile_uses_partial_occupancy_at_edges() {
+        let g = small_gemm();
+        let grid = TileGrid::of(g.shape, 4, 4);
+        assert_eq!((grid.m_tiles, grid.n_tiles), (2, 2));
+        // interior tile: full occupancy
+        let t00 = extract_tile(&g, &grid, 0, 0);
+        assert_eq!((t00.m, t00.k, t00.n), (4, 3, 4));
+        // edge tile: only the real 1 row × 3 cols
+        let t = extract_tile(&g, &grid, 1, 1);
+        assert_eq!((t.m, t.k, t.n), (1, 3, 3));
+        assert_eq!(t.a_at(0, 0).to_f32(), 12.0);
+        assert_eq!(t.b_at(0, 0).to_f32(), 2.0);
+    }
+
+    #[test]
+    fn tiled_results_reassemble_to_full_gemm() {
+        let g = small_gemm();
+        let grid = TileGrid::of(g.shape, 4, 4);
+        // reference full result
+        let a16: Vec<Bf16> = g.a.iter().map(|&x| Bf16::from_f32(x)).collect();
+        let b16: Vec<Bf16> = g.b.iter().map(|&x| Bf16::from_f32(x)).collect();
+        let full =
+            crate::bf16::matmul_f32acc(&a16, &b16, g.shape.m, g.shape.k, g.shape.n);
+        let mut seen = 0usize;
+        for mi in 0..grid.m_tiles {
+            for ni in 0..grid.n_tiles {
+                let t = extract_tile(&g, &grid, mi, ni);
+                let c = t.reference_result();
+                for r in 0..t.m {
+                    for cc in 0..t.n {
+                        let (gr, gc) = (mi * 4 + r, ni * 4 + cc);
+                        let want = full[gr * g.shape.n + gc];
+                        assert_eq!(c[r * t.n + cc], want, "({gr},{gc})");
+                        seen += 1;
+                    }
+                }
+            }
+        }
+        // partial-occupancy tiles must still cover every output element
+        assert_eq!(seen, g.shape.m * g.shape.n);
+    }
+
+    #[test]
+    fn sample_is_deterministic_and_in_range() {
+        let grid = TileGrid::of(GemmShape { m: 640, k: 8, n: 640 }, 16, 16);
+        let p1 = TilePlan::sample(&grid, 10, 99);
+        let p2 = TilePlan::sample(&grid, 10, 99);
+        assert_eq!(p1.picks, p2.picks);
+        assert_eq!(p1.picks.len(), 10);
+        assert!((p1.scale - 160.0).abs() < 1e-9);
+        for &(mi, ni) in &p1.picks {
+            assert!(mi < grid.m_tiles && ni < grid.n_tiles);
+        }
+        // without replacement
+        let mut seen = p1.picks.clone();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 10);
+    }
+
+    #[test]
+    fn small_grid_is_exhaustive() {
+        let grid = TileGrid::of(GemmShape { m: 20, k: 4, n: 20 }, 16, 16);
+        let p = TilePlan::sample(&grid, 100, 1);
+        assert_eq!(p.picks.len(), grid.total());
+        assert_eq!(p.scale, 1.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! TinyConvNet: the e2e demo workload, mirrored layer-for-layer from
+//! `python/compile/model.py` (the AOT artifact `tinycnn_forward`).
+
+use super::layer::{Layer, Network};
+
+/// (kernel, cin, cout, stride, input spatial) — must match
+/// `model.TINYCNN_CONVS` in python/compile/model.py.
+pub const TINYCNN_CONVS: [(usize, usize, usize, usize, usize); 5] = [
+    (3, 3, 16, 1, 32),
+    (3, 16, 32, 2, 32),
+    (3, 32, 32, 1, 16),
+    (3, 32, 64, 2, 16),
+    (3, 64, 64, 1, 8),
+];
+
+pub const TINYCNN_CLASSES: usize = 10;
+pub const TINYCNN_INPUT_HW: usize = 32;
+pub const TINYCNN_INPUT_C: usize = 3;
+
+/// Build the TinyConvNet layer list (5 convs + fc head).
+pub fn tinycnn() -> Network {
+    let mut layers = Vec::new();
+    for (i, &(k, cin, cout, s, h)) in TINYCNN_CONVS.iter().enumerate() {
+        layers.push(Layer::conv(&format!("conv{}", i + 1), k, cin, cout, s, h, i > 0));
+    }
+    layers.push(Layer::dense("fc", 64, TINYCNN_CLASSES));
+    Network { name: "tinycnn".into(), layers }
+}
+
+/// Parameter shapes of the forward artifact, in argument order (conv
+/// weights HWIO, then fc weight, then fc bias) — must match
+/// `model.tinycnn_param_shapes()`.
+pub fn tinycnn_param_shapes() -> Vec<Vec<usize>> {
+    let mut shapes: Vec<Vec<usize>> = TINYCNN_CONVS
+        .iter()
+        .map(|&(k, cin, cout, _, _)| vec![k, k, cin, cout])
+        .collect();
+    shapes.push(vec![64, TINYCNN_CLASSES]);
+    shapes.push(vec![TINYCNN_CLASSES]);
+    shapes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spatial_chain() {
+        let net = tinycnn();
+        assert_eq!(net.layers[0].out_h(), 32);
+        assert_eq!(net.layers[1].out_h(), 16);
+        assert_eq!(net.layers[3].out_h(), 8);
+        assert_eq!(net.layers[4].out_h(), 8);
+    }
+
+    #[test]
+    fn param_shapes_match_python_side() {
+        let shapes = tinycnn_param_shapes();
+        assert_eq!(shapes.len(), 7);
+        assert_eq!(shapes[0], vec![3, 3, 3, 16]);
+        assert_eq!(shapes[4], vec![3, 3, 64, 64]);
+        assert_eq!(shapes[5], vec![64, 10]);
+        assert_eq!(shapes[6], vec![10]);
+    }
+}

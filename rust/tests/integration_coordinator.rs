@@ -1,0 +1,133 @@
+//! Integration: the e2e inference server (XLA forward pass) + SA power
+//! analysis on real activations, plus rust↔XLA functional cross-checks.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use std::path::PathBuf;
+
+use sa_lowpower::bf16::{matmul_f32acc, Bf16};
+use sa_lowpower::coordinator::{
+    analyze_layer_with_data, paper_configs, synthetic_image, AnalysisOptions,
+    InferenceServer, TinycnnParams,
+};
+use sa_lowpower::workload::{im2col_same, tinycnn};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifact_dir() {
+            Some(d) => d,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn inference_server_end_to_end() {
+    let dir = require_artifacts!();
+    let params = TinycnnParams::generate(7);
+    let server = InferenceServer::start(&dir, params).unwrap();
+
+    let resp = server.infer(synthetic_image(1)).unwrap();
+    assert_eq!(resp.logits.len(), 10);
+    assert!(resp.logits.iter().all(|v| v.is_finite()));
+    assert_eq!(resp.activations.len(), 5);
+    // ReLU invariants + emergent sparsity
+    for (i, a) in resp.activations.iter().enumerate() {
+        assert!(a.iter().all(|&v| v >= 0.0), "act {i} negative");
+    }
+    for (i, &z) in resp.zero_fractions.iter().enumerate() {
+        assert!((0.1..0.9).contains(&z), "act {i} zero frac {z}");
+    }
+    assert_eq!(server.metrics.requests(), 1);
+}
+
+#[test]
+fn inference_is_deterministic() {
+    let dir = require_artifacts!();
+    let server = InferenceServer::start(&dir, TinycnnParams::generate(3)).unwrap();
+    let r1 = server.infer(synthetic_image(9)).unwrap();
+    let r2 = server.infer(synthetic_image(9)).unwrap();
+    assert_eq!(r1.logits, r2.logits);
+    assert_eq!(r1.activations, r2.activations);
+}
+
+#[test]
+fn rust_gemm_matches_xla_layer1_activation() {
+    // Cross-language functional check: layer-1 conv computed in rust
+    // (im2col + bf16 matmul) must match the XLA artifact's activation.
+    let dir = require_artifacts!();
+    let params = TinycnnParams::generate(5);
+    let server = InferenceServer::start(&dir, params.clone()).unwrap();
+    let image = synthetic_image(2);
+    let resp = server.infer(image.clone()).unwrap();
+
+    let net = tinycnn();
+    let l = &net.layers[0]; // conv1: 3x3, 3->16, s1, 32x32
+    let a = im2col_same(&image, l.h, l.w, l.cin, l.kh, l.kw, l.stride);
+    let g = l.gemm();
+    let a16: Vec<Bf16> = a.iter().map(|&x| Bf16::from_f32(x)).collect();
+    let b16: Vec<Bf16> = params.gemm_weights(0).iter().map(|&x| Bf16::from_f32(x)).collect();
+    let c = matmul_f32acc(&a16, &b16, g.m, g.k, g.n);
+
+    let xla_act = &resp.activations[0]; // post-ReLU NHWC
+    assert_eq!(xla_act.len(), c.len());
+    let mut max_err = 0f32;
+    for (got, want) in c.iter().zip(xla_act) {
+        let relu = got.max(0.0);
+        max_err = max_err.max((relu - want).abs());
+    }
+    assert!(max_err < 2e-2, "rust vs XLA layer-1 max err {max_err}");
+}
+
+#[test]
+fn power_on_real_activations_shows_savings() {
+    let dir = require_artifacts!();
+    let params = TinycnnParams::generate(11);
+    let server = InferenceServer::start(&dir, params.clone()).unwrap();
+    let image = synthetic_image(4);
+    let resp = server.infer(image.clone()).unwrap();
+
+    let net = tinycnn();
+    let opts = AnalysisOptions { max_tiles_per_layer: 8, ..Default::default() };
+    // layer 2 input = activation 1 (real, ~50 % zeros from ReLU)
+    let rep = analyze_layer_with_data(
+        &net.layers[1],
+        1,
+        resp.activations[0].clone(),
+        params.gemm_weights(1).to_vec(),
+        &paper_configs(),
+        &opts,
+    );
+    assert!(rep.input_zero_frac > 0.2, "zeros {}", rep.input_zero_frac);
+    let s = rep.savings_pct("baseline", "proposed").unwrap();
+    assert!(s > 1.0, "savings on real activations: {s}%");
+}
+
+#[test]
+fn server_handles_concurrent_callers() {
+    let dir = require_artifacts!();
+    let server = std::sync::Arc::new(
+        InferenceServer::start(&dir, TinycnnParams::generate(1)).unwrap(),
+    );
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let server = std::sync::Arc::clone(&server);
+            s.spawn(move || {
+                let r = server.infer(synthetic_image(100 + t)).unwrap();
+                assert_eq!(r.logits.len(), 10);
+            });
+        }
+    });
+    assert_eq!(server.metrics.requests(), 4);
+    assert_eq!(server.metrics.errors(), 0);
+}

@@ -1,0 +1,247 @@
+//! Property-test battery over the whole modelling stack.
+//!
+//! The central invariant of the reproduction: the analytic activity model
+//! and the cycle-accurate simulator agree on **exact integer counts** for
+//! every coding configuration, tile geometry and sparsity pattern. Plus
+//! the coding-theory guarantees (BIC bounds, ZVCG transparency) at scale.
+
+use sa_lowpower::activity::{ham16, stream_toggles, ActivityCounts};
+use sa_lowpower::bf16::Bf16;
+use sa_lowpower::coding::{decode, BicEncoder, BicMode, BicPolicy, SaCodingConfig};
+use sa_lowpower::sa::{analyze_tile, simulate_tile, Tile};
+use sa_lowpower::util::prop::check;
+use sa_lowpower::util::Rng64;
+
+fn random_tile(
+    rng: &mut Rng64,
+    m: usize,
+    k: usize,
+    n: usize,
+    pz_a: f64,
+    pz_b: f64,
+) -> Tile {
+    let a: Vec<f32> = (0..m * k)
+        .map(|_| if rng.chance(pz_a) { 0.0 } else { rng.normal() as f32 })
+        .collect();
+    let b: Vec<f32> = (0..k * n)
+        .map(|_| if rng.chance(pz_b) { 0.0 } else { (rng.normal() * 0.1) as f32 })
+        .collect();
+    Tile::from_f32(&a, &b, m, k, n)
+}
+
+fn all_configs() -> Vec<SaCodingConfig> {
+    let mut v: Vec<SaCodingConfig> = [
+        "baseline",
+        "proposed",
+        "bic-only",
+        "zvcg-only",
+        "bic-full",
+        "bic-segmented",
+        "bic-exponent",
+    ]
+    .iter()
+    .map(|n| SaCodingConfig::by_name(n).unwrap())
+    .collect();
+    // ablation extras: weight gating, input BIC, min-transition policy
+    v.push(SaCodingConfig { weight_zvcg: true, ..SaCodingConfig::proposed() });
+    v.push(SaCodingConfig {
+        input_bic: BicMode::MantissaOnly,
+        ..SaCodingConfig::baseline()
+    });
+    v.push(SaCodingConfig {
+        bic_policy: BicPolicy::MinTransitions,
+        ..SaCodingConfig::proposed()
+    });
+    v
+}
+
+#[test]
+fn analytic_equals_cycle_sim_everywhere() {
+    check("analytic == cycle-sim, full config matrix", 30, |rng| {
+        let (m, k, n) = (1 + rng.below(16), 1 + rng.below(40), 1 + rng.below(16));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.5;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        for cfg in all_configs() {
+            let golden = simulate_tile(&t, &cfg).counts;
+            let fast = analyze_tile(&t, &cfg);
+            assert_eq!(fast, golden, "cfg {cfg:?} tile {m}x{k}x{n}");
+        }
+    });
+}
+
+#[test]
+fn analytic_equals_cycle_sim_paper_geometry() {
+    // The paper's exact geometry: 16×16 PEs, long K streams.
+    check("analytic == cycle-sim at 16x16, long K", 5, |rng| {
+        let t = random_tile(rng, 16, 256, 16, 0.5, 0.05);
+        for cfg in [SaCodingConfig::baseline(), SaCodingConfig::proposed()] {
+            assert_eq!(analyze_tile(&t, &cfg), simulate_tile(&t, &cfg).counts);
+        }
+    });
+}
+
+#[test]
+fn functional_transparency_of_all_configs() {
+    check("C = A×B under every coding config", 20, |rng| {
+        let t = random_tile(rng, 8, 24, 8, 0.4, 0.1);
+        let want = t.reference_result();
+        for cfg in all_configs() {
+            let r = simulate_tile(&t, &cfg);
+            assert_eq!(r.c, want, "cfg {cfg:?}");
+        }
+    });
+}
+
+#[test]
+fn mac_slot_conservation() {
+    check("active + gated + zero-product == M·N·K", 30, |rng| {
+        let (m, k, n) = (1 + rng.below(10), 1 + rng.below(30), 1 + rng.below(10));
+        let t = random_tile(rng, m, k, n, 0.6, 0.3);
+        for cfg in all_configs() {
+            let c = analyze_tile(&t, &cfg);
+            assert_eq!(c.total_mac_slots(), t.mac_slots(), "cfg {cfg:?}");
+        }
+    });
+}
+
+#[test]
+fn proposed_never_increases_streaming_toggles() {
+    // BIC (classic, per segment) can only reduce or keep data-line
+    // transitions; ZVCG can only remove them. Sidebands are accounted
+    // separately by the energy model, but the *data* pipelines must never
+    // get worse.
+    check("proposed data toggles <= baseline", 30, |rng| {
+        let pz = rng.uniform();
+        let t = random_tile(rng, 12, 48, 12, pz, 0.1);
+        let base = analyze_tile(&t, &SaCodingConfig::baseline());
+        let prop = analyze_tile(&t, &SaCodingConfig::proposed());
+        assert!(prop.west_data_toggles <= base.west_data_toggles);
+        assert!(prop.north_data_toggles <= base.north_data_toggles);
+    });
+}
+
+#[test]
+fn zvcg_savings_monotone_in_sparsity() {
+    // More zeros -> at least as many gated MACs.
+    check("gating grows with sparsity", 10, |rng| {
+        let seed = rng.next_u64();
+        let mut gated_prev = 0u64;
+        for pz10 in [1usize, 3, 5, 7, 9] {
+            let mut r2 = Rng64::new(seed);
+            let t = random_tile(&mut r2, 8, 64, 8, pz10 as f64 / 10.0, 0.0);
+            let c = analyze_tile(&t, &SaCodingConfig::zvcg_only());
+            assert!(
+                c.gated_macs >= gated_prev,
+                "sparsity {pz10}/10: {} < {gated_prev}",
+                c.gated_macs
+            );
+            gated_prev = c.gated_macs;
+        }
+    });
+}
+
+#[test]
+fn bic_classic_bound_on_tile_streams() {
+    // After mantissa BIC, no weight transfer flips more than 3 of the 7
+    // mantissa lines (Stan–Burleson bound at w=7).
+    check("BIC per-transfer bound on tiles", 20, |rng| {
+        let t = random_tile(rng, 4, 32, 4, 0.0, 0.0);
+        for j in 0..t.n {
+            let col: Vec<Bf16> = t.b_col(j).collect();
+            let mut enc = BicEncoder::new(BicMode::MantissaOnly, BicPolicy::Classic);
+            let (tx, _) = enc.encode_stream(&col);
+            let mut prev = 0u16;
+            for &w in &tx {
+                assert!(ham16(prev & 0x7F, w.0 & 0x7F) <= 3);
+                prev = w.0;
+            }
+        }
+    });
+}
+
+#[test]
+fn bic_decode_recovers_on_tile_streams() {
+    check("encode->decode identity on tile streams", 20, |rng| {
+        let t = random_tile(rng, 4, 40, 4, 0.0, 0.0);
+        for mode in [
+            BicMode::MantissaOnly,
+            BicMode::FullBus,
+            BicMode::Segmented,
+            BicMode::ExponentOnly,
+        ] {
+            for j in 0..t.n {
+                let col: Vec<Bf16> = t.b_col(j).collect();
+                let mut enc = BicEncoder::new(mode, BicPolicy::Classic);
+                let (tx, inv) = enc.encode_stream(&col);
+                for i in 0..col.len() {
+                    let d = decode(
+                        mode,
+                        sa_lowpower::coding::Encoded { tx: tx[i], inv: inv[i] },
+                    );
+                    assert_eq!(d.0, col[i].0);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn counts_additive_ledger_algebra() {
+    check("ledger addition is component-wise", 20, |rng| {
+        let t1 = random_tile(rng, 4, 16, 4, 0.3, 0.1);
+        let t2 = random_tile(rng, 4, 16, 4, 0.5, 0.2);
+        let c1 = analyze_tile(&t1, &SaCodingConfig::proposed());
+        let c2 = analyze_tile(&t2, &SaCodingConfig::proposed());
+        let mut sum = ActivityCounts::default();
+        sum.add(&c1);
+        sum.add(&c2);
+        assert_eq!(
+            sum.west_data_toggles,
+            c1.west_data_toggles + c2.west_data_toggles
+        );
+        assert_eq!(sum.cycles, c1.cycles + c2.cycles);
+        assert_eq!(
+            sum.streaming_toggles(),
+            c1.streaming_toggles() + c2.streaming_toggles()
+        );
+    });
+}
+
+#[test]
+fn stream_toggle_counting_matches_naive() {
+    check("stream_toggles == naive pairwise hamming", 100, |rng| {
+        let n = rng.below(100);
+        let s: Vec<Bf16> = (0..n)
+            .map(|_| Bf16::from_bits(rng.next_u32() as u16))
+            .collect();
+        let mut want = 0u64;
+        let mut prev = 0u16;
+        for v in &s {
+            want += (prev ^ v.0).count_ones() as u64;
+            prev = v.0;
+        }
+        assert_eq!(stream_toggles(Bf16::ZERO, &s), want);
+    });
+}
+
+#[test]
+fn bf16_rounding_is_nearest() {
+    check("bf16 RNE == nearest neighbour in f64", 3000, |rng| {
+        let x = f32::from_bits(rng.next_u32());
+        if x.is_nan() || x.is_infinite() {
+            return;
+        }
+        let got = Bf16::from_f32(x);
+        let up = Bf16::from_bits(got.to_bits().wrapping_add(1));
+        let down = Bf16::from_bits(got.to_bits().wrapping_sub(1));
+        let d = (x as f64 - got.to_f32() as f64).abs();
+        for nb in [up, down] {
+            if nb.is_nan() || nb.to_f32().is_infinite() {
+                continue;
+            }
+            let dn = (x as f64 - nb.to_f32() as f64).abs();
+            assert!(d <= dn, "x={x}: {got:?} vs {nb:?}");
+        }
+    });
+}
