@@ -4,15 +4,20 @@
 //!
 //! Covers the four hot paths of the analysis engine:
 //!   1. analytic tile model (the figure-sweep workhorse),
-//!   2. the cycle-accurate simulator (golden; speed bounds proptest),
+//!   2. the cycle-accurate simulator (golden; speed bounds proptest) —
+//!      both the fast wavefront engine and the seed per-cycle reference,
+//!      so the speedup is measured in one run,
 //!   3. packed Hamming distance over bus words,
 //!   4. BIC stream encoding + im2col lowering.
+//!
+//! Results additionally land in `BENCH_perf_hotpath.json` at the repo
+//! root (machine-readable; tracked across PRs).
 
 use sa_lowpower::activity::ham16_slice;
 use sa_lowpower::bf16::Bf16;
 use sa_lowpower::coding::{BicEncoder, BicMode, BicPolicy, SaCodingConfig};
-use sa_lowpower::sa::{analyze_tile, simulate_tile, Tile};
-use sa_lowpower::util::bench::{bench, black_box};
+use sa_lowpower::sa::{analyze_tile, simulate_tile, simulate_tile_reference, Tile};
+use sa_lowpower::util::bench::{bench, black_box, BenchSet};
 use sa_lowpower::util::Rng64;
 use sa_lowpower::workload::im2col_same;
 
@@ -26,6 +31,7 @@ fn random_tile(rng: &mut Rng64, m: usize, k: usize, n: usize, pz: f64) -> Tile {
 
 fn main() {
     let mut rng = Rng64::new(42);
+    let mut set = BenchSet::new();
     println!("=== hot-path microbenchmarks (see EXPERIMENTS.md §Perf) ===\n");
 
     // 1. analytic model, paper geometry, dense + sparse
@@ -43,24 +49,39 @@ fn main() {
                 },
             );
             let slots = t.mac_slots() as f64;
-            println!(
-                "    -> {:.0} Mslots/s",
-                slots / m.mean.as_secs_f64() / 1e6
-            );
+            let thru = slots / m.mean.as_secs_f64();
+            println!("    -> {:.0} Mslots/s", thru / 1e6);
+            set.push(m, Some((thru, "slots/s")));
         }
     }
 
-    // 2. cycle-accurate simulator (golden reference)
+    // 2. cycle-accurate simulator: fast wavefront engine vs the seed
+    //    per-cycle reference (the before/after of this optimization).
     let t_small = random_tile(&mut rng, 16, 256, 16, 0.5);
     for cfg_name in ["baseline", "proposed"] {
         let cfg = SaCodingConfig::by_name(cfg_name).unwrap();
         let m = bench(&format!("cycle-sim/16x256x16/{cfg_name}"), 2, 10, || {
             black_box(simulate_tile(black_box(&t_small), &cfg));
         });
-        println!(
-            "    -> {:.1} Mslots/s",
-            t_small.mac_slots() as f64 / m.mean.as_secs_f64() / 1e6
+        let thru = t_small.mac_slots() as f64 / m.mean.as_secs_f64();
+        println!("    -> {:.1} Mslots/s", thru / 1e6);
+        set.push(m.clone(), Some((thru, "slots/s")));
+
+        let mref = bench(
+            &format!("cycle-sim-reference/16x256x16/{cfg_name}"),
+            1,
+            5,
+            || {
+                black_box(simulate_tile_reference(black_box(&t_small), &cfg));
+            },
         );
+        let rthru = t_small.mac_slots() as f64 / mref.mean.as_secs_f64();
+        println!(
+            "    -> {:.1} Mslots/s  (fast engine speedup: {:.2}x)",
+            rthru / 1e6,
+            mref.mean.as_secs_f64() / m.mean.as_secs_f64()
+        );
+        set.push(mref, Some((rthru, "slots/s")));
     }
 
     // 3. packed hamming over bus words
@@ -69,10 +90,9 @@ fn main() {
     let m = bench("hamming/packed-64k-words", 3, 50, || {
         black_box(ham16_slice(black_box(&xa), black_box(&xb)));
     });
-    println!(
-        "    -> {:.1} Gwords/s",
-        xa.len() as f64 / m.mean.as_secs_f64() / 1e9
-    );
+    let thru = xa.len() as f64 / m.mean.as_secs_f64();
+    println!("    -> {:.1} Gwords/s", thru / 1e9);
+    set.push(m, Some((thru, "words/s")));
 
     // 4a. BIC encoding throughput
     let stream: Vec<Bf16> = (0..65536)
@@ -82,18 +102,26 @@ fn main() {
         let mut enc = BicEncoder::new(BicMode::MantissaOnly, BicPolicy::Classic);
         black_box(enc.encode_stream(black_box(&stream)));
     });
-    println!(
-        "    -> {:.1} Mwords/s",
-        stream.len() as f64 / m.mean.as_secs_f64() / 1e6
-    );
+    let thru = stream.len() as f64 / m.mean.as_secs_f64();
+    println!("    -> {:.1} Mwords/s", thru / 1e6);
+    set.push(m, Some((thru, "words/s")));
 
     // 4b. im2col lowering (ResNet50 conv2_1b-like layer)
     let fm: Vec<f32> = (0..56 * 56 * 64).map(|_| rng.normal() as f32).collect();
     let m = bench("im2col/56x56x64-k3s1", 2, 10, || {
         black_box(im2col_same(black_box(&fm), 56, 56, 64, 3, 3, 1));
     });
-    println!(
-        "    -> {:.0} Mpatch-elems/s",
-        (56.0 * 56.0 * 9.0 * 64.0) / m.mean.as_secs_f64() / 1e6
-    );
+    let thru = (56.0 * 56.0 * 9.0 * 64.0) / m.mean.as_secs_f64();
+    println!("    -> {:.0} Mpatch-elems/s", thru / 1e6);
+    set.push(m, Some((thru, "patch-elems/s")));
+
+    // Machine-readable trajectory: BENCH_perf_hotpath.json at repo root.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    match set.write_json(&root, "perf_hotpath") {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench JSON: {e}"),
+    }
 }

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# CI-friendly smoke check: build, test, short perf run, artifacts kept.
+#
+#   rust/scripts/check.sh [output-dir]
+#
+# Runs the tier-1 gate (release build + full test suite) followed by a
+# short hot-path benchmark, archiving the bench log and the
+# machine-readable BENCH_perf_hotpath.json under the output directory
+# (default: ci-out/ at the repo root).
+
+set -euo pipefail
+
+SCRIPT_DIR="$(cd "$(dirname "${BASH_SOURCE[0]}")" && pwd)"
+RUST_DIR="$(dirname "$SCRIPT_DIR")"
+REPO_ROOT="$(dirname "$RUST_DIR")"
+OUT_DIR="${1:-$REPO_ROOT/ci-out}"
+
+mkdir -p "$OUT_DIR"
+cd "$RUST_DIR"
+
+echo "== build (release) =="
+cargo build --release 2>&1 | tee "$OUT_DIR/build.log"
+
+echo "== tests =="
+cargo test -q 2>&1 | tee "$OUT_DIR/test.log"
+
+echo "== perf smoke (hot paths) =="
+cargo bench --bench perf_hotpath 2>&1 | tee "$OUT_DIR/perf_hotpath.log"
+
+if [ -f "$REPO_ROOT/BENCH_perf_hotpath.json" ]; then
+    cp "$REPO_ROOT/BENCH_perf_hotpath.json" "$OUT_DIR/"
+    echo "archived BENCH_perf_hotpath.json -> $OUT_DIR/"
+fi
+
+echo "== OK =="

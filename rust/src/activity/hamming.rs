@@ -1,4 +1,29 @@
 //! Hamming-distance primitives over bus words.
+//!
+//! # Packing invariants (the exactness contract)
+//!
+//! The slice/packed variants below are *throughput* forms of the scalar
+//! primitives, never approximations. The contract, asserted by unit and
+//! property tests (`rust/tests/property_tests.rs`):
+//!
+//! * [`ham16_packed`]`(pack(a0..a3), pack(b0..b3))` `==`
+//!   `Σ` [`ham16`]`(ai, bi)` — XOR and popcount distribute over disjoint
+//!   16-bit lanes of a `u64`, so four bus words are processed per
+//!   popcount with **bit-identical** totals;
+//! * [`ham16_slice`]`(a, b)` `==` `Σ_i ham16(a[i], b[i])` for every
+//!   length, alignment and tail;
+//! * [`ham16_slice_masked`] restricts every lane to the same 16-bit line
+//!   mask (the mask is broadcast to all four lanes of the packed word);
+//! * lane packing is endianness-agnostic: both operands are read with
+//!   the same `read_unaligned` order and XOR/popcount are permutation-
+//!   invariant, so the total never depends on byte order.
+//!
+//! [`ham16_slice`] (via `stream_toggles` and the analytic model's
+//! row-of-B distances) is the innermost hot path of both activity
+//! engines (`sa::analytic`, `sa::cycle`); the packed/masked variants are
+//! its equivalence-tested building blocks, exported so extensions keep
+//! the same contract. Everything downstream (energy, figures, the
+//! paper's savings percentages) inherits exactness from here.
 
 use crate::bf16::Bf16;
 
@@ -33,27 +58,97 @@ pub fn ham1(a: bool, b: bool) -> u32 {
     (a != b) as u32
 }
 
-/// Total Hamming distance between two equal-length u16 slices, packed in
-/// u64 lanes for throughput (hot path of the analytic model).
+/// Pack four u16 bus words into one u64 (lane 0 in the low bits) — the
+/// reference packing constructor; the slice walkers below read the same
+/// layout directly from memory with unaligned u64 loads.
+#[inline]
+pub fn pack4(w: [u16; 4]) -> u64 {
+    (w[0] as u64) | ((w[1] as u64) << 16) | ((w[2] as u64) << 32) | ((w[3] as u64) << 48)
+}
+
+/// Broadcast a 16-bit line mask to all four lanes of a packed word.
+#[inline]
+pub const fn broadcast_mask(mask: u16) -> u64 {
+    (mask as u64) * 0x0001_0001_0001_0001
+}
+
+/// Hamming distance between two packed 4-lane words: exactly
+/// `Σ ham16(a_lane, b_lane)` (XOR/popcount have no cross-lane carries).
+#[inline]
+pub fn ham16_packed(a: u64, b: u64) -> u32 {
+    (a ^ b).count_ones()
+}
+
+/// Masked packed Hamming distance; `mask64` is usually
+/// [`broadcast_mask`]`(line_mask)`.
+#[inline]
+pub fn ham16_packed_masked(a: u64, b: u64, mask64: u64) -> u32 {
+    ((a ^ b) & mask64).count_ones()
+}
+
+/// Read 4 u16 lanes starting at element `i` as one (possibly unaligned)
+/// u64. Caller guarantees `i + 4 <= len`.
+#[inline]
+unsafe fn load4(p: *const u16, i: usize) -> u64 {
+    // SAFETY: caller guarantees i+4 elements are in bounds;
+    // read_unaligned has no alignment requirement.
+    unsafe { p.add(i).cast::<u64>().read_unaligned() }
+}
+
+/// Total Hamming distance between two equal-length u16 slices.
+///
+/// Word-packed hot path: 4 lanes per XOR+popcount, 4 independent
+/// accumulators for instruction-level parallelism, unaligned u64 loads
+/// straight from the slice memory (no per-lane shift/or assembly).
+/// Bit-identical to the scalar sum for every length and alignment.
 pub fn ham16_slice(a: &[u16], b: &[u16]) -> u64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut total = 0u64;
-    let chunks = a.len() / 4;
-    // Process 4 u16 lanes per u64 XOR + popcount.
-    for c in 0..chunks {
-        let i = c * 4;
-        let pa = (a[i] as u64)
-            | ((a[i + 1] as u64) << 16)
-            | ((a[i + 2] as u64) << 32)
-            | ((a[i + 3] as u64) << 48);
-        let pb = (b[i] as u64)
-            | ((b[i + 1] as u64) << 16)
-            | ((b[i + 2] as u64) << 32)
-            | ((b[i + 3] as u64) << 48);
-        total += (pa ^ pb).count_ones() as u64;
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let words = n / 4;
+    let quads = words / 4;
+    let (mut t0, mut t1, mut t2, mut t3) = (0u64, 0u64, 0u64, 0u64);
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    // SAFETY: every load4 below reads lanes [i, i+4) with i+4 <= words*4
+    // <= n, in bounds of both slices (equal length asserted above).
+    unsafe {
+        for q in 0..quads {
+            let i = q * 16;
+            t0 += ham16_packed(load4(pa, i), load4(pb, i)) as u64;
+            t1 += ham16_packed(load4(pa, i + 4), load4(pb, i + 4)) as u64;
+            t2 += ham16_packed(load4(pa, i + 8), load4(pb, i + 8)) as u64;
+            t3 += ham16_packed(load4(pa, i + 12), load4(pb, i + 12)) as u64;
+        }
+        for w in quads * 4..words {
+            let i = w * 4;
+            t0 += ham16_packed(load4(pa, i), load4(pb, i)) as u64;
+        }
     }
-    for i in chunks * 4..a.len() {
+    let mut total = t0 + t1 + t2 + t3;
+    for i in words * 4..n {
         total += ham16(a[i], b[i]) as u64;
+    }
+    total
+}
+
+/// Masked total Hamming distance between two equal-length u16 slices:
+/// `Σ_i ham16_masked(a[i], b[i], mask)`, word-packed.
+pub fn ham16_slice_masked(a: &[u16], b: &[u16], mask: u16) -> u64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let words = n / 4;
+    let m64 = broadcast_mask(mask);
+    let mut total = 0u64;
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    // SAFETY: as in ham16_slice — all packed reads stay within `words*4
+    // <= n` elements of both equal-length slices.
+    unsafe {
+        for w in 0..words {
+            let i = w * 4;
+            total += ham16_packed_masked(load4(pa, i), load4(pb, i), m64) as u64;
+        }
+    }
+    for i in words * 4..n {
+        total += ham16_masked(a[i], b[i], mask) as u64;
     }
     total
 }
@@ -93,6 +188,32 @@ mod tests {
     }
 
     #[test]
+    fn packed_equals_lane_sum() {
+        check("ham16_packed == Σ ham16", 500, |rng| {
+            let a: [u16; 4] = [
+                rng.next_u32() as u16,
+                rng.next_u32() as u16,
+                rng.next_u32() as u16,
+                rng.next_u32() as u16,
+            ];
+            let b: [u16; 4] = [
+                rng.next_u32() as u16,
+                rng.next_u32() as u16,
+                rng.next_u32() as u16,
+                rng.next_u32() as u16,
+            ];
+            let want: u32 = (0..4).map(|i| ham16(a[i], b[i])).sum();
+            assert_eq!(ham16_packed(pack4(a), pack4(b)), want);
+            let mask = rng.next_u32() as u16;
+            let want_m: u32 = (0..4).map(|i| ham16_masked(a[i], b[i], mask)).sum();
+            assert_eq!(
+                ham16_packed_masked(pack4(a), pack4(b), broadcast_mask(mask)),
+                want_m
+            );
+        });
+    }
+
+    #[test]
     fn slice_matches_scalar() {
         check("packed hamming == scalar hamming", 200, |rng| {
             let n = rng.below(40);
@@ -104,6 +225,41 @@ mod tests {
                 .map(|(&x, &y)| ham16(x, y) as u64)
                 .sum();
             assert_eq!(ham16_slice(&a, &b), want);
+        });
+    }
+
+    #[test]
+    fn slice_matches_scalar_on_unaligned_subslices() {
+        // Exercise every alignment phase of the unaligned u64 loads.
+        check("packed hamming on offset slices", 100, |rng| {
+            let n = 64 + rng.below(64);
+            let a: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+            let b: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+            for off in 0..4.min(n) {
+                let (sa, sb) = (&a[off..], &b[off..]);
+                let want: u64 = sa
+                    .iter()
+                    .zip(sb)
+                    .map(|(&x, &y)| ham16(x, y) as u64)
+                    .sum();
+                assert_eq!(ham16_slice(sa, sb), want, "offset {off}");
+            }
+        });
+    }
+
+    #[test]
+    fn masked_slice_matches_scalar() {
+        check("packed masked hamming == scalar", 200, |rng| {
+            let n = rng.below(70);
+            let mask = rng.next_u32() as u16;
+            let a: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+            let b: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+            let want: u64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| ham16_masked(x, y, mask) as u64)
+                .sum();
+            assert_eq!(ham16_slice_masked(&a, &b, mask), want);
         });
     }
 }

@@ -6,20 +6,27 @@
 //! This observation is what makes the analytic model (sa::analytic) exact:
 //! per-register simulation is unnecessary for *stream* pipelines.
 
-use crate::bf16::Bf16;
+use crate::bf16::{as_bits, Bf16};
 
-use super::hamming::{ham1, ham_bf16};
+use super::hamming::{ham1, ham16, ham16_slice};
 
 /// Toggle count of a bf16 value sequence passing through one register,
 /// starting from the given reset state.
+///
+/// Word-packed: the consecutive-pair Hamming sum of a stream is the
+/// slice distance between the stream and itself shifted by one slot
+/// (`Σ_i Ham(s[i], s[i+1]) == ham16_slice(s[..n-1], s[1..])`), plus the
+/// reset→first transition — so the whole walk runs at 4 lanes per
+/// popcount through [`ham16_slice`].
 pub fn stream_toggles(reset: Bf16, stream: &[Bf16]) -> u64 {
-    let mut prev = reset;
-    let mut total = 0u64;
-    for &v in stream {
-        total += ham_bf16(prev, v) as u64;
-        prev = v;
+    match stream {
+        [] => 0,
+        [first, rest @ ..] => {
+            let bits = as_bits(stream);
+            ham16(reset.0, first.0) as u64
+                + ham16_slice(&bits[..rest.len()], &bits[1..])
+        }
     }
-    total
 }
 
 /// Toggle count of a 1-bit sideband sequence through one register.

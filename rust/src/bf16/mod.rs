@@ -17,8 +17,22 @@ pub use arith::*;
 pub use fields::*;
 
 /// A bfloat16 value, stored as its raw bit pattern.
+///
+/// `repr(transparent)`: a `Bf16` is layout-identical to a `u16`, so
+/// slices of values can be reinterpreted as slices of bus words (see
+/// [`as_bits`]) for the word-packed activity hot paths.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[repr(transparent)]
 pub struct Bf16(pub u16);
+
+/// Reinterpret a value slice as its raw 16-bit bus words (zero-copy;
+/// sound because `Bf16` is `repr(transparent)` over `u16`).
+#[inline]
+pub fn as_bits(values: &[Bf16]) -> &[u16] {
+    // SAFETY: Bf16 is repr(transparent) over u16: identical size,
+    // alignment and validity; the lifetime is inherited from `values`.
+    unsafe { std::slice::from_raw_parts(values.as_ptr().cast::<u16>(), values.len()) }
+}
 
 impl Bf16 {
     pub const ZERO: Bf16 = Bf16(0);

@@ -4,9 +4,9 @@
 use crate::activity::ActivityCounts;
 use crate::coding::SaCodingConfig;
 use crate::power::EnergyBreakdown;
-use crate::sa::{analyze_tile, SaConfig};
+use crate::sa::{analyze_tile, SaConfig, TileBuffers};
 use crate::workload::{
-    extract_channel, extract_tile, gen_feature_map, gen_weights, im2col_same,
+    extract_channel, extract_tile_into, gen_feature_map, gen_weights, im2col_same,
     zero_fraction, Gemm, GemmShape, Layer, LayerKind, TileGrid,
     TilePlan,
 };
@@ -202,6 +202,9 @@ fn analyze_gemms(
 
     // Spread the per-layer tile budget across the layer's GEMMs.
     let budget = (opts.max_tiles_per_layer / gemms.len()).max(1);
+    // One scratch allocation set per worker: tiles are built into and
+    // recycled from the same buffers across every pick and GEMM.
+    let mut scratch = TileBuffers::default();
     for (gi, g) in gemms.iter().enumerate() {
         let grid = TileGrid::of(g.shape, rows, cols);
         let plan = TilePlan::sample(
@@ -214,13 +217,14 @@ fn analyze_gemms(
         zero_acc += zero_fraction(&g.a);
         let scale = plan.scale * channel_scale;
         for &(mi, ni) in &plan.picks {
-            let tile = extract_tile(g, &grid, mi, ni);
+            let tile = extract_tile_into(g, &grid, mi, ni, &mut scratch);
             for (ci, (_, cfg)) in configs.iter().enumerate() {
                 let counts = analyze_tile(&tile, cfg);
                 let energy = opts.sa.energy.energy(&counts);
                 per_config[ci].0.add(&counts);
                 per_config[ci].1.add(&scale_energy(&energy, scale));
             }
+            scratch = tile.into_buffers();
         }
     }
 

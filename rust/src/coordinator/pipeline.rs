@@ -2,8 +2,8 @@
 //! pool, merge into a `SweepReport` (the data behind Figs. 4–5 and the
 //! headline numbers).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
 
 use crate::coding::SaCodingConfig;
 use crate::workload::Network;
@@ -88,24 +88,22 @@ pub fn sweep_network(
     threads: usize,
 ) -> SweepReport {
     let threads = threads.max(1).min(net.layers.len().max(1));
-    let work = Arc::new(Mutex::new(
-        (0..net.layers.len()).collect::<Vec<usize>>(),
-    ));
+    // Lock-free work distribution: a single shared fetch_add cursor over
+    // the layer index space (no Mutex<Vec> queue, no contention beyond
+    // one atomic per claimed layer).
+    let next = AtomicUsize::new(0);
     let (tx, rx) = mpsc::channel::<LayerReport>();
 
     std::thread::scope(|s| {
         for _ in 0..threads {
-            let work = Arc::clone(&work);
+            let next = &next;
             let tx = tx.clone();
             let layers = &net.layers;
             s.spawn(move || loop {
-                let idx = {
-                    let mut q = work.lock().unwrap();
-                    match q.pop() {
-                        Some(i) => i,
-                        None => break,
-                    }
-                };
+                let idx = next.fetch_add(1, Ordering::Relaxed);
+                if idx >= layers.len() {
+                    break;
+                }
                 let report = analyze_layer(&layers[idx], idx, configs, opts);
                 if tx.send(report).is_err() {
                     break;

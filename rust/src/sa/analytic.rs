@@ -16,7 +16,7 @@
 use crate::activity::{
     ham16_masked, ham16_slice, ham_bf16, stream_toggles, ActivityCounts,
 };
-use crate::bf16::Bf16;
+use crate::bf16::{as_bits, Bf16};
 use crate::coding::{decode, BicEncoder, BicMode, Encoded, SaCodingConfig};
 
 use super::Tile;
@@ -40,12 +40,11 @@ pub fn analyze_tile(tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts {
     }
 
     // ---------------- North (weight) lanes ----------------
-    let mut col: Vec<Bf16> = Vec::with_capacity(k);
+    // Zero-copy: b_col is a contiguous slice of the tile's column-major
+    // mirror (no per-column strided gather or scratch buffer).
     for j in 0..n {
-        col.clear();
-        col.extend(tile.b_col(j));
         lane_counts(
-            &col,
+            tile.b_col(j),
             cfg.weight_zvcg,
             cfg.weight_bic,
             cfg,
@@ -56,13 +55,10 @@ pub fn analyze_tile(tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts {
     }
 
     // ---------------- Compute-side counts ----------------
-    // Non-zero counts per k-slot.
-    let nnz_a_col: Vec<u64> = (0..k)
-        .map(|kk| (0..m).filter(|&i| !tile.a_at(i, kk).is_zero()).count() as u64)
-        .collect();
-    let nnz_b_row: Vec<u64> = (0..k)
-        .map(|kk| (0..n).filter(|&j| !tile.b_at(kk, j).is_zero()).count() as u64)
-        .collect();
+    // Non-zero counts per k-slot: popcounts over the tile's precomputed
+    // nonzero bitmasks.
+    let nnz_a_col: Vec<u64> = (0..k).map(|kk| tile.nnz_a_col(kk)).collect();
+    let nnz_b_row: Vec<u64> = (0..k).map(|kk| tile.nnz_b_row(kk)).collect();
 
     let slots = tile.mac_slots();
     let active: u64 = (0..k).map(|kk| nnz_a_col[kk] * nnz_b_row[kk]).sum();
@@ -115,7 +111,7 @@ pub fn analyze_tile(tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts {
         // popcount (~4 u64 ops at n=16) is cheaper than memoizing, except
         // for the adjacent pairs which every dense row repays M times —
         // those are precomputed once.
-        let b_bits: Vec<u16> = tile.b.iter().map(|v| v.0).collect();
+        let b_bits: &[u16] = as_bits(&tile.b);
         let row_bits = |p: usize| &b_bits[p * n..(p + 1) * n];
         let zero_row = vec![0u16; n];
         let d_direct = |p: usize, q: usize| {

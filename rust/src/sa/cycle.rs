@@ -1,4 +1,4 @@
-//! Cycle-accurate, bit-level simulator of the output-stationary SA —
+//! Cycle-accurate, bit-level simulation of the output-stationary SA —
 //! the golden reference (substitute for the paper's RTL simulation).
 //!
 //! Every architectural element of paper Fig. 3 is explicit state:
@@ -9,12 +9,42 @@
 //! * per-PE operand-isolation latches feeding the multiplier,
 //! * the 32-bit f32 accumulator of each PE.
 //!
-//! The simulator advances clock edge by clock edge with the skewed
-//! injection schedule (row i delayed i cycles, column j delayed j cycles)
-//! and records every toggle/clock event into an [`ActivityCounts`].
-//! It also produces the functional result C = A×B, asserted against the
-//! plain matmul reference in tests — gating and coding must be
-//! functionally transparent.
+//! Two engines implement the same machine:
+//!
+//! * [`simulate_tile_reference`] — the seed simulator: three nested
+//!   per-cycle loops over all M×N PEs, every register advanced clock
+//!   edge by clock edge. Slow, maximally literal; kept verbatim as the
+//!   semantic anchor.
+//! * [`simulate_tile`] — the fast engine: **wavefront-bounded** and
+//!   **lane-major**, producing bit-identical [`ActivityCounts`] and the
+//!   identical functional result.
+//!
+//! # Why lane-major register passes are exact
+//!
+//! Under the skewed schedule, pipeline stage `j` of West row `i` loads
+//! stream slot `kk = c - i - j` at cycle `c`; its upstream neighbour
+//! loaded the *same* slot one cycle earlier. By induction every register
+//! of a lane replays the identical (gated) edge-slot sequence, just
+//! time-shifted — so one replay per lane, multiplied by the number of
+//! registers in the lane (N per West row, M per North column), yields
+//! exactly the per-cycle simulator's toggle/clock/sideband sums, and the
+//! per-slot register state (decoded operand + gating flag) feeding each
+//! PE's MAC at slot `kk` is the replay state after slot `kk`.
+//!
+//! # Why the wavefront bound is exact
+//!
+//! PE `(i,j)` holds the slot-`kk` operand pair during cycle
+//! `c = i + j + kk + 1`, so at cycle `c` the live PEs are exactly the
+//! diagonal band `i + j ∈ [c-k, c-1]` — all other `(i,j)` pairs fail the
+//! `0 <= kk < k` guard in the reference's inner loop. Iterating only the
+//! band visits the identical set of `(i, j, kk)` triples in the identical
+//! order (cycles ascending, then `i`, then `j`), so MAC counts and the
+//! f32 accumulation order — hence `C = A×B` bit patterns — are unchanged.
+//!
+//! The equivalence is enforced: `rust/tests/property_tests.rs` asserts
+//! `simulate_tile == simulate_tile_reference` (counts *and* outputs) on
+//! random tiles for every coding configuration, and the analytic model
+//! is in turn asserted equal to the cycle counts.
 
 use crate::activity::{ham1, ham_bf16, ActivityCounts};
 use crate::bf16::Bf16;
@@ -82,9 +112,80 @@ pub struct CycleResult {
     pub c: Vec<f32>,
 }
 
+/// The slot-`kk` view a PE's MAC stage has of one lane register: the
+/// decoded operand and whether the register was zero-gated on that slot.
+#[derive(Clone, Copy, Debug, Default)]
+struct MacOp {
+    val: Bf16,
+    gated: bool,
+}
+
+/// Per-register tallies of one lane replay (multiplied by the lane's
+/// register count when charged to the ledger).
+#[derive(Clone, Copy, Debug, Default)]
+struct LaneTally {
+    data_toggles: u64,
+    clock_events: u64,
+    sideband_toggles: u64,
+    sideband_clock_events: u64,
+    cg_cell_cycles: u64,
+    decoder_toggles: u64,
+}
+
+/// Replay one lane's edge-slot sequence through a single register,
+/// mirroring the reference simulator's per-stage clock-edge semantics
+/// slot by slot, and record each slot's MAC-stage view into `ops`.
+fn replay_lane(
+    lane: &[EdgeSlot],
+    zvcg: bool,
+    bic: BicMode,
+    ops: &mut [MacOp],
+) -> LaneTally {
+    debug_assert_eq!(lane.len(), ops.len());
+    let mut t = LaneTally::default();
+    let cover = bic_cover_mask(bic);
+    let lines = bic.inv_lines() as u64;
+    let has_bic = bic != BicMode::None;
+    let mut prev = Stage::default();
+    for (s, op) in lane.iter().zip(ops.iter_mut()) {
+        if zvcg {
+            // is-zero sideband FF: always clocked (it carries the gating
+            // decision), toggles by its own sequence; the ICG on the data
+            // register burns every slot.
+            t.sideband_toggles += ham1(prev.zero, s.gated) as u64;
+            t.sideband_clock_events += 1;
+            t.cg_cell_cycles += 1;
+        }
+        if zvcg && s.gated {
+            prev.zero = true;
+            *op = MacOp { val: Bf16::ZERO, gated: true };
+            continue;
+        }
+        t.data_toggles += ham_bf16(prev.data, s.data) as u64;
+        t.clock_events += 16;
+        if has_bic {
+            let inv_diff = (prev.inv ^ s.inv).count_ones() as u64;
+            t.decoder_toggles +=
+                crate::activity::ham16_masked(prev.data.0, s.data.0, cover) as u64
+                    + inv_diff;
+            t.sideband_toggles += inv_diff;
+            t.sideband_clock_events += lines;
+        }
+        prev = Stage { data: s.data, zero: false, inv: s.inv };
+        // XOR recovery of the original operands (paper Fig. 3).
+        *op = MacOp {
+            val: decode(bic, Encoded { tx: s.data, inv: s.inv }),
+            gated: false,
+        };
+    }
+    t
+}
+
 /// Simulate one tile through an M×N output-stationary SA with the given
-/// coding configuration. Array geometry equals the tile geometry (the
-/// tiler pads tiles to the physical array size).
+/// coding configuration — fast engine (wavefront-bounded, lane-major).
+/// Array geometry equals the tile geometry (the tiler pads tiles to the
+/// physical array size). Counts and outputs are bit-identical to
+/// [`simulate_tile_reference`].
 pub fn simulate_tile(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
     let (m, k, n) = (tile.m, tile.k, tile.n);
     let mut counts = ActivityCounts::default();
@@ -103,9 +204,131 @@ pub fn simulate_tile(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
         .collect();
     let north: Vec<Vec<EdgeSlot>> = (0..n)
         .map(|j| {
-            let col: Vec<Bf16> = tile.b_col(j).collect();
             edge_stream(
-                &col,
+                tile.b_col(j),
+                cfg.weight_zvcg,
+                cfg.weight_bic,
+                cfg.bic_policy,
+                &mut counts,
+            )
+        })
+        .collect();
+
+    // ---- Lane-major register passes (one replay per lane, charged per
+    //      register: N registers per West row, M per North column) ----
+    let mut a_ops = vec![MacOp::default(); m * k];
+    for i in 0..m {
+        let t = replay_lane(
+            &west[i],
+            cfg.input_zvcg,
+            cfg.input_bic,
+            &mut a_ops[i * k..(i + 1) * k],
+        );
+        let regs = n as u64;
+        counts.west_data_toggles += regs * t.data_toggles;
+        counts.west_clock_events += regs * t.clock_events;
+        counts.west_sideband_toggles += regs * t.sideband_toggles;
+        counts.west_sideband_clock_events += regs * t.sideband_clock_events;
+        counts.west_cg_cell_cycles += regs * t.cg_cell_cycles;
+        counts.decoder_toggles += regs * t.decoder_toggles;
+    }
+    let mut b_ops = vec![MacOp::default(); n * k];
+    for j in 0..n {
+        let t = replay_lane(
+            &north[j],
+            cfg.weight_zvcg,
+            cfg.weight_bic,
+            &mut b_ops[j * k..(j + 1) * k],
+        );
+        let regs = m as u64;
+        counts.north_data_toggles += regs * t.data_toggles;
+        counts.north_clock_events += regs * t.clock_events;
+        counts.north_sideband_toggles += regs * t.sideband_toggles;
+        counts.north_sideband_clock_events += regs * t.sideband_clock_events;
+        counts.north_cg_cell_cycles += regs * t.cg_cell_cycles;
+        counts.decoder_toggles += regs * t.decoder_toggles;
+    }
+
+    // ---- MAC phase: per-cycle wavefront over the live diagonal band ----
+    // PE(i,j) holds the slot-kk operand pair during cycle i+j+kk+1, so at
+    // cycle c the live band is i+j in [c-k, c-1]; iteration order (c, i,
+    // j ascending) matches the reference, preserving f32 accumulation
+    // order exactly.
+    let any_gating = cfg.input_zvcg || cfg.weight_zvcg;
+    let mut mlat_a = vec![Bf16::ZERO; m * n];
+    let mut mlat_b = vec![Bf16::ZERO; m * n];
+    let mut acc = vec![0f32; m * n];
+    let total_cycles = k + m + n;
+
+    for c in 1..total_cycles {
+        let dt = c - 1; // i + j + kk of every live PE this cycle
+        let i_lo = dt.saturating_sub((k - 1) + (n - 1));
+        let i_hi = (m - 1).min(dt);
+        for i in i_lo..=i_hi {
+            let d = dt - i; // j + kk
+            let j_lo = d.saturating_sub(k - 1);
+            let j_hi = (n - 1).min(d);
+            let a_row = &a_ops[i * k..(i + 1) * k];
+            for j in j_lo..=j_hi {
+                let kk = d - j;
+                // Accumulator ICG cell burns once per MAC slot whenever
+                // any zero-gating is configured.
+                if any_gating {
+                    counts.acc_cg_cell_cycles += 1;
+                }
+                let a = a_row[kk];
+                let b = b_ops[j * k + kk];
+                if a.gated || b.gated {
+                    counts.gated_macs += 1;
+                    continue;
+                }
+                let p = i * n + j;
+                // Operand-isolation latches feeding the multiplier.
+                counts.mult_input_toggles +=
+                    (ham_bf16(mlat_a[p], a.val) + ham_bf16(mlat_b[p], b.val)) as u64;
+                mlat_a[p] = a.val;
+                mlat_b[p] = b.val;
+                // Accumulator is clocked on every non-gated slot.
+                counts.acc_clock_events += 32;
+                if a.val.is_zero() || b.val.is_zero() {
+                    counts.zero_product_macs += 1;
+                } else {
+                    counts.active_macs += 1;
+                    acc[p] += a.val.to_f32() * b.val.to_f32();
+                }
+            }
+        }
+    }
+
+    counts.unload_values += (m * n) as u64;
+    counts.cycles += total_cycles as u64;
+    CycleResult { counts, c: acc }
+}
+
+/// The seed per-cycle simulator: every register of every PE advanced
+/// clock edge by clock edge, all M×N PEs scanned every cycle. Kept as
+/// the literal golden reference that [`simulate_tile`] is property-
+/// tested against; use `simulate_tile` everywhere else.
+pub fn simulate_tile_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
+    let (m, k, n) = (tile.m, tile.k, tile.n);
+    let mut counts = ActivityCounts::default();
+
+    // ---- Edge logic (detectors + encoders), in stream order ----
+    let west: Vec<Vec<EdgeSlot>> = (0..m)
+        .map(|i| {
+            edge_stream(
+                tile.a_row(i),
+                cfg.input_zvcg,
+                cfg.input_bic,
+                cfg.bic_policy,
+                &mut counts,
+            )
+        })
+        .collect();
+    let north: Vec<Vec<EdgeSlot>> = (0..n)
+        .map(|j| {
+            edge_stream(
+                tile.b_col(j),
                 cfg.weight_zvcg,
                 cfg.weight_bic,
                 cfg.bic_policy,
@@ -323,6 +546,22 @@ mod tests {
                 let cfg = SaCodingConfig::by_name(name).unwrap();
                 let r = simulate_tile(&t, &cfg);
                 assert_eq!(r.c, want, "config {name}");
+            }
+        });
+    }
+
+    #[test]
+    fn fast_engine_matches_reference_engine() {
+        check("wavefront sim == seed per-cycle sim", 15, |rng| {
+            let (m, k, n) = (1 + rng.below(8), 1 + rng.below(20), 1 + rng.below(8));
+            let pz = rng.uniform();
+            let t = random_tile(rng, m, k, n, pz);
+            for name in ["baseline", "proposed", "bic-full", "zvcg-only"] {
+                let cfg = SaCodingConfig::by_name(name).unwrap();
+                let fast = simulate_tile(&t, &cfg);
+                let golden = simulate_tile_reference(&t, &cfg);
+                assert_eq!(fast.counts, golden.counts, "config {name}");
+                assert_eq!(fast.c, golden.c, "config {name}");
             }
         });
     }

@@ -2,8 +2,10 @@
 //!
 //! * [`cycle`] — the **golden** cycle-accurate simulator: every pipeline
 //!   register, sideband flip-flop, operand-isolation latch and
-//!   accumulator is explicit state, advanced clock edge by clock edge.
-//!   This is the substitute for the paper's RTL simulation.
+//!   accumulator is explicit state. Two engines: the seed per-cycle
+//!   walker (`simulate_tile_reference`, the literal RTL substitute) and
+//!   the fast wavefront/lane-major engine (`simulate_tile`), property-
+//!   tested bit-identical to it.
 //! * [`analytic`] — the **fast** model: closed-form stream accounting
 //!   that produces *identical* `ActivityCounts` (proven by property tests
 //!   over random tiles, `rust/tests/property_tests.rs`). Full-CNN sweeps

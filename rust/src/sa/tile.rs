@@ -1,26 +1,181 @@
 //! The unit of SA work: one (M×K) × (K×N) tile of a GEMM.
+//!
+//! Besides the row-major operand storage, a `Tile` carries three
+//! precomputed views that the activity engines consume on their hot
+//! paths (built once in the constructor, O(M·K + K·N)):
+//!
+//! * `b_cols` — a column-major mirror of B, so [`Tile::b_col`] returns a
+//!   contiguous slice (zero-copy weight streams) instead of a strided
+//!   gather;
+//! * `a_nz` / `b_nz` — per-k-slot nonzero bitmasks (bit `i` of slot
+//!   `kk`'s words = `A[i,kk] != 0`, resp. `B[kk,j] != 0`), so per-slot
+//!   nonzero counts reduce to popcounts.
 
 use crate::bf16::Bf16;
+
+/// Per-slot nonzero bitmask storage: `words` u64 words per k-slot,
+/// lane index bit `x` of slot `kk` at `bits[kk * words + x / 64]`.
+#[derive(Clone, Debug, PartialEq)]
+struct SlotMasks {
+    bits: Vec<u64>,
+    words: usize,
+}
+
+impl SlotMasks {
+    #[inline]
+    fn set(&mut self, kk: usize, lane: usize) {
+        self.bits[kk * self.words + lane / 64] |= 1u64 << (lane % 64);
+    }
+
+    #[inline]
+    fn slot(&self, kk: usize) -> &[u64] {
+        &self.bits[kk * self.words..(kk + 1) * self.words]
+    }
+
+    #[inline]
+    fn count(&self, kk: usize) -> u64 {
+        self.slot(kk).iter().map(|w| w.count_ones() as u64).sum()
+    }
+}
 
 /// One GEMM tile streamed through the array: `A` enters from the West
 /// (one row per SA row), `B` from the North (one column per SA column).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tile {
-    /// Row-major M×K activations (West streams).
-    pub a: Vec<Bf16>,
-    /// Row-major K×N weights (North streams).
-    pub b: Vec<Bf16>,
+    /// Row-major M×K activations (West streams). Crate-private (read
+    /// via [`Tile::a_row`]/[`Tile::a_at`]): the precomputed views below
+    /// are derived from the operands at construction and would go stale
+    /// under post-construction mutation.
+    pub(crate) a: Vec<Bf16>,
+    /// Row-major K×N weights (North streams). Crate-private for the
+    /// same invariant (read via [`Tile::b_row`]/[`Tile::b_col`]/
+    /// [`Tile::b_at`]).
+    pub(crate) b: Vec<Bf16>,
     pub m: usize,
     pub k: usize,
     pub n: usize,
+    /// Column-major mirror of `b` (`b_cols[j*k + kk] == b[kk*n + j]`).
+    b_cols: Vec<Bf16>,
+    /// Per-k-slot nonzero bitmask over rows of A.
+    a_nz: SlotMasks,
+    /// Per-k-slot nonzero bitmask over columns of B.
+    b_nz: SlotMasks,
+}
+
+/// The allocation set backing a [`Tile`], recoverable via
+/// [`Tile::into_buffers`] and reusable through [`Tile::new_in`] /
+/// [`Tile::from_f32_in`] so tight tile loops (the sweep pipeline) stop
+/// reallocating per tile.
+#[derive(Clone, Debug, Default)]
+pub struct TileBuffers {
+    a: Vec<Bf16>,
+    b: Vec<Bf16>,
+    b_cols: Vec<Bf16>,
+    a_bits: Vec<u64>,
+    b_bits: Vec<u64>,
+}
+
+impl TileBuffers {
+    /// Clear the operand staging vectors and return them for refilling
+    /// (capacity retained). Pass the filled vectors back through
+    /// [`Tile::new_in`].
+    pub fn take_operands(&mut self) -> (Vec<Bf16>, Vec<Bf16>) {
+        let mut a = std::mem::take(&mut self.a);
+        let mut b = std::mem::take(&mut self.b);
+        a.clear();
+        b.clear();
+        (a, b)
+    }
 }
 
 impl Tile {
     pub fn new(a: Vec<Bf16>, b: Vec<Bf16>, m: usize, k: usize, n: usize) -> Self {
+        Self::assemble(a, b, m, k, n, TileBuffers::default())
+    }
+
+    /// Like [`Tile::new`] but reusing the auxiliary allocations of a
+    /// previously decomposed tile.
+    pub fn new_in(
+        buf: &mut TileBuffers,
+        a: Vec<Bf16>,
+        b: Vec<Bf16>,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Self {
+        Self::assemble(a, b, m, k, n, std::mem::take(buf))
+    }
+
+    /// Build from f32 matrices using recycled buffers for every
+    /// allocation (operands and precomputed views).
+    pub fn from_f32_in(
+        buf: &mut TileBuffers,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Self {
+        let (mut av, mut bv) = buf.take_operands();
+        av.extend(a.iter().map(|&x| Bf16::from_f32(x)));
+        bv.extend(b.iter().map(|&x| Bf16::from_f32(x)));
+        Self::new_in(buf, av, bv, m, k, n)
+    }
+
+    /// Decompose the tile, recovering its allocations for reuse.
+    pub fn into_buffers(self) -> TileBuffers {
+        TileBuffers {
+            a: self.a,
+            b: self.b,
+            b_cols: self.b_cols,
+            a_bits: self.a_nz.bits,
+            b_bits: self.b_nz.bits,
+        }
+    }
+
+    fn assemble(
+        a: Vec<Bf16>,
+        b: Vec<Bf16>,
+        m: usize,
+        k: usize,
+        n: usize,
+        aux: TileBuffers,
+    ) -> Self {
         assert_eq!(a.len(), m * k, "A must be m*k");
         assert_eq!(b.len(), k * n, "B must be k*n");
         assert!(m > 0 && k > 0 && n > 0, "empty tile");
-        Tile { a, b, m, k, n }
+        let TileBuffers { mut b_cols, mut a_bits, mut b_bits, .. } = aux;
+
+        let aw = m.div_ceil(64).max(1);
+        a_bits.clear();
+        a_bits.resize(k * aw, 0);
+        let mut a_nz = SlotMasks { bits: a_bits, words: aw };
+        for i in 0..m {
+            let row = &a[i * k..(i + 1) * k];
+            for (kk, v) in row.iter().enumerate() {
+                if !v.is_zero() {
+                    a_nz.set(kk, i);
+                }
+            }
+        }
+
+        let bw = n.div_ceil(64).max(1);
+        b_bits.clear();
+        b_bits.resize(k * bw, 0);
+        let mut b_nz = SlotMasks { bits: b_bits, words: bw };
+        b_cols.clear();
+        b_cols.resize(k * n, Bf16::ZERO);
+        for kk in 0..k {
+            let row = &b[kk * n..(kk + 1) * n];
+            for (j, &v) in row.iter().enumerate() {
+                b_cols[j * k + kk] = v;
+                if !v.is_zero() {
+                    b_nz.set(kk, j);
+                }
+            }
+        }
+
+        Tile { a, b, m, k, n, b_cols, a_nz, b_nz }
     }
 
     /// Build from f32 matrices (values rounded to bf16).
@@ -39,9 +194,10 @@ impl Tile {
         &self.a[i * self.k..(i + 1) * self.k]
     }
 
-    /// North stream of column `j`: B[0..k, j] (strided).
-    pub fn b_col(&self, j: usize) -> impl Iterator<Item = Bf16> + '_ {
-        (0..self.k).map(move |kk| self.b[kk * self.n + j])
+    /// North stream of column `j`: B[0..k, j], as a contiguous slice of
+    /// the column-major mirror (zero-copy).
+    pub fn b_col(&self, j: usize) -> &[Bf16] {
+        &self.b_cols[j * self.k..(j + 1) * self.k]
     }
 
     /// Row `kk` of B (the bus word set presented to all columns at slot k).
@@ -60,6 +216,19 @@ impl Tile {
         self.b[kk * self.n + j]
     }
 
+    /// Number of nonzero A values in k-slot `kk` (over the M rows) —
+    /// a popcount over the precomputed bitmask.
+    #[inline]
+    pub fn nnz_a_col(&self, kk: usize) -> u64 {
+        self.a_nz.count(kk)
+    }
+
+    /// Number of nonzero B values in k-slot `kk` (over the N columns).
+    #[inline]
+    pub fn nnz_b_row(&self, kk: usize) -> u64 {
+        self.b_nz.count(kk)
+    }
+
     /// The functional result C = A×B with f32 accumulation (reference for
     /// the simulators).
     pub fn reference_result(&self) -> Vec<f32> {
@@ -69,7 +238,8 @@ impl Tile {
     /// Fraction of zero-magnitude input (A) values — the quantity plotted
     /// alongside power in paper Figs. 4–5.
     pub fn input_zero_fraction(&self) -> f64 {
-        let zeros = self.a.iter().filter(|v| v.is_zero()).count();
+        let zeros: u64 =
+            self.a.len() as u64 - (0..self.k).map(|kk| self.nnz_a_col(kk)).sum::<u64>();
         zeros as f64 / self.a.len() as f64
     }
 
@@ -102,10 +272,50 @@ mod tests {
             2,
         );
         assert_eq!(t.a_row(1), &[bf(4.0), bf(5.0), bf(6.0)]);
-        assert_eq!(t.b_col(1).collect::<Vec<_>>(), vec![bf(0.0), bf(1.0), bf(1.0)]);
+        assert_eq!(t.b_col(1), &[bf(0.0), bf(1.0), bf(1.0)]);
         assert_eq!(t.b_row(2), &[bf(1.0), bf(1.0)]);
         assert_eq!(t.a_at(0, 2), bf(3.0));
         assert_eq!(t.b_at(1, 1), bf(1.0));
+    }
+
+    #[test]
+    fn b_col_mirror_matches_strided_gather() {
+        let mut vals = Vec::new();
+        for x in 0..5 * 7 {
+            vals.push(if x % 3 == 0 { 0.0 } else { x as f32 * 0.25 });
+        }
+        let a = vec![1.0f32; 4 * 5];
+        let t = Tile::from_f32(&a, &vals, 4, 5, 7);
+        for j in 0..t.n {
+            let strided: Vec<Bf16> = (0..t.k).map(|kk| t.b_at(kk, j)).collect();
+            assert_eq!(t.b_col(j), &strided[..], "column {j}");
+        }
+    }
+
+    #[test]
+    fn nnz_masks_match_direct_counts() {
+        let a = [0.0, 1.0, 2.0, 0.0, 0.0, 3.0]; // 2x3
+        let b = [0.0, 4.0, 5.0, 0.0, 0.0, 0.0]; // 3x2
+        let t = Tile::from_f32(&a, &b, 2, 3, 2);
+        for kk in 0..3 {
+            let want_a = (0..2).filter(|&i| !t.a_at(i, kk).is_zero()).count() as u64;
+            let want_b = (0..2).filter(|&j| !t.b_at(kk, j).is_zero()).count() as u64;
+            assert_eq!(t.nnz_a_col(kk), want_a, "a slot {kk}");
+            assert_eq!(t.nnz_b_row(kk), want_b, "b slot {kk}");
+        }
+    }
+
+    #[test]
+    fn nnz_masks_cover_wide_tiles() {
+        // more than 64 lanes: the bitmask spans multiple u64 words
+        let m = 70;
+        let a: Vec<f32> = (0..m * 2).map(|x| (x % 5) as f32).collect();
+        let b = vec![1.0f32; 2 * 3];
+        let t = Tile::from_f32(&a, &b, m, 2, 3);
+        for kk in 0..2 {
+            let want = (0..m).filter(|&i| !t.a_at(i, kk).is_zero()).count() as u64;
+            assert_eq!(t.nnz_a_col(kk), want);
+        }
     }
 
     #[test]
@@ -124,5 +334,21 @@ mod tests {
     #[should_panic(expected = "A must be m*k")]
     fn bad_dims_panic() {
         Tile::from_f32(&[1.0], &[1.0], 2, 2, 1);
+    }
+
+    #[test]
+    fn buffer_reuse_is_transparent() {
+        // Building through recycled buffers must give the identical tile,
+        // across changing geometries.
+        let mut buf = TileBuffers::default();
+        let cases: [(usize, usize, usize); 3] = [(3, 5, 2), (2, 4, 6), (7, 3, 3)];
+        for (m, k, n) in cases {
+            let a: Vec<f32> = (0..m * k).map(|x| (x % 4) as f32 - 1.5).collect();
+            let b: Vec<f32> = (0..k * n).map(|x| (x % 3) as f32 * 0.5).collect();
+            let plain = Tile::from_f32(&a, &b, m, k, n);
+            let reused = Tile::from_f32_in(&mut buf, &a, &b, m, k, n);
+            assert_eq!(plain, reused);
+            buf = reused.into_buffers();
+        }
     }
 }

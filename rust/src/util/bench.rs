@@ -4,6 +4,11 @@
 //! repeated timed runs, mean / stddev / min reporting, and a simple
 //! `row`/`table` facility so each bench prints the paper table or figure
 //! series it regenerates.
+//!
+//! [`BenchSet`] additionally collects measurements into a
+//! machine-readable JSON report (`BENCH_<name>.json`), so the perf
+//! trajectory of the hot paths is tracked across PRs (EXPERIMENTS.md
+//! §Perf reads these files).
 
 use std::time::{Duration, Instant};
 
@@ -74,6 +79,89 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// A collection of measurements destined for a JSON report.
+///
+/// Each entry records the name, sample statistics in nanoseconds, and an
+/// optional throughput figure (`units/s`, with a unit label) supplied by
+/// the bench. The writer emits stable, dependency-free JSON.
+#[derive(Clone, Debug, Default)]
+pub struct BenchSet {
+    entries: Vec<BenchEntry>,
+}
+
+#[derive(Clone, Debug)]
+struct BenchEntry {
+    m: Measurement,
+    throughput: Option<(f64, String)>,
+}
+
+/// Escape a string for a JSON literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl BenchSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a measurement, optionally with a throughput figure.
+    pub fn push(&mut self, m: Measurement, throughput: Option<(f64, &str)>) {
+        self.entries.push(BenchEntry {
+            m,
+            throughput: throughput.map(|(v, u)| (v, u.to_string())),
+        });
+    }
+
+    /// Render the whole set as a JSON document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"benches\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \
+                 \"stddev_ns\": {}, \"min_ns\": {}",
+                json_escape(&e.m.name),
+                e.m.iters,
+                e.m.mean.as_nanos(),
+                e.m.stddev.as_nanos(),
+                e.m.min.as_nanos(),
+            ));
+            if let Some((v, unit)) = &e.throughput {
+                out.push_str(&format!(
+                    ", \"throughput\": {v:.3}, \"throughput_unit\": \"{}\"",
+                    json_escape(unit)
+                ));
+            }
+            out.push_str(if i + 1 == self.entries.len() { "}\n" } else { "},\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write `BENCH_<tag>.json` into `dir` (created if missing) and
+    /// return the path.
+    pub fn write_json(
+        &self,
+        dir: &std::path::Path,
+        tag: &str,
+    ) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{tag}.json"));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +180,43 @@ mod tests {
         let (v, dt) = time_once("id", || 42);
         assert_eq!(v, 42);
         assert!(dt.as_nanos() > 0);
+    }
+
+    #[test]
+    fn bench_set_emits_valid_shaped_json() {
+        let mut set = BenchSet::new();
+        let m = bench("json\"test", 0, 2, || {
+            black_box((0..100u32).sum::<u32>());
+        });
+        set.push(m.clone(), Some((1.5e9, "words/s")));
+        set.push(m, None);
+        let j = set.to_json();
+        assert!(j.starts_with("{\n"));
+        assert!(j.contains("\"benches\""));
+        assert!(j.contains("json\\\"test"));
+        assert!(j.contains("\"throughput\": 1500000000.000"));
+        assert_eq!(j.matches("\"name\"").count(), 2);
+        // balanced braces (crude structural sanity)
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn bench_set_writes_file() {
+        let dir = std::env::temp_dir().join("sa_lowpower_bench_test");
+        let mut set = BenchSet::new();
+        set.push(
+            Measurement {
+                name: "x".into(),
+                iters: 1,
+                mean: Duration::from_nanos(10),
+                stddev: Duration::ZERO,
+                min: Duration::from_nanos(10),
+            },
+            None,
+        );
+        let path = set.write_json(&dir, "unit_test").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"mean_ns\": 10"));
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -1,8 +1,9 @@
 //! Small in-tree utilities.
 //!
-//! The build environment is fully offline and only the `xla` crate closure
-//! is vendored, so the usual ecosystem crates (rand, proptest, serde,
-//! clap, criterion) are replaced by the minimal implementations here.
+//! The build environment is fully offline and only the `anyhow`/`xla`
+//! shims are vendored (`rust/vendor/`), so the usual ecosystem crates
+//! (rand, proptest, serde, clap, criterion) are replaced by the minimal
+//! implementations here.
 
 pub mod bench;
 pub mod cli;

@@ -24,13 +24,32 @@ pub fn im2col_same(
     kw: usize,
     stride: usize,
 ) -> Vec<f32> {
+    let mut out = Vec::new();
+    im2col_same_into(&mut out, fm, h, w, c, kh, kw, stride);
+    out
+}
+
+/// [`im2col_same`] into a caller-owned buffer (cleared and refilled;
+/// capacity reused), for per-thread lowering loops that would otherwise
+/// reallocate one patch matrix per layer/channel.
+pub fn im2col_same_into(
+    out: &mut Vec<f32>,
+    fm: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+) {
     assert_eq!(fm.len(), h * w * c, "feature map shape");
     let (ph, _) = same_padding(h, kh, stride);
     let (pw, _) = same_padding(w, kw, stride);
     let oh = h.div_ceil(stride);
     let ow = w.div_ceil(stride);
     let kdim = kh * kw * c;
-    let mut out = vec![0f32; oh * ow * kdim];
+    out.clear();
+    out.resize(oh * ow * kdim, 0f32);
     for oy in 0..oh {
         for ox in 0..ow {
             let row = &mut out[(oy * ow + ox) * kdim..(oy * ow + ox + 1) * kdim];
@@ -49,7 +68,6 @@ pub fn im2col_same(
             }
         }
     }
-    out
 }
 
 /// Extract channel `ch` of an NHWC feature map as a single-channel map
@@ -105,6 +123,18 @@ mod tests {
         // corner patch (0,0): top row + left col of the 3x3 window are pad
         let first = &a[0..9];
         assert_eq!(first, &[0., 0., 0., 0., 1., 1., 0., 1., 1.]);
+    }
+
+    #[test]
+    fn into_variant_reuses_buffer_and_matches() {
+        let mut buf = vec![9.0f32; 4]; // dirty buffer: must be fully overwritten
+        let fm1 = vec![1f32; 4 * 4];
+        im2col_same_into(&mut buf, &fm1, 4, 4, 1, 3, 3, 1);
+        assert_eq!(buf, im2col_same(&fm1, 4, 4, 1, 3, 3, 1));
+        // second, smaller problem into the same (now larger) buffer
+        let fm2: Vec<f32> = (0..2 * 2 * 2).map(|x| x as f32).collect();
+        im2col_same_into(&mut buf, &fm2, 2, 2, 2, 2, 2, 1);
+        assert_eq!(buf, im2col_same(&fm2, 2, 2, 2, 2, 2, 1));
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! (`TilePlan::sample`).
 
 use crate::bf16::Bf16;
-use crate::sa::Tile;
+use crate::sa::{Tile, TileBuffers};
 use crate::util::Rng64;
 
 use super::layer::GemmShape;
@@ -64,25 +64,36 @@ impl TileGrid {
 /// an equal constant to both sides — and padding them with zeros instead
 /// would let ZVCG "save" power on data that never exists.
 pub fn extract_tile(g: &Gemm, grid: &TileGrid, mi: usize, ni: usize) -> Tile {
+    extract_tile_into(g, grid, mi, ni, &mut TileBuffers::default())
+}
+
+/// [`extract_tile`] with allocation reuse: every buffer of the produced
+/// tile comes from `buf` (recover them afterwards with
+/// [`Tile::into_buffers`]). The sweep pipeline runs thousands of tiles
+/// per layer through one scratch set per worker thread.
+pub fn extract_tile_into(
+    g: &Gemm,
+    grid: &TileGrid,
+    mi: usize,
+    ni: usize,
+    buf: &mut TileBuffers,
+) -> Tile {
     assert!(mi < grid.m_tiles && ni < grid.n_tiles);
     let k = g.shape.k;
     let m_eff = grid.rows.min(g.shape.m - mi * grid.rows);
     let n_eff = grid.cols.min(g.shape.n - ni * grid.cols);
-    let mut a = vec![Bf16::ZERO; m_eff * k];
+    let (mut a, mut b) = buf.take_operands();
     for r in 0..m_eff {
         let src_row = mi * grid.rows + r;
-        for c in 0..k {
-            a[r * k + c] = Bf16::from_f32(g.a[src_row * g.shape.k + c]);
-        }
+        let src = &g.a[src_row * g.shape.k..src_row * g.shape.k + k];
+        a.extend(src.iter().map(|&x| Bf16::from_f32(x)));
     }
-    let mut b = vec![Bf16::ZERO; k * n_eff];
     for r in 0..k {
-        for c in 0..n_eff {
-            let src_col = ni * grid.cols + c;
-            b[r * n_eff + c] = Bf16::from_f32(g.b[r * g.shape.n + src_col]);
-        }
+        let row = &g.b[r * g.shape.n..(r + 1) * g.shape.n];
+        let src = &row[ni * grid.cols..ni * grid.cols + n_eff];
+        b.extend(src.iter().map(|&x| Bf16::from_f32(x)));
     }
-    Tile::new(a, b, m_eff, k, n_eff)
+    Tile::new_in(buf, a, b, m_eff, k, n_eff)
 }
 
 /// Which tiles of a grid to analyze: all, or a deterministic sample.
@@ -203,6 +214,21 @@ mod tests {
         seen.sort();
         seen.dedup();
         assert_eq!(seen.len(), 10);
+    }
+
+    #[test]
+    fn extract_into_matches_fresh_extract() {
+        let g = small_gemm();
+        let grid = TileGrid::of(g.shape, 4, 4);
+        let mut buf = TileBuffers::default();
+        for mi in 0..grid.m_tiles {
+            for ni in 0..grid.n_tiles {
+                let fresh = extract_tile(&g, &grid, mi, ni);
+                let reused = extract_tile_into(&g, &grid, mi, ni, &mut buf);
+                assert_eq!(fresh, reused, "tile ({mi},{ni})");
+                buf = reused.into_buffers();
+            }
+        }
     }
 
     #[test]

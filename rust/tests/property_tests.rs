@@ -5,10 +5,13 @@
 //! every coding configuration, tile geometry and sparsity pattern. Plus
 //! the coding-theory guarantees (BIC bounds, ZVCG transparency) at scale.
 
-use sa_lowpower::activity::{ham16, stream_toggles, ActivityCounts};
+use sa_lowpower::activity::{
+    broadcast_mask, ham16, ham16_masked, ham16_packed, ham16_packed_masked,
+    ham16_slice, ham16_slice_masked, pack4, stream_toggles, ActivityCounts,
+};
 use sa_lowpower::bf16::Bf16;
 use sa_lowpower::coding::{decode, BicEncoder, BicMode, BicPolicy, SaCodingConfig};
-use sa_lowpower::sa::{analyze_tile, simulate_tile, Tile};
+use sa_lowpower::sa::{analyze_tile, simulate_tile, simulate_tile_reference, Tile};
 use sa_lowpower::util::prop::check;
 use sa_lowpower::util::Rng64;
 
@@ -148,9 +151,9 @@ fn bic_classic_bound_on_tile_streams() {
     check("BIC per-transfer bound on tiles", 20, |rng| {
         let t = random_tile(rng, 4, 32, 4, 0.0, 0.0);
         for j in 0..t.n {
-            let col: Vec<Bf16> = t.b_col(j).collect();
+            let col = t.b_col(j);
             let mut enc = BicEncoder::new(BicMode::MantissaOnly, BicPolicy::Classic);
-            let (tx, _) = enc.encode_stream(&col);
+            let (tx, _) = enc.encode_stream(col);
             let mut prev = 0u16;
             for &w in &tx {
                 assert!(ham16(prev & 0x7F, w.0 & 0x7F) <= 3);
@@ -171,9 +174,9 @@ fn bic_decode_recovers_on_tile_streams() {
             BicMode::ExponentOnly,
         ] {
             for j in 0..t.n {
-                let col: Vec<Bf16> = t.b_col(j).collect();
+                let col = t.b_col(j);
                 let mut enc = BicEncoder::new(mode, BicPolicy::Classic);
-                let (tx, inv) = enc.encode_stream(&col);
+                let (tx, inv) = enc.encode_stream(col);
                 for i in 0..col.len() {
                     let d = decode(
                         mode,
@@ -222,6 +225,121 @@ fn stream_toggle_counting_matches_naive() {
             prev = v.0;
         }
         assert_eq!(stream_toggles(Bf16::ZERO, &s), want);
+    });
+}
+
+#[test]
+fn packed_hamming_is_bit_identical_to_scalar() {
+    // The word-packing contract: every packed/slice/masked variant is an
+    // exact reformulation of Σ ham16, for all lengths, alignment phases
+    // and masks.
+    check("ham16_packed == Σ ham16 (all forms)", 200, |rng| {
+        let n = rng.below(130);
+        let mask = rng.next_u32() as u16;
+        let a: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+        let b: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+
+        let scalar: u64 = a.iter().zip(&b).map(|(&x, &y)| ham16(x, y) as u64).sum();
+        assert_eq!(ham16_slice(&a, &b), scalar);
+
+        let scalar_m: u64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| ham16_masked(x, y, mask) as u64)
+            .sum();
+        assert_eq!(ham16_slice_masked(&a, &b, mask), scalar_m);
+
+        // offset subslices exercise every unaligned load phase
+        if n >= 8 {
+            let off = 1 + rng.below(3);
+            let want: u64 = a[off..]
+                .iter()
+                .zip(&b[off..])
+                .map(|(&x, &y)| ham16(x, y) as u64)
+                .sum();
+            assert_eq!(ham16_slice(&a[off..], &b[off..]), want, "offset {off}");
+        }
+
+        // 4-lane packed words
+        if n >= 4 {
+            let la = [a[0], a[1], a[2], a[3]];
+            let lb = [b[0], b[1], b[2], b[3]];
+            let want: u32 = (0..4).map(|i| ham16(la[i], lb[i])).sum();
+            assert_eq!(ham16_packed(pack4(la), pack4(lb)), want);
+            let want_m: u32 = (0..4).map(|i| ham16_masked(la[i], lb[i], mask)).sum();
+            assert_eq!(
+                ham16_packed_masked(pack4(la), pack4(lb), broadcast_mask(mask)),
+                want_m
+            );
+        }
+    });
+}
+
+#[test]
+fn wavefront_sim_equals_seed_reference_sim() {
+    // The fast engine (wavefront-bounded MAC loop + lane-major register
+    // replay) must reproduce the seed per-cycle simulator's counts AND
+    // functional output bit-for-bit, for every coding configuration.
+    check("wavefront sim == seed sim (all configs)", 12, |rng| {
+        let (m, k, n) = (1 + rng.below(12), 1 + rng.below(32), 1 + rng.below(12));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.5;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        for cfg in all_configs() {
+            let fast = simulate_tile(&t, &cfg);
+            let golden = simulate_tile_reference(&t, &cfg);
+            assert_eq!(
+                fast.counts, golden.counts,
+                "counts diverge: cfg {cfg:?} tile {m}x{k}x{n}"
+            );
+            assert_eq!(
+                fast.c, golden.c,
+                "outputs diverge: cfg {cfg:?} tile {m}x{k}x{n}"
+            );
+        }
+    });
+}
+
+#[test]
+fn wavefront_sim_equals_reference_on_degenerate_geometries() {
+    // Skinny/degenerate tiles stress the wavefront band arithmetic
+    // (1-wide arrays, K=1 streams, K >> M+N streams).
+    let mut rng = Rng64::new(0xF00D);
+    for (m, k, n) in [
+        (1, 1, 1),
+        (1, 64, 1),
+        (16, 1, 16),
+        (1, 40, 9),
+        (9, 40, 1),
+        (2, 100, 3),
+    ] {
+        let t = random_tile(&mut rng, m, k, n, 0.5, 0.2);
+        for cfg in all_configs() {
+            let fast = simulate_tile(&t, &cfg);
+            let golden = simulate_tile_reference(&t, &cfg);
+            assert_eq!(fast.counts, golden.counts, "{m}x{k}x{n} cfg {cfg:?}");
+            assert_eq!(fast.c, golden.c, "{m}x{k}x{n} cfg {cfg:?}");
+        }
+    }
+}
+
+#[test]
+fn stream_toggles_packed_path_matches_pairwise_walk() {
+    // stream_toggles now routes through ham16_slice on shifted slices;
+    // it must stay identical to the scalar pairwise walk from any reset.
+    check("packed stream_toggles == scalar walk", 200, |rng| {
+        let n = rng.below(90);
+        let reset = Bf16::from_bits(rng.next_u32() as u16);
+        let s: Vec<Bf16> = (0..n)
+            .map(|_| Bf16::from_bits(rng.next_u32() as u16))
+            .collect();
+        let mut want = 0u64;
+        let mut prev = reset.0;
+        for v in &s {
+            want += (prev ^ v.0).count_ones() as u64;
+            prev = v.0;
+        }
+        assert_eq!(stream_toggles(reset, &s), want);
     });
 }
 
