@@ -21,10 +21,8 @@
 use std::path::Path;
 
 use sa_lowpower::bf16::{matmul_f32acc, Bf16};
-use sa_lowpower::coordinator::{
-    analyze_layer_with_data, paper_configs, synthetic_image, AnalysisOptions,
-    InferenceServer, TinycnnParams,
-};
+use sa_lowpower::coordinator::{synthetic_image, InferenceServer, TinycnnParams};
+use sa_lowpower::engine::{ConfigSet, LayerJob, SaEngine};
 use sa_lowpower::workload::im2col_same;
 
 fn main() {
@@ -47,8 +45,11 @@ fn main() {
         t0.elapsed()
     );
     let net = server.network.clone();
-    let opts = AnalysisOptions { seed, max_tiles_per_layer: 24, ..Default::default() };
-    let configs = paper_configs();
+    let engine = SaEngine::builder()
+        .seed(seed)
+        .max_tiles_per_layer(24)
+        .configs(ConfigSet::paper())
+        .build();
 
     // ---- functional cross-check: rust bf16 GEMM vs the XLA layer-1 ----
     let img0 = synthetic_image(seed);
@@ -87,21 +88,25 @@ fn main() {
                 .map(|z| format!("{:.0}%", z * 100.0))
                 .collect::<Vec<_>>()
         );
-        // SA power on this request's real data flow
+        // SA power on this request's real data flow: one streaming job
+        // per layer, delivered as each completes on the engine pool.
         let mut fm = image;
+        let mut handles = Vec::new();
         for (i, layer) in net.layers.iter().enumerate().take(resp.activations.len()) {
-            let rep = analyze_layer_with_data(
-                layer,
+            handles.push(engine.submit(LayerJob::with_data(
+                layer.clone(),
                 i,
                 fm,
                 params.gemm_weights(i).to_vec(),
-                &configs,
-                &opts,
-            );
+            )));
+            fm = resp.activations[i].clone();
+        }
+        for h in handles {
+            let i = h.layer_index();
+            let rep = h.wait();
             per_layer_base[i] += rep.energy_of("baseline").unwrap().total();
             per_layer_prop[i] += rep.energy_of("proposed").unwrap().total();
             zero_sums[i] += rep.input_zero_frac;
-            fm = resp.activations[i].clone();
         }
     }
     let wall = t_batch.elapsed();

@@ -6,9 +6,8 @@
 //! cargo run --release --example mobilenet_power -- [tiles] [threads]
 //! ```
 
-use sa_lowpower::coordinator::{paper_configs, sweep_network, AnalysisOptions};
+use sa_lowpower::engine::{ConfigSet, SaEngine};
 use sa_lowpower::report::fig45_table;
-use sa_lowpower::sa::SaConfig;
 use sa_lowpower::workload::Network;
 
 fn main() {
@@ -19,7 +18,11 @@ fn main() {
     });
 
     let net = Network::by_name("mobilenet").unwrap();
-    let opts = AnalysisOptions { max_tiles_per_layer: tiles, ..Default::default() };
+    let engine = SaEngine::builder()
+        .max_tiles_per_layer(tiles)
+        .configs(ConfigSet::paper())
+        .threads(threads)
+        .build();
     println!(
         "Fig. 5 — MobileNet v1 ({} layers, {:.0} MMACs), {} sampled tiles/layer, {} threads",
         net.layers.len(),
@@ -29,10 +32,10 @@ fn main() {
     );
 
     let t0 = std::time::Instant::now();
-    let sweep = sweep_network(&net, &paper_configs(), &opts, threads);
+    let sweep = engine.sweep(&net);
     let dt = t0.elapsed();
 
-    fig45_table(&sweep, &SaConfig::default()).print();
+    fig45_table(&sweep, engine.sa()).print();
     println!();
     println!(
         "overall dynamic power reduction: {:.1} %   (paper: 6.2 %)",
@@ -44,5 +47,5 @@ fn main() {
     );
     let (lo, hi) = sweep.per_layer_savings_range("baseline", "proposed");
     println!("per-layer savings range:         {lo:.1} % – {hi:.1} %   (paper: 1–19 %)");
-    println!("sweep wall time: {dt:?}");
+    println!("sweep wall time: {dt:?} ({} backend)", sweep.backend);
 }

@@ -6,12 +6,13 @@
 //! ```
 //!
 //! Demonstrates the core public API in ~60 lines: build a [`Tile`], run
-//! the golden cycle-accurate simulator and the fast analytic model,
-//! verify they agree bit-for-bit, and price the activity with the 45 nm
-//! energy model.
+//! both estimator backends (the golden cycle-accurate simulator and the
+//! fast analytic model), verify they agree bit-for-bit, and price the
+//! activity with the 45 nm energy model. Configurations come from the
+//! engine's typed registry.
 
-use sa_lowpower::coding::SaCodingConfig;
-use sa_lowpower::sa::{analyze_tile, simulate_tile, SaConfig, Tile};
+use sa_lowpower::engine::{AnalyticBackend, CycleBackend, EstimatorBackend};
+use sa_lowpower::sa::{SaConfig, Tile};
 use sa_lowpower::util::Rng64;
 
 fn main() {
@@ -33,15 +34,19 @@ fn main() {
 
     let sa = SaConfig::default();
     for name in ["baseline", "proposed", "bic-only", "zvcg-only"] {
-        let cfg = SaCodingConfig::by_name(name).unwrap();
+        let cfg = sa_lowpower::engine::ConfigRegistry::lookup(name).unwrap().config;
 
-        // Golden: cycle-accurate, register-by-register.
-        let golden = simulate_tile(&tile, &cfg);
-        // Fast: closed-form stream accounting. Must agree exactly.
-        let fast = analyze_tile(&tile, &cfg);
-        assert_eq!(golden.counts, fast, "models must agree");
+        // Golden backend: cycle-accurate, register-by-register.
+        let golden = CycleBackend.estimate(&tile, &cfg);
+        // Fast backend: closed-form stream accounting. Must agree exactly
+        // (the engine's backend contract).
+        let fast = AnalyticBackend.estimate(&tile, &cfg);
+        assert_eq!(golden, fast, "backends must agree");
         // And coding/gating must never change the numerics.
-        assert_eq!(golden.c, tile.reference_result());
+        assert_eq!(
+            sa_lowpower::sa::simulate_tile(&tile, &cfg).c,
+            tile.reference_result()
+        );
 
         let e = sa.energy.energy(&fast);
         println!(
@@ -54,8 +59,13 @@ fn main() {
         );
     }
 
-    let base = sa.energy.energy(&analyze_tile(&tile, &SaCodingConfig::baseline()));
-    let prop = sa.energy.energy(&analyze_tile(&tile, &SaCodingConfig::proposed()));
+    use sa_lowpower::coding::SaCodingConfig;
+    let base = sa
+        .energy
+        .energy(&AnalyticBackend.estimate(&tile, &SaCodingConfig::baseline()));
+    let prop = sa
+        .energy
+        .energy(&AnalyticBackend.estimate(&tile, &SaCodingConfig::proposed()));
     println!(
         "\nproposed vs baseline: {:.1} % total dynamic energy saved",
         100.0 * (base.total() - prop.total()) / base.total()

@@ -7,9 +7,8 @@
 //! cargo run --release --example resnet50_power -- [tiles] [threads]
 //! ```
 
-use sa_lowpower::coordinator::{paper_configs, sweep_network, AnalysisOptions};
+use sa_lowpower::engine::{ConfigSet, SaEngine};
 use sa_lowpower::report::fig45_table;
-use sa_lowpower::sa::SaConfig;
 use sa_lowpower::workload::Network;
 
 fn main() {
@@ -20,7 +19,11 @@ fn main() {
     });
 
     let net = Network::by_name("resnet50").unwrap();
-    let opts = AnalysisOptions { max_tiles_per_layer: tiles, ..Default::default() };
+    let engine = SaEngine::builder()
+        .max_tiles_per_layer(tiles)
+        .configs(ConfigSet::paper())
+        .threads(threads)
+        .build();
     println!(
         "Fig. 4 — ResNet50 ({} layers, {:.1} GMACs), {} sampled tiles/layer, {} threads",
         net.layers.len(),
@@ -30,10 +33,10 @@ fn main() {
     );
 
     let t0 = std::time::Instant::now();
-    let sweep = sweep_network(&net, &paper_configs(), &opts, threads);
+    let sweep = engine.sweep(&net);
     let dt = t0.elapsed();
 
-    fig45_table(&sweep, &SaConfig::default()).print();
+    fig45_table(&sweep, engine.sa()).print();
     println!();
     println!(
         "overall dynamic power reduction: {:.1} %   (paper: 9.4 %)",
@@ -45,5 +48,5 @@ fn main() {
     );
     let (lo, hi) = sweep.per_layer_savings_range("baseline", "proposed");
     println!("per-layer savings range:         {lo:.1} % – {hi:.1} %   (paper: 1–19 %)");
-    println!("sweep wall time: {dt:?}");
+    println!("sweep wall time: {dt:?} ({} backend)", sweep.backend);
 }

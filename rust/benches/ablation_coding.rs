@@ -4,7 +4,7 @@
 //!
 //! `cargo bench --bench ablation_coding`
 
-use sa_lowpower::coordinator::{ablation_configs, sweep_network, AnalysisOptions};
+use sa_lowpower::engine::{ConfigSet, SaEngine};
 use sa_lowpower::report::ablation_table;
 use sa_lowpower::util::bench::time_once;
 use sa_lowpower::workload::Network;
@@ -12,16 +12,18 @@ use sa_lowpower::workload::Network;
 fn main() {
     println!("=== Ablation: coding design space (7 configs) ===\n");
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    let opts = AnalysisOptions { max_tiles_per_layer: 24, ..Default::default() };
-    let configs = ablation_configs();
+    let engine = SaEngine::builder()
+        .max_tiles_per_layer(24)
+        .configs(ConfigSet::ablation())
+        .threads(threads)
+        .build();
     for net_name in ["resnet50", "mobilenet"] {
         let net = Network::by_name(net_name).unwrap();
         let (sweep, _) = time_once(&format!("ablation/{net_name}-sweep(7cfg)"), || {
-            sweep_network(&net, &configs, &opts, threads)
+            engine.sweep(&net)
         });
-        let names: Vec<String> = configs.iter().map(|(n, _)| n.clone()).collect();
         println!("\n{net_name}:");
-        ablation_table(&sweep, &names).print();
+        ablation_table(&sweep, &engine.configs().names()).print();
         println!();
     }
 }

@@ -2,9 +2,8 @@
 //!
 //! `cargo bench --bench fig5_mobilenet`
 
-use sa_lowpower::coordinator::{paper_configs, sweep_network, AnalysisOptions};
+use sa_lowpower::engine::{ConfigSet, SaEngine};
 use sa_lowpower::report::fig45_table;
-use sa_lowpower::sa::SaConfig;
 use sa_lowpower::util::bench::time_once;
 use sa_lowpower::workload::Network;
 
@@ -12,11 +11,15 @@ fn main() {
     println!("=== Fig. 5: MobileNet per-layer power sweep ===\n");
     let net = Network::by_name("mobilenet").unwrap();
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    let opts = AnalysisOptions { max_tiles_per_layer: 64, ..Default::default() };
+    let engine = SaEngine::builder()
+        .max_tiles_per_layer(64)
+        .configs(ConfigSet::paper())
+        .threads(threads)
+        .build();
     let (sweep, _) = time_once("fig5/mobilenet/full-sweep(64 tiles/layer)", || {
-        sweep_network(&net, &paper_configs(), &opts, threads)
+        engine.sweep(&net)
     });
-    fig45_table(&sweep, &SaConfig::default()).print();
+    fig45_table(&sweep, engine.sa()).print();
     println!(
         "\noverall savings {:.1} % (paper 6.2 %) | activity cut {:.1} % (paper ~29 %)",
         sweep.overall_savings_pct("baseline", "proposed"),

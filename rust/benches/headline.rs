@@ -4,32 +4,25 @@
 //!
 //! `cargo bench --bench headline`
 
-use sa_lowpower::coordinator::{paper_configs, sweep_network, AnalysisOptions};
+use sa_lowpower::engine::{ConfigSet, SaEngine};
 use sa_lowpower::report::headline_table;
-use sa_lowpower::sa::SaConfig;
 use sa_lowpower::util::bench::time_once;
 use sa_lowpower::workload::Network;
 
 fn main() {
     println!("=== Headline claims: paper vs reproduced ===\n");
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    let opts = AnalysisOptions { max_tiles_per_layer: 64, ..Default::default() };
+    let engine = SaEngine::builder()
+        .max_tiles_per_layer(64)
+        .configs(ConfigSet::paper())
+        .threads(threads)
+        .build();
     let (resnet, _) = time_once("headline/resnet50-sweep", || {
-        sweep_network(
-            &Network::by_name("resnet50").unwrap(),
-            &paper_configs(),
-            &opts,
-            threads,
-        )
+        engine.sweep(&Network::by_name("resnet50").unwrap())
     });
     let (mobilenet, _) = time_once("headline/mobilenet-sweep", || {
-        sweep_network(
-            &Network::by_name("mobilenet").unwrap(),
-            &paper_configs(),
-            &opts,
-            threads,
-        )
+        engine.sweep(&Network::by_name("mobilenet").unwrap())
     });
     println!();
-    headline_table(&resnet, &mobilenet, &SaConfig::default()).print();
+    headline_table(&resnet, &mobilenet, engine.sa()).print();
 }

@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
-# CI-friendly smoke check: build, test, short perf run, artifacts kept.
+# CI-friendly smoke check: lint, build, test, example smoke, short perf
+# run, artifacts kept.
 #
 #   rust/scripts/check.sh [output-dir]
 #
-# Runs the tier-1 gate (release build + full test suite) followed by a
-# short hot-path benchmark, archiving the bench log and the
-# machine-readable BENCH_perf_hotpath.json under the output directory
+# Runs formatting + clippy lints (hard failures where the components are
+# installed), the tier-1 gate (release build + full test suite), the
+# quickstart example as an API smoke test (so example breakage fails this
+# script, not a user), and a short hot-path benchmark, archiving logs and
+# the machine-readable BENCH_perf_hotpath.json under the output directory
 # (default: ci-out/ at the repo root).
 
 set -euo pipefail
@@ -18,11 +21,30 @@ OUT_DIR="${1:-$REPO_ROOT/ci-out}"
 mkdir -p "$OUT_DIR"
 cd "$RUST_DIR"
 
+echo "== fmt check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check 2>&1 | tee "$OUT_DIR/fmt.log"
+else
+    echo "SKIP: rustfmt component not installed (offline toolchain)" \
+        | tee "$OUT_DIR/fmt.log"
+fi
+
+echo "== clippy (deny warnings) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings 2>&1 | tee "$OUT_DIR/clippy.log"
+else
+    echo "SKIP: clippy component not installed (offline toolchain)" \
+        | tee "$OUT_DIR/clippy.log"
+fi
+
 echo "== build (release) =="
 cargo build --release 2>&1 | tee "$OUT_DIR/build.log"
 
 echo "== tests =="
 cargo test -q 2>&1 | tee "$OUT_DIR/test.log"
+
+echo "== example smoke (quickstart: public API end-to-end) =="
+cargo run --release --example quickstart 2>&1 | tee "$OUT_DIR/quickstart.log"
 
 echo "== perf smoke (hot paths) =="
 cargo bench --bench perf_hotpath 2>&1 | tee "$OUT_DIR/perf_hotpath.log"

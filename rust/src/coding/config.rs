@@ -54,27 +54,29 @@ impl SaCodingConfig {
         Self { weight_bic: BicMode::None, ..Self::proposed() }
     }
 
+    /// Full-bus BIC ablation (all 16 lines in one inversion decision).
+    pub const fn bic_full() -> Self {
+        Self { weight_bic: BicMode::FullBus, ..Self::proposed() }
+    }
+
+    /// Segmented BIC ablation (independent field-wise decisions).
+    pub const fn bic_segmented() -> Self {
+        Self { weight_bic: BicMode::Segmented, ..Self::proposed() }
+    }
+
+    /// Exponent-only BIC ablation (the field Fig. 2 argues against).
+    pub const fn bic_exponent() -> Self {
+        Self { weight_bic: BicMode::ExponentOnly, ..Self::proposed() }
+    }
+
     /// Named configuration lookup (CLI / bench parameter).
+    ///
+    /// Delegates to the [`crate::engine::ConfigRegistry`] static table —
+    /// the single source of truth for configuration names (the registry,
+    /// this lookup, the engine config sets and the CLI usage text all
+    /// derive from it).
     pub fn by_name(name: &str) -> Option<Self> {
-        Some(match name {
-            "baseline" | "conventional" => Self::baseline(),
-            "proposed" => Self::proposed(),
-            "bic-only" => Self::bic_only(),
-            "zvcg-only" => Self::zvcg_only(),
-            "bic-full" => Self {
-                weight_bic: BicMode::FullBus,
-                ..Self::proposed()
-            },
-            "bic-segmented" => Self {
-                weight_bic: BicMode::Segmented,
-                ..Self::proposed()
-            },
-            "bic-exponent" => Self {
-                weight_bic: BicMode::ExponentOnly,
-                ..Self::proposed()
-            },
-            _ => return None,
-        })
+        crate::engine::ConfigRegistry::lookup(name).map(|e| e.config)
     }
 
     /// Short display name.

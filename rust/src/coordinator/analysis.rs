@@ -1,10 +1,16 @@
-//! Per-layer SA power analysis: layer → im2col GEMM → tiles → analytic
-//! activity model → energy, for a set of coding configurations at once.
+//! Per-layer SA power analysis: layer → im2col GEMM → tiles → estimator
+//! backend → energy, for a set of coding configurations at once.
+//!
+//! The per-tile estimator is pluggable ([`crate::engine::EstimatorBackend`]);
+//! callers normally go through [`crate::engine::SaEngine`], which owns the
+//! backend, the config set and the worker pool. The free functions kept
+//! here are thin deprecated shims over that engine path.
 
 use crate::activity::ActivityCounts;
 use crate::coding::SaCodingConfig;
+use crate::engine::EstimatorBackend;
 use crate::power::EnergyBreakdown;
-use crate::sa::{analyze_tile, SaConfig, TileBuffers};
+use crate::sa::{SaConfig, TileBuffers};
 use crate::workload::{
     extract_channel, extract_tile_into, gen_feature_map, gen_weights, im2col_same,
     zero_fraction, Gemm, GemmShape, Layer, LayerKind, TileGrid,
@@ -80,22 +86,6 @@ impl LayerReport {
     }
 }
 
-/// Scale an energy breakdown by a sampling factor.
-fn scale_energy(e: &EnergyBreakdown, s: f64) -> EnergyBreakdown {
-    EnergyBreakdown {
-        west_data: e.west_data * s,
-        west_clock: e.west_clock * s,
-        west_gating: e.west_gating * s,
-        north_data: e.north_data * s,
-        north_clock: e.north_clock * s,
-        north_coding: e.north_coding * s,
-        mult: e.mult * s,
-        add_acc: e.add_acc * s,
-        acc_clock: e.acc_clock * s,
-        unload: e.unload * s,
-    }
-}
-
 /// Build the layer's GEMM instance(s) from synthetic data. Depthwise
 /// layers return one GEMM per *sampled* channel plus the channel scale.
 pub fn build_layer_gemms(
@@ -153,13 +143,23 @@ pub fn build_gemms_from_data(
                     Gemm::new(a, b, shape)
                 })
                 .collect();
-            (gemms, layer.cin as f64 / channels as f64)
+            // 0-channel layers lower to no GEMMs; keep the scale finite.
+            let scale = if channels == 0 {
+                0.0
+            } else {
+                layer.cin as f64 / channels as f64
+            };
+            (gemms, scale)
         }
     }
 }
 
 /// Analyze one layer under every configuration in `configs`, using
 /// synthetic data.
+#[deprecated(
+    since = "0.2.0",
+    note = "route through engine::SaEngine::analyze_layer"
+)]
 pub fn analyze_layer(
     layer: &Layer,
     layer_idx: usize,
@@ -167,10 +167,22 @@ pub fn analyze_layer(
     opts: &AnalysisOptions,
 ) -> LayerReport {
     let (gemms, channel_scale) = build_layer_gemms(layer, layer_idx, opts);
-    analyze_gemms(layer, layer_idx, gemms, channel_scale, configs, opts)
+    analyze_gemms_with(
+        layer,
+        layer_idx,
+        gemms,
+        channel_scale,
+        configs,
+        opts,
+        &crate::engine::AnalyticBackend,
+    )
 }
 
 /// Analyze one layer with caller-provided input data (e2e path).
+#[deprecated(
+    since = "0.2.0",
+    note = "route through engine::SaEngine::analyze_layer_with_data"
+)]
 pub fn analyze_layer_with_data(
     layer: &Layer,
     layer_idx: usize,
@@ -180,16 +192,29 @@ pub fn analyze_layer_with_data(
     opts: &AnalysisOptions,
 ) -> LayerReport {
     let (gemms, channel_scale) = build_gemms_from_data(layer, fm, weights, opts);
-    analyze_gemms(layer, layer_idx, gemms, channel_scale, configs, opts)
+    analyze_gemms_with(
+        layer,
+        layer_idx,
+        gemms,
+        channel_scale,
+        configs,
+        opts,
+        &crate::engine::AnalyticBackend,
+    )
 }
 
-fn analyze_gemms(
+/// The estimation core: stream every sampled tile of `gemms` through
+/// `backend` under every configuration, extrapolate energy by the
+/// sampling scale. This is the single engine-room all public paths
+/// ([`crate::engine::SaEngine`] and the deprecated shims) converge on.
+pub fn analyze_gemms_with(
     layer: &Layer,
     layer_idx: usize,
     gemms: Vec<Gemm>,
     channel_scale: f64,
     configs: &[(String, SaCodingConfig)],
     opts: &AnalysisOptions,
+    backend: &dyn EstimatorBackend,
 ) -> LayerReport {
     let rows = opts.sa.rows;
     let cols = opts.sa.cols;
@@ -200,31 +225,35 @@ fn analyze_gemms(
     let mut total_tiles = 0usize;
     let mut zero_acc = 0.0f64;
 
-    // Spread the per-layer tile budget across the layer's GEMMs.
-    let budget = (opts.max_tiles_per_layer / gemms.len()).max(1);
-    // One scratch allocation set per worker: tiles are built into and
-    // recycled from the same buffers across every pick and GEMM.
-    let mut scratch = TileBuffers::default();
-    for (gi, g) in gemms.iter().enumerate() {
-        let grid = TileGrid::of(g.shape, rows, cols);
-        let plan = TilePlan::sample(
-            &grid,
-            budget,
-            opts.seed ^ (layer_idx as u64) ^ ((gi as u64) << 32),
-        );
-        total_tiles += grid.total();
-        sampled_tiles += plan.picks.len();
-        zero_acc += zero_fraction(&g.a);
-        let scale = plan.scale * channel_scale;
-        for &(mi, ni) in &plan.picks {
-            let tile = extract_tile_into(g, &grid, mi, ni, &mut scratch);
-            for (ci, (_, cfg)) in configs.iter().enumerate() {
-                let counts = analyze_tile(&tile, cfg);
-                let energy = opts.sa.energy.energy(&counts);
-                per_config[ci].0.add(&counts);
-                per_config[ci].1.add(&scale_energy(&energy, scale));
+    // Degenerate layers (e.g. a 0-channel depthwise) lower to no GEMMs;
+    // guard the budget division and the zero-fraction mean below.
+    if !gemms.is_empty() {
+        // Spread the per-layer tile budget across the layer's GEMMs.
+        let budget = (opts.max_tiles_per_layer / gemms.len()).max(1);
+        // One scratch allocation set per worker: tiles are built into and
+        // recycled from the same buffers across every pick and GEMM.
+        let mut scratch = TileBuffers::default();
+        for (gi, g) in gemms.iter().enumerate() {
+            let grid = TileGrid::of(g.shape, rows, cols);
+            let plan = TilePlan::sample(
+                &grid,
+                budget,
+                opts.seed ^ (layer_idx as u64) ^ ((gi as u64) << 32),
+            );
+            total_tiles += grid.total();
+            sampled_tiles += plan.picks.len();
+            zero_acc += zero_fraction(&g.a);
+            let scale = plan.scale * channel_scale;
+            for &(mi, ni) in &plan.picks {
+                let tile = extract_tile_into(g, &grid, mi, ni, &mut scratch);
+                for (ci, (_, cfg)) in configs.iter().enumerate() {
+                    let counts = backend.estimate(&tile, cfg);
+                    let energy = opts.sa.energy.energy(&counts);
+                    per_config[ci].0.add(&counts);
+                    per_config[ci].1.add(&energy.scale(scale));
+                }
+                scratch = tile.into_buffers();
             }
-            scratch = tile.into_buffers();
         }
     }
 
@@ -243,7 +272,12 @@ fn analyze_gemms(
         layer_name: layer.name.clone(),
         layer_index: layer_idx,
         gemm: layer.gemm(),
-        input_zero_frac: zero_acc / gemms.len() as f64,
+        // Mean over GEMMs; 0.0 (not NaN) when the layer lowered to none.
+        input_zero_frac: if gemms.is_empty() {
+            0.0
+        } else {
+            zero_acc / gemms.len() as f64
+        },
         sampled_tiles,
         total_tiles,
         results,
@@ -251,36 +285,50 @@ fn analyze_gemms(
 }
 
 /// The two-config set used by the paper's figures.
+#[deprecated(since = "0.2.0", note = "use engine::ConfigSet::paper()")]
 pub fn paper_configs() -> Vec<(String, SaCodingConfig)> {
-    vec![
-        ("baseline".into(), SaCodingConfig::baseline()),
-        ("proposed".into(), SaCodingConfig::proposed()),
-    ]
+    crate::engine::ConfigSet::paper().into_vec()
 }
 
 /// The full ablation set.
+#[deprecated(since = "0.2.0", note = "use engine::ConfigSet::ablation()")]
 pub fn ablation_configs() -> Vec<(String, SaCodingConfig)> {
-    [
-        "baseline",
-        "proposed",
-        "bic-only",
-        "zvcg-only",
-        "bic-full",
-        "bic-segmented",
-        "bic-exponent",
-    ]
-    .iter()
-    .map(|n| (n.to_string(), SaCodingConfig::by_name(n).unwrap()))
-    .collect()
+    crate::engine::ConfigSet::ablation().into_vec()
 }
 
 #[cfg(test)]
 mod tests {
+    // The deprecated shims stay covered until they are removed.
+    #![allow(deprecated)]
     use super::*;
     use crate::workload::tinycnn;
 
     fn small_opts() -> AnalysisOptions {
         AnalysisOptions { max_tiles_per_layer: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn degenerate_layer_reports_zero_not_nan() {
+        // A 0-channel depthwise layer lowers to zero GEMMs: the report
+        // must come back finite (no NaN zero-fraction, no div-by-zero
+        // budget panic) with zeroed counts/energy.
+        let dw = Layer::depthwise("dw0", 0, 1, 8);
+        let r = analyze_gemms_with(
+            &dw,
+            3,
+            Vec::new(),
+            1.0,
+            crate::engine::ConfigSet::paper().as_slice(),
+            &small_opts(),
+            &crate::engine::AnalyticBackend,
+        );
+        assert_eq!(r.input_zero_frac, 0.0);
+        assert!(r.input_zero_frac.is_finite());
+        assert_eq!((r.sampled_tiles, r.total_tiles), (0, 0));
+        assert_eq!(r.results.len(), 2);
+        assert_eq!(r.energy_of("baseline").unwrap().total(), 0.0);
+        // total-energy savings are undefined on a zero-energy layer
+        assert!(r.savings_pct("baseline", "proposed").is_none());
     }
 
     #[test]

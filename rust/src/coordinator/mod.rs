@@ -3,9 +3,11 @@
 //! Two orchestrations live here:
 //!
 //! * [`analysis`] + [`pipeline`] — the paper's evaluation: per-layer SA
-//!   power analysis of whole CNNs, fanned out over a worker pool
-//!   (std::thread + channels; tokio is not available in this offline
-//!   environment — see DESIGN.md) with deterministic per-layer seeding.
+//!   power analysis of whole CNNs with deterministic per-layer seeding.
+//!   The worker pool sits behind [`crate::engine::SaEngine`] (std::thread
+//!   + channels; tokio is not available in this offline environment —
+//!   see DESIGN.md); this module keeps the report types and the
+//!   estimation core the engine drives.
 //! * [`inference`] — the e2e demo: a dedicated PJRT inference thread
 //!   serving TinyConvNet forward passes from the AOT artifacts, with the
 //!   SA power model analyzing the *actual* activations produced by each

@@ -1,19 +1,22 @@
-//! Network sweep pipeline: fan per-layer analyses out over a worker
-//! pool, merge into a `SweepReport` (the data behind Figs. 4–5 and the
-//! headline numbers).
-
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+//! Whole-network sweep report: the data behind Figs. 4–5 and the
+//! headline numbers.
+//!
+//! The worker pool that used to live here is now the
+//! [`crate::engine::SaEngine`] streaming pool; [`sweep_network`] remains
+//! as a thin deprecated shim over `SaEngine::sweep`.
 
 use crate::coding::SaCodingConfig;
 use crate::workload::Network;
 
-use super::{analyze_layer, AnalysisOptions, LayerReport};
+use super::{AnalysisOptions, LayerReport};
 
 /// Whole-network sweep result.
 #[derive(Clone, Debug)]
 pub struct SweepReport {
     pub network: String,
+    /// Name of the estimator backend that produced the counts
+    /// (report provenance; see `engine::EstimatorBackend`).
+    pub backend: String,
     pub layers: Vec<LayerReport>,
 }
 
@@ -28,6 +31,7 @@ impl SweepReport {
     }
 
     /// Overall percent savings of `b` vs `a` (the paper's 9.4 % / 6.2 %).
+    /// 0.0 when `a` has no energy (unknown name, empty sweep).
     pub fn overall_savings_pct(&self, a: &str, b: &str) -> f64 {
         let ea = self.total_energy(a);
         let eb = self.total_energy(b);
@@ -81,57 +85,42 @@ impl SweepReport {
 
 /// Analyze every layer of a network, `threads`-wide. Results are
 /// deterministic and ordered regardless of thread count.
+#[deprecated(since = "0.2.0", note = "route through engine::SaEngine::sweep")]
 pub fn sweep_network(
     net: &Network,
     configs: &[(String, SaCodingConfig)],
     opts: &AnalysisOptions,
     threads: usize,
 ) -> SweepReport {
-    let threads = threads.max(1).min(net.layers.len().max(1));
-    // Lock-free work distribution: a single shared fetch_add cursor over
-    // the layer index space (no Mutex<Vec> queue, no contention beyond
-    // one atomic per claimed layer).
-    let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<LayerReport>();
-
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            let next = &next;
-            let tx = tx.clone();
-            let layers = &net.layers;
-            s.spawn(move || loop {
-                let idx = next.fetch_add(1, Ordering::Relaxed);
-                if idx >= layers.len() {
-                    break;
-                }
-                let report = analyze_layer(&layers[idx], idx, configs, opts);
-                if tx.send(report).is_err() {
-                    break;
-                }
-            });
-        }
-        drop(tx);
-    });
-
-    let mut layers: Vec<LayerReport> = rx.into_iter().collect();
-    layers.sort_by_key(|l| l.layer_index);
-    SweepReport { network: net.name.clone(), layers }
+    // from_pairs, not with(): legacy callers may pass duplicate names,
+    // which the old implementation tolerated (duplicate report columns).
+    let set = crate::engine::ConfigSet::from_pairs(configs.to_vec());
+    crate::engine::SaEngine::builder()
+        .options(opts.clone())
+        .configs(set)
+        .threads(threads.max(1).min(net.layers.len().max(1)))
+        .build()
+        .sweep(net)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::paper_configs;
+    use crate::engine::{ConfigSet, SaEngine};
     use crate::workload::tinycnn;
 
-    fn opts() -> AnalysisOptions {
-        AnalysisOptions { max_tiles_per_layer: 4, ..Default::default() }
+    fn engine(threads: usize) -> SaEngine {
+        SaEngine::builder()
+            .max_tiles_per_layer(4)
+            .configs(ConfigSet::paper())
+            .threads(threads)
+            .build()
     }
 
     #[test]
     fn sweep_covers_all_layers_in_order() {
         let net = tinycnn();
-        let r = sweep_network(&net, &paper_configs(), &opts(), 3);
+        let r = engine(3).sweep(&net);
         assert_eq!(r.layers.len(), net.layers.len());
         for (i, l) in r.layers.iter().enumerate() {
             assert_eq!(l.layer_index, i);
@@ -140,24 +129,34 @@ mod tests {
     }
 
     #[test]
+    fn deprecated_shim_matches_engine_sweep() {
+        #![allow(deprecated)]
+        let net = tinycnn();
+        let opts = AnalysisOptions { max_tiles_per_layer: 4, ..Default::default() };
+        let shim = sweep_network(
+            &net,
+            ConfigSet::paper().as_slice(),
+            &opts,
+            2,
+        );
+        let direct = engine(2).sweep(&net);
+        assert_eq!(shim.total_energy("proposed"), direct.total_energy("proposed"));
+        assert_eq!(shim.backend, "analytic");
+    }
+
+    #[test]
     fn thread_count_does_not_change_results() {
         let net = tinycnn();
-        let r1 = sweep_network(&net, &paper_configs(), &opts(), 1);
-        let r4 = sweep_network(&net, &paper_configs(), &opts(), 4);
-        assert_eq!(
-            r1.total_energy("proposed"),
-            r4.total_energy("proposed")
-        );
-        assert_eq!(
-            r1.total_energy("baseline"),
-            r4.total_energy("baseline")
-        );
+        let r1 = engine(1).sweep(&net);
+        let r4 = engine(4).sweep(&net);
+        assert_eq!(r1.total_energy("proposed"), r4.total_energy("proposed"));
+        assert_eq!(r1.total_energy("baseline"), r4.total_energy("baseline"));
     }
 
     #[test]
     fn aggregate_metrics_sane() {
         let net = tinycnn();
-        let r = sweep_network(&net, &paper_configs(), &opts(), 2);
+        let r = engine(2).sweep(&net);
         let overall = r.overall_savings_pct("baseline", "proposed");
         assert!(overall > 0.0, "expected savings, got {overall}");
         let act = r.streaming_activity_reduction_pct("baseline", "proposed");

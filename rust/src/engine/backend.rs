@@ -1,0 +1,146 @@
+//! Pluggable estimator backends: how a tile's activity is estimated.
+//!
+//! ## Backend contract
+//!
+//! An [`EstimatorBackend`] maps `(Tile, SaCodingConfig)` to exact
+//! [`ActivityCounts`]. Where two backends both define a count, they must
+//! be **bit-exact**: the analytic model and the cycle simulator are two
+//! derivations of the same RTL semantics, not two approximations
+//! (`rust/tests/property_tests.rs::backends_agree_bit_exactly` enforces
+//! this on random tiles). A future backend that models *different*
+//! hardware (asymmetric floorplan, skewed pipeline) defines its own
+//! counts — but any count it shares with the existing semantics must
+//! keep the same meaning, so energy models and reports stay comparable.
+//!
+//! Backends must be `Send + Sync`: the engine's worker pool shares one
+//! instance across threads. Keep them stateless (or internally locked).
+
+use std::sync::Arc;
+
+use crate::activity::ActivityCounts;
+use crate::coding::SaCodingConfig;
+use crate::sa::{analyze_tile, simulate_tile, Tile};
+
+/// A power-activity estimator for one tile under one coding config.
+pub trait EstimatorBackend: Send + Sync {
+    /// Stable backend name (CLI value, report provenance field).
+    fn name(&self) -> &'static str;
+
+    /// Exact activity counts for streaming `tile` through the array.
+    fn estimate(&self, tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts;
+}
+
+/// The closed-form analytic model (`sa::analyze_tile`) — the fast
+/// default used by full-CNN sweeps.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AnalyticBackend;
+
+impl EstimatorBackend for AnalyticBackend {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn estimate(&self, tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts {
+        analyze_tile(tile, cfg)
+    }
+}
+
+/// The cycle-accurate simulator (`sa::simulate_tile`) — the golden
+/// register-level engine, selectable at runtime for verification runs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CycleBackend;
+
+impl EstimatorBackend for CycleBackend {
+    fn name(&self) -> &'static str {
+        "cycle"
+    }
+
+    fn estimate(&self, tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts {
+        simulate_tile(tile, cfg).counts
+    }
+}
+
+/// Built-in backend selector (the CLI's `--backend analytic|cycle`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    #[default]
+    Analytic,
+    Cycle,
+}
+
+impl BackendKind {
+    pub const ALL: &'static [BackendKind] = &[BackendKind::Analytic, BackendKind::Cycle];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Analytic => "analytic",
+            BackendKind::Cycle => "cycle",
+        }
+    }
+
+    /// `analytic|cycle` — for CLI usage strings.
+    pub fn name_list() -> String {
+        Self::ALL
+            .iter()
+            .map(|k| k.name())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+
+    /// Instantiate the backend behind a shared handle.
+    pub fn instantiate(self) -> Arc<dyn EstimatorBackend> {
+        match self {
+            BackendKind::Analytic => Arc::new(AnalyticBackend),
+            BackendKind::Cycle => Arc::new(CycleBackend),
+        }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|k| k.name() == s)
+            .ok_or_else(|| {
+                format!("unknown backend '{s}'; available: {}", Self::name_list())
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    fn small_tile() -> Tile {
+        let mut rng = Rng64::new(11);
+        let a: Vec<f32> = (0..6 * 20)
+            .map(|_| if rng.chance(0.4) { 0.0 } else { rng.normal() as f32 })
+            .collect();
+        let b: Vec<f32> = (0..20 * 5).map(|_| (rng.normal() * 0.1) as f32).collect();
+        Tile::from_f32(&a, &b, 6, 20, 5)
+    }
+
+    #[test]
+    fn backends_are_bit_exact_on_a_shared_tile() {
+        let t = small_tile();
+        for (name, cfg) in crate::engine::ConfigSet::ablation().iter() {
+            let a = AnalyticBackend.estimate(&t, cfg);
+            let c = CycleBackend.estimate(&t, cfg);
+            assert_eq!(a, c, "backend divergence under '{name}'");
+        }
+    }
+
+    #[test]
+    fn kind_parses_and_names() {
+        assert_eq!("analytic".parse::<BackendKind>().unwrap(), BackendKind::Analytic);
+        assert_eq!("cycle".parse::<BackendKind>().unwrap(), BackendKind::Cycle);
+        assert!("rtl".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::name_list(), "analytic|cycle");
+        assert_eq!(BackendKind::Cycle.instantiate().name(), "cycle");
+        assert_eq!(BackendKind::default(), BackendKind::Analytic);
+    }
+}

@@ -1,0 +1,468 @@
+//! The `SaEngine`: one configured entry point for SA power analysis.
+//!
+//! An engine owns (a) the analysis options (geometry, seeding, sampling),
+//! (b) a [`ConfigSet`] of named coding configurations, (c) an
+//! [`EstimatorBackend`], and (d) a persistent worker pool. Two call
+//! shapes sit on top:
+//!
+//! * **batch** — [`SaEngine::sweep`] analyzes a whole network and
+//!   returns an ordered [`SweepReport`];
+//! * **streaming** — [`SaEngine::submit`] enqueues one [`LayerJob`] and
+//!   returns a [`JobHandle`]; the finished [`LayerReport`] is delivered
+//!   over the handle's channel as soon as a worker completes it. The
+//!   batch API is implemented on top of this path, so both share the
+//!   same pool, ordering and determinism guarantees.
+//!
+//! Determinism: results depend only on options + configs + backend, never
+//! on thread count or completion order (per-layer seeding, sorted merge).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::{
+    analyze_gemms_with, build_gemms_from_data, build_layer_gemms, AnalysisOptions,
+    LayerReport, SweepReport,
+};
+use crate::sa::SaConfig;
+use crate::workload::{Layer, Network};
+
+use super::backend::{BackendKind, EstimatorBackend};
+use super::registry::ConfigSet;
+
+/// Input data for a [`LayerJob`] when the caller supplies real tensors
+/// (e.g. activations captured from the e2e inference server) instead of
+/// the synthetic generators.
+#[derive(Clone, Debug)]
+pub struct LayerData {
+    /// Input feature map, layer-native layout (`h×w×cin`, NHWC).
+    pub feature_map: Vec<f32>,
+    /// Weights, GEMM layout (`k×n`).
+    pub weights: Vec<f32>,
+}
+
+/// One unit of streaming work: analyze a single layer under every
+/// configuration in the engine's [`ConfigSet`].
+#[derive(Clone, Debug)]
+pub struct LayerJob {
+    pub layer: Layer,
+    /// Network position — drives deterministic per-layer seeding and
+    /// report ordering.
+    pub layer_index: usize,
+    /// `None` → synthetic data from the workload generators.
+    pub data: Option<LayerData>,
+}
+
+impl LayerJob {
+    /// Analyze with synthetic (generator) data — the figure-sweep path.
+    pub fn synthetic(layer: Layer, layer_index: usize) -> Self {
+        LayerJob { layer, layer_index, data: None }
+    }
+
+    /// Analyze caller-provided tensors — the serving/e2e path.
+    pub fn with_data(
+        layer: Layer,
+        layer_index: usize,
+        feature_map: Vec<f32>,
+        weights: Vec<f32>,
+    ) -> Self {
+        LayerJob { layer, layer_index, data: Some(LayerData { feature_map, weights }) }
+    }
+}
+
+/// Receiving side of one submitted job. The report arrives on an
+/// internal channel the moment a pool worker finishes it.
+pub struct JobHandle {
+    layer_index: usize,
+    rx: mpsc::Receiver<LayerReport>,
+}
+
+impl JobHandle {
+    pub fn layer_index(&self) -> usize {
+        self.layer_index
+    }
+
+    /// Block until the report is ready.
+    pub fn wait(self) -> LayerReport {
+        self.rx.recv().expect("engine worker pool terminated")
+    }
+
+    /// Non-blocking poll; `None` while the job is still running. Panics
+    /// (like [`JobHandle::wait`]) if the worker died before replying, so
+    /// pollers can't spin forever on a dead pool.
+    pub fn try_wait(&self) -> Option<LayerReport> {
+        match self.rx.try_recv() {
+            Ok(report) => Some(report),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                panic!("engine worker pool terminated")
+            }
+        }
+    }
+}
+
+/// What workers share: the full analysis context.
+struct EngineShared {
+    opts: AnalysisOptions,
+    configs: ConfigSet,
+    backend: Arc<dyn EstimatorBackend>,
+}
+
+impl EngineShared {
+    fn analyze(
+        &self,
+        layer: &Layer,
+        layer_index: usize,
+        data: Option<LayerData>,
+    ) -> LayerReport {
+        let (gemms, channel_scale) = match data {
+            Some(d) => build_gemms_from_data(layer, d.feature_map, d.weights, &self.opts),
+            None => build_layer_gemms(layer, layer_index, &self.opts),
+        };
+        analyze_gemms_with(
+            layer,
+            layer_index,
+            gemms,
+            channel_scale,
+            self.configs.as_slice(),
+            &self.opts,
+            self.backend.as_ref(),
+        )
+    }
+}
+
+/// Internal pool message.
+struct Job {
+    layer: Layer,
+    layer_index: usize,
+    data: Option<LayerData>,
+    reply: mpsc::Sender<LayerReport>,
+}
+
+/// Builder for [`SaEngine`]. Defaults: 16×16 paper SA, paper config set,
+/// analytic backend, one worker per available core.
+pub struct SaEngineBuilder {
+    opts: AnalysisOptions,
+    configs: ConfigSet,
+    backend: Arc<dyn EstimatorBackend>,
+    threads: usize,
+}
+
+impl Default for SaEngineBuilder {
+    fn default() -> Self {
+        SaEngineBuilder {
+            opts: AnalysisOptions::default(),
+            configs: ConfigSet::paper(),
+            backend: BackendKind::Analytic.instantiate(),
+            threads: default_threads(),
+        }
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+}
+
+impl SaEngineBuilder {
+    /// SA geometry + energy/area models.
+    pub fn sa(mut self, sa: SaConfig) -> Self {
+        self.opts.sa = sa;
+        self
+    }
+
+    /// Replace the whole option block (sampling, seed, geometry).
+    pub fn options(mut self, opts: AnalysisOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Base seed for synthetic data.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.opts.seed = seed;
+        self
+    }
+
+    /// Max tiles analyzed per layer GEMM (energy is scaled up).
+    pub fn max_tiles_per_layer(mut self, tiles: usize) -> Self {
+        self.opts.max_tiles_per_layer = tiles;
+        self
+    }
+
+    /// Max depthwise channels analyzed per layer (scaled up).
+    pub fn max_dw_channels(mut self, channels: usize) -> Self {
+        self.opts.max_dw_channels = channels;
+        self
+    }
+
+    /// The named configurations every report will cover.
+    pub fn configs(mut self, configs: ConfigSet) -> Self {
+        self.configs = configs;
+        self
+    }
+
+    /// Select a built-in backend.
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend = kind.instantiate();
+        self
+    }
+
+    /// Plug an external estimator implementation.
+    pub fn backend_impl(mut self, backend: Arc<dyn EstimatorBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Worker pool width (clamped to ≥ 1).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Spawn the worker pool and finish the engine.
+    pub fn build(self) -> SaEngine {
+        let shared = Arc::new(EngineShared {
+            opts: self.opts,
+            configs: self.configs,
+            backend: self.backend,
+        });
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..self.threads.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || loop {
+                    // Hold the queue lock only for the dequeue; the
+                    // guard is a temporary, dropped before analysis.
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(job) => job,
+                        Err(_) => break, // engine dropped
+                    };
+                    let report =
+                        shared.analyze(&job.layer, job.layer_index, job.data);
+                    // A dropped JobHandle just discards the report.
+                    let _ = job.reply.send(report);
+                })
+            })
+            .collect();
+        SaEngine { shared, tx: Some(tx), workers }
+    }
+}
+
+/// The unified power-analysis engine. See the module docs for the two
+/// call shapes; construct via [`SaEngine::builder`].
+pub struct SaEngine {
+    shared: Arc<EngineShared>,
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl SaEngine {
+    pub fn builder() -> SaEngineBuilder {
+        SaEngineBuilder::default()
+    }
+
+    /// The engine's analysis options (read-only).
+    pub fn options(&self) -> &AnalysisOptions {
+        &self.shared.opts
+    }
+
+    /// The engine's SA instance configuration.
+    pub fn sa(&self) -> &SaConfig {
+        &self.shared.opts.sa
+    }
+
+    /// The named configurations every report covers.
+    pub fn configs(&self) -> &ConfigSet {
+        &self.shared.configs
+    }
+
+    /// Name of the active estimator backend.
+    pub fn backend_name(&self) -> &'static str {
+        self.shared.backend.name()
+    }
+
+    /// Worker pool width.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue one layer job on the worker pool; the report is delivered
+    /// through the returned handle when done.
+    pub fn submit(&self, job: LayerJob) -> JobHandle {
+        let (reply, rx) = mpsc::channel();
+        let layer_index = job.layer_index;
+        self.tx
+            .as_ref()
+            .expect("engine pool already shut down")
+            .send(Job { layer: job.layer, layer_index, data: job.data, reply })
+            .expect("engine worker pool terminated");
+        JobHandle { layer_index, rx }
+    }
+
+    /// Analyze every layer of `net` (synthetic data) across the pool and
+    /// return the merged, layer-ordered report.
+    pub fn sweep(&self, net: &Network) -> SweepReport {
+        let handles: Vec<JobHandle> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| self.submit(LayerJob::synthetic(l.clone(), i)))
+            .collect();
+        let mut layers: Vec<LayerReport> =
+            handles.into_iter().map(JobHandle::wait).collect();
+        layers.sort_by_key(|l| l.layer_index);
+        SweepReport {
+            network: net.name.clone(),
+            backend: self.backend_name().to_string(),
+            layers,
+        }
+    }
+
+    /// Analyze one layer synchronously on the caller's thread
+    /// (synthetic data).
+    pub fn analyze_layer(&self, layer: &Layer, layer_index: usize) -> LayerReport {
+        self.shared.analyze(layer, layer_index, None)
+    }
+
+    /// Analyze one layer synchronously with caller-provided tensors.
+    pub fn analyze_layer_with_data(
+        &self,
+        layer: &Layer,
+        layer_index: usize,
+        feature_map: Vec<f32>,
+        weights: Vec<f32>,
+    ) -> LayerReport {
+        self.shared
+            .analyze(layer, layer_index, Some(LayerData { feature_map, weights }))
+    }
+}
+
+impl Drop for SaEngine {
+    fn drop(&mut self) {
+        // Closing the channel unblocks every worker's recv().
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ConfigRegistry;
+    use crate::workload::tinycnn;
+
+    fn small_engine(threads: usize, kind: BackendKind) -> SaEngine {
+        SaEngine::builder()
+            .max_tiles_per_layer(2)
+            .threads(threads)
+            .backend(kind)
+            .build()
+    }
+
+    #[test]
+    fn builder_defaults_match_paper_setup() {
+        let e = SaEngine::builder().build();
+        assert_eq!((e.sa().rows, e.sa().cols), (16, 16));
+        assert_eq!(e.configs().names(), ["baseline", "proposed"]);
+        assert_eq!(e.backend_name(), "analytic");
+        assert_eq!(e.options().seed, 0xCAFE);
+        assert!(e.threads() >= 1);
+    }
+
+    #[test]
+    fn sweep_is_ordered_and_thread_invariant() {
+        let net = tinycnn();
+        let r1 = small_engine(1, BackendKind::Analytic).sweep(&net);
+        let r4 = small_engine(4, BackendKind::Analytic).sweep(&net);
+        assert_eq!(r1.layers.len(), net.layers.len());
+        for (i, l) in r1.layers.iter().enumerate() {
+            assert_eq!(l.layer_index, i);
+        }
+        assert_eq!(r1.total_energy("proposed"), r4.total_energy("proposed"));
+        assert_eq!(r1.total_energy("baseline"), r4.total_energy("baseline"));
+        assert_eq!(r1.backend, "analytic");
+    }
+
+    #[test]
+    fn streaming_submit_matches_sync_analysis() {
+        let net = tinycnn();
+        let e = small_engine(3, BackendKind::Analytic);
+        // submit in reverse order to exercise out-of-order completion
+        let handles: Vec<JobHandle> = net
+            .layers
+            .iter()
+            .enumerate()
+            .rev()
+            .map(|(i, l)| e.submit(LayerJob::synthetic(l.clone(), i)))
+            .collect();
+        for h in handles {
+            let idx = h.layer_index();
+            let streamed = h.wait();
+            let sync = e.analyze_layer(&net.layers[idx], idx);
+            assert_eq!(streamed.layer_index, idx);
+            assert_eq!(
+                streamed.energy_of("proposed").unwrap().total(),
+                sync.energy_of("proposed").unwrap().total()
+            );
+            assert_eq!(streamed.results[0].counts, sync.results[0].counts);
+        }
+    }
+
+    #[test]
+    fn cycle_backend_reproduces_analytic_counts() {
+        let net = tinycnn();
+        let a = small_engine(2, BackendKind::Analytic).sweep(&net);
+        let c = small_engine(2, BackendKind::Cycle).sweep(&net);
+        assert_eq!(c.backend, "cycle");
+        for (la, lc) in a.layers.iter().zip(&c.layers) {
+            for (ra, rc) in la.results.iter().zip(&lc.results) {
+                assert_eq!(ra.counts, rc.counts, "layer {}", la.layer_name);
+            }
+        }
+        assert_eq!(a.total_energy("proposed"), c.total_energy("proposed"));
+    }
+
+    #[test]
+    fn with_data_jobs_flow_through_the_pool() {
+        let net = tinycnn();
+        let l = &net.layers[1];
+        let e = small_engine(2, BackendKind::Analytic);
+        let fm = crate::workload::gen_feature_map(l, 0xCAFE, 1);
+        let w = crate::workload::gen_weights(l, 0xCAFE, 1);
+        let h = e.submit(LayerJob::with_data(l.clone(), 1, fm.clone(), w.clone()));
+        let streamed = h.wait();
+        let sync = e.analyze_layer_with_data(l, 1, fm, w);
+        assert_eq!(
+            streamed.energy_of("baseline").unwrap().total(),
+            sync.energy_of("baseline").unwrap().total()
+        );
+        // synthetic path generates the same tensors for this layer/seed
+        let synth = e.analyze_layer(l, 1);
+        assert_eq!(streamed.results[0].counts, synth.results[0].counts);
+    }
+
+    #[test]
+    fn custom_config_set_reaches_reports() {
+        let net = tinycnn();
+        let set = ConfigSet::paper().with(
+            "proposed+w-zvcg",
+            crate::coding::SaCodingConfig {
+                weight_zvcg: true,
+                ..crate::coding::SaCodingConfig::proposed()
+            },
+        );
+        let e = SaEngine::builder()
+            .max_tiles_per_layer(2)
+            .configs(set)
+            .threads(2)
+            .build();
+        let r = e.analyze_layer(&net.layers[1], 1);
+        assert_eq!(r.results.len(), 3);
+        assert!(r.energy_of("proposed+w-zvcg").unwrap().total() > 0.0);
+        // registry names remain addressable
+        assert!(ConfigRegistry::lookup("proposed").is_some());
+    }
+}

@@ -1,0 +1,187 @@
+//! Serde-free JSON serialization of analysis reports.
+//!
+//! Mirrors `util::bench`'s hand-rolled JSON approach: reports become
+//! machine-readable artifacts without pulling serde into the offline
+//! build. The document layout is pinned by a golden test
+//! (`rust/tests/engine_api.rs`), so downstream consumers can rely on it;
+//! bump the `schema` tag when changing the shape.
+//!
+//! Schema (`sa-lowpower.sweep-report.v1`):
+//!
+//! ```text
+//! { "schema", "network", "backend",
+//!   "layers": [ { "layer", "index", "gemm": {m,k,n},
+//!                 "input_zero_frac", "sampled_tiles", "total_tiles",
+//!                 "results": [ { "config", "coding",
+//!                                "counts": { ...all ActivityCounts fields,
+//!                                            "streaming_toggles" },
+//!                                "energy": { ...all EnergyBreakdown fields,
+//!                                            "streaming","compute","total" } } ] } ] }
+//! ```
+//!
+//! Energies are femtojoules; counts are exact integers. The derived
+//! fields (`streaming_toggles`, `streaming`, `compute`, `total`) are
+//! included so consumers never re-implement the component groupings.
+
+use crate::activity::ActivityCounts;
+use crate::coordinator::{ConfigResult, LayerReport, SweepReport};
+use crate::power::EnergyBreakdown;
+use crate::util::json::Json;
+
+/// Schema tag embedded in every sweep-report document.
+pub const SWEEP_REPORT_SCHEMA: &str = "sa-lowpower.sweep-report.v1";
+
+impl EnergyBreakdown {
+    /// JSON object of every component plus the derived groupings.
+    pub fn to_json_value(&self) -> Json {
+        let mut o = Json::object();
+        o.push("west_data", self.west_data);
+        o.push("west_clock", self.west_clock);
+        o.push("west_gating", self.west_gating);
+        o.push("north_data", self.north_data);
+        o.push("north_clock", self.north_clock);
+        o.push("north_coding", self.north_coding);
+        o.push("mult", self.mult);
+        o.push("add_acc", self.add_acc);
+        o.push("acc_clock", self.acc_clock);
+        o.push("unload", self.unload);
+        o.push("streaming", self.streaming());
+        o.push("compute", self.compute());
+        o.push("total", self.total());
+        o
+    }
+
+    /// Standalone JSON document for one breakdown.
+    pub fn to_json(&self) -> String {
+        self.to_json_value().render()
+    }
+}
+
+impl ActivityCounts {
+    /// JSON object of the full event ledger.
+    pub fn to_json_value(&self) -> Json {
+        let mut o = Json::object();
+        o.push("west_data_toggles", self.west_data_toggles);
+        o.push("west_clock_events", self.west_clock_events);
+        o.push("west_sideband_toggles", self.west_sideband_toggles);
+        o.push("west_sideband_clock_events", self.west_sideband_clock_events);
+        o.push("zero_detect_ops", self.zero_detect_ops);
+        o.push("west_cg_cell_cycles", self.west_cg_cell_cycles);
+        o.push("north_data_toggles", self.north_data_toggles);
+        o.push("north_clock_events", self.north_clock_events);
+        o.push("north_sideband_toggles", self.north_sideband_toggles);
+        o.push("north_sideband_clock_events", self.north_sideband_clock_events);
+        o.push("encoder_ops", self.encoder_ops);
+        o.push("decoder_toggles", self.decoder_toggles);
+        o.push("north_cg_cell_cycles", self.north_cg_cell_cycles);
+        o.push("mult_input_toggles", self.mult_input_toggles);
+        o.push("active_macs", self.active_macs);
+        o.push("gated_macs", self.gated_macs);
+        o.push("zero_product_macs", self.zero_product_macs);
+        o.push("acc_clock_events", self.acc_clock_events);
+        o.push("acc_cg_cell_cycles", self.acc_cg_cell_cycles);
+        o.push("unload_values", self.unload_values);
+        o.push("cycles", self.cycles);
+        o.push("streaming_toggles", self.streaming_toggles());
+        o
+    }
+}
+
+impl ConfigResult {
+    pub fn to_json_value(&self) -> Json {
+        let mut o = Json::object();
+        o.push("config", self.config_name.as_str());
+        o.push("coding", self.config.describe());
+        o.push("counts", self.counts.to_json_value());
+        o.push("energy", self.energy.to_json_value());
+        o
+    }
+}
+
+impl LayerReport {
+    pub fn to_json_value(&self) -> Json {
+        let mut gemm = Json::object();
+        gemm.push("m", self.gemm.m);
+        gemm.push("k", self.gemm.k);
+        gemm.push("n", self.gemm.n);
+        let mut o = Json::object();
+        o.push("layer", self.layer_name.as_str());
+        o.push("index", self.layer_index);
+        o.push("gemm", gemm);
+        o.push("input_zero_frac", self.input_zero_frac);
+        o.push("sampled_tiles", self.sampled_tiles);
+        o.push("total_tiles", self.total_tiles);
+        o.push(
+            "results",
+            Json::Arr(self.results.iter().map(|r| r.to_json_value()).collect()),
+        );
+        o
+    }
+
+    /// Standalone JSON document for one layer.
+    pub fn to_json(&self) -> String {
+        self.to_json_value().render()
+    }
+}
+
+impl SweepReport {
+    pub fn to_json_value(&self) -> Json {
+        let mut o = Json::object();
+        o.push("schema", SWEEP_REPORT_SCHEMA);
+        o.push("network", self.network.as_str());
+        o.push("backend", self.backend.as_str());
+        o.push(
+            "layers",
+            Json::Arr(self.layers.iter().map(|l| l.to_json_value()).collect()),
+        );
+        o
+    }
+
+    /// The full machine-readable report document.
+    pub fn to_json(&self) -> String {
+        self.to_json_value().render()
+    }
+
+    /// Write the report document to `path` (parent dirs created).
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_json_includes_derived_groupings() {
+        let e = EnergyBreakdown {
+            west_data: 1.5,
+            north_data: 2.0,
+            mult: 8.0,
+            unload: 1.0,
+            ..Default::default()
+        };
+        let v = Json::parse(&e.to_json()).unwrap();
+        assert_eq!(v.get("streaming").unwrap().as_f64(), Some(3.5));
+        assert_eq!(v.get("compute").unwrap().as_f64(), Some(8.0));
+        assert_eq!(v.get("total").unwrap().as_f64(), Some(12.5));
+    }
+
+    #[test]
+    fn counts_json_covers_every_ledger_field() {
+        let c = ActivityCounts { cycles: 7, gated_macs: 3, ..Default::default() };
+        let v = c.to_json_value();
+        // 21 ledger fields + 1 derived
+        match &v {
+            Json::Obj(pairs) => assert_eq!(pairs.len(), 22),
+            other => panic!("expected object, got {other:?}"),
+        }
+        assert_eq!(v.get("cycles").unwrap().as_u64(), Some(7));
+        assert_eq!(v.get("gated_macs").unwrap().as_u64(), Some(3));
+    }
+}

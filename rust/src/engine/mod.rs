@@ -1,0 +1,54 @@
+//! The unified power-analysis engine — the one public entry point for
+//! everything that estimates SA power.
+//!
+//! Built from four pieces:
+//!
+//! * [`registry`] — the typed configuration registry: one static table
+//!   ([`CONFIG_TABLE`]) is the source of truth for named coding
+//!   configurations; [`ConfigSet`] replaces hand-assembled
+//!   `Vec<(String, SaCodingConfig)>` lists everywhere.
+//! * [`backend`] — the [`EstimatorBackend`] trait with the two built-in
+//!   implementations ([`AnalyticBackend`], [`CycleBackend`]); analytic
+//!   vs cycle-accurate is a runtime choice (`--backend`), and alternative
+//!   estimators (asymmetric floorplan, skewed pipeline — see PAPERS.md)
+//!   are one `impl` away.
+//! * [`core`] — [`SaEngine`] + builder: batch sweeps and the streaming
+//!   job API over one persistent worker pool.
+//! * [`json`] — serde-free JSON serialization of
+//!   [`SweepReport`](crate::coordinator::SweepReport) /
+//!   [`LayerReport`](crate::coordinator::LayerReport) /
+//!   [`EnergyBreakdown`](crate::power::EnergyBreakdown), schema-pinned
+//!   by a golden test.
+//!
+//! ## Backend contract
+//!
+//! Counts must stay **bit-exact between backends** wherever both define
+//! them — see the [`backend`] module docs for the full contract and
+//! `rust/tests/property_tests.rs` for the enforcement.
+//!
+//! ## Typical use
+//!
+//! ```no_run
+//! use sa_lowpower::engine::{BackendKind, ConfigSet, SaEngine};
+//! use sa_lowpower::workload::Network;
+//!
+//! let engine = SaEngine::builder()
+//!     .configs(ConfigSet::paper())
+//!     .backend(BackendKind::Analytic)
+//!     .threads(8)
+//!     .build();
+//! let sweep = engine.sweep(&Network::by_name("resnet50").unwrap());
+//! println!("{:.1} %", sweep.overall_savings_pct("baseline", "proposed"));
+//! std::fs::write("sweep.json", sweep.to_json()).unwrap();
+//! ```
+
+mod backend;
+// `self::` disambiguates from the `core` crate under uniform paths.
+mod core;
+mod json;
+mod registry;
+
+pub use self::backend::{AnalyticBackend, BackendKind, CycleBackend, EstimatorBackend};
+pub use self::core::{JobHandle, LayerData, LayerJob, SaEngine, SaEngineBuilder};
+pub use self::json::SWEEP_REPORT_SCHEMA;
+pub use self::registry::{ConfigEntry, ConfigRegistry, ConfigSet, CONFIG_TABLE};

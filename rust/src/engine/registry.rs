@@ -1,0 +1,298 @@
+//! The typed configuration registry: one static table naming every
+//! coding configuration the system knows about.
+//!
+//! Everything that used to carry its own name list — `SaCodingConfig::
+//! by_name`, the coordinator's `paper_configs`/`ablation_configs`, the
+//! CLI usage text — now derives from [`CONFIG_TABLE`]. Adding a
+//! configuration here makes it addressable by name everywhere at once.
+
+use crate::coding::SaCodingConfig;
+
+/// One row of the registry: a named, documented coding configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ConfigEntry {
+    /// Canonical name (CLI `--config` value, report column key).
+    pub name: &'static str,
+    /// Accepted alternative spellings.
+    pub aliases: &'static [&'static str],
+    /// One-line description (usage text, docs).
+    pub summary: &'static str,
+    /// The configuration itself.
+    pub config: SaCodingConfig,
+    /// Member of the paper's two-config figure set (Figs. 4/5, headline).
+    pub paper_set: bool,
+    /// Member of the full ablation set.
+    pub ablation_set: bool,
+}
+
+/// The single source of truth for named coding configurations.
+pub const CONFIG_TABLE: &[ConfigEntry] = &[
+    ConfigEntry {
+        name: "baseline",
+        aliases: &["conventional"],
+        summary: "conventional SA, no power-saving features",
+        config: SaCodingConfig::baseline(),
+        paper_set: true,
+        ablation_set: true,
+    },
+    ConfigEntry {
+        name: "proposed",
+        aliases: &[],
+        summary: "mantissa BIC on weights + zero-value clock gating on inputs",
+        config: SaCodingConfig::proposed(),
+        paper_set: true,
+        ablation_set: true,
+    },
+    ConfigEntry {
+        name: "bic-only",
+        aliases: &[],
+        summary: "mantissa BIC on weights, no input gating",
+        config: SaCodingConfig::bic_only(),
+        paper_set: false,
+        ablation_set: true,
+    },
+    ConfigEntry {
+        name: "zvcg-only",
+        aliases: &[],
+        summary: "input zero-value clock gating, no weight coding",
+        config: SaCodingConfig::zvcg_only(),
+        paper_set: false,
+        ablation_set: true,
+    },
+    ConfigEntry {
+        name: "bic-full",
+        aliases: &[],
+        summary: "full-bus BIC on weights (16 lines, one decision)",
+        config: SaCodingConfig::bic_full(),
+        paper_set: false,
+        ablation_set: true,
+    },
+    ConfigEntry {
+        name: "bic-segmented",
+        aliases: &[],
+        summary: "field-segmented BIC on weights",
+        config: SaCodingConfig::bic_segmented(),
+        paper_set: false,
+        ablation_set: true,
+    },
+    ConfigEntry {
+        name: "bic-exponent",
+        aliases: &[],
+        summary: "exponent-only BIC on weights (Fig. 2 counter-case)",
+        config: SaCodingConfig::bic_exponent(),
+        paper_set: false,
+        ablation_set: true,
+    },
+];
+
+/// Lookup facade over [`CONFIG_TABLE`].
+pub struct ConfigRegistry;
+
+impl ConfigRegistry {
+    /// All registered entries, in table order.
+    pub fn entries() -> &'static [ConfigEntry] {
+        CONFIG_TABLE
+    }
+
+    /// Find an entry by canonical name or alias.
+    pub fn lookup(name: &str) -> Option<&'static ConfigEntry> {
+        CONFIG_TABLE
+            .iter()
+            .find(|e| e.name == name || e.aliases.contains(&name))
+    }
+
+    /// Canonical names, in table order.
+    pub fn names() -> impl Iterator<Item = &'static str> {
+        CONFIG_TABLE.iter().map(|e| e.name)
+    }
+
+    /// `baseline|proposed|...` — for CLI usage strings.
+    pub fn name_list() -> String {
+        Self::names().collect::<Vec<_>>().join("|")
+    }
+}
+
+/// An ordered, named set of coding configurations — the typed
+/// replacement for hand-assembled `Vec<(String, SaCodingConfig)>` lists.
+///
+/// Sets are built from the registry ([`ConfigSet::paper`],
+/// [`ConfigSet::ablation`], [`ConfigSet::from_names`]) and may be
+/// extended with ad-hoc experimental configurations via
+/// [`ConfigSet::with`] (e.g. the pruning extension's `proposed+w-zvcg`).
+#[derive(Clone, Debug, Default)]
+pub struct ConfigSet {
+    entries: Vec<(String, SaCodingConfig)>,
+}
+
+impl ConfigSet {
+    /// Empty set (extend with [`ConfigSet::with`]).
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// The paper's two-config figure set (baseline vs proposed).
+    pub fn paper() -> Self {
+        Self::from_table(|e| e.paper_set)
+    }
+
+    /// The full ablation set.
+    pub fn ablation() -> Self {
+        Self::from_table(|e| e.ablation_set)
+    }
+
+    /// Every registered configuration.
+    pub fn all() -> Self {
+        Self::from_table(|_| true)
+    }
+
+    fn from_table(pred: impl Fn(&ConfigEntry) -> bool) -> Self {
+        ConfigSet {
+            entries: CONFIG_TABLE
+                .iter()
+                .filter(|e| pred(e))
+                .map(|e| (e.name.to_string(), e.config))
+                .collect(),
+        }
+    }
+
+    /// Build a set from registry names. Errors on the first unknown name
+    /// with the valid list.
+    pub fn from_names<'a, I: IntoIterator<Item = &'a str>>(
+        names: I,
+    ) -> Result<Self, String> {
+        let mut set = ConfigSet::empty();
+        for name in names {
+            let entry = ConfigRegistry::lookup(name).ok_or_else(|| {
+                format!(
+                    "unknown config '{name}'; registered: {}",
+                    ConfigRegistry::name_list()
+                )
+            })?;
+            set = set.with(entry.name, entry.config);
+        }
+        Ok(set)
+    }
+
+    /// One named configuration from the registry.
+    pub fn single(name: &str) -> Result<Self, String> {
+        Self::from_names([name])
+    }
+
+    /// Append a (possibly unregistered, experimental) named
+    /// configuration. Panics on duplicate names — result lookup is by
+    /// name, so duplicates would silently shadow each other.
+    pub fn with(mut self, name: impl Into<String>, config: SaCodingConfig) -> Self {
+        let name = name.into();
+        assert!(
+            self.get(&name).is_none(),
+            "duplicate config name '{name}' in ConfigSet"
+        );
+        self.entries.push((name, config));
+        self
+    }
+
+    /// Adopt a legacy name/config list verbatim — no duplicate-name
+    /// check, because the deprecated shims must accept whatever their
+    /// pre-registry callers passed (duplicates produced duplicate report
+    /// columns, not errors).
+    pub(crate) fn from_pairs(entries: Vec<(String, SaCodingConfig)>) -> Self {
+        ConfigSet { entries }
+    }
+
+    /// Configuration lookup by name within this set.
+    pub fn get(&self, name: &str) -> Option<&SaCodingConfig> {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, c)| c)
+    }
+
+    /// Names in set order.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(String, SaCodingConfig)> {
+        self.entries.iter()
+    }
+
+    /// View as the legacy slice shape consumed by the analysis layer.
+    pub fn as_slice(&self) -> &[(String, SaCodingConfig)] {
+        &self.entries
+    }
+
+    /// Convert into the legacy owned shape (deprecated-shim interop).
+    pub fn into_vec(self) -> Vec<(String, SaCodingConfig)> {
+        self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_legacy_by_name() {
+        // The legacy lookup delegates here; both views must agree for
+        // every canonical name and alias.
+        for e in ConfigRegistry::entries() {
+            assert_eq!(SaCodingConfig::by_name(e.name), Some(e.config), "{}", e.name);
+            for alias in e.aliases {
+                assert_eq!(
+                    SaCodingConfig::by_name(alias),
+                    Some(e.config),
+                    "alias {alias}"
+                );
+            }
+        }
+        assert!(ConfigRegistry::lookup("bogus").is_none());
+    }
+
+    #[test]
+    fn paper_and_ablation_sets_cover_the_table() {
+        let paper = ConfigSet::paper();
+        assert_eq!(paper.names(), ["baseline", "proposed"]);
+        let ablation = ConfigSet::ablation();
+        assert_eq!(ablation.len(), CONFIG_TABLE.len());
+        assert_eq!(ablation.names()[0], "baseline");
+        assert!(ablation.get("bic-exponent").is_some());
+    }
+
+    #[test]
+    fn from_names_validates() {
+        let set = ConfigSet::from_names(["proposed", "conventional"]).unwrap();
+        // aliases canonicalize
+        assert_eq!(set.names(), ["proposed", "baseline"]);
+        let err = ConfigSet::from_names(["nope"]).unwrap_err();
+        assert!(err.contains("nope") && err.contains("baseline"), "{err}");
+    }
+
+    #[test]
+    fn with_extends_and_rejects_duplicates() {
+        let set = ConfigSet::paper().with(
+            "proposed+w-zvcg",
+            SaCodingConfig { weight_zvcg: true, ..SaCodingConfig::proposed() },
+        );
+        assert_eq!(set.len(), 3);
+        assert!(set.get("proposed+w-zvcg").unwrap().weight_zvcg);
+        let dup = std::panic::catch_unwind(|| {
+            ConfigSet::paper().with("baseline", SaCodingConfig::baseline())
+        });
+        assert!(dup.is_err(), "duplicate name must panic");
+    }
+
+    #[test]
+    fn name_list_is_pipe_separated() {
+        let l = ConfigRegistry::name_list();
+        assert!(l.starts_with("baseline|proposed"));
+        assert_eq!(l.matches('|').count(), CONFIG_TABLE.len() - 1);
+    }
+}

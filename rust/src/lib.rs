@@ -21,8 +21,11 @@
 //!   im2col lowering, GEMM tiling.
 //! * [`stats`] — value-distribution statistics (paper Fig. 2).
 //! * [`runtime`] — PJRT client wrapper, AOT artifact loading.
-//! * [`coordinator`] — the L3 pipeline: tile scheduling, worker pool,
-//!   report aggregation.
+//! * [`engine`] — the unified entry point: typed config registry,
+//!   pluggable estimator backends, batch + streaming job APIs, JSON
+//!   reports.
+//! * [`coordinator`] — the L3 pipeline: tile scheduling, report types
+//!   (the worker pool now lives behind [`engine`]).
 //! * [`report`] — table / CSV emitters for the paper's figures.
 //! * [`util`] — in-tree RNG, CLI, bench and property-test harnesses.
 
@@ -30,6 +33,7 @@ pub mod activity;
 pub mod bf16;
 pub mod coding;
 pub mod coordinator;
+pub mod engine;
 pub mod power;
 pub mod report;
 pub mod runtime;

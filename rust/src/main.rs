@@ -10,19 +10,27 @@
 //! sa-lowpower ablation  [--net X] [--tiles N] [--threads N] [--seed N]
 //! sa-lowpower area      [--rows N] [--cols N]
 //! sa-lowpower simulate  [--m N] [--k N] [--n N] [--sparsity F] [--config C]
+//!                       [--backend analytic|cycle]
 //! sa-lowpower e2e       [--requests N] [--artifacts DIR] [--seed N]
 //! ```
+//!
+//! All power estimation routes through [`sa_lowpower::engine::SaEngine`];
+//! `--backend` selects the estimator on the commands that expose it, and
+//! `--json-dir` writes the machine-readable sweep report next to the CSVs.
 
 use anyhow::{anyhow, bail, Result};
 
 use sa_lowpower::coding::SaCodingConfig;
 use sa_lowpower::coordinator::{
-    ablation_configs, analyze_layer_with_data, paper_configs, sweep_network,
-    synthetic_image, AnalysisOptions, InferenceServer, TinycnnParams,
+    synthetic_image, AnalysisOptions, InferenceServer, SweepReport, TinycnnParams,
+};
+use sa_lowpower::engine::{
+    AnalyticBackend, BackendKind, ConfigRegistry, ConfigSet, CycleBackend,
+    EstimatorBackend, SaEngine,
 };
 use sa_lowpower::power::AreaModel;
 use sa_lowpower::report::{ablation_table, fig2_tables, fig45_table, headline_table, Table};
-use sa_lowpower::sa::{analyze_tile, simulate_tile, SaConfig, Tile};
+use sa_lowpower::sa::{SaConfig, Tile};
 use sa_lowpower::stats::WeightFieldStats;
 use sa_lowpower::util::cli::Args;
 use sa_lowpower::util::Rng64;
@@ -56,20 +64,31 @@ fn run(args: &Args) -> Result<()> {
         Some("ddcg") => ddcg(args),
         Some("pruning") => pruning(args),
         Some("sweep-size") => sweep_size(args),
-        Some(other) => bail!("unknown subcommand '{other}'\n{USAGE}"),
+        Some(other) => bail!("unknown subcommand '{other}'\n{}", usage()),
         None => {
-            println!("{USAGE}");
+            println!("{}", usage());
             Ok(())
         }
     }
 }
 
-const USAGE: &str = "usage: sa-lowpower <subcommand> [options]
+/// Usage text; the config and backend lists derive from the engine
+/// registry, so they can never drift from what the code accepts.
+fn usage() -> String {
+    format!(
+        "usage: sa-lowpower <subcommand> [options]
   fig2 | fig4 | fig5 | headline | ablation | area   paper figures/claims
   simulate | e2e | trace                            drivers
   ddcg | pruning | sweep-size                       extension experiments
+  --config  one of: {configs}
+  --backend one of: {backends}   (estimator: analytic model vs cycle sim)
+  --json-dir DIR                 write machine-readable sweep reports
 Reproduction of 'Low-Power Data Streaming in Systolic Arrays with Bus-Invert
-Coding and Zero-Value Clock Gating' (MOCAST 2023). See README.md.";
+Coding and Zero-Value Clock Gating' (MOCAST 2023). See README.md.",
+        configs = ConfigRegistry::name_list(),
+        backends = BackendKind::name_list(),
+    )
+}
 
 fn opts_from(args: &Args) -> Result<AnalysisOptions> {
     Ok(AnalysisOptions {
@@ -85,10 +104,37 @@ fn threads_from(args: &Args) -> Result<usize> {
     args.get_parse("threads", dflt).map_err(|e| anyhow!(e))
 }
 
+fn backend_from(args: &Args) -> Result<BackendKind> {
+    match args.get("backend") {
+        None => Ok(BackendKind::Analytic),
+        Some(s) => s.parse().map_err(|e: String| anyhow!(e)),
+    }
+}
+
+/// One configured engine per invocation: options, configs, backend and
+/// worker pool all come from the command line.
+fn engine_from(args: &Args, configs: ConfigSet) -> Result<SaEngine> {
+    Ok(SaEngine::builder()
+        .options(opts_from(args)?)
+        .configs(configs)
+        .backend(backend_from(args)?)
+        .threads(threads_from(args)?)
+        .build())
+}
+
 fn maybe_csv(args: &Args, name: &str, t: &Table) -> Result<()> {
     if let Some(dir) = args.get("csv-dir") {
         let path = std::path::Path::new(dir).join(format!("{name}.csv"));
         t.write_csv(&path)?;
+        println!("(wrote {})", path.display());
+    }
+    Ok(())
+}
+
+fn maybe_json(args: &Args, name: &str, sweep: &SweepReport) -> Result<()> {
+    if let Some(dir) = args.get("json-dir") {
+        let path = std::path::Path::new(dir).join(format!("{name}.json"));
+        sweep.write_json(&path)?;
         println!("(wrote {})", path.display());
     }
     Ok(())
@@ -126,16 +172,20 @@ fn fig2(args: &Args) -> Result<()> {
 }
 
 fn fig45(args: &Args, net_name: &str) -> Result<()> {
-    args.validate(&["tiles", "threads", "seed", "csv-dir", "dw-channels"])
-        .map_err(|e| anyhow!(e))?;
-    let opts = opts_from(args)?;
+    args.validate(&[
+        "tiles", "threads", "seed", "csv-dir", "json-dir", "dw-channels", "backend",
+    ])
+    .map_err(|e| anyhow!(e))?;
+    let engine = engine_from(args, ConfigSet::paper())?;
     let net = Network::by_name(net_name).unwrap();
     let figno = if net_name == "resnet50" { 4 } else { 5 };
     println!(
-        "== Fig. {figno} — per-layer power, conventional vs proposed: {net_name} =="
+        "== Fig. {figno} — per-layer power, conventional vs proposed: {net_name} \
+         ({} backend) ==",
+        engine.backend_name()
     );
-    let sweep = sweep_network(&net, &paper_configs(), &opts, threads_from(args)?);
-    let t = fig45_table(&sweep, &opts.sa);
+    let sweep = engine.sweep(&net);
+    let t = fig45_table(&sweep, engine.sa());
     t.print();
     println!();
     println!(
@@ -150,46 +200,45 @@ fn fig45(args: &Args, net_name: &str) -> Result<()> {
     let (lo, hi) = sweep.per_layer_savings_range("baseline", "proposed");
     println!("per-layer savings range:         {lo:.1} % – {hi:.1} %  (paper: 1–19 %)");
     maybe_csv(args, &format!("fig{figno}_{net_name}"), &t)?;
+    maybe_json(args, &format!("fig{figno}_{net_name}"), &sweep)?;
     Ok(())
 }
 
 fn headline(args: &Args) -> Result<()> {
-    args.validate(&["tiles", "threads", "seed", "csv-dir", "dw-channels"])
-        .map_err(|e| anyhow!(e))?;
-    let opts = opts_from(args)?;
-    let threads = threads_from(args)?;
-    let resnet = sweep_network(
-        &Network::by_name("resnet50").unwrap(),
-        &paper_configs(),
-        &opts,
-        threads,
-    );
-    let mobilenet = sweep_network(
-        &Network::by_name("mobilenet").unwrap(),
-        &paper_configs(),
-        &opts,
-        threads,
-    );
+    args.validate(&[
+        "tiles", "threads", "seed", "csv-dir", "json-dir", "dw-channels", "backend",
+    ])
+    .map_err(|e| anyhow!(e))?;
+    let engine = engine_from(args, ConfigSet::paper())?;
+    let resnet = engine.sweep(&Network::by_name("resnet50").unwrap());
+    let mobilenet = engine.sweep(&Network::by_name("mobilenet").unwrap());
     println!("== Headline claims (paper §I / §IV) ==");
-    let t = headline_table(&resnet, &mobilenet, &opts.sa);
+    let t = headline_table(&resnet, &mobilenet, engine.sa());
     t.print();
     maybe_csv(args, "headline", &t)?;
+    maybe_json(args, "headline_resnet50", &resnet)?;
+    maybe_json(args, "headline_mobilenet", &mobilenet)?;
     Ok(())
 }
 
 fn ablation(args: &Args) -> Result<()> {
-    args.validate(&["net", "tiles", "threads", "seed", "csv-dir", "dw-channels"])
-        .map_err(|e| anyhow!(e))?;
-    let opts = opts_from(args)?;
+    args.validate(&[
+        "net", "tiles", "threads", "seed", "csv-dir", "json-dir", "dw-channels",
+        "backend",
+    ])
+    .map_err(|e| anyhow!(e))?;
+    let engine = engine_from(args, ConfigSet::ablation())?;
     let name = args.get_or("net", "resnet50");
     let net = Network::by_name(name).ok_or_else(|| anyhow!("unknown network '{name}'"))?;
-    let configs = ablation_configs();
-    println!("== Ablation — coding design space on {name} ==");
-    let sweep = sweep_network(&net, &configs, &opts, threads_from(args)?);
-    let names: Vec<String> = configs.iter().map(|(n, _)| n.clone()).collect();
-    let t = ablation_table(&sweep, &names);
+    println!(
+        "== Ablation — coding design space on {name} ({} backend) ==",
+        engine.backend_name()
+    );
+    let sweep = engine.sweep(&net);
+    let t = ablation_table(&sweep, &engine.configs().names());
     t.print();
     maybe_csv(args, &format!("ablation_{name}"), &t)?;
+    maybe_json(args, &format!("ablation_{name}"), &sweep)?;
     Ok(())
 }
 
@@ -221,7 +270,7 @@ fn area(args: &Args) -> Result<()> {
 }
 
 fn simulate(args: &Args) -> Result<()> {
-    args.validate(&["m", "k", "n", "sparsity", "config", "seed"])
+    args.validate(&["m", "k", "n", "sparsity", "config", "seed", "backend"])
         .map_err(|e| anyhow!(e))?;
     let m = args.get_parse("m", 16usize).map_err(|e| anyhow!(e))?;
     let k = args.get_parse("k", 64usize).map_err(|e| anyhow!(e))?;
@@ -239,25 +288,36 @@ fn simulate(args: &Args) -> Result<()> {
     let b: Vec<f32> = (0..k * n).map(|_| (rng.normal() * 0.08) as f32).collect();
     let tile = Tile::from_f32(&a, &b, m, k, n);
 
-    println!("== simulate: {m}x{k}x{n} tile, sparsity {sp}, config {cfg_name} ==");
+    let kind = backend_from(args)?;
+    println!(
+        "== simulate: {m}x{k}x{n} tile, sparsity {sp}, config {cfg_name}, \
+         backend {} ==",
+        kind.name()
+    );
+    // Run both backends: the selected one produces the report, the other
+    // cross-checks it (the backend contract says counts are bit-exact).
     let t0 = std::time::Instant::now();
-    let golden = simulate_tile(&tile, &cfg);
+    let cycle = CycleBackend.estimate(&tile, &cfg);
     let t_cycle = t0.elapsed();
     let t1 = std::time::Instant::now();
-    let fast = analyze_tile(&tile, &cfg);
+    let fast = AnalyticBackend.estimate(&tile, &cfg);
     let t_fast = t1.elapsed();
-    assert_eq!(golden.counts, fast, "analytic model must equal cycle sim");
+    assert_eq!(cycle, fast, "analytic model must equal cycle sim");
     println!("cycle-accurate sim: {t_cycle:?}; analytic model: {t_fast:?} (identical counts)");
-    println!("{fast:#?}");
+    let counts = match kind {
+        BackendKind::Analytic => fast,
+        BackendKind::Cycle => cycle,
+    };
+    println!("{counts:#?}");
     let sa = SaConfig::default().with_coding(cfg);
-    let e = sa.energy.energy(&fast);
+    let e = sa.energy.energy(&counts);
     println!(
         "energy: total {:.3} nJ  (streaming {:.3} nJ, compute {:.3} nJ)",
         e.total() * 1e-6,
         e.streaming() * 1e-6,
         e.compute() * 1e-6
     );
-    println!("power @1GHz: {:.3} mW", sa.energy.power_mw(&fast, sa.clock_ghz));
+    println!("power @1GHz: {:.3} mW", sa.energy.power_mw(&counts, sa.clock_ghz));
     Ok(())
 }
 
@@ -372,7 +432,6 @@ fn pruning(args: &Args) -> Result<()> {
     };
     let name = args.get_or("net", "resnet50");
     let net = Network::by_name(name).ok_or_else(|| anyhow!("unknown network '{name}'"))?;
-    use sa_lowpower::coordinator::analyze_layer_with_data;
     use sa_lowpower::workload::{gen_feature_map, prune_weights, LayerKind};
 
     // representative conv layers (skip stem, dw, fc)
@@ -385,11 +444,16 @@ fn pruning(args: &Args) -> Result<()> {
         .step_by(7)
         .collect();
 
-    let mut configs = paper_configs();
-    configs.push((
-        "proposed+w-zvcg".into(),
-        SaCodingConfig { weight_zvcg: true, ..SaCodingConfig::proposed() },
-    ));
+    // The paper set plus the weight-gating extension config, routed
+    // through one engine instance.
+    let engine = SaEngine::builder()
+        .options(opts)
+        .configs(ConfigSet::paper().with(
+            "proposed+w-zvcg",
+            SaCodingConfig { weight_zvcg: true, ..SaCodingConfig::proposed() },
+        ))
+        .threads(1)
+        .build();
 
     println!("== Pruning extension (paper §III-B future work) on {name} ==");
     let mut t = Table::new([
@@ -403,11 +467,12 @@ fn pruning(args: &Args) -> Result<()> {
         let mut wz = 0.0;
         for &i in &picks {
             let layer = &net.layers[i];
-            let fm = gen_feature_map(layer, opts.seed, i);
-            let mut w = gen_weights(layer, opts.seed, i);
+            let seed = engine.options().seed;
+            let fm = gen_feature_map(layer, seed, i);
+            let mut w = gen_weights(layer, seed, i);
             prune_weights(&mut w, prune);
             wz += w.iter().filter(|&&v| v == 0.0).count() as f64 / w.len() as f64;
-            let rep = analyze_layer_with_data(layer, i, fm, w, &configs, &opts);
+            let rep = engine.analyze_layer_with_data(layer, i, fm, w);
             base += rep.energy_of("baseline").unwrap().total();
             prop += rep.energy_of("proposed").unwrap().total();
             propw += rep.energy_of("proposed+w-zvcg").unwrap().total();
@@ -444,20 +509,17 @@ fn sweep_size(args: &Args) -> Result<()> {
         "area_overhead_%",
     ]);
     for dim in [4usize, 8, 16, 32, 64] {
-        let opts = AnalysisOptions {
-            seed,
-            max_tiles_per_layer: tiles,
-            sa: SaConfig { rows: dim, cols: dim, ..SaConfig::default() },
-            ..Default::default()
-        };
+        // One engine per geometry: the SA dimensions live in the options.
+        let engine = SaEngine::builder()
+            .seed(seed)
+            .max_tiles_per_layer(tiles)
+            .sa(SaConfig { rows: dim, cols: dim, ..SaConfig::default() })
+            .configs(ConfigSet::paper())
+            .threads(1)
+            .build();
         let (mut base, mut prop) = (0.0, 0.0);
         for &i in &picks {
-            let rep = sa_lowpower::coordinator::analyze_layer(
-                &net.layers[i],
-                i,
-                &paper_configs(),
-                &opts,
-            );
+            let rep = engine.analyze_layer(&net.layers[i], i);
             base += rep.energy_of("baseline").unwrap().total();
             prop += rep.energy_of("proposed").unwrap().total();
         }
@@ -481,11 +543,11 @@ fn e2e(args: &Args) -> Result<()> {
     let n_req = args.get_parse("requests", 4usize).map_err(|e| anyhow!(e))?;
     let seed = args.get_parse("seed", 7u64).map_err(|e| anyhow!(e))?;
     let dir = args.get_or("artifacts", "artifacts");
-    let opts = AnalysisOptions {
-        seed,
-        max_tiles_per_layer: args.get_parse("tiles", 16usize).map_err(|e| anyhow!(e))?,
-        ..Default::default()
-    };
+    let engine = SaEngine::builder()
+        .seed(seed)
+        .max_tiles_per_layer(args.get_parse("tiles", 16usize).map_err(|e| anyhow!(e))?)
+        .configs(ConfigSet::paper())
+        .build();
 
     println!("== e2e: XLA inference (AOT artifacts) + SA power analysis ==");
     let params = TinycnnParams::generate(seed);
@@ -506,23 +568,26 @@ fn e2e(args: &Args) -> Result<()> {
             print!("{:.0}% ", z * 100.0);
         }
         println!("]");
-        // SA power on the *real* activations of this request.
+        // SA power on the *real* activations of this request: one
+        // streaming job per layer, fanned over the engine's pool.
         let mut fm = image;
+        let mut handles = Vec::new();
         for (i, layer) in net.layers.iter().enumerate() {
             if i >= resp.activations.len() {
                 break; // fc head: skip in per-request power detail
             }
-            let rep = analyze_layer_with_data(
-                layer,
+            handles.push(engine.submit(sa_lowpower::engine::LayerJob::with_data(
+                layer.clone(),
                 i,
                 fm.clone(),
                 params.gemm_weights(i).to_vec(),
-                &paper_configs(),
-                &opts,
-            );
+            )));
+            fm = resp.activations[i].clone();
+        }
+        for h in handles {
+            let rep = h.wait();
             total_base += rep.energy_of("baseline").unwrap().total();
             total_prop += rep.energy_of("proposed").unwrap().total();
-            fm = resp.activations[i].clone();
         }
     }
     println!(

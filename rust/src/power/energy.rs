@@ -135,6 +135,24 @@ impl EnergyBreakdown {
         self.acc_clock += o.acc_clock;
         self.unload += o.unload;
     }
+
+    /// Uniformly scaled copy (tile-sampling extrapolation). Lives here so
+    /// a new component field cannot be silently dropped by a by-hand
+    /// field copy at a call site.
+    pub fn scale(&self, s: f64) -> EnergyBreakdown {
+        EnergyBreakdown {
+            west_data: self.west_data * s,
+            west_clock: self.west_clock * s,
+            west_gating: self.west_gating * s,
+            north_data: self.north_data * s,
+            north_clock: self.north_clock * s,
+            north_coding: self.north_coding * s,
+            mult: self.mult * s,
+            add_acc: self.add_acc * s,
+            acc_clock: self.acc_clock * s,
+            unload: self.unload * s,
+        }
+    }
 }
 
 impl EnergyModel {
@@ -242,6 +260,27 @@ mod tests {
         let p2 = m.power_mw(&c, 2.0);
         assert!((p2 - 2.0 * p1).abs() < 1e-9);
         assert!(p1 > 0.0);
+    }
+
+    #[test]
+    fn scale_is_uniform_over_every_component() {
+        let m = EnergyModel::default();
+        let mut c = counts();
+        c.zero_detect_ops = 10;
+        c.west_cg_cell_cycles = 20;
+        c.encoder_ops = 5;
+        c.decoder_toggles = 8;
+        let e = m.energy(&c);
+        let s = e.scale(2.5);
+        // scaling then totalling == totalling then scaling, and no
+        // component escapes the scale (the breakdown partitions total)
+        assert!((s.total() - 2.5 * e.total()).abs() < 1e-9);
+        assert!((s.streaming() - 2.5 * e.streaming()).abs() < 1e-9);
+        assert!((s.compute() - 2.5 * e.compute()).abs() < 1e-9);
+        assert_eq!(s.west_gating, 2.5 * e.west_gating);
+        assert_eq!(s.unload, 2.5 * e.unload);
+        assert_eq!(e.scale(1.0), e);
+        assert_eq!(e.scale(0.0).total(), 0.0);
     }
 
     #[test]

@@ -157,13 +157,17 @@ pub fn ablation_table(sweep: &SweepReport, configs: &[String]) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{paper_configs, sweep_network, AnalysisOptions};
+    use crate::engine::{ConfigSet, SaEngine};
     use crate::util::Rng64;
     use crate::workload::tinycnn;
 
     fn tiny_sweep() -> SweepReport {
-        let opts = AnalysisOptions { max_tiles_per_layer: 2, ..Default::default() };
-        sweep_network(&tinycnn(), &paper_configs(), &opts, 2)
+        SaEngine::builder()
+            .max_tiles_per_layer(2)
+            .configs(ConfigSet::paper())
+            .threads(2)
+            .build()
+            .sweep(&tinycnn())
     }
 
     #[test]

@@ -1,0 +1,232 @@
+//! Integration tests for the `engine` facade: builder + batch + streaming
+//! APIs, the JSON report schema (golden + round-trip), and the sweep
+//! metric edge cases.
+
+use sa_lowpower::activity::ActivityCounts;
+use sa_lowpower::coding::SaCodingConfig;
+use sa_lowpower::coordinator::{ConfigResult, LayerReport, SweepReport};
+use sa_lowpower::engine::{
+    BackendKind, ConfigSet, LayerJob, SaEngine, SWEEP_REPORT_SCHEMA,
+};
+use sa_lowpower::power::EnergyBreakdown;
+use sa_lowpower::util::json::Json;
+use sa_lowpower::workload::{tinycnn, GemmShape, Layer, Network};
+
+fn fast_engine(configs: ConfigSet, kind: BackendKind) -> SaEngine {
+    SaEngine::builder()
+        .max_tiles_per_layer(2)
+        .configs(configs)
+        .backend(kind)
+        .threads(2)
+        .build()
+}
+
+/// A minimal hand-built report whose JSON rendering is fully predictable
+/// (every float is an exact binary fraction).
+fn handmade_report() -> SweepReport {
+    let counts = ActivityCounts {
+        west_data_toggles: 10,
+        active_macs: 3,
+        cycles: 4,
+        ..Default::default()
+    };
+    let energy = EnergyBreakdown {
+        west_data: 1.5,
+        north_data: 2.0,
+        mult: 8.0,
+        unload: 1.0,
+        ..Default::default()
+    };
+    SweepReport {
+        network: "unit".into(),
+        backend: "analytic".into(),
+        layers: vec![LayerReport {
+            layer_name: "conv1".into(),
+            layer_index: 0,
+            gemm: GemmShape { m: 4, k: 8, n: 2 },
+            input_zero_frac: 0.5,
+            sampled_tiles: 1,
+            total_tiles: 2,
+            results: vec![ConfigResult {
+                config: SaCodingConfig::baseline(),
+                config_name: "baseline".into(),
+                counts,
+                energy,
+            }],
+        }],
+    }
+}
+
+// ---- JSON schema -----------------------------------------------------
+
+/// Golden test: the report document layout is a public artifact format.
+/// If this fails because the schema deliberately changed, bump
+/// `SWEEP_REPORT_SCHEMA` and re-pin the string.
+#[test]
+fn sweep_report_json_schema_is_pinned() {
+    let golden = include_str!("golden/sweep_report_v1.json");
+    assert_eq!(handmade_report().to_json(), golden);
+    assert!(golden.contains(SWEEP_REPORT_SCHEMA));
+}
+
+#[test]
+fn sweep_report_json_round_trips_from_a_real_sweep() {
+    let net = tinycnn();
+    let sweep = fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net);
+    let doc = Json::parse(&sweep.to_json()).expect("report must be valid JSON");
+
+    assert_eq!(doc.get("schema").unwrap().as_str(), Some(SWEEP_REPORT_SCHEMA));
+    assert_eq!(doc.get("network").unwrap().as_str(), Some(net.name.as_str()));
+    assert_eq!(doc.get("backend").unwrap().as_str(), Some("analytic"));
+
+    let layers = doc.get("layers").unwrap().as_arr().unwrap();
+    assert_eq!(layers.len(), sweep.layers.len());
+    for (jl, l) in layers.iter().zip(&sweep.layers) {
+        assert_eq!(jl.get("layer").unwrap().as_str(), Some(l.layer_name.as_str()));
+        assert_eq!(jl.get("index").unwrap().as_u64(), Some(l.layer_index as u64));
+        assert_eq!(
+            jl.get("gemm").unwrap().get("k").unwrap().as_u64(),
+            Some(l.gemm.k as u64)
+        );
+        assert_eq!(
+            jl.get("input_zero_frac").unwrap().as_f64(),
+            Some(l.input_zero_frac)
+        );
+        let results = jl.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), l.results.len());
+        for (jr, r) in results.iter().zip(&l.results) {
+            assert_eq!(
+                jr.get("config").unwrap().as_str(),
+                Some(r.config_name.as_str())
+            );
+            assert_eq!(
+                jr.get("counts").unwrap().get("streaming_toggles").unwrap().as_u64(),
+                Some(r.counts.streaming_toggles())
+            );
+            assert_eq!(
+                jr.get("counts").unwrap().get("cycles").unwrap().as_u64(),
+                Some(r.counts.cycles)
+            );
+            // floats survive the render→parse trip exactly (shortest
+            // round-trip formatting)
+            assert_eq!(
+                jr.get("energy").unwrap().get("total").unwrap().as_f64(),
+                Some(r.energy.total())
+            );
+            assert_eq!(
+                jr.get("energy").unwrap().get("streaming").unwrap().as_f64(),
+                Some(r.energy.streaming())
+            );
+        }
+    }
+}
+
+#[test]
+fn write_json_creates_parent_dirs() {
+    let dir = std::env::temp_dir().join("sa_lowpower_engine_api_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("nested").join("report.json");
+    handmade_report().write_json(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(Json::parse(&text).is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- sweep metric edge cases ----------------------------------------
+
+#[test]
+fn sweep_metrics_handle_unknown_config_names() {
+    let net = tinycnn();
+    let sweep = fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net);
+    // unknown names contribute zero energy → savings must be 0, not NaN
+    assert_eq!(sweep.total_energy("nope"), 0.0);
+    assert_eq!(sweep.overall_savings_pct("nope", "proposed"), 0.0);
+    assert_eq!(sweep.streaming_activity_reduction_pct("nope", "proposed"), 0.0);
+    let (lo, hi) = sweep.per_layer_savings_range("nope", "proposed");
+    assert_eq!((lo, hi), (0.0, 0.0));
+}
+
+#[test]
+fn sweep_metrics_are_zero_when_a_equals_b() {
+    let net = tinycnn();
+    let sweep = fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net);
+    assert_eq!(sweep.overall_savings_pct("proposed", "proposed"), 0.0);
+    assert_eq!(
+        sweep.streaming_activity_reduction_pct("proposed", "proposed"),
+        0.0
+    );
+}
+
+#[test]
+fn sweep_metrics_survive_zero_energy_baseline() {
+    // An empty sweep has zero total energy under every name.
+    let empty = SweepReport {
+        network: "empty".into(),
+        backend: "analytic".into(),
+        layers: Vec::new(),
+    };
+    assert_eq!(empty.overall_savings_pct("baseline", "proposed"), 0.0);
+    assert_eq!(empty.streaming_activity_reduction_pct("baseline", "proposed"), 0.0);
+    assert_eq!(empty.per_layer_savings_range("baseline", "proposed"), (0.0, 0.0));
+    assert!(Json::parse(&empty.to_json()).is_ok());
+}
+
+#[test]
+fn degenerate_layer_sweeps_to_finite_reports() {
+    // Regression: a layer lowering to zero GEMMs (0-channel depthwise)
+    // must produce a finite, zeroed report — not NaN, not a panic.
+    let net = Network {
+        name: "degenerate".into(),
+        layers: vec![Layer::depthwise("dw0", 0, 1, 8)],
+    };
+    let sweep = fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net);
+    let l = &sweep.layers[0];
+    assert_eq!(l.input_zero_frac, 0.0);
+    assert!(l.input_zero_frac.is_finite());
+    assert_eq!(l.sampled_tiles, 0);
+    assert_eq!(sweep.total_energy("baseline"), 0.0);
+    assert_eq!(sweep.overall_savings_pct("baseline", "proposed"), 0.0);
+    // and the JSON artifact stays valid (no bare NaN tokens)
+    assert!(Json::parse(&sweep.to_json()).is_ok());
+}
+
+// ---- batch vs streaming vs backends ---------------------------------
+
+#[test]
+fn streaming_api_delivers_every_layer_of_a_network() {
+    let net = tinycnn();
+    let engine = fast_engine(ConfigSet::paper(), BackendKind::Analytic);
+    let handles: Vec<_> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| engine.submit(LayerJob::synthetic(l.clone(), i)))
+        .collect();
+    let batch = engine.sweep(&net);
+    for h in handles {
+        let idx = h.layer_index();
+        let rep = h.wait();
+        assert_eq!(rep.layer_name, net.layers[idx].name);
+        assert_eq!(
+            rep.energy_of("proposed").unwrap().total(),
+            batch.layers[idx].energy_of("proposed").unwrap().total()
+        );
+    }
+}
+
+#[test]
+fn cycle_backend_sweep_matches_analytic_sweep() {
+    // `--backend cycle` must reproduce the analytic sweep bit-exactly
+    // (same counts, hence same energies) — only provenance differs.
+    let net = tinycnn();
+    let a = fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net);
+    let c = fast_engine(ConfigSet::paper(), BackendKind::Cycle).sweep(&net);
+    assert_eq!(a.backend, "analytic");
+    assert_eq!(c.backend, "cycle");
+    for (la, lc) in a.layers.iter().zip(&c.layers) {
+        for (ra, rc) in la.results.iter().zip(&lc.results) {
+            assert_eq!(ra.counts, rc.counts, "layer {}", la.layer_name);
+            assert_eq!(ra.energy, rc.energy, "layer {}", la.layer_name);
+        }
+    }
+}

@@ -6,10 +6,8 @@
 use std::path::PathBuf;
 
 use sa_lowpower::bf16::{matmul_f32acc, Bf16};
-use sa_lowpower::coordinator::{
-    analyze_layer_with_data, paper_configs, synthetic_image, AnalysisOptions,
-    InferenceServer, TinycnnParams,
-};
+use sa_lowpower::coordinator::{synthetic_image, InferenceServer, TinycnnParams};
+use sa_lowpower::engine::{ConfigSet, SaEngine};
 use sa_lowpower::workload::{im2col_same, tinycnn};
 
 fn artifact_dir() -> Option<PathBuf> {
@@ -98,15 +96,16 @@ fn power_on_real_activations_shows_savings() {
     let resp = server.infer(image.clone()).unwrap();
 
     let net = tinycnn();
-    let opts = AnalysisOptions { max_tiles_per_layer: 8, ..Default::default() };
+    let engine = SaEngine::builder()
+        .max_tiles_per_layer(8)
+        .configs(ConfigSet::paper())
+        .build();
     // layer 2 input = activation 1 (real, ~50 % zeros from ReLU)
-    let rep = analyze_layer_with_data(
+    let rep = engine.analyze_layer_with_data(
         &net.layers[1],
         1,
         resp.activations[0].clone(),
         params.gemm_weights(1).to_vec(),
-        &paper_configs(),
-        &opts,
     );
     assert!(rep.input_zero_frac > 0.2, "zeros {}", rep.input_zero_frac);
     let s = rep.savings_pct("baseline", "proposed").unwrap();

@@ -1,15 +1,17 @@
-//! Integration: workload tables × analysis pipeline × report emitters.
+//! Integration: workload tables × analysis engine × report emitters.
 
-use sa_lowpower::coordinator::{
-    ablation_configs, analyze_layer, paper_configs, sweep_network, AnalysisOptions,
-};
+use sa_lowpower::engine::{ConfigSet, SaEngine};
 use sa_lowpower::report::{ablation_table, fig45_table, headline_table};
 use sa_lowpower::sa::SaConfig;
 use sa_lowpower::stats::WeightFieldStats;
 use sa_lowpower::workload::{gen_weights, Network};
 
-fn fast_opts() -> AnalysisOptions {
-    AnalysisOptions { max_tiles_per_layer: 2, ..Default::default() }
+fn fast_engine(configs: ConfigSet, threads: usize) -> SaEngine {
+    SaEngine::builder()
+        .max_tiles_per_layer(2)
+        .configs(configs)
+        .threads(threads)
+        .build()
 }
 
 #[test]
@@ -41,10 +43,9 @@ fn fig2_distribution_claims_hold_for_both_networks() {
 #[test]
 fn every_resnet_layer_analyzes_cleanly() {
     let net = Network::by_name("resnet50").unwrap();
-    let opts = fast_opts();
-    let cfgs = paper_configs();
+    let engine = fast_engine(ConfigSet::paper(), 1);
     for (i, layer) in net.layers.iter().enumerate() {
-        let r = analyze_layer(layer, i, &cfgs, &opts);
+        let r = engine.analyze_layer(layer, i);
         let base = r.energy_of("baseline").unwrap().total();
         let prop = r.energy_of("proposed").unwrap().total();
         assert!(base > 0.0, "layer {} base", layer.name);
@@ -60,7 +61,7 @@ fn every_resnet_layer_analyzes_cleanly() {
 #[test]
 fn mobilenet_sweep_produces_paper_shaped_results() {
     let net = Network::by_name("mobilenet").unwrap();
-    let sweep = sweep_network(&net, &paper_configs(), &fast_opts(), 4);
+    let sweep = fast_engine(ConfigSet::paper(), 4).sweep(&net);
     assert_eq!(sweep.layers.len(), net.layers.len());
     let overall = sweep.overall_savings_pct("baseline", "proposed");
     assert!(
@@ -78,7 +79,7 @@ fn ablation_ordering_matches_paper_arguments() {
     //  * exponent-only BIC saves less streaming activity than
     //    mantissa-only (Fig. 2 argument).
     let net = Network::by_name("tinycnn").unwrap();
-    let sweep = sweep_network(&net, &ablation_configs(), &fast_opts(), 4);
+    let sweep = fast_engine(ConfigSet::ablation(), 4).sweep(&net);
     let base = sweep.total_energy("baseline");
     let e = |n: &str| sweep.total_energy(n);
     assert!(e("proposed") < base);
@@ -110,7 +111,7 @@ fn ablation_ordering_matches_paper_arguments() {
 #[test]
 fn report_tables_render_for_real_sweeps() {
     let net = Network::by_name("tinycnn").unwrap();
-    let sweep = sweep_network(&net, &paper_configs(), &fast_opts(), 2);
+    let sweep = fast_engine(ConfigSet::paper(), 2).sweep(&net);
     let t = fig45_table(&sweep, &SaConfig::default());
     assert_eq!(t.rows.len(), net.layers.len());
     let csv = t.to_csv();
@@ -119,9 +120,9 @@ fn report_tables_render_for_real_sweeps() {
     let h = headline_table(&sweep, &sweep, &SaConfig::default());
     assert!(h.render().contains("paper"));
 
-    let names: Vec<String> =
-        ablation_configs().iter().map(|(n, _)| n.clone()).collect();
-    let sweep2 = sweep_network(&net, &ablation_configs(), &fast_opts(), 2);
+    let ablation_engine = fast_engine(ConfigSet::ablation(), 2);
+    let names = ablation_engine.configs().names();
+    let sweep2 = ablation_engine.sweep(&net);
     let a = ablation_table(&sweep2, &names);
     assert_eq!(a.rows.len(), names.len());
 }

@@ -11,6 +11,7 @@ use sa_lowpower::activity::{
 };
 use sa_lowpower::bf16::Bf16;
 use sa_lowpower::coding::{decode, BicEncoder, BicMode, BicPolicy, SaCodingConfig};
+use sa_lowpower::engine::{AnalyticBackend, CycleBackend, EstimatorBackend};
 use sa_lowpower::sa::{analyze_tile, simulate_tile, simulate_tile_reference, Tile};
 use sa_lowpower::util::prop::check;
 use sa_lowpower::util::Rng64;
@@ -80,6 +81,29 @@ fn analytic_equals_cycle_sim_paper_geometry() {
         let t = random_tile(rng, 16, 256, 16, 0.5, 0.05);
         for cfg in [SaCodingConfig::baseline(), SaCodingConfig::proposed()] {
             assert_eq!(analyze_tile(&t, &cfg), simulate_tile(&t, &cfg).counts);
+        }
+    });
+}
+
+#[test]
+fn backends_agree_bit_exactly() {
+    // The engine's backend contract: AnalyticBackend and CycleBackend
+    // must agree on the streaming toggle counts for a shared tile — and,
+    // since both implement the same RTL semantics, on the whole ledger.
+    check("backend trait: analytic == cycle on shared tiles", 25, |rng| {
+        let (m, k, n) = (1 + rng.below(14), 1 + rng.below(48), 1 + rng.below(14));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.4;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        for cfg in all_configs() {
+            let a = AnalyticBackend.estimate(&t, &cfg);
+            let c = CycleBackend.estimate(&t, &cfg);
+            assert_eq!(
+                a.streaming_toggles(),
+                c.streaming_toggles(),
+                "streaming toggles diverge: cfg {cfg:?} tile {m}x{k}x{n}"
+            );
+            assert_eq!(a, c, "full ledger diverges: cfg {cfg:?} tile {m}x{k}x{n}");
         }
     });
 }
