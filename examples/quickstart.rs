@@ -12,7 +12,7 @@
 //! engine's typed registry.
 
 use sa_lowpower::engine::{AnalyticBackend, CycleBackend, EstimatorBackend};
-use sa_lowpower::sa::{SaConfig, Tile};
+use sa_lowpower::sa::{Dataflow, SaConfig, Tile};
 use sa_lowpower::util::Rng64;
 
 fn main() {
@@ -33,18 +33,24 @@ fn main() {
     );
 
     let sa = SaConfig::default();
+    let df = sa.dataflow; // weight-stationary, the paper's machine
     for name in ["baseline", "proposed", "bic-only", "zvcg-only"] {
         let cfg = sa_lowpower::engine::ConfigRegistry::lookup(name).unwrap().config;
 
         // Golden backend: cycle-accurate, register-by-register.
-        let golden = CycleBackend.estimate(&tile, &cfg);
+        let golden = CycleBackend.estimate(&tile, &cfg, df);
         // Fast backend: closed-form stream accounting. Must agree exactly
         // (the engine's backend contract).
-        let fast = AnalyticBackend.estimate(&tile, &cfg);
+        let fast = AnalyticBackend.estimate(&tile, &cfg, df);
         assert_eq!(golden, fast, "backends must agree");
-        // And coding/gating must never change the numerics.
+        // And neither coding/gating nor the dataflow may change the
+        // numerics (the conformance contract).
         assert_eq!(
-            sa_lowpower::sa::simulate_tile(&tile, &cfg).c,
+            sa_lowpower::sa::simulate_tile(&tile, &cfg, df).c,
+            tile.reference_result()
+        );
+        assert_eq!(
+            sa_lowpower::sa::simulate_tile(&tile, &cfg, Dataflow::OutputStationary).c,
             tile.reference_result()
         );
 
@@ -62,10 +68,10 @@ fn main() {
     use sa_lowpower::coding::SaCodingConfig;
     let base = sa
         .energy
-        .energy(&AnalyticBackend.estimate(&tile, &SaCodingConfig::baseline()));
+        .energy(&AnalyticBackend.estimate(&tile, &SaCodingConfig::baseline(), df));
     let prop = sa
         .energy
-        .energy(&AnalyticBackend.estimate(&tile, &SaCodingConfig::proposed()));
+        .energy(&AnalyticBackend.estimate(&tile, &SaCodingConfig::proposed(), df));
     println!(
         "\nproposed vs baseline: {:.1} % total dynamic energy saved",
         100.0 * (base.total() - prop.total()) / base.total()

@@ -17,7 +17,7 @@ fn main() {
         .configs(ConfigSet::ablation())
         .threads(threads)
         .build();
-    for net_name in ["resnet50", "mobilenet"] {
+    for net_name in ["resnet50", "mobilenet", "transformer"] {
         let net = Network::by_name(net_name).unwrap();
         let (sweep, _) = time_once(&format!("ablation/{net_name}-sweep(7cfg)"), || {
             engine.sweep(&net)

@@ -16,7 +16,9 @@
 use sa_lowpower::activity::ham16_slice;
 use sa_lowpower::bf16::Bf16;
 use sa_lowpower::coding::{BicEncoder, BicMode, BicPolicy, SaCodingConfig};
-use sa_lowpower::sa::{analyze_tile, simulate_tile, simulate_tile_reference, Tile};
+use sa_lowpower::sa::{
+    analyze_tile, simulate_tile, simulate_tile_reference, Dataflow, Tile,
+};
 use sa_lowpower::util::bench::{bench, black_box, BenchSet};
 use sa_lowpower::util::Rng64;
 use sa_lowpower::workload::im2col_same;
@@ -34,54 +36,59 @@ fn main() {
     let mut set = BenchSet::new();
     println!("=== hot-path microbenchmarks (see EXPERIMENTS.md §Perf) ===\n");
 
-    // 1. analytic model, paper geometry, dense + sparse
+    // 1. analytic model, paper geometry, dense + sparse, both dataflows
     let t_dense = random_tile(&mut rng, 16, 1024, 16, 0.0);
     let t_sparse = random_tile(&mut rng, 16, 1024, 16, 0.5);
     for (tag, t) in [("dense", &t_dense), ("sparse50", &t_sparse)] {
         for cfg_name in ["baseline", "proposed"] {
             let cfg = SaCodingConfig::by_name(cfg_name).unwrap();
-            let m = bench(
-                &format!("analytic/16x1024x16/{tag}/{cfg_name}"),
-                3,
-                20,
-                || {
-                    black_box(analyze_tile(black_box(t), &cfg));
-                },
-            );
-            let slots = t.mac_slots() as f64;
-            let thru = slots / m.mean.as_secs_f64();
-            println!("    -> {:.0} Mslots/s", thru / 1e6);
-            set.push(m, Some((thru, "slots/s")));
+            for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
+                let m = bench(
+                    &format!("analytic/16x1024x16/{tag}/{cfg_name}/{df}"),
+                    3,
+                    20,
+                    || {
+                        black_box(analyze_tile(black_box(t), &cfg, df));
+                    },
+                );
+                let slots = t.mac_slots() as f64;
+                let thru = slots / m.mean.as_secs_f64();
+                println!("    -> {:.0} Mslots/s", thru / 1e6);
+                set.push(m, Some((thru, "slots/s")));
+            }
         }
     }
 
-    // 2. cycle-accurate simulator: fast wavefront engine vs the seed
-    //    per-cycle reference (the before/after of this optimization).
+    // 2. cycle-accurate simulator: fast engine vs the literal per-cycle
+    //    reference (the before/after of the PR 1 optimization), per
+    //    dataflow.
     let t_small = random_tile(&mut rng, 16, 256, 16, 0.5);
     for cfg_name in ["baseline", "proposed"] {
         let cfg = SaCodingConfig::by_name(cfg_name).unwrap();
-        let m = bench(&format!("cycle-sim/16x256x16/{cfg_name}"), 2, 10, || {
-            black_box(simulate_tile(black_box(&t_small), &cfg));
-        });
-        let thru = t_small.mac_slots() as f64 / m.mean.as_secs_f64();
-        println!("    -> {:.1} Mslots/s", thru / 1e6);
-        set.push(m.clone(), Some((thru, "slots/s")));
+        for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
+            let m = bench(&format!("cycle-sim/16x256x16/{cfg_name}/{df}"), 2, 10, || {
+                black_box(simulate_tile(black_box(&t_small), &cfg, df));
+            });
+            let thru = t_small.mac_slots() as f64 / m.mean.as_secs_f64();
+            println!("    -> {:.1} Mslots/s", thru / 1e6);
+            set.push(m.clone(), Some((thru, "slots/s")));
 
-        let mref = bench(
-            &format!("cycle-sim-reference/16x256x16/{cfg_name}"),
-            1,
-            5,
-            || {
-                black_box(simulate_tile_reference(black_box(&t_small), &cfg));
-            },
-        );
-        let rthru = t_small.mac_slots() as f64 / mref.mean.as_secs_f64();
-        println!(
-            "    -> {:.1} Mslots/s  (fast engine speedup: {:.2}x)",
-            rthru / 1e6,
-            mref.mean.as_secs_f64() / m.mean.as_secs_f64()
-        );
-        set.push(mref, Some((rthru, "slots/s")));
+            let mref = bench(
+                &format!("cycle-sim-reference/16x256x16/{cfg_name}/{df}"),
+                1,
+                5,
+                || {
+                    black_box(simulate_tile_reference(black_box(&t_small), &cfg, df));
+                },
+            );
+            let rthru = t_small.mac_slots() as f64 / mref.mean.as_secs_f64();
+            println!(
+                "    -> {:.1} Mslots/s  (fast engine speedup: {:.2}x)",
+                rthru / 1e6,
+                mref.mean.as_secs_f64() / m.mean.as_secs_f64()
+            );
+            set.push(mref, Some((rthru, "slots/s")));
+        }
     }
 
     // 3. packed hamming over bus words

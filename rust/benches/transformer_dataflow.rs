@@ -1,0 +1,42 @@
+//! Bench: the transformer workload swept under both dataflows — the
+//! dataflow × workload corner of the sweep space that the CNN figures
+//! don't touch (dense attention operands, weight-stationary vs
+//! output-stationary register movement).
+//!
+//! `cargo bench --bench transformer_dataflow`
+
+use sa_lowpower::engine::{ConfigSet, SaEngine};
+use sa_lowpower::sa::Dataflow;
+use sa_lowpower::util::bench::time_once;
+use sa_lowpower::workload::Network;
+
+fn main() {
+    println!("=== Transformer workload: weight- vs output-stationary ===\n");
+    let net = Network::by_name("transformer").unwrap();
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    for df in Dataflow::ALL {
+        let engine = SaEngine::builder()
+            .max_tiles_per_layer(32)
+            .configs(ConfigSet::paper())
+            .dataflow(*df)
+            .threads(threads)
+            .build();
+        let (sweep, _) = time_once(
+            &format!("transformer/{}-sweep", df.name()),
+            || engine.sweep(&net),
+        );
+        println!(
+            "{:>17}: baseline {:.3} nJ | proposed {:.3} nJ | savings {:.2} % | \
+             streaming activity cut {:.2} %",
+            df.long_name(),
+            sweep.total_energy("baseline") * 1e-6,
+            sweep.total_energy("proposed") * 1e-6,
+            sweep.overall_savings_pct("baseline", "proposed"),
+            sweep.streaming_activity_reduction_pct("baseline", "proposed"),
+        );
+    }
+    println!(
+        "\n(attention operands are dense, so ZVCG gates little here; BIC and\n\
+         the dataflow's register-movement factor carry the difference)"
+    );
+}

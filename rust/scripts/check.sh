@@ -46,6 +46,25 @@ cargo test -q 2>&1 | tee "$OUT_DIR/test.log"
 echo "== example smoke (quickstart: public API end-to-end) =="
 cargo run --release --example quickstart 2>&1 | tee "$OUT_DIR/quickstart.log"
 
+echo "== backend x dataflow matrix smoke =="
+# Every estimator backend under every dataflow, one log per cell. The
+# simulate subcommand cross-checks analytic == cycle internally, and the
+# transformer sweep exercises the workload axis end-to-end per cell.
+for backend in analytic cycle; do
+    for dataflow in ws os; do
+        cell="${backend}_${dataflow}"
+        echo "-- cell: $cell --"
+        cargo run --release -- simulate \
+            --m 8 --k 48 --n 8 --sparsity 0.5 \
+            --backend "$backend" --dataflow "$dataflow" 2>&1 \
+            | tee "$OUT_DIR/simulate_$cell.log"
+        cargo run --release -- ablation \
+            --net transformer --tiles 2 --threads 2 \
+            --backend "$backend" --dataflow "$dataflow" 2>&1 \
+            | tee "$OUT_DIR/ablation_transformer_$cell.log"
+    done
+done
+
 echo "== perf smoke (hot paths) =="
 cargo bench --bench perf_hotpath 2>&1 | tee "$OUT_DIR/perf_hotpath.log"
 

@@ -120,7 +120,9 @@ pub fn build_gemms_from_data(
             );
             (vec![Gemm::new(a, w, layer.gemm())], 1.0)
         }
-        LayerKind::Dense => {
+        // Dense and bare-GEMM layers need no lowering: fm already is
+        // the row-major M×K A matrix.
+        LayerKind::Dense | LayerKind::Gemm => {
             let shape = layer.gemm();
             (vec![Gemm::new(fm, w, shape)], 1.0)
         }
@@ -247,7 +249,7 @@ pub fn analyze_gemms_with(
             for &(mi, ni) in &plan.picks {
                 let tile = extract_tile_into(g, &grid, mi, ni, &mut scratch);
                 for (ci, (_, cfg)) in configs.iter().enumerate() {
-                    let counts = backend.estimate(&tile, cfg);
+                    let counts = backend.estimate(&tile, cfg, opts.sa.dataflow);
                     let energy = opts.sa.energy.energy(&counts);
                     per_config[ci].0.add(&counts);
                     per_config[ci].1.add(&energy.scale(scale));

@@ -17,6 +17,9 @@ pub struct SweepReport {
     /// Name of the estimator backend that produced the counts
     /// (report provenance; see `engine::EstimatorBackend`).
     pub backend: String,
+    /// Short name of the dataflow the counts were produced under
+    /// (`"ws"` / `"os"`; report provenance — see `sa::Dataflow`).
+    pub dataflow: String,
     pub layers: Vec<LayerReport>,
 }
 

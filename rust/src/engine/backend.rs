@@ -2,15 +2,22 @@
 //!
 //! ## Backend contract
 //!
-//! An [`EstimatorBackend`] maps `(Tile, SaCodingConfig)` to exact
-//! [`ActivityCounts`]. Where two backends both define a count, they must
-//! be **bit-exact**: the analytic model and the cycle simulator are two
-//! derivations of the same RTL semantics, not two approximations
-//! (`rust/tests/property_tests.rs::backends_agree_bit_exactly` enforces
-//! this on random tiles). A future backend that models *different*
-//! hardware (asymmetric floorplan, skewed pipeline) defines its own
-//! counts — but any count it shares with the existing semantics must
-//! keep the same meaning, so energy models and reports stay comparable.
+//! An [`EstimatorBackend`] maps `(Tile, SaCodingConfig, Dataflow)` to
+//! exact [`ActivityCounts`]. Where two backends both define a count
+//! under the same dataflow, they must be **bit-exact**: the analytic
+//! model and the cycle simulator are two derivations of the same RTL
+//! semantics, not two approximations
+//! (`rust/tests/property_tests.rs::backends_agree_bit_exactly` and the
+//! differential suite in `rust/tests/conformance.rs` enforce this on
+//! random tiles for both dataflows). Across dataflows the contract is
+//! narrower but still exact: the functional result and every MAC-side
+//! count (`mult_input_toggles`, `active_macs`, `gated_macs`,
+//! `zero_product_macs`, `acc_clock_events`, `unload_values`) must be
+//! identical, while stream-side counts legitimately differ with the
+//! register movement. A future backend that models *different* hardware
+//! (asymmetric floorplan, skewed pipeline) defines its own counts — but
+//! any count it shares with the existing semantics must keep the same
+//! meaning, so energy models and reports stay comparable.
 //!
 //! Backends must be `Send + Sync`: the engine's worker pool shares one
 //! instance across threads. Keep them stateless (or internally locked).
@@ -19,19 +26,25 @@ use std::sync::Arc;
 
 use crate::activity::ActivityCounts;
 use crate::coding::SaCodingConfig;
-use crate::sa::{analyze_tile, simulate_tile, Tile};
+use crate::sa::{analyze_tile, simulate_tile, Dataflow, Tile};
 
-/// A power-activity estimator for one tile under one coding config.
+/// A power-activity estimator for one tile under one coding config and
+/// dataflow.
 pub trait EstimatorBackend: Send + Sync {
     /// Stable backend name (CLI value, report provenance field).
     fn name(&self) -> &'static str;
 
     /// Exact activity counts for streaming `tile` through the array.
-    fn estimate(&self, tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts;
+    fn estimate(
+        &self,
+        tile: &Tile,
+        cfg: &SaCodingConfig,
+        dataflow: Dataflow,
+    ) -> ActivityCounts;
 }
 
 /// The closed-form analytic model (`sa::analyze_tile`) — the fast
-/// default used by full-CNN sweeps.
+/// default used by full-network sweeps.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AnalyticBackend;
 
@@ -40,8 +53,13 @@ impl EstimatorBackend for AnalyticBackend {
         "analytic"
     }
 
-    fn estimate(&self, tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts {
-        analyze_tile(tile, cfg)
+    fn estimate(
+        &self,
+        tile: &Tile,
+        cfg: &SaCodingConfig,
+        dataflow: Dataflow,
+    ) -> ActivityCounts {
+        analyze_tile(tile, cfg, dataflow)
     }
 }
 
@@ -55,8 +73,13 @@ impl EstimatorBackend for CycleBackend {
         "cycle"
     }
 
-    fn estimate(&self, tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts {
-        simulate_tile(tile, cfg).counts
+    fn estimate(
+        &self,
+        tile: &Tile,
+        cfg: &SaCodingConfig,
+        dataflow: Dataflow,
+    ) -> ActivityCounts {
+        simulate_tile(tile, cfg, dataflow).counts
     }
 }
 
@@ -128,9 +151,11 @@ mod tests {
     fn backends_are_bit_exact_on_a_shared_tile() {
         let t = small_tile();
         for (name, cfg) in crate::engine::ConfigSet::ablation().iter() {
-            let a = AnalyticBackend.estimate(&t, cfg);
-            let c = CycleBackend.estimate(&t, cfg);
-            assert_eq!(a, c, "backend divergence under '{name}'");
+            for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
+                let a = AnalyticBackend.estimate(&t, cfg, df);
+                let c = CycleBackend.estimate(&t, cfg, df);
+                assert_eq!(a, c, "backend divergence under '{name}' ({df})");
+            }
         }
     }
 

@@ -24,7 +24,7 @@ use crate::coordinator::{
     analyze_gemms_with, build_gemms_from_data, build_layer_gemms, AnalysisOptions,
     LayerReport, SweepReport,
 };
-use crate::sa::SaConfig;
+use crate::sa::{Dataflow, SaConfig};
 use crate::workload::{Layer, Network};
 
 use super::backend::{BackendKind, EstimatorBackend};
@@ -182,6 +182,12 @@ impl SaEngineBuilder {
         self
     }
 
+    /// Select the dataflow the estimator models (`--dataflow ws|os`).
+    pub fn dataflow(mut self, dataflow: Dataflow) -> Self {
+        self.opts.sa.dataflow = dataflow;
+        self
+    }
+
     /// Max tiles analyzed per layer GEMM (energy is scaled up).
     pub fn max_tiles_per_layer(mut self, tiles: usize) -> Self {
         self.opts.max_tiles_per_layer = tiles;
@@ -282,6 +288,11 @@ impl SaEngine {
         self.shared.backend.name()
     }
 
+    /// The dataflow the engine models.
+    pub fn dataflow(&self) -> Dataflow {
+        self.shared.opts.sa.dataflow
+    }
+
     /// Worker pool width.
     pub fn threads(&self) -> usize {
         self.workers.len()
@@ -315,6 +326,7 @@ impl SaEngine {
         SweepReport {
             network: net.name.clone(),
             backend: self.backend_name().to_string(),
+            dataflow: self.dataflow().name().to_string(),
             layers,
         }
     }
@@ -368,8 +380,37 @@ mod tests {
         assert_eq!((e.sa().rows, e.sa().cols), (16, 16));
         assert_eq!(e.configs().names(), ["baseline", "proposed"]);
         assert_eq!(e.backend_name(), "analytic");
+        assert_eq!(e.dataflow(), Dataflow::WeightStationary);
         assert_eq!(e.options().seed, 0xCAFE);
         assert!(e.threads() >= 1);
+    }
+
+    #[test]
+    fn dataflow_option_reaches_reports_and_counts() {
+        let net = tinycnn();
+        let ws = small_engine(2, BackendKind::Analytic).sweep(&net);
+        let os = SaEngine::builder()
+            .max_tiles_per_layer(2)
+            .threads(2)
+            .dataflow(Dataflow::OutputStationary)
+            .build()
+            .sweep(&net);
+        assert_eq!(ws.dataflow, "ws");
+        assert_eq!(os.dataflow, "os");
+        for (lw, lo) in ws.layers.iter().zip(&os.layers) {
+            for (rw, ro) in lw.results.iter().zip(&lo.results) {
+                // MAC-side counts are dataflow-invariant; stream-side
+                // register activity shrinks by the fanout factor under OS.
+                assert_eq!(rw.counts.active_macs, ro.counts.active_macs);
+                assert_eq!(rw.counts.mult_input_toggles, ro.counts.mult_input_toggles);
+                assert!(
+                    ro.counts.west_clock_events <= rw.counts.west_clock_events,
+                    "layer {}",
+                    lw.layer_name
+                );
+            }
+        }
+        assert!(os.total_energy("baseline") < ws.total_energy("baseline"));
     }
 
     #[test]

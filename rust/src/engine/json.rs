@@ -6,10 +6,10 @@
 //! (`rust/tests/engine_api.rs`), so downstream consumers can rely on it;
 //! bump the `schema` tag when changing the shape.
 //!
-//! Schema (`sa-lowpower.sweep-report.v1`):
+//! Schema (`sa-lowpower.sweep-report.v2`):
 //!
 //! ```text
-//! { "schema", "network", "backend",
+//! { "schema", "network", "backend", "dataflow",
 //!   "layers": [ { "layer", "index", "gemm": {m,k,n},
 //!                 "input_zero_frac", "sampled_tiles", "total_tiles",
 //!                 "results": [ { "config", "coding",
@@ -19,9 +19,13 @@
 //!                                            "streaming","compute","total" } } ] } ] }
 //! ```
 //!
-//! Energies are femtojoules; counts are exact integers. The derived
-//! fields (`streaming_toggles`, `streaming`, `compute`, `total`) are
-//! included so consumers never re-implement the component groupings.
+//! v2 added the `"dataflow"` provenance field (`"ws"` / `"os"`); v1
+//! documents (no such field) remain readable — [`SweepDoc::from_json`]
+//! accepts both and defaults v1 to `"ws"`, the only dataflow that
+//! existed then. Energies are femtojoules; counts are exact integers.
+//! The derived fields (`streaming_toggles`, `streaming`, `compute`,
+//! `total`) are included so consumers never re-implement the component
+//! groupings.
 
 use crate::activity::ActivityCounts;
 use crate::coordinator::{ConfigResult, LayerReport, SweepReport};
@@ -29,7 +33,72 @@ use crate::power::EnergyBreakdown;
 use crate::util::json::Json;
 
 /// Schema tag embedded in every sweep-report document.
-pub const SWEEP_REPORT_SCHEMA: &str = "sa-lowpower.sweep-report.v1";
+pub const SWEEP_REPORT_SCHEMA: &str = "sa-lowpower.sweep-report.v2";
+
+/// The previous schema tag — still accepted by [`SweepDoc::from_json`]
+/// (backward compatibility is pinned by `rust/tests/engine_api.rs` over
+/// the committed v1 golden file).
+pub const SWEEP_REPORT_SCHEMA_V1: &str = "sa-lowpower.sweep-report.v1";
+
+/// Provenance header of a parsed sweep-report document — the consumer
+/// side of the schema. Reads v2 documents and, for backward
+/// compatibility, v1 documents (which predate the dataflow axis and are
+/// therefore weight-stationary by construction).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SweepDoc {
+    pub schema: String,
+    pub network: String,
+    pub backend: String,
+    /// `"ws"` for v1 documents (the field did not exist yet).
+    pub dataflow: String,
+    pub layer_count: usize,
+}
+
+impl SweepDoc {
+    /// Parse the provenance header out of a sweep-report document,
+    /// validating the schema tag.
+    pub fn from_json(doc: &Json) -> Result<SweepDoc, String> {
+        let schema = doc
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or("missing 'schema' field")?;
+        if schema != SWEEP_REPORT_SCHEMA && schema != SWEEP_REPORT_SCHEMA_V1 {
+            return Err(format!(
+                "unsupported schema '{schema}' (supported: \
+                 {SWEEP_REPORT_SCHEMA}, {SWEEP_REPORT_SCHEMA_V1})"
+            ));
+        }
+        let field = |name: &str| {
+            doc.get(name)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing '{name}' field"))
+        };
+        let dataflow = if schema == SWEEP_REPORT_SCHEMA_V1 {
+            // v1 predates the dataflow axis: every v1 report was
+            // produced by the weight-stationary machine.
+            "ws".to_string()
+        } else {
+            field("dataflow")?
+        };
+        Ok(SweepDoc {
+            schema: schema.to_string(),
+            network: field("network")?,
+            backend: field("backend")?,
+            dataflow,
+            layer_count: doc
+                .get("layers")
+                .and_then(Json::as_arr)
+                .ok_or("missing 'layers' array")?
+                .len(),
+        })
+    }
+
+    /// Parse straight from document text.
+    pub fn parse(text: &str) -> Result<SweepDoc, String> {
+        Self::from_json(&Json::parse(text)?)
+    }
+}
 
 impl EnergyBreakdown {
     /// JSON object of every component plus the derived groupings.
@@ -130,6 +199,7 @@ impl SweepReport {
         o.push("schema", SWEEP_REPORT_SCHEMA);
         o.push("network", self.network.as_str());
         o.push("backend", self.backend.as_str());
+        o.push("dataflow", self.dataflow.as_str());
         o.push(
             "layers",
             Json::Arr(self.layers.iter().map(|l| l.to_json_value()).collect()),
@@ -170,6 +240,26 @@ mod tests {
         assert_eq!(v.get("streaming").unwrap().as_f64(), Some(3.5));
         assert_eq!(v.get("compute").unwrap().as_f64(), Some(8.0));
         assert_eq!(v.get("total").unwrap().as_f64(), Some(12.5));
+    }
+
+    #[test]
+    fn sweep_doc_reads_v2_and_rejects_unknown_schemas() {
+        let report = SweepReport {
+            network: "unit".into(),
+            backend: "cycle".into(),
+            dataflow: "os".into(),
+            layers: Vec::new(),
+        };
+        let doc = SweepDoc::parse(&report.to_json()).unwrap();
+        assert_eq!(doc.schema, SWEEP_REPORT_SCHEMA);
+        assert_eq!(doc.network, "unit");
+        assert_eq!(doc.backend, "cycle");
+        assert_eq!(doc.dataflow, "os");
+        assert_eq!(doc.layer_count, 0);
+
+        let bad = r#"{"schema": "sa-lowpower.sweep-report.v99", "layers": []}"#;
+        assert!(SweepDoc::parse(bad).is_err());
+        assert!(SweepDoc::parse(r#"{"layers": []}"#).is_err());
     }
 
     #[test]

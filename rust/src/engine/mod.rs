@@ -30,11 +30,13 @@
 //!
 //! ```no_run
 //! use sa_lowpower::engine::{BackendKind, ConfigSet, SaEngine};
+//! use sa_lowpower::sa::Dataflow;
 //! use sa_lowpower::workload::Network;
 //!
 //! let engine = SaEngine::builder()
 //!     .configs(ConfigSet::paper())
 //!     .backend(BackendKind::Analytic)
+//!     .dataflow(Dataflow::WeightStationary)
 //!     .threads(8)
 //!     .build();
 //! let sweep = engine.sweep(&Network::by_name("resnet50").unwrap());
@@ -50,5 +52,5 @@ mod registry;
 
 pub use self::backend::{AnalyticBackend, BackendKind, CycleBackend, EstimatorBackend};
 pub use self::core::{JobHandle, LayerData, LayerJob, SaEngine, SaEngineBuilder};
-pub use self::json::SWEEP_REPORT_SCHEMA;
+pub use self::json::{SweepDoc, SWEEP_REPORT_SCHEMA, SWEEP_REPORT_SCHEMA_V1};
 pub use self::registry::{ConfigEntry, ConfigRegistry, ConfigSet, CONFIG_TABLE};

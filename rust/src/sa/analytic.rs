@@ -1,5 +1,5 @@
 //! Analytic (closed-form) activity model — the fast engine behind the
-//! full-CNN sweeps of paper Figs. 4 and 5.
+//! full-CNN sweeps of paper Figs. 4 and 5 — for both dataflows.
 //!
 //! Key observation: every register of a stream pipeline sees the same
 //! value sequence, time-shifted, so its lifetime toggle count is the
@@ -9,9 +9,19 @@
 //! activity reduces to pairwise row-of-B Hamming sums that are memoized
 //! across rows of A.
 //!
-//! The model is **exact**: `rust/tests/property_tests.rs` asserts equal
-//! `ActivityCounts` integers against the cycle-accurate simulator for
-//! every coding configuration over random tiles.
+//! The dataflow axis enters purely as **charge factors** on the lane
+//! sums: under weight-stationary streaming each lane's sequence is
+//! re-registered once per PE it passes (N registers per West row, M per
+//! North column), under output-stationary it is registered once in the
+//! lane's edge drive register while the per-PE XOR decoders still tap
+//! the bus (N resp. M taps). MAC-side counts are dataflow-invariant —
+//! every PE consumes the identical `(A[i,kk], B[kk,j])` slot sequence —
+//! and the cycle count comes from [`Dataflow::tile_cycles`].
+//!
+//! The model is **exact**: `rust/tests/property_tests.rs` and
+//! `rust/tests/conformance.rs` assert equal `ActivityCounts` integers
+//! against the cycle-accurate simulator for every coding configuration
+//! and both dataflows over random tiles.
 
 use crate::activity::{
     ham16_masked, ham16_slice, ham_bf16, stream_toggles, ActivityCounts,
@@ -19,12 +29,25 @@ use crate::activity::{
 use crate::bf16::{as_bits, Bf16};
 use crate::coding::{decode, BicEncoder, BicMode, Encoded, SaCodingConfig};
 
-use super::Tile;
+use super::{Dataflow, Tile};
 
-/// Exact activity counts for one tile under a coding configuration.
-pub fn analyze_tile(tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts {
+/// Exact activity counts for one tile under a coding configuration and
+/// dataflow.
+pub fn analyze_tile(
+    tile: &Tile,
+    cfg: &SaCodingConfig,
+    dataflow: Dataflow,
+) -> ActivityCounts {
     let (m, k, n) = (tile.m, tile.k, tile.n);
     let mut c = ActivityCounts::default();
+
+    // Register/bus charge factor per lane: one register per PE passed
+    // (WS pipelines) vs a single edge drive register (OS buses). The
+    // per-PE decoder taps are the fanout under either dataflow.
+    let (west_regs, north_regs) = match dataflow {
+        Dataflow::WeightStationary => (n as u64, m as u64),
+        Dataflow::OutputStationary => (1, 1),
+    };
 
     // ---------------- West (input) lanes ----------------
     for i in 0..m {
@@ -33,7 +56,8 @@ pub fn analyze_tile(tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts {
             cfg.input_zvcg,
             cfg.input_bic,
             cfg,
-            n as u64, // registers per West lane = one per column
+            west_regs,
+            n as u64, // decoder taps: one per PE of the row
             LaneSide::West,
             &mut c,
         );
@@ -48,7 +72,8 @@ pub fn analyze_tile(tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts {
             cfg.weight_zvcg,
             cfg.weight_bic,
             cfg,
-            m as u64, // registers per North lane = one per row
+            north_regs,
+            m as u64, // decoder taps: one per PE of the column
             LaneSide::North,
             &mut c,
         );
@@ -88,10 +113,14 @@ pub fn analyze_tile(tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts {
     } else {
         // a-side: every PE of row i sees the same decoded-a sequence —
         // which, without input BIC, is exactly the sequence the West data
-        // registers load, so the toggle total equals west_data_toggles
-        // (same registers-per-lane factor N).
+        // registers load. Under WS the ledger already carries the
+        // N-registers-per-lane factor; under OS the lane was charged once,
+        // so the N PE latches per row are re-applied here.
         if cfg.input_bic == BicMode::None {
-            c.mult_input_toggles += c.west_data_toggles;
+            c.mult_input_toggles += match dataflow {
+                Dataflow::WeightStationary => c.west_data_toggles,
+                Dataflow::OutputStationary => n as u64 * c.west_data_toggles,
+            };
         } else {
             let mut seq: Vec<Bf16> = Vec::with_capacity(k);
             for i in 0..m {
@@ -163,7 +192,7 @@ pub fn analyze_tile(tile: &Tile, cfg: &SaCodingConfig) -> ActivityCounts {
     }
 
     c.unload_values = (m * n) as u64;
-    c.cycles = tile.cycles();
+    c.cycles = dataflow.tile_cycles(m, k, n);
     c
 }
 
@@ -173,15 +202,19 @@ enum LaneSide {
     North,
 }
 
-/// Stream-pipeline counts for one lane (a West row or a North column),
-/// charged to the matching side of the ledger. Single pass, no
-/// intermediate allocation — this is the sweep hot path.
+/// Stream counts for one lane (a West row or a North column), charged
+/// to the matching side of the ledger. `regs` is the register/bus
+/// charge factor (registers per lane under WS, 1 under OS); `dec_taps`
+/// is the number of per-PE XOR-decoder taps on the lane (the PE count
+/// either way). Single pass, no intermediate allocation — this is the
+/// sweep hot path.
 fn lane_counts(
     raw: &[Bf16],
     zvcg: bool,
     bic: BicMode,
     cfg: &SaCodingConfig,
     regs: u64,
+    dec_taps: u64,
     side: LaneSide,
     c: &mut ActivityCounts,
 ) {
@@ -235,7 +268,7 @@ fn lane_counts(
     let lines = bic.inv_lines() as u64;
     let inv_sideband_toggles = regs * inv_toggles;
     let inv_sideband_clocks = regs * lines * loads;
-    let decoder_toggles = regs * dec_toggles;
+    let decoder_toggles = dec_taps * dec_toggles;
 
     // is-zero sideband: always clocked, one bit; ICG burns every slot.
     let (zero_sb_toggles, zero_sb_clocks, cg_cells) = if zvcg {
@@ -317,17 +350,22 @@ mod tests {
         "bic-exponent",
     ];
 
+    const BOTH: [Dataflow; 2] =
+        [Dataflow::WeightStationary, Dataflow::OutputStationary];
+
     #[test]
     fn matches_cycle_sim_exactly() {
-        check("analytic == cycle sim (all configs)", 25, |rng| {
+        check("analytic == cycle sim (all configs, both dataflows)", 25, |rng| {
             let (m, k, n) = (1 + rng.below(5), 1 + rng.below(16), 1 + rng.below(5));
             let pz = rng.uniform();
             let t = random_tile(rng, m, k, n, pz, 0.1);
             for name in ALL_CONFIGS {
                 let cfg = SaCodingConfig::by_name(name).unwrap();
-                let golden = simulate_tile(&t, &cfg).counts;
-                let fast = analyze_tile(&t, &cfg);
-                assert_eq!(fast, golden, "config {name}, tile {m}x{k}x{n}");
+                for df in BOTH {
+                    let golden = simulate_tile(&t, &cfg, df).counts;
+                    let fast = analyze_tile(&t, &cfg, df);
+                    assert_eq!(fast, golden, "config {name}, {df}, tile {m}x{k}x{n}");
+                }
             }
         });
     }
@@ -346,21 +384,27 @@ mod tests {
                     ..SaCodingConfig::proposed()
                 },
             ] {
-                let golden = simulate_tile(&t, &cfg).counts;
-                let fast = analyze_tile(&t, &cfg);
-                assert_eq!(fast, golden, "config {cfg:?}");
+                for df in BOTH {
+                    let golden = simulate_tile(&t, &cfg, df).counts;
+                    let fast = analyze_tile(&t, &cfg, df);
+                    assert_eq!(fast, golden, "config {cfg:?}, {df}");
+                }
             }
         });
     }
 
     #[test]
-    fn active_macs_config_invariant() {
-        check("active MACs independent of coding", 20, |rng| {
+    fn active_macs_config_and_dataflow_invariant() {
+        check("active MACs independent of coding and dataflow", 20, |rng| {
             let t = random_tile(rng, 6, 10, 6, 0.5, 0.2);
-            let base = analyze_tile(&t, &SaCodingConfig::baseline());
+            let base =
+                analyze_tile(&t, &SaCodingConfig::baseline(), Dataflow::default());
             for name in ALL_CONFIGS {
-                let c = analyze_tile(&t, &SaCodingConfig::by_name(name).unwrap());
-                assert_eq!(c.active_macs, base.active_macs, "{name}");
+                for df in BOTH {
+                    let c =
+                        analyze_tile(&t, &SaCodingConfig::by_name(name).unwrap(), df);
+                    assert_eq!(c.active_macs, base.active_macs, "{name} {df}");
+                }
             }
         });
     }
@@ -369,31 +413,36 @@ mod tests {
     fn dense_tile_has_no_gating_effect() {
         let mut rng = Rng64::new(3);
         let t = random_tile(&mut rng, 8, 24, 8, 0.0, 0.0);
-        let base = analyze_tile(&t, &SaCodingConfig::baseline());
-        let zv = analyze_tile(&t, &SaCodingConfig::zvcg_only());
-        assert_eq!(base.west_data_toggles, zv.west_data_toggles);
-        assert_eq!(base.active_macs, zv.active_macs);
-        assert_eq!(zv.gated_macs, 0);
-        // but ZVCG still pays detectors + sideband clocks
-        assert!(zv.zero_detect_ops > 0);
-        assert!(zv.west_sideband_clock_events > 0);
+        for df in BOTH {
+            let base = analyze_tile(&t, &SaCodingConfig::baseline(), df);
+            let zv = analyze_tile(&t, &SaCodingConfig::zvcg_only(), df);
+            assert_eq!(base.west_data_toggles, zv.west_data_toggles);
+            assert_eq!(base.active_macs, zv.active_macs);
+            assert_eq!(zv.gated_macs, 0);
+            // but ZVCG still pays detectors + sideband clocks
+            assert!(zv.zero_detect_ops > 0);
+            assert!(zv.west_sideband_clock_events > 0);
+        }
     }
 
     #[test]
     fn mantissa_bic_reduces_north_toggles_on_cnn_like_weights() {
         // CNN-like weights: small magnitudes, exponents concentrated,
-        // mantissas uniform -> mantissa BIC must help the North pipelines.
+        // mantissas uniform -> mantissa BIC must help the North streams
+        // under either dataflow (the charge factor scales both sides).
         check("BIC helps on CNN-like weights", 10, |rng| {
             let (m, k, n) = (8, 64, 8);
             let t = random_tile(rng, m, k, n, 0.2, 0.0);
-            let base = analyze_tile(&t, &SaCodingConfig::baseline());
-            let bic = analyze_tile(&t, &SaCodingConfig::bic_only());
-            assert!(
-                bic.north_data_toggles < base.north_data_toggles,
-                "BIC {} vs base {}",
-                bic.north_data_toggles,
-                base.north_data_toggles
-            );
+            for df in BOTH {
+                let base = analyze_tile(&t, &SaCodingConfig::baseline(), df);
+                let bic = analyze_tile(&t, &SaCodingConfig::bic_only(), df);
+                assert!(
+                    bic.north_data_toggles < base.north_data_toggles,
+                    "{df}: BIC {} vs base {}",
+                    bic.north_data_toggles,
+                    base.north_data_toggles
+                );
+            }
         });
     }
 }

@@ -1,16 +1,121 @@
-//! SA instance configuration: array geometry + coding + models.
+//! SA instance configuration: array geometry + dataflow + coding + models.
 
 use crate::coding::SaCodingConfig;
 use crate::power::{AreaModel, EnergyModel};
 
+/// How operands move through the array and where state is held.
+///
+/// Both dataflows compute the identical `C = A×B` (bit-identical f32
+/// accumulation per PE, enforced by `rust/tests/conformance.rs`); they
+/// differ in **register movement**, which shifts where the switching
+/// activity lands:
+///
+/// * [`Dataflow::WeightStationary`] — the paper's streaming design and
+///   the seed behavior: A words snake West→East and B words North→South
+///   through per-PE 16-bit pipeline registers on a skewed schedule, so
+///   every stream value is re-registered once per PE it passes
+///   (N registers per West row, M per North column). BIC targets the
+///   heavily re-clocked weight pipelines; ZVCG freezes them on zeros.
+///   Tile latency: `M + N + K` cycles.
+/// * [`Dataflow::OutputStationary`] — outputs are the only stationary
+///   state: each West row / North column has a **single edge drive
+///   register** feeding a row/column broadcast bus tapped by its PEs,
+///   and all PEs execute k-slot `kk` in the same (unskewed) cycle.
+///   Stream words are registered once per lane instead of once per PE,
+///   so data-register toggles and clock events drop by the fanout
+///   factor, while per-PE decoder taps and all MAC-side counts are
+///   unchanged. ZVCG gates the drive register (the bus holds its value,
+///   and the whole lane's MACs are skipped for that slot). Tile
+///   latency: `K + 1` cycles.
+///
+/// Naming note: the names follow the source paper's usage (its streaming
+/// design is presented as the TPU-style weight-streaming machine), not
+/// the strict literature taxonomy — in the taxonomy sense *both*
+/// variants keep accumulators stationary in the PEs, and the axis
+/// modelled here is really "skewed per-PE pipelining" vs "per-lane
+/// broadcast buses". Read the register-movement descriptions above, not
+/// the names, when comparing against dataflow papers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    #[default]
+    WeightStationary,
+    OutputStationary,
+}
+
+impl Dataflow {
+    pub const ALL: &'static [Dataflow] =
+        &[Dataflow::WeightStationary, Dataflow::OutputStationary];
+
+    /// Stable short name (CLI `--dataflow` value, report provenance).
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataflow::WeightStationary => "ws",
+            Dataflow::OutputStationary => "os",
+        }
+    }
+
+    /// Human-readable name (tables, docs).
+    pub fn long_name(self) -> &'static str {
+        match self {
+            Dataflow::WeightStationary => "weight-stationary",
+            Dataflow::OutputStationary => "output-stationary",
+        }
+    }
+
+    /// `ws|os` — for CLI usage strings.
+    pub fn name_list() -> String {
+        Self::ALL
+            .iter()
+            .map(|d| d.name())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+
+    /// Streaming cycles for one M×K×N tile run (fill + stream + drain).
+    /// Single source of truth for both estimator backends.
+    pub fn tile_cycles(self, m: usize, k: usize, n: usize) -> u64 {
+        match self {
+            // skewed pipelines: last operand reaches PE(M-1,N-1) after
+            // the full diagonal fill plus the K-slot stream
+            Dataflow::WeightStationary => (m + n + k) as u64,
+            // unskewed buses: one fill cycle for the edge registers,
+            // then one cycle per k-slot
+            Dataflow::OutputStationary => (k + 1) as u64,
+        }
+    }
+}
+
+impl std::fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Dataflow {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|d| d.name() == s || d.long_name() == s)
+            .ok_or_else(|| {
+                format!("unknown dataflow '{s}'; available: {}", Self::name_list())
+            })
+    }
+}
+
 /// Geometry and model bundle for one SA instance. The paper's evaluated
-/// design is 16×16 PEs at 45 nm (the `Default`).
+/// design is 16×16 PEs at 45 nm, weight-stationary streaming (the
+/// `Default`).
 #[derive(Clone, Debug)]
 pub struct SaConfig {
     /// PE rows (West streams).
     pub rows: usize,
     /// PE columns (North streams).
     pub cols: usize,
+    /// Register-movement schedule (see [`Dataflow`]).
+    pub dataflow: Dataflow,
     /// Coding / gating configuration.
     pub coding: SaCodingConfig,
     /// Energy constants.
@@ -26,6 +131,7 @@ impl Default for SaConfig {
         Self {
             rows: 16,
             cols: 16,
+            dataflow: Dataflow::default(),
             coding: SaCodingConfig::baseline(),
             energy: EnergyModel::default(),
             area: AreaModel::default(),
@@ -65,6 +171,7 @@ mod tests {
         let c = SaConfig::default();
         assert_eq!((c.rows, c.cols), (16, 16));
         assert_eq!(c.clock_ghz, 1.0);
+        assert_eq!(c.dataflow, Dataflow::WeightStationary);
         assert!(!c.coding.has_overhead());
         assert!(SaConfig::proposed().coding.has_overhead());
     }
@@ -74,5 +181,36 @@ mod tests {
         let c = SaConfig { rows: 8, cols: 4, ..SaConfig::default() };
         let p = c.with_coding(SaCodingConfig::proposed());
         assert_eq!((p.rows, p.cols), (8, 4));
+        assert_eq!(p.dataflow, Dataflow::WeightStationary);
+    }
+
+    #[test]
+    fn dataflow_names_parse_and_roundtrip() {
+        assert_eq!("ws".parse::<Dataflow>().unwrap(), Dataflow::WeightStationary);
+        assert_eq!("os".parse::<Dataflow>().unwrap(), Dataflow::OutputStationary);
+        assert_eq!(
+            "weight-stationary".parse::<Dataflow>().unwrap(),
+            Dataflow::WeightStationary
+        );
+        assert_eq!(
+            "output-stationary".parse::<Dataflow>().unwrap(),
+            Dataflow::OutputStationary
+        );
+        assert!("systolic".parse::<Dataflow>().is_err());
+        assert_eq!(Dataflow::name_list(), "ws|os");
+        assert_eq!(Dataflow::default(), Dataflow::WeightStationary);
+        for d in Dataflow::ALL {
+            assert_eq!(d.name().parse::<Dataflow>().unwrap(), *d);
+            assert_eq!(format!("{d}"), d.name());
+        }
+    }
+
+    #[test]
+    fn tile_cycles_per_dataflow() {
+        assert_eq!(Dataflow::WeightStationary.tile_cycles(3, 7, 4), 14);
+        assert_eq!(Dataflow::OutputStationary.tile_cycles(3, 7, 4), 8);
+        // 1×1×1: WS pays the diagonal fill, OS only the edge fill
+        assert_eq!(Dataflow::WeightStationary.tile_cycles(1, 1, 1), 3);
+        assert_eq!(Dataflow::OutputStationary.tile_cycles(1, 1, 1), 2);
     }
 }

@@ -1,23 +1,40 @@
-//! Cycle-accurate, bit-level simulation of the output-stationary SA —
-//! the golden reference (substitute for the paper's RTL simulation).
+//! Cycle-accurate, bit-level simulation of the SA — the golden reference
+//! (substitute for the paper's RTL simulation) — for both dataflows.
 //!
 //! Every architectural element of paper Fig. 3 is explicit state:
 //!
-//! * per-PE 16-bit `a` (input) and `b` (weight) pipeline registers,
+//! * the 16-bit `a` (input) and `b` (weight) registers — per-PE pipeline
+//!   stages under [`Dataflow::WeightStationary`], single per-lane edge
+//!   drive registers feeding broadcast buses under
+//!   [`Dataflow::OutputStationary`],
 //! * the 1-bit `is-zero` (West) and `inv` (North) sideband flip-flops,
 //! * the BIC encoders at the North edge / zero detectors at the West edge,
 //! * per-PE operand-isolation latches feeding the multiplier,
 //! * the 32-bit f32 accumulator of each PE.
 //!
-//! Two engines implement the same machine:
+//! Two engines implement the same machine (per dataflow):
 //!
-//! * [`simulate_tile_reference`] — the seed simulator: three nested
-//!   per-cycle loops over all M×N PEs, every register advanced clock
-//!   edge by clock edge. Slow, maximally literal; kept verbatim as the
-//!   semantic anchor.
+//! * [`simulate_tile_reference`] — the literal simulator: nested
+//!   per-cycle loops, every register advanced clock edge by clock edge.
+//!   Slow, maximally literal; kept as the semantic anchor.
 //! * [`simulate_tile`] — the fast engine: **wavefront-bounded** and
-//!   **lane-major**, producing bit-identical [`ActivityCounts`] and the
-//!   identical functional result.
+//!   **lane-major** for WS, lane-replay + flat slot loops for OS,
+//!   producing bit-identical [`ActivityCounts`] and the identical
+//!   functional result.
+//!
+//! # Output-stationary semantics
+//!
+//! Under OS there is no inter-PE operand pipelining: row `i`'s drive
+//! register loads `A[i,kk]` at the edge ending cycle `kk` (frozen when
+//! ZVCG gates a zero), and every PE of the array executes slot `kk`
+//! during cycle `kk+1` off its row/column bus. Data/clock/sideband
+//! events are charged once per lane register; XOR-recovery decoder
+//! toggles are charged once per bus tap (N taps on a West row, M on a
+//! North column — the decoders still sit in the PEs). Because each PE
+//! consumes the identical `(A[i,kk], B[kk,j])` sequence in the identical
+//! `kk` order as WS, all MAC-side counts and the f32 accumulation are
+//! unchanged — the conformance suite (`rust/tests/conformance.rs`)
+//! asserts WS and OS outputs are bit-identical.
 //!
 //! # Why lane-major register passes are exact
 //!
@@ -41,16 +58,17 @@
 //! order (cycles ascending, then `i`, then `j`), so MAC counts and the
 //! f32 accumulation order — hence `C = A×B` bit patterns — are unchanged.
 //!
-//! The equivalence is enforced: `rust/tests/property_tests.rs` asserts
-//! `simulate_tile == simulate_tile_reference` (counts *and* outputs) on
-//! random tiles for every coding configuration, and the analytic model
+//! The equivalence is enforced: `rust/tests/property_tests.rs` and
+//! `rust/tests/conformance.rs` assert `simulate_tile ==
+//! simulate_tile_reference` (counts *and* outputs) on random tiles for
+//! every coding configuration and both dataflows, and the analytic model
 //! is in turn asserted equal to the cycle counts.
 
 use crate::activity::{ham1, ham_bf16, ActivityCounts};
 use crate::bf16::Bf16;
 use crate::coding::{decode, BicEncoder, BicMode, Encoded, SaCodingConfig};
 
-use super::Tile;
+use super::{Dataflow, Tile};
 
 /// What the edge logic presents to the first register of a lane at one
 /// stream slot.
@@ -94,6 +112,40 @@ fn edge_stream(
             EdgeSlot { gated: false, data: e.tx, inv: e.inv }
         })
         .collect()
+}
+
+/// Build both edges' slot streams (detectors + encoders) in stream
+/// order — all West rows, then all North columns. The shared front-end
+/// of every engine variant; edge-logic event counts (zero detects,
+/// encoder ops) accrue into `counts` here.
+fn edge_streams(
+    tile: &Tile,
+    cfg: &SaCodingConfig,
+    counts: &mut ActivityCounts,
+) -> (Vec<Vec<EdgeSlot>>, Vec<Vec<EdgeSlot>>) {
+    let west = (0..tile.m)
+        .map(|i| {
+            edge_stream(
+                tile.a_row(i),
+                cfg.input_zvcg,
+                cfg.input_bic,
+                cfg.bic_policy,
+                counts,
+            )
+        })
+        .collect();
+    let north = (0..tile.n)
+        .map(|j| {
+            edge_stream(
+                tile.b_col(j),
+                cfg.weight_zvcg,
+                cfg.weight_bic,
+                cfg.bic_policy,
+                counts,
+            )
+        })
+        .collect();
+    (west, north)
 }
 
 /// One lane register stage: data word + sidebands.
@@ -181,38 +233,30 @@ fn replay_lane(
     t
 }
 
-/// Simulate one tile through an M×N output-stationary SA with the given
-/// coding configuration — fast engine (wavefront-bounded, lane-major).
-/// Array geometry equals the tile geometry (the tiler pads tiles to the
-/// physical array size). Counts and outputs are bit-identical to
-/// [`simulate_tile_reference`].
-pub fn simulate_tile(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
+/// Simulate one tile through an M×N SA with the given coding
+/// configuration and dataflow — fast engine. Array geometry equals the
+/// tile geometry (the tiler pads tiles to the physical array size).
+/// Counts and outputs are bit-identical to [`simulate_tile_reference`]
+/// under the same dataflow.
+pub fn simulate_tile(
+    tile: &Tile,
+    cfg: &SaCodingConfig,
+    dataflow: Dataflow,
+) -> CycleResult {
+    match dataflow {
+        Dataflow::WeightStationary => simulate_tile_ws(tile, cfg),
+        Dataflow::OutputStationary => simulate_tile_os(tile, cfg),
+    }
+}
+
+/// WS fast engine: wavefront-bounded MAC loop + lane-major register
+/// replay (see the module docs for the exactness argument).
+fn simulate_tile_ws(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
     let (m, k, n) = (tile.m, tile.k, tile.n);
     let mut counts = ActivityCounts::default();
 
     // ---- Edge logic (detectors + encoders), in stream order ----
-    let west: Vec<Vec<EdgeSlot>> = (0..m)
-        .map(|i| {
-            edge_stream(
-                tile.a_row(i),
-                cfg.input_zvcg,
-                cfg.input_bic,
-                cfg.bic_policy,
-                &mut counts,
-            )
-        })
-        .collect();
-    let north: Vec<Vec<EdgeSlot>> = (0..n)
-        .map(|j| {
-            edge_stream(
-                tile.b_col(j),
-                cfg.weight_zvcg,
-                cfg.weight_bic,
-                cfg.bic_policy,
-                &mut counts,
-            )
-        })
-        .collect();
+    let (west, north) = edge_streams(tile, cfg, &mut counts);
 
     // ---- Lane-major register passes (one replay per lane, charged per
     //      register: N registers per West row, M per North column) ----
@@ -305,37 +349,123 @@ pub fn simulate_tile(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
     CycleResult { counts, c: acc }
 }
 
-/// The seed per-cycle simulator: every register of every PE advanced
-/// clock edge by clock edge, all M×N PEs scanned every cycle. Kept as
-/// the literal golden reference that [`simulate_tile`] is property-
-/// tested against; use `simulate_tile` everywhere else.
-pub fn simulate_tile_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
+/// OS fast engine: one lane replay per edge drive register (charged
+/// once — there is no per-PE operand pipeline), decoder toggles charged
+/// per bus tap, then a per-PE MAC walk over the replayed slot views.
+/// The per-PE `(operand, gate)` sequence is identical to WS, so the MAC
+/// body is the same — only the schedule (all PEs live every slot)
+/// differs.
+fn simulate_tile_os(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
     let (m, k, n) = (tile.m, tile.k, tile.n);
     let mut counts = ActivityCounts::default();
 
     // ---- Edge logic (detectors + encoders), in stream order ----
-    let west: Vec<Vec<EdgeSlot>> = (0..m)
-        .map(|i| {
-            edge_stream(
-                tile.a_row(i),
-                cfg.input_zvcg,
-                cfg.input_bic,
-                cfg.bic_policy,
-                &mut counts,
-            )
-        })
-        .collect();
-    let north: Vec<Vec<EdgeSlot>> = (0..n)
-        .map(|j| {
-            edge_stream(
-                tile.b_col(j),
-                cfg.weight_zvcg,
-                cfg.weight_bic,
-                cfg.bic_policy,
-                &mut counts,
-            )
-        })
-        .collect();
+    let (west, north) = edge_streams(tile, cfg, &mut counts);
+
+    // ---- Lane replays: one drive register per lane, decoders at the
+    //      bus taps (N PEs on a West row, M on a North column) ----
+    let mut a_ops = vec![MacOp::default(); m * k];
+    for i in 0..m {
+        let t = replay_lane(
+            &west[i],
+            cfg.input_zvcg,
+            cfg.input_bic,
+            &mut a_ops[i * k..(i + 1) * k],
+        );
+        counts.west_data_toggles += t.data_toggles;
+        counts.west_clock_events += t.clock_events;
+        counts.west_sideband_toggles += t.sideband_toggles;
+        counts.west_sideband_clock_events += t.sideband_clock_events;
+        counts.west_cg_cell_cycles += t.cg_cell_cycles;
+        counts.decoder_toggles += n as u64 * t.decoder_toggles;
+    }
+    let mut b_ops = vec![MacOp::default(); n * k];
+    for j in 0..n {
+        let t = replay_lane(
+            &north[j],
+            cfg.weight_zvcg,
+            cfg.weight_bic,
+            &mut b_ops[j * k..(j + 1) * k],
+        );
+        counts.north_data_toggles += t.data_toggles;
+        counts.north_clock_events += t.clock_events;
+        counts.north_sideband_toggles += t.sideband_toggles;
+        counts.north_sideband_clock_events += t.sideband_clock_events;
+        counts.north_cg_cell_cycles += t.cg_cell_cycles;
+        counts.decoder_toggles += m as u64 * t.decoder_toggles;
+    }
+
+    // ---- MAC phase: unskewed — every PE executes slot kk in cycle
+    //      kk+1. Iterated per PE (kk innermost): latches and the
+    //      accumulator live in registers and both op lanes are read
+    //      sequentially. Per-PE state only ever sees its own kk-ascending
+    //      slot sequence, and all counters are commutative sums, so this
+    //      order is count- and bit-identical to the reference's
+    //      cycle-major walk — and C = A×B matches WS bit-for-bit. ----
+    let any_gating = cfg.input_zvcg || cfg.weight_zvcg;
+    let mut acc = vec![0f32; m * n];
+
+    for i in 0..m {
+        let a_lane = &a_ops[i * k..(i + 1) * k];
+        for j in 0..n {
+            let b_lane = &b_ops[j * k..(j + 1) * k];
+            let mut lat_a = Bf16::ZERO;
+            let mut lat_b = Bf16::ZERO;
+            let mut sum = 0f32;
+            for kk in 0..k {
+                if any_gating {
+                    counts.acc_cg_cell_cycles += 1;
+                }
+                let a = a_lane[kk];
+                let b = b_lane[kk];
+                if a.gated || b.gated {
+                    counts.gated_macs += 1;
+                    continue;
+                }
+                counts.mult_input_toggles +=
+                    (ham_bf16(lat_a, a.val) + ham_bf16(lat_b, b.val)) as u64;
+                lat_a = a.val;
+                lat_b = b.val;
+                counts.acc_clock_events += 32;
+                if a.val.is_zero() || b.val.is_zero() {
+                    counts.zero_product_macs += 1;
+                } else {
+                    counts.active_macs += 1;
+                    sum += a.val.to_f32() * b.val.to_f32();
+                }
+            }
+            acc[i * n + j] = sum;
+        }
+    }
+
+    counts.unload_values += (m * n) as u64;
+    counts.cycles += Dataflow::OutputStationary.tile_cycles(m, k, n);
+    CycleResult { counts, c: acc }
+}
+
+/// The literal per-cycle simulator: every register advanced clock edge
+/// by clock edge, all PEs scanned every cycle. Kept as the golden
+/// reference that [`simulate_tile`] is property-tested against; use
+/// `simulate_tile` everywhere else.
+pub fn simulate_tile_reference(
+    tile: &Tile,
+    cfg: &SaCodingConfig,
+    dataflow: Dataflow,
+) -> CycleResult {
+    match dataflow {
+        Dataflow::WeightStationary => simulate_tile_ws_reference(tile, cfg),
+        Dataflow::OutputStationary => simulate_tile_os_reference(tile, cfg),
+    }
+}
+
+/// The seed per-cycle WS simulator: per-PE pipeline registers on the
+/// skewed schedule, all M×N PEs scanned every cycle.
+fn simulate_tile_ws_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
+    let (m, k, n) = (tile.m, tile.k, tile.n);
+    let mut counts = ActivityCounts::default();
+
+    // ---- Edge logic (detectors + encoders), in stream order ----
+    let (west, north) = edge_streams(tile, cfg, &mut counts);
 
     // ---- Register state ----
     let mut a_st = vec![Stage::default(); m * n];
@@ -499,6 +629,146 @@ pub fn simulate_tile_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult
     CycleResult { counts, c: acc }
 }
 
+/// The literal per-cycle OS simulator: M + N edge drive registers as
+/// explicit state, advanced clock edge by clock edge; every PE taps its
+/// row/column bus each cycle. The register-movement semantics:
+///
+/// * clock edge ending cycle `c` (for `c < K`) loads slot `c` into every
+///   drive register — unless ZVCG gates a zero, in which case the
+///   register is frozen (the bus holds) and only the 1-bit `is-zero`
+///   sideband FF is clocked;
+/// * during cycle `c` (for `1 <= c <= K`) all M×N PEs execute slot
+///   `kk = c - 1` off the bus state, skipping the MAC when either lane's
+///   drive register is zero-gated.
+fn simulate_tile_os_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
+    let (m, k, n) = (tile.m, tile.k, tile.n);
+    let mut counts = ActivityCounts::default();
+
+    // ---- Edge logic (detectors + encoders), in stream order ----
+    let (west, north) = edge_streams(tile, cfg, &mut counts);
+
+    // ---- Register state: one drive register per lane ----
+    let mut a_reg = vec![Stage::default(); m];
+    let mut b_reg = vec![Stage::default(); n];
+    let mut mlat_a = vec![Bf16::ZERO; m * n];
+    let mut mlat_b = vec![Bf16::ZERO; m * n];
+    let mut acc = vec![0f32; m * n];
+
+    let total_cycles = k + 1;
+    for c in 0..total_cycles {
+        // ---- Phase 1: MAC (combinational during cycle c) ----
+        // All PEs hold the slot-(c-1) operand pair off the buses.
+        if c >= 1 {
+            for i in 0..m {
+                for j in 0..n {
+                    if cfg.input_zvcg || cfg.weight_zvcg {
+                        counts.acc_cg_cell_cycles += 1;
+                    }
+                    if a_reg[i].zero || b_reg[j].zero {
+                        counts.gated_macs += 1;
+                        continue;
+                    }
+                    // XOR recovery of the original operands at the taps.
+                    let a = decode(
+                        cfg.input_bic,
+                        Encoded { tx: a_reg[i].data, inv: a_reg[i].inv },
+                    );
+                    let b = decode(
+                        cfg.weight_bic,
+                        Encoded { tx: b_reg[j].data, inv: b_reg[j].inv },
+                    );
+                    let p = i * n + j;
+                    counts.mult_input_toggles +=
+                        (ham_bf16(mlat_a[p], a) + ham_bf16(mlat_b[p], b)) as u64;
+                    mlat_a[p] = a;
+                    mlat_b[p] = b;
+                    counts.acc_clock_events += 32;
+                    if a.is_zero() || b.is_zero() {
+                        counts.zero_product_macs += 1;
+                    } else {
+                        counts.active_macs += 1;
+                        acc[p] += a.to_f32() * b.to_f32();
+                    }
+                }
+            }
+        }
+
+        // ---- Phase 2: clock edge at the end of cycle c ----
+        // Drive registers load slot c (nothing left to load once the
+        // stream is exhausted).
+        if c < k {
+            for i in 0..m {
+                let s = west[i][c];
+                if cfg.input_zvcg {
+                    counts.west_sideband_toggles +=
+                        ham1(a_reg[i].zero, s.gated) as u64;
+                    counts.west_sideband_clock_events += 1;
+                    counts.west_cg_cell_cycles += 1;
+                }
+                if cfg.input_zvcg && s.gated {
+                    a_reg[i].zero = true;
+                } else {
+                    counts.west_data_toggles +=
+                        ham_bf16(a_reg[i].data, s.data) as u64;
+                    counts.west_clock_events += 16;
+                    if cfg.input_bic != BicMode::None {
+                        let inv_diff =
+                            (a_reg[i].inv ^ s.inv).count_ones() as u64;
+                        // XOR decoders sit at every bus tap (one per PE
+                        // of the row), unlike the per-register WS charge.
+                        counts.decoder_toggles += n as u64
+                            * (crate::activity::ham16_masked(
+                                a_reg[i].data.0,
+                                s.data.0,
+                                bic_cover_mask(cfg.input_bic),
+                            ) as u64
+                                + inv_diff);
+                        counts.west_sideband_toggles += inv_diff;
+                        counts.west_sideband_clock_events +=
+                            cfg.input_bic.inv_lines() as u64;
+                    }
+                    a_reg[i] = Stage { data: s.data, zero: false, inv: s.inv };
+                }
+            }
+            for j in 0..n {
+                let s = north[j][c];
+                if cfg.weight_zvcg {
+                    counts.north_sideband_toggles +=
+                        ham1(b_reg[j].zero, s.gated) as u64;
+                    counts.north_sideband_clock_events += 1;
+                    counts.north_cg_cell_cycles += 1;
+                }
+                if cfg.weight_zvcg && s.gated {
+                    b_reg[j].zero = true;
+                } else {
+                    counts.north_data_toggles +=
+                        ham_bf16(b_reg[j].data, s.data) as u64;
+                    counts.north_clock_events += 16;
+                    if cfg.weight_bic != BicMode::None {
+                        let inv_diff =
+                            (b_reg[j].inv ^ s.inv).count_ones() as u64;
+                        counts.decoder_toggles += m as u64
+                            * (crate::activity::ham16_masked(
+                                b_reg[j].data.0,
+                                s.data.0,
+                                bic_cover_mask(cfg.weight_bic),
+                            ) as u64
+                                + inv_diff);
+                        counts.north_sideband_toggles += inv_diff;
+                        counts.north_sideband_clock_events +=
+                            cfg.weight_bic.inv_lines() as u64;
+                    }
+                    b_reg[j] = Stage { data: s.data, zero: false, inv: s.inv };
+                }
+            }
+        }
+    }
+
+    counts.unload_values += (m * n) as u64;
+    counts.cycles += total_cycles as u64;
+    CycleResult { counts, c: acc }
+}
+
 /// Union mask of the lines a BIC mode covers (for XOR-recovery toggles).
 fn bic_cover_mask(mode: BicMode) -> u16 {
     mode.segments().iter().fold(0u16, |acc, &m| acc | m)
@@ -518,13 +788,19 @@ mod tests {
         Tile::from_f32(&a, &b, m, k, n)
     }
 
+    const WS: Dataflow = Dataflow::WeightStationary;
+    const OS: Dataflow = Dataflow::OutputStationary;
+
     #[test]
     fn functional_correctness_baseline() {
-        check("cycle sim computes A×B (baseline)", 40, |rng| {
+        check("cycle sim computes A×B (baseline, both dataflows)", 40, |rng| {
             let (m, k, n) = (1 + rng.below(6), 1 + rng.below(12), 1 + rng.below(6));
             let t = random_tile(rng, m, k, n, 0.3);
-            let r = simulate_tile(&t, &SaCodingConfig::baseline());
-            assert_eq!(r.c, t.reference_result());
+            let want = t.reference_result();
+            for df in [WS, OS] {
+                let r = simulate_tile(&t, &SaCodingConfig::baseline(), df);
+                assert_eq!(r.c, want, "dataflow {df}");
+            }
         });
     }
 
@@ -544,24 +820,28 @@ mod tests {
             let want = t.reference_result();
             for name in configs {
                 let cfg = SaCodingConfig::by_name(name).unwrap();
-                let r = simulate_tile(&t, &cfg);
-                assert_eq!(r.c, want, "config {name}");
+                for df in [WS, OS] {
+                    let r = simulate_tile(&t, &cfg, df);
+                    assert_eq!(r.c, want, "config {name}, dataflow {df}");
+                }
             }
         });
     }
 
     #[test]
     fn fast_engine_matches_reference_engine() {
-        check("wavefront sim == seed per-cycle sim", 15, |rng| {
+        check("fast sim == literal per-cycle sim", 15, |rng| {
             let (m, k, n) = (1 + rng.below(8), 1 + rng.below(20), 1 + rng.below(8));
             let pz = rng.uniform();
             let t = random_tile(rng, m, k, n, pz);
             for name in ["baseline", "proposed", "bic-full", "zvcg-only"] {
                 let cfg = SaCodingConfig::by_name(name).unwrap();
-                let fast = simulate_tile(&t, &cfg);
-                let golden = simulate_tile_reference(&t, &cfg);
-                assert_eq!(fast.counts, golden.counts, "config {name}");
-                assert_eq!(fast.c, golden.c, "config {name}");
+                for df in [WS, OS] {
+                    let fast = simulate_tile(&t, &cfg, df);
+                    let golden = simulate_tile_reference(&t, &cfg, df);
+                    assert_eq!(fast.counts, golden.counts, "config {name}, {df}");
+                    assert_eq!(fast.c, golden.c, "config {name}, {df}");
+                }
             }
         });
     }
@@ -570,12 +850,16 @@ mod tests {
     fn zvcg_reduces_streaming_toggles() {
         check("ZVCG strictly helps on sparse inputs", 20, |rng| {
             let t = random_tile(rng, 8, 32, 8, 0.5);
-            let base = simulate_tile(&t, &SaCodingConfig::baseline());
-            let prop = simulate_tile(&t, &SaCodingConfig::zvcg_only());
-            assert!(
-                prop.counts.west_data_toggles <= base.counts.west_data_toggles
-            );
-            assert!(prop.counts.west_clock_events <= base.counts.west_clock_events);
+            for df in [WS, OS] {
+                let base = simulate_tile(&t, &SaCodingConfig::baseline(), df);
+                let prop = simulate_tile(&t, &SaCodingConfig::zvcg_only(), df);
+                assert!(
+                    prop.counts.west_data_toggles <= base.counts.west_data_toggles
+                );
+                assert!(
+                    prop.counts.west_clock_events <= base.counts.west_clock_events
+                );
+            }
         });
     }
 
@@ -584,8 +868,10 @@ mod tests {
         check("MAC slots partition", 20, |rng| {
             let t = random_tile(rng, 5, 20, 7, 0.5);
             for cfg in [SaCodingConfig::baseline(), SaCodingConfig::proposed()] {
-                let r = simulate_tile(&t, &cfg);
-                assert_eq!(r.counts.total_mac_slots(), t.mac_slots());
+                for df in [WS, OS] {
+                    let r = simulate_tile(&t, &cfg, df);
+                    assert_eq!(r.counts.total_mac_slots(), t.mac_slots());
+                }
             }
         });
     }
@@ -594,27 +880,55 @@ mod tests {
     fn baseline_has_no_overhead_events() {
         let mut rng = Rng64::new(1);
         let t = random_tile(&mut rng, 4, 8, 4, 0.3);
-        let r = simulate_tile(&t, &SaCodingConfig::baseline());
-        assert_eq!(r.counts.zero_detect_ops, 0);
-        assert_eq!(r.counts.encoder_ops, 0);
-        assert_eq!(r.counts.decoder_toggles, 0);
-        assert_eq!(r.counts.gated_macs, 0);
-        assert_eq!(r.counts.west_sideband_toggles, 0);
-        assert_eq!(r.counts.west_cg_cell_cycles, 0);
+        for df in [WS, OS] {
+            let r = simulate_tile(&t, &SaCodingConfig::baseline(), df);
+            assert_eq!(r.counts.zero_detect_ops, 0);
+            assert_eq!(r.counts.encoder_ops, 0);
+            assert_eq!(r.counts.decoder_toggles, 0);
+            assert_eq!(r.counts.gated_macs, 0);
+            assert_eq!(r.counts.west_sideband_toggles, 0);
+            assert_eq!(r.counts.west_cg_cell_cycles, 0);
+        }
     }
 
     #[test]
     fn clock_event_totals_baseline() {
-        // Baseline: every data register is clocked on each of its K slots.
+        // Baseline WS: every data register is clocked on each of its K
+        // slots (M·N registers per side). OS has one drive register per
+        // lane, so the clock load drops by the fanout factor.
         let mut rng = Rng64::new(2);
         let (m, k, n) = (3, 7, 4);
         let t = random_tile(&mut rng, m, k, n, 0.2);
-        let r = simulate_tile(&t, &SaCodingConfig::baseline());
+        let r = simulate_tile(&t, &SaCodingConfig::baseline(), WS);
         assert_eq!(r.counts.west_clock_events, (16 * m * n * k) as u64);
         assert_eq!(r.counts.north_clock_events, (16 * m * n * k) as u64);
         assert_eq!(r.counts.acc_clock_events, (32 * m * n * k) as u64);
         assert_eq!(r.counts.cycles, (m + n + k) as u64);
         assert_eq!(r.counts.unload_values, (m * n) as u64);
+
+        let o = simulate_tile(&t, &SaCodingConfig::baseline(), OS);
+        assert_eq!(o.counts.west_clock_events, (16 * m * k) as u64);
+        assert_eq!(o.counts.north_clock_events, (16 * n * k) as u64);
+        // MAC-side counts are dataflow-invariant
+        assert_eq!(o.counts.acc_clock_events, (32 * m * n * k) as u64);
+        assert_eq!(o.counts.mult_input_toggles, r.counts.mult_input_toggles);
+        assert_eq!(o.counts.active_macs, r.counts.active_macs);
+        assert_eq!(o.counts.cycles, (k + 1) as u64);
+        assert_eq!(o.counts.unload_values, (m * n) as u64);
+    }
+
+    #[test]
+    fn os_data_toggles_shrink_by_fanout() {
+        // Under WS every West stream re-registers once per column (N
+        // registers), under OS once per lane — exactly a factor N/M on
+        // the data toggles (baseline, no gating: same lane sequences).
+        let mut rng = Rng64::new(9);
+        let (m, k, n) = (5, 16, 3);
+        let t = random_tile(&mut rng, m, k, n, 0.4);
+        let ws = simulate_tile(&t, &SaCodingConfig::baseline(), WS).counts;
+        let os = simulate_tile(&t, &SaCodingConfig::baseline(), OS).counts;
+        assert_eq!(ws.west_data_toggles, n as u64 * os.west_data_toggles);
+        assert_eq!(ws.north_data_toggles, m as u64 * os.north_data_toggles);
     }
 
     #[test]
@@ -622,27 +936,31 @@ mod tests {
         let a = vec![0f32; 4 * 8];
         let b: Vec<f32> = (0..8 * 4).map(|i| i as f32 * 0.1).collect();
         let t = Tile::from_f32(&a, &b, 4, 8, 4);
-        let r = simulate_tile(&t, &SaCodingConfig::proposed());
-        assert_eq!(r.counts.gated_macs, t.mac_slots());
-        assert_eq!(r.counts.active_macs, 0);
-        assert_eq!(r.counts.west_data_toggles, 0);
-        assert_eq!(r.counts.west_clock_events, 0);
-        assert_eq!(r.c, vec![0f32; 16]);
+        for df in [WS, OS] {
+            let r = simulate_tile(&t, &SaCodingConfig::proposed(), df);
+            assert_eq!(r.counts.gated_macs, t.mac_slots(), "{df}");
+            assert_eq!(r.counts.active_macs, 0, "{df}");
+            assert_eq!(r.counts.west_data_toggles, 0, "{df}");
+            assert_eq!(r.counts.west_clock_events, 0, "{df}");
+            assert_eq!(r.c, vec![0f32; 16], "{df}");
+        }
     }
 
     #[test]
     fn bic_decodes_to_same_mult_activity() {
         // BIC must not change multiplier operand activity (values are
-        // recovered before the multiplier).
+        // recovered before the multiplier) — under either dataflow.
         check("BIC transparent to multiplier", 20, |rng| {
             let t = random_tile(rng, 4, 16, 4, 0.0);
-            let base = simulate_tile(&t, &SaCodingConfig::baseline());
-            let bic = simulate_tile(&t, &SaCodingConfig::bic_only());
-            assert_eq!(
-                base.counts.mult_input_toggles,
-                bic.counts.mult_input_toggles
-            );
-            assert_eq!(base.counts.active_macs, bic.counts.active_macs);
+            for df in [WS, OS] {
+                let base = simulate_tile(&t, &SaCodingConfig::baseline(), df);
+                let bic = simulate_tile(&t, &SaCodingConfig::bic_only(), df);
+                assert_eq!(
+                    base.counts.mult_input_toggles,
+                    bic.counts.mult_input_toggles
+                );
+                assert_eq!(base.counts.active_macs, bic.counts.active_macs);
+            }
         });
     }
 }

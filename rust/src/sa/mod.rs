@@ -1,21 +1,28 @@
-//! The systolic array: output-stationary dataflow, modelled twice.
+//! The systolic array: two dataflows ([`Dataflow`]), each modelled twice.
 //!
 //! * [`cycle`] — the **golden** cycle-accurate simulator: every pipeline
 //!   register, sideband flip-flop, operand-isolation latch and
-//!   accumulator is explicit state. Two engines: the seed per-cycle
-//!   walker (`simulate_tile_reference`, the literal RTL substitute) and
-//!   the fast wavefront/lane-major engine (`simulate_tile`), property-
-//!   tested bit-identical to it.
+//!   accumulator is explicit state. Two engines per dataflow: the
+//!   literal per-cycle walker (`simulate_tile_reference`, the RTL
+//!   substitute) and the fast engine (`simulate_tile`), property-tested
+//!   bit-identical to it.
 //! * [`analytic`] — the **fast** model: closed-form stream accounting
 //!   that produces *identical* `ActivityCounts` (proven by property tests
-//!   over random tiles, `rust/tests/property_tests.rs`). Full-CNN sweeps
-//!   (Figs. 4, 5) run through this engine.
+//!   over random tiles, `rust/tests/property_tests.rs` and
+//!   `rust/tests/conformance.rs`). Full-network sweeps (Figs. 4, 5) run
+//!   through this engine.
 //!
 //! Shared semantics (DESIGN.md §6): a register is charged one clock event
 //! per *load slot* (K slots per tile stream) and data toggles by Hamming
 //! distance from its previous state; zero-gated slots are not clocked;
 //! the pair of operands reaching PE(i,j) at slot k is (A[i,k], B[k,j]),
-//! exactly the matmul pairing of the skewed dataflow.
+//! the matmul pairing, under either dataflow. Weight-stationary
+//! streaming moves that pair through per-PE pipeline registers on the
+//! paper's skewed schedule; output-stationary drives it over row/column
+//! buses from single per-lane edge registers on an unskewed schedule.
+//! The differential conformance suite (`rust/tests/conformance.rs`) is
+//! the bit-exactness contract between the two: identical f32 outputs,
+//! identical MAC-side counts.
 
 mod analytic;
 mod config;

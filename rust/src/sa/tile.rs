@@ -248,9 +248,11 @@ impl Tile {
         (self.m * self.n * self.k) as u64
     }
 
-    /// Streaming cycles per tile run (fill + stream + drain): K + M + N.
+    /// Streaming cycles per tile run under the default (weight-
+    /// stationary) dataflow: K + M + N. Dataflow-aware callers use
+    /// [`super::Dataflow::tile_cycles`] instead.
     pub fn cycles(&self) -> u64 {
-        (self.k + self.m + self.n) as u64
+        super::Dataflow::WeightStationary.tile_cycles(self.m, self.k, self.n)
     }
 }
 

@@ -103,7 +103,7 @@ pub fn render_trace(rows: &[TraceRow]) -> String {
 mod tests {
     use super::*;
     use crate::coding::SaCodingConfig;
-    use crate::sa::{analyze_tile, Tile};
+    use crate::sa::{analyze_tile, Dataflow, Tile};
     use crate::util::prop::check;
     use crate::util::Rng64;
 
@@ -132,7 +132,7 @@ mod tests {
                 (true, SaCodingConfig::zvcg_only()),
             ] {
                 let rows = trace_lane(&s, zvcg, BicMode::None, BicPolicy::Classic);
-                let counts = analyze_tile(&tile, &cfg);
+                let counts = analyze_tile(&tile, &cfg, Dataflow::WeightStationary);
                 assert_eq!(
                     rows.last().unwrap().cumulative_toggles,
                     counts.west_data_toggles,
@@ -150,7 +150,11 @@ mod tests {
             let tile = Tile::new(a, s.clone(), 1, 32, 1);
             let rows =
                 trace_lane(&s, false, BicMode::MantissaOnly, BicPolicy::Classic);
-            let counts = analyze_tile(&tile, &SaCodingConfig::bic_only());
+            let counts = analyze_tile(
+                &tile,
+                &SaCodingConfig::bic_only(),
+                Dataflow::WeightStationary,
+            );
             assert_eq!(
                 rows.last().unwrap().cumulative_toggles,
                 counts.north_data_toggles

@@ -377,10 +377,17 @@ fn parse_number(b: &[u8], pos: &mut usize) -> Result<f64, String> {
     if start == *pos {
         return Err(format!("expected value at byte {start}"));
     }
-    std::str::from_utf8(&b[start..*pos])
+    let v = std::str::from_utf8(&b[start..*pos])
         .map_err(|e| e.to_string())?
         .parse::<f64>()
-        .map_err(|e| format!("bad number at byte {start}: {e}"))
+        .map_err(|e| format!("bad number at byte {start}: {e}"))?;
+    // JSON has no NaN/Infinity tokens ("NaN"/"inf" already fail above),
+    // but an overflowing literal like 1e999 would otherwise smuggle an
+    // infinity into a tree this crate promises to render finitely.
+    if !v.is_finite() {
+        return Err(format!("non-finite number at byte {start}"));
+    }
+    Ok(v)
 }
 
 #[cfg(test)]

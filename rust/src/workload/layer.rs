@@ -1,6 +1,6 @@
-//! CNN layer descriptors and their GEMM lowering.
+//! Layer descriptors and their GEMM lowering (CNN and transformer).
 
-/// Kind of CNN layer, as it maps onto the SA.
+/// Kind of layer, as it maps onto the SA.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LayerKind {
     /// Standard convolution (kh×kw×cin per output channel).
@@ -10,6 +10,10 @@ pub enum LayerKind {
     Depthwise,
     /// Fully connected (M=1 GEMM).
     Dense,
+    /// A bare M×K×N GEMM (no im2col lowering) — transformer attention
+    /// and MLP matmuls. The A matrix is the layer's "feature map"
+    /// (M×K values); B is the K×N weight/operand matrix.
+    Gemm,
 }
 
 /// One layer of a CNN, with everything needed to lower it to GEMM.
@@ -102,6 +106,34 @@ impl Layer {
         }
     }
 
+    /// A bare M×K×N GEMM layer (transformer matmuls). `relu_input`
+    /// selects the activation statistics of the A matrix: `true` for
+    /// zero-rich post-activation streams (e.g. the FFN down-projection
+    /// after GELU/ReLU), `false` for dense signed streams (LayerNorm
+    /// outputs, attention scores).
+    pub fn gemm_layer(
+        name: &str,
+        m: usize,
+        k: usize,
+        n: usize,
+        relu_input: bool,
+    ) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Gemm,
+            kh: 1,
+            kw: 1,
+            cin: k,
+            cout: n,
+            stride: 1,
+            // spatial fields double as the M extent so the generators'
+            // `h·w·cin` A-matrix sizing holds for every kind
+            h: m,
+            w: 1,
+            relu_input,
+        }
+    }
+
     /// Output spatial size under SAME padding.
     pub fn out_h(&self) -> usize {
         self.h.div_ceil(self.stride)
@@ -125,6 +157,9 @@ impl Layer {
                 n: 1,
             },
             LayerKind::Dense => GemmShape { m: 1, k: self.cin, n: self.cout },
+            LayerKind::Gemm => {
+                GemmShape { m: self.h * self.w, k: self.cin, n: self.cout }
+            }
         }
     }
 
@@ -146,7 +181,7 @@ impl Layer {
         match self.kind {
             LayerKind::Conv => (self.kh * self.kw * self.cin * self.cout) as u64,
             LayerKind::Depthwise => (self.kh * self.kw * self.cin) as u64,
-            LayerKind::Dense => (self.cin * self.cout) as u64,
+            LayerKind::Dense | LayerKind::Gemm => (self.cin * self.cout) as u64,
         }
     }
 
@@ -175,11 +210,23 @@ impl Network {
         self.layers.iter().map(|l| l.params()).sum()
     }
 
+    /// Registered workload names, in lookup order. Kept next to
+    /// [`Network::by_name`] so usage strings derive from code; a test
+    /// asserts the two stay in sync.
+    pub const NAMES: &'static [&'static str] =
+        &["resnet50", "mobilenet", "tinycnn", "transformer"];
+
+    /// `resnet50|mobilenet|...` — for CLI usage strings.
+    pub fn name_list() -> String {
+        Self::NAMES.join("|")
+    }
+
     pub fn by_name(name: &str) -> Option<Network> {
         match name {
             "resnet50" => Some(super::resnet50()),
             "mobilenet" => Some(super::mobilenet_v1()),
             "tinycnn" => Some(super::tinycnn()),
+            "transformer" => Some(super::transformer()),
             _ => None,
         }
     }
@@ -188,6 +235,19 @@ impl Network {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn registered_names_all_resolve() {
+        for name in Network::NAMES {
+            let net = Network::by_name(name).unwrap();
+            assert_eq!(&net.name, name);
+        }
+        assert!(Network::by_name("bogus").is_none());
+        assert_eq!(
+            Network::name_list(),
+            "resnet50|mobilenet|tinycnn|transformer"
+        );
+    }
 
     #[test]
     fn conv_gemm_lowering() {
@@ -212,6 +272,17 @@ mod tests {
         let l = Layer::dense("fc", 2048, 1000);
         assert_eq!(l.gemm(), GemmShape { m: 1, k: 2048, n: 1000 });
         assert_eq!(l.params(), 2048 * 1000);
+    }
+
+    #[test]
+    fn gemm_layer_lowering() {
+        let l = Layer::gemm_layer("qk", 64, 32, 128, false);
+        assert_eq!(l.gemm(), GemmShape { m: 64, k: 32, n: 128 });
+        assert_eq!(l.gemm_count(), 1);
+        assert_eq!(l.fan_in(), 32);
+        assert_eq!(l.params(), 32 * 128);
+        assert_eq!(l.macs(), (64 * 32 * 128) as u64);
+        assert!(!l.relu_input);
     }
 
     #[test]

@@ -63,7 +63,7 @@ mod tests {
                 LayerKind::Depthwise => {
                     assert_eq!(l.cin, cin, "layer {}", l.name);
                 }
-                LayerKind::Conv | LayerKind::Dense => {
+                LayerKind::Conv | LayerKind::Dense | LayerKind::Gemm => {
                     assert_eq!(l.cin, cin, "layer {}", l.name);
                     cin = l.cout;
                 }

@@ -1,4 +1,4 @@
-//! CNN workloads: layer tables, synthetic data generation, im2col
+//! DNN workloads: layer tables, synthetic data generation, im2col
 //! lowering and GEMM tiling.
 //!
 //! The paper evaluates complete ResNet50 and MobileNet inference
@@ -8,6 +8,11 @@
 //! and post-ReLU-statistics synthetic activations with per-layer zero
 //! fractions. Every layer of both networks is lowered to GEMM exactly as
 //! a real SA compiler would (im2col), then tiled to the 16×16 array.
+//!
+//! Beyond the paper's CNNs, [`transformer`] adds an attention + MLP
+//! workload (bare [`LayerKind::Gemm`] layers — QK^T, AV, projections,
+//! FFN) whose dense operand streams probe the coding/dataflow space from
+//! the opposite end of the sparsity spectrum.
 
 mod generator;
 mod im2col;
@@ -16,6 +21,7 @@ mod mobilenet;
 mod resnet50;
 mod tiler;
 mod tinycnn;
+mod transformer;
 
 pub use generator::*;
 pub use im2col::*;
@@ -24,3 +30,4 @@ pub use mobilenet::*;
 pub use resnet50::*;
 pub use tiler::*;
 pub use tinycnn::*;
+pub use transformer::*;

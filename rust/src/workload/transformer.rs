@@ -1,0 +1,127 @@
+//! Transformer encoder workload: the attention + MLP GEMMs of a compact
+//! ViT/BERT-style block stack, lowered straight to [`LayerKind::Gemm`]
+//! layers (no im2col — these layers *are* matmuls).
+//!
+//! Per block, the GEMMs an SA compiler would schedule:
+//!
+//! * `qkv`   — fused Q/K/V projection, `seq × d_model × 3·d_model`;
+//! * `attn.qk` — the score matmul `Q·K^T`, `seq × head_dim × seq`
+//!   (modelled at single-head granularity: every head runs the same
+//!   shape, so one instance is the per-head power sample);
+//! * `attn.av` — the value matmul `softmax(S)·V`, `seq × seq × head_dim`;
+//! * `attn.proj` — output projection, `seq × d_model × d_model`;
+//! * `ffn.up` / `ffn.down` — the MLP pair, `seq × d_model × 4·d_model`
+//!   and back.
+//!
+//! Distribution realism rides on the same substitution machinery as the
+//! CNNs (DESIGN.md §2): weights are fan-in-scaled Gaussians (bf16
+//! exponents concentrated, mantissas near-uniform — the Fig. 2 facts BIC
+//! exploits), and the A-matrix statistics follow `relu_input`:
+//! LayerNorm-fed projections and attention operands are **dense signed**
+//! streams (`relu_input = false`, ~8 % exact zeros), while the FFN
+//! down-projection consumes a **zero-rich post-activation** stream
+//! (`relu_input = true`, 35–80 % zeros). That contrast is the point of
+//! the workload: transformers feed the array far fewer zeros than ReLU
+//! CNNs, so ZVCG has less to gate and the coding/dataflow choice shifts
+//! which stream dominates — exactly the scenario diversity the dataflow
+//! axis exists to measure.
+
+use super::layer::{Layer, Network};
+
+/// Sequence length (tokens per forward pass).
+pub const TRANSFORMER_SEQ: usize = 64;
+/// Model width.
+pub const TRANSFORMER_D_MODEL: usize = 256;
+/// Attention heads (head_dim = d_model / heads).
+pub const TRANSFORMER_HEADS: usize = 4;
+/// MLP expansion factor.
+pub const TRANSFORMER_FFN_MULT: usize = 4;
+/// Encoder blocks.
+pub const TRANSFORMER_BLOCKS: usize = 2;
+/// Classifier width of the final head.
+pub const TRANSFORMER_CLASSES: usize = 1000;
+
+/// Build the transformer encoder workload (`Network::by_name("transformer")`).
+pub fn transformer() -> Network {
+    let (seq, d) = (TRANSFORMER_SEQ, TRANSFORMER_D_MODEL);
+    let head_dim = d / TRANSFORMER_HEADS;
+    let ffn = TRANSFORMER_FFN_MULT * d;
+    let mut layers = Vec::new();
+    for b in 1..=TRANSFORMER_BLOCKS {
+        let l = |suffix: &str| format!("blk{b}.{suffix}");
+        layers.push(Layer::gemm_layer(&l("qkv"), seq, d, 3 * d, false));
+        layers.push(Layer::gemm_layer(&l("attn.qk"), seq, head_dim, seq, false));
+        layers.push(Layer::gemm_layer(&l("attn.av"), seq, seq, head_dim, false));
+        layers.push(Layer::gemm_layer(&l("attn.proj"), seq, d, d, false));
+        layers.push(Layer::gemm_layer(&l("ffn.up"), seq, d, ffn, false));
+        // the only zero-rich stream: GELU/ReLU output feeding the
+        // down-projection
+        layers.push(Layer::gemm_layer(&l("ffn.down"), seq, ffn, d, true));
+    }
+    layers.push(Layer::dense("head", d, TRANSFORMER_CLASSES));
+    Network { name: "transformer".into(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{gen_feature_map, gen_weights, GemmShape, LayerKind};
+
+    #[test]
+    fn block_structure_and_shapes() {
+        let net = transformer();
+        assert_eq!(net.layers.len(), 6 * TRANSFORMER_BLOCKS + 1);
+        let qk = net.layers.iter().find(|l| l.name == "blk1.attn.qk").unwrap();
+        assert_eq!(qk.gemm(), GemmShape { m: 64, k: 64, n: 64 });
+        let av = net.layers.iter().find(|l| l.name == "blk2.attn.av").unwrap();
+        assert_eq!(av.gemm(), GemmShape { m: 64, k: 64, n: 64 });
+        let up = net.layers.iter().find(|l| l.name == "blk1.ffn.up").unwrap();
+        assert_eq!(up.gemm(), GemmShape { m: 64, k: 256, n: 1024 });
+        let down = net.layers.iter().find(|l| l.name == "blk1.ffn.down").unwrap();
+        assert_eq!(down.gemm(), GemmShape { m: 64, k: 1024, n: 256 });
+        assert!(down.relu_input, "FFN down-projection input is post-activation");
+        assert!(!up.relu_input, "FFN up-projection input is LayerNorm output");
+        assert!(net.total_macs() > 0);
+    }
+
+    #[test]
+    fn registered_by_name() {
+        let net = Network::by_name("transformer").unwrap();
+        assert_eq!(net.name, "transformer");
+        assert!(net
+            .layers
+            .iter()
+            .take(net.layers.len() - 1)
+            .all(|l| l.kind == LayerKind::Gemm));
+    }
+
+    #[test]
+    fn generators_produce_gemm_shaped_tensors() {
+        let net = transformer();
+        for (i, l) in net.layers.iter().enumerate() {
+            let g = l.gemm();
+            let fm = gen_feature_map(l, 7, i);
+            let w = gen_weights(l, 7, i);
+            // Dense head keeps its M=1 convention; Gemm layers carry the
+            // full M×K A matrix.
+            assert_eq!(fm.len(), g.m * g.k * l.gemm_count(), "layer {}", l.name);
+            assert_eq!(w.len(), g.k * g.n * l.gemm_count(), "layer {}", l.name);
+        }
+    }
+
+    #[test]
+    fn attention_streams_are_dense_ffn_down_is_sparse() {
+        let net = transformer();
+        let zf = |name: &str| {
+            let (i, l) = net
+                .layers
+                .iter()
+                .enumerate()
+                .find(|(_, l)| l.name == name)
+                .unwrap();
+            crate::workload::zero_fraction(&gen_feature_map(l, 0xCAFE, i))
+        };
+        assert!(zf("blk1.attn.qk") < 0.15, "attention operands are dense");
+        assert!(zf("blk1.ffn.down") > 0.3, "post-activation stream is zero-rich");
+    }
+}

@@ -1,0 +1,252 @@
+//! Differential conformance suite — the bit-exactness contract of the
+//! dataflow × backend matrix (see `engine/backend.rs` for the contract
+//! text). Any new engine (a third dataflow, an alternative estimator)
+//! must pass this suite before it ships:
+//!
+//! (a) **functional**: weight-stationary and output-stationary produce
+//!     bit-identical f32 GEMM outputs on every tile, under every
+//!     registry config;
+//! (b) **intra-dataflow**: the fast `simulate_tile` equals the literal
+//!     `simulate_tile_reference` — counts and outputs — per dataflow;
+//! (c) **inter-backend**: the analytic model and the cycle simulator
+//!     agree on the entire activity ledger per dataflow, and the
+//!     MAC-side counts are additionally invariant *across* dataflows;
+//!
+//! including degenerate geometries (1×1 tiles, all-zero operands) and
+//! the zero-K rejection at the `Tile` boundary.
+
+use sa_lowpower::engine::{
+    AnalyticBackend, BackendKind, ConfigSet, CycleBackend, EstimatorBackend,
+    SaEngine,
+};
+use sa_lowpower::sa::{
+    analyze_tile, simulate_tile, simulate_tile_reference, Dataflow, Tile,
+};
+use sa_lowpower::util::prop::check;
+use sa_lowpower::util::Rng64;
+use sa_lowpower::workload::Network;
+
+const WS: Dataflow = Dataflow::WeightStationary;
+const OS: Dataflow = Dataflow::OutputStationary;
+
+fn random_tile(
+    rng: &mut Rng64,
+    m: usize,
+    k: usize,
+    n: usize,
+    pz_a: f64,
+    pz_b: f64,
+) -> Tile {
+    let a: Vec<f32> = (0..m * k)
+        .map(|_| if rng.chance(pz_a) { 0.0 } else { rng.normal() as f32 })
+        .collect();
+    let b: Vec<f32> = (0..k * n)
+        .map(|_| if rng.chance(pz_b) { 0.0 } else { (rng.normal() * 0.1) as f32 })
+        .collect();
+    Tile::from_f32(&a, &b, m, k, n)
+}
+
+/// Degenerate tiles every conformance clause must also hold on.
+fn degenerate_tiles(rng: &mut Rng64) -> Vec<Tile> {
+    vec![
+        // 1×1×1: single PE, single slot
+        random_tile(rng, 1, 1, 1, 0.3, 0.1),
+        // all-zero A (everything gates under input ZVCG)
+        Tile::from_f32(&[0.0; 3 * 8], &[0.5; 8 * 4], 3, 8, 4),
+        // all-zero B (zero products everywhere; weight-ZVCG gates all)
+        Tile::from_f32(&[0.25; 3 * 8], &[0.0; 8 * 4], 3, 8, 4),
+        // all-zero both
+        Tile::from_f32(&[0.0; 2 * 5], &[0.0; 5 * 2], 2, 5, 2),
+        // K=1 stream, skinny arrays
+        random_tile(rng, 7, 1, 1, 0.5, 0.5),
+        random_tile(rng, 1, 1, 7, 0.5, 0.5),
+    ]
+}
+
+// ---- (a) cross-dataflow functional equality --------------------------
+
+#[test]
+fn ws_and_os_outputs_bit_identical() {
+    check("C(ws) == C(os) bit-for-bit, all registry configs", 15, |rng| {
+        let (m, k, n) = (1 + rng.below(10), 1 + rng.below(24), 1 + rng.below(10));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.5;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        let want = t.reference_result();
+        for (name, cfg) in ConfigSet::all().iter() {
+            let ws = simulate_tile(&t, cfg, WS);
+            let os = simulate_tile(&t, cfg, OS);
+            assert_eq!(ws.c, os.c, "'{name}' {m}x{k}x{n}");
+            assert_eq!(ws.c, want, "'{name}' vs f32 reference");
+        }
+    });
+}
+
+#[test]
+fn ws_and_os_outputs_bit_identical_on_degenerate_tiles() {
+    let mut rng = Rng64::new(0xC0FF);
+    for t in degenerate_tiles(&mut rng) {
+        for (name, cfg) in ConfigSet::all().iter() {
+            let ws = simulate_tile(&t, cfg, WS);
+            let os = simulate_tile(&t, cfg, OS);
+            assert_eq!(ws.c, os.c, "'{name}' {}x{}x{}", t.m, t.k, t.n);
+            assert_eq!(ws.c, t.reference_result(), "'{name}'");
+        }
+    }
+}
+
+// ---- (b) fast engine == literal reference, per dataflow --------------
+
+#[test]
+fn fast_equals_reference_counts_per_dataflow() {
+    check("simulate_tile == simulate_tile_reference", 10, |rng| {
+        let (m, k, n) = (1 + rng.below(9), 1 + rng.below(20), 1 + rng.below(9));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.4;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        for (name, cfg) in ConfigSet::all().iter() {
+            for df in [WS, OS] {
+                let fast = simulate_tile(&t, cfg, df);
+                let golden = simulate_tile_reference(&t, cfg, df);
+                assert_eq!(fast.counts, golden.counts, "'{name}' {df}");
+                assert_eq!(fast.c, golden.c, "'{name}' {df}");
+            }
+        }
+    });
+}
+
+#[test]
+fn fast_equals_reference_on_degenerate_tiles() {
+    let mut rng = Rng64::new(0xD00D);
+    for t in degenerate_tiles(&mut rng) {
+        for (name, cfg) in ConfigSet::all().iter() {
+            for df in [WS, OS] {
+                let fast = simulate_tile(&t, cfg, df);
+                let golden = simulate_tile_reference(&t, cfg, df);
+                assert_eq!(
+                    fast.counts, golden.counts,
+                    "'{name}' {df} {}x{}x{}",
+                    t.m, t.k, t.n
+                );
+                assert_eq!(fast.c, golden.c, "'{name}' {df}");
+            }
+        }
+    }
+}
+
+// ---- (c) backend agreement, intra- and inter-dataflow ----------------
+
+#[test]
+fn analytic_and_cycle_backends_agree_per_dataflow() {
+    check("analytic ledger == cycle ledger", 10, |rng| {
+        let (m, k, n) = (1 + rng.below(10), 1 + rng.below(28), 1 + rng.below(10));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.4;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        for (name, cfg) in ConfigSet::all().iter() {
+            for df in [WS, OS] {
+                let a = AnalyticBackend.estimate(&t, cfg, df);
+                let c = CycleBackend.estimate(&t, cfg, df);
+                assert_eq!(a, c, "'{name}' {df} {m}x{k}x{n}");
+            }
+        }
+    });
+}
+
+#[test]
+fn analytic_and_cycle_backends_agree_on_degenerate_tiles() {
+    let mut rng = Rng64::new(0xBEEF);
+    for t in degenerate_tiles(&mut rng) {
+        for (name, cfg) in ConfigSet::all().iter() {
+            for df in [WS, OS] {
+                let a = AnalyticBackend.estimate(&t, cfg, df);
+                let c = CycleBackend.estimate(&t, cfg, df);
+                assert_eq!(a, c, "'{name}' {df} {}x{}x{}", t.m, t.k, t.n);
+            }
+        }
+    }
+}
+
+#[test]
+fn mac_side_counts_are_dataflow_invariant() {
+    // The cross-dataflow clause of the backend contract: everything the
+    // MAC/accumulator side of the ledger counts is identical between WS
+    // and OS (the per-PE operand sequences are the same), while the
+    // stream side legitimately shrinks by the fanout under OS.
+    check("MAC-side ledger invariant across dataflows", 15, |rng| {
+        let (m, k, n) = (1 + rng.below(10), 1 + rng.below(24), 1 + rng.below(10));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.4;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        for (name, cfg) in ConfigSet::all().iter() {
+            let ws = analyze_tile(&t, cfg, WS);
+            let os = analyze_tile(&t, cfg, OS);
+            assert_eq!(ws.mult_input_toggles, os.mult_input_toggles, "'{name}'");
+            assert_eq!(ws.active_macs, os.active_macs, "'{name}'");
+            assert_eq!(ws.gated_macs, os.gated_macs, "'{name}'");
+            assert_eq!(ws.zero_product_macs, os.zero_product_macs, "'{name}'");
+            assert_eq!(ws.acc_clock_events, os.acc_clock_events, "'{name}'");
+            assert_eq!(ws.acc_cg_cell_cycles, os.acc_cg_cell_cycles, "'{name}'");
+            assert_eq!(ws.unload_values, os.unload_values, "'{name}'");
+            // edge logic is shared too: same detectors, same encoders
+            assert_eq!(ws.zero_detect_ops, os.zero_detect_ops, "'{name}'");
+            assert_eq!(ws.encoder_ops, os.encoder_ops, "'{name}'");
+            // stream side: OS registers once per lane, never more than WS
+            assert!(ws.west_clock_events >= os.west_clock_events, "'{name}'");
+            assert!(ws.north_clock_events >= os.north_clock_events, "'{name}'");
+        }
+    });
+}
+
+// ---- boundary: zero-K tiles are rejected at construction -------------
+
+#[test]
+#[should_panic(expected = "empty tile")]
+fn zero_k_tiles_are_rejected() {
+    // K = 0 has no stream slots; the Tile constructor is the contract
+    // boundary and must refuse it for every downstream engine at once.
+    let _ = Tile::from_f32(&[], &[], 2, 0, 3);
+}
+
+#[test]
+#[should_panic(expected = "empty tile")]
+fn zero_m_tiles_are_rejected() {
+    let _ = Tile::from_f32(&[], &[1.0, 2.0], 0, 1, 2);
+}
+
+// ---- engine-level: the full sweep matrix stays bit-exact -------------
+
+#[test]
+fn transformer_sweeps_agree_across_backends_and_dataflows() {
+    // Acceptance criterion: the transformer workload runs through
+    // `SaEngine::sweep` on both backends and both dataflows, and the two
+    // backends produce bit-identical ledgers cell by cell.
+    let net = Network::by_name("transformer").unwrap();
+    for df in [WS, OS] {
+        let sweep_of = |kind: BackendKind| {
+            SaEngine::builder()
+                .max_tiles_per_layer(1)
+                .backend(kind)
+                .dataflow(df)
+                .threads(2)
+                .build()
+                .sweep(&net)
+        };
+        let a = sweep_of(BackendKind::Analytic);
+        let c = sweep_of(BackendKind::Cycle);
+        assert_eq!(a.dataflow, df.name());
+        assert_eq!(c.dataflow, df.name());
+        assert_eq!(a.layers.len(), net.layers.len());
+        for (la, lc) in a.layers.iter().zip(&c.layers) {
+            for (ra, rc) in la.results.iter().zip(&lc.results) {
+                assert_eq!(
+                    ra.counts, rc.counts,
+                    "layer {} cfg {} {df}",
+                    la.layer_name, ra.config_name
+                );
+                assert_eq!(ra.energy, rc.energy, "layer {} {df}", la.layer_name);
+            }
+        }
+        assert!(a.total_energy("baseline") > 0.0);
+    }
+}

@@ -6,11 +6,12 @@ use sa_lowpower::activity::ActivityCounts;
 use sa_lowpower::coding::SaCodingConfig;
 use sa_lowpower::coordinator::{ConfigResult, LayerReport, SweepReport};
 use sa_lowpower::engine::{
-    BackendKind, ConfigSet, LayerJob, SaEngine, SWEEP_REPORT_SCHEMA,
+    BackendKind, ConfigSet, LayerJob, SaEngine, SweepDoc, SWEEP_REPORT_SCHEMA,
+    SWEEP_REPORT_SCHEMA_V1,
 };
 use sa_lowpower::power::EnergyBreakdown;
 use sa_lowpower::util::json::Json;
-use sa_lowpower::workload::{tinycnn, GemmShape, Layer, Network};
+use sa_lowpower::workload::{tinycnn, transformer, GemmShape, Layer, Network};
 
 fn fast_engine(configs: ConfigSet, kind: BackendKind) -> SaEngine {
     SaEngine::builder()
@@ -40,6 +41,7 @@ fn handmade_report() -> SweepReport {
     SweepReport {
         network: "unit".into(),
         backend: "analytic".into(),
+        dataflow: "ws".into(),
         layers: vec![LayerReport {
             layer_name: "conv1".into(),
             layer_index: 0,
@@ -57,6 +59,112 @@ fn handmade_report() -> SweepReport {
     }
 }
 
+/// A hand-built report over the *real* transformer workload's layer
+/// metadata (names, GEMM shapes, tile-grid totals come from
+/// `workload::transformer()`), with exact-binary activity/energy values
+/// so the rendering is byte-stable. Pins the v2 document layout for the
+/// new workload; if the transformer shapes change, this golden breaks
+/// loudly.
+fn handmade_transformer_report() -> SweepReport {
+    let net = transformer();
+    let qkv = &net.layers[0]; // blk1.qkv: 64×256×768
+    let ffn_down = &net.layers[5]; // blk1.ffn.down: 64×1024×256
+    assert_eq!(qkv.name, "blk1.qkv");
+    assert_eq!(ffn_down.name, "blk1.ffn.down");
+    let qkv_counts = ActivityCounts {
+        west_data_toggles: 2048,
+        west_clock_events: 16384,
+        north_data_toggles: 4096,
+        north_clock_events: 12288,
+        mult_input_toggles: 6144,
+        active_macs: 1024,
+        acc_clock_events: 32768,
+        unload_values: 256,
+        cycles: 257,
+        ..Default::default()
+    };
+    let qkv_energy = EnergyBreakdown {
+        west_data: 3.5,
+        west_clock: 2.25,
+        north_data: 7.25,
+        north_clock: 1.5,
+        mult: 512.0,
+        add_acc: 389.0,
+        acc_clock: 29.5,
+        unload: 38.5,
+        ..Default::default()
+    };
+    let ffn_counts = ActivityCounts {
+        west_data_toggles: 1024,
+        west_clock_events: 8192,
+        west_sideband_toggles: 64,
+        west_sideband_clock_events: 1024,
+        zero_detect_ops: 1024,
+        west_cg_cell_cycles: 4096,
+        north_data_toggles: 1536,
+        north_clock_events: 6144,
+        north_sideband_toggles: 96,
+        north_sideband_clock_events: 1024,
+        encoder_ops: 1024,
+        decoder_toggles: 512,
+        mult_input_toggles: 2048,
+        active_macs: 512,
+        gated_macs: 512,
+        acc_clock_events: 16384,
+        acc_cg_cell_cycles: 1024,
+        unload_values: 256,
+        cycles: 1025,
+        ..Default::default()
+    };
+    let ffn_energy = EnergyBreakdown {
+        west_data: 1.75,
+        west_clock: 2.5,
+        west_gating: 3.125,
+        north_data: 5.5,
+        north_clock: 1.25,
+        north_coding: 10.25,
+        mult: 256.5,
+        add_acc: 194.5,
+        acc_clock: 14.75,
+        unload: 38.5,
+    };
+    SweepReport {
+        network: net.name.clone(),
+        backend: "cycle".into(),
+        dataflow: "os".into(),
+        layers: vec![
+            LayerReport {
+                layer_name: qkv.name.clone(),
+                layer_index: 0,
+                gemm: qkv.gemm(),
+                input_zero_frac: 0.125,
+                sampled_tiles: 1,
+                total_tiles: 192,
+                results: vec![ConfigResult {
+                    config: SaCodingConfig::baseline(),
+                    config_name: "baseline".into(),
+                    counts: qkv_counts,
+                    energy: qkv_energy,
+                }],
+            },
+            LayerReport {
+                layer_name: ffn_down.name.clone(),
+                layer_index: 5,
+                gemm: ffn_down.gemm(),
+                input_zero_frac: 0.5,
+                sampled_tiles: 1,
+                total_tiles: 64,
+                results: vec![ConfigResult {
+                    config: SaCodingConfig::proposed(),
+                    config_name: "proposed".into(),
+                    counts: ffn_counts,
+                    energy: ffn_energy,
+                }],
+            },
+        ],
+    }
+}
+
 // ---- JSON schema -----------------------------------------------------
 
 /// Golden test: the report document layout is a public artifact format.
@@ -64,9 +172,45 @@ fn handmade_report() -> SweepReport {
 /// `SWEEP_REPORT_SCHEMA` and re-pin the string.
 #[test]
 fn sweep_report_json_schema_is_pinned() {
-    let golden = include_str!("golden/sweep_report_v1.json");
+    let golden = include_str!("golden/sweep_report_v2.json");
     assert_eq!(handmade_report().to_json(), golden);
     assert!(golden.contains(SWEEP_REPORT_SCHEMA));
+}
+
+/// Backward compatibility: v1 documents (pre-dataflow) must keep
+/// parsing, with the dataflow defaulting to the only machine that
+/// existed then. The committed v1 golden file is the compat fixture.
+#[test]
+fn v1_schema_documents_remain_parseable() {
+    let v1 = include_str!("golden/sweep_report_v1.json");
+    let doc = SweepDoc::parse(v1).expect("v1 must stay readable");
+    assert_eq!(doc.schema, SWEEP_REPORT_SCHEMA_V1);
+    assert_eq!(doc.network, "unit");
+    assert_eq!(doc.backend, "analytic");
+    assert_eq!(doc.dataflow, "ws");
+    assert_eq!(doc.layer_count, 1);
+    // the v1 body predates the field entirely
+    let json = Json::parse(v1).unwrap();
+    assert!(json.get("dataflow").is_none());
+    // and the v1 fixture differs from v2 only by schema tag + dataflow:
+    // every v1 layer field still parses under the v2 walker
+    let layer = json.get("layers").unwrap().idx(0).unwrap();
+    assert_eq!(layer.get("layer").unwrap().as_str(), Some("conv1"));
+    assert_eq!(layer.get("gemm").unwrap().get("k").unwrap().as_u64(), Some(8));
+}
+
+/// Golden test for the transformer workload: the v2 document over real
+/// transformer layer metadata is pinned byte-for-byte.
+#[test]
+fn transformer_sweep_report_v2_golden() {
+    let golden = include_str!("golden/sweep_report_transformer_v2.json");
+    assert_eq!(handmade_transformer_report().to_json(), golden);
+    let doc = SweepDoc::parse(golden).unwrap();
+    assert_eq!(doc.schema, SWEEP_REPORT_SCHEMA);
+    assert_eq!(doc.network, "transformer");
+    assert_eq!(doc.backend, "cycle");
+    assert_eq!(doc.dataflow, "os");
+    assert_eq!(doc.layer_count, 2);
 }
 
 #[test]
@@ -78,6 +222,7 @@ fn sweep_report_json_round_trips_from_a_real_sweep() {
     assert_eq!(doc.get("schema").unwrap().as_str(), Some(SWEEP_REPORT_SCHEMA));
     assert_eq!(doc.get("network").unwrap().as_str(), Some(net.name.as_str()));
     assert_eq!(doc.get("backend").unwrap().as_str(), Some("analytic"));
+    assert_eq!(doc.get("dataflow").unwrap().as_str(), Some("ws"));
 
     let layers = doc.get("layers").unwrap().as_arr().unwrap();
     assert_eq!(layers.len(), sweep.layers.len());
@@ -163,6 +308,7 @@ fn sweep_metrics_survive_zero_energy_baseline() {
     let empty = SweepReport {
         network: "empty".into(),
         backend: "analytic".into(),
+        dataflow: "ws".into(),
         layers: Vec::new(),
     };
     assert_eq!(empty.overall_savings_pct("baseline", "proposed"), 0.0);

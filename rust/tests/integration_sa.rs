@@ -3,7 +3,7 @@
 use sa_lowpower::bf16::{matmul_f32acc, Bf16};
 use sa_lowpower::coding::SaCodingConfig;
 use sa_lowpower::power::EnergyModel;
-use sa_lowpower::sa::{analyze_tile, simulate_tile, SaConfig};
+use sa_lowpower::sa::{analyze_tile, simulate_tile, Dataflow, SaConfig};
 use sa_lowpower::util::Rng64;
 use sa_lowpower::workload::{extract_tile, Gemm, GemmShape, TileGrid, TilePlan};
 
@@ -30,7 +30,11 @@ fn full_gemm_through_tiles_is_functionally_exact() {
             let t = extract_tile(&g, &grid, mi, ni);
             // run through the *proposed* design — gating must not change
             // the numbers
-            let r = simulate_tile(&t, &SaCodingConfig::proposed());
+            let r = simulate_tile(
+                &t,
+                &SaCodingConfig::proposed(),
+                Dataflow::WeightStationary,
+            );
             for row in 0..t.m {
                 for col in 0..t.n {
                     got[(mi * 16 + row) * 21 + (ni * 16 + col)] = r.c[row * t.n + col];
@@ -54,7 +58,11 @@ fn sampled_energy_extrapolates_consistently() {
     let mut total = 0.0;
     for &(mi, ni) in &plan.picks {
         let t = extract_tile(&g, &grid, mi, ni);
-        let c = analyze_tile(&t, &SaCodingConfig::proposed());
+        let c = analyze_tile(
+            &t,
+            &SaCodingConfig::proposed(),
+            Dataflow::WeightStationary,
+        );
         total += model.energy(&c).total();
     }
     // sampled at half, scaled: expect same order (not exact — different
@@ -63,7 +71,11 @@ fn sampled_energy_extrapolates_consistently() {
     let mut sampled = 0.0;
     for &(mi, ni) in &sample.picks {
         let t = extract_tile(&g, &grid, mi, ni);
-        let c = analyze_tile(&t, &SaCodingConfig::proposed());
+        let c = analyze_tile(
+            &t,
+            &SaCodingConfig::proposed(),
+            Dataflow::WeightStationary,
+        );
         sampled += model.energy(&c).total();
     }
     sampled *= sample.scale;
@@ -81,10 +93,18 @@ fn proposed_beats_baseline_on_relu_like_gemm() {
     for &(mi, ni) in &TilePlan::exhaustive(&grid).picks {
         let t = extract_tile(&g, &grid, mi, ni);
         base += model
-            .energy(&analyze_tile(&t, &SaCodingConfig::baseline()))
+            .energy(&analyze_tile(
+                &t,
+                &SaCodingConfig::baseline(),
+                Dataflow::WeightStationary,
+            ))
             .total();
         prop += model
-            .energy(&analyze_tile(&t, &SaCodingConfig::proposed()))
+            .energy(&analyze_tile(
+                &t,
+                &SaCodingConfig::proposed(),
+                Dataflow::WeightStationary,
+            ))
             .total();
     }
     let savings = 100.0 * (base - prop) / base;
@@ -108,7 +128,12 @@ fn cycle_and_analytic_agree_through_the_tiler() {
             SaCodingConfig::bic_only(),
             SaCodingConfig::zvcg_only(),
         ] {
-            assert_eq!(analyze_tile(&t, &cfg), simulate_tile(&t, &cfg).counts);
+            for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
+                assert_eq!(
+                    analyze_tile(&t, &cfg, df),
+                    simulate_tile(&t, &cfg, df).counts
+                );
+            }
         }
     }
 }

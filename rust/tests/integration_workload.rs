@@ -128,6 +128,33 @@ fn report_tables_render_for_real_sweeps() {
 }
 
 #[test]
+fn transformer_sweep_produces_dense_stream_results() {
+    // The transformer workload's point: attention/projection streams are
+    // dense, so ZVCG gates far less than on ReLU CNNs and the proposed
+    // savings shrink — but must never go negative (BIC still helps).
+    let net = Network::by_name("transformer").unwrap();
+    let sweep = fast_engine(ConfigSet::paper(), 4).sweep(&net);
+    assert_eq!(sweep.layers.len(), net.layers.len());
+    let overall = sweep.overall_savings_pct("baseline", "proposed");
+    assert!(
+        (0.0..15.0).contains(&overall),
+        "transformer savings {overall}% should undercut the CNN band"
+    );
+    // dense layers report low zero fractions; the FFN down-projections
+    // report post-activation sparsity
+    let zf = |name: &str| {
+        sweep
+            .layers
+            .iter()
+            .find(|l| l.layer_name == name)
+            .unwrap()
+            .input_zero_frac
+    };
+    assert!(zf("blk1.attn.qk") < 0.15);
+    assert!(zf("blk1.ffn.down") > 0.3);
+}
+
+#[test]
 fn network_totals_are_stable() {
     // Guard the workload tables against accidental edits: MACs/params of
     // the two paper networks (see workload module tests for the bands).

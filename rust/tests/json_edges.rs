@@ -1,0 +1,172 @@
+//! Edge-case battery for the `util::json` parser/renderer — previously
+//! exercised only indirectly through the report goldens. Covers escape
+//! sequences, nested arrays, NaN/infinity rejection, and round-trips on
+//! deep trees.
+
+use sa_lowpower::util::json::Json;
+
+// ---- escape sequences ------------------------------------------------
+
+#[test]
+fn every_renderer_escape_round_trips() {
+    // quote, backslash, newline, tab, CR, and raw control chars (the
+    // renderer emits \u00xx for those)
+    let cases = [
+        "plain",
+        "quote\"inside",
+        "back\\slash",
+        "line\nbreak",
+        "tab\tstop",
+        "carriage\rreturn",
+        "ctrl\u{1}\u{2}\u{1f}",
+        "mixed \"\\\n\t\r\u{7} end",
+        "unicode: π 😀 Ω",
+        "", // empty string
+    ];
+    for s in cases {
+        let v = Json::Str(s.to_string());
+        let text = v.render();
+        assert_eq!(Json::parse(&text).unwrap(), v, "case {s:?}");
+    }
+}
+
+#[test]
+fn parser_accepts_standard_escapes_the_renderer_never_emits() {
+    assert_eq!(Json::parse(r#""a\/b""#).unwrap(), Json::Str("a/b".into()));
+    assert_eq!(
+        Json::parse(r#""\b\f""#).unwrap(),
+        Json::Str("\u{8}\u{c}".into())
+    );
+    assert_eq!(Json::parse(r#""A""#).unwrap(), Json::Str("A".into()));
+    // escaped keys too, not just values
+    let doc = Json::parse(r#"{"a\nb": 1}"#).unwrap();
+    assert_eq!(doc.get("a\nb").unwrap().as_u64(), Some(1));
+}
+
+#[test]
+fn parser_rejects_bad_escapes() {
+    assert!(Json::parse(r#""\q""#).is_err());
+    assert!(Json::parse(r#""\u12""#).is_err(), "truncated \\u");
+    assert!(Json::parse(r#""\u12zz""#).is_err(), "non-hex \\u");
+    assert!(Json::parse("\"unterminated").is_err());
+}
+
+// ---- nested arrays ---------------------------------------------------
+
+#[test]
+fn nested_arrays_parse_and_round_trip() {
+    let text = "[[1, [2, [3, [4]]]], [], [[]], [5, 6]]";
+    let v = Json::parse(text).unwrap();
+    assert_eq!(
+        v.idx(0).unwrap().idx(1).unwrap().idx(1).unwrap().idx(1).unwrap().idx(0),
+        Some(&Json::Num(4.0))
+    );
+    assert_eq!(v.idx(1).unwrap(), &Json::Arr(vec![]));
+    assert_eq!(v.idx(2).unwrap().idx(0), Some(&Json::Arr(vec![])));
+    // render → parse is identity
+    assert_eq!(Json::parse(&v.render()).unwrap(), v);
+}
+
+#[test]
+fn arrays_of_objects_of_arrays() {
+    let text = r#"[{"rows": [[1, 2], [3, 4]]}, {"rows": []}]"#;
+    let v = Json::parse(text).unwrap();
+    let rows = v.idx(0).unwrap().get("rows").unwrap();
+    assert_eq!(rows.idx(1).unwrap().idx(0).unwrap().as_u64(), Some(3));
+    assert_eq!(Json::parse(&v.render()).unwrap(), v);
+}
+
+// ---- NaN / infinity rejection ----------------------------------------
+
+#[test]
+fn non_finite_tokens_are_rejected() {
+    for bad in [
+        "NaN", "nan", "Infinity", "-Infinity", "inf", "-inf",
+        "[1, NaN]", r#"{"x": Infinity}"#,
+    ] {
+        assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+    }
+}
+
+#[test]
+fn overflowing_literals_cannot_smuggle_infinity() {
+    // 1e999 overflows f64 to +inf; the parser must refuse rather than
+    // produce a non-finite number it could never render back.
+    assert!(Json::parse("1e999").is_err());
+    assert!(Json::parse("-1e999").is_err());
+    assert!(Json::parse(r#"{"e": 1e999}"#).is_err());
+    // large but finite literals stay fine
+    assert_eq!(Json::parse("1e308").unwrap().as_f64(), Some(1e308));
+}
+
+#[test]
+fn non_finite_values_render_as_null() {
+    assert_eq!(Json::Num(f64::NAN).render(), "null\n");
+    assert_eq!(Json::Num(f64::INFINITY).render(), "null\n");
+    assert_eq!(Json::Num(f64::NEG_INFINITY).render(), "null\n");
+    // so a rendered tree containing them is still valid JSON
+    let mut o = Json::object();
+    o.push("bad", f64::NAN);
+    assert!(Json::parse(&o.render()).is_ok());
+}
+
+// ---- deep trees ------------------------------------------------------
+
+#[test]
+fn deep_array_nesting_round_trips() {
+    let mut v = Json::Num(7.0);
+    for _ in 0..64 {
+        v = Json::Arr(vec![v]);
+    }
+    let text = v.render();
+    let parsed = Json::parse(&text).unwrap();
+    assert_eq!(parsed, v);
+    // spot-check the innermost value survived
+    let mut cur = &parsed;
+    for _ in 0..64 {
+        cur = cur.idx(0).unwrap();
+    }
+    assert_eq!(cur.as_f64(), Some(7.0));
+}
+
+#[test]
+fn deep_object_chain_round_trips() {
+    let mut v = Json::Str("leaf".into());
+    for i in 0..64 {
+        let mut o = Json::object();
+        o.push(&format!("level{i}"), v);
+        v = o;
+    }
+    let back = Json::parse(&v.render()).unwrap();
+    assert_eq!(back, v);
+    let mut cur = &back;
+    for i in (0..64).rev() {
+        cur = cur.get(&format!("level{i}")).unwrap();
+    }
+    assert_eq!(cur.as_str(), Some("leaf"));
+}
+
+#[test]
+fn wide_and_deep_mixed_tree_round_trips() {
+    // a report-shaped tree: arrays of objects with numeric leaves at
+    // exact binary fractions (the renderer's losslessness domain)
+    let mut layers = Vec::new();
+    for i in 0..40 {
+        let mut layer = Json::object();
+        layer.push("index", i as u64);
+        layer.push("frac", (i as f64) * 0.25);
+        layer.push(
+            "counts",
+            Json::Arr((0..10).map(|j| Json::from((i * j) as u64)).collect()),
+        );
+        layers.push(layer);
+    }
+    let mut doc = Json::object();
+    doc.push("layers", Json::Arr(layers));
+    let back = Json::parse(&doc.render()).unwrap();
+    assert_eq!(back, doc);
+    assert_eq!(
+        back.get("layers").unwrap().idx(39).unwrap().get("frac").unwrap().as_f64(),
+        Some(9.75)
+    );
+}
