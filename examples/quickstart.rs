@@ -34,23 +34,23 @@ fn main() {
 
     let sa = SaConfig::default();
     let df = sa.dataflow; // weight-stationary, the paper's machine
-    for name in ["baseline", "proposed", "bic-only", "zvcg-only"] {
-        let cfg = sa_lowpower::engine::ConfigRegistry::lookup(name).unwrap().config;
+    for name in ["baseline", "proposed", "bic-only", "zvcg-only", "ddcg16-g4"] {
+        let stack = sa_lowpower::engine::ConfigRegistry::lookup(name).unwrap().stack();
 
         // Golden backend: cycle-accurate, register-by-register.
-        let golden = CycleBackend.estimate(&tile, &cfg, df);
+        let golden = CycleBackend.estimate(&tile, &stack, df);
         // Fast backend: closed-form stream accounting. Must agree exactly
         // (the engine's backend contract).
-        let fast = AnalyticBackend.estimate(&tile, &cfg, df);
+        let fast = AnalyticBackend.estimate(&tile, &stack, df);
         assert_eq!(golden, fast, "backends must agree");
         // And neither coding/gating nor the dataflow may change the
         // numerics (the conformance contract).
         assert_eq!(
-            sa_lowpower::sa::simulate_tile(&tile, &cfg, df).c,
+            sa_lowpower::sa::simulate_tile(&tile, &stack, df).c,
             tile.reference_result()
         );
         assert_eq!(
-            sa_lowpower::sa::simulate_tile(&tile, &cfg, Dataflow::OutputStationary).c,
+            sa_lowpower::sa::simulate_tile(&tile, &stack, Dataflow::OutputStationary).c,
             tile.reference_result()
         );
 
@@ -65,13 +65,25 @@ fn main() {
         );
     }
 
-    use sa_lowpower::coding::SaCodingConfig;
+    // Stacks compose beyond the named rows: the --coding spec grammar.
+    use sa_lowpower::coding::CodingStack;
+    let composed = CodingStack::parse("w:zvcg+bic-mantissa,i:zvcg").unwrap();
+    let comp = sa
+        .energy
+        .energy(&AnalyticBackend.estimate(&tile, &composed, df));
+    println!(
+        "composed '{composed}': total {:8.3} nJ",
+        comp.total() * 1e-6
+    );
+
     let base = sa
         .energy
-        .energy(&AnalyticBackend.estimate(&tile, &SaCodingConfig::baseline(), df));
-    let prop = sa
-        .energy
-        .energy(&AnalyticBackend.estimate(&tile, &SaCodingConfig::proposed(), df));
+        .energy(&AnalyticBackend.estimate(&tile, &CodingStack::baseline(), df));
+    let prop = sa.energy.energy(&AnalyticBackend.estimate(
+        &tile,
+        &sa_lowpower::engine::ConfigRegistry::lookup("proposed").unwrap().stack(),
+        df,
+    ));
     println!(
         "\nproposed vs baseline: {:.1} % total dynamic energy saved",
         100.0 * (base.total() - prop.total()) / base.total()

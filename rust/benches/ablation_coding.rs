@@ -10,7 +10,8 @@ use sa_lowpower::util::bench::time_once;
 use sa_lowpower::workload::Network;
 
 fn main() {
-    println!("=== Ablation: coding design space (7 configs) ===\n");
+    let n_cfg = sa_lowpower::engine::ConfigSet::ablation().len();
+    println!("=== Ablation: coding design space ({n_cfg} configs) ===\n");
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
     let engine = SaEngine::builder()
         .max_tiles_per_layer(24)
@@ -19,7 +20,7 @@ fn main() {
         .build();
     for net_name in ["resnet50", "mobilenet", "transformer"] {
         let net = Network::by_name(net_name).unwrap();
-        let (sweep, _) = time_once(&format!("ablation/{net_name}-sweep(7cfg)"), || {
+        let (sweep, _) = time_once(&format!("ablation/{net_name}-sweep({n_cfg}cfg)"), || {
             engine.sweep(&net)
         });
         println!("\n{net_name}:");

@@ -15,7 +15,8 @@
 
 use sa_lowpower::activity::ham16_slice;
 use sa_lowpower::bf16::Bf16;
-use sa_lowpower::coding::{BicEncoder, BicMode, BicPolicy, SaCodingConfig};
+use sa_lowpower::coding::{BicEncoder, BicMode, BicPolicy};
+use sa_lowpower::engine::ConfigRegistry;
 use sa_lowpower::sa::{
     analyze_tile, simulate_tile, simulate_tile_reference, Dataflow, Tile,
 };
@@ -41,7 +42,7 @@ fn main() {
     let t_sparse = random_tile(&mut rng, 16, 1024, 16, 0.5);
     for (tag, t) in [("dense", &t_dense), ("sparse50", &t_sparse)] {
         for cfg_name in ["baseline", "proposed"] {
-            let cfg = SaCodingConfig::by_name(cfg_name).unwrap();
+            let cfg = ConfigRegistry::lookup(cfg_name).unwrap().stack();
             for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
                 let m = bench(
                     &format!("analytic/16x1024x16/{tag}/{cfg_name}/{df}"),
@@ -64,7 +65,7 @@ fn main() {
     //    dataflow.
     let t_small = random_tile(&mut rng, 16, 256, 16, 0.5);
     for cfg_name in ["baseline", "proposed"] {
-        let cfg = SaCodingConfig::by_name(cfg_name).unwrap();
+        let cfg = ConfigRegistry::lookup(cfg_name).unwrap().stack();
         for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
             let m = bench(&format!("cycle-sim/16x256x16/{cfg_name}/{df}"), 2, 10, || {
                 black_box(simulate_tile(black_box(&t_small), &cfg, df));

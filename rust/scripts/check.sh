@@ -65,6 +65,37 @@ for backend in analytic cycle; do
     done
 done
 
+echo "== --coding spec smoke matrix (named + composed stacks x backend x dataflow) =="
+# Named registry rows next to composed spec-grammar stacks, across the
+# full backend x dataflow matrix. The simulate subcommand cross-checks
+# analytic == cycle internally on every run, so each cell is a bit-exact
+# conformance probe for its stack.
+for coding in \
+    "proposed" \
+    "ddcg16-g4" \
+    "w:zvcg+bic-full,i:zvcg" \
+    "w:zvcg+bic-mantissa+ddcg16-g8,i:ddcg16-g4"; do
+    tag="$(printf '%s' "$coding" | tr -c 'a-zA-Z0-9' '_')"
+    for backend in analytic cycle; do
+        for dataflow in ws os; do
+            cell="${tag}_${backend}_${dataflow}"
+            echo "-- coding cell: $coding / $backend / $dataflow --"
+            cargo run --release -- simulate \
+                --m 6 --k 32 --n 6 --sparsity 0.5 \
+                --coding "$coding" \
+                --backend "$backend" --dataflow "$dataflow" 2>&1 \
+                | tee "$OUT_DIR/coding_$cell.log"
+        done
+    done
+done
+# A composed stack rides along a real sweep (extra report column + v3
+# JSON artifact with per-stream stack provenance).
+cargo run --release -- ablation \
+    --net tinycnn --tiles 2 --threads 2 \
+    --coding "w:zvcg+bic-mantissa,i:zvcg" \
+    --json-dir "$OUT_DIR/json" 2>&1 \
+    | tee "$OUT_DIR/coding_ablation_composed.log"
+
 echo "== perf smoke (hot paths) =="
 cargo bench --bench perf_hotpath 2>&1 | tee "$OUT_DIR/perf_hotpath.log"
 

@@ -24,8 +24,12 @@ pub struct ActivityCounts {
     pub west_sideband_clock_events: u64,
     /// Zero-detector evaluations at the West edge (proposed only).
     pub zero_detect_ops: u64,
-    /// Clock-gate cells active (cell·cycles) on gated West registers.
+    /// Clock-gate cells active (cell·cycles) on gated West registers
+    /// (ZVCG per-slot ICG burn + DDCG per-group per-load ICG burn).
     pub west_cg_cell_cycles: u64,
+    /// Register comparator bit·cycles on West registers (DDCG designs
+    /// only: the full register width is compared on every load slot).
+    pub west_comparator_bit_cycles: u64,
 
     // ---- North (weight) streaming ----
     /// Bit toggles in the vertical 16-bit weight pipeline registers.
@@ -41,8 +45,10 @@ pub struct ActivityCounts {
     /// XOR-recovery gate input toggles inside PEs (BIC designs only).
     pub decoder_toggles: u64,
     /// Clock-gate cells active on gated North registers (weight-ZVCG
-    /// ablation only).
+    /// ablation and DDCG designs).
     pub north_cg_cell_cycles: u64,
+    /// Register comparator bit·cycles on North registers (DDCG only).
+    pub north_comparator_bit_cycles: u64,
 
     // ---- Compute (multiplier / adder / accumulator) ----
     /// Multiplier operand-input bit toggles (post data-gating).
@@ -81,9 +87,10 @@ impl ActivityCounts {
         add_fields!(self, o;
             west_data_toggles, west_clock_events, west_sideband_toggles,
             west_sideband_clock_events, zero_detect_ops, west_cg_cell_cycles,
+            west_comparator_bit_cycles,
             north_data_toggles, north_clock_events, north_sideband_toggles,
             north_sideband_clock_events, encoder_ops, decoder_toggles,
-            north_cg_cell_cycles,
+            north_cg_cell_cycles, north_comparator_bit_cycles,
             mult_input_toggles, active_macs, gated_macs, zero_product_macs,
             acc_clock_events, acc_cg_cell_cycles, unload_values, cycles,
         );

@@ -1,0 +1,557 @@
+//! The open codec API: [`StreamCodec`] is the unit of composition of the
+//! coding layer. A codec is one piece of edge/lane hardware — a value
+//! gate (ZVCG), a bus encoder (BIC), a register clock gate (DDCG) — with
+//! a bit-exact streaming `encode`/`decode` and a charge model (extra bus
+//! lines, per-word encoder/detector ops, per-load register clocking, area
+//! footprint). Codecs are assembled into per-edge stacks by
+//! [`super::EdgeStack`] / [`super::CodingStack`]; the estimation engines
+//! (`sa::analytic`, `sa::cycle`) consume only this API and never match on
+//! concrete codec types, so a new technique is one `impl StreamCodec` in
+//! one file — no engine surgery.
+//!
+//! ## Roles
+//!
+//! A codec declares where in the lane it acts via [`CodecRole`]:
+//!
+//! * [`CodecRole::ValueGate`] — sits at the array edge, examines every
+//!   raw word, and may *gate* it: the data registers freeze, a 1-bit
+//!   gate sideband carries the decision through the array, and the
+//!   slot's MACs are skipped. **Contract:** a value gate must gate
+//!   exactly the zero-valued words — the analytic model's closed-form
+//!   MAC set algebra (and the paper's functional-transparency argument)
+//!   depend on `gated ⇔ value == 0`. The detector evaluation is charged
+//!   once per raw word (`zero_detect_ops`).
+//! * [`CodecRole::Transform`] — re-encodes the words that survive
+//!   gating, adding `sideband_lines()` extra bus lines (e.g. BIC `inv`
+//!   bits). `decode(encode(w)) == w` must hold slot by slot; the encoder
+//!   evaluation is charged once per surviving word (`encoder_ops`) and
+//!   the per-PE recovery toggles over `cover_mask()` are charged at
+//!   every decoder tap.
+//! * [`CodecRole::ClockGate`] — acts at each pipeline register: the data
+//!   stream is untouched, but the register's clock load for a
+//!   `prev → next` transition is reduced to [`StreamCodec::
+//!   load_clock_bits`] (≤ 16), at a per-load overhead of comparator
+//!   evaluations and ICG burn ([`StreamCodec::load_overhead`]).
+//!
+//! Validation (one codec per role per edge, gating before coding) lives
+//! in the stack layer; this module only defines behaviors.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::bf16::Bf16;
+
+use super::bic::{decode as bic_decode, BicEncoder, BicMode, BicPolicy, Encoded};
+use super::ddcg::changed_group_bits;
+
+/// Where in the lane a codec acts (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecRole {
+    /// Edge value gating (freezes registers, skips MACs). Must gate
+    /// exactly the zero values.
+    ValueGate,
+    /// Bus transform with sideband recovery bits (BIC family).
+    Transform,
+    /// Per-register clock gating (DDCG family); data stream untouched.
+    ClockGate,
+}
+
+/// What one codec stage emits for one raw word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodedWord {
+    /// The word is gated: registers freeze, downstream stages never see
+    /// it (value gates only).
+    Gated,
+    /// The (possibly re-encoded) word plus this codec's sideband bits.
+    Tx { word: Bf16, sideband: u8 },
+}
+
+/// What the assembled edge logic drives into a lane at one stream slot:
+/// the gate decision, the transmitted word, and the packed sideband bits
+/// of every transform codec (codec `i`'s bits sit above the lines of the
+/// transforms before it).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LaneSlot {
+    /// Gated by a value-gate codec (pipeline frozen this slot).
+    pub gated: bool,
+    /// The word driven onto the bus when not gated.
+    pub word: Bf16,
+    /// Packed transform sideband bits travelling with the word.
+    pub sideband: u8,
+}
+
+/// Stateful per-lane encoder state of one codec (one bus edge).
+pub trait LaneCoder {
+    /// Process the next word reaching this stage.
+    fn encode(&mut self, word: Bf16) -> CodedWord;
+}
+
+/// Pass-through stage: the default for codecs that never touch the word
+/// stream (register clock gates act at the registers; the edge walk
+/// skips them entirely).
+struct IdentityLane;
+
+impl LaneCoder for IdentityLane {
+    fn encode(&mut self, word: Bf16) -> CodedWord {
+        CodedWord::Tx { word, sideband: 0 }
+    }
+}
+
+/// Per-load register overheads of clock-gating codecs (zero for others):
+/// comparator bit-evaluations and ICG cell burn per register per load
+/// slot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LoadOverhead {
+    /// Comparator bit·cycles per register load (DDCG: the full register
+    /// width is compared every load slot).
+    pub comparator_bit_cycles: u64,
+    /// Extra ICG cell·cycles per register load (DDCG: one ICG per group).
+    pub cg_cell_cycles: u64,
+}
+
+impl LoadOverhead {
+    pub const NONE: LoadOverhead =
+        LoadOverhead { comparator_bit_cycles: 0, cg_cell_cycles: 0 };
+}
+
+/// Structural area footprint of one codec, in units the
+/// [`crate::power::AreaModel`] prices with its gate-equivalent constants.
+/// `edge_*` terms are instantiated once per lane (row or column);
+/// `pe_*` terms once per PE.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AreaFootprint {
+    /// Encoder cores at the edge (BIC compare/invert logic).
+    pub edge_encoders: u32,
+    /// Data bits the edge encoder is sized for.
+    pub edge_encoder_bits: u32,
+    /// Zero detectors (16-bit NOR trees) at the edge.
+    pub edge_zero_detectors: u32,
+    /// Per-PE XOR-recovery bits.
+    pub pe_xor_bits: u32,
+    /// Per-PE sideband pipeline flip-flops.
+    pub pe_sideband_ffs: u32,
+    /// Per-PE clock-gate cells (ICGs).
+    pub pe_cg_cells: u32,
+    /// Per-PE register comparator bits (DDCG).
+    pub pe_comparator_bits: u32,
+}
+
+/// One composable stream-coding technique. See the module docs for the
+/// role semantics and charge-model contract.
+pub trait StreamCodec: Send + Sync + fmt::Debug {
+    /// Spec-grammar name (`zvcg`, `bic-mantissa`, `ddcg16-g4`, ...).
+    /// Must round-trip through [`codec_by_name`].
+    fn name(&self) -> String;
+
+    /// Where in the lane this codec acts.
+    fn role(&self) -> CodecRole;
+
+    /// Extra bus lines this codec adds to the lane (transform `inv`
+    /// lines clocked per load; a value gate's 1-bit gate line is always
+    /// clocked and accounted separately by the engines).
+    fn sideband_lines(&self) -> u32 {
+        0
+    }
+
+    /// Union mask of the data lines a transform may rewrite (decoder
+    /// taps toggle over this mask). Zero for non-transforms.
+    fn cover_mask(&self) -> u16 {
+        0
+    }
+
+    /// Fresh streaming encoder state for one lane. The default is the
+    /// identity pass-through — right for codecs that never rewrite the
+    /// word stream (clock gates are excluded from the edge walk, so
+    /// theirs never even runs).
+    fn begin(&self) -> Box<dyn LaneCoder> {
+        Box::new(IdentityLane)
+    }
+
+    /// Stateless per-slot recovery of the original word from the
+    /// transmitted word and this codec's sideband bits.
+    fn decode(&self, word: Bf16, sideband: u8) -> Bf16 {
+        let _ = sideband;
+        word
+    }
+
+    /// Register FF clock events charged when a lane register loads
+    /// `next` over `prev` (16 unless a clock gate reduces it).
+    fn load_clock_bits(&self, prev: u16, next: u16) -> u64 {
+        let _ = (prev, next);
+        16
+    }
+
+    /// Per-load register overheads (clock gates only).
+    fn load_overhead(&self) -> LoadOverhead {
+        LoadOverhead::NONE
+    }
+
+    /// Structural area footprint (priced by `power::AreaModel`).
+    fn area(&self) -> AreaFootprint;
+}
+
+// ---------------------------------------------------------------------
+// Built-in codecs
+// ---------------------------------------------------------------------
+
+/// Zero-value clock gating (paper §III-A(2)) as a [`StreamCodec`]: gates
+/// exactly the zero words; the register pipeline freezes and the slot's
+/// MACs are skipped.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ZvcgCodec;
+
+struct ZvcgLane;
+
+impl LaneCoder for ZvcgLane {
+    fn encode(&mut self, word: Bf16) -> CodedWord {
+        if word.is_zero() {
+            CodedWord::Gated
+        } else {
+            CodedWord::Tx { word, sideband: 0 }
+        }
+    }
+}
+
+impl StreamCodec for ZvcgCodec {
+    fn name(&self) -> String {
+        "zvcg".into()
+    }
+
+    fn role(&self) -> CodecRole {
+        CodecRole::ValueGate
+    }
+
+    fn sideband_lines(&self) -> u32 {
+        1 // the is-zero line
+    }
+
+    fn begin(&self) -> Box<dyn LaneCoder> {
+        Box::new(ZvcgLane)
+    }
+
+    fn area(&self) -> AreaFootprint {
+        AreaFootprint {
+            edge_zero_detectors: 1,
+            pe_sideband_ffs: 1,
+            // one ICG on the data register, one on the accumulator
+            pe_cg_cells: 2,
+            ..Default::default()
+        }
+    }
+}
+
+/// Bus-invert coding (any [`BicMode`] × [`BicPolicy`]) as a
+/// [`StreamCodec`]. The per-lane state is the stateful [`BicEncoder`];
+/// recovery is the stateless XOR [`bic_decode`].
+#[derive(Clone, Copy, Debug)]
+pub struct BicCodec {
+    mode: BicMode,
+    policy: BicPolicy,
+}
+
+struct BicLane {
+    enc: BicEncoder,
+}
+
+impl LaneCoder for BicLane {
+    fn encode(&mut self, word: Bf16) -> CodedWord {
+        let e = self.enc.encode(word);
+        CodedWord::Tx { word: e.tx, sideband: e.inv }
+    }
+}
+
+impl BicCodec {
+    pub fn new(mode: BicMode, policy: BicPolicy) -> Self {
+        assert!(mode != BicMode::None, "BicMode::None is the empty stack");
+        Self { mode, policy }
+    }
+
+    pub fn mode(&self) -> BicMode {
+        self.mode
+    }
+
+    pub fn policy(&self) -> BicPolicy {
+        self.policy
+    }
+}
+
+impl StreamCodec for BicCodec {
+    fn name(&self) -> String {
+        match self.policy {
+            BicPolicy::Classic => self.mode.name().to_string(),
+            // the min-transitions inversion rule is a name suffix, so
+            // policy survives the spec grammar round trip
+            BicPolicy::MinTransitions => format!("{}-mt", self.mode.name()),
+        }
+    }
+
+    fn role(&self) -> CodecRole {
+        CodecRole::Transform
+    }
+
+    fn sideband_lines(&self) -> u32 {
+        self.mode.inv_lines()
+    }
+
+    fn cover_mask(&self) -> u16 {
+        self.mode.segments().iter().fold(0u16, |a, &m| a | m)
+    }
+
+    fn begin(&self) -> Box<dyn LaneCoder> {
+        Box::new(BicLane { enc: BicEncoder::new(self.mode, self.policy) })
+    }
+
+    fn decode(&self, word: Bf16, sideband: u8) -> Bf16 {
+        bic_decode(self.mode, Encoded { tx: word, inv: sideband })
+    }
+
+    fn area(&self) -> AreaFootprint {
+        let bits = self.cover_mask().count_ones();
+        AreaFootprint {
+            edge_encoders: 1,
+            edge_encoder_bits: bits,
+            pe_xor_bits: bits,
+            pe_sideband_ffs: self.mode.inv_lines(),
+            ..Default::default()
+        }
+    }
+}
+
+/// Data-driven clock gating (paper §III-A(a), Wimer & Koren) as a
+/// [`StreamCodec`]: the data stream is untouched, but each register's
+/// clock is gated per `group_bits`-wide group whenever the group's next
+/// state equals its current state. The charge model is what makes the
+/// paper's dismissal quantitative: every load pays a full-width
+/// comparator evaluation plus one ICG burn per group, while only the
+/// unchanged groups save their FF clocks.
+#[derive(Clone, Copy, Debug)]
+pub struct DdcgCodec {
+    group_bits: usize,
+}
+
+impl DdcgCodec {
+    /// `group_bits` must divide 16 (one ICG + comparator per group).
+    pub fn new(group_bits: usize) -> Result<Self, String> {
+        if group_bits == 0 || 16 % group_bits != 0 {
+            return Err(format!(
+                "ddcg group width must divide 16, got {group_bits} \
+                 (valid: ddcg16-g1|g2|g4|g8|g16)"
+            ));
+        }
+        Ok(Self { group_bits })
+    }
+
+    pub fn group_bits(&self) -> usize {
+        self.group_bits
+    }
+
+    pub fn groups(&self) -> u64 {
+        (16 / self.group_bits) as u64
+    }
+}
+
+impl StreamCodec for DdcgCodec {
+    fn name(&self) -> String {
+        format!("ddcg16-g{}", self.group_bits)
+    }
+
+    fn role(&self) -> CodecRole {
+        CodecRole::ClockGate
+    }
+
+    fn load_clock_bits(&self, prev: u16, next: u16) -> u64 {
+        changed_group_bits(prev, next, self.group_bits)
+    }
+
+    fn load_overhead(&self) -> LoadOverhead {
+        LoadOverhead {
+            comparator_bit_cycles: 16,
+            cg_cell_cycles: self.groups(),
+        }
+    }
+
+    fn area(&self) -> AreaFootprint {
+        AreaFootprint {
+            pe_comparator_bits: 16,
+            pe_cg_cells: self.groups() as u32,
+            ..Default::default()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Name resolution (the spec grammar's codec vocabulary)
+// ---------------------------------------------------------------------
+
+/// Every spec-grammar codec name (the `ddcg16-g<N>` family expanded to
+/// its valid group widths) — used for usage text and nearest-match
+/// suggestions.
+pub fn known_codec_names() -> Vec<String> {
+    let mut names = vec!["zvcg".to_string()];
+    for mode in ["bic-mantissa", "bic-full", "bic-segmented", "bic-exponent"] {
+        names.push(mode.to_string());
+        names.push(format!("{mode}-mt"));
+    }
+    for g in [1usize, 2, 4, 8, 16] {
+        names.push(format!("ddcg16-g{g}"));
+    }
+    names
+}
+
+/// Resolve one spec-grammar codec name to a codec instance.
+pub fn codec_by_name(name: &str) -> Result<Arc<dyn StreamCodec>, String> {
+    if name == "zvcg" {
+        return Ok(Arc::new(ZvcgCodec));
+    }
+    if let Some(rest) = name.strip_prefix("ddcg16-g") {
+        let g: usize = rest
+            .parse()
+            .map_err(|_| format!("bad ddcg group width '{rest}' in '{name}'"))?;
+        return Ok(Arc::new(DdcgCodec::new(g)?));
+    }
+    let (base, policy) = match name.strip_suffix("-mt") {
+        Some(base) => (base, BicPolicy::MinTransitions),
+        None => (name, BicPolicy::Classic),
+    };
+    let mode = match base {
+        "bic-mantissa" => Some(BicMode::MantissaOnly),
+        "bic-full" => Some(BicMode::FullBus),
+        "bic-segmented" => Some(BicMode::Segmented),
+        "bic-exponent" => Some(BicMode::ExponentOnly),
+        _ => None,
+    };
+    match mode {
+        Some(mode) => Ok(Arc::new(BicCodec::new(mode, policy))),
+        None => Err(unknown_codec_error(name)),
+    }
+}
+
+fn unknown_codec_error(name: &str) -> String {
+    let mut best: Option<(usize, String)> = None;
+    for cand in known_codec_names() {
+        let d = edit_distance(name, &cand);
+        if best.as_ref().map(|(bd, _)| d < *bd).unwrap_or(true) {
+            best = Some((d, cand));
+        }
+    }
+    match best {
+        Some((d, cand)) if d <= 3 => {
+            format!("unknown codec '{name}' — did you mean '{cand}'?")
+        }
+        _ => format!(
+            "unknown codec '{name}'; known codecs: {}",
+            known_codec_names().join("|")
+        ),
+    }
+}
+
+/// Plain Levenshtein distance (short names only — O(a·b) is fine).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Rng64;
+
+    #[test]
+    fn every_known_name_resolves_and_round_trips() {
+        for name in known_codec_names() {
+            let c = codec_by_name(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(c.name(), name);
+        }
+    }
+
+    #[test]
+    fn unknown_names_suggest_nearest() {
+        let e = codec_by_name("bic-mantisa").unwrap_err();
+        assert!(e.contains("did you mean 'bic-mantissa'"), "{e}");
+        let e = codec_by_name("zvgc").unwrap_err();
+        assert!(e.contains("did you mean 'zvcg'"), "{e}");
+        let e = codec_by_name("quantize8").unwrap_err();
+        assert!(e.contains("known codecs"), "{e}");
+    }
+
+    #[test]
+    fn bad_ddcg_groups_are_rejected() {
+        assert!(codec_by_name("ddcg16-g3").is_err());
+        assert!(codec_by_name("ddcg16-g0").is_err());
+        assert!(codec_by_name("ddcg16-gx").is_err());
+        assert!(codec_by_name("ddcg16-g32").is_err());
+        assert_eq!(codec_by_name("ddcg16-g8").unwrap().name(), "ddcg16-g8");
+    }
+
+    #[test]
+    fn decode_inverts_encode_per_codec() {
+        // the satellite property at the codec level: decode∘encode is
+        // the identity on every non-gated slot of an arbitrary stream
+        check("decode(encode(x)) == x per codec", 100, |rng| {
+            for name in known_codec_names() {
+                let codec = codec_by_name(&name).unwrap();
+                let mut lane = codec.begin();
+                for _ in 0..32 {
+                    let v = Bf16::from_bits(rng.next_u32() as u16);
+                    match lane.encode(v) {
+                        CodedWord::Gated => {
+                            assert!(v.is_zero(), "{name}: gated a non-zero");
+                        }
+                        CodedWord::Tx { word, sideband } => {
+                            assert_eq!(
+                                codec.decode(word, sideband).0,
+                                v.0,
+                                "{name}"
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn ddcg_clock_bits_match_group_algebra() {
+        let d = DdcgCodec::new(4).unwrap();
+        assert_eq!(d.load_clock_bits(0x0000, 0x0000), 0);
+        assert_eq!(d.load_clock_bits(0x0000, 0x0001), 4); // one group changed
+        assert_eq!(d.load_clock_bits(0x0000, 0x1111), 16); // all four
+        assert_eq!(d.load_overhead().comparator_bit_cycles, 16);
+        assert_eq!(d.load_overhead().cg_cell_cycles, 4);
+        let word = DdcgCodec::new(16).unwrap();
+        assert_eq!(word.load_clock_bits(1, 2), 16);
+        assert_eq!(word.load_clock_bits(7, 7), 0);
+    }
+
+    #[test]
+    fn roles_and_lines() {
+        assert_eq!(codec_by_name("zvcg").unwrap().role(), CodecRole::ValueGate);
+        let bic = codec_by_name("bic-segmented").unwrap();
+        assert_eq!(bic.role(), CodecRole::Transform);
+        assert_eq!(bic.sideband_lines(), 2);
+        assert_eq!(bic.cover_mask(), 0xFFFF);
+        let ddcg = codec_by_name("ddcg16-g2").unwrap();
+        assert_eq!(ddcg.role(), CodecRole::ClockGate);
+        assert_eq!(ddcg.sideband_lines(), 0);
+        assert_eq!(ddcg.load_overhead().cg_cell_cycles, 8);
+    }
+
+    #[test]
+    fn edit_distance_sane() {
+        assert_eq!(edit_distance("zvcg", "zvcg"), 0);
+        assert_eq!(edit_distance("zvgc", "zvcg"), 2); // transposition = 2 edits
+        assert_eq!(edit_distance("", "abc"), 3);
+    }
+}

@@ -1,9 +1,20 @@
-//! Coding configuration of an SA instance: which stream gets which
-//! power-saving technique. The paper's design space in one struct.
+//! **Deprecated shim.** `SaCodingConfig` was the closed pre-stack coding
+//! configuration (two `BicMode` fields + two ZVCG booleans). The open
+//! replacement is [`CodingStack`] — an ordered [`super::StreamCodec`]
+//! stack per stream edge, parseable from the `--coding` spec grammar.
+//! This struct survives only as a lowering shim: [`SaCodingConfig::
+//! stack`] produces the exact equivalent stack (the bit-exact migration
+//! contract is pinned by `rust/tests/legacy_conformance.rs`), and every
+//! estimation entry point now takes a `CodingStack`.
+
+use std::sync::Arc;
 
 use super::bic::{BicMode, BicPolicy};
+use super::codec::{BicCodec, StreamCodec, ZvcgCodec};
+use super::stack::{CodingStack, EdgeStack};
 
-/// Full coding configuration of an SA (inputs = West, weights = North).
+/// Closed legacy coding configuration (inputs = West, weights = North).
+/// Prefer [`CodingStack`]; this type only lowers into it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SaCodingConfig {
     /// BIC mode applied to the weight (North) streams.
@@ -69,36 +80,43 @@ impl SaCodingConfig {
         Self { weight_bic: BicMode::ExponentOnly, ..Self::proposed() }
     }
 
-    /// Named configuration lookup (CLI / bench parameter).
+    /// Named configuration lookup (legacy CLI / bench parameter).
     ///
-    /// Delegates to the [`crate::engine::ConfigRegistry`] static table —
-    /// the single source of truth for configuration names (the registry,
-    /// this lookup, the engine config sets and the CLI usage text all
-    /// derive from it).
+    /// Delegates to the [`crate::engine::ConfigRegistry`] static table.
+    /// Returns `None` both for unknown names and for registry rows that
+    /// have no closed-struct representation (e.g. the `ddcg16-g4` codec
+    /// stack) — use `ConfigRegistry::lookup(name).map(|e| e.stack())`
+    /// for the full design space.
     pub fn by_name(name: &str) -> Option<Self> {
-        crate::engine::ConfigRegistry::lookup(name).map(|e| e.config)
+        crate::engine::ConfigRegistry::lookup(name).and_then(|e| e.legacy)
     }
 
-    /// Short display name.
+    /// Lower this closed configuration into the equivalent open
+    /// [`CodingStack`], preserving the hardware order (the zero detector
+    /// sits before the bus encoder on each edge).
+    pub fn stack(&self) -> CodingStack {
+        let edge = |zvcg: bool, bic: BicMode| -> EdgeStack {
+            let mut codecs: Vec<Arc<dyn StreamCodec>> = Vec::new();
+            if zvcg {
+                codecs.push(Arc::new(ZvcgCodec));
+            }
+            if bic != BicMode::None {
+                codecs.push(Arc::new(BicCodec::new(bic, self.bic_policy)));
+            }
+            EdgeStack::from_codecs(codecs)
+                .expect("legacy lowering is always a valid stack")
+        };
+        CodingStack {
+            west: edge(self.input_zvcg, self.input_bic),
+            north: edge(self.weight_zvcg, self.weight_bic),
+        }
+    }
+
+    /// Canonical description — a valid `--coding` spec string (the
+    /// lowered stack's spec, e.g. `w:bic-mantissa,i:zvcg`), so
+    /// `CodingStack::parse(cfg.describe())` reproduces `cfg.stack()`.
     pub fn describe(&self) -> String {
-        let mut parts = Vec::new();
-        if self.weight_bic != BicMode::None {
-            parts.push(format!("w:{}", self.weight_bic.name()));
-        }
-        if self.input_bic != BicMode::None {
-            parts.push(format!("i:{}", self.input_bic.name()));
-        }
-        if self.input_zvcg {
-            parts.push("i:zvcg".into());
-        }
-        if self.weight_zvcg {
-            parts.push("w:zvcg".into());
-        }
-        if parts.is_empty() {
-            "baseline".into()
-        } else {
-            parts.join("+")
-        }
+        self.stack().spec()
     }
 
     /// True if any extra logic (encoders/detectors/gates) is present.
@@ -113,6 +131,18 @@ impl SaCodingConfig {
 impl Default for SaCodingConfig {
     fn default() -> Self {
         Self::baseline()
+    }
+}
+
+impl From<SaCodingConfig> for CodingStack {
+    fn from(cfg: SaCodingConfig) -> CodingStack {
+        cfg.stack()
+    }
+}
+
+impl From<&SaCodingConfig> for CodingStack {
+    fn from(cfg: &SaCodingConfig) -> CodingStack {
+        cfg.stack()
     }
 }
 
@@ -141,13 +171,62 @@ mod tests {
             assert!(SaCodingConfig::by_name(n).is_some(), "{n}");
         }
         assert!(SaCodingConfig::by_name("bogus").is_none());
+        // stack-only registry rows have no closed-struct view
+        assert!(SaCodingConfig::by_name("ddcg16-g4").is_none());
     }
 
     #[test]
-    fn describe_proposed() {
+    fn describe_is_a_parseable_spec() {
+        // the old display format (`w:bic-mantissa+i:zvcg`) was not a
+        // valid spec; the canonical form now round-trips
         assert_eq!(
             SaCodingConfig::proposed().describe(),
-            "w:bic-mantissa+i:zvcg"
+            "w:bic-mantissa,i:zvcg"
         );
+    }
+
+    #[test]
+    fn describe_parse_round_trips_to_the_same_stack() {
+        // satellite contract: parse(describe(c)) lowers to c's stack,
+        // for every closed config incl. policy and input-side variants
+        let mut cfgs = vec![
+            SaCodingConfig::baseline(),
+            SaCodingConfig::proposed(),
+            SaCodingConfig::bic_only(),
+            SaCodingConfig::zvcg_only(),
+            SaCodingConfig::bic_full(),
+            SaCodingConfig::bic_segmented(),
+            SaCodingConfig::bic_exponent(),
+        ];
+        cfgs.push(SaCodingConfig { weight_zvcg: true, ..SaCodingConfig::proposed() });
+        cfgs.push(SaCodingConfig {
+            input_bic: BicMode::Segmented,
+            ..SaCodingConfig::proposed()
+        });
+        cfgs.push(SaCodingConfig {
+            bic_policy: BicPolicy::MinTransitions,
+            ..SaCodingConfig::proposed()
+        });
+        for cfg in cfgs {
+            let stack = cfg.stack();
+            let reparsed = CodingStack::parse(&cfg.describe())
+                .unwrap_or_else(|e| panic!("{:?}: {e}", cfg));
+            assert_eq!(reparsed, stack, "{}", cfg.describe());
+        }
+    }
+
+    #[test]
+    fn lowering_preserves_hardware_order() {
+        let cfg = SaCodingConfig {
+            input_bic: BicMode::MantissaOnly,
+            ..SaCodingConfig::proposed()
+        };
+        // gating precedes coding on the input edge
+        assert_eq!(cfg.stack().spec(), "w:bic-mantissa,i:zvcg+bic-mantissa");
+        let mt = SaCodingConfig {
+            bic_policy: BicPolicy::MinTransitions,
+            ..SaCodingConfig::bic_only()
+        };
+        assert_eq!(mt.describe(), "w:bic-mantissa-mt");
     }
 }

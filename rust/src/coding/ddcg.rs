@@ -9,8 +9,33 @@
 //! correlated bit groups — fine groups cost too much logic, coarse
 //! groups almost never gate. This module measures exactly that tradeoff
 //! on real bf16 streams.
+//!
+//! Two entry points share the group algebra ([`changed_group_bits`]):
+//! the standalone stream analysis below (the `ddcg` CLI subcommand) and
+//! the composable [`super::DdcgCodec`] (`ddcg16-g<N>` in the `--coding`
+//! spec grammar / `ConfigRegistry`), which wires the same charge model
+//! into the full estimation engines so the dismissal shows up in sweep
+//! reports, not just the bespoke table.
 
 use crate::bf16::Bf16;
+
+/// FF clock events that survive group-level DDCG when a register loads
+/// `next` over `prev`: the summed widths of the groups that changed.
+/// `group_bits` must divide 16 (checked by the callers' constructors).
+pub fn changed_group_bits(prev: u16, next: u16, group_bits: usize) -> u64 {
+    debug_assert!(group_bits > 0 && 16 % group_bits == 0);
+    let groups = 16 / group_bits;
+    let mask =
+        if group_bits == 16 { 0xFFFF } else { ((1u32 << group_bits) - 1) as u16 };
+    let mut clocked = 0u64;
+    for g in 0..groups {
+        let shift = g * group_bits;
+        if ((prev >> shift) ^ (next >> shift)) & mask != 0 {
+            clocked += group_bits as u64;
+        }
+    }
+    clocked
+}
 
 /// Analysis of DDCG applied to one 16-bit value stream register.
 #[derive(Clone, Debug, PartialEq)]
@@ -53,26 +78,17 @@ impl DdcgReport {
 /// synthesis flow would slice a register.
 pub fn ddcg_analyze(stream: &[Bf16], group_bits: usize) -> DdcgReport {
     assert!(group_bits > 0 && 16 % group_bits == 0, "group must divide 16");
-    let groups = 16 / group_bits;
-    let mask = if group_bits == 16 { 0xFFFF } else { ((1u32 << group_bits) - 1) as u16 };
-
     let mut gated = 0u64;
     let mut prev = 0u16;
     for &v in stream {
-        for g in 0..groups {
-            let shift = g * group_bits;
-            let unchanged = ((prev >> shift) ^ (v.0 >> shift)) & mask == 0;
-            if unchanged {
-                gated += group_bits as u64;
-            }
-        }
+        gated += 16 - changed_group_bits(prev, v.0, group_bits);
         prev = v.0;
     }
     DdcgReport {
         gated_ff_cycles: gated,
         total_ff_cycles: 16 * stream.len() as u64,
         comparator_bit_cycles: 16 * stream.len() as u64,
-        groups,
+        groups: 16 / group_bits,
     }
 }
 

@@ -1,18 +1,30 @@
-//! Low-power stream coding: Bus-Invert Coding variants and zero-value
-//! clock gating (paper §III).
+//! Low-power stream coding: the composable [`StreamCodec`] API and its
+//! built-in techniques — Bus-Invert Coding variants, zero-value clock
+//! gating, and data-driven clock gating (paper §III).
 //!
-//! The paper's *proposed* configuration is `SaCodingConfig::proposed()`:
-//! mantissa-only BIC on the weight (North) streams + ZVCG on the input
-//! (West) streams. Every other combination is implemented as a baseline
-//! or ablation point (full-bus BIC, segmented BIC, exponent-only BIC,
-//! ZVCG on weights, BIC on inputs).
+//! The coding layer is organised around **stacks**: each stream edge
+//! (West inputs / North weights) carries an ordered [`EdgeStack`] of
+//! codecs, assembled into a [`CodingStack`] — parseable from the
+//! `--coding` spec grammar (see [`stack`] docs), addressable by name via
+//! `engine::ConfigRegistry`, and consumed generically by both estimation
+//! engines. The paper's *proposed* design is the stack
+//! `w:bic-mantissa,i:zvcg`; every other combination (full-bus/segmented/
+//! exponent BIC, weight-side ZVCG, DDCG, min-transitions policies) is a
+//! different stack, not a different engine.
+//!
+//! [`SaCodingConfig`] is the deprecated closed pre-stack struct, kept
+//! only as a lowering shim.
 
 mod bic;
+mod codec;
 mod config;
 mod ddcg;
+mod stack;
 mod zvcg;
 
 pub use bic::*;
+pub use codec::*;
 pub use config::*;
 pub use ddcg::*;
+pub use stack::*;
 pub use zvcg::*;

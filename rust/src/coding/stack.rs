@@ -1,0 +1,562 @@
+//! Per-edge codec stacks and the `--coding` spec grammar.
+//!
+//! A [`CodingStack`] assigns an ordered [`EdgeStack`] of
+//! [`StreamCodec`]s to each of the SA's two stream edges — West (inputs,
+//! spec key `i`) and North (weights, spec key `w`). It is the open
+//! replacement for the closed `SaCodingConfig` struct: the estimation
+//! engines consume only the stack's aggregate queries, so arbitrary
+//! combinations — not just the registry's named rows — are first-class.
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! spec    := "baseline" | clause ("," clause)*
+//! clause  := edge ":" stack
+//! edge    := "w" | "weights" | "north"        (North / weight streams)
+//!          | "i" | "inputs"  | "west"         (West / input streams)
+//! stack   := codec ("+" codec)*               (applied in listed order)
+//! codec   := zvcg | bic-mantissa[-mt] | bic-full[-mt] | bic-segmented[-mt]
+//!          | bic-exponent[-mt] | ddcg16-g<N>  (N | 16, e.g. ddcg16-g4)
+//! ```
+//!
+//! Examples: `w:bic-mantissa,i:zvcg` (the paper's proposed design),
+//! `w:zvcg+bic-full`, `i:ddcg16-g4`. `baseline` is the empty stack.
+//!
+//! Nonsense stacks are rejected at parse time with actionable errors:
+//! unknown codec names (nearest-match suggestion), a codec repeated on
+//! one edge, two codecs of the same role on one edge (one bus encoder /
+//! one gate / one register clock gate per edge), and violations of the
+//! hardware ordering *gating before coding* — the zero detector sits
+//! before the bus encoder, zeros never reach it, so `w:bic-mantissa+zvcg`
+//! is not a machine that exists; write `w:zvcg+bic-mantissa`.
+
+use std::sync::Arc;
+
+use crate::bf16::Bf16;
+
+use super::codec::{
+    codec_by_name, CodecRole, CodedWord, LaneCoder, LaneSlot, LoadOverhead,
+    StreamCodec,
+};
+
+/// Edge-logic event counts accrued by an [`EdgeCoder`] over one lane.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EdgeOps {
+    /// Gate-decision evaluations (one per raw word per value gate).
+    pub zero_detect_ops: u64,
+    /// Bus-encoder evaluations (one per surviving word per transform).
+    pub encoder_ops: u64,
+}
+
+/// An ordered stack of codecs on one stream edge (one lane family).
+#[derive(Clone)]
+pub struct EdgeStack {
+    codecs: Vec<Arc<dyn StreamCodec>>,
+}
+
+impl std::fmt::Debug for EdgeStack {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "EdgeStack[{}]", self.spec())
+    }
+}
+
+impl PartialEq for EdgeStack {
+    fn eq(&self, other: &Self) -> bool {
+        self.spec() == other.spec()
+    }
+}
+
+impl Eq for EdgeStack {}
+
+impl Default for EdgeStack {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl EdgeStack {
+    /// The transparent edge: no codecs, plain 16-bit streaming.
+    pub fn empty() -> Self {
+        EdgeStack { codecs: Vec::new() }
+    }
+
+    /// Assemble a stack from codec instances, validating the edge rules
+    /// (see the module docs).
+    pub fn from_codecs(
+        codecs: Vec<Arc<dyn StreamCodec>>,
+    ) -> Result<Self, String> {
+        let mut seen_names: Vec<String> = Vec::new();
+        let mut seen_roles: Vec<(CodecRole, String)> = Vec::new();
+        for c in &codecs {
+            let name = c.name();
+            if seen_names.contains(&name) {
+                return Err(format!("duplicate codec '{name}' on one edge"));
+            }
+            if let Some((_, prev)) =
+                seen_roles.iter().find(|(r, _)| *r == c.role())
+            {
+                return Err(format!(
+                    "codecs '{prev}' and '{name}' conflict: one {} per edge \
+                     (the lane has a single {})",
+                    role_noun(c.role()),
+                    role_hw(c.role()),
+                ));
+            }
+            if c.role() == CodecRole::ValueGate {
+                if let Some((_, enc)) = seen_roles
+                    .iter()
+                    .find(|(r, _)| *r == CodecRole::Transform)
+                {
+                    return Err(format!(
+                        "ordering violation: '{enc}' before '{name}' — \
+                         gating must precede bus coding (zeros never reach \
+                         the encoder); write '{name}+{enc}'"
+                    ));
+                }
+            }
+            seen_roles.push((c.role(), name.clone()));
+            seen_names.push(name);
+        }
+        Ok(EdgeStack { codecs })
+    }
+
+    /// Parse one edge's stack (`"zvcg+bic-mantissa"`).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err("empty codec stack (drop the edge clause instead)".into());
+        }
+        let codecs = spec
+            .split('+')
+            .map(|name| codec_by_name(name.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        Self::from_codecs(codecs)
+    }
+
+    /// Canonical spec of this edge's stack (`+`-joined codec names).
+    pub fn spec(&self) -> String {
+        self.codecs
+            .iter()
+            .map(|c| c.name())
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codecs.is_empty()
+    }
+
+    pub fn codecs(&self) -> &[Arc<dyn StreamCodec>] {
+        &self.codecs
+    }
+
+    /// Does a value gate sit on this edge (registers freeze on zeros,
+    /// MAC slots are skipped)?
+    pub fn gates(&self) -> bool {
+        self.codecs.iter().any(|c| c.role() == CodecRole::ValueGate)
+    }
+
+    /// Does a bus transform sit on this edge (words re-encoded, per-PE
+    /// recovery decoders at the taps)?
+    pub fn codes(&self) -> bool {
+        self.codecs.iter().any(|c| c.role() == CodecRole::Transform)
+    }
+
+    /// Sideband lines of the transform codecs (clocked per load).
+    pub fn coded_lines(&self) -> u32 {
+        self.transforms().map(|c| c.sideband_lines()).sum()
+    }
+
+    /// Every extra bus line the stack adds to the lane (gate lines +
+    /// transform lines) — the stack's "extra wires" charge.
+    pub fn sideband_lines(&self) -> u32 {
+        self.codecs.iter().map(|c| c.sideband_lines()).sum()
+    }
+
+    /// Union of the data lines the transforms may rewrite.
+    pub fn cover_mask(&self) -> u16 {
+        self.transforms().fold(0u16, |a, c| a | c.cover_mask())
+    }
+
+    /// Register FF clock events for loading `next` over `prev` (16
+    /// unless a clock-gate codec reduces it). Hot paths should resolve
+    /// [`EdgeStack::clock_gate`] once per lane and call the codec
+    /// directly instead of paying this lookup per word.
+    pub fn load_clock_bits(&self, prev: u16, next: u16) -> u64 {
+        match self.clock_gate() {
+            Some(c) => c.load_clock_bits(prev, next),
+            None => 16,
+        }
+    }
+
+    /// Per-load register overheads of the clock-gate codec (if any).
+    pub fn load_overhead(&self) -> LoadOverhead {
+        match self.clock_gate() {
+            Some(c) => c.load_overhead(),
+            None => LoadOverhead::NONE,
+        }
+    }
+
+    /// Recover the original word from a transmitted word + packed
+    /// sideband (transform decodes applied in reverse stack order).
+    /// Allocation-free: this sits inside the cycle engines' per-MAC-slot
+    /// operand recovery.
+    pub fn decode(&self, word: Bf16, sideband: u8) -> Bf16 {
+        let mut shift = self.coded_lines();
+        let mut w = word;
+        for c in self.transforms().rev() {
+            let lines = c.sideband_lines();
+            shift -= lines;
+            let mask = if lines >= 8 { 0xFF } else { (1u8 << lines) - 1 };
+            w = c.decode(w, (sideband >> shift) & mask);
+        }
+        w
+    }
+
+    /// Fresh stateful edge logic for one lane. Role and sideband width
+    /// are cached per stage so the per-word loop pays no repeated
+    /// dynamic dispatch beyond the encode call itself; register
+    /// clock-gate codecs act per load, never on the word stream, so
+    /// they are excluded from the stage walk entirely.
+    pub fn coder(&self) -> EdgeCoder {
+        EdgeCoder {
+            stages: self
+                .codecs
+                .iter()
+                .filter(|c| c.role() != CodecRole::ClockGate)
+                .map(|c| (c.role(), c.sideband_lines(), c.begin()))
+                .collect(),
+            ops: EdgeOps::default(),
+        }
+    }
+
+    fn transforms(
+        &self,
+    ) -> impl DoubleEndedIterator<Item = &Arc<dyn StreamCodec>> {
+        self.codecs
+            .iter()
+            .filter(|c| c.role() == CodecRole::Transform)
+    }
+
+    /// The edge's register clock-gate codec, if any (at most one — the
+    /// validation rules enforce one codec per role).
+    pub fn clock_gate(&self) -> Option<&Arc<dyn StreamCodec>> {
+        self.codecs
+            .iter()
+            .find(|c| c.role() == CodecRole::ClockGate)
+    }
+}
+
+fn role_noun(role: CodecRole) -> &'static str {
+    match role {
+        CodecRole::ValueGate => "value gate",
+        CodecRole::Transform => "bus encoder",
+        CodecRole::ClockGate => "register clock gate",
+    }
+}
+
+fn role_hw(role: CodecRole) -> &'static str {
+    match role {
+        CodecRole::ValueGate => "gate sideband",
+        CodecRole::Transform => "bus driver",
+        CodecRole::ClockGate => "register clock tree",
+    }
+}
+
+/// Stateful edge logic of one lane: runs each raw word through the
+/// stack's codec stages in order, packing transform sidebands, and
+/// tallies the edge-op charges ([`EdgeOps`]). Each stage carries its
+/// cached `(role, sideband lines)` so [`EdgeCoder::next`] does only the
+/// encode dispatch per word.
+pub struct EdgeCoder {
+    stages: Vec<(CodecRole, u32, Box<dyn LaneCoder>)>,
+    ops: EdgeOps,
+}
+
+impl EdgeCoder {
+    /// Process the next raw word of the lane.
+    pub fn next(&mut self, v: Bf16) -> LaneSlot {
+        let mut word = v;
+        let mut sideband = 0u8;
+        let mut shift = 0u32;
+        for (role, lines, state) in &mut self.stages {
+            match role {
+                CodecRole::ValueGate => self.ops.zero_detect_ops += 1,
+                CodecRole::Transform => self.ops.encoder_ops += 1,
+                CodecRole::ClockGate => {}
+            }
+            match state.encode(word) {
+                CodedWord::Gated => {
+                    debug_assert_eq!(
+                        *role,
+                        CodecRole::ValueGate,
+                        "only value gates may gate"
+                    );
+                    return LaneSlot {
+                        gated: true,
+                        word: Bf16::ZERO,
+                        sideband: 0,
+                    };
+                }
+                CodedWord::Tx { word: w, sideband: sb } => {
+                    word = w;
+                    if *role == CodecRole::Transform {
+                        sideband |= sb << shift;
+                        shift += *lines;
+                    }
+                }
+            }
+        }
+        LaneSlot { gated: false, word, sideband }
+    }
+
+    /// Edge-op totals accrued so far.
+    pub fn ops(&self) -> EdgeOps {
+        self.ops
+    }
+}
+
+/// The full coding assignment of an SA instance: one codec stack per
+/// stream edge. The open, composable replacement for `SaCodingConfig`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CodingStack {
+    /// West edge — the input (activation) streams (spec key `i`).
+    pub west: EdgeStack,
+    /// North edge — the weight streams (spec key `w`).
+    pub north: EdgeStack,
+}
+
+impl CodingStack {
+    /// The conventional SA: no codecs anywhere (spec `baseline`).
+    pub fn baseline() -> Self {
+        Self::default()
+    }
+
+    /// Build from per-edge stacks.
+    pub fn new(west: EdgeStack, north: EdgeStack) -> Self {
+        CodingStack { west, north }
+    }
+
+    /// Parse a full spec (see the module docs for the grammar).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "baseline" {
+            return Ok(Self::baseline());
+        }
+        let mut west: Option<EdgeStack> = None;
+        let mut north: Option<EdgeStack> = None;
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            let (edge, stack) = clause.split_once(':').ok_or_else(|| {
+                format!(
+                    "bad clause '{clause}': expected '<edge>:<codec>+...' \
+                     (edges: w|weights|north, i|inputs|west)"
+                )
+            })?;
+            let slot = match edge.trim() {
+                "w" | "weights" | "north" => &mut north,
+                "i" | "inputs" | "west" => &mut west,
+                other => {
+                    return Err(format!(
+                        "unknown edge '{other}' in '{clause}' \
+                         (edges: w|weights|north, i|inputs|west)"
+                    ))
+                }
+            };
+            if slot.is_some() {
+                return Err(format!(
+                    "edge '{}' specified twice",
+                    edge.trim()
+                ));
+            }
+            *slot = Some(
+                EdgeStack::parse(stack)
+                    .map_err(|e| format!("edge '{}': {e}", edge.trim()))?,
+            );
+        }
+        Ok(CodingStack {
+            west: west.unwrap_or_default(),
+            north: north.unwrap_or_default(),
+        })
+    }
+
+    /// Canonical spec string: `w:` clause first, then `i:`, empty edges
+    /// omitted; the empty assignment prints as `baseline`. Always
+    /// re-parseable: `parse(spec()) == self`.
+    pub fn spec(&self) -> String {
+        let mut parts = Vec::new();
+        if !self.north.is_empty() {
+            parts.push(format!("w:{}", self.north.spec()));
+        }
+        if !self.west.is_empty() {
+            parts.push(format!("i:{}", self.west.spec()));
+        }
+        if parts.is_empty() {
+            "baseline".into()
+        } else {
+            parts.join(",")
+        }
+    }
+
+    /// True if any codec (encoders/detectors/gates) is present.
+    pub fn has_overhead(&self) -> bool {
+        !self.west.is_empty() || !self.north.is_empty()
+    }
+
+    /// True if either edge gates values (MAC slots may be skipped, so
+    /// the accumulator carries an ICG).
+    pub fn gates_any(&self) -> bool {
+        self.west.gates() || self.north.gates()
+    }
+}
+
+impl std::fmt::Display for CodingStack {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.spec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    #[test]
+    fn parse_print_round_trips() {
+        for spec in [
+            "baseline",
+            "w:bic-mantissa,i:zvcg",
+            "w:zvcg+bic-full",
+            "i:zvcg+bic-segmented-mt",
+            "w:ddcg16-g4,i:ddcg16-g4",
+            "w:zvcg+bic-mantissa+ddcg16-g8,i:zvcg",
+        ] {
+            let s = CodingStack::parse(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(s.spec(), spec, "canonical form");
+            assert_eq!(CodingStack::parse(&s.spec()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn aliases_and_whitespace_canonicalize() {
+        let a = CodingStack::parse("weights:bic-mantissa, inputs:zvcg").unwrap();
+        let b = CodingStack::parse("north:bic-mantissa,west:zvcg").unwrap();
+        let c = CodingStack::parse("i:zvcg,w:bic-mantissa").unwrap();
+        assert_eq!(a.spec(), "w:bic-mantissa,i:zvcg");
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        assert_eq!(CodingStack::parse("").unwrap(), CodingStack::baseline());
+        assert_eq!(CodingStack::parse("baseline").unwrap().spec(), "baseline");
+    }
+
+    #[test]
+    fn rejects_duplicate_codec() {
+        let e = CodingStack::parse("w:zvcg+zvcg").unwrap_err();
+        assert!(e.contains("duplicate codec 'zvcg'"), "{e}");
+    }
+
+    #[test]
+    fn rejects_two_codecs_of_one_role() {
+        let e = CodingStack::parse("w:bic-full+bic-mantissa").unwrap_err();
+        assert!(
+            e.contains("bic-full") && e.contains("bic-mantissa")
+                && e.contains("one bus encoder"),
+            "{e}"
+        );
+        let e = CodingStack::parse("i:ddcg16-g4+ddcg16-g8").unwrap_err();
+        assert!(e.contains("one register clock gate"), "{e}");
+    }
+
+    #[test]
+    fn rejects_coding_before_gating() {
+        let e = CodingStack::parse("w:bic-mantissa+zvcg").unwrap_err();
+        assert!(e.contains("ordering violation"), "{e}");
+        assert!(e.contains("zvcg+bic-mantissa"), "suggests the fix: {e}");
+        // the valid order parses
+        assert!(CodingStack::parse("w:zvcg+bic-mantissa").is_ok());
+    }
+
+    #[test]
+    fn rejects_unknown_edges_and_codecs() {
+        let e = CodingStack::parse("x:zvcg").unwrap_err();
+        assert!(e.contains("unknown edge 'x'"), "{e}");
+        let e = CodingStack::parse("w:bic-mantisa").unwrap_err();
+        assert!(e.contains("did you mean 'bic-mantissa'"), "{e}");
+        let e = CodingStack::parse("w:").unwrap_err();
+        assert!(e.contains("empty codec stack") || e.contains("unknown"), "{e}");
+        let e = CodingStack::parse("zvcg").unwrap_err();
+        assert!(e.contains("expected '<edge>"), "{e}");
+        let e = CodingStack::parse("w:zvcg,w:bic-full").unwrap_err();
+        assert!(e.contains("specified twice"), "{e}");
+    }
+
+    #[test]
+    fn edge_queries_aggregate_codecs() {
+        let s = CodingStack::parse("w:zvcg+bic-segmented+ddcg16-g4").unwrap();
+        assert!(s.north.gates() && s.north.codes());
+        assert_eq!(s.north.coded_lines(), 2);
+        assert_eq!(s.north.sideband_lines(), 3); // is-zero + 2 inv
+        assert_eq!(s.north.cover_mask(), 0xFFFF);
+        assert_eq!(s.north.load_overhead().cg_cell_cycles, 4);
+        assert!(!s.west.gates());
+        assert!(s.gates_any() && s.has_overhead());
+        assert!(!CodingStack::baseline().has_overhead());
+        assert_eq!(CodingStack::baseline().west.load_clock_bits(0, 5), 16);
+    }
+
+    #[test]
+    fn coder_matches_hardware_order_and_decodes() {
+        // zeros are gated before the encoder; survivors encode/decode
+        // through the packed sideband
+        let s = CodingStack::parse("i:zvcg+bic-mantissa").unwrap();
+        let mut rng = Rng64::new(3);
+        let mut coder = s.west.coder();
+        let mut zeros = 0u64;
+        let mut survivors = 0u64;
+        for i in 0..64 {
+            let v = if i % 3 == 0 {
+                Bf16::ZERO
+            } else {
+                Bf16::from_bits(rng.next_u32() as u16 | 1)
+            };
+            let slot = coder.next(v);
+            if v.is_zero() {
+                assert!(slot.gated);
+                zeros += 1;
+            } else {
+                assert!(!slot.gated);
+                survivors += 1;
+                assert_eq!(s.west.decode(slot.word, slot.sideband).0, v.0);
+            }
+        }
+        let ops = coder.ops();
+        assert_eq!(ops.zero_detect_ops, zeros + survivors);
+        assert_eq!(ops.encoder_ops, survivors, "gated words skip the encoder");
+    }
+
+    #[test]
+    fn commuting_orders_are_both_accepted() {
+        // ddcg acts at the registers, so its list position relative to
+        // the others is immaterial — both orders parse (and the engines
+        // charge them identically; see property_tests.rs)
+        for (a, b) in [
+            ("w:bic-mantissa+ddcg16-g4", "w:ddcg16-g4+bic-mantissa"),
+            ("i:zvcg+ddcg16-g2", "i:ddcg16-g2+zvcg"),
+        ] {
+            let sa = CodingStack::parse(a).unwrap();
+            let sb = CodingStack::parse(b).unwrap();
+            // distinct canonical specs (order is preserved) ...
+            assert_ne!(sa.spec(), sb.spec());
+            // ... but identical aggregate charge queries
+            let (ea, eb) = if a.starts_with("w:") {
+                (&sa.north, &sb.north)
+            } else {
+                (&sa.west, &sb.west)
+            };
+            assert_eq!(ea.coded_lines(), eb.coded_lines());
+            assert_eq!(ea.cover_mask(), eb.cover_mask());
+            assert_eq!(ea.load_overhead(), eb.load_overhead());
+            assert_eq!(ea.load_clock_bits(3, 12), eb.load_clock_bits(3, 12));
+        }
+    }
+}

@@ -7,7 +7,7 @@
 //! here are thin deprecated shims over that engine path.
 
 use crate::activity::ActivityCounts;
-use crate::coding::SaCodingConfig;
+use crate::coding::{CodingStack, SaCodingConfig};
 use crate::engine::EstimatorBackend;
 use crate::power::EnergyBreakdown;
 use crate::sa::{SaConfig, TileBuffers};
@@ -41,10 +41,12 @@ impl Default for AnalysisOptions {
     }
 }
 
-/// Result of analyzing one layer under one coding configuration.
+/// Result of analyzing one layer under one coding stack.
 #[derive(Clone, Debug)]
 pub struct ConfigResult {
-    pub config: SaCodingConfig,
+    /// The per-stream codec stacks the counts were produced under (full
+    /// provenance — serialized per stream by the v3 report schema).
+    pub stack: CodingStack,
     pub config_name: String,
     /// Scaled activity counts (integers scaled → f64 kept in energy; the
     /// raw sampled counts are preserved here).
@@ -174,10 +176,21 @@ pub fn analyze_layer(
         layer_idx,
         gemms,
         channel_scale,
-        configs,
+        &lower_legacy(configs),
         opts,
         &crate::engine::AnalyticBackend,
     )
+}
+
+/// Lower a legacy closed-struct config list to codec stacks (the shape
+/// the estimation core consumes).
+fn lower_legacy(
+    configs: &[(String, SaCodingConfig)],
+) -> Vec<(String, CodingStack)> {
+    configs
+        .iter()
+        .map(|(n, c)| (n.clone(), c.stack()))
+        .collect()
 }
 
 /// Analyze one layer with caller-provided input data (e2e path).
@@ -199,14 +212,14 @@ pub fn analyze_layer_with_data(
         layer_idx,
         gemms,
         channel_scale,
-        configs,
+        &lower_legacy(configs),
         opts,
         &crate::engine::AnalyticBackend,
     )
 }
 
 /// The estimation core: stream every sampled tile of `gemms` through
-/// `backend` under every configuration, extrapolate energy by the
+/// `backend` under every coding stack, extrapolate energy by the
 /// sampling scale. This is the single engine-room all public paths
 /// ([`crate::engine::SaEngine`] and the deprecated shims) converge on.
 pub fn analyze_gemms_with(
@@ -214,7 +227,7 @@ pub fn analyze_gemms_with(
     layer_idx: usize,
     gemms: Vec<Gemm>,
     channel_scale: f64,
-    configs: &[(String, SaCodingConfig)],
+    configs: &[(String, CodingStack)],
     opts: &AnalysisOptions,
     backend: &dyn EstimatorBackend,
 ) -> LayerReport {
@@ -248,8 +261,8 @@ pub fn analyze_gemms_with(
             let scale = plan.scale * channel_scale;
             for &(mi, ni) in &plan.picks {
                 let tile = extract_tile_into(g, &grid, mi, ni, &mut scratch);
-                for (ci, (_, cfg)) in configs.iter().enumerate() {
-                    let counts = backend.estimate(&tile, cfg, opts.sa.dataflow);
+                for (ci, (_, stack)) in configs.iter().enumerate() {
+                    let counts = backend.estimate(&tile, stack, opts.sa.dataflow);
                     let energy = opts.sa.energy.energy(&counts);
                     per_config[ci].0.add(&counts);
                     per_config[ci].1.add(&energy.scale(scale));
@@ -262,8 +275,8 @@ pub fn analyze_gemms_with(
     let results = configs
         .iter()
         .zip(per_config)
-        .map(|((name, cfg), (counts, energy))| ConfigResult {
-            config: *cfg,
+        .map(|((name, stack), (counts, energy))| ConfigResult {
+            stack: stack.clone(),
             config_name: name.clone(),
             counts,
             energy,
@@ -286,16 +299,29 @@ pub fn analyze_gemms_with(
     }
 }
 
-/// The two-config set used by the paper's figures.
+/// The two-config set used by the paper's figures, in the legacy
+/// closed-struct shape.
 #[deprecated(since = "0.2.0", note = "use engine::ConfigSet::paper()")]
 pub fn paper_configs() -> Vec<(String, SaCodingConfig)> {
-    crate::engine::ConfigSet::paper().into_vec()
+    legacy_table_set(|e| e.paper_set)
 }
 
-/// The full ablation set.
+/// The legacy-expressible rows of the full ablation set (stack-only
+/// rows such as `ddcg16-g4` have no closed-struct form and are omitted;
+/// `engine::ConfigSet::ablation()` carries them all).
 #[deprecated(since = "0.2.0", note = "use engine::ConfigSet::ablation()")]
 pub fn ablation_configs() -> Vec<(String, SaCodingConfig)> {
-    crate::engine::ConfigSet::ablation().into_vec()
+    legacy_table_set(|e| e.ablation_set)
+}
+
+fn legacy_table_set(
+    pred: impl Fn(&crate::engine::ConfigEntry) -> bool,
+) -> Vec<(String, SaCodingConfig)> {
+    crate::engine::ConfigRegistry::entries()
+        .iter()
+        .filter(|e| pred(e))
+        .filter_map(|e| e.legacy.map(|c| (e.name.to_string(), c)))
+        .collect()
 }
 
 #[cfg(test)]

@@ -136,12 +136,12 @@ mod tests {
         #![allow(deprecated)]
         let net = tinycnn();
         let opts = AnalysisOptions { max_tiles_per_layer: 4, ..Default::default() };
-        let shim = sweep_network(
-            &net,
-            ConfigSet::paper().as_slice(),
-            &opts,
-            2,
-        );
+        // legacy callers pass closed structs; the shim lowers them
+        let legacy = vec![
+            ("baseline".to_string(), SaCodingConfig::baseline()),
+            ("proposed".to_string(), SaCodingConfig::proposed()),
+        ];
+        let shim = sweep_network(&net, &legacy, &opts, 2);
         let direct = engine(2).sweep(&net);
         assert_eq!(shim.total_energy("proposed"), direct.total_energy("proposed"));
         assert_eq!(shim.backend, "analytic");

@@ -2,7 +2,7 @@
 //!
 //! ## Backend contract
 //!
-//! An [`EstimatorBackend`] maps `(Tile, SaCodingConfig, Dataflow)` to
+//! An [`EstimatorBackend`] maps `(Tile, CodingStack, Dataflow)` to
 //! exact [`ActivityCounts`]. Where two backends both define a count
 //! under the same dataflow, they must be **bit-exact**: the analytic
 //! model and the cycle simulator are two derivations of the same RTL
@@ -25,10 +25,10 @@
 use std::sync::Arc;
 
 use crate::activity::ActivityCounts;
-use crate::coding::SaCodingConfig;
+use crate::coding::CodingStack;
 use crate::sa::{analyze_tile, simulate_tile, Dataflow, Tile};
 
-/// A power-activity estimator for one tile under one coding config and
+/// A power-activity estimator for one tile under one coding stack and
 /// dataflow.
 pub trait EstimatorBackend: Send + Sync {
     /// Stable backend name (CLI value, report provenance field).
@@ -38,7 +38,7 @@ pub trait EstimatorBackend: Send + Sync {
     fn estimate(
         &self,
         tile: &Tile,
-        cfg: &SaCodingConfig,
+        stack: &CodingStack,
         dataflow: Dataflow,
     ) -> ActivityCounts;
 }
@@ -56,10 +56,10 @@ impl EstimatorBackend for AnalyticBackend {
     fn estimate(
         &self,
         tile: &Tile,
-        cfg: &SaCodingConfig,
+        stack: &CodingStack,
         dataflow: Dataflow,
     ) -> ActivityCounts {
-        analyze_tile(tile, cfg, dataflow)
+        analyze_tile(tile, stack, dataflow)
     }
 }
 
@@ -76,10 +76,10 @@ impl EstimatorBackend for CycleBackend {
     fn estimate(
         &self,
         tile: &Tile,
-        cfg: &SaCodingConfig,
+        stack: &CodingStack,
         dataflow: Dataflow,
     ) -> ActivityCounts {
-        simulate_tile(tile, cfg, dataflow).counts
+        simulate_tile(tile, stack, dataflow).counts
     }
 }
 
@@ -150,10 +150,10 @@ mod tests {
     #[test]
     fn backends_are_bit_exact_on_a_shared_tile() {
         let t = small_tile();
-        for (name, cfg) in crate::engine::ConfigSet::ablation().iter() {
+        for (name, stack) in crate::engine::ConfigSet::ablation().iter() {
             for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
-                let a = AnalyticBackend.estimate(&t, cfg, df);
-                let c = CycleBackend.estimate(&t, cfg, df);
+                let a = AnalyticBackend.estimate(&t, stack, df);
+                let c = CycleBackend.estimate(&t, stack, df);
                 assert_eq!(a, c, "backend divergence under '{name}' ({df})");
             }
         }

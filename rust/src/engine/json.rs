@@ -6,26 +6,36 @@
 //! (`rust/tests/engine_api.rs`), so downstream consumers can rely on it;
 //! bump the `schema` tag when changing the shape.
 //!
-//! Schema (`sa-lowpower.sweep-report.v2`):
+//! Schema (`sa-lowpower.sweep-report.v3`):
 //!
 //! ```text
 //! { "schema", "network", "backend", "dataflow",
 //!   "layers": [ { "layer", "index", "gemm": {m,k,n},
 //!                 "input_zero_frac", "sampled_tiles", "total_tiles",
 //!                 "results": [ { "config", "coding",
+//!                                "stack": { "west": [codec...],
+//!                                           "north": [codec...] },
 //!                                "counts": { ...all ActivityCounts fields,
 //!                                            "streaming_toggles" },
 //!                                "energy": { ...all EnergyBreakdown fields,
 //!                                            "streaming","compute","total" } } ] } ] }
 //! ```
 //!
-//! v2 added the `"dataflow"` provenance field (`"ws"` / `"os"`); v1
-//! documents (no such field) remain readable — [`SweepDoc::from_json`]
-//! accepts both and defaults v1 to `"ws"`, the only dataflow that
-//! existed then. Energies are femtojoules; counts are exact integers.
-//! The derived fields (`streaming_toggles`, `streaming`, `compute`,
-//! `total`) are included so consumers never re-implement the component
-//! groupings.
+//! v3 (the codec-stack migration) made `"coding"` a canonical
+//! `--coding` spec string, added the per-stream `"stack"` provenance
+//! object (the ordered codec names on each edge), and extended the
+//! counts ledger with the DDCG comparator fields
+//! (`west/north_comparator_bit_cycles`). v2 had added the `"dataflow"`
+//! provenance field (`"ws"` / `"os"`); v1 predates it. Both older
+//! schemas remain readable — [`SweepDoc::from_json`] accepts all three
+//! and defaults v1 to `"ws"`, the only dataflow that existed then.
+//! The bit-exactness migration contract: for every registry config the
+//! v3 counts equal the v2 counts field-for-field (the new comparator
+//! fields are 0 for every pre-stack design) — pinned by
+//! `rust/tests/legacy_conformance.rs`. Energies are femtojoules; counts
+//! are exact integers. The derived fields (`streaming_toggles`,
+//! `streaming`, `compute`, `total`) are included so consumers never
+//! re-implement the component groupings.
 
 use crate::activity::ActivityCounts;
 use crate::coordinator::{ConfigResult, LayerReport, SweepReport};
@@ -33,17 +43,19 @@ use crate::power::EnergyBreakdown;
 use crate::util::json::Json;
 
 /// Schema tag embedded in every sweep-report document.
-pub const SWEEP_REPORT_SCHEMA: &str = "sa-lowpower.sweep-report.v2";
+pub const SWEEP_REPORT_SCHEMA: &str = "sa-lowpower.sweep-report.v3";
 
-/// The previous schema tag — still accepted by [`SweepDoc::from_json`]
+/// Previous schema tags — still accepted by [`SweepDoc::from_json`]
 /// (backward compatibility is pinned by `rust/tests/engine_api.rs` over
-/// the committed v1 golden file).
+/// the committed v1/v2 golden files).
+pub const SWEEP_REPORT_SCHEMA_V2: &str = "sa-lowpower.sweep-report.v2";
 pub const SWEEP_REPORT_SCHEMA_V1: &str = "sa-lowpower.sweep-report.v1";
 
 /// Provenance header of a parsed sweep-report document — the consumer
-/// side of the schema. Reads v2 documents and, for backward
-/// compatibility, v1 documents (which predate the dataflow axis and are
-/// therefore weight-stationary by construction).
+/// side of the schema. Reads v3 documents and, for backward
+/// compatibility, v2 (pre-stack) and v1 documents (which additionally
+/// predate the dataflow axis and are therefore weight-stationary by
+/// construction).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SweepDoc {
     pub schema: String,
@@ -62,10 +74,14 @@ impl SweepDoc {
             .get("schema")
             .and_then(Json::as_str)
             .ok_or("missing 'schema' field")?;
-        if schema != SWEEP_REPORT_SCHEMA && schema != SWEEP_REPORT_SCHEMA_V1 {
+        if schema != SWEEP_REPORT_SCHEMA
+            && schema != SWEEP_REPORT_SCHEMA_V2
+            && schema != SWEEP_REPORT_SCHEMA_V1
+        {
             return Err(format!(
                 "unsupported schema '{schema}' (supported: \
-                 {SWEEP_REPORT_SCHEMA}, {SWEEP_REPORT_SCHEMA_V1})"
+                 {SWEEP_REPORT_SCHEMA}, {SWEEP_REPORT_SCHEMA_V2}, \
+                 {SWEEP_REPORT_SCHEMA_V1})"
             ));
         }
         let field = |name: &str| {
@@ -136,6 +152,7 @@ impl ActivityCounts {
         o.push("west_sideband_clock_events", self.west_sideband_clock_events);
         o.push("zero_detect_ops", self.zero_detect_ops);
         o.push("west_cg_cell_cycles", self.west_cg_cell_cycles);
+        o.push("west_comparator_bit_cycles", self.west_comparator_bit_cycles);
         o.push("north_data_toggles", self.north_data_toggles);
         o.push("north_clock_events", self.north_clock_events);
         o.push("north_sideband_toggles", self.north_sideband_toggles);
@@ -143,6 +160,7 @@ impl ActivityCounts {
         o.push("encoder_ops", self.encoder_ops);
         o.push("decoder_toggles", self.decoder_toggles);
         o.push("north_cg_cell_cycles", self.north_cg_cell_cycles);
+        o.push("north_comparator_bit_cycles", self.north_comparator_bit_cycles);
         o.push("mult_input_toggles", self.mult_input_toggles);
         o.push("active_macs", self.active_macs);
         o.push("gated_macs", self.gated_macs);
@@ -160,7 +178,17 @@ impl ConfigResult {
     pub fn to_json_value(&self) -> Json {
         let mut o = Json::object();
         o.push("config", self.config_name.as_str());
-        o.push("coding", self.config.describe());
+        // canonical --coding spec: reparsing it reproduces the stack
+        o.push("coding", self.stack.spec());
+        // full per-stream stack provenance: the ordered codec names on
+        // each edge
+        let edge_names = |e: &crate::coding::EdgeStack| {
+            Json::Arr(e.codecs().iter().map(|c| Json::from(c.name())).collect())
+        };
+        let mut stack = Json::object();
+        stack.push("west", edge_names(&self.stack.west));
+        stack.push("north", edge_names(&self.stack.north));
+        o.push("stack", stack);
         o.push("counts", self.counts.to_json_value());
         o.push("energy", self.energy.to_json_value());
         o
@@ -243,7 +271,7 @@ mod tests {
     }
 
     #[test]
-    fn sweep_doc_reads_v2_and_rejects_unknown_schemas() {
+    fn sweep_doc_reads_v3_and_rejects_unknown_schemas() {
         let report = SweepReport {
             network: "unit".into(),
             backend: "cycle".into(),
@@ -266,9 +294,9 @@ mod tests {
     fn counts_json_covers_every_ledger_field() {
         let c = ActivityCounts { cycles: 7, gated_macs: 3, ..Default::default() };
         let v = c.to_json_value();
-        // 21 ledger fields + 1 derived
+        // 23 ledger fields + 1 derived
         match &v {
-            Json::Obj(pairs) => assert_eq!(pairs.len(), 22),
+            Json::Obj(pairs) => assert_eq!(pairs.len(), 24),
             other => panic!("expected object, got {other:?}"),
         }
         assert_eq!(v.get("cycles").unwrap().as_u64(), Some(7));

@@ -4,9 +4,10 @@
 //! Built from four pieces:
 //!
 //! * [`registry`] — the typed configuration registry: one static table
-//!   ([`CONFIG_TABLE`]) is the source of truth for named coding
-//!   configurations; [`ConfigSet`] replaces hand-assembled
-//!   `Vec<(String, SaCodingConfig)>` lists everywhere.
+//!   ([`CONFIG_TABLE`]) of named **coding-stack descriptors** (each row
+//!   carries its canonical `--coding` spec string); [`ConfigSet`] holds
+//!   ordered `(name, CodingStack)` rows and accepts ad-hoc parsed
+//!   stacks alongside the registry's named ones.
 //! * [`backend`] — the [`EstimatorBackend`] trait with the two built-in
 //!   implementations ([`AnalyticBackend`], [`CycleBackend`]); analytic
 //!   vs cycle-accurate is a runtime choice (`--backend`), and alternative
@@ -52,5 +53,7 @@ mod registry;
 
 pub use self::backend::{AnalyticBackend, BackendKind, CycleBackend, EstimatorBackend};
 pub use self::core::{JobHandle, LayerData, LayerJob, SaEngine, SaEngineBuilder};
-pub use self::json::{SweepDoc, SWEEP_REPORT_SCHEMA, SWEEP_REPORT_SCHEMA_V1};
+pub use self::json::{
+    SweepDoc, SWEEP_REPORT_SCHEMA, SWEEP_REPORT_SCHEMA_V1, SWEEP_REPORT_SCHEMA_V2,
+};
 pub use self::registry::{ConfigEntry, ConfigRegistry, ConfigSet, CONFIG_TABLE};

@@ -1,14 +1,18 @@
 //! The typed configuration registry: one static table naming every
-//! coding configuration the system knows about.
+//! coding-stack configuration the system knows about.
 //!
 //! Everything that used to carry its own name list — `SaCodingConfig::
 //! by_name`, the coordinator's `paper_configs`/`ablation_configs`, the
-//! CLI usage text — now derives from [`CONFIG_TABLE`]. Adding a
-//! configuration here makes it addressable by name everywhere at once.
+//! CLI usage text — derives from [`CONFIG_TABLE`]. Since the codec-stack
+//! redesign a row is a **stack descriptor**: its canonical `--coding`
+//! spec string, parsed on demand into a [`CodingStack`]. Adding a
+//! configuration here makes it addressable by name everywhere at once —
+//! and arbitrary unnamed stacks remain reachable through
+//! [`CodingStack::parse`] / the CLI's `--coding`.
 
-use crate::coding::SaCodingConfig;
+use crate::coding::{CodingStack, SaCodingConfig};
 
-/// One row of the registry: a named, documented coding configuration.
+/// One row of the registry: a named, documented coding-stack descriptor.
 #[derive(Clone, Copy, Debug)]
 pub struct ConfigEntry {
     /// Canonical name (CLI `--config` value, report column key).
@@ -17,21 +21,35 @@ pub struct ConfigEntry {
     pub aliases: &'static [&'static str],
     /// One-line description (usage text, docs).
     pub summary: &'static str,
-    /// The configuration itself.
-    pub config: SaCodingConfig,
+    /// Canonical `--coding` spec of the stack (see `coding::stack`).
+    pub spec: &'static str,
+    /// The closed legacy struct view, where one exists. Stack-only rows
+    /// (e.g. the DDCG codec) have none — the deprecated
+    /// `SaCodingConfig::by_name` shim returns `None` for them.
+    pub legacy: Option<SaCodingConfig>,
     /// Member of the paper's two-config figure set (Figs. 4/5, headline).
     pub paper_set: bool,
     /// Member of the full ablation set.
     pub ablation_set: bool,
 }
 
-/// The single source of truth for named coding configurations.
+impl ConfigEntry {
+    /// Parse this row's spec into its coding stack. Registry specs are
+    /// validated by tests; parsing cannot fail at runtime.
+    pub fn stack(&self) -> CodingStack {
+        CodingStack::parse(self.spec)
+            .unwrap_or_else(|e| panic!("registry spec '{}': {e}", self.spec))
+    }
+}
+
+/// The single source of truth for named coding-stack configurations.
 pub const CONFIG_TABLE: &[ConfigEntry] = &[
     ConfigEntry {
         name: "baseline",
         aliases: &["conventional"],
         summary: "conventional SA, no power-saving features",
-        config: SaCodingConfig::baseline(),
+        spec: "baseline",
+        legacy: Some(SaCodingConfig::baseline()),
         paper_set: true,
         ablation_set: true,
     },
@@ -39,7 +57,8 @@ pub const CONFIG_TABLE: &[ConfigEntry] = &[
         name: "proposed",
         aliases: &[],
         summary: "mantissa BIC on weights + zero-value clock gating on inputs",
-        config: SaCodingConfig::proposed(),
+        spec: "w:bic-mantissa,i:zvcg",
+        legacy: Some(SaCodingConfig::proposed()),
         paper_set: true,
         ablation_set: true,
     },
@@ -47,7 +66,8 @@ pub const CONFIG_TABLE: &[ConfigEntry] = &[
         name: "bic-only",
         aliases: &[],
         summary: "mantissa BIC on weights, no input gating",
-        config: SaCodingConfig::bic_only(),
+        spec: "w:bic-mantissa",
+        legacy: Some(SaCodingConfig::bic_only()),
         paper_set: false,
         ablation_set: true,
     },
@@ -55,7 +75,8 @@ pub const CONFIG_TABLE: &[ConfigEntry] = &[
         name: "zvcg-only",
         aliases: &[],
         summary: "input zero-value clock gating, no weight coding",
-        config: SaCodingConfig::zvcg_only(),
+        spec: "i:zvcg",
+        legacy: Some(SaCodingConfig::zvcg_only()),
         paper_set: false,
         ablation_set: true,
     },
@@ -63,7 +84,8 @@ pub const CONFIG_TABLE: &[ConfigEntry] = &[
         name: "bic-full",
         aliases: &[],
         summary: "full-bus BIC on weights (16 lines, one decision)",
-        config: SaCodingConfig::bic_full(),
+        spec: "w:bic-full,i:zvcg",
+        legacy: Some(SaCodingConfig::bic_full()),
         paper_set: false,
         ablation_set: true,
     },
@@ -71,7 +93,8 @@ pub const CONFIG_TABLE: &[ConfigEntry] = &[
         name: "bic-segmented",
         aliases: &[],
         summary: "field-segmented BIC on weights",
-        config: SaCodingConfig::bic_segmented(),
+        spec: "w:bic-segmented,i:zvcg",
+        legacy: Some(SaCodingConfig::bic_segmented()),
         paper_set: false,
         ablation_set: true,
     },
@@ -79,7 +102,18 @@ pub const CONFIG_TABLE: &[ConfigEntry] = &[
         name: "bic-exponent",
         aliases: &[],
         summary: "exponent-only BIC on weights (Fig. 2 counter-case)",
-        config: SaCodingConfig::bic_exponent(),
+        spec: "w:bic-exponent,i:zvcg",
+        legacy: Some(SaCodingConfig::bic_exponent()),
+        paper_set: false,
+        ablation_set: true,
+    },
+    ConfigEntry {
+        name: "ddcg16-g4",
+        aliases: &["ddcg"],
+        summary: "data-driven clock gating on both streams, 4-bit groups \
+                  (the paper's §III-A dismissal, quantified)",
+        spec: "w:ddcg16-g4,i:ddcg16-g4",
+        legacy: None,
         paper_set: false,
         ablation_set: true,
     },
@@ -101,6 +135,31 @@ impl ConfigRegistry {
             .find(|e| e.name == name || e.aliases.contains(&name))
     }
 
+    /// Resolve a name *or* a `--coding` spec to its canonical
+    /// `(column name, stack)` pair: registry names win (canonicalizing
+    /// aliases to the row name), anything else is parsed by the spec
+    /// grammar and named by its canonical spec string. This is the ONE
+    /// canonicalization rule — the CLI's `--coding` handling and
+    /// [`ConfigSet::from_names`] both route through it. The error
+    /// carries both vocabularies.
+    pub fn resolve(s: &str) -> Result<(String, CodingStack), String> {
+        if let Some(e) = Self::lookup(s) {
+            return Ok((e.name.to_string(), e.stack()));
+        }
+        let stack = CodingStack::parse(s).map_err(|e| {
+            format!(
+                "'{s}' is neither a registered config ({}) nor a valid coding spec: {e}",
+                Self::name_list()
+            )
+        })?;
+        Ok((stack.spec(), stack))
+    }
+
+    /// [`ConfigRegistry::resolve`], stack only.
+    pub fn stack_by_name_or_spec(s: &str) -> Result<CodingStack, String> {
+        Self::resolve(s).map(|(_, stack)| stack)
+    }
+
     /// Canonical names, in table order.
     pub fn names() -> impl Iterator<Item = &'static str> {
         CONFIG_TABLE.iter().map(|e| e.name)
@@ -112,16 +171,17 @@ impl ConfigRegistry {
     }
 }
 
-/// An ordered, named set of coding configurations — the typed
-/// replacement for hand-assembled `Vec<(String, SaCodingConfig)>` lists.
+/// An ordered, named set of coding stacks — the typed replacement for
+/// hand-assembled `Vec<(String, ...)>` lists.
 ///
 /// Sets are built from the registry ([`ConfigSet::paper`],
 /// [`ConfigSet::ablation`], [`ConfigSet::from_names`]) and may be
-/// extended with ad-hoc experimental configurations via
-/// [`ConfigSet::with`] (e.g. the pruning extension's `proposed+w-zvcg`).
+/// extended with ad-hoc experimental stacks via [`ConfigSet::with`]
+/// (which accepts a [`CodingStack`] or a legacy `SaCodingConfig`, e.g.
+/// the pruning extension's `proposed+w-zvcg`).
 #[derive(Clone, Debug, Default)]
 pub struct ConfigSet {
-    entries: Vec<(String, SaCodingConfig)>,
+    entries: Vec<(String, CodingStack)>,
 }
 
 impl ConfigSet {
@@ -150,57 +210,57 @@ impl ConfigSet {
             entries: CONFIG_TABLE
                 .iter()
                 .filter(|e| pred(e))
-                .map(|e| (e.name.to_string(), e.config))
+                .map(|e| (e.name.to_string(), e.stack()))
                 .collect(),
         }
     }
 
-    /// Build a set from registry names. Errors on the first unknown name
-    /// with the valid list.
+    /// Build a set from registry names or `--coding` specs. Errors on
+    /// the first unknown entry with both vocabularies.
     pub fn from_names<'a, I: IntoIterator<Item = &'a str>>(
         names: I,
     ) -> Result<Self, String> {
         let mut set = ConfigSet::empty();
         for name in names {
-            let entry = ConfigRegistry::lookup(name).ok_or_else(|| {
-                format!(
-                    "unknown config '{name}'; registered: {}",
-                    ConfigRegistry::name_list()
-                )
-            })?;
-            set = set.with(entry.name, entry.config);
+            let (canonical, stack) = ConfigRegistry::resolve(name)?;
+            set = set.with(canonical, stack);
         }
         Ok(set)
     }
 
-    /// One named configuration from the registry.
+    /// One named configuration from the registry (or a spec).
     pub fn single(name: &str) -> Result<Self, String> {
         Self::from_names([name])
     }
 
-    /// Append a (possibly unregistered, experimental) named
-    /// configuration. Panics on duplicate names — result lookup is by
-    /// name, so duplicates would silently shadow each other.
-    pub fn with(mut self, name: impl Into<String>, config: SaCodingConfig) -> Self {
+    /// Append a (possibly unregistered, experimental) named stack.
+    /// Panics on duplicate names — result lookup is by name, so
+    /// duplicates would silently shadow each other.
+    pub fn with(mut self, name: impl Into<String>, stack: impl Into<CodingStack>) -> Self {
         let name = name.into();
         assert!(
             self.get(&name).is_none(),
             "duplicate config name '{name}' in ConfigSet"
         );
-        self.entries.push((name, config));
+        self.entries.push((name, stack.into()));
         self
     }
 
-    /// Adopt a legacy name/config list verbatim — no duplicate-name
-    /// check, because the deprecated shims must accept whatever their
-    /// pre-registry callers passed (duplicates produced duplicate report
-    /// columns, not errors).
+    /// Adopt a legacy name/config list verbatim, lowering each closed
+    /// struct to its stack — no duplicate-name check, because the
+    /// deprecated shims must accept whatever their pre-registry callers
+    /// passed (duplicates produced duplicate report columns, not errors).
     pub(crate) fn from_pairs(entries: Vec<(String, SaCodingConfig)>) -> Self {
-        ConfigSet { entries }
+        ConfigSet {
+            entries: entries
+                .into_iter()
+                .map(|(n, c)| (n, c.stack()))
+                .collect(),
+        }
     }
 
-    /// Configuration lookup by name within this set.
-    pub fn get(&self, name: &str) -> Option<&SaCodingConfig> {
+    /// Stack lookup by name within this set.
+    pub fn get(&self, name: &str) -> Option<&CodingStack> {
         self.entries
             .iter()
             .find(|(n, _)| n == name)
@@ -220,17 +280,17 @@ impl ConfigSet {
         self.entries.is_empty()
     }
 
-    pub fn iter(&self) -> impl Iterator<Item = &(String, SaCodingConfig)> {
+    pub fn iter(&self) -> impl Iterator<Item = &(String, CodingStack)> {
         self.entries.iter()
     }
 
-    /// View as the legacy slice shape consumed by the analysis layer.
-    pub fn as_slice(&self) -> &[(String, SaCodingConfig)] {
+    /// View as the slice shape consumed by the analysis layer.
+    pub fn as_slice(&self) -> &[(String, CodingStack)] {
         &self.entries
     }
 
-    /// Convert into the legacy owned shape (deprecated-shim interop).
-    pub fn into_vec(self) -> Vec<(String, SaCodingConfig)> {
+    /// Convert into the owned pair list.
+    pub fn into_vec(self) -> Vec<(String, CodingStack)> {
         self.entries
     }
 }
@@ -240,20 +300,33 @@ mod tests {
     use super::*;
 
     #[test]
+    fn every_registry_spec_parses_to_its_stack() {
+        for e in ConfigRegistry::entries() {
+            let stack = e.stack(); // panics on an invalid spec
+            assert_eq!(stack.spec(), e.spec, "{} spec is canonical", e.name);
+            // rows with a legacy view lower to the same stack
+            if let Some(legacy) = e.legacy {
+                assert_eq!(legacy.stack(), stack, "{}", e.name);
+                assert_eq!(legacy.describe(), e.spec, "{}", e.name);
+            }
+        }
+    }
+
+    #[test]
     fn registry_matches_legacy_by_name() {
         // The legacy lookup delegates here; both views must agree for
-        // every canonical name and alias.
+        // every canonical name and alias that has a closed-struct form.
         for e in ConfigRegistry::entries() {
-            assert_eq!(SaCodingConfig::by_name(e.name), Some(e.config), "{}", e.name);
+            assert_eq!(SaCodingConfig::by_name(e.name), e.legacy, "{}", e.name);
             for alias in e.aliases {
-                assert_eq!(
-                    SaCodingConfig::by_name(alias),
-                    Some(e.config),
-                    "alias {alias}"
-                );
+                assert_eq!(SaCodingConfig::by_name(alias), e.legacy, "alias {alias}");
             }
         }
         assert!(ConfigRegistry::lookup("bogus").is_none());
+        // stack-only rows are addressable by name, just not as structs
+        assert!(ConfigRegistry::lookup("ddcg16-g4").is_some());
+        assert!(ConfigRegistry::lookup("ddcg").is_some());
+        assert!(SaCodingConfig::by_name("ddcg16-g4").is_none());
     }
 
     #[test]
@@ -264,15 +337,44 @@ mod tests {
         assert_eq!(ablation.len(), CONFIG_TABLE.len());
         assert_eq!(ablation.names()[0], "baseline");
         assert!(ablation.get("bic-exponent").is_some());
+        assert!(ablation.get("ddcg16-g4").is_some());
     }
 
     #[test]
-    fn from_names_validates() {
+    fn from_names_accepts_registry_names_and_specs() {
         let set = ConfigSet::from_names(["proposed", "conventional"]).unwrap();
         // aliases canonicalize
         assert_eq!(set.names(), ["proposed", "baseline"]);
+        // raw specs are first-class and canonicalize to their spec string
+        let set = ConfigSet::from_names(["w:zvcg+bic-full"]).unwrap();
+        assert_eq!(set.names(), ["w:zvcg+bic-full"]);
         let err = ConfigSet::from_names(["nope"]).unwrap_err();
         assert!(err.contains("nope") && err.contains("baseline"), "{err}");
+    }
+
+    #[test]
+    fn stack_by_name_or_spec_resolves_both() {
+        let by_name = ConfigRegistry::stack_by_name_or_spec("proposed").unwrap();
+        assert_eq!(by_name.spec(), "w:bic-mantissa,i:zvcg");
+        let by_spec =
+            ConfigRegistry::stack_by_name_or_spec("w:bic-mantissa,i:zvcg").unwrap();
+        assert_eq!(by_name, by_spec);
+        let err = ConfigRegistry::stack_by_name_or_spec("w:bic-mantisa").unwrap_err();
+        assert!(err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn resolve_canonicalizes_names_aliases_and_specs() {
+        // registry names and aliases → the row's canonical column name
+        let (n, s) = ConfigRegistry::resolve("ddcg").unwrap();
+        assert_eq!(n, "ddcg16-g4");
+        assert_eq!(s.spec(), "w:ddcg16-g4,i:ddcg16-g4");
+        let (n, _) = ConfigRegistry::resolve("conventional").unwrap();
+        assert_eq!(n, "baseline");
+        // raw specs → their canonical spec string
+        let (n, s) = ConfigRegistry::resolve("weights:zvcg+bic-full").unwrap();
+        assert_eq!(n, "w:zvcg+bic-full");
+        assert_eq!(s.spec(), n);
     }
 
     #[test]
@@ -282,9 +384,9 @@ mod tests {
             SaCodingConfig { weight_zvcg: true, ..SaCodingConfig::proposed() },
         );
         assert_eq!(set.len(), 3);
-        assert!(set.get("proposed+w-zvcg").unwrap().weight_zvcg);
+        assert!(set.get("proposed+w-zvcg").unwrap().north.gates());
         let dup = std::panic::catch_unwind(|| {
-            ConfigSet::paper().with("baseline", SaCodingConfig::baseline())
+            ConfigSet::paper().with("baseline", CodingStack::baseline())
         });
         assert!(dup.is_err(), "duplicate name must panic");
     }

@@ -14,7 +14,9 @@
 //! Module map (see DESIGN.md §4 for the full inventory):
 //! * [`bf16`] — bit-exact bfloat16 arithmetic.
 //! * [`activity`] — Hamming/toggle accounting, the event ledger.
-//! * [`coding`] — BIC variants + zero-value clock gating.
+//! * [`coding`] — the composable `StreamCodec` API: per-edge codec
+//!   stacks (`CodingStack`, `--coding` spec grammar) with BIC variants,
+//!   zero-value clock gating and data-driven clock gating built in.
 //! * [`power`] — energy + area models (45 nm-calibrated).
 //! * [`sa`] — the systolic array: cycle-accurate sim + analytic model.
 //! * [`workload`] — CNN layer tables (ResNet50, MobileNet), generators,

@@ -20,7 +20,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use sa_lowpower::coding::SaCodingConfig;
+use sa_lowpower::coding::CodingStack;
 use sa_lowpower::coordinator::{
     synthetic_image, AnalysisOptions, InferenceServer, SweepReport, TinycnnParams,
 };
@@ -82,6 +82,9 @@ fn usage() -> String {
   simulate | e2e | trace                            drivers
   ddcg | pruning | sweep-size | transformer         extension experiments
   --config   one of: {configs}
+  --coding   a composed codec-stack spec, e.g. 'w:zvcg+bic-mantissa,i:zvcg'
+             (grammar: <edge>:<codec>+<codec>,... — edges w|i; codecs zvcg,
+             bic-mantissa|full|segmented|exponent[-mt], ddcg16-g<N>)
   --backend  one of: {backends}   (estimator: analytic model vs cycle sim)
   --dataflow one of: {dataflows}   (register movement: weight- vs output-stationary)
   --net      one of: {nets} (where applicable)
@@ -123,12 +126,32 @@ fn dataflow_from(args: &Args) -> Result<Dataflow> {
     }
 }
 
+/// Resolve `--coding` (a registry name or a spec-grammar stack) and
+/// append it to the base config set as an extra named column, so every
+/// sweep/figure command can carry an arbitrary composed stack next to
+/// the registry rows.
+fn configs_from(args: &Args, base: ConfigSet) -> Result<ConfigSet> {
+    match args.get("coding") {
+        None => Ok(base),
+        Some(spec) => {
+            let (name, stack) =
+                ConfigRegistry::resolve(spec).map_err(|e| anyhow!(e))?;
+            // dedup by stack, not just name: a raw spec equal to an
+            // existing column's design must not double the sweep work
+            if base.iter().any(|(n, s)| *n == name || *s == stack) {
+                return Ok(base);
+            }
+            Ok(base.with(name, stack))
+        }
+    }
+}
+
 /// One configured engine per invocation: options, configs, backend and
 /// worker pool all come from the command line.
 fn engine_from(args: &Args, configs: ConfigSet) -> Result<SaEngine> {
     Ok(SaEngine::builder()
         .options(opts_from(args)?)
-        .configs(configs)
+        .configs(configs_from(args, configs)?)
         .backend(backend_from(args)?)
         .threads(threads_from(args)?)
         .build())
@@ -186,7 +209,7 @@ fn fig2(args: &Args) -> Result<()> {
 fn fig45(args: &Args, net_name: &str) -> Result<()> {
     args.validate(&[
         "tiles", "threads", "seed", "csv-dir", "json-dir", "dw-channels", "backend",
-        "dataflow",
+        "dataflow", "coding",
     ])
     .map_err(|e| anyhow!(e))?;
     let engine = engine_from(args, ConfigSet::paper())?;
@@ -221,7 +244,7 @@ fn fig45(args: &Args, net_name: &str) -> Result<()> {
 fn headline(args: &Args) -> Result<()> {
     args.validate(&[
         "tiles", "threads", "seed", "csv-dir", "json-dir", "dw-channels", "backend",
-        "dataflow",
+        "dataflow", "coding",
     ])
     .map_err(|e| anyhow!(e))?;
     let engine = engine_from(args, ConfigSet::paper())?;
@@ -239,7 +262,7 @@ fn headline(args: &Args) -> Result<()> {
 fn ablation(args: &Args) -> Result<()> {
     args.validate(&[
         "net", "tiles", "threads", "seed", "csv-dir", "json-dir", "dw-channels",
-        "backend", "dataflow",
+        "backend", "dataflow", "coding",
     ])
     .map_err(|e| anyhow!(e))?;
     let engine = engine_from(args, ConfigSet::ablation())?;
@@ -259,14 +282,18 @@ fn ablation(args: &Args) -> Result<()> {
 }
 
 fn area(args: &Args) -> Result<()> {
-    args.validate(&["rows", "cols"]).map_err(|e| anyhow!(e))?;
+    args.validate(&["rows", "cols", "config", "coding"]).map_err(|e| anyhow!(e))?;
     let rows = args.get_parse("rows", 16usize).map_err(|e| anyhow!(e))?;
     let cols = args.get_parse("cols", 16usize).map_err(|e| anyhow!(e))?;
+    let stack = stack_from(args, "proposed")?;
     let model = AreaModel::default();
-    println!("== Area overhead (paper §IV: 5.7 % at 16x16, shrinking with size) ==");
+    println!(
+        "== Area overhead of '{stack}' (paper §IV: 5.7 % at 16x16 for the \
+         proposed stack, shrinking with size) =="
+    );
     let mut t = Table::new(["array", "baseline_GE", "overhead_GE", "overhead_%"]);
     for n in [4usize, 8, 16, 32, 64, 128] {
-        let a = model.area(n, n, &SaCodingConfig::proposed());
+        let a = model.area(n, n, &stack);
         t.row([
             format!("{n}x{n}"),
             format!("{:.0}", a.baseline_ge),
@@ -274,7 +301,7 @@ fn area(args: &Args) -> Result<()> {
             format!("{:.2}", a.overhead_pct()),
         ]);
     }
-    let custom = model.area(rows, cols, &SaCodingConfig::proposed());
+    let custom = model.area(rows, cols, &stack);
     t.row([
         format!("{rows}x{cols} (requested)"),
         format!("{:.0}", custom.baseline_ge),
@@ -285,17 +312,25 @@ fn area(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The stack a single-stack command runs under: `--coding <spec>` wins,
+/// else `--config <name-or-spec>`, else the given default registry row.
+fn stack_from(args: &Args, default_name: &str) -> Result<CodingStack> {
+    let chosen = args.get("coding").or_else(|| args.get("config"));
+    let s = chosen.unwrap_or(default_name);
+    ConfigRegistry::stack_by_name_or_spec(s).map_err(|e| anyhow!(e))
+}
+
 fn simulate(args: &Args) -> Result<()> {
-    args.validate(&["m", "k", "n", "sparsity", "config", "seed", "backend", "dataflow"])
-        .map_err(|e| anyhow!(e))?;
+    args.validate(&[
+        "m", "k", "n", "sparsity", "config", "coding", "seed", "backend", "dataflow",
+    ])
+    .map_err(|e| anyhow!(e))?;
     let m = args.get_parse("m", 16usize).map_err(|e| anyhow!(e))?;
     let k = args.get_parse("k", 64usize).map_err(|e| anyhow!(e))?;
     let n = args.get_parse("n", 16usize).map_err(|e| anyhow!(e))?;
     let sp = args.get_parse("sparsity", 0.5f64).map_err(|e| anyhow!(e))?;
     let seed = args.get_parse("seed", 1u64).map_err(|e| anyhow!(e))?;
-    let cfg_name = args.get_or("config", "proposed");
-    let cfg = SaCodingConfig::by_name(cfg_name)
-        .ok_or_else(|| anyhow!("unknown config '{cfg_name}'"))?;
+    let stack = stack_from(args, "proposed")?;
 
     let mut rng = Rng64::new(seed);
     let a: Vec<f32> = (0..m * k)
@@ -307,17 +342,17 @@ fn simulate(args: &Args) -> Result<()> {
     let kind = backend_from(args)?;
     let dataflow = dataflow_from(args)?;
     println!(
-        "== simulate: {m}x{k}x{n} tile, sparsity {sp}, config {cfg_name}, \
+        "== simulate: {m}x{k}x{n} tile, sparsity {sp}, stack {stack}, \
          backend {}, dataflow {dataflow} ==",
         kind.name()
     );
     // Run both backends: the selected one produces the report, the other
     // cross-checks it (the backend contract says counts are bit-exact).
     let t0 = std::time::Instant::now();
-    let cycle = CycleBackend.estimate(&tile, &cfg, dataflow);
+    let cycle = CycleBackend.estimate(&tile, &stack, dataflow);
     let t_cycle = t0.elapsed();
     let t1 = std::time::Instant::now();
-    let fast = AnalyticBackend.estimate(&tile, &cfg, dataflow);
+    let fast = AnalyticBackend.estimate(&tile, &stack, dataflow);
     let t_fast = t1.elapsed();
     assert_eq!(cycle, fast, "analytic model must equal cycle sim");
     println!("cycle-accurate sim: {t_cycle:?}; analytic model: {t_fast:?} (identical counts)");
@@ -326,7 +361,7 @@ fn simulate(args: &Args) -> Result<()> {
         BackendKind::Cycle => cycle,
     };
     println!("{counts:#?}");
-    let sa = SaConfig::default().with_coding(cfg);
+    let sa = SaConfig::default().with_coding(stack);
     let e = sa.energy.energy(&counts);
     println!(
         "energy: total {:.3} nJ  (streaming {:.3} nJ, compute {:.3} nJ)",
@@ -341,17 +376,20 @@ fn simulate(args: &Args) -> Result<()> {
 /// Debug driver: render a lane waveform (what the edge logic drives onto
 /// one stream's bus, slot by slot).
 fn trace(args: &Args) -> Result<()> {
-    args.validate(&["k", "sparsity", "seed", "side"]).map_err(|e| anyhow!(e))?;
+    args.validate(&["k", "sparsity", "seed", "side", "coding"])
+        .map_err(|e| anyhow!(e))?;
     let k = args.get_parse("k", 24usize).map_err(|e| anyhow!(e))?;
     let sp = args.get_parse("sparsity", 0.4f64).map_err(|e| anyhow!(e))?;
     let seed = args.get_parse("seed", 1u64).map_err(|e| anyhow!(e))?;
     let side = args.get_or("side", "west");
     use sa_lowpower::bf16::Bf16;
-    use sa_lowpower::coding::{BicMode, BicPolicy};
+    use sa_lowpower::coding::EdgeStack;
     use sa_lowpower::sa::{render_trace, trace_lane};
 
     let mut rng = Rng64::new(seed);
-    let (stream, zvcg, bic): (Vec<Bf16>, bool, BicMode) = match side {
+    // Per-side defaults follow the paper's proposed assignment; --coding
+    // takes a single-edge stack spec (e.g. 'zvcg+bic-mantissa').
+    let (stream, default_stack): (Vec<Bf16>, &str) = match side {
         "west" => (
             (0..k)
                 .map(|_| {
@@ -362,23 +400,41 @@ fn trace(args: &Args) -> Result<()> {
                     }
                 })
                 .collect(),
-            true,
-            BicMode::None,
+            "zvcg",
         ),
         "north" => (
             (0..k)
                 .map(|_| Bf16::from_f32((rng.normal() * 0.08).clamp(-1.0, 1.0) as f32))
                 .collect(),
-            false,
-            BicMode::MantissaOnly,
+            "bic-mantissa",
         ),
         other => bail!("--side must be west|north, got '{other}'"),
     };
-    println!(
-        "== {side} lane trace: {} (K={k}) ==",
-        if side == "west" { "ZVCG on ReLU inputs" } else { "mantissa BIC on weights" }
-    );
-    let rows = trace_lane(&stream, zvcg, bic, BicPolicy::Classic);
+    // --coding accepts either a bare single-edge stack
+    // ('zvcg+bic-mantissa') or the full spec grammar / a registry name,
+    // from which the --side edge is selected.
+    let spec = args.get_or("coding", default_stack);
+    let edge = if spec.contains(':') || ConfigRegistry::lookup(spec).is_some() {
+        let full =
+            ConfigRegistry::stack_by_name_or_spec(spec).map_err(|e| anyhow!(e))?;
+        let picked = if side == "west" {
+            full.west.clone()
+        } else {
+            full.north.clone()
+        };
+        if picked.is_empty() && full.has_overhead() {
+            let other = if side == "west" { "north" } else { "west" };
+            bail!(
+                "--coding '{spec}' does not configure the {side} edge; \
+                 pass --side {other} or a bare edge stack (e.g. 'zvcg')"
+            );
+        }
+        picked
+    } else {
+        EdgeStack::parse(spec).map_err(|e| anyhow!(e))?
+    };
+    println!("== {side} lane trace: stack '{}' (K={k}) ==", edge.spec());
+    let rows = trace_lane(&stream, &edge);
     print!("{}", render_trace(&rows));
     Ok(())
 }
@@ -433,7 +489,9 @@ fn ddcg(args: &Args) -> Result<()> {
     println!(
         "\ncoarse groups never gate (values always change); fine groups gate\n\
          but the per-bit comparators cost more than the gated clocks save —\n\
-         the paper's rationale for BIC + zero-value gating instead."
+         the paper's rationale for BIC + zero-value gating instead.\n\
+         (Full-engine view: --config ddcg16-g4, or --coding 'w:ddcg16-g<N>,\
+i:ddcg16-g<N>' on simulate/ablation.)"
     );
     Ok(())
 }
@@ -461,13 +519,14 @@ fn pruning(args: &Args) -> Result<()> {
         .step_by(7)
         .collect();
 
-    // The paper set plus the weight-gating extension config, routed
-    // through one engine instance.
+    // The paper set plus the weight-gating extension stack (a composed
+    // spec the closed legacy struct also expressed as weight_zvcg=true),
+    // routed through one engine instance.
     let engine = SaEngine::builder()
         .options(opts)
         .configs(ConfigSet::paper().with(
             "proposed+w-zvcg",
-            SaCodingConfig { weight_zvcg: true, ..SaCodingConfig::proposed() },
+            CodingStack::parse("w:zvcg+bic-mantissa,i:zvcg").map_err(|e| anyhow!(e))?,
         ))
         .threads(1)
         .build();
@@ -541,7 +600,7 @@ fn sweep_size(args: &Args) -> Result<()> {
             prop += rep.energy_of("proposed").unwrap().total();
         }
         let area = AreaModel::default()
-            .area(dim, dim, &SaCodingConfig::proposed())
+            .area(dim, dim, &ConfigRegistry::lookup("proposed").unwrap().stack())
             .overhead_pct();
         t.row([
             format!("{dim}x{dim}"),
@@ -560,6 +619,7 @@ fn sweep_size(args: &Args) -> Result<()> {
 fn transformer(args: &Args) -> Result<()> {
     args.validate(&[
         "tiles", "threads", "seed", "csv-dir", "json-dir", "dw-channels", "backend",
+        "coding",
     ])
     .map_err(|e| anyhow!(e))?;
     let net = Network::by_name("transformer").unwrap();
@@ -574,7 +634,7 @@ fn transformer(args: &Args) -> Result<()> {
         let engine = SaEngine::builder()
             .options(opts_from(args)?)
             .dataflow(*df)
-            .configs(ConfigSet::paper())
+            .configs(configs_from(args, ConfigSet::paper())?)
             .backend(backend_from(args)?)
             .threads(threads_from(args)?)
             .build();

@@ -6,11 +6,18 @@
 //!   2. the percentage *decreases* with array size, because encoders and
 //!      zero-detectors scale linearly with N while PEs scale with N².
 //!
+//! The overhead side is driven by the codec API: every
+//! [`crate::coding::StreamCodec`] publishes a structural
+//! [`AreaFootprint`] (edge encoders/detectors per lane, XOR bits /
+//! sideband FFs / ICGs / comparator bits per PE), which this model
+//! prices with its GE constants — so a new codec carries its own area
+//! cost without touching this file.
+//!
 //! GE counts follow standard-cell intuition for a compact bf16 PE
 //! (8×8-significand multiplier + wide accumulate + pipeline registers),
 //! calibrated so the 16×16 ratio lands at the paper's 5.7 %.
 
-use crate::coding::{BicMode, SaCodingConfig};
+use crate::coding::{CodingStack, EdgeStack};
 
 /// Gate-equivalent model of one SA instance.
 #[derive(Clone, Debug)]
@@ -31,6 +38,8 @@ pub struct AreaModel {
     pub cg_cell_ge: f64,
     /// GE of one sideband pipeline flip-flop.
     pub sideband_ff_ge: f64,
+    /// GE of one DDCG register comparator bit (XNOR + OR-tree share).
+    pub comparator_ge_per_bit: f64,
 }
 
 impl Default for AreaModel {
@@ -46,11 +55,12 @@ impl Default for AreaModel {
             // amortized per-register share.
             cg_cell_ge: 2.0,
             sideband_ff_ge: 4.5,
+            comparator_ge_per_bit: 1.5,
         }
     }
 }
 
-/// Area report for a rows×cols SA under a coding configuration.
+/// Area report for a rows×cols SA under a coding stack.
 #[derive(Clone, Debug, PartialEq)]
 pub struct AreaReport {
     pub baseline_ge: f64,
@@ -69,49 +79,40 @@ impl AreaReport {
 }
 
 impl AreaModel {
-    /// Bits covered by a BIC mode (mantissa=7, full=16, ...).
-    fn covered_bits(mode: BicMode) -> f64 {
-        mode.segments().iter().map(|m| m.count_ones() as f64).sum()
+    /// Overhead GE of one edge's codec stack: `lanes` instances of each
+    /// codec's edge logic plus `pes` instances of its per-PE logic.
+    fn edge_overhead_ge(&self, lanes: f64, pes: f64, edge: &EdgeStack) -> f64 {
+        edge.codecs()
+            .iter()
+            .map(|c| {
+                let fp = c.area();
+                lanes
+                    * (fp.edge_encoders as f64 * self.encoder_ge_fixed
+                        + fp.edge_encoder_bits as f64 * self.encoder_ge_per_bit
+                        + fp.edge_zero_detectors as f64 * self.zero_detector_ge)
+                    + pes
+                        * (fp.pe_xor_bits as f64 * self.xor_ge_per_bit
+                            + fp.pe_sideband_ffs as f64 * self.sideband_ff_ge
+                            + fp.pe_cg_cells as f64 * self.cg_cell_ge
+                            + fp.pe_comparator_bits as f64
+                                * self.comparator_ge_per_bit)
+            })
+            .sum()
     }
 
-    /// Evaluate area of a rows×cols SA with the given coding config.
-    pub fn area(&self, rows: usize, cols: usize, cfg: &SaCodingConfig) -> AreaReport {
+    /// Evaluate area of a rows×cols SA with the given coding stack.
+    /// West codecs are instantiated once per row, North codecs once per
+    /// column; per-PE logic scales with rows×cols.
+    pub fn area(
+        &self,
+        rows: usize,
+        cols: usize,
+        stack: &CodingStack,
+    ) -> AreaReport {
         let pes = (rows * cols) as f64;
         let baseline = pes * (self.pe_datapath_ge + self.pe_regs_ge);
-
-        let mut overhead = 0.0;
-
-        // Weight-side BIC: one encoder per column, XOR recovery + inv
-        // sideband FF + decode XORs in every PE.
-        if cfg.weight_bic != BicMode::None {
-            let bits = Self::covered_bits(cfg.weight_bic);
-            let lines = cfg.weight_bic.inv_lines() as f64;
-            overhead += cols as f64
-                * (self.encoder_ge_fixed + bits * self.encoder_ge_per_bit);
-            overhead += pes
-                * (bits * self.xor_ge_per_bit + lines * self.sideband_ff_ge);
-        }
-        // Input-side BIC (ablation): same structure per row.
-        if cfg.input_bic != BicMode::None {
-            let bits = Self::covered_bits(cfg.input_bic);
-            let lines = cfg.input_bic.inv_lines() as f64;
-            overhead += rows as f64
-                * (self.encoder_ge_fixed + bits * self.encoder_ge_per_bit);
-            overhead += pes
-                * (bits * self.xor_ge_per_bit + lines * self.sideband_ff_ge);
-        }
-        // Input ZVCG: detector per row, per-PE is-zero sideband FF +
-        // clock-gate cells on the input register and the accumulator.
-        if cfg.input_zvcg {
-            overhead += rows as f64 * self.zero_detector_ge;
-            overhead += pes * (self.sideband_ff_ge + 2.0 * self.cg_cell_ge);
-        }
-        // Weight ZVCG (ablation): detector per column, mirror structure.
-        if cfg.weight_zvcg {
-            overhead += cols as f64 * self.zero_detector_ge;
-            overhead += pes * (self.sideband_ff_ge + 2.0 * self.cg_cell_ge);
-        }
-
+        let overhead = self.edge_overhead_ge(rows as f64, pes, &stack.west)
+            + self.edge_overhead_ge(cols as f64, pes, &stack.north);
         AreaReport { baseline_ge: baseline, overhead_ge: overhead }
     }
 }
@@ -119,10 +120,15 @@ impl AreaModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::SaCodingConfig;
+
+    fn proposed() -> CodingStack {
+        SaCodingConfig::proposed().stack()
+    }
 
     #[test]
     fn baseline_has_zero_overhead() {
-        let a = AreaModel::default().area(16, 16, &SaCodingConfig::baseline());
+        let a = AreaModel::default().area(16, 16, &CodingStack::baseline());
         assert_eq!(a.overhead_ge, 0.0);
         assert!(a.baseline_ge > 0.0);
     }
@@ -130,7 +136,7 @@ mod tests {
     #[test]
     fn proposed_overhead_matches_paper_at_16x16() {
         // Paper §IV: "the hardware area overhead ... is 5.7 %".
-        let a = AreaModel::default().area(16, 16, &SaCodingConfig::proposed());
+        let a = AreaModel::default().area(16, 16, &proposed());
         let pct = a.overhead_pct();
         assert!(
             (pct - 5.7).abs() < 0.4,
@@ -142,10 +148,10 @@ mod tests {
     fn overhead_pct_decreases_with_array_size() {
         // Paper §IV: encoders scale linearly, PEs quadratically.
         let m = AreaModel::default();
-        let cfg = SaCodingConfig::proposed();
+        let stack = proposed();
         let mut prev = f64::MAX;
         for n in [4usize, 8, 16, 32, 64, 128] {
-            let pct = m.area(n, n, &cfg).overhead_pct();
+            let pct = m.area(n, n, &stack).overhead_pct();
             assert!(pct < prev, "overhead must shrink: {pct} at {n}");
             prev = pct;
         }
@@ -154,8 +160,8 @@ mod tests {
     #[test]
     fn bic_full_costs_more_than_mantissa_only() {
         let m = AreaModel::default();
-        let a_man = m.area(16, 16, &SaCodingConfig::proposed());
-        let full = SaCodingConfig::by_name("bic-full").unwrap();
+        let a_man = m.area(16, 16, &proposed());
+        let full = SaCodingConfig::bic_full().stack();
         let a_full = m.area(16, 16, &full);
         assert!(a_full.overhead_ge > a_man.overhead_ge);
     }
@@ -163,9 +169,39 @@ mod tests {
     #[test]
     fn overheads_compose() {
         let m = AreaModel::default();
-        let bic = m.area(16, 16, &SaCodingConfig::bic_only()).overhead_ge;
-        let zvcg = m.area(16, 16, &SaCodingConfig::zvcg_only()).overhead_ge;
-        let both = m.area(16, 16, &SaCodingConfig::proposed()).overhead_ge;
+        let bic = m.area(16, 16, &SaCodingConfig::bic_only().stack()).overhead_ge;
+        let zvcg =
+            m.area(16, 16, &SaCodingConfig::zvcg_only().stack()).overhead_ge;
+        let both = m.area(16, 16, &proposed()).overhead_ge;
         assert!((both - (bic + zvcg)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn legacy_lowering_prices_like_the_closed_struct_did() {
+        // The exact pre-stack formula for the proposed design:
+        //   cols·(fixed + 7·per_bit) + pes·(7·xor + 1·ff)   [weight BIC]
+        // + rows·detector + pes·(ff + 2·icg)                [input ZVCG]
+        let m = AreaModel::default();
+        let (rows, cols) = (16usize, 16usize);
+        let pes = (rows * cols) as f64;
+        let want = cols as f64 * (m.encoder_ge_fixed + 7.0 * m.encoder_ge_per_bit)
+            + pes * (7.0 * m.xor_ge_per_bit + m.sideband_ff_ge)
+            + rows as f64 * m.zero_detector_ge
+            + pes * (m.sideband_ff_ge + 2.0 * m.cg_cell_ge);
+        let got = m.area(rows, cols, &proposed()).overhead_ge;
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn ddcg_area_scales_with_group_count() {
+        let m = AreaModel::default();
+        let coarse = CodingStack::parse("w:ddcg16-g16,i:ddcg16-g16").unwrap();
+        let fine = CodingStack::parse("w:ddcg16-g1,i:ddcg16-g1").unwrap();
+        let a_coarse = m.area(16, 16, &coarse).overhead_ge;
+        let a_fine = m.area(16, 16, &fine).overhead_ge;
+        assert!(a_fine > a_coarse, "more ICGs at finer groups");
+        // comparators are full-width either way; only ICG count differs
+        let pes = 256.0;
+        assert!((a_fine - a_coarse - pes * 15.0 * m.cg_cell_ge * 2.0).abs() < 1e-9);
     }
 }

@@ -24,6 +24,9 @@ pub struct EnergyModel {
     pub e_cg_cell: f64,
     /// Zero-detector evaluation (16-bit NOR tree) per value.
     pub e_zero_detect: f64,
+    /// DDCG register comparator energy per compared bit per load
+    /// (XNOR + OR-tree share; see `coding::DdcgCodec`).
+    pub e_ddcg_cmp_bit: f64,
     /// BIC encoder evaluation (popcount + compare + conditional invert).
     pub e_bic_encode: f64,
     /// XOR-recovery energy per toggled mantissa/inv input bit in a PE.
@@ -55,6 +58,10 @@ impl Default for EnergyModel {
             // per-cycle burn is small.
             e_cg_cell: 0.5,
             e_zero_detect: 3.0,
+            // Matches the `ddcg` subcommand's standalone analysis
+            // constants, so the registry codec and the bespoke table
+            // price DDCG identically.
+            e_ddcg_cmp_bit: 0.6,
             e_bic_encode: 10.0,
             // The recovered (decoded) value's downstream switching is
             // already charged through the multiplier operand toggles;
@@ -165,14 +172,16 @@ impl EnergyModel {
             west_gating: c.west_sideband_toggles as f64 * data
                 + c.west_sideband_clock_events as f64 * self.e_ff_clk
                 + c.zero_detect_ops as f64 * self.e_zero_detect
-                + c.west_cg_cell_cycles as f64 * self.e_cg_cell,
+                + c.west_cg_cell_cycles as f64 * self.e_cg_cell
+                + c.west_comparator_bit_cycles as f64 * self.e_ddcg_cmp_bit,
             north_data: c.north_data_toggles as f64 * data,
             north_clock: c.north_clock_events as f64 * self.e_ff_clk,
             north_coding: c.north_sideband_toggles as f64 * data
                 + c.north_sideband_clock_events as f64 * self.e_ff_clk
                 + c.encoder_ops as f64 * self.e_bic_encode
                 + c.decoder_toggles as f64 * self.e_xor_decode
-                + c.north_cg_cell_cycles as f64 * self.e_cg_cell,
+                + c.north_cg_cell_cycles as f64 * self.e_cg_cell
+                + c.north_comparator_bit_cycles as f64 * self.e_ddcg_cmp_bit,
             mult: c.mult_input_toggles as f64 * self.e_mul_per_toggle
                 + c.active_macs as f64 * self.e_mul_per_active_op,
             add_acc: c.active_macs as f64 * self.e_addacc_per_mac
@@ -295,5 +304,20 @@ mod tests {
         assert!(e.west_gating > 0.0);
         assert!(e.north_coding > 0.0);
         assert_eq!(e.west_data, 0.0);
+    }
+
+    #[test]
+    fn ddcg_comparators_priced_per_side() {
+        let m = EnergyModel::default();
+        let mut c = ActivityCounts::default();
+        c.west_comparator_bit_cycles = 100;
+        let e = m.energy(&c);
+        assert_eq!(e.west_gating, 100.0 * m.e_ddcg_cmp_bit);
+        assert_eq!(e.north_coding, 0.0);
+        c.west_comparator_bit_cycles = 0;
+        c.north_comparator_bit_cycles = 40;
+        let e = m.energy(&c);
+        assert_eq!(e.north_coding, 40.0 * m.e_ddcg_cmp_bit);
+        assert_eq!(e.west_gating, 0.0);
     }
 }

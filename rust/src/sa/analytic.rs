@@ -9,6 +9,15 @@
 //! activity reduces to pairwise row-of-B Hamming sums that are memoized
 //! across rows of A.
 //!
+//! The coding layer enters only through the [`CodingStack`] codec API:
+//! each edge's [`EdgeStack`] supplies the lane front-end
+//! (`EdgeStack::coder`), the per-load register charge
+//! (`load_clock_bits` / `load_overhead`), the sideband line counts and
+//! the decoder cover mask. The model never inspects concrete codec
+//! types, so new codecs need no changes here. (One closed-form
+//! assumption is part of the codec contract: value gates gate exactly
+//! the zero words — the MAC set algebra below depends on it.)
+//!
 //! The dataflow axis enters purely as **charge factors** on the lane
 //! sums: under weight-stationary streaming each lane's sequence is
 //! re-registered once per PE it passes (N registers per West row, M per
@@ -20,22 +29,23 @@
 //!
 //! The model is **exact**: `rust/tests/property_tests.rs` and
 //! `rust/tests/conformance.rs` assert equal `ActivityCounts` integers
-//! against the cycle-accurate simulator for every coding configuration
-//! and both dataflows over random tiles.
+//! against the cycle-accurate simulator for every coding stack and both
+//! dataflows over random tiles, and `rust/tests/legacy_conformance.rs`
+//! pins the stack migration against a frozen copy of the pre-stack
+//! reference simulator.
 
 use crate::activity::{
     ham16_masked, ham16_slice, ham_bf16, stream_toggles, ActivityCounts,
 };
 use crate::bf16::{as_bits, Bf16};
-use crate::coding::{decode, BicEncoder, BicMode, Encoded, SaCodingConfig};
+use crate::coding::{CodingStack, EdgeStack};
 
 use super::{Dataflow, Tile};
 
-/// Exact activity counts for one tile under a coding configuration and
-/// dataflow.
+/// Exact activity counts for one tile under a coding stack and dataflow.
 pub fn analyze_tile(
     tile: &Tile,
-    cfg: &SaCodingConfig,
+    stack: &CodingStack,
     dataflow: Dataflow,
 ) -> ActivityCounts {
     let (m, k, n) = (tile.m, tile.k, tile.n);
@@ -53,9 +63,7 @@ pub fn analyze_tile(
     for i in 0..m {
         lane_counts(
             tile.a_row(i),
-            cfg.input_zvcg,
-            cfg.input_bic,
-            cfg,
+            &stack.west,
             west_regs,
             n as u64, // decoder taps: one per PE of the row
             LaneSide::West,
@@ -69,9 +77,7 @@ pub fn analyze_tile(
     for j in 0..n {
         lane_counts(
             tile.b_col(j),
-            cfg.weight_zvcg,
-            cfg.weight_bic,
-            cfg,
+            &stack.north,
             north_regs,
             m as u64, // decoder taps: one per PE of the column
             LaneSide::North,
@@ -81,13 +87,16 @@ pub fn analyze_tile(
 
     // ---------------- Compute-side counts ----------------
     // Non-zero counts per k-slot: popcounts over the tile's precomputed
-    // nonzero bitmasks.
+    // nonzero bitmasks. Value gates gate exactly the zeros (the codec
+    // contract), so the gated-slot algebra is pure set arithmetic.
+    let in_gate = stack.west.gates();
+    let w_gate = stack.north.gates();
     let nnz_a_col: Vec<u64> = (0..k).map(|kk| tile.nnz_a_col(kk)).collect();
     let nnz_b_row: Vec<u64> = (0..k).map(|kk| tile.nnz_b_row(kk)).collect();
 
     let slots = tile.mac_slots();
     let active: u64 = (0..k).map(|kk| nnz_a_col[kk] * nnz_b_row[kk]).sum();
-    let gated: u64 = match (cfg.input_zvcg, cfg.weight_zvcg) {
+    let gated: u64 = match (in_gate, w_gate) {
         (false, false) => 0,
         (true, false) => {
             (0..k).map(|kk| (m as u64 - nnz_a_col[kk]) * n as u64).sum()
@@ -102,30 +111,34 @@ pub fn analyze_tile(
     c.gated_macs = gated;
     c.zero_product_macs = non_gated - active;
     c.acc_clock_events = 32 * non_gated;
-    if cfg.input_zvcg || cfg.weight_zvcg {
+    if stack.gates_any() {
         c.acc_cg_cell_cycles = slots;
     }
 
     // ---------------- Multiplier operand activity ----------------
-    if cfg.weight_zvcg {
-        // Generic per-PE walk (ablation configs only): both latches.
-        c.mult_input_toggles = mult_toggles_generic(tile, cfg);
+    if w_gate {
+        // Generic per-PE walk (ablation stacks only): both latches.
+        c.mult_input_toggles = mult_toggles_generic(tile, stack);
     } else {
         // a-side: every PE of row i sees the same decoded-a sequence —
-        // which, without input BIC, is exactly the sequence the West data
-        // registers load. Under WS the ledger already carries the
-        // N-registers-per-lane factor; under OS the lane was charged once,
-        // so the N PE latches per row are re-applied here.
-        if cfg.input_bic == BicMode::None {
+        // which, when the West edge carries no transform, is exactly the
+        // sequence the West data registers load. Under WS the ledger
+        // already carries the N-registers-per-lane factor; under OS the
+        // lane was charged once, so the N PE latches per row are
+        // re-applied here.
+        if !stack.west.codes() {
             c.mult_input_toggles += match dataflow {
                 Dataflow::WeightStationary => c.west_data_toggles,
                 Dataflow::OutputStationary => n as u64 * c.west_data_toggles,
             };
         } else {
+            // With a West transform the registers hold encoded words;
+            // the latches see the decoded (== raw, decode∘encode = id)
+            // gated subsequence instead.
             let mut seq: Vec<Bf16> = Vec::with_capacity(k);
             for i in 0..m {
                 let row = tile.a_row(i);
-                let toggles = if cfg.input_zvcg {
+                let toggles = if in_gate {
                     seq.clear();
                     seq.extend(row.iter().copied().filter(|v| !v.is_zero()));
                     stream_toggles(Bf16::ZERO, &seq)
@@ -147,7 +160,7 @@ pub fn analyze_tile(
             let prev = if p == usize::MAX { &zero_row[..] } else { row_bits(p) };
             ham16_slice(prev, row_bits(q))
         };
-        if cfg.input_zvcg {
+        if in_gate {
             // adjacent-pair distances (the overwhelmingly common case at
             // moderate sparsity), D(k-1, k), plus reset distances D(⊥, k)
             let mut d_adj: Vec<u64> = Vec::with_capacity(k);
@@ -206,72 +219,79 @@ enum LaneSide {
 /// to the matching side of the ledger. `regs` is the register/bus
 /// charge factor (registers per lane under WS, 1 under OS); `dec_taps`
 /// is the number of per-PE XOR-decoder taps on the lane (the PE count
-/// either way). Single pass, no intermediate allocation — this is the
-/// sweep hot path.
+/// either way). Single pass through the edge's codec stack — one coder
+/// allocation per lane, nothing per word; this is the sweep hot path.
 fn lane_counts(
     raw: &[Bf16],
-    zvcg: bool,
-    bic: BicMode,
-    cfg: &SaCodingConfig,
+    edge: &EdgeStack,
     regs: u64,
     dec_taps: u64,
     side: LaneSide,
     c: &mut ActivityCounts,
 ) {
     let k = raw.len() as u64;
+    let gates = edge.gates();
+    let codes = edge.codes();
+    let mask = edge.cover_mask();
+    let lines = edge.coded_lines() as u64;
+    let over = edge.load_overhead();
+    // Resolved once per lane: the per-word loop below must not pay a
+    // codec-list walk per load.
+    let clock_gate = edge.clock_gate();
 
-    // Zero detector examines every incoming value.
-    if zvcg {
-        c.zero_detect_ops += k;
-    }
-
-    let mask = bic.segments().iter().fold(0u16, |a, &s| a | s);
-    let mut enc = BicEncoder::new(bic, cfg.bic_policy);
+    let mut coder = edge.coder();
     let mut prev_word = 0u16;
-    let mut prev_inv = 0u8;
+    let mut prev_sb = 0u8;
     let mut prev_zero = false;
     let mut raw_toggles = 0u64; // data-line toggles per register
+    let mut clock_bits = 0u64; // FF clock events per register
     let mut loads = 0u64; // register load slots (non-gated values)
     let mut inv_toggles = 0u64;
     let mut dec_toggles = 0u64;
     let mut zero_sb_toggles = 0u64;
 
     for &v in raw {
-        if zvcg {
-            let z = v.is_zero();
-            zero_sb_toggles += (z != prev_zero) as u64;
-            prev_zero = z;
-            if z {
+        let slot = coder.next(v);
+        if gates {
+            zero_sb_toggles += (slot.gated != prev_zero) as u64;
+            prev_zero = slot.gated;
+            if slot.gated {
                 continue; // pipeline frozen: nothing loads
             }
         }
-        let e: Encoded = if bic != BicMode::None {
-            c.encoder_ops += 1;
-            let e = enc.encode(v);
-            debug_assert_eq!(decode(bic, e).0, v.0);
-            let inv_diff = (prev_inv ^ e.inv).count_ones() as u64;
+        debug_assert_eq!(edge.decode(slot.word, slot.sideband).0, v.0);
+        if codes {
+            let inv_diff = (prev_sb ^ slot.sideband).count_ones() as u64;
             inv_toggles += inv_diff;
             dec_toggles +=
-                ham16_masked(prev_word, e.tx.0, mask) as u64 + inv_diff;
-            prev_inv = e.inv;
-            e
-        } else {
-            Encoded { tx: v, inv: 0 }
+                ham16_masked(prev_word, slot.word.0, mask) as u64 + inv_diff;
+            prev_sb = slot.sideband;
+        }
+        raw_toggles += (prev_word ^ slot.word.0).count_ones() as u64;
+        clock_bits += match clock_gate {
+            Some(cg) => cg.load_clock_bits(prev_word, slot.word.0),
+            None => 16,
         };
-        raw_toggles += (prev_word ^ e.tx.0).count_ones() as u64;
-        prev_word = e.tx.0;
+        prev_word = slot.word.0;
         loads += 1;
     }
 
+    let ops = coder.ops();
+    c.zero_detect_ops += ops.zero_detect_ops;
+    c.encoder_ops += ops.encoder_ops;
+
     let data_toggles = regs * raw_toggles;
-    let data_clocks = regs * 16 * loads;
-    let lines = bic.inv_lines() as u64;
+    let data_clocks = regs * clock_bits;
     let inv_sideband_toggles = regs * inv_toggles;
     let inv_sideband_clocks = regs * lines * loads;
     let decoder_toggles = dec_taps * dec_toggles;
+    // Register clock-gate codecs (DDCG): comparator + per-group ICG burn
+    // on every load slot of every register.
+    let cmp_bit_cycles = regs * over.comparator_bit_cycles * loads;
+    let load_cg_cycles = regs * over.cg_cell_cycles * loads;
 
     // is-zero sideband: always clocked, one bit; ICG burns every slot.
-    let (zero_sb_toggles, zero_sb_clocks, cg_cells) = if zvcg {
+    let (zero_sb_toggles, zero_sb_clocks, gate_cg_cycles) = if gates {
         (regs * zero_sb_toggles, regs * k, regs * k)
     } else {
         (0, 0, 0)
@@ -283,7 +303,8 @@ fn lane_counts(
             c.west_clock_events += data_clocks;
             c.west_sideband_toggles += inv_sideband_toggles + zero_sb_toggles;
             c.west_sideband_clock_events += inv_sideband_clocks + zero_sb_clocks;
-            c.west_cg_cell_cycles += cg_cells;
+            c.west_cg_cell_cycles += gate_cg_cycles + load_cg_cycles;
+            c.west_comparator_bit_cycles += cmp_bit_cycles;
             c.decoder_toggles += decoder_toggles;
         }
         LaneSide::North => {
@@ -291,16 +312,20 @@ fn lane_counts(
             c.north_clock_events += data_clocks;
             c.north_sideband_toggles += inv_sideband_toggles + zero_sb_toggles;
             c.north_sideband_clock_events += inv_sideband_clocks + zero_sb_clocks;
-            c.north_cg_cell_cycles += cg_cells;
+            c.north_cg_cell_cycles += gate_cg_cycles + load_cg_cycles;
+            c.north_comparator_bit_cycles += cmp_bit_cycles;
             c.decoder_toggles += decoder_toggles;
         }
     }
 }
 
 /// Per-PE operand-latch walk, used when weight-side gating makes the
-/// slot sets column-dependent. O(M·N·K) but exact for every config.
-fn mult_toggles_generic(tile: &Tile, cfg: &SaCodingConfig) -> u64 {
+/// slot sets column-dependent. O(M·N·K) but exact for every stack
+/// (gates gate exactly zeros; transforms are identity after decode).
+fn mult_toggles_generic(tile: &Tile, stack: &CodingStack) -> u64 {
     let (m, k, n) = (tile.m, tile.k, tile.n);
+    let in_gate = stack.west.gates();
+    let w_gate = stack.north.gates();
     let mut total = 0u64;
     for i in 0..m {
         for j in 0..n {
@@ -309,8 +334,8 @@ fn mult_toggles_generic(tile: &Tile, cfg: &SaCodingConfig) -> u64 {
             for kk in 0..k {
                 let a = tile.a_at(i, kk);
                 let b = tile.b_at(kk, j);
-                let gated = (cfg.input_zvcg && a.is_zero())
-                    || (cfg.weight_zvcg && b.is_zero());
+                let gated =
+                    (in_gate && a.is_zero()) || (w_gate && b.is_zero());
                 if gated {
                     continue;
                 }
@@ -326,6 +351,8 @@ fn mult_toggles_generic(tile: &Tile, cfg: &SaCodingConfig) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::SaCodingConfig;
+    use crate::engine::ConfigRegistry;
     use crate::sa::simulate_tile;
     use crate::util::prop::check;
     use crate::util::Rng64;
@@ -340,7 +367,7 @@ mod tests {
         Tile::from_f32(&a, &b, m, k, n)
     }
 
-    const ALL_CONFIGS: [&str; 7] = [
+    const ALL_CONFIGS: [&str; 8] = [
         "baseline",
         "proposed",
         "bic-only",
@@ -348,7 +375,12 @@ mod tests {
         "bic-full",
         "bic-segmented",
         "bic-exponent",
+        "ddcg16-g4",
     ];
+
+    fn stack_of(name: &str) -> CodingStack {
+        ConfigRegistry::lookup(name).unwrap().stack()
+    }
 
     const BOTH: [Dataflow; 2] =
         [Dataflow::WeightStationary, Dataflow::OutputStationary];
@@ -360,10 +392,10 @@ mod tests {
             let pz = rng.uniform();
             let t = random_tile(rng, m, k, n, pz, 0.1);
             for name in ALL_CONFIGS {
-                let cfg = SaCodingConfig::by_name(name).unwrap();
+                let stack = stack_of(name);
                 for df in BOTH {
-                    let golden = simulate_tile(&t, &cfg, df).counts;
-                    let fast = analyze_tile(&t, &cfg, df);
+                    let golden = simulate_tile(&t, &stack, df).counts;
+                    let fast = analyze_tile(&t, &stack, df);
                     assert_eq!(fast, golden, "config {name}, {df}, tile {m}x{k}x{n}");
                 }
             }
@@ -384,10 +416,32 @@ mod tests {
                     ..SaCodingConfig::proposed()
                 },
             ] {
+                let stack = cfg.stack();
                 for df in BOTH {
-                    let golden = simulate_tile(&t, &cfg, df).counts;
-                    let fast = analyze_tile(&t, &cfg, df);
+                    let golden = simulate_tile(&t, &stack, df).counts;
+                    let fast = analyze_tile(&t, &stack, df);
                     assert_eq!(fast, golden, "config {cfg:?}, {df}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn matches_cycle_sim_on_composed_spec_stacks() {
+        // stacks the closed struct could never express
+        check("analytic == cycle sim (composed --coding stacks)", 10, |rng| {
+            let t = random_tile(rng, 4, 14, 4, 0.5, 0.3);
+            for spec in [
+                "w:zvcg+bic-full,i:zvcg+bic-mantissa",
+                "w:ddcg16-g4,i:ddcg16-g1",
+                "w:zvcg+bic-mantissa+ddcg16-g8,i:zvcg+ddcg16-g4",
+                "i:zvcg+bic-segmented-mt",
+            ] {
+                let stack = CodingStack::parse(spec).unwrap();
+                for df in BOTH {
+                    let golden = simulate_tile(&t, &stack, df).counts;
+                    let fast = analyze_tile(&t, &stack, df);
+                    assert_eq!(fast, golden, "spec {spec}, {df}");
                 }
             }
         });
@@ -398,11 +452,10 @@ mod tests {
         check("active MACs independent of coding and dataflow", 20, |rng| {
             let t = random_tile(rng, 6, 10, 6, 0.5, 0.2);
             let base =
-                analyze_tile(&t, &SaCodingConfig::baseline(), Dataflow::default());
+                analyze_tile(&t, &CodingStack::baseline(), Dataflow::default());
             for name in ALL_CONFIGS {
                 for df in BOTH {
-                    let c =
-                        analyze_tile(&t, &SaCodingConfig::by_name(name).unwrap(), df);
+                    let c = analyze_tile(&t, &stack_of(name), df);
                     assert_eq!(c.active_macs, base.active_macs, "{name} {df}");
                 }
             }
@@ -414,8 +467,8 @@ mod tests {
         let mut rng = Rng64::new(3);
         let t = random_tile(&mut rng, 8, 24, 8, 0.0, 0.0);
         for df in BOTH {
-            let base = analyze_tile(&t, &SaCodingConfig::baseline(), df);
-            let zv = analyze_tile(&t, &SaCodingConfig::zvcg_only(), df);
+            let base = analyze_tile(&t, &CodingStack::baseline(), df);
+            let zv = analyze_tile(&t, &stack_of("zvcg-only"), df);
             assert_eq!(base.west_data_toggles, zv.west_data_toggles);
             assert_eq!(base.active_macs, zv.active_macs);
             assert_eq!(zv.gated_macs, 0);
@@ -434,8 +487,8 @@ mod tests {
             let (m, k, n) = (8, 64, 8);
             let t = random_tile(rng, m, k, n, 0.2, 0.0);
             for df in BOTH {
-                let base = analyze_tile(&t, &SaCodingConfig::baseline(), df);
-                let bic = analyze_tile(&t, &SaCodingConfig::bic_only(), df);
+                let base = analyze_tile(&t, &CodingStack::baseline(), df);
+                let bic = analyze_tile(&t, &stack_of("bic-only"), df);
                 assert!(
                     bic.north_data_toggles < base.north_data_toggles,
                     "{df}: BIC {} vs base {}",
@@ -444,5 +497,28 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn ddcg_charges_comparators_and_gates_clocks() {
+        let mut rng = Rng64::new(11);
+        let t = random_tile(&mut rng, 4, 20, 4, 0.0, 0.0);
+        for df in BOTH {
+            let base = analyze_tile(&t, &CodingStack::baseline(), df);
+            let ddcg = analyze_tile(&t, &stack_of("ddcg16-g4"), df);
+            // data stream untouched, MACs untouched
+            assert_eq!(ddcg.west_data_toggles, base.west_data_toggles, "{df}");
+            assert_eq!(ddcg.active_macs, base.active_macs, "{df}");
+            assert_eq!(ddcg.gated_macs, 0, "{df}");
+            assert_eq!(ddcg.mult_input_toggles, base.mult_input_toggles, "{df}");
+            // clock events can only shrink; overheads appear
+            assert!(ddcg.west_clock_events <= base.west_clock_events, "{df}");
+            assert!(ddcg.north_clock_events <= base.north_clock_events, "{df}");
+            assert!(ddcg.west_comparator_bit_cycles > 0, "{df}");
+            assert!(ddcg.north_comparator_bit_cycles > 0, "{df}");
+            assert!(ddcg.west_cg_cell_cycles > 0, "{df}");
+            // no accumulator gating: DDCG is not a value gate
+            assert_eq!(ddcg.acc_cg_cell_cycles, 0, "{df}");
+        }
     }
 }

@@ -1,6 +1,6 @@
 //! SA instance configuration: array geometry + dataflow + coding + models.
 
-use crate::coding::SaCodingConfig;
+use crate::coding::{CodingStack, SaCodingConfig};
 use crate::power::{AreaModel, EnergyModel};
 
 /// How operands move through the array and where state is held.
@@ -116,8 +116,8 @@ pub struct SaConfig {
     pub cols: usize,
     /// Register-movement schedule (see [`Dataflow`]).
     pub dataflow: Dataflow,
-    /// Coding / gating configuration.
-    pub coding: SaCodingConfig,
+    /// Per-edge coding stacks (see [`CodingStack`]).
+    pub coding: CodingStack,
     /// Energy constants.
     pub energy: EnergyModel,
     /// Area constants.
@@ -132,7 +132,7 @@ impl Default for SaConfig {
             rows: 16,
             cols: 16,
             dataflow: Dataflow::default(),
-            coding: SaCodingConfig::baseline(),
+            coding: CodingStack::baseline(),
             energy: EnergyModel::default(),
             area: AreaModel::default(),
             clock_ghz: 1.0,
@@ -146,14 +146,16 @@ impl SaConfig {
         Self::default()
     }
 
-    /// 16×16 SA with the paper's proposed coding.
+    /// 16×16 SA with the paper's proposed coding stack
+    /// (`w:bic-mantissa,i:zvcg`).
     pub fn proposed() -> Self {
-        Self { coding: SaCodingConfig::proposed(), ..Self::default() }
+        Self { coding: SaCodingConfig::proposed().stack(), ..Self::default() }
     }
 
-    /// Same geometry/models, different coding.
-    pub fn with_coding(&self, coding: SaCodingConfig) -> Self {
-        Self { coding, ..self.clone() }
+    /// Same geometry/models, different coding stack (accepts a
+    /// [`CodingStack`] or a legacy [`SaCodingConfig`]).
+    pub fn with_coding(&self, coding: impl Into<CodingStack>) -> Self {
+        Self { coding: coding.into(), ..self.clone() }
     }
 
     /// Area report for this instance.
@@ -179,9 +181,14 @@ mod tests {
     #[test]
     fn with_coding_keeps_geometry() {
         let c = SaConfig { rows: 8, cols: 4, ..SaConfig::default() };
+        // legacy structs lower implicitly ...
         let p = c.with_coding(SaCodingConfig::proposed());
         assert_eq!((p.rows, p.cols), (8, 4));
         assert_eq!(p.dataflow, Dataflow::WeightStationary);
+        assert_eq!(p.coding.spec(), "w:bic-mantissa,i:zvcg");
+        // ... and parsed stacks are first-class
+        let q = c.with_coding(CodingStack::parse("w:ddcg16-g4").unwrap());
+        assert_eq!(q.coding.spec(), "w:ddcg16-g4");
     }
 
     #[test]

@@ -7,10 +7,20 @@
 //!   stages under [`Dataflow::WeightStationary`], single per-lane edge
 //!   drive registers feeding broadcast buses under
 //!   [`Dataflow::OutputStationary`],
-//! * the 1-bit `is-zero` (West) and `inv` (North) sideband flip-flops,
-//! * the BIC encoders at the North edge / zero detectors at the West edge,
+//! * the 1-bit gate (`is-zero`) and transform (`inv`) sideband
+//!   flip-flops,
+//! * the edge logic (detectors / encoders — the [`CodingStack`]'s per
+//!   edge codec stacks),
 //! * per-PE operand-isolation latches feeding the multiplier,
 //! * the 32-bit f32 accumulator of each PE.
+//!
+//! The coding layer is consumed **only** through the codec API: the
+//! engines query each edge's [`EdgeStack`] for gating/coding presence,
+//! sideband line counts, the decoder cover mask, per-load register
+//! clocking ([`EdgeStack::load_clock_bits`], reduced by register
+//! clock-gate codecs like DDCG) and slot recovery
+//! ([`EdgeStack::decode`]). No concrete codec type is ever matched on —
+//! adding a codec touches the coding layer, not these engines.
 //!
 //! Two engines implement the same machine (per dataflow):
 //!
@@ -26,8 +36,8 @@
 //!
 //! Under OS there is no inter-PE operand pipelining: row `i`'s drive
 //! register loads `A[i,kk]` at the edge ending cycle `kk` (frozen when
-//! ZVCG gates a zero), and every PE of the array executes slot `kk`
-//! during cycle `kk+1` off its row/column bus. Data/clock/sideband
+//! a value gate gates the slot), and every PE of the array executes slot
+//! `kk` during cycle `kk+1` off its row/column bus. Data/clock/sideband
 //! events are charged once per lane register; XOR-recovery decoder
 //! toggles are charged once per bus tap (N taps on a West row, M on a
 //! North column — the decoders still sit in the PEs). Because each PE
@@ -44,9 +54,11 @@
 //! of a lane replays the identical (gated) edge-slot sequence, just
 //! time-shifted — so one replay per lane, multiplied by the number of
 //! registers in the lane (N per West row, M per North column), yields
-//! exactly the per-cycle simulator's toggle/clock/sideband sums, and the
-//! per-slot register state (decoded operand + gating flag) feeding each
-//! PE's MAC at slot `kk` is the replay state after slot `kk`.
+//! exactly the per-cycle simulator's toggle/clock/sideband sums (and
+//! per-register clock-gate charges: each register compares the same
+//! consecutive load pairs), and the per-slot register state (decoded
+//! operand + gating flag) feeding each PE's MAC at slot `kk` is the
+//! replay state after slot `kk`.
 //!
 //! # Why the wavefront bound is exact
 //!
@@ -61,90 +73,36 @@
 //! The equivalence is enforced: `rust/tests/property_tests.rs` and
 //! `rust/tests/conformance.rs` assert `simulate_tile ==
 //! simulate_tile_reference` (counts *and* outputs) on random tiles for
-//! every coding configuration and both dataflows, and the analytic model
-//! is in turn asserted equal to the cycle counts.
+//! every coding stack and both dataflows, the analytic model is in turn
+//! asserted equal to the cycle counts, and
+//! `rust/tests/legacy_conformance.rs` pins the codec-API migration
+//! against a frozen copy of the pre-stack reference simulator.
 
 use crate::activity::{ham1, ham_bf16, ActivityCounts};
 use crate::bf16::Bf16;
-use crate::coding::{decode, BicEncoder, BicMode, Encoded, SaCodingConfig};
+use crate::coding::{CodingStack, EdgeStack, LaneSlot};
 
 use super::{Dataflow, Tile};
 
-/// What the edge logic presents to the first register of a lane at one
-/// stream slot.
-#[derive(Clone, Copy, Debug)]
-struct EdgeSlot {
-    /// Gated by the zero detector (ZVCG lanes only).
-    gated: bool,
-    /// The (possibly BIC-encoded) word to load when not gated.
-    data: Bf16,
-    /// The inv sideband bits accompanying the word (BIC lanes only).
-    inv: u8,
-}
-
-/// Precompute what one edge (West row or North column) feeds into the
-/// array, applying the detector and encoder in hardware order:
-/// zero-detect first (zeros never reach the encoder), then BIC.
-fn edge_stream(
-    raw: &[Bf16],
-    zvcg: bool,
-    bic: BicMode,
-    policy: crate::coding::BicPolicy,
-    counts: &mut ActivityCounts,
-) -> Vec<EdgeSlot> {
-    let mut enc = BicEncoder::new(bic, policy);
-    raw.iter()
-        .map(|&v| {
-            if zvcg {
-                counts.zero_detect_ops += 1;
-            }
-            if zvcg && v.is_zero() {
-                return EdgeSlot { gated: true, data: Bf16::ZERO, inv: 0 };
-            }
-            let e: Encoded = if bic != BicMode::None {
-                // input-side encoders (ablation only) and weight-side
-                // encoders are charged to the same counter.
-                counts.encoder_ops += 1;
-                enc.encode(v)
-            } else {
-                Encoded { tx: v, inv: 0 }
-            };
-            EdgeSlot { gated: false, data: e.tx, inv: e.inv }
-        })
-        .collect()
-}
-
-/// Build both edges' slot streams (detectors + encoders) in stream
-/// order — all West rows, then all North columns. The shared front-end
-/// of every engine variant; edge-logic event counts (zero detects,
-/// encoder ops) accrue into `counts` here.
+/// Build both edges' slot streams (the codec stacks' detectors +
+/// encoders) in stream order — all West rows, then all North columns.
+/// The shared front-end of every engine variant; edge-logic event counts
+/// (gate detects, encoder ops) accrue into `counts` here.
 fn edge_streams(
     tile: &Tile,
-    cfg: &SaCodingConfig,
+    stack: &CodingStack,
     counts: &mut ActivityCounts,
-) -> (Vec<Vec<EdgeSlot>>, Vec<Vec<EdgeSlot>>) {
-    let west = (0..tile.m)
-        .map(|i| {
-            edge_stream(
-                tile.a_row(i),
-                cfg.input_zvcg,
-                cfg.input_bic,
-                cfg.bic_policy,
-                counts,
-            )
-        })
-        .collect();
-    let north = (0..tile.n)
-        .map(|j| {
-            edge_stream(
-                tile.b_col(j),
-                cfg.weight_zvcg,
-                cfg.weight_bic,
-                cfg.bic_policy,
-                counts,
-            )
-        })
-        .collect();
+) -> (Vec<Vec<LaneSlot>>, Vec<Vec<LaneSlot>>) {
+    let mut run = |raw: &[Bf16], edge: &EdgeStack| -> Vec<LaneSlot> {
+        let mut coder = edge.coder();
+        let slots: Vec<LaneSlot> = raw.iter().map(|&v| coder.next(v)).collect();
+        let ops = coder.ops();
+        counts.zero_detect_ops += ops.zero_detect_ops;
+        counts.encoder_ops += ops.encoder_ops;
+        slots
+    };
+    let west = (0..tile.m).map(|i| run(tile.a_row(i), &stack.west)).collect();
+    let north = (0..tile.n).map(|j| run(tile.b_col(j), &stack.north)).collect();
     (west, north)
 }
 
@@ -165,7 +123,7 @@ pub struct CycleResult {
 }
 
 /// The slot-`kk` view a PE's MAC stage has of one lane register: the
-/// decoded operand and whether the register was zero-gated on that slot.
+/// decoded operand and whether the register was gated on that slot.
 #[derive(Clone, Copy, Debug, Default)]
 struct MacOp {
     val: Bf16,
@@ -181,115 +139,108 @@ struct LaneTally {
     sideband_toggles: u64,
     sideband_clock_events: u64,
     cg_cell_cycles: u64,
+    comparator_bit_cycles: u64,
     decoder_toggles: u64,
 }
 
 /// Replay one lane's edge-slot sequence through a single register,
 /// mirroring the reference simulator's per-stage clock-edge semantics
 /// slot by slot, and record each slot's MAC-stage view into `ops`.
-fn replay_lane(
-    lane: &[EdgeSlot],
-    zvcg: bool,
-    bic: BicMode,
-    ops: &mut [MacOp],
-) -> LaneTally {
+fn replay_lane(lane: &[LaneSlot], edge: &EdgeStack, ops: &mut [MacOp]) -> LaneTally {
     debug_assert_eq!(lane.len(), ops.len());
     let mut t = LaneTally::default();
-    let cover = bic_cover_mask(bic);
-    let lines = bic.inv_lines() as u64;
-    let has_bic = bic != BicMode::None;
+    let gates = edge.gates();
+    let codes = edge.codes();
+    let cover = edge.cover_mask();
+    let lines = edge.coded_lines() as u64;
+    let over = edge.load_overhead();
+    let clock_gate = edge.clock_gate();
     let mut prev = Stage::default();
     for (s, op) in lane.iter().zip(ops.iter_mut()) {
-        if zvcg {
-            // is-zero sideband FF: always clocked (it carries the gating
-            // decision), toggles by its own sequence; the ICG on the data
-            // register burns every slot.
+        if gates {
+            // gate sideband FF: always clocked (it carries the gating
+            // decision), toggles by its own sequence; the ICG on the
+            // data register burns every slot.
             t.sideband_toggles += ham1(prev.zero, s.gated) as u64;
             t.sideband_clock_events += 1;
             t.cg_cell_cycles += 1;
         }
-        if zvcg && s.gated {
+        if gates && s.gated {
             prev.zero = true;
             *op = MacOp { val: Bf16::ZERO, gated: true };
             continue;
         }
-        t.data_toggles += ham_bf16(prev.data, s.data) as u64;
-        t.clock_events += 16;
-        if has_bic {
-            let inv_diff = (prev.inv ^ s.inv).count_ones() as u64;
+        t.data_toggles += ham_bf16(prev.data, s.word) as u64;
+        t.clock_events += match clock_gate {
+            Some(cg) => cg.load_clock_bits(prev.data.0, s.word.0),
+            None => 16,
+        };
+        t.comparator_bit_cycles += over.comparator_bit_cycles;
+        t.cg_cell_cycles += over.cg_cell_cycles;
+        if codes {
+            let inv_diff = (prev.inv ^ s.sideband).count_ones() as u64;
             t.decoder_toggles +=
-                crate::activity::ham16_masked(prev.data.0, s.data.0, cover) as u64
+                crate::activity::ham16_masked(prev.data.0, s.word.0, cover) as u64
                     + inv_diff;
             t.sideband_toggles += inv_diff;
             t.sideband_clock_events += lines;
         }
-        prev = Stage { data: s.data, zero: false, inv: s.inv };
+        prev = Stage { data: s.word, zero: false, inv: s.sideband };
         // XOR recovery of the original operands (paper Fig. 3).
-        *op = MacOp {
-            val: decode(bic, Encoded { tx: s.data, inv: s.inv }),
-            gated: false,
-        };
+        *op = MacOp { val: edge.decode(s.word, s.sideband), gated: false };
     }
     t
 }
 
-/// Simulate one tile through an M×N SA with the given coding
-/// configuration and dataflow — fast engine. Array geometry equals the
-/// tile geometry (the tiler pads tiles to the physical array size).
-/// Counts and outputs are bit-identical to [`simulate_tile_reference`]
-/// under the same dataflow.
+/// Simulate one tile through an M×N SA with the given coding stack and
+/// dataflow — fast engine. Array geometry equals the tile geometry (the
+/// tiler pads tiles to the physical array size). Counts and outputs are
+/// bit-identical to [`simulate_tile_reference`] under the same dataflow.
 pub fn simulate_tile(
     tile: &Tile,
-    cfg: &SaCodingConfig,
+    stack: &CodingStack,
     dataflow: Dataflow,
 ) -> CycleResult {
     match dataflow {
-        Dataflow::WeightStationary => simulate_tile_ws(tile, cfg),
-        Dataflow::OutputStationary => simulate_tile_os(tile, cfg),
+        Dataflow::WeightStationary => simulate_tile_ws(tile, stack),
+        Dataflow::OutputStationary => simulate_tile_os(tile, stack),
     }
 }
 
 /// WS fast engine: wavefront-bounded MAC loop + lane-major register
 /// replay (see the module docs for the exactness argument).
-fn simulate_tile_ws(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
+fn simulate_tile_ws(tile: &Tile, stack: &CodingStack) -> CycleResult {
     let (m, k, n) = (tile.m, tile.k, tile.n);
     let mut counts = ActivityCounts::default();
 
-    // ---- Edge logic (detectors + encoders), in stream order ----
-    let (west, north) = edge_streams(tile, cfg, &mut counts);
+    // ---- Edge logic (the codec stacks), in stream order ----
+    let (west, north) = edge_streams(tile, stack, &mut counts);
 
     // ---- Lane-major register passes (one replay per lane, charged per
     //      register: N registers per West row, M per North column) ----
     let mut a_ops = vec![MacOp::default(); m * k];
     for i in 0..m {
-        let t = replay_lane(
-            &west[i],
-            cfg.input_zvcg,
-            cfg.input_bic,
-            &mut a_ops[i * k..(i + 1) * k],
-        );
+        let t = replay_lane(&west[i], &stack.west, &mut a_ops[i * k..(i + 1) * k]);
         let regs = n as u64;
         counts.west_data_toggles += regs * t.data_toggles;
         counts.west_clock_events += regs * t.clock_events;
         counts.west_sideband_toggles += regs * t.sideband_toggles;
         counts.west_sideband_clock_events += regs * t.sideband_clock_events;
         counts.west_cg_cell_cycles += regs * t.cg_cell_cycles;
+        counts.west_comparator_bit_cycles += regs * t.comparator_bit_cycles;
         counts.decoder_toggles += regs * t.decoder_toggles;
     }
     let mut b_ops = vec![MacOp::default(); n * k];
     for j in 0..n {
-        let t = replay_lane(
-            &north[j],
-            cfg.weight_zvcg,
-            cfg.weight_bic,
-            &mut b_ops[j * k..(j + 1) * k],
-        );
+        let t =
+            replay_lane(&north[j], &stack.north, &mut b_ops[j * k..(j + 1) * k]);
         let regs = m as u64;
         counts.north_data_toggles += regs * t.data_toggles;
         counts.north_clock_events += regs * t.clock_events;
         counts.north_sideband_toggles += regs * t.sideband_toggles;
         counts.north_sideband_clock_events += regs * t.sideband_clock_events;
         counts.north_cg_cell_cycles += regs * t.cg_cell_cycles;
+        counts.north_comparator_bit_cycles += regs * t.comparator_bit_cycles;
         counts.decoder_toggles += regs * t.decoder_toggles;
     }
 
@@ -298,7 +249,7 @@ fn simulate_tile_ws(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
     // cycle c the live band is i+j in [c-k, c-1]; iteration order (c, i,
     // j ascending) matches the reference, preserving f32 accumulation
     // order exactly.
-    let any_gating = cfg.input_zvcg || cfg.weight_zvcg;
+    let any_gating = stack.gates_any();
     let mut mlat_a = vec![Bf16::ZERO; m * n];
     let mut mlat_b = vec![Bf16::ZERO; m * n];
     let mut acc = vec![0f32; m * n];
@@ -316,7 +267,7 @@ fn simulate_tile_ws(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
             for j in j_lo..=j_hi {
                 let kk = d - j;
                 // Accumulator ICG cell burns once per MAC slot whenever
-                // any zero-gating is configured.
+                // any value gating is configured.
                 if any_gating {
                     counts.acc_cg_cell_cycles += 1;
                 }
@@ -355,43 +306,36 @@ fn simulate_tile_ws(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
 /// The per-PE `(operand, gate)` sequence is identical to WS, so the MAC
 /// body is the same — only the schedule (all PEs live every slot)
 /// differs.
-fn simulate_tile_os(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
+fn simulate_tile_os(tile: &Tile, stack: &CodingStack) -> CycleResult {
     let (m, k, n) = (tile.m, tile.k, tile.n);
     let mut counts = ActivityCounts::default();
 
-    // ---- Edge logic (detectors + encoders), in stream order ----
-    let (west, north) = edge_streams(tile, cfg, &mut counts);
+    // ---- Edge logic (the codec stacks), in stream order ----
+    let (west, north) = edge_streams(tile, stack, &mut counts);
 
     // ---- Lane replays: one drive register per lane, decoders at the
     //      bus taps (N PEs on a West row, M on a North column) ----
     let mut a_ops = vec![MacOp::default(); m * k];
     for i in 0..m {
-        let t = replay_lane(
-            &west[i],
-            cfg.input_zvcg,
-            cfg.input_bic,
-            &mut a_ops[i * k..(i + 1) * k],
-        );
+        let t = replay_lane(&west[i], &stack.west, &mut a_ops[i * k..(i + 1) * k]);
         counts.west_data_toggles += t.data_toggles;
         counts.west_clock_events += t.clock_events;
         counts.west_sideband_toggles += t.sideband_toggles;
         counts.west_sideband_clock_events += t.sideband_clock_events;
         counts.west_cg_cell_cycles += t.cg_cell_cycles;
+        counts.west_comparator_bit_cycles += t.comparator_bit_cycles;
         counts.decoder_toggles += n as u64 * t.decoder_toggles;
     }
     let mut b_ops = vec![MacOp::default(); n * k];
     for j in 0..n {
-        let t = replay_lane(
-            &north[j],
-            cfg.weight_zvcg,
-            cfg.weight_bic,
-            &mut b_ops[j * k..(j + 1) * k],
-        );
+        let t =
+            replay_lane(&north[j], &stack.north, &mut b_ops[j * k..(j + 1) * k]);
         counts.north_data_toggles += t.data_toggles;
         counts.north_clock_events += t.clock_events;
         counts.north_sideband_toggles += t.sideband_toggles;
         counts.north_sideband_clock_events += t.sideband_clock_events;
         counts.north_cg_cell_cycles += t.cg_cell_cycles;
+        counts.north_comparator_bit_cycles += t.comparator_bit_cycles;
         counts.decoder_toggles += m as u64 * t.decoder_toggles;
     }
 
@@ -402,7 +346,7 @@ fn simulate_tile_os(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
     //      slot sequence, and all counters are commutative sums, so this
     //      order is count- and bit-identical to the reference's
     //      cycle-major walk — and C = A×B matches WS bit-for-bit. ----
-    let any_gating = cfg.input_zvcg || cfg.weight_zvcg;
+    let any_gating = stack.gates_any();
     let mut acc = vec![0f32; m * n];
 
     for i in 0..m {
@@ -449,23 +393,36 @@ fn simulate_tile_os(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
 /// `simulate_tile` everywhere else.
 pub fn simulate_tile_reference(
     tile: &Tile,
-    cfg: &SaCodingConfig,
+    stack: &CodingStack,
     dataflow: Dataflow,
 ) -> CycleResult {
     match dataflow {
-        Dataflow::WeightStationary => simulate_tile_ws_reference(tile, cfg),
-        Dataflow::OutputStationary => simulate_tile_os_reference(tile, cfg),
+        Dataflow::WeightStationary => simulate_tile_ws_reference(tile, stack),
+        Dataflow::OutputStationary => simulate_tile_os_reference(tile, stack),
     }
 }
 
 /// The seed per-cycle WS simulator: per-PE pipeline registers on the
 /// skewed schedule, all M×N PEs scanned every cycle.
-fn simulate_tile_ws_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
+fn simulate_tile_ws_reference(tile: &Tile, stack: &CodingStack) -> CycleResult {
     let (m, k, n) = (tile.m, tile.k, tile.n);
     let mut counts = ActivityCounts::default();
 
-    // ---- Edge logic (detectors + encoders), in stream order ----
-    let (west, north) = edge_streams(tile, cfg, &mut counts);
+    // ---- Edge logic (the codec stacks), in stream order ----
+    let (west, north) = edge_streams(tile, stack, &mut counts);
+
+    let west_edge = &stack.west;
+    let north_edge = &stack.north;
+    let (w_gates, w_codes) = (west_edge.gates(), west_edge.codes());
+    let (n_gates, n_codes) = (north_edge.gates(), north_edge.codes());
+    let w_over = west_edge.load_overhead();
+    let n_over = north_edge.load_overhead();
+    let (w_cover, w_lines) =
+        (west_edge.cover_mask(), west_edge.coded_lines() as u64);
+    let (n_cover, n_lines) =
+        (north_edge.cover_mask(), north_edge.coded_lines() as u64);
+    let (w_clock_gate, n_clock_gate) =
+        (west_edge.clock_gate(), north_edge.clock_gate());
 
     // ---- Register state ----
     let mut a_st = vec![Stage::default(); m * n];
@@ -488,8 +445,8 @@ fn simulate_tile_ws_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult 
                 }
                 let p = idx(i, j);
                 // Accumulator ICG cell burns once per MAC slot whenever
-                // any zero-gating is configured.
-                if cfg.input_zvcg || cfg.weight_zvcg {
+                // any value gating is configured.
+                if w_gates || n_gates {
                     counts.acc_cg_cell_cycles += 1;
                 }
                 let gated = a_st[p].zero || b_st[p].zero;
@@ -498,14 +455,8 @@ fn simulate_tile_ws_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult 
                     continue;
                 }
                 // XOR recovery of the original operands (paper Fig. 3).
-                let a = decode(
-                    cfg.input_bic,
-                    Encoded { tx: a_st[p].data, inv: a_st[p].inv },
-                );
-                let b = decode(
-                    cfg.weight_bic,
-                    Encoded { tx: b_st[p].data, inv: b_st[p].inv },
-                );
+                let a = west_edge.decode(a_st[p].data, a_st[p].inv);
+                let b = north_edge.decode(b_st[p].data, b_st[p].inv);
                 // Operand-isolation latches feeding the multiplier.
                 counts.mult_input_toggles +=
                     (ham_bf16(mlat_a[p], a) + ham_bf16(mlat_b[p], b)) as u64;
@@ -535,12 +486,12 @@ fn simulate_tile_ws_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult 
                 let p = idx(i, j);
                 let incoming = if j == 0 {
                     let s = west[i][kk as usize];
-                    Stage { data: s.data, zero: s.gated, inv: s.inv }
+                    Stage { data: s.word, zero: s.gated, inv: s.sideband }
                 } else {
                     a_st[idx(i, j - 1)]
                 };
-                if cfg.input_zvcg {
-                    // is-zero sideband FF: always clocked (it carries the
+                if w_gates {
+                    // gate sideband FF: always clocked (it carries the
                     // gating decision), toggles by its own sequence.
                     counts.west_sideband_toggles +=
                         ham1(a_st[p].zero, incoming.zero) as u64;
@@ -548,25 +499,32 @@ fn simulate_tile_ws_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult 
                     // The ICG on the data register burns every slot.
                     counts.west_cg_cell_cycles += 1;
                 }
-                let gate = cfg.input_zvcg && incoming.zero;
+                let gate = w_gates && incoming.zero;
                 if gate {
                     a_st[p].zero = true;
                 } else {
                     counts.west_data_toggles +=
                         ham_bf16(a_st[p].data, incoming.data) as u64;
-                    counts.west_clock_events += 16;
-                    if cfg.input_bic != BicMode::None {
-                        let lines = cfg.input_bic.inv_lines() as u64;
+                    counts.west_clock_events += match w_clock_gate {
+                        Some(cg) => {
+                            cg.load_clock_bits(a_st[p].data.0, incoming.data.0)
+                        }
+                        None => 16,
+                    };
+                    counts.west_comparator_bit_cycles +=
+                        w_over.comparator_bit_cycles;
+                    counts.west_cg_cell_cycles += w_over.cg_cell_cycles;
+                    if w_codes {
+                        let inv_diff =
+                            (a_st[p].inv ^ incoming.inv).count_ones() as u64;
                         counts.decoder_toggles += crate::activity::ham16_masked(
                             a_st[p].data.0,
                             incoming.data.0,
-                            bic_cover_mask(cfg.input_bic),
-                        )
-                            as u64
-                            + (a_st[p].inv ^ incoming.inv).count_ones() as u64;
-                        counts.west_sideband_toggles +=
-                            (a_st[p].inv ^ incoming.inv).count_ones() as u64;
-                        counts.west_sideband_clock_events += lines;
+                            w_cover,
+                        ) as u64
+                            + inv_diff;
+                        counts.west_sideband_toggles += inv_diff;
+                        counts.west_sideband_clock_events += w_lines;
                     }
                     a_st[p].data = incoming.data;
                     a_st[p].inv = incoming.inv;
@@ -585,36 +543,43 @@ fn simulate_tile_ws_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult 
                 let p = idx(i, j);
                 let incoming = if i == 0 {
                     let s = north[j][kk as usize];
-                    Stage { data: s.data, zero: s.gated, inv: s.inv }
+                    Stage { data: s.word, zero: s.gated, inv: s.sideband }
                 } else {
                     b_st[idx(i - 1, j)]
                 };
-                if cfg.weight_zvcg {
+                if n_gates {
                     counts.north_sideband_toggles +=
                         ham1(b_st[p].zero, incoming.zero) as u64;
                     counts.north_sideband_clock_events += 1;
                     // The ICG on the weight register burns every slot.
                     counts.north_cg_cell_cycles += 1;
                 }
-                let gate = cfg.weight_zvcg && incoming.zero;
+                let gate = n_gates && incoming.zero;
                 if gate {
                     b_st[p].zero = true;
                 } else {
                     counts.north_data_toggles +=
                         ham_bf16(b_st[p].data, incoming.data) as u64;
-                    counts.north_clock_events += 16;
-                    if cfg.weight_bic != BicMode::None {
-                        let lines = cfg.weight_bic.inv_lines() as u64;
+                    counts.north_clock_events += match n_clock_gate {
+                        Some(cg) => {
+                            cg.load_clock_bits(b_st[p].data.0, incoming.data.0)
+                        }
+                        None => 16,
+                    };
+                    counts.north_comparator_bit_cycles +=
+                        n_over.comparator_bit_cycles;
+                    counts.north_cg_cell_cycles += n_over.cg_cell_cycles;
+                    if n_codes {
+                        let inv_diff =
+                            (b_st[p].inv ^ incoming.inv).count_ones() as u64;
                         counts.decoder_toggles += crate::activity::ham16_masked(
                             b_st[p].data.0,
                             incoming.data.0,
-                            bic_cover_mask(cfg.weight_bic),
-                        )
-                            as u64
-                            + (b_st[p].inv ^ incoming.inv).count_ones() as u64;
-                        counts.north_sideband_toggles +=
-                            (b_st[p].inv ^ incoming.inv).count_ones() as u64;
-                        counts.north_sideband_clock_events += lines;
+                            n_cover,
+                        ) as u64
+                            + inv_diff;
+                        counts.north_sideband_toggles += inv_diff;
+                        counts.north_sideband_clock_events += n_lines;
                     }
                     b_st[p].data = incoming.data;
                     b_st[p].inv = incoming.inv;
@@ -634,18 +599,31 @@ fn simulate_tile_ws_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult 
 /// row/column bus each cycle. The register-movement semantics:
 ///
 /// * clock edge ending cycle `c` (for `c < K`) loads slot `c` into every
-///   drive register — unless ZVCG gates a zero, in which case the
-///   register is frozen (the bus holds) and only the 1-bit `is-zero`
+///   drive register — unless a value gate gates the slot, in which case
+///   the register is frozen (the bus holds) and only the 1-bit gate
 ///   sideband FF is clocked;
 /// * during cycle `c` (for `1 <= c <= K`) all M×N PEs execute slot
 ///   `kk = c - 1` off the bus state, skipping the MAC when either lane's
-///   drive register is zero-gated.
-fn simulate_tile_os_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult {
+///   drive register is gated.
+fn simulate_tile_os_reference(tile: &Tile, stack: &CodingStack) -> CycleResult {
     let (m, k, n) = (tile.m, tile.k, tile.n);
     let mut counts = ActivityCounts::default();
 
-    // ---- Edge logic (detectors + encoders), in stream order ----
-    let (west, north) = edge_streams(tile, cfg, &mut counts);
+    // ---- Edge logic (the codec stacks), in stream order ----
+    let (west, north) = edge_streams(tile, stack, &mut counts);
+
+    let west_edge = &stack.west;
+    let north_edge = &stack.north;
+    let (w_gates, w_codes) = (west_edge.gates(), west_edge.codes());
+    let (n_gates, n_codes) = (north_edge.gates(), north_edge.codes());
+    let w_over = west_edge.load_overhead();
+    let n_over = north_edge.load_overhead();
+    let (w_cover, w_lines) =
+        (west_edge.cover_mask(), west_edge.coded_lines() as u64);
+    let (n_cover, n_lines) =
+        (north_edge.cover_mask(), north_edge.coded_lines() as u64);
+    let (w_clock_gate, n_clock_gate) =
+        (west_edge.clock_gate(), north_edge.clock_gate());
 
     // ---- Register state: one drive register per lane ----
     let mut a_reg = vec![Stage::default(); m];
@@ -661,7 +639,7 @@ fn simulate_tile_os_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult 
         if c >= 1 {
             for i in 0..m {
                 for j in 0..n {
-                    if cfg.input_zvcg || cfg.weight_zvcg {
+                    if w_gates || n_gates {
                         counts.acc_cg_cell_cycles += 1;
                     }
                     if a_reg[i].zero || b_reg[j].zero {
@@ -669,14 +647,8 @@ fn simulate_tile_os_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult 
                         continue;
                     }
                     // XOR recovery of the original operands at the taps.
-                    let a = decode(
-                        cfg.input_bic,
-                        Encoded { tx: a_reg[i].data, inv: a_reg[i].inv },
-                    );
-                    let b = decode(
-                        cfg.weight_bic,
-                        Encoded { tx: b_reg[j].data, inv: b_reg[j].inv },
-                    );
+                    let a = west_edge.decode(a_reg[i].data, a_reg[i].inv);
+                    let b = north_edge.decode(b_reg[j].data, b_reg[j].inv);
                     let p = i * n + j;
                     counts.mult_input_toggles +=
                         (ham_bf16(mlat_a[p], a) + ham_bf16(mlat_b[p], b)) as u64;
@@ -699,66 +671,78 @@ fn simulate_tile_os_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult 
         if c < k {
             for i in 0..m {
                 let s = west[i][c];
-                if cfg.input_zvcg {
+                if w_gates {
                     counts.west_sideband_toggles +=
                         ham1(a_reg[i].zero, s.gated) as u64;
                     counts.west_sideband_clock_events += 1;
                     counts.west_cg_cell_cycles += 1;
                 }
-                if cfg.input_zvcg && s.gated {
+                if w_gates && s.gated {
                     a_reg[i].zero = true;
                 } else {
                     counts.west_data_toggles +=
-                        ham_bf16(a_reg[i].data, s.data) as u64;
-                    counts.west_clock_events += 16;
-                    if cfg.input_bic != BicMode::None {
+                        ham_bf16(a_reg[i].data, s.word) as u64;
+                    counts.west_clock_events += match w_clock_gate {
+                        Some(cg) => cg.load_clock_bits(a_reg[i].data.0, s.word.0),
+                        None => 16,
+                    };
+                    counts.west_comparator_bit_cycles +=
+                        w_over.comparator_bit_cycles;
+                    counts.west_cg_cell_cycles += w_over.cg_cell_cycles;
+                    if w_codes {
                         let inv_diff =
-                            (a_reg[i].inv ^ s.inv).count_ones() as u64;
+                            (a_reg[i].inv ^ s.sideband).count_ones() as u64;
                         // XOR decoders sit at every bus tap (one per PE
                         // of the row), unlike the per-register WS charge.
                         counts.decoder_toggles += n as u64
                             * (crate::activity::ham16_masked(
                                 a_reg[i].data.0,
-                                s.data.0,
-                                bic_cover_mask(cfg.input_bic),
+                                s.word.0,
+                                w_cover,
                             ) as u64
                                 + inv_diff);
                         counts.west_sideband_toggles += inv_diff;
-                        counts.west_sideband_clock_events +=
-                            cfg.input_bic.inv_lines() as u64;
+                        counts.west_sideband_clock_events += w_lines;
                     }
-                    a_reg[i] = Stage { data: s.data, zero: false, inv: s.inv };
+                    a_reg[i] =
+                        Stage { data: s.word, zero: false, inv: s.sideband };
                 }
             }
             for j in 0..n {
                 let s = north[j][c];
-                if cfg.weight_zvcg {
+                if n_gates {
                     counts.north_sideband_toggles +=
                         ham1(b_reg[j].zero, s.gated) as u64;
                     counts.north_sideband_clock_events += 1;
                     counts.north_cg_cell_cycles += 1;
                 }
-                if cfg.weight_zvcg && s.gated {
+                if n_gates && s.gated {
                     b_reg[j].zero = true;
                 } else {
                     counts.north_data_toggles +=
-                        ham_bf16(b_reg[j].data, s.data) as u64;
-                    counts.north_clock_events += 16;
-                    if cfg.weight_bic != BicMode::None {
+                        ham_bf16(b_reg[j].data, s.word) as u64;
+                    counts.north_clock_events += match n_clock_gate {
+                        Some(cg) => cg.load_clock_bits(b_reg[j].data.0, s.word.0),
+                        None => 16,
+                    };
+                    counts.north_comparator_bit_cycles +=
+                        n_over.comparator_bit_cycles;
+                    counts.north_cg_cell_cycles += n_over.cg_cell_cycles;
+                    if n_codes {
                         let inv_diff =
-                            (b_reg[j].inv ^ s.inv).count_ones() as u64;
+                            (b_reg[j].inv ^ s.sideband).count_ones() as u64;
                         counts.decoder_toggles += m as u64
                             * (crate::activity::ham16_masked(
                                 b_reg[j].data.0,
-                                s.data.0,
-                                bic_cover_mask(cfg.weight_bic),
+                                s.word.0,
+                                n_cover,
                             ) as u64
                                 + inv_diff);
                         counts.north_sideband_toggles += inv_diff;
-                        counts.north_sideband_clock_events +=
-                            cfg.weight_bic.inv_lines() as u64;
+                        counts.north_sideband_clock_events += n_lines;
                     }
-                    b_reg[j] = Stage { data: s.data, zero: false, inv: s.inv };
+                    b_reg[j] =
+                        Stage { data: s.word, zero: false, inv: s.sideband };
                 }
             }
         }
@@ -769,14 +753,10 @@ fn simulate_tile_os_reference(tile: &Tile, cfg: &SaCodingConfig) -> CycleResult 
     CycleResult { counts, c: acc }
 }
 
-/// Union mask of the lines a BIC mode covers (for XOR-recovery toggles).
-fn bic_cover_mask(mode: BicMode) -> u16 {
-    mode.segments().iter().fold(0u16, |acc, &m| acc | m)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::ConfigRegistry;
     use crate::util::prop::check;
     use crate::util::Rng64;
 
@@ -786,6 +766,10 @@ mod tests {
             .collect();
         let b: Vec<f32> = (0..k * n).map(|_| (rng.normal() * 0.1) as f32).collect();
         Tile::from_f32(&a, &b, m, k, n)
+    }
+
+    fn stack_of(name: &str) -> CodingStack {
+        ConfigRegistry::lookup(name).unwrap().stack()
     }
 
     const WS: Dataflow = Dataflow::WeightStationary;
@@ -798,7 +782,7 @@ mod tests {
             let t = random_tile(rng, m, k, n, 0.3);
             let want = t.reference_result();
             for df in [WS, OS] {
-                let r = simulate_tile(&t, &SaCodingConfig::baseline(), df);
+                let r = simulate_tile(&t, &CodingStack::baseline(), df);
                 assert_eq!(r.c, want, "dataflow {df}");
             }
         });
@@ -814,14 +798,15 @@ mod tests {
             "bic-full",
             "bic-segmented",
             "bic-exponent",
+            "ddcg16-g4",
         ];
         check("coding/gating are functionally transparent", 20, |rng| {
             let t = random_tile(rng, 4, 10, 5, 0.4);
             let want = t.reference_result();
             for name in configs {
-                let cfg = SaCodingConfig::by_name(name).unwrap();
+                let stack = stack_of(name);
                 for df in [WS, OS] {
-                    let r = simulate_tile(&t, &cfg, df);
+                    let r = simulate_tile(&t, &stack, df);
                     assert_eq!(r.c, want, "config {name}, dataflow {df}");
                 }
             }
@@ -834,11 +819,12 @@ mod tests {
             let (m, k, n) = (1 + rng.below(8), 1 + rng.below(20), 1 + rng.below(8));
             let pz = rng.uniform();
             let t = random_tile(rng, m, k, n, pz);
-            for name in ["baseline", "proposed", "bic-full", "zvcg-only"] {
-                let cfg = SaCodingConfig::by_name(name).unwrap();
+            for name in ["baseline", "proposed", "bic-full", "zvcg-only", "ddcg16-g4"]
+            {
+                let stack = stack_of(name);
                 for df in [WS, OS] {
-                    let fast = simulate_tile(&t, &cfg, df);
-                    let golden = simulate_tile_reference(&t, &cfg, df);
+                    let fast = simulate_tile(&t, &stack, df);
+                    let golden = simulate_tile_reference(&t, &stack, df);
                     assert_eq!(fast.counts, golden.counts, "config {name}, {df}");
                     assert_eq!(fast.c, golden.c, "config {name}, {df}");
                 }
@@ -851,8 +837,8 @@ mod tests {
         check("ZVCG strictly helps on sparse inputs", 20, |rng| {
             let t = random_tile(rng, 8, 32, 8, 0.5);
             for df in [WS, OS] {
-                let base = simulate_tile(&t, &SaCodingConfig::baseline(), df);
-                let prop = simulate_tile(&t, &SaCodingConfig::zvcg_only(), df);
+                let base = simulate_tile(&t, &CodingStack::baseline(), df);
+                let prop = simulate_tile(&t, &stack_of("zvcg-only"), df);
                 assert!(
                     prop.counts.west_data_toggles <= base.counts.west_data_toggles
                 );
@@ -867,9 +853,9 @@ mod tests {
     fn gated_plus_active_partition_slots() {
         check("MAC slots partition", 20, |rng| {
             let t = random_tile(rng, 5, 20, 7, 0.5);
-            for cfg in [SaCodingConfig::baseline(), SaCodingConfig::proposed()] {
+            for stack in [CodingStack::baseline(), stack_of("proposed")] {
                 for df in [WS, OS] {
-                    let r = simulate_tile(&t, &cfg, df);
+                    let r = simulate_tile(&t, &stack, df);
                     assert_eq!(r.counts.total_mac_slots(), t.mac_slots());
                 }
             }
@@ -881,13 +867,14 @@ mod tests {
         let mut rng = Rng64::new(1);
         let t = random_tile(&mut rng, 4, 8, 4, 0.3);
         for df in [WS, OS] {
-            let r = simulate_tile(&t, &SaCodingConfig::baseline(), df);
+            let r = simulate_tile(&t, &CodingStack::baseline(), df);
             assert_eq!(r.counts.zero_detect_ops, 0);
             assert_eq!(r.counts.encoder_ops, 0);
             assert_eq!(r.counts.decoder_toggles, 0);
             assert_eq!(r.counts.gated_macs, 0);
             assert_eq!(r.counts.west_sideband_toggles, 0);
             assert_eq!(r.counts.west_cg_cell_cycles, 0);
+            assert_eq!(r.counts.west_comparator_bit_cycles, 0);
         }
     }
 
@@ -899,14 +886,14 @@ mod tests {
         let mut rng = Rng64::new(2);
         let (m, k, n) = (3, 7, 4);
         let t = random_tile(&mut rng, m, k, n, 0.2);
-        let r = simulate_tile(&t, &SaCodingConfig::baseline(), WS);
+        let r = simulate_tile(&t, &CodingStack::baseline(), WS);
         assert_eq!(r.counts.west_clock_events, (16 * m * n * k) as u64);
         assert_eq!(r.counts.north_clock_events, (16 * m * n * k) as u64);
         assert_eq!(r.counts.acc_clock_events, (32 * m * n * k) as u64);
         assert_eq!(r.counts.cycles, (m + n + k) as u64);
         assert_eq!(r.counts.unload_values, (m * n) as u64);
 
-        let o = simulate_tile(&t, &SaCodingConfig::baseline(), OS);
+        let o = simulate_tile(&t, &CodingStack::baseline(), OS);
         assert_eq!(o.counts.west_clock_events, (16 * m * k) as u64);
         assert_eq!(o.counts.north_clock_events, (16 * n * k) as u64);
         // MAC-side counts are dataflow-invariant
@@ -925,8 +912,8 @@ mod tests {
         let mut rng = Rng64::new(9);
         let (m, k, n) = (5, 16, 3);
         let t = random_tile(&mut rng, m, k, n, 0.4);
-        let ws = simulate_tile(&t, &SaCodingConfig::baseline(), WS).counts;
-        let os = simulate_tile(&t, &SaCodingConfig::baseline(), OS).counts;
+        let ws = simulate_tile(&t, &CodingStack::baseline(), WS).counts;
+        let os = simulate_tile(&t, &CodingStack::baseline(), OS).counts;
         assert_eq!(ws.west_data_toggles, n as u64 * os.west_data_toggles);
         assert_eq!(ws.north_data_toggles, m as u64 * os.north_data_toggles);
     }
@@ -937,7 +924,7 @@ mod tests {
         let b: Vec<f32> = (0..8 * 4).map(|i| i as f32 * 0.1).collect();
         let t = Tile::from_f32(&a, &b, 4, 8, 4);
         for df in [WS, OS] {
-            let r = simulate_tile(&t, &SaCodingConfig::proposed(), df);
+            let r = simulate_tile(&t, &stack_of("proposed"), df);
             assert_eq!(r.counts.gated_macs, t.mac_slots(), "{df}");
             assert_eq!(r.counts.active_macs, 0, "{df}");
             assert_eq!(r.counts.west_data_toggles, 0, "{df}");
@@ -953,8 +940,8 @@ mod tests {
         check("BIC transparent to multiplier", 20, |rng| {
             let t = random_tile(rng, 4, 16, 4, 0.0);
             for df in [WS, OS] {
-                let base = simulate_tile(&t, &SaCodingConfig::baseline(), df);
-                let bic = simulate_tile(&t, &SaCodingConfig::bic_only(), df);
+                let base = simulate_tile(&t, &CodingStack::baseline(), df);
+                let bic = simulate_tile(&t, &stack_of("bic-only"), df);
                 assert_eq!(
                     base.counts.mult_input_toggles,
                     bic.counts.mult_input_toggles
@@ -962,5 +949,22 @@ mod tests {
                 assert_eq!(base.counts.active_macs, bic.counts.active_macs);
             }
         });
+    }
+
+    #[test]
+    fn ddcg_word_gating_on_a_constant_lane() {
+        // A lane that repeats one value: after the first load, word-level
+        // DDCG gates every register clock; comparators still burn.
+        let a = vec![1.5f32; 1 * 6];
+        let b = vec![0.25f32; 6 * 1];
+        let t = Tile::from_f32(&a, &b, 1, 6, 1);
+        let word_ddcg = CodingStack::parse("w:ddcg16-g16,i:ddcg16-g16").unwrap();
+        let r = simulate_tile(&t, &word_ddcg, WS);
+        let base = simulate_tile(&t, &CodingStack::baseline(), WS);
+        // first load toggles some bits; the 5 repeats clock nothing
+        assert!(r.counts.west_clock_events < base.counts.west_clock_events);
+        assert_eq!(r.counts.west_comparator_bit_cycles, 16 * 6);
+        assert_eq!(r.counts.west_cg_cell_cycles, 6); // one ICG, 6 loads
+        assert_eq!(r.c, base.c);
     }
 }

@@ -2,15 +2,16 @@
 //! does to one stream, slot by slot (the debugging artifact an RTL
 //! engineer would pull from a simulation dump).
 //!
-//! The tracer replays the exact edge semantics of the simulators
-//! (zero-detect first, then BIC on the surviving values) and reports,
-//! per stream slot: the raw word, gating, the transmitted word, the inv
-//! sideband, and the cumulative data-line toggles — which are asserted
-//! (tests + `trace` CLI) to match the analytic model's lane accounting.
+//! The tracer replays one edge's [`EdgeStack`] through the same
+//! [`EdgeCoder`](crate::coding::EdgeCoder) front-end the simulators use
+//! (gating first, then bus coding) and reports, per stream slot: the raw
+//! word, gating, the transmitted word, the packed sideband, and the
+//! cumulative data-line toggles — which are asserted (tests + `trace`
+//! CLI) to match the analytic model's lane accounting.
 
 use crate::activity::ham16;
 use crate::bf16::Bf16;
-use crate::coding::{BicEncoder, BicMode, BicPolicy};
+use crate::coding::EdgeStack;
 
 /// One stream slot as seen at the array edge.
 #[derive(Clone, Debug, PartialEq)]
@@ -18,11 +19,11 @@ pub struct TraceRow {
     pub slot: usize,
     /// Raw incoming value.
     pub raw: Bf16,
-    /// Zero-gated (pipeline frozen, is-zero sideband asserted)?
+    /// Gated (pipeline frozen, gate sideband asserted)?
     pub gated: bool,
     /// Word actually driven onto the bus (None when gated).
     pub tx: Option<Bf16>,
-    /// inv sideband bits driven with the word.
+    /// Packed transform sideband bits driven with the word.
     pub inv: u8,
     /// Data-line toggles this slot contributed (per register).
     pub toggles: u32,
@@ -30,21 +31,17 @@ pub struct TraceRow {
     pub cumulative_toggles: u64,
 }
 
-/// Trace one lane under the given per-lane coding (zvcg + BIC mode).
-pub fn trace_lane(
-    stream: &[Bf16],
-    zvcg: bool,
-    bic: BicMode,
-    policy: BicPolicy,
-) -> Vec<TraceRow> {
-    let mut enc = BicEncoder::new(bic, policy);
+/// Trace one lane under an edge's codec stack.
+pub fn trace_lane(stream: &[Bf16], edge: &EdgeStack) -> Vec<TraceRow> {
+    let mut coder = edge.coder();
     let mut prev = 0u16;
     let mut total = 0u64;
     stream
         .iter()
         .enumerate()
         .map(|(slot, &raw)| {
-            if zvcg && raw.is_zero() {
+            let s = coder.next(raw);
+            if s.gated {
                 return TraceRow {
                     slot,
                     raw,
@@ -55,20 +52,15 @@ pub fn trace_lane(
                     cumulative_toggles: total,
                 };
             }
-            let e = if bic != BicMode::None {
-                enc.encode(raw)
-            } else {
-                crate::coding::Encoded { tx: raw, inv: 0 }
-            };
-            let toggles = ham16(prev, e.tx.0);
-            prev = e.tx.0;
+            let toggles = ham16(prev, s.word.0);
+            prev = s.word.0;
             total += toggles as u64;
             TraceRow {
                 slot,
                 raw,
                 gated: false,
-                tx: Some(e.tx),
-                inv: e.inv,
+                tx: Some(s.word),
+                inv: s.sideband,
                 toggles,
                 cumulative_toggles: total,
             }
@@ -102,7 +94,7 @@ pub fn render_trace(rows: &[TraceRow]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coding::SaCodingConfig;
+    use crate::coding::CodingStack;
     use crate::sa::{analyze_tile, Dataflow, Tile};
     use crate::util::prop::check;
     use crate::util::Rng64;
@@ -127,16 +119,14 @@ mod tests {
             let s = random_stream(rng, 48, 0.4);
             let b = vec![Bf16::ONE; 48];
             let tile = Tile::new(s.clone(), b, 1, 48, 1);
-            for (zvcg, cfg) in [
-                (false, SaCodingConfig::baseline()),
-                (true, SaCodingConfig::zvcg_only()),
-            ] {
-                let rows = trace_lane(&s, zvcg, BicMode::None, BicPolicy::Classic);
-                let counts = analyze_tile(&tile, &cfg, Dataflow::WeightStationary);
+            for spec in ["baseline", "i:zvcg"] {
+                let stack = CodingStack::parse(spec).unwrap();
+                let rows = trace_lane(&s, &stack.west);
+                let counts = analyze_tile(&tile, &stack, Dataflow::WeightStationary);
                 assert_eq!(
                     rows.last().unwrap().cumulative_toggles,
                     counts.west_data_toggles,
-                    "zvcg={zvcg}"
+                    "spec {spec}"
                 );
             }
         });
@@ -148,13 +138,9 @@ mod tests {
             let s = random_stream(rng, 32, 0.0);
             let a = vec![Bf16::ONE; 32];
             let tile = Tile::new(a, s.clone(), 1, 32, 1);
-            let rows =
-                trace_lane(&s, false, BicMode::MantissaOnly, BicPolicy::Classic);
-            let counts = analyze_tile(
-                &tile,
-                &SaCodingConfig::bic_only(),
-                Dataflow::WeightStationary,
-            );
+            let stack = CodingStack::parse("w:bic-mantissa").unwrap();
+            let rows = trace_lane(&s, &stack.north);
+            let counts = analyze_tile(&tile, &stack, Dataflow::WeightStationary);
             assert_eq!(
                 rows.last().unwrap().cumulative_toggles,
                 counts.north_data_toggles
@@ -165,7 +151,7 @@ mod tests {
     #[test]
     fn gated_rows_drive_nothing() {
         let s = vec![Bf16::ZERO, Bf16::ONE, Bf16::ZERO];
-        let rows = trace_lane(&s, true, BicMode::None, BicPolicy::Classic);
+        let rows = trace_lane(&s, &EdgeStack::parse("zvcg").unwrap());
         assert!(rows[0].gated && rows[2].gated);
         assert_eq!(rows[0].tx, None);
         assert_eq!(rows[0].toggles, 0);
@@ -176,7 +162,7 @@ mod tests {
     fn render_is_line_per_slot() {
         let mut rng = Rng64::new(1);
         let s = random_stream(&mut rng, 8, 0.3);
-        let rows = trace_lane(&s, true, BicMode::MantissaOnly, BicPolicy::Classic);
+        let rows = trace_lane(&s, &EdgeStack::parse("zvcg+bic-mantissa").unwrap());
         let text = render_trace(&rows);
         assert_eq!(text.lines().count(), 9); // header + 8 slots
         assert!(text.contains("tog"));

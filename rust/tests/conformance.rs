@@ -198,6 +198,44 @@ fn mac_side_counts_are_dataflow_invariant() {
     });
 }
 
+// ---- composed --coding stacks obey the same contract -----------------
+
+#[test]
+fn composed_spec_stacks_pass_the_full_matrix() {
+    // Stacks assembled from the spec grammar (not registry rows) must
+    // satisfy every clause: fast == reference, analytic == cycle, and
+    // bit-identical f32 outputs across dataflows.
+    use sa_lowpower::coding::CodingStack;
+    let specs = [
+        "w:zvcg+bic-full,i:zvcg+bic-mantissa",
+        "w:ddcg16-g16,i:ddcg16-g1",
+        "w:zvcg+bic-segmented+ddcg16-g4,i:zvcg+ddcg16-g8",
+        "i:zvcg+bic-exponent-mt",
+    ];
+    check("composed stacks conform", 8, |rng| {
+        let (m, k, n) = (1 + rng.below(8), 1 + rng.below(20), 1 + rng.below(8));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.5;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        let want = t.reference_result();
+        for spec in specs {
+            let stack = CodingStack::parse(spec).unwrap();
+            for df in [WS, OS] {
+                let fast = simulate_tile(&t, &stack, df);
+                let golden = simulate_tile_reference(&t, &stack, df);
+                assert_eq!(fast.counts, golden.counts, "'{spec}' {df}");
+                assert_eq!(fast.c, golden.c, "'{spec}' {df}");
+                assert_eq!(fast.c, want, "'{spec}' {df} vs f32 reference");
+                assert_eq!(
+                    AnalyticBackend.estimate(&t, &stack, df),
+                    fast.counts,
+                    "'{spec}' {df} analytic"
+                );
+            }
+        }
+    });
+}
+
 // ---- boundary: zero-K tiles are rejected at construction -------------
 
 #[test]

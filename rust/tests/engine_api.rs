@@ -3,11 +3,11 @@
 //! metric edge cases.
 
 use sa_lowpower::activity::ActivityCounts;
-use sa_lowpower::coding::SaCodingConfig;
+use sa_lowpower::coding::{CodingStack, SaCodingConfig};
 use sa_lowpower::coordinator::{ConfigResult, LayerReport, SweepReport};
 use sa_lowpower::engine::{
     BackendKind, ConfigSet, LayerJob, SaEngine, SweepDoc, SWEEP_REPORT_SCHEMA,
-    SWEEP_REPORT_SCHEMA_V1,
+    SWEEP_REPORT_SCHEMA_V1, SWEEP_REPORT_SCHEMA_V2,
 };
 use sa_lowpower::power::EnergyBreakdown;
 use sa_lowpower::util::json::Json;
@@ -50,7 +50,7 @@ fn handmade_report() -> SweepReport {
             sampled_tiles: 1,
             total_tiles: 2,
             results: vec![ConfigResult {
-                config: SaCodingConfig::baseline(),
+                stack: CodingStack::baseline(),
                 config_name: "baseline".into(),
                 counts,
                 energy,
@@ -141,7 +141,7 @@ fn handmade_transformer_report() -> SweepReport {
                 sampled_tiles: 1,
                 total_tiles: 192,
                 results: vec![ConfigResult {
-                    config: SaCodingConfig::baseline(),
+                    stack: CodingStack::baseline(),
                     config_name: "baseline".into(),
                     counts: qkv_counts,
                     energy: qkv_energy,
@@ -155,7 +155,7 @@ fn handmade_transformer_report() -> SweepReport {
                 sampled_tiles: 1,
                 total_tiles: 64,
                 results: vec![ConfigResult {
-                    config: SaCodingConfig::proposed(),
+                    stack: SaCodingConfig::proposed().stack(),
                     config_name: "proposed".into(),
                     counts: ffn_counts,
                     energy: ffn_energy,
@@ -172,9 +172,41 @@ fn handmade_transformer_report() -> SweepReport {
 /// `SWEEP_REPORT_SCHEMA` and re-pin the string.
 #[test]
 fn sweep_report_json_schema_is_pinned() {
-    let golden = include_str!("golden/sweep_report_v2.json");
+    let golden = include_str!("golden/sweep_report_v3.json");
     assert_eq!(handmade_report().to_json(), golden);
     assert!(golden.contains(SWEEP_REPORT_SCHEMA));
+}
+
+/// Backward compatibility: v2 documents (pre-stack) must keep parsing.
+/// The committed v2 golden file is the compat fixture; its per-result
+/// fields still read under the v3 walker (the v3 additions — the
+/// "stack" object and comparator count fields — are strictly additive).
+#[test]
+fn v2_schema_documents_remain_parseable() {
+    let v2 = include_str!("golden/sweep_report_v2.json");
+    let doc = SweepDoc::parse(v2).expect("v2 must stay readable");
+    assert_eq!(doc.schema, SWEEP_REPORT_SCHEMA_V2);
+    assert_eq!(doc.network, "unit");
+    assert_eq!(doc.dataflow, "ws");
+    assert_eq!(doc.layer_count, 1);
+    let json = Json::parse(v2).unwrap();
+    let result = json
+        .get("layers")
+        .unwrap()
+        .idx(0)
+        .unwrap()
+        .get("results")
+        .unwrap()
+        .idx(0)
+        .unwrap();
+    // v2 predates the per-stream stack provenance and comparator fields
+    assert!(result.get("stack").is_none());
+    assert!(result
+        .get("counts")
+        .unwrap()
+        .get("west_comparator_bit_cycles")
+        .is_none());
+    assert_eq!(result.get("coding").unwrap().as_str(), Some("baseline"));
 }
 
 /// Backward compatibility: v1 documents (pre-dataflow) must keep
@@ -199,11 +231,12 @@ fn v1_schema_documents_remain_parseable() {
     assert_eq!(layer.get("gemm").unwrap().get("k").unwrap().as_u64(), Some(8));
 }
 
-/// Golden test for the transformer workload: the v2 document over real
-/// transformer layer metadata is pinned byte-for-byte.
+/// Golden test for the transformer workload: the v3 document over real
+/// transformer layer metadata is pinned byte-for-byte, and the v2
+/// rendering of the same report is kept as a reader-compat fixture.
 #[test]
-fn transformer_sweep_report_v2_golden() {
-    let golden = include_str!("golden/sweep_report_transformer_v2.json");
+fn transformer_sweep_report_golden() {
+    let golden = include_str!("golden/sweep_report_transformer_v3.json");
     assert_eq!(handmade_transformer_report().to_json(), golden);
     let doc = SweepDoc::parse(golden).unwrap();
     assert_eq!(doc.schema, SWEEP_REPORT_SCHEMA);
@@ -211,6 +244,35 @@ fn transformer_sweep_report_v2_golden() {
     assert_eq!(doc.backend, "cycle");
     assert_eq!(doc.dataflow, "os");
     assert_eq!(doc.layer_count, 2);
+
+    let v2 = include_str!("golden/sweep_report_transformer_v2.json");
+    let doc2 = SweepDoc::parse(v2).expect("v2 transformer fixture stays readable");
+    assert_eq!(doc2.schema, SWEEP_REPORT_SCHEMA_V2);
+    assert_eq!(doc2.dataflow, "os");
+    // the v2 fixture used the old display-only coding format; v3 made
+    // it a parseable spec — both name the same design
+    let old_coding = Json::parse(v2)
+        .unwrap()
+        .get("layers")
+        .unwrap()
+        .idx(1)
+        .unwrap()
+        .get("results")
+        .unwrap()
+        .idx(0)
+        .unwrap()
+        .get("coding")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+    assert_eq!(old_coding, "w:bic-mantissa+i:zvcg");
+    assert!(CodingStack::parse(&old_coding).is_err(), "old format, unparseable");
+    assert_eq!(
+        SaCodingConfig::proposed().describe(),
+        "w:bic-mantissa,i:zvcg",
+        "the drift the spec grammar fixed"
+    );
 }
 
 #[test]
@@ -243,6 +305,29 @@ fn sweep_report_json_round_trips_from_a_real_sweep() {
             assert_eq!(
                 jr.get("config").unwrap().as_str(),
                 Some(r.config_name.as_str())
+            );
+            // the coding string is the canonical spec and re-parses to
+            // the stack that produced the counts
+            let coding = jr.get("coding").unwrap().as_str().unwrap();
+            assert_eq!(CodingStack::parse(coding).unwrap(), r.stack);
+            // per-stream stack provenance
+            let js = jr.get("stack").unwrap();
+            let names = |edge: &str| -> Vec<String> {
+                js.get(edge)
+                    .unwrap()
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.as_str().unwrap().to_string())
+                    .collect()
+            };
+            assert_eq!(
+                names("west"),
+                r.stack.west.codecs().iter().map(|c| c.name()).collect::<Vec<_>>()
+            );
+            assert_eq!(
+                names("north"),
+                r.stack.north.codecs().iter().map(|c| c.name()).collect::<Vec<_>>()
             );
             assert_eq!(
                 jr.get("counts").unwrap().get("streaming_toggles").unwrap().as_u64(),

@@ -1,7 +1,7 @@
 //! Integration: SA simulators × tiler × power model on realistic GEMMs.
 
 use sa_lowpower::bf16::{matmul_f32acc, Bf16};
-use sa_lowpower::coding::SaCodingConfig;
+use sa_lowpower::coding::{CodingStack, SaCodingConfig};
 use sa_lowpower::power::EnergyModel;
 use sa_lowpower::sa::{analyze_tile, simulate_tile, Dataflow, SaConfig};
 use sa_lowpower::util::Rng64;
@@ -32,7 +32,7 @@ fn full_gemm_through_tiles_is_functionally_exact() {
             // the numbers
             let r = simulate_tile(
                 &t,
-                &SaCodingConfig::proposed(),
+                &SaCodingConfig::proposed().stack(),
                 Dataflow::WeightStationary,
             );
             for row in 0..t.m {
@@ -60,7 +60,7 @@ fn sampled_energy_extrapolates_consistently() {
         let t = extract_tile(&g, &grid, mi, ni);
         let c = analyze_tile(
             &t,
-            &SaCodingConfig::proposed(),
+            &SaCodingConfig::proposed().stack(),
             Dataflow::WeightStationary,
         );
         total += model.energy(&c).total();
@@ -73,7 +73,7 @@ fn sampled_energy_extrapolates_consistently() {
         let t = extract_tile(&g, &grid, mi, ni);
         let c = analyze_tile(
             &t,
-            &SaCodingConfig::proposed(),
+            &SaCodingConfig::proposed().stack(),
             Dataflow::WeightStationary,
         );
         sampled += model.energy(&c).total();
@@ -95,14 +95,14 @@ fn proposed_beats_baseline_on_relu_like_gemm() {
         base += model
             .energy(&analyze_tile(
                 &t,
-                &SaCodingConfig::baseline(),
+                &CodingStack::baseline(),
                 Dataflow::WeightStationary,
             ))
             .total();
         prop += model
             .energy(&analyze_tile(
                 &t,
-                &SaCodingConfig::proposed(),
+                &SaCodingConfig::proposed().stack(),
                 Dataflow::WeightStationary,
             ))
             .total();
@@ -123,10 +123,11 @@ fn cycle_and_analytic_agree_through_the_tiler() {
     for &(mi, ni) in &TilePlan::exhaustive(&grid).picks {
         let t = extract_tile(&g, &grid, mi, ni);
         for cfg in [
-            SaCodingConfig::baseline(),
-            SaCodingConfig::proposed(),
-            SaCodingConfig::bic_only(),
-            SaCodingConfig::zvcg_only(),
+            SaCodingConfig::baseline().stack(),
+            SaCodingConfig::proposed().stack(),
+            SaCodingConfig::bic_only().stack(),
+            SaCodingConfig::zvcg_only().stack(),
+            CodingStack::parse("w:ddcg16-g4,i:ddcg16-g4").unwrap(),
         ] {
             for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
                 assert_eq!(

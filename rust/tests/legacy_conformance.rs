@@ -1,0 +1,531 @@
+//! Bit-exact migration contract for the codec-stack redesign.
+//!
+//! This file contains a **frozen copy** of the pre-stack reference
+//! simulator (both dataflows), exactly as it pattern-matched on
+//! `SaCodingConfig`'s `BicMode` fields and ZVCG booleans before the
+//! `StreamCodec`/`CodingStack` migration. The tests assert that, for
+//! every registry named config (plus the policy/input-side/weight-gating
+//! extras) × {ws, os} × {analytic, cycle} backend, the new codec-stack
+//! path reproduces the legacy `ActivityCounts` AND the f32 outputs
+//! exactly — shim-lowered stacks (`SaCodingConfig::stack()`) against
+//! yesterday's engine, integer for integer, bit for bit.
+//!
+//! Do not "fix" or modernise the legacy copy: its whole value is that it
+//! does not move. (The two post-migration ledger fields,
+//! `west/north_comparator_bit_cycles`, default to 0 here — pre-stack
+//! designs never charge them, which is itself part of the contract.)
+
+use sa_lowpower::activity::{ham1, ham16_masked, ham_bf16, ActivityCounts};
+use sa_lowpower::bf16::Bf16;
+use sa_lowpower::coding::{
+    decode, BicEncoder, BicMode, BicPolicy, Encoded, SaCodingConfig,
+};
+use sa_lowpower::engine::{
+    AnalyticBackend, ConfigRegistry, CycleBackend, EstimatorBackend,
+};
+use sa_lowpower::sa::{simulate_tile, simulate_tile_reference, Dataflow, Tile};
+use sa_lowpower::util::prop::check;
+use sa_lowpower::util::Rng64;
+
+// =====================================================================
+// Frozen legacy reference simulator (pre-stack, verbatim semantics)
+// =====================================================================
+
+#[derive(Clone, Copy, Debug)]
+struct EdgeSlot {
+    gated: bool,
+    data: Bf16,
+    inv: u8,
+}
+
+fn legacy_edge_stream(
+    raw: &[Bf16],
+    zvcg: bool,
+    bic: BicMode,
+    policy: BicPolicy,
+    counts: &mut ActivityCounts,
+) -> Vec<EdgeSlot> {
+    let mut enc = BicEncoder::new(bic, policy);
+    raw.iter()
+        .map(|&v| {
+            if zvcg {
+                counts.zero_detect_ops += 1;
+            }
+            if zvcg && v.is_zero() {
+                return EdgeSlot { gated: true, data: Bf16::ZERO, inv: 0 };
+            }
+            let e: Encoded = if bic != BicMode::None {
+                counts.encoder_ops += 1;
+                enc.encode(v)
+            } else {
+                Encoded { tx: v, inv: 0 }
+            };
+            EdgeSlot { gated: false, data: e.tx, inv: e.inv }
+        })
+        .collect()
+}
+
+fn legacy_edge_streams(
+    tile: &Tile,
+    cfg: &SaCodingConfig,
+    counts: &mut ActivityCounts,
+) -> (Vec<Vec<EdgeSlot>>, Vec<Vec<EdgeSlot>>) {
+    let west = (0..tile.m)
+        .map(|i| {
+            legacy_edge_stream(
+                tile.a_row(i),
+                cfg.input_zvcg,
+                cfg.input_bic,
+                cfg.bic_policy,
+                counts,
+            )
+        })
+        .collect();
+    let north = (0..tile.n)
+        .map(|j| {
+            legacy_edge_stream(
+                tile.b_col(j),
+                cfg.weight_zvcg,
+                cfg.weight_bic,
+                cfg.bic_policy,
+                counts,
+            )
+        })
+        .collect();
+    (west, north)
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Stage {
+    data: Bf16,
+    zero: bool,
+    inv: u8,
+}
+
+fn bic_cover_mask(mode: BicMode) -> u16 {
+    mode.segments().iter().fold(0u16, |acc, &m| acc | m)
+}
+
+struct LegacyResult {
+    counts: ActivityCounts,
+    c: Vec<f32>,
+}
+
+fn legacy_reference(
+    tile: &Tile,
+    cfg: &SaCodingConfig,
+    dataflow: Dataflow,
+) -> LegacyResult {
+    match dataflow {
+        Dataflow::WeightStationary => legacy_ws_reference(tile, cfg),
+        Dataflow::OutputStationary => legacy_os_reference(tile, cfg),
+    }
+}
+
+fn legacy_ws_reference(tile: &Tile, cfg: &SaCodingConfig) -> LegacyResult {
+    let (m, k, n) = (tile.m, tile.k, tile.n);
+    let mut counts = ActivityCounts::default();
+    let (west, north) = legacy_edge_streams(tile, cfg, &mut counts);
+
+    let mut a_st = vec![Stage::default(); m * n];
+    let mut b_st = vec![Stage::default(); m * n];
+    let mut mlat_a = vec![Bf16::ZERO; m * n];
+    let mut mlat_b = vec![Bf16::ZERO; m * n];
+    let mut acc = vec![0f32; m * n];
+
+    let idx = |i: usize, j: usize| i * n + j;
+    let total_cycles = (k + m + n) as i64;
+
+    for c in 0..total_cycles {
+        for i in 0..m {
+            for j in 0..n {
+                let kk = c - 1 - i as i64 - j as i64;
+                if kk < 0 || kk >= k as i64 {
+                    continue;
+                }
+                let p = idx(i, j);
+                if cfg.input_zvcg || cfg.weight_zvcg {
+                    counts.acc_cg_cell_cycles += 1;
+                }
+                let gated = a_st[p].zero || b_st[p].zero;
+                if gated {
+                    counts.gated_macs += 1;
+                    continue;
+                }
+                let a = decode(
+                    cfg.input_bic,
+                    Encoded { tx: a_st[p].data, inv: a_st[p].inv },
+                );
+                let b = decode(
+                    cfg.weight_bic,
+                    Encoded { tx: b_st[p].data, inv: b_st[p].inv },
+                );
+                counts.mult_input_toggles +=
+                    (ham_bf16(mlat_a[p], a) + ham_bf16(mlat_b[p], b)) as u64;
+                mlat_a[p] = a;
+                mlat_b[p] = b;
+                counts.acc_clock_events += 32;
+                if a.is_zero() || b.is_zero() {
+                    counts.zero_product_macs += 1;
+                } else {
+                    counts.active_macs += 1;
+                    acc[p] += a.to_f32() * b.to_f32();
+                }
+            }
+        }
+
+        for i in 0..m {
+            for j in (0..n).rev() {
+                let kk = c - i as i64 - j as i64;
+                if kk < 0 || kk >= k as i64 {
+                    continue;
+                }
+                let p = idx(i, j);
+                let incoming = if j == 0 {
+                    let s = west[i][kk as usize];
+                    Stage { data: s.data, zero: s.gated, inv: s.inv }
+                } else {
+                    a_st[idx(i, j - 1)]
+                };
+                if cfg.input_zvcg {
+                    counts.west_sideband_toggles +=
+                        ham1(a_st[p].zero, incoming.zero) as u64;
+                    counts.west_sideband_clock_events += 1;
+                    counts.west_cg_cell_cycles += 1;
+                }
+                let gate = cfg.input_zvcg && incoming.zero;
+                if gate {
+                    a_st[p].zero = true;
+                } else {
+                    counts.west_data_toggles +=
+                        ham_bf16(a_st[p].data, incoming.data) as u64;
+                    counts.west_clock_events += 16;
+                    if cfg.input_bic != BicMode::None {
+                        let lines = cfg.input_bic.inv_lines() as u64;
+                        counts.decoder_toggles += ham16_masked(
+                            a_st[p].data.0,
+                            incoming.data.0,
+                            bic_cover_mask(cfg.input_bic),
+                        )
+                            as u64
+                            + (a_st[p].inv ^ incoming.inv).count_ones() as u64;
+                        counts.west_sideband_toggles +=
+                            (a_st[p].inv ^ incoming.inv).count_ones() as u64;
+                        counts.west_sideband_clock_events += lines;
+                    }
+                    a_st[p].data = incoming.data;
+                    a_st[p].inv = incoming.inv;
+                    a_st[p].zero = false;
+                }
+            }
+        }
+
+        for j in 0..n {
+            for i in (0..m).rev() {
+                let kk = c - i as i64 - j as i64;
+                if kk < 0 || kk >= k as i64 {
+                    continue;
+                }
+                let p = idx(i, j);
+                let incoming = if i == 0 {
+                    let s = north[j][kk as usize];
+                    Stage { data: s.data, zero: s.gated, inv: s.inv }
+                } else {
+                    b_st[idx(i - 1, j)]
+                };
+                if cfg.weight_zvcg {
+                    counts.north_sideband_toggles +=
+                        ham1(b_st[p].zero, incoming.zero) as u64;
+                    counts.north_sideband_clock_events += 1;
+                    counts.north_cg_cell_cycles += 1;
+                }
+                let gate = cfg.weight_zvcg && incoming.zero;
+                if gate {
+                    b_st[p].zero = true;
+                } else {
+                    counts.north_data_toggles +=
+                        ham_bf16(b_st[p].data, incoming.data) as u64;
+                    counts.north_clock_events += 16;
+                    if cfg.weight_bic != BicMode::None {
+                        let lines = cfg.weight_bic.inv_lines() as u64;
+                        counts.decoder_toggles += ham16_masked(
+                            b_st[p].data.0,
+                            incoming.data.0,
+                            bic_cover_mask(cfg.weight_bic),
+                        )
+                            as u64
+                            + (b_st[p].inv ^ incoming.inv).count_ones() as u64;
+                        counts.north_sideband_toggles +=
+                            (b_st[p].inv ^ incoming.inv).count_ones() as u64;
+                        counts.north_sideband_clock_events += lines;
+                    }
+                    b_st[p].data = incoming.data;
+                    b_st[p].inv = incoming.inv;
+                    b_st[p].zero = false;
+                }
+            }
+        }
+    }
+
+    counts.unload_values += (m * n) as u64;
+    counts.cycles += total_cycles as u64;
+    LegacyResult { counts, c: acc }
+}
+
+fn legacy_os_reference(tile: &Tile, cfg: &SaCodingConfig) -> LegacyResult {
+    let (m, k, n) = (tile.m, tile.k, tile.n);
+    let mut counts = ActivityCounts::default();
+    let (west, north) = legacy_edge_streams(tile, cfg, &mut counts);
+
+    let mut a_reg = vec![Stage::default(); m];
+    let mut b_reg = vec![Stage::default(); n];
+    let mut mlat_a = vec![Bf16::ZERO; m * n];
+    let mut mlat_b = vec![Bf16::ZERO; m * n];
+    let mut acc = vec![0f32; m * n];
+
+    let total_cycles = k + 1;
+    for c in 0..total_cycles {
+        if c >= 1 {
+            for i in 0..m {
+                for j in 0..n {
+                    if cfg.input_zvcg || cfg.weight_zvcg {
+                        counts.acc_cg_cell_cycles += 1;
+                    }
+                    if a_reg[i].zero || b_reg[j].zero {
+                        counts.gated_macs += 1;
+                        continue;
+                    }
+                    let a = decode(
+                        cfg.input_bic,
+                        Encoded { tx: a_reg[i].data, inv: a_reg[i].inv },
+                    );
+                    let b = decode(
+                        cfg.weight_bic,
+                        Encoded { tx: b_reg[j].data, inv: b_reg[j].inv },
+                    );
+                    let p = i * n + j;
+                    counts.mult_input_toggles +=
+                        (ham_bf16(mlat_a[p], a) + ham_bf16(mlat_b[p], b)) as u64;
+                    mlat_a[p] = a;
+                    mlat_b[p] = b;
+                    counts.acc_clock_events += 32;
+                    if a.is_zero() || b.is_zero() {
+                        counts.zero_product_macs += 1;
+                    } else {
+                        counts.active_macs += 1;
+                        acc[p] += a.to_f32() * b.to_f32();
+                    }
+                }
+            }
+        }
+
+        if c < k {
+            for i in 0..m {
+                let s = west[i][c];
+                if cfg.input_zvcg {
+                    counts.west_sideband_toggles +=
+                        ham1(a_reg[i].zero, s.gated) as u64;
+                    counts.west_sideband_clock_events += 1;
+                    counts.west_cg_cell_cycles += 1;
+                }
+                if cfg.input_zvcg && s.gated {
+                    a_reg[i].zero = true;
+                } else {
+                    counts.west_data_toggles +=
+                        ham_bf16(a_reg[i].data, s.data) as u64;
+                    counts.west_clock_events += 16;
+                    if cfg.input_bic != BicMode::None {
+                        let inv_diff =
+                            (a_reg[i].inv ^ s.inv).count_ones() as u64;
+                        counts.decoder_toggles += n as u64
+                            * (ham16_masked(
+                                a_reg[i].data.0,
+                                s.data.0,
+                                bic_cover_mask(cfg.input_bic),
+                            ) as u64
+                                + inv_diff);
+                        counts.west_sideband_toggles += inv_diff;
+                        counts.west_sideband_clock_events +=
+                            cfg.input_bic.inv_lines() as u64;
+                    }
+                    a_reg[i] = Stage { data: s.data, zero: false, inv: s.inv };
+                }
+            }
+            for j in 0..n {
+                let s = north[j][c];
+                if cfg.weight_zvcg {
+                    counts.north_sideband_toggles +=
+                        ham1(b_reg[j].zero, s.gated) as u64;
+                    counts.north_sideband_clock_events += 1;
+                    counts.north_cg_cell_cycles += 1;
+                }
+                if cfg.weight_zvcg && s.gated {
+                    b_reg[j].zero = true;
+                } else {
+                    counts.north_data_toggles +=
+                        ham_bf16(b_reg[j].data, s.data) as u64;
+                    counts.north_clock_events += 16;
+                    if cfg.weight_bic != BicMode::None {
+                        let inv_diff =
+                            (b_reg[j].inv ^ s.inv).count_ones() as u64;
+                        counts.decoder_toggles += m as u64
+                            * (ham16_masked(
+                                b_reg[j].data.0,
+                                s.data.0,
+                                bic_cover_mask(cfg.weight_bic),
+                            ) as u64
+                                + inv_diff);
+                        counts.north_sideband_toggles += inv_diff;
+                        counts.north_sideband_clock_events +=
+                            cfg.weight_bic.inv_lines() as u64;
+                    }
+                    b_reg[j] = Stage { data: s.data, zero: false, inv: s.inv };
+                }
+            }
+        }
+    }
+
+    counts.unload_values += (m * n) as u64;
+    counts.cycles += total_cycles as u64;
+    LegacyResult { counts, c: acc }
+}
+
+// =====================================================================
+// The migration contract
+// =====================================================================
+
+fn random_tile(
+    rng: &mut Rng64,
+    m: usize,
+    k: usize,
+    n: usize,
+    pz_a: f64,
+    pz_b: f64,
+) -> Tile {
+    let a: Vec<f32> = (0..m * k)
+        .map(|_| if rng.chance(pz_a) { 0.0 } else { rng.normal() as f32 })
+        .collect();
+    let b: Vec<f32> = (0..k * n)
+        .map(|_| if rng.chance(pz_b) { 0.0 } else { (rng.normal() * 0.1) as f32 })
+        .collect();
+    Tile::from_f32(&a, &b, m, k, n)
+}
+
+/// Every closed-struct design the legacy engine could express: the
+/// registry's legacy rows plus the policy / input-BIC / weight-gating
+/// extras the old property suite covered.
+fn legacy_configs() -> Vec<(String, SaCodingConfig)> {
+    let mut v: Vec<(String, SaCodingConfig)> = ConfigRegistry::entries()
+        .iter()
+        .filter_map(|e| e.legacy.map(|c| (e.name.to_string(), c)))
+        .collect();
+    v.push((
+        "proposed+w-zvcg".into(),
+        SaCodingConfig { weight_zvcg: true, ..SaCodingConfig::proposed() },
+    ));
+    v.push((
+        "input-bic".into(),
+        SaCodingConfig {
+            input_bic: BicMode::MantissaOnly,
+            ..SaCodingConfig::baseline()
+        },
+    ));
+    v.push((
+        "input-zvcg+bic".into(),
+        SaCodingConfig {
+            input_bic: BicMode::Segmented,
+            ..SaCodingConfig::proposed()
+        },
+    ));
+    v.push((
+        "proposed-mt".into(),
+        SaCodingConfig {
+            bic_policy: BicPolicy::MinTransitions,
+            ..SaCodingConfig::proposed()
+        },
+    ));
+    v
+}
+
+const BOTH: [Dataflow; 2] =
+    [Dataflow::WeightStationary, Dataflow::OutputStationary];
+
+#[test]
+fn stack_engines_reproduce_legacy_counts_and_outputs() {
+    check("new stack path == frozen legacy reference", 12, |rng| {
+        let (m, k, n) = (1 + rng.below(7), 1 + rng.below(18), 1 + rng.below(7));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.4;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        for (name, cfg) in legacy_configs() {
+            let stack = cfg.stack();
+            for df in BOTH {
+                let legacy = legacy_reference(&t, &cfg, df);
+                let reference = simulate_tile_reference(&t, &stack, df);
+                assert_eq!(
+                    reference.counts, legacy.counts,
+                    "reference counts drifted: '{name}' {df} {m}x{k}x{n}"
+                );
+                assert_eq!(
+                    reference.c, legacy.c,
+                    "reference outputs drifted: '{name}' {df}"
+                );
+                let fast = simulate_tile(&t, &stack, df);
+                assert_eq!(fast.counts, legacy.counts, "fast counts: '{name}' {df}");
+                assert_eq!(fast.c, legacy.c, "fast outputs: '{name}' {df}");
+                // both estimator backends, per the acceptance criterion
+                let a = AnalyticBackend.estimate(&t, &stack, df);
+                let c = CycleBackend.estimate(&t, &stack, df);
+                assert_eq!(a, legacy.counts, "analytic backend: '{name}' {df}");
+                assert_eq!(c, legacy.counts, "cycle backend: '{name}' {df}");
+            }
+        }
+    });
+}
+
+#[test]
+fn stack_engines_reproduce_legacy_on_degenerate_tiles() {
+    let mut rng = Rng64::new(0x1EA5);
+    let tiles = vec![
+        random_tile(&mut rng, 1, 1, 1, 0.3, 0.1),
+        Tile::from_f32(&[0.0; 3 * 8], &[0.5; 8 * 4], 3, 8, 4),
+        Tile::from_f32(&[0.25; 3 * 8], &[0.0; 8 * 4], 3, 8, 4),
+        random_tile(&mut rng, 7, 1, 1, 0.5, 0.5),
+        random_tile(&mut rng, 1, 64, 1, 0.6, 0.2),
+    ];
+    for t in &tiles {
+        for (name, cfg) in legacy_configs() {
+            let stack = cfg.stack();
+            for df in BOTH {
+                let legacy = legacy_reference(t, &cfg, df);
+                let fast = simulate_tile(t, &stack, df);
+                assert_eq!(
+                    fast.counts, legacy.counts,
+                    "'{name}' {df} {}x{}x{}",
+                    t.m, t.k, t.n
+                );
+                assert_eq!(fast.c, legacy.c, "'{name}' {df}");
+                assert_eq!(
+                    AnalyticBackend.estimate(t, &stack, df),
+                    legacy.counts,
+                    "'{name}' {df}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn legacy_designs_never_charge_the_new_ledger_fields() {
+    // pre-stack designs have no register clock gating: the comparator
+    // fields the v3 ledger added must stay zero through the shim
+    let mut rng = Rng64::new(77);
+    let t = random_tile(&mut rng, 5, 12, 5, 0.4, 0.2);
+    for (name, cfg) in legacy_configs() {
+        for df in BOTH {
+            let c = AnalyticBackend.estimate(&t, &cfg.stack(), df);
+            assert_eq!(c.west_comparator_bit_cycles, 0, "'{name}' {df}");
+            assert_eq!(c.north_comparator_bit_cycles, 0, "'{name}' {df}");
+        }
+    }
+}

@@ -10,7 +10,9 @@ use sa_lowpower::activity::{
     ham16_slice, ham16_slice_masked, pack4, stream_toggles, ActivityCounts,
 };
 use sa_lowpower::bf16::Bf16;
-use sa_lowpower::coding::{decode, BicEncoder, BicMode, BicPolicy, SaCodingConfig};
+use sa_lowpower::coding::{
+    decode, BicEncoder, BicMode, BicPolicy, CodingStack, SaCodingConfig,
+};
 use sa_lowpower::engine::{AnalyticBackend, CycleBackend, EstimatorBackend};
 use sa_lowpower::power::EnergyModel;
 use sa_lowpower::sa::{
@@ -39,8 +41,12 @@ fn random_tile(
     Tile::from_f32(&a, &b, m, k, n)
 }
 
-fn all_configs() -> Vec<SaCodingConfig> {
-    let mut v: Vec<SaCodingConfig> = [
+fn stack(spec: &str) -> CodingStack {
+    CodingStack::parse(spec).unwrap_or_else(|e| panic!("{spec}: {e}"))
+}
+
+fn all_configs() -> Vec<CodingStack> {
+    let mut v: Vec<CodingStack> = [
         "baseline",
         "proposed",
         "bic-only",
@@ -50,18 +56,30 @@ fn all_configs() -> Vec<SaCodingConfig> {
         "bic-exponent",
     ]
     .iter()
-    .map(|n| SaCodingConfig::by_name(n).unwrap())
+    .map(|n| SaCodingConfig::by_name(n).unwrap().stack())
     .collect();
-    // ablation extras: weight gating, input BIC, min-transition policy
-    v.push(SaCodingConfig { weight_zvcg: true, ..SaCodingConfig::proposed() });
-    v.push(SaCodingConfig {
-        input_bic: BicMode::MantissaOnly,
-        ..SaCodingConfig::baseline()
-    });
-    v.push(SaCodingConfig {
-        bic_policy: BicPolicy::MinTransitions,
-        ..SaCodingConfig::proposed()
-    });
+    // legacy ablation extras: weight gating, input BIC, min-transitions
+    v.push(
+        SaCodingConfig { weight_zvcg: true, ..SaCodingConfig::proposed() }.stack(),
+    );
+    v.push(
+        SaCodingConfig {
+            input_bic: BicMode::MantissaOnly,
+            ..SaCodingConfig::baseline()
+        }
+        .stack(),
+    );
+    v.push(
+        SaCodingConfig {
+            bic_policy: BicPolicy::MinTransitions,
+            ..SaCodingConfig::proposed()
+        }
+        .stack(),
+    );
+    // composed spec-grammar stacks the closed struct never expressed
+    v.push(stack("w:ddcg16-g4,i:ddcg16-g4"));
+    v.push(stack("w:zvcg+bic-full+ddcg16-g8,i:zvcg+ddcg16-g2"));
+    v.push(stack("i:zvcg+bic-segmented-mt"));
     v
 }
 
@@ -87,7 +105,7 @@ fn analytic_equals_cycle_sim_paper_geometry() {
     // The paper's exact geometry: 16×16 PEs, long K streams.
     check("analytic == cycle-sim at 16x16, long K", 5, |rng| {
         let t = random_tile(rng, 16, 256, 16, 0.5, 0.05);
-        for cfg in [SaCodingConfig::baseline(), SaCodingConfig::proposed()] {
+        for cfg in [CodingStack::baseline(), SaCodingConfig::proposed().stack()] {
             for df in [WS, OS] {
                 assert_eq!(
                     analyze_tile(&t, &cfg, df),
@@ -165,8 +183,8 @@ fn proposed_never_increases_streaming_toggles() {
         let pz = rng.uniform();
         let t = random_tile(rng, 12, 48, 12, pz, 0.1);
         for df in [WS, OS] {
-            let base = analyze_tile(&t, &SaCodingConfig::baseline(), df);
-            let prop = analyze_tile(&t, &SaCodingConfig::proposed(), df);
+            let base = analyze_tile(&t, &CodingStack::baseline(), df);
+            let prop = analyze_tile(&t, &SaCodingConfig::proposed().stack(), df);
             assert!(prop.west_data_toggles <= base.west_data_toggles);
             assert!(prop.north_data_toggles <= base.north_data_toggles);
         }
@@ -181,10 +199,13 @@ fn bic_never_increases_hamming_on_any_stream() {
     check("BIC Hamming bound per stream and dataflow", 20, |rng| {
         let t = random_tile(rng, 6, 40, 6, 0.3, 0.1);
         for df in [WS, OS] {
-            let base = analyze_tile(&t, &SaCodingConfig::baseline(), df);
+            let base = analyze_tile(&t, &CodingStack::baseline(), df);
             for name in ["bic-only", "bic-full", "bic-segmented", "bic-exponent"] {
-                let c =
-                    analyze_tile(&t, &SaCodingConfig::by_name(name).unwrap(), df);
+                let c = analyze_tile(
+                    &t,
+                    &SaCodingConfig::by_name(name).unwrap().stack(),
+                    df,
+                );
                 assert!(
                     c.north_data_toggles <= base.north_data_toggles,
                     "{name} {df}: north {} > {}",
@@ -195,7 +216,8 @@ fn bic_never_increases_hamming_on_any_stream() {
             let input_bic = SaCodingConfig {
                 input_bic: sa_lowpower::coding::BicMode::MantissaOnly,
                 ..SaCodingConfig::baseline()
-            };
+            }
+            .stack();
             let c = analyze_tile(&t, &input_bic, df);
             assert!(
                 c.west_data_toggles <= base.west_data_toggles,
@@ -217,7 +239,7 @@ fn zvcg_savings_monotone_in_sparsity() {
             for pz10 in [1usize, 3, 5, 7, 9] {
                 let mut r2 = Rng64::new(seed);
                 let t = random_tile(&mut r2, 8, 64, 8, pz10 as f64 / 10.0, 0.0);
-                let c = analyze_tile(&t, &SaCodingConfig::zvcg_only(), df);
+                let c = analyze_tile(&t, &stack("i:zvcg"), df);
                 assert!(
                     c.gated_macs >= gated_prev,
                     "{df} sparsity {pz10}/10: {} < {gated_prev}",
@@ -267,7 +289,7 @@ fn zvcg_energy_monotone_in_operand_zero_fraction() {
                 assert!((0.0..=1.0).contains(&zf), "zero frac {zf}");
                 assert!(zf >= prev_zf, "nested sets: {zf} < {prev_zf}");
                 prev_zf = zf;
-                let counts = analyze_tile(&t, &SaCodingConfig::zvcg_only(), df);
+                let counts = analyze_tile(&t, &stack("i:zvcg"), df);
                 let e = model.energy(&counts).total();
                 assert!(
                     e <= prev_energy,
@@ -329,8 +351,8 @@ fn counts_additive_ledger_algebra() {
     check("ledger addition is component-wise", 20, |rng| {
         let t1 = random_tile(rng, 4, 16, 4, 0.3, 0.1);
         let t2 = random_tile(rng, 4, 16, 4, 0.5, 0.2);
-        let c1 = analyze_tile(&t1, &SaCodingConfig::proposed(), WS);
-        let c2 = analyze_tile(&t2, &SaCodingConfig::proposed(), WS);
+        let c1 = analyze_tile(&t1, &SaCodingConfig::proposed().stack(), WS);
+        let c2 = analyze_tile(&t2, &SaCodingConfig::proposed().stack(), WS);
         let mut sum = ActivityCounts::default();
         sum.add(&c1);
         sum.add(&c2);
@@ -509,6 +531,170 @@ fn stream_toggles_packed_path_matches_pairwise_walk() {
             prev = v.0;
         }
         assert_eq!(stream_toggles(reset, &s), want);
+    });
+}
+
+
+// ---- codec-stack satellite properties --------------------------------
+
+#[test]
+fn per_codec_decode_encode_identity_on_arbitrary_streams() {
+    // decode∘encode is the identity on arbitrary bf16 streams, for every
+    // registered codec — and gating happens exactly on zeros.
+    use sa_lowpower::coding::{codec_by_name, known_codec_names, CodedWord};
+    check("decode∘encode identity per codec", 60, |rng| {
+        for name in known_codec_names() {
+            let codec = codec_by_name(&name).unwrap();
+            let mut lane = codec.begin();
+            for _ in 0..48 {
+                let v = Bf16::from_bits(rng.next_u32() as u16);
+                match lane.encode(v) {
+                    CodedWord::Gated => assert!(v.is_zero(), "{name}"),
+                    CodedWord::Tx { word, sideband } => {
+                        assert_eq!(codec.decode(word, sideband).0, v.0, "{name}");
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Stream-side ledger view (everything charged to the two stream edges).
+fn stream_side(c: &sa_lowpower::activity::ActivityCounts) -> [u64; 15] {
+    [
+        c.west_data_toggles,
+        c.west_clock_events,
+        c.west_sideband_toggles,
+        c.west_sideband_clock_events,
+        c.zero_detect_ops,
+        c.west_cg_cell_cycles,
+        c.west_comparator_bit_cycles,
+        c.north_data_toggles,
+        c.north_clock_events,
+        c.north_sideband_toggles,
+        c.north_sideband_clock_events,
+        c.encoder_ops,
+        c.decoder_toggles,
+        c.north_cg_cell_cycles,
+        c.north_comparator_bit_cycles,
+    ]
+}
+
+#[test]
+fn stack_charge_is_additive_across_edges() {
+    // The two edges are independent lane families: the stream-side
+    // charge of {w:X, i:Y} equals the charge of {w:X} plus the charge
+    // of {i:Y} (baseline contributes zero overhead), on both backends.
+    check("edge charges add", 15, |rng| {
+        let (m, k, n) = (1 + rng.below(8), 1 + rng.below(24), 1 + rng.below(8));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.4;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        for (w, i) in [
+            ("bic-mantissa", "zvcg"),
+            ("zvcg+bic-full", "ddcg16-g4"),
+            ("ddcg16-g8", "zvcg+bic-segmented"),
+        ] {
+            let combined = stack(&format!("w:{w},i:{i}"));
+            let w_only = stack(&format!("w:{w}"));
+            let i_only = stack(&format!("i:{i}"));
+            for df in [WS, OS] {
+                for backend in
+                    [&AnalyticBackend as &dyn EstimatorBackend, &CycleBackend]
+                {
+                    let both = stream_side(&backend.estimate(&t, &combined, df));
+                    let ws = stream_side(&backend.estimate(&t, &w_only, df));
+                    let is = stream_side(&backend.estimate(&t, &i_only, df));
+                    let base = stream_side(&backend.estimate(
+                        &t,
+                        &CodingStack::baseline(),
+                        df,
+                    ));
+                    for f in 0..both.len() {
+                        assert_eq!(
+                            both[f],
+                            ws[f] + is[f] - base[f],
+                            "field {f}, w:{w} i:{i} {df} {}",
+                            backend.name()
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn commuting_codec_orders_charge_identically() {
+    // Where codecs commute (a register clock gate is position-independent
+    // relative to gating/coding), the stack's charge is order-stable:
+    // both accepted orders produce the identical full ledger.
+    check("order-stable charge for commuting codecs", 15, |rng| {
+        let (m, k, n) = (1 + rng.below(7), 1 + rng.below(20), 1 + rng.below(7));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.4;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        for (a, b) in [
+            ("w:bic-mantissa+ddcg16-g4", "w:ddcg16-g4+bic-mantissa"),
+            ("i:zvcg+ddcg16-g2", "i:ddcg16-g2+zvcg"),
+            (
+                "w:zvcg+bic-full+ddcg16-g8,i:zvcg",
+                "w:ddcg16-g8+zvcg+bic-full,i:zvcg",
+            ),
+        ] {
+            let sa = stack(a);
+            let sb = stack(b);
+            for df in [WS, OS] {
+                let ca = AnalyticBackend.estimate(&t, &sa, df);
+                let cb = AnalyticBackend.estimate(&t, &sb, df);
+                assert_eq!(ca, cb, "'{a}' vs '{b}' {df}");
+                let cyc_a = CycleBackend.estimate(&t, &sa, df);
+                assert_eq!(cyc_a, ca, "'{a}' cycle vs analytic {df}");
+            }
+        }
+    });
+}
+
+#[test]
+fn bic_never_increases_hamming_per_stack() {
+    // The satellite form of the BIC bound: appending a BIC codec to ANY
+    // base stack (empty, gated, clock-gated, or both) may only lower or
+    // keep that edge's data-line toggles, per dataflow.
+    check("BIC Hamming bound holds per stack", 12, |rng| {
+        let t = random_tile(rng, 6, 40, 6, 0.3, 0.1);
+        for base in ["", "zvcg", "ddcg16-g4", "zvcg+ddcg16-g2"] {
+            for bic in ["bic-mantissa", "bic-full", "bic-segmented", "bic-exponent"]
+            {
+                let without = if base.is_empty() {
+                    CodingStack::baseline()
+                } else {
+                    stack(&format!("w:{base}"))
+                };
+                let spec = if base.is_empty() {
+                    format!("w:{bic}")
+                } else {
+                    // keep the valid order: gate, then code, then clock-gate
+                    let with_bic = match base {
+                        "zvcg" => format!("zvcg+{bic}"),
+                        "ddcg16-g4" => format!("{bic}+ddcg16-g4"),
+                        "zvcg+ddcg16-g2" => format!("zvcg+{bic}+ddcg16-g2"),
+                        _ => unreachable!(),
+                    };
+                    format!("w:{with_bic}")
+                };
+                let with = stack(&spec);
+                for df in [WS, OS] {
+                    let c_without = analyze_tile(&t, &without, df);
+                    let c_with = analyze_tile(&t, &with, df);
+                    assert!(
+                        c_with.north_data_toggles <= c_without.north_data_toggles,
+                        "base '{base}' + {bic} {df}: {} > {}",
+                        c_with.north_data_toggles,
+                        c_without.north_data_toggles
+                    );
+                }
+            }
+        }
     });
 }
 
