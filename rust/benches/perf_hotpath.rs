@@ -92,6 +92,49 @@ fn main() {
         }
     }
 
+    // 2b. count-once/price-many: one shared TileActivity pass priced
+    //     under the full ablation set vs one full estimate per stack
+    //     (the per-tile kernel behind the sweep_throughput bench).
+    let stacks: Vec<_> = sa_lowpower::engine::ConfigSet::ablation()
+        .iter()
+        .map(|(_, s)| s.clone())
+        .collect();
+    for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
+        let m_seq = bench(
+            &format!("estimate/16x256x16/ablation8/per-config/{df}"),
+            2,
+            10,
+            || {
+                for s in &stacks {
+                    black_box(simulate_tile(black_box(&t_small), s, df));
+                }
+            },
+        );
+        let m_batch = bench(
+            &format!("estimate/16x256x16/ablation8/batched/{df}"),
+            2,
+            10,
+            || {
+                black_box(sa_lowpower::sa::simulate_tile_many(
+                    black_box(&t_small),
+                    &stacks,
+                    df,
+                ));
+            },
+        );
+        let per_stack =
+            stacks.len() as f64 * t_small.mac_slots() as f64;
+        println!(
+            "    -> {:.1} Mslots/s batched  (vs per-config: {:.2}x)",
+            per_stack / m_batch.mean.as_secs_f64() / 1e6,
+            m_seq.mean.as_secs_f64() / m_batch.mean.as_secs_f64()
+        );
+        let seq_thru = per_stack / m_seq.mean.as_secs_f64();
+        let batch_thru = per_stack / m_batch.mean.as_secs_f64();
+        set.push(m_seq, Some((seq_thru, "slots/s")));
+        set.push(m_batch, Some((batch_thru, "slots/s")));
+    }
+
     // 3. packed hamming over bus words
     let xa: Vec<u16> = (0..65536).map(|_| rng.next_u32() as u16).collect();
     let xb: Vec<u16> = (0..65536).map(|_| rng.next_u32() as u16).collect();

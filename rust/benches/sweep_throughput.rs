@@ -1,0 +1,175 @@
+//! Sweep-throughput benchmark: the count-once/price-many payoff.
+//!
+//! `cargo bench --bench sweep_throughput`
+//!
+//! Measures whole-network sweep throughput (layers/s and sampled
+//! tiles/s) for the paper and ablation config sets on both estimator
+//! backends, comparing:
+//!
+//! * **per-config** — the pre-IR baseline: a wrapper backend that hides
+//!   the batched `estimate_many` override, so every tile runs one full
+//!   estimation pass per configured stack (the trait's default
+//!   sequential loop);
+//! * **batched** — the shared `TileActivity` pass: each tile is counted
+//!   once and priced under every stack (1 worker);
+//! * **batched × N threads** — the same plus the engine's tile-granular
+//!   scheduling across all cores.
+//!
+//! Results land in `BENCH_sweep.json` at the repo root (machine-
+//! readable; tracked across PRs — EXPERIMENTS.md §Perf reads it). The
+//! acceptance bar for the refactor is ≥2× ablation-set throughput of
+//! batched over per-config on the cycle backend; the measured ratios
+//! are printed per cell.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sa_lowpower::activity::ActivityCounts;
+use sa_lowpower::coding::CodingStack;
+use sa_lowpower::engine::{
+    AnalyticBackend, ConfigSet, CycleBackend, EstimatorBackend, SaEngine,
+};
+use sa_lowpower::sa::{Dataflow, Tile};
+use sa_lowpower::util::bench::{time_once, BenchSet, Measurement};
+use sa_lowpower::workload::Network;
+
+/// Forwards per-tile estimation but does NOT override `estimate_many`,
+/// so the trait's default sequential loop runs — the one-full-pass-per-
+/// config baseline every pre-IR sweep paid.
+struct PerConfig<B>(B);
+
+impl<B: EstimatorBackend> EstimatorBackend for PerConfig<B> {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn estimate(
+        &self,
+        tile: &Tile,
+        stack: &CodingStack,
+        dataflow: Dataflow,
+    ) -> ActivityCounts {
+        self.0.estimate(tile, stack, dataflow)
+    }
+}
+
+struct Cell {
+    secs: f64,
+    layers: usize,
+    tiles: usize,
+}
+
+fn run_sweep(
+    net: &Network,
+    configs: ConfigSet,
+    backend: Arc<dyn EstimatorBackend>,
+    threads: usize,
+    tiles_per_layer: usize,
+    label: &str,
+    set: &mut BenchSet,
+) -> Cell {
+    let engine = SaEngine::builder()
+        .max_tiles_per_layer(tiles_per_layer)
+        .configs(configs)
+        .backend_impl(backend)
+        .threads(threads)
+        .build();
+    let (report, dt) = time_once(label, || engine.sweep(net));
+    let layers = report.layers.len();
+    let tiles: usize = report.layers.iter().map(|l| l.sampled_tiles).sum();
+    let secs = dt.as_secs_f64();
+    let m = Measurement {
+        name: label.to_string(),
+        iters: 1,
+        mean: dt,
+        stddev: Duration::ZERO,
+        min: dt,
+    };
+    set.push(m.clone(), Some((layers as f64 / secs, "layers/s")));
+    let mut mt = m;
+    mt.name = format!("{label}/tiles");
+    set.push(mt, Some((tiles as f64 / secs, "tiles/s")));
+    println!(
+        "    -> {:.2} layers/s, {:.2} tiles/s",
+        layers as f64 / secs,
+        tiles as f64 / secs
+    );
+    Cell { secs, layers, tiles }
+}
+
+fn main() {
+    let tiles_per_layer = 2;
+    let threads_wide =
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let net = Network::by_name("resnet50").unwrap();
+    let mut set = BenchSet::new();
+
+    println!(
+        "=== sweep throughput: per-config vs batched (resnet50, {} tiles/layer) ===\n",
+        tiles_per_layer
+    );
+
+    for (set_name, configs) in
+        [("paper", ConfigSet::paper()), ("ablation", ConfigSet::ablation())]
+    {
+        for backend_name in ["analytic", "cycle"] {
+            let fresh = || -> Arc<dyn EstimatorBackend> {
+                match backend_name {
+                    "analytic" => Arc::new(AnalyticBackend),
+                    _ => Arc::new(CycleBackend),
+                }
+            };
+            let per_config: Arc<dyn EstimatorBackend> = match backend_name {
+                "analytic" => Arc::new(PerConfig(AnalyticBackend)),
+                _ => Arc::new(PerConfig(CycleBackend)),
+            };
+            let base = run_sweep(
+                &net,
+                configs.clone(),
+                per_config,
+                1,
+                tiles_per_layer,
+                &format!("sweep/resnet50/{set_name}/{backend_name}/per-config/t1"),
+                &mut set,
+            );
+            let batched = run_sweep(
+                &net,
+                configs.clone(),
+                fresh(),
+                1,
+                tiles_per_layer,
+                &format!("sweep/resnet50/{set_name}/{backend_name}/batched/t1"),
+                &mut set,
+            );
+            let wide = run_sweep(
+                &net,
+                configs.clone(),
+                fresh(),
+                threads_wide,
+                tiles_per_layer,
+                &format!(
+                    "sweep/resnet50/{set_name}/{backend_name}/batched/t{threads_wide}"
+                ),
+                &mut set,
+            );
+            assert_eq!(base.layers, batched.layers);
+            assert_eq!(base.tiles, batched.tiles);
+            println!(
+                "    {set_name}/{backend_name}: batched speedup {:.2}x \
+                 (1 thread), {:.2}x ({threads_wide} threads)\n",
+                base.secs / batched.secs,
+                base.secs / wide.secs
+            );
+        }
+    }
+
+    // Machine-readable trajectory: BENCH_sweep.json at the repo root.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    match set.write_json(&root, "sweep") {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write bench JSON: {e}"),
+    }
+}

@@ -104,4 +104,15 @@ if [ -f "$REPO_ROOT/BENCH_perf_hotpath.json" ]; then
     echo "archived BENCH_perf_hotpath.json -> $OUT_DIR/"
 fi
 
+echo "== sweep throughput (count-once/price-many vs per-config) =="
+# Per-config vs batched vs multi-threaded batched, paper + ablation
+# sets, both backends; emits BENCH_sweep.json at the repo root so the
+# sweep-throughput trajectory is tracked across PRs.
+cargo bench --bench sweep_throughput 2>&1 | tee "$OUT_DIR/sweep_throughput.log"
+
+if [ -f "$REPO_ROOT/BENCH_sweep.json" ]; then
+    cp "$REPO_ROOT/BENCH_sweep.json" "$OUT_DIR/"
+    echo "archived BENCH_sweep.json -> $OUT_DIR/"
+fi
+
 echo "== OK =="

@@ -2,12 +2,28 @@
 //! backend → energy, for a set of coding configurations at once.
 //!
 //! The per-tile estimator is pluggable ([`crate::engine::EstimatorBackend`]);
-//! callers normally go through [`crate::engine::SaEngine`], which owns the
-//! backend, the config set and the worker pool. The free functions kept
-//! here are thin deprecated shims over that engine path.
+//! callers go through [`crate::engine::SaEngine`], which owns the
+//! backend, the config set and the worker pool.
+//!
+//! The estimation core is split into three crate-internal stages so the
+//! synchronous path and the engine's tile-granular scheduler are the
+//! *same computation* (bit-identical reports, since f64 accumulation
+//! order is part of the contract):
+//!
+//! 1. [`plan_layer_gemms`] — lower + sample: a deterministic, ordered
+//!    list of [`TileItem`] work units (one per sampled tile);
+//! 2. [`price_tile_item`] — extract one tile and estimate it under
+//!    *every* stack at once through the backend's batched
+//!    `estimate_many` entry point (count once, price many);
+//! 3. [`finalize_layer`] — fold the per-item costs **in item order**
+//!    into the per-config [`ConfigResult`]s.
+//!
+//! [`analyze_gemms_with`] runs the three stages sequentially on the
+//! caller's thread; `engine::core` distributes stage 2 across the
+//! worker pool and folds identically.
 
 use crate::activity::ActivityCounts;
-use crate::coding::{CodingStack, SaCodingConfig};
+use crate::coding::CodingStack;
 use crate::engine::EstimatorBackend;
 use crate::power::EnergyBreakdown;
 use crate::sa::{SaConfig, TileBuffers};
@@ -53,6 +69,12 @@ pub struct ConfigResult {
     pub counts: ActivityCounts,
     /// Scaled energy (femtojoules) for the whole layer.
     pub energy: EnergyBreakdown,
+    /// Streaming toggles extrapolated by each tile's sampling scale
+    /// (`Σ scale · streaming_toggles`). The raw `counts` sum mixes tiles
+    /// sampled at different ratios, so cross-layer activity aggregates
+    /// must use this field — see
+    /// `SweepReport::streaming_activity_reduction_pct`.
+    pub scaled_streaming_toggles: f64,
 }
 
 /// Per-layer analysis output.
@@ -158,84 +180,42 @@ pub fn build_gemms_from_data(
     }
 }
 
-/// Analyze one layer under every configuration in `configs`, using
-/// synthetic data.
-#[deprecated(
-    since = "0.2.0",
-    note = "route through engine::SaEngine::analyze_layer"
-)]
-pub fn analyze_layer(
-    layer: &Layer,
-    layer_idx: usize,
-    configs: &[(String, SaCodingConfig)],
-    opts: &AnalysisOptions,
-) -> LayerReport {
-    let (gemms, channel_scale) = build_layer_gemms(layer, layer_idx, opts);
-    analyze_gemms_with(
-        layer,
-        layer_idx,
-        gemms,
-        channel_scale,
-        &lower_legacy(configs),
-        opts,
-        &crate::engine::AnalyticBackend,
-    )
+/// One tile-granular work unit of a layer: which GEMM, which grid tile,
+/// and the energy-extrapolation scale it carries (`plan.scale ×
+/// channel_scale` of its GEMM).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct TileItem {
+    pub(crate) gemm: usize,
+    pub(crate) pick: (usize, usize),
+    pub(crate) scale: f64,
 }
 
-/// Lower a legacy closed-struct config list to codec stacks (the shape
-/// the estimation core consumes).
-fn lower_legacy(
-    configs: &[(String, SaCodingConfig)],
-) -> Vec<(String, CodingStack)> {
-    configs
-        .iter()
-        .map(|(n, c)| (n.clone(), c.stack()))
-        .collect()
+/// The per-layer execution plan shared by the sequential path and the
+/// engine's tile-granular scheduler: lowered GEMMs, their tile grids,
+/// and the flattened, deterministically ordered tile work items.
+pub(crate) struct LayerPlan {
+    pub(crate) gemms: Vec<Gemm>,
+    pub(crate) grids: Vec<TileGrid>,
+    pub(crate) items: Vec<TileItem>,
+    pub(crate) sampled_tiles: usize,
+    pub(crate) total_tiles: usize,
+    pub(crate) input_zero_frac: f64,
 }
 
-/// Analyze one layer with caller-provided input data (e2e path).
-#[deprecated(
-    since = "0.2.0",
-    note = "route through engine::SaEngine::analyze_layer_with_data"
-)]
-pub fn analyze_layer_with_data(
-    layer: &Layer,
-    layer_idx: usize,
-    fm: Vec<f32>,
-    weights: Vec<f32>,
-    configs: &[(String, SaCodingConfig)],
-    opts: &AnalysisOptions,
-) -> LayerReport {
-    let (gemms, channel_scale) = build_gemms_from_data(layer, fm, weights, opts);
-    analyze_gemms_with(
-        layer,
-        layer_idx,
-        gemms,
-        channel_scale,
-        &lower_legacy(configs),
-        opts,
-        &crate::engine::AnalyticBackend,
-    )
-}
-
-/// The estimation core: stream every sampled tile of `gemms` through
-/// `backend` under every coding stack, extrapolate energy by the
-/// sampling scale. This is the single engine-room all public paths
-/// ([`crate::engine::SaEngine`] and the deprecated shims) converge on.
-pub fn analyze_gemms_with(
-    layer: &Layer,
-    layer_idx: usize,
+/// Stage 1: lower + sample. Item order is the canonical accumulation
+/// order (GEMMs in lowering order, picks in plan order) — every
+/// consumer must fold per-item results in exactly this order so f64
+/// sums are reproducible regardless of who executes the items.
+pub(crate) fn plan_layer_gemms(
     gemms: Vec<Gemm>,
     channel_scale: f64,
-    configs: &[(String, CodingStack)],
+    layer_idx: usize,
     opts: &AnalysisOptions,
-    backend: &dyn EstimatorBackend,
-) -> LayerReport {
+) -> LayerPlan {
     let rows = opts.sa.rows;
     let cols = opts.sa.cols;
-
-    let mut per_config: Vec<(ActivityCounts, EnergyBreakdown)> =
-        configs.iter().map(|_| Default::default()).collect();
+    let mut grids = Vec::with_capacity(gemms.len());
+    let mut items = Vec::new();
     let mut sampled_tiles = 0usize;
     let mut total_tiles = 0usize;
     let mut zero_acc = 0.0f64;
@@ -245,9 +225,6 @@ pub fn analyze_gemms_with(
     if !gemms.is_empty() {
         // Spread the per-layer tile budget across the layer's GEMMs.
         let budget = (opts.max_tiles_per_layer / gemms.len()).max(1);
-        // One scratch allocation set per worker: tiles are built into and
-        // recycled from the same buffers across every pick and GEMM.
-        let mut scratch = TileBuffers::default();
         for (gi, g) in gemms.iter().enumerate() {
             let grid = TileGrid::of(g.shape, rows, cols);
             let plan = TilePlan::sample(
@@ -259,27 +236,104 @@ pub fn analyze_gemms_with(
             sampled_tiles += plan.picks.len();
             zero_acc += zero_fraction(&g.a);
             let scale = plan.scale * channel_scale;
-            for &(mi, ni) in &plan.picks {
-                let tile = extract_tile_into(g, &grid, mi, ni, &mut scratch);
-                for (ci, (_, stack)) in configs.iter().enumerate() {
-                    let counts = backend.estimate(&tile, stack, opts.sa.dataflow);
-                    let energy = opts.sa.energy.energy(&counts);
-                    per_config[ci].0.add(&counts);
-                    per_config[ci].1.add(&energy.scale(scale));
-                }
-                scratch = tile.into_buffers();
-            }
+            items.extend(
+                plan.picks.iter().map(|&pick| TileItem { gemm: gi, pick, scale }),
+            );
+            grids.push(grid);
+        }
+    }
+
+    LayerPlan {
+        // Mean over GEMMs; 0.0 (not NaN) when the layer lowered to none.
+        input_zero_frac: if gemms.is_empty() {
+            0.0
+        } else {
+            zero_acc / gemms.len() as f64
+        },
+        gemms,
+        grids,
+        items,
+        sampled_tiles,
+        total_tiles,
+    }
+}
+
+/// What pricing one tile item costs under one stack: the raw sampled
+/// counts plus the scale-extrapolated energy and streaming toggles.
+#[derive(Clone, Debug)]
+pub(crate) struct TileCost {
+    pub(crate) counts: ActivityCounts,
+    pub(crate) energy: EnergyBreakdown,
+    pub(crate) scaled_streaming_toggles: f64,
+}
+
+/// Stage 2: extract one tile (scratch buffers recycled) and estimate it
+/// under every stack at once through the backend's batched entry point.
+/// Returns one [`TileCost`] per stack, index-aligned with `stacks`.
+pub(crate) fn price_tile_item(
+    plan: &LayerPlan,
+    item: &TileItem,
+    stacks: &[CodingStack],
+    opts: &AnalysisOptions,
+    backend: &dyn EstimatorBackend,
+    scratch: &mut TileBuffers,
+) -> Vec<TileCost> {
+    let g = &plan.gemms[item.gemm];
+    let grid = &plan.grids[item.gemm];
+    let tile = extract_tile_into(g, grid, item.pick.0, item.pick.1, scratch);
+    let all = backend.estimate_many(&tile, stacks, opts.sa.dataflow);
+    // Hard assert (once per tile, negligible): estimate_many is the
+    // extension surface out-of-tree backends implement, and a short
+    // result vector would otherwise fold as silently-zero config rows.
+    assert_eq!(
+        all.len(),
+        stacks.len(),
+        "estimate_many ({}) broke the batched contract: one result per stack",
+        backend.name()
+    );
+    let costs = all
+        .into_iter()
+        .map(|counts| {
+            let energy = opts.sa.energy.energy(&counts).scale(item.scale);
+            let scaled_streaming_toggles =
+                item.scale * counts.streaming_toggles() as f64;
+            TileCost { counts, energy, scaled_streaming_toggles }
+        })
+        .collect();
+    *scratch = tile.into_buffers();
+    costs
+}
+
+/// Stage 3: fold per-item costs — **in item order** — into the layer
+/// report. `per_item` must yield exactly one `Vec<TileCost>` (one entry
+/// per config) per plan item, in plan order.
+pub(crate) fn finalize_layer(
+    layer: &Layer,
+    layer_idx: usize,
+    plan: &LayerPlan,
+    per_item: impl IntoIterator<Item = Vec<TileCost>>,
+    configs: &[(String, CodingStack)],
+) -> LayerReport {
+    let mut agg: Vec<(ActivityCounts, EnergyBreakdown, f64)> =
+        configs.iter().map(|_| Default::default()).collect();
+    for costs in per_item {
+        assert_eq!(costs.len(), configs.len(), "one TileCost per config");
+        for (ci, cost) in costs.into_iter().enumerate() {
+            agg[ci].0.add(&cost.counts);
+            agg[ci].1.add(&cost.energy);
+            agg[ci].2 += cost.scaled_streaming_toggles;
         }
     }
 
     let results = configs
         .iter()
-        .zip(per_config)
-        .map(|((name, stack), (counts, energy))| ConfigResult {
+        .zip(agg)
+        .map(|((name, stack), (counts, energy, scaled))| ConfigResult {
             stack: stack.clone(),
             config_name: name.clone(),
             counts,
             energy,
+            scaled_streaming_toggles: scaled,
         })
         .collect();
 
@@ -287,52 +341,65 @@ pub fn analyze_gemms_with(
         layer_name: layer.name.clone(),
         layer_index: layer_idx,
         gemm: layer.gemm(),
-        // Mean over GEMMs; 0.0 (not NaN) when the layer lowered to none.
-        input_zero_frac: if gemms.is_empty() {
-            0.0
-        } else {
-            zero_acc / gemms.len() as f64
-        },
-        sampled_tiles,
-        total_tiles,
+        input_zero_frac: plan.input_zero_frac,
+        sampled_tiles: plan.sampled_tiles,
+        total_tiles: plan.total_tiles,
         results,
     }
 }
 
-/// The two-config set used by the paper's figures, in the legacy
-/// closed-struct shape.
-#[deprecated(since = "0.2.0", note = "use engine::ConfigSet::paper()")]
-pub fn paper_configs() -> Vec<(String, SaCodingConfig)> {
-    legacy_table_set(|e| e.paper_set)
-}
-
-/// The legacy-expressible rows of the full ablation set (stack-only
-/// rows such as `ddcg16-g4` have no closed-struct form and are omitted;
-/// `engine::ConfigSet::ablation()` carries them all).
-#[deprecated(since = "0.2.0", note = "use engine::ConfigSet::ablation()")]
-pub fn ablation_configs() -> Vec<(String, SaCodingConfig)> {
-    legacy_table_set(|e| e.ablation_set)
-}
-
-fn legacy_table_set(
-    pred: impl Fn(&crate::engine::ConfigEntry) -> bool,
-) -> Vec<(String, SaCodingConfig)> {
-    crate::engine::ConfigRegistry::entries()
+/// The estimation core: stream every sampled tile of `gemms` through
+/// `backend` under every coding stack (batched per tile), extrapolate
+/// energy by the sampling scale. This is the sequential execution of the
+/// plan/price/finalize stages; [`crate::engine::SaEngine`] distributes
+/// the pricing stage across its pool and produces bit-identical reports.
+pub fn analyze_gemms_with(
+    layer: &Layer,
+    layer_idx: usize,
+    gemms: Vec<Gemm>,
+    channel_scale: f64,
+    configs: &[(String, CodingStack)],
+    opts: &AnalysisOptions,
+    backend: &dyn EstimatorBackend,
+) -> LayerReport {
+    let plan = plan_layer_gemms(gemms, channel_scale, layer_idx, opts);
+    let stacks: Vec<CodingStack> =
+        configs.iter().map(|(_, s)| s.clone()).collect();
+    // One scratch allocation set: tiles are built into and recycled from
+    // the same buffers across every item.
+    let mut scratch = TileBuffers::default();
+    let per_item: Vec<Vec<TileCost>> = plan
+        .items
         .iter()
-        .filter(|e| pred(e))
-        .filter_map(|e| e.legacy.map(|c| (e.name.to_string(), c)))
-        .collect()
+        .map(|item| {
+            price_tile_item(&plan, item, &stacks, opts, backend, &mut scratch)
+        })
+        .collect();
+    finalize_layer(layer, layer_idx, &plan, per_item, configs)
 }
 
 #[cfg(test)]
 mod tests {
-    // The deprecated shims stay covered until they are removed.
-    #![allow(deprecated)]
     use super::*;
+    use crate::engine::{AnalyticBackend, ConfigSet, SaEngine};
     use crate::workload::tinycnn;
 
     fn small_opts() -> AnalysisOptions {
         AnalysisOptions { max_tiles_per_layer: 4, ..Default::default() }
+    }
+
+    fn analyze(layer: &Layer, layer_idx: usize) -> LayerReport {
+        let (gemms, channel_scale) =
+            build_layer_gemms(layer, layer_idx, &small_opts());
+        analyze_gemms_with(
+            layer,
+            layer_idx,
+            gemms,
+            channel_scale,
+            ConfigSet::paper().as_slice(),
+            &small_opts(),
+            &AnalyticBackend,
+        )
     }
 
     #[test]
@@ -346,15 +413,16 @@ mod tests {
             3,
             Vec::new(),
             1.0,
-            crate::engine::ConfigSet::paper().as_slice(),
+            ConfigSet::paper().as_slice(),
             &small_opts(),
-            &crate::engine::AnalyticBackend,
+            &AnalyticBackend,
         );
         assert_eq!(r.input_zero_frac, 0.0);
         assert!(r.input_zero_frac.is_finite());
         assert_eq!((r.sampled_tiles, r.total_tiles), (0, 0));
         assert_eq!(r.results.len(), 2);
         assert_eq!(r.energy_of("baseline").unwrap().total(), 0.0);
+        assert_eq!(r.results[0].scaled_streaming_toggles, 0.0);
         // total-energy savings are undefined on a zero-energy layer
         assert!(r.savings_pct("baseline", "proposed").is_none());
     }
@@ -362,7 +430,7 @@ mod tests {
     #[test]
     fn analyze_conv_layer_basics() {
         let net = tinycnn();
-        let r = analyze_layer(&net.layers[1], 1, &paper_configs(), &small_opts());
+        let r = analyze(&net.layers[1], 1);
         assert_eq!(r.results.len(), 2);
         assert!(r.sampled_tiles > 0 && r.sampled_tiles <= 4);
         assert!(r.total_tiles >= r.sampled_tiles);
@@ -383,7 +451,7 @@ mod tests {
             .iter()
             .position(|l| l.kind == LayerKind::Depthwise)
             .unwrap();
-        let r = analyze_layer(&net.layers[dw], dw, &paper_configs(), &small_opts());
+        let r = analyze(&net.layers[dw], dw);
         assert!(r.energy_of("baseline").unwrap().total() > 0.0);
         assert!(r.input_zero_frac > 0.0);
     }
@@ -391,21 +459,109 @@ mod tests {
     #[test]
     fn deterministic_reports() {
         let net = tinycnn();
-        let r1 = analyze_layer(&net.layers[2], 2, &paper_configs(), &small_opts());
-        let r2 = analyze_layer(&net.layers[2], 2, &paper_configs(), &small_opts());
+        let r1 = analyze(&net.layers[2], 2);
+        let r2 = analyze(&net.layers[2], 2);
         assert_eq!(
             r1.energy_of("proposed").unwrap().total(),
             r2.energy_of("proposed").unwrap().total()
         );
         assert_eq!(r1.results[0].counts, r2.results[0].counts);
+        assert_eq!(
+            r1.results[0].scaled_streaming_toggles,
+            r2.results[0].scaled_streaming_toggles
+        );
     }
 
     #[test]
     fn dense_layer_analyzes() {
         let net = tinycnn();
         let fc = net.layers.len() - 1;
-        let r = analyze_layer(&net.layers[fc], fc, &paper_configs(), &small_opts());
+        let r = analyze(&net.layers[fc], fc);
         assert_eq!(r.gemm.m, 1);
         assert!(r.energy_of("baseline").unwrap().total() > 0.0);
+    }
+
+    #[test]
+    fn fully_sampled_layer_has_scale_one_toggles() {
+        // When every tile is analyzed (scale 1, conv channel scale 1),
+        // the extrapolated streaming toggles equal the raw ledger sum.
+        let net = tinycnn();
+        let opts =
+            AnalysisOptions { max_tiles_per_layer: 10_000, ..Default::default() };
+        let (gemms, channel_scale) = build_layer_gemms(&net.layers[1], 1, &opts);
+        let r = analyze_gemms_with(
+            &net.layers[1],
+            1,
+            gemms,
+            channel_scale,
+            ConfigSet::paper().as_slice(),
+            &opts,
+            &AnalyticBackend,
+        );
+        assert_eq!(r.sampled_tiles, r.total_tiles, "fully sampled");
+        for res in &r.results {
+            assert_eq!(
+                res.scaled_streaming_toggles,
+                res.counts.streaming_toggles() as f64,
+                "{}",
+                res.config_name
+            );
+        }
+    }
+
+    #[test]
+    fn undersampled_layer_scales_toggles_up() {
+        // With a 1-tile budget on a multi-tile layer, the extrapolated
+        // toggles must exceed the raw sampled sum by the sampling ratio.
+        let net = tinycnn();
+        let opts = AnalysisOptions { max_tiles_per_layer: 1, ..Default::default() };
+        let (gemms, channel_scale) = build_layer_gemms(&net.layers[1], 1, &opts);
+        let r = analyze_gemms_with(
+            &net.layers[1],
+            1,
+            gemms,
+            channel_scale,
+            ConfigSet::paper().as_slice(),
+            &opts,
+            &AnalyticBackend,
+        );
+        assert!(r.sampled_tiles < r.total_tiles, "needs a sampled layer");
+        let ratio = r.total_tiles as f64 / r.sampled_tiles as f64;
+        for res in &r.results {
+            let raw = res.counts.streaming_toggles() as f64;
+            assert!(
+                (res.scaled_streaming_toggles - ratio * raw).abs() <= 1e-6 * raw,
+                "{}: scaled {} vs ratio {ratio} × raw {raw}",
+                res.config_name,
+                res.scaled_streaming_toggles
+            );
+        }
+    }
+
+    #[test]
+    fn sequential_core_matches_engine_path() {
+        // The engine's tile-granular scheduler must reproduce the
+        // sequential stage execution bit-for-bit (f64s included).
+        let net = tinycnn();
+        let engine = SaEngine::builder()
+            .max_tiles_per_layer(4)
+            .configs(ConfigSet::paper())
+            .threads(3)
+            .build();
+        for (i, layer) in net.layers.iter().enumerate() {
+            let direct = analyze(layer, i);
+            let pooled = engine
+                .submit(crate::engine::LayerJob::synthetic(layer.clone(), i))
+                .wait();
+            assert_eq!(direct.results.len(), pooled.results.len());
+            for (a, b) in direct.results.iter().zip(&pooled.results) {
+                assert_eq!(a.counts, b.counts, "layer {i}");
+                assert_eq!(a.energy, b.energy, "layer {i}");
+                assert_eq!(
+                    a.scaled_streaming_toggles, b.scaled_streaming_toggles,
+                    "layer {i}"
+                );
+            }
+        }
     }
 }

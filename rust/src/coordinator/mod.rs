@@ -22,3 +22,9 @@ pub use analysis::*;
 pub use inference::*;
 pub use metrics::*;
 pub use pipeline::*;
+
+// Crate-internal plumbing of the estimation core, shared with the
+// engine's tile-granular scheduler (`engine::core`).
+pub(crate) use analysis::{
+    finalize_layer, plan_layer_gemms, price_tile_item, LayerPlan, TileCost,
+};

@@ -1,14 +1,12 @@
 //! Whole-network sweep report: the data behind Figs. 4–5 and the
 //! headline numbers.
 //!
-//! The worker pool that used to live here is now the
-//! [`crate::engine::SaEngine`] streaming pool; [`sweep_network`] remains
-//! as a thin deprecated shim over `SaEngine::sweep`.
+//! Sweeps are produced by [`crate::engine::SaEngine::sweep`] (the
+//! worker pool that used to live here is the engine's tile-granular
+//! streaming pool); this module keeps the report type and its derived
+//! metrics.
 
-use crate::coding::SaCodingConfig;
-use crate::workload::Network;
-
-use super::{AnalysisOptions, LayerReport};
+use super::LayerReport;
 
 /// Whole-network sweep result.
 #[derive(Clone, Debug)]
@@ -45,27 +43,33 @@ impl SweepReport {
     }
 
     /// Streaming switching-activity reduction of `b` vs `a`, in percent
-    /// (the paper's "29 % average" claim). Computed over the sampled
-    /// tiles' exact toggle counts.
+    /// (the paper's "29 % average" claim).
+    ///
+    /// Aggregated over the **scale-extrapolated** per-layer toggles
+    /// (`ConfigResult::scaled_streaming_toggles`), not the raw sampled
+    /// sums: layers are sampled at different tile ratios, and summing
+    /// raw counts would underweight every heavily-sampled layer by its
+    /// own sampling factor — exactly like the energy ledger, which has
+    /// always been scale-extrapolated.
     pub fn streaming_activity_reduction_pct(&self, a: &str, b: &str) -> f64 {
         if a == b {
             return 0.0;
         }
-        let mut ta = 0u64;
-        let mut tb = 0u64;
+        let mut ta = 0.0f64;
+        let mut tb = 0.0f64;
         for l in &self.layers {
             for r in &l.results {
                 if r.config_name == a {
-                    ta += r.counts.streaming_toggles();
+                    ta += r.scaled_streaming_toggles;
                 } else if r.config_name == b {
-                    tb += r.counts.streaming_toggles();
+                    tb += r.scaled_streaming_toggles;
                 }
             }
         }
-        if ta == 0 {
+        if ta == 0.0 {
             return 0.0;
         }
-        100.0 * (ta - tb) as f64 / ta as f64
+        100.0 * (ta - tb) / ta
     }
 
     /// (min, max) per-layer percent savings (the paper's 1–19 % range).
@@ -86,29 +90,12 @@ impl SweepReport {
     }
 }
 
-/// Analyze every layer of a network, `threads`-wide. Results are
-/// deterministic and ordered regardless of thread count.
-#[deprecated(since = "0.2.0", note = "route through engine::SaEngine::sweep")]
-pub fn sweep_network(
-    net: &Network,
-    configs: &[(String, SaCodingConfig)],
-    opts: &AnalysisOptions,
-    threads: usize,
-) -> SweepReport {
-    // from_pairs, not with(): legacy callers may pass duplicate names,
-    // which the old implementation tolerated (duplicate report columns).
-    let set = crate::engine::ConfigSet::from_pairs(configs.to_vec());
-    crate::engine::SaEngine::builder()
-        .options(opts.clone())
-        .configs(set)
-        .threads(threads.max(1).min(net.layers.len().max(1)))
-        .build()
-        .sweep(net)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::activity::ActivityCounts;
+    use crate::coding::CodingStack;
+    use crate::coordinator::ConfigResult;
     use crate::engine::{ConfigSet, SaEngine};
     use crate::workload::tinycnn;
 
@@ -132,22 +119,6 @@ mod tests {
     }
 
     #[test]
-    fn deprecated_shim_matches_engine_sweep() {
-        #![allow(deprecated)]
-        let net = tinycnn();
-        let opts = AnalysisOptions { max_tiles_per_layer: 4, ..Default::default() };
-        // legacy callers pass closed structs; the shim lowers them
-        let legacy = vec![
-            ("baseline".to_string(), SaCodingConfig::baseline()),
-            ("proposed".to_string(), SaCodingConfig::proposed()),
-        ];
-        let shim = sweep_network(&net, &legacy, &opts, 2);
-        let direct = engine(2).sweep(&net);
-        assert_eq!(shim.total_energy("proposed"), direct.total_energy("proposed"));
-        assert_eq!(shim.backend, "analytic");
-    }
-
-    #[test]
     fn thread_count_does_not_change_results() {
         let net = tinycnn();
         let r1 = engine(1).sweep(&net);
@@ -168,5 +139,55 @@ mod tests {
         assert_eq!(r.streaming_activity_reduction_pct("baseline", "baseline"), 0.0);
         let (lo, hi) = r.per_layer_savings_range("baseline", "proposed");
         assert!(lo <= hi);
+    }
+
+    /// Hand-built layer report with explicit raw + scaled toggles.
+    fn layer_with(
+        index: usize,
+        scale: f64,
+        base_raw: u64,
+        prop_raw: u64,
+    ) -> LayerReport {
+        let result = |name: &str, raw: u64| ConfigResult {
+            stack: CodingStack::baseline(),
+            config_name: name.into(),
+            counts: ActivityCounts {
+                west_data_toggles: raw,
+                ..Default::default()
+            },
+            energy: Default::default(),
+            scaled_streaming_toggles: scale * raw as f64,
+        };
+        LayerReport {
+            layer_name: format!("l{index}"),
+            layer_index: index,
+            gemm: crate::workload::GemmShape { m: 1, k: 1, n: 1 },
+            input_zero_frac: 0.0,
+            sampled_tiles: 1,
+            total_tiles: scale as usize,
+            results: vec![result("baseline", base_raw), result("proposed", prop_raw)],
+        }
+    }
+
+    #[test]
+    fn activity_reduction_weights_layers_by_sampling_scale() {
+        // Regression (sampling-scale aggregation bug): layer 0 is fully
+        // sampled (scale 1) with raw toggles 1000 → 900; layer 1 is
+        // sampled at 1/10 (scale 10) with raw toggles 100 → 10. The raw
+        // aggregation would report (1100 − 910)/1100 ≈ 17.3 % and
+        // underweight the heavily-sampled layer; the scale-carrying
+        // aggregation weights both layers by their true size:
+        // baseline 1000 + 1000 = 2000, proposed 900 + 100 = 1000 → 50 %.
+        let r = SweepReport {
+            network: "unit".into(),
+            backend: "analytic".into(),
+            dataflow: "ws".into(),
+            layers: vec![layer_with(0, 1.0, 1000, 900), layer_with(1, 10.0, 100, 10)],
+        };
+        let pct = r.streaming_activity_reduction_pct("baseline", "proposed");
+        assert!((pct - 50.0).abs() < 1e-9, "scaled aggregation, got {pct}");
+        // the buggy raw aggregation for contrast
+        let raw_pct = 100.0 * (1100.0 - 910.0) / 1100.0;
+        assert!((pct - raw_pct).abs() > 30.0, "must differ from raw sum");
     }
 }

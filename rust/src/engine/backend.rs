@@ -19,6 +19,23 @@
 //! any count it shares with the existing semantics must keep the same
 //! meaning, so energy models and reports stay comparable.
 //!
+//! ## Batched contract
+//!
+//! Sweeps price the *same* tile under every configured stack, so the
+//! trait carries a batched entry point:
+//! [`EstimatorBackend::estimate_many`]. Its contract is pure
+//! amortization — element `i` of the result MUST be bit-identical
+//! (counts, not approximately) to `estimate(tile, &stacks[i],
+//! dataflow)`. The provided default is the sequential loop, so
+//! out-of-tree backends keep working unchanged; both built-ins override
+//! it with the count-once/price-many
+//! [`TileActivity`](crate::sa::TileActivity) pass, which computes the
+//! stack-invariant work (MAC schedule, zero masks, operand Hamming
+//! sums) once per tile instead of once per stack.
+//! `rust/tests/conformance.rs` and `rust/tests/legacy_conformance.rs`
+//! enforce the batched = sequential equality against the literal
+//! reference simulators.
+//!
 //! Backends must be `Send + Sync`: the engine's worker pool shares one
 //! instance across threads. Keep them stateless (or internally locked).
 
@@ -26,7 +43,10 @@ use std::sync::Arc;
 
 use crate::activity::ActivityCounts;
 use crate::coding::CodingStack;
-use crate::sa::{analyze_tile, simulate_tile, Dataflow, Tile};
+use crate::sa::{
+    analyze_tile, analyze_tile_many, simulate_tile, Dataflow, Tile,
+    TileActivity,
+};
 
 /// A power-activity estimator for one tile under one coding stack and
 /// dataflow.
@@ -41,6 +61,20 @@ pub trait EstimatorBackend: Send + Sync {
         stack: &CodingStack,
         dataflow: Dataflow,
     ) -> ActivityCounts;
+
+    /// Exact activity counts for streaming `tile` under every stack of
+    /// `stacks`, index-aligned. Element `i` must equal
+    /// `self.estimate(tile, &stacks[i], dataflow)` bit-for-bit (see the
+    /// module docs). The default is the sequential loop; backends with a
+    /// shareable per-tile pass should override it.
+    fn estimate_many(
+        &self,
+        tile: &Tile,
+        stacks: &[CodingStack],
+        dataflow: Dataflow,
+    ) -> Vec<ActivityCounts> {
+        stacks.iter().map(|s| self.estimate(tile, s, dataflow)).collect()
+    }
 }
 
 /// The closed-form analytic model (`sa::analyze_tile`) — the fast
@@ -61,6 +95,17 @@ impl EstimatorBackend for AnalyticBackend {
     ) -> ActivityCounts {
         analyze_tile(tile, stack, dataflow)
     }
+
+    /// Count-once/price-many: one shared `TileActivity` pass, every
+    /// stack priced over it (`sa::analyze_tile_many`).
+    fn estimate_many(
+        &self,
+        tile: &Tile,
+        stacks: &[CodingStack],
+        dataflow: Dataflow,
+    ) -> Vec<ActivityCounts> {
+        analyze_tile_many(tile, stacks, dataflow)
+    }
 }
 
 /// The cycle-accurate simulator (`sa::simulate_tile`) — the golden
@@ -80,6 +125,22 @@ impl EstimatorBackend for CycleBackend {
         dataflow: Dataflow,
     ) -> ActivityCounts {
         simulate_tile(tile, stack, dataflow).counts
+    }
+
+    /// Count-once/price-many: the cycle backend's batched path shares
+    /// the same `TileActivity` pass — its per-stack counts are the
+    /// established analytic == cycle ledger, asserted bit-equal to
+    /// sequential `simulate_tile` runs by the conformance suite.
+    /// Counts-only: the shared f32 outputs stay unmaterialized here
+    /// (callers that also need `C = A×B` use `sa::simulate_tile_many`).
+    fn estimate_many(
+        &self,
+        tile: &Tile,
+        stacks: &[CodingStack],
+        dataflow: Dataflow,
+    ) -> Vec<ActivityCounts> {
+        let mut ir = TileActivity::new(tile, dataflow);
+        stacks.iter().map(|s| ir.price(s)).collect()
     }
 }
 
@@ -156,6 +217,57 @@ mod tests {
                 let c = CycleBackend.estimate(&t, stack, df);
                 assert_eq!(a, c, "backend divergence under '{name}' ({df})");
             }
+        }
+    }
+
+    /// An "out-of-tree" backend: forwards per-tile estimation but does
+    /// not override `estimate_many`, so the trait's default sequential
+    /// loop runs.
+    struct SequentialOnly;
+
+    impl EstimatorBackend for SequentialOnly {
+        fn name(&self) -> &'static str {
+            "sequential-only"
+        }
+
+        fn estimate(
+            &self,
+            tile: &Tile,
+            stack: &CodingStack,
+            dataflow: Dataflow,
+        ) -> ActivityCounts {
+            AnalyticBackend.estimate(tile, stack, dataflow)
+        }
+    }
+
+    #[test]
+    fn batched_overrides_match_the_default_sequential_loop() {
+        let t = small_tile();
+        let stacks: Vec<CodingStack> = crate::engine::ConfigSet::ablation()
+            .iter()
+            .map(|(_, s)| s.clone())
+            .collect();
+        for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
+            let default_loop = SequentialOnly.estimate_many(&t, &stacks, df);
+            let analytic = AnalyticBackend.estimate_many(&t, &stacks, df);
+            let cycle = CycleBackend.estimate_many(&t, &stacks, df);
+            assert_eq!(analytic, default_loop, "{df}");
+            assert_eq!(cycle, default_loop, "{df}");
+            // and element-wise against the single-stack entry points
+            for (i, stack) in stacks.iter().enumerate() {
+                assert_eq!(analytic[i], AnalyticBackend.estimate(&t, stack, df));
+                assert_eq!(cycle[i], CycleBackend.estimate(&t, stack, df));
+            }
+        }
+    }
+
+    #[test]
+    fn estimate_many_handles_the_empty_stack_list() {
+        let t = small_tile();
+        let none: [CodingStack; 0] = [];
+        for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
+            assert!(AnalyticBackend.estimate_many(&t, &none, df).is_empty());
+            assert!(CycleBackend.estimate_many(&t, &none, df).is_empty());
         }
     }
 

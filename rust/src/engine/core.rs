@@ -9,22 +9,42 @@
 //!   returns an ordered [`SweepReport`];
 //! * **streaming** — [`SaEngine::submit`] enqueues one [`LayerJob`] and
 //!   returns a [`JobHandle`]; the finished [`LayerReport`] is delivered
-//!   over the handle's channel as soon as a worker completes it. The
+//!   over the handle's channel as soon as the pool completes it. The
 //!   batch API is implemented on top of this path, so both share the
 //!   same pool, ordering and determinism guarantees.
 //!
-//! Determinism: results depend only on options + configs + backend, never
-//! on thread count or completion order (per-layer seeding, sorted merge).
+//! ## Tile-granular scheduling
+//!
+//! A submitted layer is not a single unit of pool work. The worker that
+//! dequeues it runs the cheap planning stage
+//! (`coordinator::plan_layer_gemms`: lowering + tile sampling) and then
+//! re-enqueues one work item **per sampled tile**; any worker prices any
+//! tile (batched across the whole config set via
+//! [`EstimatorBackend::estimate_many`] — count once, price many), and
+//! whichever worker finishes a layer's last tile folds the per-tile
+//! costs and delivers the report. One huge ResNet-50 layer therefore
+//! fans out across the whole pool instead of serializing on one worker.
+//!
+//! Determinism: results depend only on options + configs + backend,
+//! never on thread count or completion order. Per-tile costs are stored
+//! in slots indexed by their plan position and folded **in plan order**
+//! (f64 accumulation order is part of the report contract — sweep JSON
+//! is byte-identical across `--threads`), and layers are sorted by
+//! index on merge.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::coding::CodingStack;
 use crate::coordinator::{
-    analyze_gemms_with, build_gemms_from_data, build_layer_gemms, AnalysisOptions,
-    LayerReport, SweepReport,
+    build_gemms_from_data, build_layer_gemms, finalize_layer, plan_layer_gemms,
+    price_tile_item, AnalysisOptions, LayerPlan, LayerReport, SweepReport,
+    TileCost,
 };
-use crate::sa::{Dataflow, SaConfig};
+use crate::sa::{Dataflow, SaConfig, TileBuffers};
 use crate::workload::{Layer, Network};
 
 use super::backend::{BackendKind, EstimatorBackend};
@@ -71,7 +91,7 @@ impl LayerJob {
 }
 
 /// Receiving side of one submitted job. The report arrives on an
-/// internal channel the moment a pool worker finishes it.
+/// internal channel the moment the pool finishes the layer's last tile.
 pub struct JobHandle {
     layer_index: usize,
     rx: mpsc::Receiver<LayerReport>,
@@ -88,7 +108,7 @@ impl JobHandle {
     }
 
     /// Non-blocking poll; `None` while the job is still running. Panics
-    /// (like [`JobHandle::wait`]) if the worker died before replying, so
+    /// (like [`JobHandle::wait`]) if the pool died before replying, so
     /// pollers can't spin forever on a dead pool.
     pub fn try_wait(&self) -> Option<LayerReport> {
         match self.rx.try_recv() {
@@ -109,6 +129,13 @@ struct EngineShared {
 }
 
 impl EngineShared {
+    /// The stack list the batched estimator prices per tile, in config
+    /// order.
+    fn stacks(&self) -> Vec<CodingStack> {
+        self.configs.iter().map(|(_, s)| s.clone()).collect()
+    }
+
+    /// Synchronous full-layer analysis on the caller's thread.
     fn analyze(
         &self,
         layer: &Layer,
@@ -119,7 +146,7 @@ impl EngineShared {
             Some(d) => build_gemms_from_data(layer, d.feature_map, d.weights, &self.opts),
             None => build_layer_gemms(layer, layer_index, &self.opts),
         };
-        analyze_gemms_with(
+        crate::coordinator::analyze_gemms_with(
             layer,
             layer_index,
             gemms,
@@ -131,12 +158,81 @@ impl EngineShared {
     }
 }
 
+/// Shared state of one layer split into tile-granular work items.
+struct LayerWork {
+    layer: Layer,
+    layer_index: usize,
+    plan: LayerPlan,
+    /// The config set's stacks, in config order (what `estimate_many`
+    /// prices per tile).
+    stacks: Vec<CodingStack>,
+    reply: mpsc::Sender<LayerReport>,
+    /// One slot per tile item, written by whichever worker prices it;
+    /// folded in slot (= plan) order at finalize, so the f64 sums are
+    /// identical to the sequential path regardless of completion order.
+    slots: Mutex<Vec<Option<Vec<TileCost>>>>,
+    /// Items not yet priced; the worker that takes this to zero folds
+    /// and delivers.
+    remaining: AtomicUsize,
+}
+
 /// Internal pool message.
-struct Job {
+enum Task {
+    /// Plan a layer and fan its tiles out (stage 1).
+    Layer(LayerTask),
+    /// Price tile item `.1` of a split layer (stage 2; the last one to
+    /// finish runs stage 3).
+    Tile(Arc<LayerWork>, usize),
+    /// Terminate one worker (queued once per worker on engine drop,
+    /// behind all previously queued work).
+    Shutdown,
+}
+
+struct LayerTask {
     layer: Layer,
     layer_index: usize,
     data: Option<LayerData>,
     reply: mpsc::Sender<LayerReport>,
+}
+
+/// Two-priority work queue: tile items go to the front, layer splits
+/// (and shutdown tokens) to the back. Workers therefore drain the tiles
+/// of already-lowered layers before lowering the next layer, which
+/// bounds peak memory to roughly a pool's worth of im2col matrices —
+/// a plain FIFO would split every submitted layer first and hold all of
+/// their GEMMs live at once.
+struct TaskQueue {
+    tasks: Mutex<VecDeque<Task>>,
+    ready: Condvar,
+}
+
+impl TaskQueue {
+    fn new() -> Self {
+        TaskQueue { tasks: Mutex::new(VecDeque::new()), ready: Condvar::new() }
+    }
+
+    /// Queue a layer split or shutdown token behind everything pending.
+    fn push_back(&self, t: Task) {
+        self.tasks.lock().unwrap().push_back(t);
+        self.ready.notify_one();
+    }
+
+    /// Queue a tile item ahead of pending layer splits.
+    fn push_front(&self, t: Task) {
+        self.tasks.lock().unwrap().push_front(t);
+        self.ready.notify_one();
+    }
+
+    /// Block until a task is available.
+    fn pop(&self) -> Task {
+        let mut q = self.tasks.lock().unwrap();
+        loop {
+            if let Some(t) = q.pop_front() {
+                return t;
+            }
+            q = self.ready.wait(q).unwrap();
+        }
+    }
 }
 
 /// Builder for [`SaEngine`]. Defaults: 16×16 paper SA, paper config set,
@@ -231,27 +327,102 @@ impl SaEngineBuilder {
             configs: self.configs,
             backend: self.backend,
         });
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..self.threads.max(1))
+        let queue = Arc::new(TaskQueue::new());
+        let workers: Vec<JoinHandle<()>> = (0..self.threads.max(1))
             .map(|_| {
-                let rx = Arc::clone(&rx);
+                let queue = Arc::clone(&queue);
                 let shared = Arc::clone(&shared);
-                std::thread::spawn(move || loop {
-                    // Hold the queue lock only for the dequeue; the
-                    // guard is a temporary, dropped before analysis.
-                    let job = match rx.lock().unwrap().recv() {
-                        Ok(job) => job,
-                        Err(_) => break, // engine dropped
-                    };
-                    let report =
-                        shared.analyze(&job.layer, job.layer_index, job.data);
-                    // A dropped JobHandle just discards the report.
-                    let _ = job.reply.send(report);
+                std::thread::spawn(move || {
+                    // One scratch allocation set per worker, recycled
+                    // across every tile it prices.
+                    let mut scratch = TileBuffers::default();
+                    loop {
+                        match queue.pop() {
+                            Task::Shutdown => break,
+                            Task::Layer(job) => split_layer(&shared, job, &queue),
+                            Task::Tile(work, idx) => {
+                                run_tile(&shared, &work, idx, &mut scratch)
+                            }
+                        }
+                    }
                 })
             })
             .collect();
-        SaEngine { shared, tx: Some(tx), workers }
+        SaEngine { shared, queue: Some(queue), workers }
+    }
+}
+
+/// Stage 1 on a worker: lower + sample the layer and fan one pool task
+/// out per sampled tile. Layers with no tiles (degenerate lowerings)
+/// finalize immediately.
+fn split_layer(shared: &EngineShared, job: LayerTask, queue: &TaskQueue) {
+    let (gemms, channel_scale) = match job.data {
+        Some(d) => build_gemms_from_data(
+            &job.layer,
+            d.feature_map,
+            d.weights,
+            &shared.opts,
+        ),
+        None => build_layer_gemms(&job.layer, job.layer_index, &shared.opts),
+    };
+    let plan = plan_layer_gemms(gemms, channel_scale, job.layer_index, &shared.opts);
+    let n_items = plan.items.len();
+    if n_items == 0 {
+        let report = finalize_layer(
+            &job.layer,
+            job.layer_index,
+            &plan,
+            std::iter::empty(),
+            shared.configs.as_slice(),
+        );
+        // A dropped JobHandle just discards the report.
+        let _ = job.reply.send(report);
+        return;
+    }
+    let work = Arc::new(LayerWork {
+        layer: job.layer,
+        layer_index: job.layer_index,
+        plan,
+        stacks: shared.stacks(),
+        reply: job.reply,
+        slots: Mutex::new((0..n_items).map(|_| None).collect()),
+        remaining: AtomicUsize::new(n_items),
+    });
+    for idx in 0..n_items {
+        queue.push_front(Task::Tile(Arc::clone(&work), idx));
+    }
+}
+
+/// Stage 2 (and, for the last finisher, stage 3) on a worker.
+fn run_tile(
+    shared: &EngineShared,
+    work: &LayerWork,
+    idx: usize,
+    scratch: &mut TileBuffers,
+) {
+    let costs = price_tile_item(
+        &work.plan,
+        &work.plan.items[idx],
+        &work.stacks,
+        &shared.opts,
+        shared.backend.as_ref(),
+        scratch,
+    );
+    work.slots.lock().unwrap()[idx] = Some(costs);
+    if work.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // Last tile of the layer: fold every slot in plan order.
+        let slots = std::mem::take(&mut *work.slots.lock().unwrap());
+        let per_item = slots
+            .into_iter()
+            .map(|s| s.expect("every tile item was priced"));
+        let report = finalize_layer(
+            &work.layer,
+            work.layer_index,
+            &work.plan,
+            per_item,
+            shared.configs.as_slice(),
+        );
+        let _ = work.reply.send(report);
     }
 }
 
@@ -259,7 +430,7 @@ impl SaEngineBuilder {
 /// call shapes; construct via [`SaEngine::builder`].
 pub struct SaEngine {
     shared: Arc<EngineShared>,
-    tx: Option<mpsc::Sender<Job>>,
+    queue: Option<Arc<TaskQueue>>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -299,15 +470,21 @@ impl SaEngine {
     }
 
     /// Enqueue one layer job on the worker pool; the report is delivered
-    /// through the returned handle when done.
+    /// through the returned handle when done. The layer is split into
+    /// tile-granular work items internally (see the module docs), so a
+    /// single large layer still uses the whole pool.
     pub fn submit(&self, job: LayerJob) -> JobHandle {
         let (reply, rx) = mpsc::channel();
         let layer_index = job.layer_index;
-        self.tx
+        self.queue
             .as_ref()
             .expect("engine pool already shut down")
-            .send(Job { layer: job.layer, layer_index, data: job.data, reply })
-            .expect("engine worker pool terminated");
+            .push_back(Task::Layer(LayerTask {
+                layer: job.layer,
+                layer_index,
+                data: job.data,
+                reply,
+            }));
         JobHandle { layer_index, rx }
     }
 
@@ -352,8 +529,13 @@ impl SaEngine {
 
 impl Drop for SaEngine {
     fn drop(&mut self) {
-        // Closing the channel unblocks every worker's recv().
-        self.tx.take();
+        // One shutdown token per worker, queued behind all outstanding
+        // work; each worker consumes exactly one and exits.
+        if let Some(queue) = self.queue.take() {
+            for _ in &self.workers {
+                queue.push_back(Task::Shutdown);
+            }
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -453,6 +635,37 @@ mod tests {
     }
 
     #[test]
+    fn one_layer_fans_out_and_stays_deterministic() {
+        // A single submitted layer becomes many tile items; the report
+        // must not depend on how many workers raced over them — counts,
+        // energies AND the f64 scaled toggles, field for field.
+        let net = tinycnn();
+        let layer = &net.layers[1];
+        let run = |threads: usize| {
+            SaEngine::builder()
+                .max_tiles_per_layer(16)
+                .threads(threads)
+                .build()
+                .submit(LayerJob::synthetic(layer.clone(), 1))
+                .wait()
+        };
+        let base = run(1);
+        assert!(base.sampled_tiles > 1, "need a multi-tile layer");
+        for threads in [2, 5, 8] {
+            let r = run(threads);
+            assert_eq!(base.results.len(), r.results.len());
+            for (a, b) in base.results.iter().zip(&r.results) {
+                assert_eq!(a.counts, b.counts, "{threads} threads");
+                assert_eq!(a.energy, b.energy, "{threads} threads");
+                assert_eq!(
+                    a.scaled_streaming_toggles, b.scaled_streaming_toggles,
+                    "{threads} threads"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn cycle_backend_reproduces_analytic_counts() {
         let net = tinycnn();
         let a = small_engine(2, BackendKind::Analytic).sweep(&net);
@@ -505,5 +718,17 @@ mod tests {
         assert!(r.energy_of("proposed+w-zvcg").unwrap().total() > 0.0);
         // registry names remain addressable
         assert!(ConfigRegistry::lookup("proposed").is_some());
+    }
+
+    #[test]
+    fn drop_with_idle_pool_joins_cleanly() {
+        // Engines must tear their pool down even though workers hold
+        // sender clones (the shutdown-token protocol).
+        for threads in [1, 4] {
+            let e = small_engine(threads, BackendKind::Analytic);
+            let net = tinycnn();
+            let _ = e.sweep(&net);
+            drop(e); // must not hang
+        }
     }
 }

@@ -29,6 +29,11 @@
 //! provenance field (`"ws"` / `"os"`); v1 predates it. Both older
 //! schemas remain readable — [`SweepDoc::from_json`] accepts all three
 //! and defaults v1 to `"ws"`, the only dataflow that existed then.
+//! (`ConfigResult::scaled_streaming_toggles` — the sampling-scale-
+//! extrapolated aggregate behind
+//! `SweepReport::streaming_activity_reduction_pct` — is an in-memory
+//! field only; the v3 document deliberately carries just the raw
+//! sampled ledger plus `sampled_tiles`/`total_tiles`.)
 //! The bit-exactness migration contract: for every registry config the
 //! v3 counts equal the v2 counts field-for-field (the new comparator
 //! fields are 0 for every pre-stack design) — pinned by

@@ -12,9 +12,13 @@
 //!   implementations ([`AnalyticBackend`], [`CycleBackend`]); analytic
 //!   vs cycle-accurate is a runtime choice (`--backend`), and alternative
 //!   estimators (asymmetric floorplan, skewed pipeline — see PAPERS.md)
-//!   are one `impl` away.
+//!   are one `impl` away. Sweeps call the batched
+//!   `EstimatorBackend::estimate_many` (count once, price many; default
+//!   = sequential loop for out-of-tree backends).
 //! * [`core`] — [`SaEngine`] + builder: batch sweeps and the streaming
-//!   job API over one persistent worker pool.
+//!   job API over one persistent worker pool with tile-granular
+//!   scheduling (layers split into per-tile work items, folded back in
+//!   deterministic plan order).
 //! * [`json`] — serde-free JSON serialization of
 //!   [`SweepReport`](crate::coordinator::SweepReport) /
 //!   [`LayerReport`](crate::coordinator::LayerReport) /

@@ -2,8 +2,9 @@
 //! coding-stack configuration the system knows about.
 //!
 //! Everything that used to carry its own name list — `SaCodingConfig::
-//! by_name`, the coordinator's `paper_configs`/`ablation_configs`, the
-//! CLI usage text — derives from [`CONFIG_TABLE`]. Since the codec-stack
+//! by_name`, the coordinator's pre-engine config lists (removed with
+//! the other deprecated shims), the CLI usage text — derives from
+//! [`CONFIG_TABLE`]. Since the codec-stack
 //! redesign a row is a **stack descriptor**: its canonical `--coding`
 //! spec string, parsed on demand into a [`CodingStack`]. Adding a
 //! configuration here makes it addressable by name everywhere at once —
@@ -244,19 +245,6 @@ impl ConfigSet {
         );
         self.entries.push((name, stack.into()));
         self
-    }
-
-    /// Adopt a legacy name/config list verbatim, lowering each closed
-    /// struct to its stack — no duplicate-name check, because the
-    /// deprecated shims must accept whatever their pre-registry callers
-    /// passed (duplicates produced duplicate report columns, not errors).
-    pub(crate) fn from_pairs(entries: Vec<(String, SaCodingConfig)>) -> Self {
-        ConfigSet {
-            entries: entries
-                .into_iter()
-                .map(|(n, c)| (n, c.stack()))
-                .collect(),
-        }
     }
 
     /// Stack lookup by name within this set.

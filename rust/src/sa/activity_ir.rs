@@ -1,0 +1,569 @@
+//! The tile-activity intermediate representation: count once, price many.
+//!
+//! A sweep evaluates the *same* tile under many coding stacks, but most
+//! of what an estimator computes is stack-invariant:
+//!
+//! * the raw per-edge lane streams (already materialized contiguously by
+//!   [`Tile`]: `a_row` slices and the `b_col` column mirror),
+//! * the per-k-slot nonzero masks (the [`Tile`] popcount bitmasks),
+//! * every MAC-side count — `active/gated/zero_product_macs`,
+//!   `acc_clock_events`, `mult_input_toggles` — which depends only on
+//!   *which edges carry a value gate* (value gates gate exactly the zero
+//!   words, part of the codec contract, so the gated slot sets are pure
+//!   set algebra over the zero masks; transforms are identity after
+//!   decode and register clock gates never touch values),
+//! * the f32 outputs `C = A×B` (coding is functionally transparent and
+//!   each accumulator sums its non-zero products in the same ascending-k
+//!   order under every dataflow — conformance-pinned).
+//!
+//! [`TileActivity`] is that shared, config-independent pass: built once
+//! per tile × dataflow, it lazily materializes the MAC-side ledger per
+//! *gate combination* (at most 4: `{west gates} × {north gates}`) and
+//! the functional outputs. [`TileActivity::price`] is the cheap
+//! per-stack pass layered on top: it replays only the codec
+//! encode/charge state over the shared raw lane streams (O((M+N)·K) per
+//! stack) and reuses the cached MAC side, instead of re-walking the
+//! O(M·N·K) MAC schedule once per stack.
+//!
+//! Exactness is non-negotiable and enforced differentially:
+//! `rust/tests/conformance.rs` asserts `price` equals the literal
+//! per-cycle reference simulators (counts *and* outputs, both dataflows,
+//! registry + composed stacks), and `rust/tests/legacy_conformance.rs`
+//! pins it against the frozen pre-stack reference.
+//!
+//! ## Why the per-combo MAC ledger is exact
+//!
+//! Every PE consumes the identical `(A[i,kk], B[kk,j])` slot sequence
+//! under either dataflow; a slot is skipped exactly when a gating edge
+//! carries a zero operand. Hence:
+//!
+//! * slot partition counts reduce to per-slot nonzero set algebra
+//!   (`active = Σ_k nnz_A(·,k)·nnz_B(k,·)` etc.);
+//! * the operand-isolation latches feeding each multiplier see the
+//!   *decoded* operand subsequence, and decode∘encode is the identity,
+//!   so latch toggles depend only on the raw values and the gate set —
+//!   never on which transform or clock-gate codecs are stacked on the
+//!   edge. The a-side latch stream of row `i` is the (gated) raw row
+//!   replayed into N latches; the b-side reduces to pairwise row-of-B
+//!   Hamming sums memoized across rows of A (adjacent pairs and reset
+//!   distances precomputed — the overwhelmingly common transitions at
+//!   moderate sparsity). Weight-side gating makes the slot sets
+//!   column-dependent, where an exact O(M·N·K) per-PE walk takes over.
+
+use crate::activity::{
+    ham16_masked, ham16_slice, ham_bf16, stream_toggles, ActivityCounts,
+};
+use crate::bf16::{as_bits, Bf16};
+use crate::coding::{CodingStack, EdgeStack};
+
+use super::{Dataflow, Tile};
+
+/// MAC-side ledger for one gate combination (dataflow-invariant).
+#[derive(Clone, Copy, Debug)]
+struct MacSide {
+    active_macs: u64,
+    gated_macs: u64,
+    zero_product_macs: u64,
+    acc_clock_events: u64,
+    mult_input_toggles: u64,
+}
+
+/// The config-independent activity of one tile under one dataflow —
+/// computed once, then priced under any number of coding stacks via
+/// [`TileActivity::price`]. See the module docs for what is shared and
+/// why the sharing is exact.
+pub struct TileActivity<'t> {
+    tile: &'t Tile,
+    dataflow: Dataflow,
+    /// Per-k-slot nonzero counts over rows of A / columns of B.
+    nnz_a: Vec<u64>,
+    nnz_b: Vec<u64>,
+    /// Lazy MAC-side ledgers, indexed by gate combination
+    /// (`west_gates | north_gates << 1`).
+    mac: [Option<MacSide>; 4],
+    /// Lazy functional result C = A×B (f32 accumulation).
+    outputs: Option<Vec<f32>>,
+}
+
+impl<'t> TileActivity<'t> {
+    /// Run the shared pass: per-slot zero masks are folded to nonzero
+    /// counts here; the MAC-side ledgers and outputs materialize on
+    /// first use.
+    pub fn new(tile: &'t Tile, dataflow: Dataflow) -> Self {
+        let k = tile.k;
+        TileActivity {
+            tile,
+            dataflow,
+            nnz_a: (0..k).map(|kk| tile.nnz_a_col(kk)).collect(),
+            nnz_b: (0..k).map(|kk| tile.nnz_b_row(kk)).collect(),
+            mac: [None; 4],
+            outputs: None,
+        }
+    }
+
+    /// The dataflow this activity was counted under.
+    pub fn dataflow(&self) -> Dataflow {
+        self.dataflow
+    }
+
+    /// The tile being priced.
+    pub fn tile(&self) -> &'t Tile {
+        self.tile
+    }
+
+    /// Price one coding stack over the shared activity: replay the
+    /// stack's codec encode/charge state over the raw lane streams and
+    /// attach the cached MAC-side ledger for the stack's gate
+    /// combination. Bit-identical to a from-scratch estimate of the same
+    /// `(tile, stack, dataflow)` triple.
+    pub fn price(&mut self, stack: &CodingStack) -> ActivityCounts {
+        let (m, k, n) = (self.tile.m, self.tile.k, self.tile.n);
+        let mut c = ActivityCounts::default();
+
+        // Register/bus charge factor per lane: one register per PE
+        // passed (WS pipelines) vs a single edge drive register (OS
+        // buses). The per-PE decoder taps are the fanout either way.
+        let (west_regs, north_regs) = match self.dataflow {
+            Dataflow::WeightStationary => (n as u64, m as u64),
+            Dataflow::OutputStationary => (1, 1),
+        };
+
+        // ---------------- West (input) lanes ----------------
+        for i in 0..m {
+            lane_counts(
+                self.tile.a_row(i),
+                &stack.west,
+                west_regs,
+                n as u64, // decoder taps: one per PE of the row
+                LaneSide::West,
+                &mut c,
+            );
+        }
+
+        // ---------------- North (weight) lanes ----------------
+        // Zero-copy: b_col is a contiguous slice of the tile's
+        // column-major mirror.
+        for j in 0..n {
+            lane_counts(
+                self.tile.b_col(j),
+                &stack.north,
+                north_regs,
+                m as u64, // decoder taps: one per PE of the column
+                LaneSide::North,
+                &mut c,
+            );
+        }
+
+        // ---------------- MAC side: shared per gate combo -------------
+        let mac = self.mac_side(stack.west.gates(), stack.north.gates());
+        c.active_macs = mac.active_macs;
+        c.gated_macs = mac.gated_macs;
+        c.zero_product_macs = mac.zero_product_macs;
+        c.acc_clock_events = mac.acc_clock_events;
+        c.mult_input_toggles = mac.mult_input_toggles;
+        if stack.gates_any() {
+            c.acc_cg_cell_cycles = self.tile.mac_slots();
+        }
+
+        c.unload_values = (m * n) as u64;
+        c.cycles = self.dataflow.tile_cycles(m, k, n);
+        c
+    }
+
+    /// The functional result C = A×B (row-major M×N, f32 accumulation),
+    /// computed once per tile. Identical for every coding stack and
+    /// dataflow: each accumulator sums its non-zero products in
+    /// ascending-k order, exactly the order of both cycle engines.
+    pub fn outputs(&mut self) -> &[f32] {
+        if self.outputs.is_none() {
+            let tile = self.tile;
+            let (m, k, n) = (tile.m, tile.k, tile.n);
+            let mut acc = vec![0f32; m * n];
+            for i in 0..m {
+                let a_row = tile.a_row(i);
+                for j in 0..n {
+                    let b_col = tile.b_col(j);
+                    let mut sum = 0f32;
+                    for kk in 0..k {
+                        let (a, b) = (a_row[kk], b_col[kk]);
+                        if !a.is_zero() && !b.is_zero() {
+                            sum += a.to_f32() * b.to_f32();
+                        }
+                    }
+                    acc[i * n + j] = sum;
+                }
+            }
+            self.outputs = Some(acc);
+        }
+        self.outputs.as_deref().unwrap()
+    }
+
+    /// MAC-side ledger for one gate combination, cached across stacks.
+    fn mac_side(&mut self, in_gate: bool, w_gate: bool) -> MacSide {
+        let idx = (in_gate as usize) | ((w_gate as usize) << 1);
+        if let Some(mac) = self.mac[idx] {
+            return mac;
+        }
+        let tile = self.tile;
+        let (m, k, n) = (tile.m, tile.k, tile.n);
+
+        // Slot partition: pure set arithmetic over the nonzero counts
+        // (value gates gate exactly the zeros — the codec contract).
+        let slots = tile.mac_slots();
+        let active: u64 =
+            (0..k).map(|kk| self.nnz_a[kk] * self.nnz_b[kk]).sum();
+        let gated: u64 = match (in_gate, w_gate) {
+            (false, false) => 0,
+            (true, false) => {
+                (0..k).map(|kk| (m as u64 - self.nnz_a[kk]) * n as u64).sum()
+            }
+            (false, true) => {
+                (0..k).map(|kk| (n as u64 - self.nnz_b[kk]) * m as u64).sum()
+            }
+            (true, true) => slots - active,
+        };
+        let non_gated = slots - gated;
+
+        let mult_input_toggles = if w_gate {
+            // Weight-side gating makes slot sets column-dependent:
+            // generic exact per-PE walk.
+            mult_toggles_generic(tile, in_gate, w_gate)
+        } else {
+            mult_toggles_row_uniform(tile, in_gate)
+        };
+
+        let mac = MacSide {
+            active_macs: active,
+            gated_macs: gated,
+            zero_product_macs: non_gated - active,
+            acc_clock_events: 32 * non_gated,
+            mult_input_toggles,
+        };
+        self.mac[idx] = Some(mac);
+        mac
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum LaneSide {
+    West,
+    North,
+}
+
+/// Stream counts for one lane (a West row or a North column), charged
+/// to the matching side of the ledger. `regs` is the register/bus
+/// charge factor (registers per lane under WS, 1 under OS); `dec_taps`
+/// is the number of per-PE XOR-decoder taps on the lane (the PE count
+/// either way). Single pass through the edge's codec stack — one coder
+/// allocation per lane, nothing per word; this is the sweep hot path.
+fn lane_counts(
+    raw: &[Bf16],
+    edge: &EdgeStack,
+    regs: u64,
+    dec_taps: u64,
+    side: LaneSide,
+    c: &mut ActivityCounts,
+) {
+    let k = raw.len() as u64;
+    let gates = edge.gates();
+    let codes = edge.codes();
+    let mask = edge.cover_mask();
+    let lines = edge.coded_lines() as u64;
+    let over = edge.load_overhead();
+    // Resolved once per lane: the per-word loop below must not pay a
+    // codec-list walk per load.
+    let clock_gate = edge.clock_gate();
+
+    let mut coder = edge.coder();
+    let mut prev_word = 0u16;
+    let mut prev_sb = 0u8;
+    let mut prev_zero = false;
+    let mut raw_toggles = 0u64; // data-line toggles per register
+    let mut clock_bits = 0u64; // FF clock events per register
+    let mut loads = 0u64; // register load slots (non-gated values)
+    let mut inv_toggles = 0u64;
+    let mut dec_toggles = 0u64;
+    let mut zero_sb_toggles = 0u64;
+
+    for &v in raw {
+        let slot = coder.next(v);
+        if gates {
+            zero_sb_toggles += (slot.gated != prev_zero) as u64;
+            prev_zero = slot.gated;
+            if slot.gated {
+                continue; // pipeline frozen: nothing loads
+            }
+        }
+        debug_assert_eq!(edge.decode(slot.word, slot.sideband).0, v.0);
+        if codes {
+            let inv_diff = (prev_sb ^ slot.sideband).count_ones() as u64;
+            inv_toggles += inv_diff;
+            dec_toggles +=
+                ham16_masked(prev_word, slot.word.0, mask) as u64 + inv_diff;
+            prev_sb = slot.sideband;
+        }
+        raw_toggles += (prev_word ^ slot.word.0).count_ones() as u64;
+        clock_bits += match clock_gate {
+            Some(cg) => cg.load_clock_bits(prev_word, slot.word.0),
+            None => 16,
+        };
+        prev_word = slot.word.0;
+        loads += 1;
+    }
+
+    let ops = coder.ops();
+    c.zero_detect_ops += ops.zero_detect_ops;
+    c.encoder_ops += ops.encoder_ops;
+
+    let data_toggles = regs * raw_toggles;
+    let data_clocks = regs * clock_bits;
+    let inv_sideband_toggles = regs * inv_toggles;
+    let inv_sideband_clocks = regs * lines * loads;
+    let decoder_toggles = dec_taps * dec_toggles;
+    // Register clock-gate codecs (DDCG): comparator + per-group ICG burn
+    // on every load slot of every register.
+    let cmp_bit_cycles = regs * over.comparator_bit_cycles * loads;
+    let load_cg_cycles = regs * over.cg_cell_cycles * loads;
+
+    // is-zero sideband: always clocked, one bit; ICG burns every slot.
+    let (zero_sb_toggles, zero_sb_clocks, gate_cg_cycles) = if gates {
+        (regs * zero_sb_toggles, regs * k, regs * k)
+    } else {
+        (0, 0, 0)
+    };
+
+    match side {
+        LaneSide::West => {
+            c.west_data_toggles += data_toggles;
+            c.west_clock_events += data_clocks;
+            c.west_sideband_toggles += inv_sideband_toggles + zero_sb_toggles;
+            c.west_sideband_clock_events += inv_sideband_clocks + zero_sb_clocks;
+            c.west_cg_cell_cycles += gate_cg_cycles + load_cg_cycles;
+            c.west_comparator_bit_cycles += cmp_bit_cycles;
+            c.decoder_toggles += decoder_toggles;
+        }
+        LaneSide::North => {
+            c.north_data_toggles += data_toggles;
+            c.north_clock_events += data_clocks;
+            c.north_sideband_toggles += inv_sideband_toggles + zero_sb_toggles;
+            c.north_sideband_clock_events += inv_sideband_clocks + zero_sb_clocks;
+            c.north_cg_cell_cycles += gate_cg_cycles + load_cg_cycles;
+            c.north_comparator_bit_cycles += cmp_bit_cycles;
+            c.decoder_toggles += decoder_toggles;
+        }
+    }
+}
+
+/// Multiplier operand-latch toggles when the North edge carries no value
+/// gate: every PE of row `i` sees the same decoded-a sequence (the raw
+/// row, gated to its non-zero subsequence when the West edge gates) and
+/// the same per-row b-side slot walk.
+fn mult_toggles_row_uniform(tile: &Tile, in_gate: bool) -> u64 {
+    let (m, k, n) = (tile.m, tile.k, tile.n);
+    let mut total = 0u64;
+
+    // a-side: decode∘encode is the identity, so the latch stream is the
+    // (gated) raw row regardless of any West transform — replayed into
+    // the N latches of the row.
+    let mut seq: Vec<Bf16> = Vec::with_capacity(k);
+    for i in 0..m {
+        let row = tile.a_row(i);
+        let toggles = if in_gate {
+            seq.clear();
+            seq.extend(row.iter().copied().filter(|v| !v.is_zero()));
+            stream_toggles(Bf16::ZERO, &seq)
+        } else {
+            stream_toggles(Bf16::ZERO, row)
+        };
+        total += n as u64 * toggles;
+    }
+
+    // b-side: pairwise row-of-B Hamming sums over each row's slot set.
+    // D(p, q) = Σ_j Ham(B[p,j], B[q,j]). A direct 16-lane packed
+    // popcount (~4 u64 ops at n=16) is cheaper than memoizing, except
+    // for the adjacent pairs which every dense row repays M times —
+    // those are precomputed once.
+    let b_bits: &[u16] = as_bits(&tile.b);
+    let row_bits = |p: usize| &b_bits[p * n..(p + 1) * n];
+    let zero_row = vec![0u16; n];
+    let d_direct = |p: usize, q: usize| {
+        let prev = if p == usize::MAX { &zero_row[..] } else { row_bits(p) };
+        ham16_slice(prev, row_bits(q))
+    };
+    if in_gate {
+        // adjacent-pair distances (the overwhelmingly common case at
+        // moderate sparsity), D(k-1, k), plus reset distances D(⊥, k)
+        let mut d_adj: Vec<u64> = Vec::with_capacity(k);
+        let mut d_rst: Vec<u64> = Vec::with_capacity(k);
+        for kk in 0..k {
+            d_rst.push(ham16_slice(&zero_row, row_bits(kk)));
+            d_adj.push(if kk == 0 {
+                0
+            } else {
+                ham16_slice(row_bits(kk - 1), row_bits(kk))
+            });
+        }
+        for i in 0..m {
+            let arow = tile.a_row(i);
+            let mut prev = usize::MAX;
+            let mut row_total = 0u64;
+            for (kk, a) in arow.iter().enumerate() {
+                if a.is_zero() {
+                    continue;
+                }
+                row_total += if prev == usize::MAX {
+                    d_rst[kk]
+                } else if prev + 1 == kk {
+                    d_adj[kk]
+                } else {
+                    d_direct(prev, kk)
+                };
+                prev = kk;
+            }
+            total += row_total;
+        }
+    } else {
+        // All rows see all slots: M × adjacent-pair sums.
+        let mut col_total = 0u64;
+        let mut prev = usize::MAX;
+        for kk in 0..k {
+            col_total += d_direct(prev, kk);
+            prev = kk;
+        }
+        total += m as u64 * col_total;
+    }
+    total
+}
+
+/// Per-PE operand-latch walk, used when weight-side gating makes the
+/// slot sets column-dependent. O(M·N·K) but exact for every stack
+/// (gates gate exactly zeros; transforms are identity after decode).
+fn mult_toggles_generic(tile: &Tile, in_gate: bool, w_gate: bool) -> u64 {
+    let (m, k, n) = (tile.m, tile.k, tile.n);
+    let mut total = 0u64;
+    for i in 0..m {
+        for j in 0..n {
+            let mut lat_a = Bf16::ZERO;
+            let mut lat_b = Bf16::ZERO;
+            for kk in 0..k {
+                let a = tile.a_at(i, kk);
+                let b = tile.b_at(kk, j);
+                let gated =
+                    (in_gate && a.is_zero()) || (w_gate && b.is_zero());
+                if gated {
+                    continue;
+                }
+                total += (ham_bf16(lat_a, a) + ham_bf16(lat_b, b)) as u64;
+                lat_a = a;
+                lat_b = b;
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ConfigRegistry;
+    use crate::sa::{simulate_tile, simulate_tile_reference};
+    use crate::util::prop::check;
+    use crate::util::Rng64;
+
+    fn random_tile(
+        rng: &mut Rng64,
+        m: usize,
+        k: usize,
+        n: usize,
+        pz: f64,
+        pzw: f64,
+    ) -> Tile {
+        let a: Vec<f32> = (0..m * k)
+            .map(|_| if rng.chance(pz) { 0.0 } else { rng.normal() as f32 })
+            .collect();
+        let b: Vec<f32> = (0..k * n)
+            .map(|_| if rng.chance(pzw) { 0.0 } else { (rng.normal() * 0.1) as f32 })
+            .collect();
+        Tile::from_f32(&a, &b, m, k, n)
+    }
+
+    const BOTH: [Dataflow; 2] =
+        [Dataflow::WeightStationary, Dataflow::OutputStationary];
+
+    #[test]
+    fn one_ir_prices_every_registry_stack_like_the_reference() {
+        // The core shared-pass claim: a single TileActivity, priced
+        // under every registry stack in sequence, equals a fresh literal
+        // per-cycle simulation of each — counts and outputs.
+        check("shared IR == per-stack reference sim", 10, |rng| {
+            let (m, k, n) = (1 + rng.below(6), 1 + rng.below(16), 1 + rng.below(6));
+            let pz = rng.uniform();
+            let t = random_tile(rng, m, k, n, pz, 0.3);
+            for df in BOTH {
+                let mut ir = TileActivity::new(&t, df);
+                for e in ConfigRegistry::entries() {
+                    let stack = e.stack();
+                    let golden = simulate_tile_reference(&t, &stack, df);
+                    assert_eq!(
+                        ir.price(&stack),
+                        golden.counts,
+                        "config {}, {df}, tile {m}x{k}x{n}",
+                        e.name
+                    );
+                    assert_eq!(ir.outputs(), &golden.c[..], "{} {df}", e.name);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pricing_order_does_not_matter() {
+        // The lazy per-combo caches must make price() order-independent:
+        // pricing stack B after stack A equals pricing B alone.
+        let mut rng = Rng64::new(0x1117);
+        let t = random_tile(&mut rng, 5, 14, 5, 0.5, 0.2);
+        let stacks: Vec<CodingStack> = ConfigRegistry::entries()
+            .iter()
+            .map(|e| e.stack())
+            .collect();
+        for df in BOTH {
+            for first in &stacks {
+                let mut warm = TileActivity::new(&t, df);
+                warm.price(first);
+                for s in &stacks {
+                    let mut cold = TileActivity::new(&t, df);
+                    assert_eq!(
+                        warm.price(s),
+                        cold.price(s),
+                        "warm-cache divergence: {} after {} ({df})",
+                        s.spec(),
+                        first.spec()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_match_fast_engine_outputs_bitwise() {
+        check("IR outputs == cycle engine outputs", 20, |rng| {
+            let (m, k, n) = (1 + rng.below(7), 1 + rng.below(20), 1 + rng.below(7));
+            let t = random_tile(rng, m, k, n, rng.uniform(), 0.4);
+            for df in BOTH {
+                let mut ir = TileActivity::new(&t, df);
+                let sim = simulate_tile(&t, &CodingStack::baseline(), df);
+                assert_eq!(ir.outputs(), &sim.c[..], "{df}");
+                assert_eq!(ir.outputs(), &t.reference_result()[..], "{df}");
+            }
+        });
+    }
+
+    #[test]
+    fn accessors_expose_the_build_inputs() {
+        let mut rng = Rng64::new(9);
+        let t = random_tile(&mut rng, 3, 5, 3, 0.2, 0.2);
+        let ir = TileActivity::new(&t, Dataflow::OutputStationary);
+        assert_eq!(ir.dataflow(), Dataflow::OutputStationary);
+        assert!(std::ptr::eq(ir.tile(), &t));
+    }
+}

@@ -1,31 +1,21 @@
 //! Analytic (closed-form) activity model — the fast engine behind the
 //! full-CNN sweeps of paper Figs. 4 and 5 — for both dataflows.
 //!
-//! Key observation: every register of a stream pipeline sees the same
-//! value sequence, time-shifted, so its lifetime toggle count is the
-//! stream's consecutive-pair Hamming sum — no per-cycle simulation
-//! needed. Compute-side counts reduce to per-slot set algebra
-//! (`active = Σ_k nnz_A(·,k)·nnz_B(k,·)`), and multiplier operand
-//! activity reduces to pairwise row-of-B Hamming sums that are memoized
-//! across rows of A.
+//! Since the count-once/price-many refactor the closed-form machinery
+//! lives in the [`TileActivity`] intermediate representation
+//! (`sa::activity_ir`): the config-independent pass (per-slot zero-mask
+//! algebra, per-gate-combo MAC ledgers, memoized multiplier operand
+//! Hamming sums) is built once per tile × dataflow, and each coding
+//! stack is priced by replaying only its codec encode/charge state over
+//! the shared raw lane streams. [`analyze_tile`] is the single-stack
+//! view of that pipeline; [`analyze_tile_many`] amortizes the shared
+//! pass across a whole stack list (the sweep hot path — see
+//! `engine::EstimatorBackend::estimate_many`).
 //!
-//! The coding layer enters only through the [`CodingStack`] codec API:
-//! each edge's [`EdgeStack`] supplies the lane front-end
-//! (`EdgeStack::coder`), the per-load register charge
-//! (`load_clock_bits` / `load_overhead`), the sideband line counts and
-//! the decoder cover mask. The model never inspects concrete codec
-//! types, so new codecs need no changes here. (One closed-form
-//! assumption is part of the codec contract: value gates gate exactly
-//! the zero words — the MAC set algebra below depends on it.)
-//!
-//! The dataflow axis enters purely as **charge factors** on the lane
-//! sums: under weight-stationary streaming each lane's sequence is
-//! re-registered once per PE it passes (N registers per West row, M per
-//! North column), under output-stationary it is registered once in the
-//! lane's edge drive register while the per-PE XOR decoders still tap
-//! the bus (N resp. M taps). MAC-side counts are dataflow-invariant —
-//! every PE consumes the identical `(A[i,kk], B[kk,j])` slot sequence —
-//! and the cycle count comes from [`Dataflow::tile_cycles`].
+//! The coding layer enters only through the [`CodingStack`] codec API,
+//! so new codecs need no changes here; the dataflow axis enters purely
+//! as register/bus charge factors on the lane sums (see the
+//! `activity_ir` module docs for the exactness arguments).
 //!
 //! The model is **exact**: `rust/tests/property_tests.rs` and
 //! `rust/tests/conformance.rs` assert equal `ActivityCounts` integers
@@ -34,13 +24,10 @@
 //! pins the stack migration against a frozen copy of the pre-stack
 //! reference simulator.
 
-use crate::activity::{
-    ham16_masked, ham16_slice, ham_bf16, stream_toggles, ActivityCounts,
-};
-use crate::bf16::{as_bits, Bf16};
-use crate::coding::{CodingStack, EdgeStack};
+use crate::activity::ActivityCounts;
+use crate::coding::CodingStack;
 
-use super::{Dataflow, Tile};
+use super::{Dataflow, Tile, TileActivity};
 
 /// Exact activity counts for one tile under a coding stack and dataflow.
 pub fn analyze_tile(
@@ -48,304 +35,20 @@ pub fn analyze_tile(
     stack: &CodingStack,
     dataflow: Dataflow,
 ) -> ActivityCounts {
-    let (m, k, n) = (tile.m, tile.k, tile.n);
-    let mut c = ActivityCounts::default();
-
-    // Register/bus charge factor per lane: one register per PE passed
-    // (WS pipelines) vs a single edge drive register (OS buses). The
-    // per-PE decoder taps are the fanout under either dataflow.
-    let (west_regs, north_regs) = match dataflow {
-        Dataflow::WeightStationary => (n as u64, m as u64),
-        Dataflow::OutputStationary => (1, 1),
-    };
-
-    // ---------------- West (input) lanes ----------------
-    for i in 0..m {
-        lane_counts(
-            tile.a_row(i),
-            &stack.west,
-            west_regs,
-            n as u64, // decoder taps: one per PE of the row
-            LaneSide::West,
-            &mut c,
-        );
-    }
-
-    // ---------------- North (weight) lanes ----------------
-    // Zero-copy: b_col is a contiguous slice of the tile's column-major
-    // mirror (no per-column strided gather or scratch buffer).
-    for j in 0..n {
-        lane_counts(
-            tile.b_col(j),
-            &stack.north,
-            north_regs,
-            m as u64, // decoder taps: one per PE of the column
-            LaneSide::North,
-            &mut c,
-        );
-    }
-
-    // ---------------- Compute-side counts ----------------
-    // Non-zero counts per k-slot: popcounts over the tile's precomputed
-    // nonzero bitmasks. Value gates gate exactly the zeros (the codec
-    // contract), so the gated-slot algebra is pure set arithmetic.
-    let in_gate = stack.west.gates();
-    let w_gate = stack.north.gates();
-    let nnz_a_col: Vec<u64> = (0..k).map(|kk| tile.nnz_a_col(kk)).collect();
-    let nnz_b_row: Vec<u64> = (0..k).map(|kk| tile.nnz_b_row(kk)).collect();
-
-    let slots = tile.mac_slots();
-    let active: u64 = (0..k).map(|kk| nnz_a_col[kk] * nnz_b_row[kk]).sum();
-    let gated: u64 = match (in_gate, w_gate) {
-        (false, false) => 0,
-        (true, false) => {
-            (0..k).map(|kk| (m as u64 - nnz_a_col[kk]) * n as u64).sum()
-        }
-        (false, true) => {
-            (0..k).map(|kk| (n as u64 - nnz_b_row[kk]) * m as u64).sum()
-        }
-        (true, true) => slots - active,
-    };
-    let non_gated = slots - gated;
-    c.active_macs = active;
-    c.gated_macs = gated;
-    c.zero_product_macs = non_gated - active;
-    c.acc_clock_events = 32 * non_gated;
-    if stack.gates_any() {
-        c.acc_cg_cell_cycles = slots;
-    }
-
-    // ---------------- Multiplier operand activity ----------------
-    if w_gate {
-        // Generic per-PE walk (ablation stacks only): both latches.
-        c.mult_input_toggles = mult_toggles_generic(tile, stack);
-    } else {
-        // a-side: every PE of row i sees the same decoded-a sequence —
-        // which, when the West edge carries no transform, is exactly the
-        // sequence the West data registers load. Under WS the ledger
-        // already carries the N-registers-per-lane factor; under OS the
-        // lane was charged once, so the N PE latches per row are
-        // re-applied here.
-        if !stack.west.codes() {
-            c.mult_input_toggles += match dataflow {
-                Dataflow::WeightStationary => c.west_data_toggles,
-                Dataflow::OutputStationary => n as u64 * c.west_data_toggles,
-            };
-        } else {
-            // With a West transform the registers hold encoded words;
-            // the latches see the decoded (== raw, decode∘encode = id)
-            // gated subsequence instead.
-            let mut seq: Vec<Bf16> = Vec::with_capacity(k);
-            for i in 0..m {
-                let row = tile.a_row(i);
-                let toggles = if in_gate {
-                    seq.clear();
-                    seq.extend(row.iter().copied().filter(|v| !v.is_zero()));
-                    stream_toggles(Bf16::ZERO, &seq)
-                } else {
-                    stream_toggles(Bf16::ZERO, row)
-                };
-                c.mult_input_toggles += n as u64 * toggles;
-            }
-        }
-        // b-side: pairwise row-of-B Hamming sums over each row's slot set.
-        // D(p, q) = Σ_j Ham(B[p,j], B[q,j]). A direct 16-lane packed
-        // popcount (~4 u64 ops at n=16) is cheaper than memoizing, except
-        // for the adjacent pairs which every dense row repays M times —
-        // those are precomputed once.
-        let b_bits: &[u16] = as_bits(&tile.b);
-        let row_bits = |p: usize| &b_bits[p * n..(p + 1) * n];
-        let zero_row = vec![0u16; n];
-        let d_direct = |p: usize, q: usize| {
-            let prev = if p == usize::MAX { &zero_row[..] } else { row_bits(p) };
-            ham16_slice(prev, row_bits(q))
-        };
-        if in_gate {
-            // adjacent-pair distances (the overwhelmingly common case at
-            // moderate sparsity), D(k-1, k), plus reset distances D(⊥, k)
-            let mut d_adj: Vec<u64> = Vec::with_capacity(k);
-            let mut d_rst: Vec<u64> = Vec::with_capacity(k);
-            for kk in 0..k {
-                d_rst.push(ham16_slice(&zero_row, row_bits(kk)));
-                d_adj.push(if kk == 0 {
-                    0
-                } else {
-                    ham16_slice(row_bits(kk - 1), row_bits(kk))
-                });
-            }
-            for i in 0..m {
-                let arow = tile.a_row(i);
-                let mut prev = usize::MAX;
-                let mut total = 0u64;
-                for (kk, a) in arow.iter().enumerate() {
-                    if a.is_zero() {
-                        continue;
-                    }
-                    total += if prev == usize::MAX {
-                        d_rst[kk]
-                    } else if prev + 1 == kk {
-                        d_adj[kk]
-                    } else {
-                        d_direct(prev, kk)
-                    };
-                    prev = kk;
-                }
-                c.mult_input_toggles += total;
-            }
-        } else {
-            // All rows see all slots: M × adjacent-pair sums.
-            let mut col_total = 0u64;
-            let mut prev = usize::MAX;
-            for kk in 0..k {
-                col_total += d_direct(prev, kk);
-                prev = kk;
-            }
-            c.mult_input_toggles += m as u64 * col_total;
-        }
-    }
-
-    c.unload_values = (m * n) as u64;
-    c.cycles = dataflow.tile_cycles(m, k, n);
-    c
+    TileActivity::new(tile, dataflow).price(stack)
 }
 
-#[derive(Clone, Copy, PartialEq)]
-enum LaneSide {
-    West,
-    North,
-}
-
-/// Stream counts for one lane (a West row or a North column), charged
-/// to the matching side of the ledger. `regs` is the register/bus
-/// charge factor (registers per lane under WS, 1 under OS); `dec_taps`
-/// is the number of per-PE XOR-decoder taps on the lane (the PE count
-/// either way). Single pass through the edge's codec stack — one coder
-/// allocation per lane, nothing per word; this is the sweep hot path.
-fn lane_counts(
-    raw: &[Bf16],
-    edge: &EdgeStack,
-    regs: u64,
-    dec_taps: u64,
-    side: LaneSide,
-    c: &mut ActivityCounts,
-) {
-    let k = raw.len() as u64;
-    let gates = edge.gates();
-    let codes = edge.codes();
-    let mask = edge.cover_mask();
-    let lines = edge.coded_lines() as u64;
-    let over = edge.load_overhead();
-    // Resolved once per lane: the per-word loop below must not pay a
-    // codec-list walk per load.
-    let clock_gate = edge.clock_gate();
-
-    let mut coder = edge.coder();
-    let mut prev_word = 0u16;
-    let mut prev_sb = 0u8;
-    let mut prev_zero = false;
-    let mut raw_toggles = 0u64; // data-line toggles per register
-    let mut clock_bits = 0u64; // FF clock events per register
-    let mut loads = 0u64; // register load slots (non-gated values)
-    let mut inv_toggles = 0u64;
-    let mut dec_toggles = 0u64;
-    let mut zero_sb_toggles = 0u64;
-
-    for &v in raw {
-        let slot = coder.next(v);
-        if gates {
-            zero_sb_toggles += (slot.gated != prev_zero) as u64;
-            prev_zero = slot.gated;
-            if slot.gated {
-                continue; // pipeline frozen: nothing loads
-            }
-        }
-        debug_assert_eq!(edge.decode(slot.word, slot.sideband).0, v.0);
-        if codes {
-            let inv_diff = (prev_sb ^ slot.sideband).count_ones() as u64;
-            inv_toggles += inv_diff;
-            dec_toggles +=
-                ham16_masked(prev_word, slot.word.0, mask) as u64 + inv_diff;
-            prev_sb = slot.sideband;
-        }
-        raw_toggles += (prev_word ^ slot.word.0).count_ones() as u64;
-        clock_bits += match clock_gate {
-            Some(cg) => cg.load_clock_bits(prev_word, slot.word.0),
-            None => 16,
-        };
-        prev_word = slot.word.0;
-        loads += 1;
-    }
-
-    let ops = coder.ops();
-    c.zero_detect_ops += ops.zero_detect_ops;
-    c.encoder_ops += ops.encoder_ops;
-
-    let data_toggles = regs * raw_toggles;
-    let data_clocks = regs * clock_bits;
-    let inv_sideband_toggles = regs * inv_toggles;
-    let inv_sideband_clocks = regs * lines * loads;
-    let decoder_toggles = dec_taps * dec_toggles;
-    // Register clock-gate codecs (DDCG): comparator + per-group ICG burn
-    // on every load slot of every register.
-    let cmp_bit_cycles = regs * over.comparator_bit_cycles * loads;
-    let load_cg_cycles = regs * over.cg_cell_cycles * loads;
-
-    // is-zero sideband: always clocked, one bit; ICG burns every slot.
-    let (zero_sb_toggles, zero_sb_clocks, gate_cg_cycles) = if gates {
-        (regs * zero_sb_toggles, regs * k, regs * k)
-    } else {
-        (0, 0, 0)
-    };
-
-    match side {
-        LaneSide::West => {
-            c.west_data_toggles += data_toggles;
-            c.west_clock_events += data_clocks;
-            c.west_sideband_toggles += inv_sideband_toggles + zero_sb_toggles;
-            c.west_sideband_clock_events += inv_sideband_clocks + zero_sb_clocks;
-            c.west_cg_cell_cycles += gate_cg_cycles + load_cg_cycles;
-            c.west_comparator_bit_cycles += cmp_bit_cycles;
-            c.decoder_toggles += decoder_toggles;
-        }
-        LaneSide::North => {
-            c.north_data_toggles += data_toggles;
-            c.north_clock_events += data_clocks;
-            c.north_sideband_toggles += inv_sideband_toggles + zero_sb_toggles;
-            c.north_sideband_clock_events += inv_sideband_clocks + zero_sb_clocks;
-            c.north_cg_cell_cycles += gate_cg_cycles + load_cg_cycles;
-            c.north_comparator_bit_cycles += cmp_bit_cycles;
-            c.decoder_toggles += decoder_toggles;
-        }
-    }
-}
-
-/// Per-PE operand-latch walk, used when weight-side gating makes the
-/// slot sets column-dependent. O(M·N·K) but exact for every stack
-/// (gates gate exactly zeros; transforms are identity after decode).
-fn mult_toggles_generic(tile: &Tile, stack: &CodingStack) -> u64 {
-    let (m, k, n) = (tile.m, tile.k, tile.n);
-    let in_gate = stack.west.gates();
-    let w_gate = stack.north.gates();
-    let mut total = 0u64;
-    for i in 0..m {
-        for j in 0..n {
-            let mut lat_a = Bf16::ZERO;
-            let mut lat_b = Bf16::ZERO;
-            for kk in 0..k {
-                let a = tile.a_at(i, kk);
-                let b = tile.b_at(kk, j);
-                let gated =
-                    (in_gate && a.is_zero()) || (w_gate && b.is_zero());
-                if gated {
-                    continue;
-                }
-                total += (ham_bf16(lat_a, a) + ham_bf16(lat_b, b)) as u64;
-                lat_a = a;
-                lat_b = b;
-            }
-        }
-    }
-    total
+/// Batched [`analyze_tile`]: count the tile once, price every stack in
+/// order. Result `i` is bit-identical to `analyze_tile(tile, &stacks[i],
+/// dataflow)` — the shared [`TileActivity`] pass only amortizes work
+/// that is provably stack-invariant.
+pub fn analyze_tile_many(
+    tile: &Tile,
+    stacks: &[CodingStack],
+    dataflow: Dataflow,
+) -> Vec<ActivityCounts> {
+    let mut ir = TileActivity::new(tile, dataflow);
+    stacks.iter().map(|s| ir.price(s)).collect()
 }
 
 #[cfg(test)]
@@ -442,6 +145,30 @@ mod tests {
                     let golden = simulate_tile(&t, &stack, df).counts;
                     let fast = analyze_tile(&t, &stack, df);
                     assert_eq!(fast, golden, "spec {spec}, {df}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn analyze_tile_many_matches_sequential_calls() {
+        // The batched entry point must be a pure amortization: result i
+        // equals the standalone single-stack analysis of stacks[i].
+        check("analyze_tile_many == N × analyze_tile", 10, |rng| {
+            let (m, k, n) = (1 + rng.below(5), 1 + rng.below(16), 1 + rng.below(5));
+            let t = random_tile(rng, m, k, n, rng.uniform(), 0.3);
+            let stacks: Vec<CodingStack> =
+                ALL_CONFIGS.iter().map(|n| stack_of(n)).collect();
+            for df in BOTH {
+                let batched = analyze_tile_many(&t, &stacks, df);
+                assert_eq!(batched.len(), stacks.len());
+                for (i, stack) in stacks.iter().enumerate() {
+                    assert_eq!(
+                        batched[i],
+                        analyze_tile(&t, stack, df),
+                        "config {}, {df}",
+                        ALL_CONFIGS[i]
+                    );
                 }
             }
         });

@@ -207,6 +207,26 @@ pub fn simulate_tile(
     }
 }
 
+/// Batched counterpart of [`simulate_tile`]: count the tile once through
+/// the shared [`TileActivity`](super::TileActivity) pass, price every
+/// stack over it, and compute the functional result a single time.
+/// Returns the per-stack counts (index-aligned with `stacks`) plus the
+/// shared `C = A×B` output — `counts[i]` is bit-identical to
+/// `simulate_tile(tile, &stacks[i], dataflow).counts`, and the output
+/// vector is bit-identical to every stack's `simulate_tile(..).c`
+/// (coding is functionally transparent; conformance-pinned). This is
+/// the cycle backend's sweep hot path: the O(M·N·K) MAC schedule is
+/// walked once per gate combination instead of once per stack.
+pub fn simulate_tile_many(
+    tile: &Tile,
+    stacks: &[CodingStack],
+    dataflow: Dataflow,
+) -> (Vec<ActivityCounts>, Vec<f32>) {
+    let mut ir = super::TileActivity::new(tile, dataflow);
+    let counts = stacks.iter().map(|s| ir.price(s)).collect();
+    (counts, ir.outputs().to_vec())
+}
+
 /// WS fast engine: wavefront-bounded MAC loop + lane-major register
 /// replay (see the module docs for the exactness argument).
 fn simulate_tile_ws(tile: &Tile, stack: &CodingStack) -> CycleResult {
@@ -947,6 +967,27 @@ mod tests {
                     bic.counts.mult_input_toggles
                 );
                 assert_eq!(base.counts.active_macs, bic.counts.active_macs);
+            }
+        });
+    }
+
+    #[test]
+    fn simulate_tile_many_matches_sequential_sims() {
+        check("simulate_tile_many == N × simulate_tile", 10, |rng| {
+            let (m, k, n) = (1 + rng.below(6), 1 + rng.below(16), 1 + rng.below(6));
+            let t = random_tile(rng, m, k, n, rng.uniform());
+            let stacks: Vec<CodingStack> = crate::engine::ConfigRegistry::entries()
+                .iter()
+                .map(|e| e.stack())
+                .collect();
+            for df in [WS, OS] {
+                let (counts, c) = simulate_tile_many(&t, &stacks, df);
+                assert_eq!(counts.len(), stacks.len());
+                for (i, stack) in stacks.iter().enumerate() {
+                    let single = simulate_tile(&t, stack, df);
+                    assert_eq!(counts[i], single.counts, "stack {i} {df}");
+                    assert_eq!(c, single.c, "outputs, stack {i} {df}");
+                }
             }
         });
     }

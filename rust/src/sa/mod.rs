@@ -11,6 +11,12 @@
 //!   over random tiles, `rust/tests/property_tests.rs` and
 //!   `rust/tests/conformance.rs`). Full-network sweeps (Figs. 4, 5) run
 //!   through this engine.
+//! * [`activity_ir`] — the **count-once/price-many** split both engines'
+//!   batched entry points share: [`TileActivity`] holds everything that
+//!   is stack-invariant (raw lane streams, per-slot zero masks, per-gate-
+//!   combo MAC ledgers, f32 outputs), and `price()` replays only a
+//!   stack's codec encode/charge state over it. `analyze_tile_many` /
+//!   `simulate_tile_many` amortize one IR across a whole config set.
 //!
 //! Shared semantics (DESIGN.md §6): a register is charged one clock event
 //! per *load slot* (K slots per tile stream) and data toggles by Hamming
@@ -24,12 +30,14 @@
 //! the bit-exactness contract between the two: identical f32 outputs,
 //! identical MAC-side counts.
 
+mod activity_ir;
 mod analytic;
 mod config;
 mod cycle;
 mod tile;
 mod trace;
 
+pub use activity_ir::*;
 pub use analytic::*;
 pub use config::*;
 pub use cycle::*;

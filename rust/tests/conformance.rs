@@ -236,6 +236,151 @@ fn composed_spec_stacks_pass_the_full_matrix() {
     });
 }
 
+// ---- batched estimation: count once, price many ----------------------
+
+/// A random *valid* composed stack for one edge: optional value gate
+/// (always first — the spec grammar rejects coding-before-gating),
+/// optional BIC variant, optional DDCG group size. May be empty.
+fn random_edge_spec(rng: &mut Rng64) -> String {
+    let mut codecs: Vec<String> = Vec::new();
+    if rng.chance(0.5) {
+        codecs.push("zvcg".into());
+    }
+    if rng.chance(0.5) {
+        let mode = ["bic-mantissa", "bic-full", "bic-segmented", "bic-exponent"]
+            [rng.below(4)];
+        let policy = if rng.chance(0.3) { "-mt" } else { "" };
+        codecs.push(format!("{mode}{policy}"));
+    }
+    if rng.chance(0.4) {
+        codecs.push(format!("ddcg16-g{}", [1usize, 2, 4, 8, 16][rng.below(5)]));
+    }
+    codecs.join("+")
+}
+
+/// A random valid full coding stack (possibly `baseline`).
+fn random_stack(rng: &mut Rng64) -> sa_lowpower::coding::CodingStack {
+    let w = random_edge_spec(rng);
+    let i = random_edge_spec(rng);
+    let mut clauses = Vec::new();
+    if !w.is_empty() {
+        clauses.push(format!("w:{w}"));
+    }
+    if !i.is_empty() {
+        clauses.push(format!("i:{i}"));
+    }
+    let spec = if clauses.is_empty() { "baseline".to_string() } else { clauses.join(",") };
+    sa_lowpower::coding::CodingStack::parse(&spec)
+        .unwrap_or_else(|e| panic!("generated spec '{spec}': {e}"))
+}
+
+/// The batched-backend contract (see `engine/backend.rs`): for every
+/// registry stack, `estimate_many` element `i` is bit-identical to the
+/// standalone `estimate` of `stacks[i]` — and both equal the literal
+/// per-cycle reference, so the shared `TileActivity` pass cannot drift
+/// from the golden semantics.
+#[test]
+fn estimate_many_is_bit_exact_vs_sequential_and_reference() {
+    check("estimate_many == N × estimate == reference", 8, |rng| {
+        let (m, k, n) = (1 + rng.below(7), 1 + rng.below(18), 1 + rng.below(7));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.4;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        let named = ConfigSet::all();
+        let stacks: Vec<_> = named.iter().map(|(_, s)| s.clone()).collect();
+        for df in [WS, OS] {
+            let backends: [&dyn EstimatorBackend; 2] =
+                [&AnalyticBackend, &CycleBackend];
+            for backend in backends {
+                let batched = backend.estimate_many(&t, &stacks, df);
+                assert_eq!(batched.len(), stacks.len());
+                for (i, (name, stack)) in named.iter().enumerate() {
+                    let single = backend.estimate(&t, stack, df);
+                    assert_eq!(
+                        batched[i],
+                        single,
+                        "'{name}' {df} ({} backend)",
+                        backend.name()
+                    );
+                    let golden = simulate_tile_reference(&t, stack, df);
+                    assert_eq!(
+                        batched[i],
+                        golden.counts,
+                        "'{name}' {df} ({} backend) vs literal reference",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Property clause over *arbitrary* composed stacks: one shared pass
+/// priced under a random stack list equals per-stack estimation and the
+/// literal reference, for random tiles × both dataflows × both
+/// backends. Duplicate stacks in the list are legal and must reproduce
+/// identical rows.
+#[test]
+fn estimate_many_matches_on_random_composed_stacks() {
+    check("batched contract on random stacks", 8, |rng| {
+        let (m, k, n) = (1 + rng.below(6), 1 + rng.below(16), 1 + rng.below(6));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.5;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        let mut stacks: Vec<_> = (0..5).map(|_| random_stack(rng)).collect();
+        // duplicates share cached IR state; both rows must still match
+        stacks.push(stacks[0].clone());
+        for df in [WS, OS] {
+            let backends: [&dyn EstimatorBackend; 2] =
+                [&AnalyticBackend, &CycleBackend];
+            for backend in backends {
+                let batched = backend.estimate_many(&t, &stacks, df);
+                for (i, stack) in stacks.iter().enumerate() {
+                    assert_eq!(
+                        batched[i],
+                        backend.estimate(&t, stack, df),
+                        "stack '{}' {df} ({} backend)",
+                        stack.spec(),
+                        backend.name()
+                    );
+                    assert_eq!(
+                        batched[i],
+                        simulate_tile_reference(&t, stack, df).counts,
+                        "stack '{}' {df} vs literal reference",
+                        stack.spec()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn estimate_many_holds_on_degenerate_tiles() {
+    let mut rng = Rng64::new(0xFADE);
+    let stacks: Vec<_> = ConfigSet::all().iter().map(|(_, s)| s.clone()).collect();
+    for t in degenerate_tiles(&mut rng) {
+        for df in [WS, OS] {
+            let backends: [&dyn EstimatorBackend; 2] =
+                [&AnalyticBackend, &CycleBackend];
+            for backend in backends {
+                let batched = backend.estimate_many(&t, &stacks, df);
+                for (i, stack) in stacks.iter().enumerate() {
+                    assert_eq!(
+                        batched[i],
+                        backend.estimate(&t, stack, df),
+                        "{df} {}x{}x{} ({} backend)",
+                        t.m,
+                        t.k,
+                        t.n,
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
 // ---- boundary: zero-K tiles are rejected at construction -------------
 
 #[test]

@@ -52,6 +52,10 @@ fn handmade_report() -> SweepReport {
             results: vec![ConfigResult {
                 stack: CodingStack::baseline(),
                 config_name: "baseline".into(),
+                // half the tiles sampled → scale 2 on the extrapolated
+                // streaming toggles (in-memory aggregation field; the v3
+                // document intentionally carries only the raw ledger)
+                scaled_streaming_toggles: 2.0 * counts.streaming_toggles() as f64,
                 counts,
                 energy,
             }],
@@ -143,6 +147,8 @@ fn handmade_transformer_report() -> SweepReport {
                 results: vec![ConfigResult {
                     stack: CodingStack::baseline(),
                     config_name: "baseline".into(),
+                    scaled_streaming_toggles: 192.0
+                        * qkv_counts.streaming_toggles() as f64,
                     counts: qkv_counts,
                     energy: qkv_energy,
                 }],
@@ -157,6 +163,8 @@ fn handmade_transformer_report() -> SweepReport {
                 results: vec![ConfigResult {
                     stack: SaCodingConfig::proposed().stack(),
                     config_name: "proposed".into(),
+                    scaled_streaming_toggles: 64.0
+                        * ffn_counts.streaming_toggles() as f64,
                     counts: ffn_counts,
                     energy: ffn_energy,
                 }],
@@ -349,6 +357,70 @@ fn sweep_report_json_round_trips_from_a_real_sweep() {
             );
         }
     }
+}
+
+/// Tile-granular scheduling must not leak scheduling nondeterminism
+/// into reports: the rendered JSON document — every f64 included — is
+/// byte-identical regardless of pool width, because per-tile costs are
+/// folded in plan order no matter which worker priced them.
+#[test]
+fn sweep_report_json_is_byte_identical_across_thread_counts() {
+    let net = tinycnn();
+    let render = |threads: usize, kind: BackendKind| {
+        SaEngine::builder()
+            .max_tiles_per_layer(8)
+            .configs(ConfigSet::ablation())
+            .backend(kind)
+            .threads(threads)
+            .build()
+            .sweep(&net)
+            .to_json()
+    };
+    for kind in [BackendKind::Analytic, BackendKind::Cycle] {
+        let one = render(1, kind);
+        for threads in [2, 4, 7] {
+            assert_eq!(
+                one,
+                render(threads, kind),
+                "JSON drift at {threads} threads ({} backend)",
+                kind.name()
+            );
+        }
+    }
+}
+
+/// The scale-extrapolated streaming toggles ride along every sweep
+/// result and feed `streaming_activity_reduction_pct`; on a fully
+/// sampled layer they coincide with the raw ledger sum.
+#[test]
+fn scaled_streaming_toggles_flow_through_sweeps() {
+    let net = tinycnn();
+    let sweep = SaEngine::builder()
+        .max_tiles_per_layer(10_000)
+        .configs(ConfigSet::paper())
+        .threads(2)
+        .build()
+        .sweep(&net);
+    for l in &sweep.layers {
+        for r in &l.results {
+            if l.sampled_tiles == l.total_tiles
+                && !matches!(
+                    net.layers[l.layer_index].kind,
+                    sa_lowpower::workload::LayerKind::Depthwise
+                )
+            {
+                assert_eq!(
+                    r.scaled_streaming_toggles,
+                    r.counts.streaming_toggles() as f64,
+                    "layer {} config {}",
+                    l.layer_name,
+                    r.config_name
+                );
+            }
+            assert!(r.scaled_streaming_toggles >= r.counts.streaming_toggles() as f64);
+        }
+    }
+    assert!(sweep.streaming_activity_reduction_pct("baseline", "proposed") > 0.0);
 }
 
 #[test]

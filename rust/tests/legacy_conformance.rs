@@ -484,6 +484,31 @@ fn stack_engines_reproduce_legacy_counts_and_outputs() {
 }
 
 #[test]
+fn batched_estimation_reproduces_legacy_counts() {
+    // The count-once/price-many path must also hold the migration
+    // contract: one shared TileActivity pass priced under every legacy
+    // design reproduces the frozen pre-stack reference word-for-word,
+    // on both backends.
+    check("estimate_many == frozen legacy reference", 8, |rng| {
+        let (m, k, n) = (1 + rng.below(6), 1 + rng.below(16), 1 + rng.below(6));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.4;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        let cfgs = legacy_configs();
+        let stacks: Vec<_> = cfgs.iter().map(|(_, c)| c.stack()).collect();
+        for df in BOTH {
+            let a = AnalyticBackend.estimate_many(&t, &stacks, df);
+            let c = CycleBackend.estimate_many(&t, &stacks, df);
+            for (i, (name, cfg)) in cfgs.iter().enumerate() {
+                let legacy = legacy_reference(&t, cfg, df);
+                assert_eq!(a[i], legacy.counts, "analytic batched: '{name}' {df}");
+                assert_eq!(c[i], legacy.counts, "cycle batched: '{name}' {df}");
+            }
+        }
+    });
+}
+
+#[test]
 fn stack_engines_reproduce_legacy_on_degenerate_tiles() {
     let mut rng = Rng64::new(0x1EA5);
     let tiles = vec![
