@@ -49,7 +49,8 @@ fn main() {
         .seed(seed)
         .max_tiles_per_layer(24)
         .configs(ConfigSet::paper())
-        .build();
+        .build()
+        .expect("valid engine spec");
 
     // ---- functional cross-check: rust bf16 GEMM vs the XLA layer-1 ----
     let img0 = synthetic_image(seed);
@@ -93,17 +94,21 @@ fn main() {
         let mut fm = image;
         let mut handles = Vec::new();
         for (i, layer) in net.layers.iter().enumerate().take(resp.activations.len()) {
-            handles.push(engine.submit(LayerJob::with_data(
-                layer.clone(),
-                i,
-                fm,
-                params.gemm_weights(i).to_vec(),
-            )));
+            handles.push(
+                engine
+                    .submit(LayerJob::with_data(
+                        layer.clone(),
+                        i,
+                        fm,
+                        params.gemm_weights(i).to_vec(),
+                    ))
+                    .expect("submit"),
+            );
             fm = resp.activations[i].clone();
         }
         for h in handles {
             let i = h.layer_index();
-            let rep = h.wait();
+            let rep = h.wait().expect("layer job failed");
             per_layer_base[i] += rep.energy_of("baseline").unwrap().total();
             per_layer_prop[i] += rep.energy_of("proposed").unwrap().total();
             zero_sums[i] += rep.input_zero_frac;

@@ -38,10 +38,10 @@ fn main() {
         let stack = sa_lowpower::engine::ConfigRegistry::lookup(name).unwrap().stack();
 
         // Golden backend: cycle-accurate, register-by-register.
-        let golden = CycleBackend.estimate(&tile, &stack, df);
+        let golden = CycleBackend.estimate(&tile, &stack, df).unwrap();
         // Fast backend: closed-form stream accounting. Must agree exactly
         // (the engine's backend contract).
-        let fast = AnalyticBackend.estimate(&tile, &stack, df);
+        let fast = AnalyticBackend.estimate(&tile, &stack, df).unwrap();
         assert_eq!(golden, fast, "backends must agree");
         // And neither coding/gating nor the dataflow may change the
         // numerics (the conformance contract).
@@ -70,7 +70,7 @@ fn main() {
     let composed = CodingStack::parse("w:zvcg+bic-mantissa,i:zvcg").unwrap();
     let comp = sa
         .energy
-        .energy(&AnalyticBackend.estimate(&tile, &composed, df));
+        .energy(&AnalyticBackend.estimate(&tile, &composed, df).unwrap());
     println!(
         "composed '{composed}': total {:8.3} nJ",
         comp.total() * 1e-6
@@ -78,12 +78,16 @@ fn main() {
 
     let base = sa
         .energy
-        .energy(&AnalyticBackend.estimate(&tile, &CodingStack::baseline(), df));
-    let prop = sa.energy.energy(&AnalyticBackend.estimate(
-        &tile,
-        &sa_lowpower::engine::ConfigRegistry::lookup("proposed").unwrap().stack(),
-        df,
-    ));
+        .energy(&AnalyticBackend.estimate(&tile, &CodingStack::baseline(), df).unwrap());
+    let prop = sa.energy.energy(
+        &AnalyticBackend
+            .estimate(
+                &tile,
+                &sa_lowpower::engine::ConfigRegistry::lookup("proposed").unwrap().stack(),
+                df,
+            )
+            .unwrap(),
+    );
     println!(
         "\nproposed vs baseline: {:.1} % total dynamic energy saved",
         100.0 * (base.total() - prop.total()) / base.total()

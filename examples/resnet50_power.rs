@@ -23,7 +23,8 @@ fn main() {
         .max_tiles_per_layer(tiles)
         .configs(ConfigSet::paper())
         .threads(threads)
-        .build();
+        .build()
+        .expect("valid engine spec");
     println!(
         "Fig. 4 — ResNet50 ({} layers, {:.1} GMACs), {} sampled tiles/layer, {} threads",
         net.layers.len(),
@@ -33,7 +34,7 @@ fn main() {
     );
 
     let t0 = std::time::Instant::now();
-    let sweep = engine.sweep(&net);
+    let sweep = engine.sweep(&net).expect("sweep failed");
     let dt = t0.elapsed();
 
     fig45_table(&sweep, engine.sa()).print();

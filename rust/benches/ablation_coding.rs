@@ -17,11 +17,12 @@ fn main() {
         .max_tiles_per_layer(24)
         .configs(ConfigSet::ablation())
         .threads(threads)
-        .build();
+        .build()
+        .expect("valid bench engine spec");
     for net_name in ["resnet50", "mobilenet", "transformer"] {
         let net = Network::by_name(net_name).unwrap();
         let (sweep, _) = time_once(&format!("ablation/{net_name}-sweep({n_cfg}cfg)"), || {
-            engine.sweep(&net)
+            engine.sweep(&net).unwrap()
         });
         println!("\n{net_name}:");
         ablation_table(&sweep, &engine.configs().names()).print();

@@ -15,9 +15,10 @@ fn main() {
         .max_tiles_per_layer(64)
         .configs(ConfigSet::paper())
         .threads(threads)
-        .build();
+        .build()
+        .expect("valid bench engine spec");
     let (sweep, _) = time_once("fig4/resnet50/full-sweep(64 tiles/layer)", || {
-        engine.sweep(&net)
+        engine.sweep(&net).unwrap()
     });
     fig45_table(&sweep, engine.sa()).print();
     println!(

@@ -16,12 +16,13 @@ fn main() {
         .max_tiles_per_layer(64)
         .configs(ConfigSet::paper())
         .threads(threads)
-        .build();
+        .build()
+        .expect("valid bench engine spec");
     let (resnet, _) = time_once("headline/resnet50-sweep", || {
-        engine.sweep(&Network::by_name("resnet50").unwrap())
+        engine.sweep(&Network::by_name("resnet50").unwrap()).unwrap()
     });
     let (mobilenet, _) = time_once("headline/mobilenet-sweep", || {
-        engine.sweep(&Network::by_name("mobilenet").unwrap())
+        engine.sweep(&Network::by_name("mobilenet").unwrap()).unwrap()
     });
     println!();
     headline_table(&resnet, &mobilenet, engine.sa()).print();

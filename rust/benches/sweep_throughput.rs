@@ -27,7 +27,7 @@ use std::time::Duration;
 use sa_lowpower::activity::ActivityCounts;
 use sa_lowpower::coding::CodingStack;
 use sa_lowpower::engine::{
-    AnalyticBackend, ConfigSet, CycleBackend, EstimatorBackend, SaEngine,
+    AnalyticBackend, ConfigSet, CycleBackend, EngineResult, EstimatorBackend, SaEngine,
 };
 use sa_lowpower::sa::{Dataflow, Tile};
 use sa_lowpower::util::bench::{time_once, BenchSet, Measurement};
@@ -48,7 +48,7 @@ impl<B: EstimatorBackend> EstimatorBackend for PerConfig<B> {
         tile: &Tile,
         stack: &CodingStack,
         dataflow: Dataflow,
-    ) -> ActivityCounts {
+    ) -> EngineResult<ActivityCounts> {
         self.0.estimate(tile, stack, dataflow)
     }
 }
@@ -73,8 +73,9 @@ fn run_sweep(
         .configs(configs)
         .backend_impl(backend)
         .threads(threads)
-        .build();
-    let (report, dt) = time_once(label, || engine.sweep(net));
+        .build()
+        .expect("valid bench engine spec");
+    let (report, dt) = time_once(label, || engine.sweep(net).unwrap());
     let layers = report.layers.len();
     let tiles: usize = report.layers.iter().map(|l| l.sampled_tiles).sum();
     let secs = dt.as_secs_f64();

@@ -20,10 +20,11 @@ fn main() {
             .configs(ConfigSet::paper())
             .dataflow(*df)
             .threads(threads)
-            .build();
+            .build()
+            .expect("valid bench engine spec");
         let (sweep, _) = time_once(
             &format!("transformer/{}-sweep", df.name()),
-            || engine.sweep(&net),
+            || engine.sweep(&net).unwrap(),
         );
         println!(
             "{:>17}: baseline {:.3} nJ | proposed {:.3} nJ | savings {:.2} % | \

@@ -96,6 +96,39 @@ cargo run --release -- ablation \
     --json-dir "$OUT_DIR/json" 2>&1 \
     | tee "$OUT_DIR/coding_ablation_composed.log"
 
+echo "== fault-injection smoke (typed failure containment) =="
+# An injected backend error must fail the doomed job with the typed
+# error's stable exit code (backend = 4) AFTER the CLI proves a clean
+# resubmit on the same pool priced normally — panic containment and
+# pool survival exercised end-to-end through the binary.
+set +e
+cargo run --release -- simulate \
+    --m 8 --k 48 --n 8 --sparsity 0.5 \
+    --fault-inject "error@*:0" 2>&1 \
+    | tee "$OUT_DIR/fault_inject_error.log"
+fault_rc=${PIPESTATUS[0]}
+set -e
+if [ "$fault_rc" -ne 4 ]; then
+    echo "FAIL: --fault-inject 'error@*:0' exited $fault_rc, expected 4 (backend)"
+    exit 1
+fi
+grep -q "injected fault contained" "$OUT_DIR/fault_inject_error.log"
+# A malformed fault spec is a caller error: invalid-spec = 2.
+set +e
+cargo run --release -- simulate \
+    --m 8 --k 48 --n 8 --fault-inject "boom@*:0" \
+    >"$OUT_DIR/fault_inject_badspec.log" 2>&1
+spec_rc=$?
+set -e
+if [ "$spec_rc" -ne 2 ]; then
+    echo "FAIL: malformed fault spec exited $spec_rc, expected 2 (invalid-spec)"
+    exit 1
+fi
+# And the same workload without faults still exits clean.
+cargo run --release -- simulate \
+    --m 8 --k 48 --n 8 --sparsity 0.5 2>&1 \
+    | tee "$OUT_DIR/fault_inject_clean.log"
+
 echo "== perf smoke (hot paths) =="
 cargo bench --bench perf_hotpath 2>&1 | tee "$OUT_DIR/perf_hotpath.log"
 

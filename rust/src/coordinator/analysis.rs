@@ -24,7 +24,7 @@
 
 use crate::activity::ActivityCounts;
 use crate::coding::CodingStack;
-use crate::engine::EstimatorBackend;
+use crate::engine::{EngineError, EngineResult, EstimatorBackend, TileFault};
 use crate::power::EnergyBreakdown;
 use crate::sa::{SaConfig, TileBuffers};
 use crate::workload::{
@@ -89,6 +89,11 @@ pub struct LayerReport {
     pub sampled_tiles: usize,
     pub total_tiles: usize,
     pub results: Vec<ConfigResult>,
+    /// Tile items that failed under the engine's
+    /// `TileFailurePolicy::Partial` (empty on any fully successful
+    /// analysis — the clean-report JSON is unchanged). When non-empty,
+    /// `results` aggregates cover only the tiles that succeeded.
+    pub faults: Vec<TileFault>,
 }
 
 impl LayerReport {
@@ -270,6 +275,11 @@ pub(crate) struct TileCost {
 /// Stage 2: extract one tile (scratch buffers recycled) and estimate it
 /// under every stack at once through the backend's batched entry point.
 /// Returns one [`TileCost`] per stack, index-aligned with `stacks`.
+///
+/// Backend failures — a returned error or a broken batched contract
+/// (wrong result count) — surface as [`EngineError::Backend`]: the
+/// extension surface out-of-tree backends implement must never fold as
+/// silently-zero config rows.
 pub(crate) fn price_tile_item(
     plan: &LayerPlan,
     item: &TileItem,
@@ -277,20 +287,22 @@ pub(crate) fn price_tile_item(
     opts: &AnalysisOptions,
     backend: &dyn EstimatorBackend,
     scratch: &mut TileBuffers,
-) -> Vec<TileCost> {
+) -> EngineResult<Vec<TileCost>> {
     let g = &plan.gemms[item.gemm];
     let grid = &plan.grids[item.gemm];
     let tile = extract_tile_into(g, grid, item.pick.0, item.pick.1, scratch);
-    let all = backend.estimate_many(&tile, stacks, opts.sa.dataflow);
-    // Hard assert (once per tile, negligible): estimate_many is the
-    // extension surface out-of-tree backends implement, and a short
-    // result vector would otherwise fold as silently-zero config rows.
-    assert_eq!(
-        all.len(),
-        stacks.len(),
-        "estimate_many ({}) broke the batched contract: one result per stack",
-        backend.name()
-    );
+    let all = backend.estimate_many(&tile, stacks, opts.sa.dataflow)?;
+    if all.len() != stacks.len() {
+        return Err(EngineError::Backend {
+            backend: backend.name().to_string(),
+            message: format!(
+                "estimate_many broke the batched contract: \
+                 {} results for {} stacks",
+                all.len(),
+                stacks.len()
+            ),
+        });
+    }
     let costs = all
         .into_iter()
         .map(|counts| {
@@ -301,23 +313,34 @@ pub(crate) fn price_tile_item(
         })
         .collect();
     *scratch = tile.into_buffers();
-    costs
+    Ok(costs)
 }
 
 /// Stage 3: fold per-item costs — **in item order** — into the layer
-/// report. `per_item` must yield exactly one `Vec<TileCost>` (one entry
-/// per config) per plan item, in plan order.
+/// report. `per_item` must yield one `Vec<TileCost>` (one entry per
+/// config) per *successfully priced* plan item, in plan order; `faults`
+/// records the items that failed (empty on the clean path). A
+/// mismatched per-config length is an engine invariant violation,
+/// reported as [`EngineError::Internal`] instead of killing the pool.
 pub(crate) fn finalize_layer(
     layer: &Layer,
     layer_idx: usize,
     plan: &LayerPlan,
     per_item: impl IntoIterator<Item = Vec<TileCost>>,
     configs: &[(String, CodingStack)],
-) -> LayerReport {
+    faults: Vec<TileFault>,
+) -> EngineResult<LayerReport> {
     let mut agg: Vec<(ActivityCounts, EnergyBreakdown, f64)> =
         configs.iter().map(|_| Default::default()).collect();
     for costs in per_item {
-        assert_eq!(costs.len(), configs.len(), "one TileCost per config");
+        if costs.len() != configs.len() {
+            return Err(EngineError::Internal(format!(
+                "layer '{}': fold expected {} TileCosts per item, got {}",
+                layer.name,
+                configs.len(),
+                costs.len()
+            )));
+        }
         for (ci, cost) in costs.into_iter().enumerate() {
             agg[ci].0.add(&cost.counts);
             agg[ci].1.add(&cost.energy);
@@ -337,7 +360,7 @@ pub(crate) fn finalize_layer(
         })
         .collect();
 
-    LayerReport {
+    Ok(LayerReport {
         layer_name: layer.name.clone(),
         layer_index: layer_idx,
         gemm: layer.gemm(),
@@ -345,7 +368,8 @@ pub(crate) fn finalize_layer(
         sampled_tiles: plan.sampled_tiles,
         total_tiles: plan.total_tiles,
         results,
-    }
+        faults,
+    })
 }
 
 /// The estimation core: stream every sampled tile of `gemms` through
@@ -361,7 +385,7 @@ pub fn analyze_gemms_with(
     configs: &[(String, CodingStack)],
     opts: &AnalysisOptions,
     backend: &dyn EstimatorBackend,
-) -> LayerReport {
+) -> EngineResult<LayerReport> {
     let plan = plan_layer_gemms(gemms, channel_scale, layer_idx, opts);
     let stacks: Vec<CodingStack> =
         configs.iter().map(|(_, s)| s.clone()).collect();
@@ -374,8 +398,8 @@ pub fn analyze_gemms_with(
         .map(|item| {
             price_tile_item(&plan, item, &stacks, opts, backend, &mut scratch)
         })
-        .collect();
-    finalize_layer(layer, layer_idx, &plan, per_item, configs)
+        .collect::<EngineResult<_>>()?;
+    finalize_layer(layer, layer_idx, &plan, per_item, configs, Vec::new())
 }
 
 #[cfg(test)]
@@ -400,6 +424,7 @@ mod tests {
             &small_opts(),
             &AnalyticBackend,
         )
+        .unwrap()
     }
 
     #[test]
@@ -416,7 +441,8 @@ mod tests {
             ConfigSet::paper().as_slice(),
             &small_opts(),
             &AnalyticBackend,
-        );
+        )
+        .unwrap();
         assert_eq!(r.input_zero_frac, 0.0);
         assert!(r.input_zero_frac.is_finite());
         assert_eq!((r.sampled_tiles, r.total_tiles), (0, 0));
@@ -497,7 +523,8 @@ mod tests {
             ConfigSet::paper().as_slice(),
             &opts,
             &AnalyticBackend,
-        );
+        )
+        .unwrap();
         assert_eq!(r.sampled_tiles, r.total_tiles, "fully sampled");
         for res in &r.results {
             assert_eq!(
@@ -524,7 +551,8 @@ mod tests {
             ConfigSet::paper().as_slice(),
             &opts,
             &AnalyticBackend,
-        );
+        )
+        .unwrap();
         assert!(r.sampled_tiles < r.total_tiles, "needs a sampled layer");
         let ratio = r.total_tiles as f64 / r.sampled_tiles as f64;
         for res in &r.results {
@@ -547,12 +575,15 @@ mod tests {
             .max_tiles_per_layer(4)
             .configs(ConfigSet::paper())
             .threads(3)
-            .build();
+            .build()
+            .unwrap();
         for (i, layer) in net.layers.iter().enumerate() {
             let direct = analyze(layer, i);
             let pooled = engine
                 .submit(crate::engine::LayerJob::synthetic(layer.clone(), i))
-                .wait();
+                .unwrap()
+                .wait()
+                .unwrap();
             assert_eq!(direct.results.len(), pooled.results.len());
             for (a, b) in direct.results.iter().zip(&pooled.results) {
                 assert_eq!(a.counts, b.counts, "layer {i}");

@@ -105,12 +105,13 @@ mod tests {
             .configs(ConfigSet::paper())
             .threads(threads)
             .build()
+            .unwrap()
     }
 
     #[test]
     fn sweep_covers_all_layers_in_order() {
         let net = tinycnn();
-        let r = engine(3).sweep(&net);
+        let r = engine(3).sweep(&net).unwrap();
         assert_eq!(r.layers.len(), net.layers.len());
         for (i, l) in r.layers.iter().enumerate() {
             assert_eq!(l.layer_index, i);
@@ -121,8 +122,8 @@ mod tests {
     #[test]
     fn thread_count_does_not_change_results() {
         let net = tinycnn();
-        let r1 = engine(1).sweep(&net);
-        let r4 = engine(4).sweep(&net);
+        let r1 = engine(1).sweep(&net).unwrap();
+        let r4 = engine(4).sweep(&net).unwrap();
         assert_eq!(r1.total_energy("proposed"), r4.total_energy("proposed"));
         assert_eq!(r1.total_energy("baseline"), r4.total_energy("baseline"));
     }
@@ -130,7 +131,7 @@ mod tests {
     #[test]
     fn aggregate_metrics_sane() {
         let net = tinycnn();
-        let r = engine(2).sweep(&net);
+        let r = engine(2).sweep(&net).unwrap();
         let overall = r.overall_savings_pct("baseline", "proposed");
         assert!(overall > 0.0, "expected savings, got {overall}");
         let act = r.streaming_activity_reduction_pct("baseline", "proposed");
@@ -166,6 +167,7 @@ mod tests {
             sampled_tiles: 1,
             total_tiles: scale as usize,
             results: vec![result("baseline", base_raw), result("proposed", prop_raw)],
+            faults: Vec::new(),
         }
     }
 

@@ -19,6 +19,18 @@
 //! any count it shares with the existing semantics must keep the same
 //! meaning, so energy models and reports stay comparable.
 //!
+//! ## Failure contract
+//!
+//! Estimation is fallible: both entry points return
+//! [`EngineResult`]. The in-tree backends are pure functions of their
+//! inputs and always succeed, but the trait is the extension surface
+//! for backends that can genuinely fail (an RTL cosimulation losing its
+//! child process, a remote estimator timing out). A returned
+//! [`EngineError`] fails only the job whose tile was being priced — the
+//! engine's worker pool keeps serving every other job. Panics are *not*
+//! part of the contract: the pool contains them per tile, but a
+//! well-behaved backend reports failure as data.
+//!
 //! ## Batched contract
 //!
 //! Sweeps price the *same* tile under every configured stack, so the
@@ -26,12 +38,14 @@
 //! [`EstimatorBackend::estimate_many`]. Its contract is pure
 //! amortization — element `i` of the result MUST be bit-identical
 //! (counts, not approximately) to `estimate(tile, &stacks[i],
-//! dataflow)`. The provided default is the sequential loop, so
-//! out-of-tree backends keep working unchanged; both built-ins override
-//! it with the count-once/price-many
-//! [`TileActivity`](crate::sa::TileActivity) pass, which computes the
-//! stack-invariant work (MAC schedule, zero masks, operand Hamming
-//! sums) once per tile instead of once per stack.
+//! dataflow)`. The provided default is the sequential loop (failing
+//! fast on the first erroring stack), so out-of-tree backends keep
+//! working unchanged; both built-ins override it with the
+//! count-once/price-many [`TileActivity`](crate::sa::TileActivity)
+//! pass, which computes the stack-invariant work (MAC schedule, zero
+//! masks, operand Hamming sums) once per tile instead of once per
+//! stack. A result vector whose length differs from `stacks.len()` is
+//! reported by the engine as [`EngineError::Backend`].
 //! `rust/tests/conformance.rs` and `rust/tests/legacy_conformance.rs`
 //! enforce the batched = sequential equality against the literal
 //! reference simulators.
@@ -48,6 +62,8 @@ use crate::sa::{
     TileActivity,
 };
 
+use super::error::{EngineError, EngineResult};
+
 /// A power-activity estimator for one tile under one coding stack and
 /// dataflow.
 pub trait EstimatorBackend: Send + Sync {
@@ -60,7 +76,7 @@ pub trait EstimatorBackend: Send + Sync {
         tile: &Tile,
         stack: &CodingStack,
         dataflow: Dataflow,
-    ) -> ActivityCounts;
+    ) -> EngineResult<ActivityCounts>;
 
     /// Exact activity counts for streaming `tile` under every stack of
     /// `stacks`, index-aligned. Element `i` must equal
@@ -72,13 +88,13 @@ pub trait EstimatorBackend: Send + Sync {
         tile: &Tile,
         stacks: &[CodingStack],
         dataflow: Dataflow,
-    ) -> Vec<ActivityCounts> {
+    ) -> EngineResult<Vec<ActivityCounts>> {
         stacks.iter().map(|s| self.estimate(tile, s, dataflow)).collect()
     }
 }
 
 /// The closed-form analytic model (`sa::analyze_tile`) — the fast
-/// default used by full-network sweeps.
+/// default used by full-network sweeps. Pure; never fails.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct AnalyticBackend;
 
@@ -92,8 +108,8 @@ impl EstimatorBackend for AnalyticBackend {
         tile: &Tile,
         stack: &CodingStack,
         dataflow: Dataflow,
-    ) -> ActivityCounts {
-        analyze_tile(tile, stack, dataflow)
+    ) -> EngineResult<ActivityCounts> {
+        Ok(analyze_tile(tile, stack, dataflow))
     }
 
     /// Count-once/price-many: one shared `TileActivity` pass, every
@@ -103,13 +119,14 @@ impl EstimatorBackend for AnalyticBackend {
         tile: &Tile,
         stacks: &[CodingStack],
         dataflow: Dataflow,
-    ) -> Vec<ActivityCounts> {
-        analyze_tile_many(tile, stacks, dataflow)
+    ) -> EngineResult<Vec<ActivityCounts>> {
+        Ok(analyze_tile_many(tile, stacks, dataflow))
     }
 }
 
 /// The cycle-accurate simulator (`sa::simulate_tile`) — the golden
 /// register-level engine, selectable at runtime for verification runs.
+/// Pure; never fails.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CycleBackend;
 
@@ -123,8 +140,8 @@ impl EstimatorBackend for CycleBackend {
         tile: &Tile,
         stack: &CodingStack,
         dataflow: Dataflow,
-    ) -> ActivityCounts {
-        simulate_tile(tile, stack, dataflow).counts
+    ) -> EngineResult<ActivityCounts> {
+        Ok(simulate_tile(tile, stack, dataflow).counts)
     }
 
     /// Count-once/price-many: the cycle backend's batched path shares
@@ -138,9 +155,9 @@ impl EstimatorBackend for CycleBackend {
         tile: &Tile,
         stacks: &[CodingStack],
         dataflow: Dataflow,
-    ) -> Vec<ActivityCounts> {
+    ) -> EngineResult<Vec<ActivityCounts>> {
         let mut ir = TileActivity::new(tile, dataflow);
-        stacks.iter().map(|s| ir.price(s)).collect()
+        Ok(stacks.iter().map(|s| ir.price(s)).collect())
     }
 }
 
@@ -213,8 +230,8 @@ mod tests {
         let t = small_tile();
         for (name, stack) in crate::engine::ConfigSet::ablation().iter() {
             for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
-                let a = AnalyticBackend.estimate(&t, stack, df);
-                let c = CycleBackend.estimate(&t, stack, df);
+                let a = AnalyticBackend.estimate(&t, stack, df).unwrap();
+                let c = CycleBackend.estimate(&t, stack, df).unwrap();
                 assert_eq!(a, c, "backend divergence under '{name}' ({df})");
             }
         }
@@ -235,8 +252,30 @@ mod tests {
             tile: &Tile,
             stack: &CodingStack,
             dataflow: Dataflow,
-        ) -> ActivityCounts {
+        ) -> EngineResult<ActivityCounts> {
             AnalyticBackend.estimate(tile, stack, dataflow)
+        }
+    }
+
+    /// A backend that fails on every call — exercises the typed error
+    /// path of the default batched loop.
+    struct AlwaysFails;
+
+    impl EstimatorBackend for AlwaysFails {
+        fn name(&self) -> &'static str {
+            "always-fails"
+        }
+
+        fn estimate(
+            &self,
+            _tile: &Tile,
+            _stack: &CodingStack,
+            _dataflow: Dataflow,
+        ) -> EngineResult<ActivityCounts> {
+            Err(EngineError::Backend {
+                backend: "always-fails".into(),
+                message: "synthetic failure".into(),
+            })
         }
     }
 
@@ -248,15 +287,18 @@ mod tests {
             .map(|(_, s)| s.clone())
             .collect();
         for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
-            let default_loop = SequentialOnly.estimate_many(&t, &stacks, df);
-            let analytic = AnalyticBackend.estimate_many(&t, &stacks, df);
-            let cycle = CycleBackend.estimate_many(&t, &stacks, df);
+            let default_loop = SequentialOnly.estimate_many(&t, &stacks, df).unwrap();
+            let analytic = AnalyticBackend.estimate_many(&t, &stacks, df).unwrap();
+            let cycle = CycleBackend.estimate_many(&t, &stacks, df).unwrap();
             assert_eq!(analytic, default_loop, "{df}");
             assert_eq!(cycle, default_loop, "{df}");
             // and element-wise against the single-stack entry points
             for (i, stack) in stacks.iter().enumerate() {
-                assert_eq!(analytic[i], AnalyticBackend.estimate(&t, stack, df));
-                assert_eq!(cycle[i], CycleBackend.estimate(&t, stack, df));
+                assert_eq!(
+                    analytic[i],
+                    AnalyticBackend.estimate(&t, stack, df).unwrap()
+                );
+                assert_eq!(cycle[i], CycleBackend.estimate(&t, stack, df).unwrap());
             }
         }
     }
@@ -266,8 +308,24 @@ mod tests {
         let t = small_tile();
         let none: [CodingStack; 0] = [];
         for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
-            assert!(AnalyticBackend.estimate_many(&t, &none, df).is_empty());
-            assert!(CycleBackend.estimate_many(&t, &none, df).is_empty());
+            assert!(AnalyticBackend.estimate_many(&t, &none, df).unwrap().is_empty());
+            assert!(CycleBackend.estimate_many(&t, &none, df).unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn default_batched_loop_propagates_backend_errors() {
+        let t = small_tile();
+        let stacks: Vec<CodingStack> = crate::engine::ConfigSet::paper()
+            .iter()
+            .map(|(_, s)| s.clone())
+            .collect();
+        let err = AlwaysFails
+            .estimate_many(&t, &stacks, Dataflow::WeightStationary)
+            .unwrap_err();
+        match err {
+            EngineError::Backend { backend, .. } => assert_eq!(backend, "always-fails"),
+            other => panic!("expected Backend error, got {other:?}"),
         }
     }
 

@@ -31,12 +31,41 @@
 //! (f64 accumulation order is part of the report contract — sweep JSON
 //! is byte-identical across `--threads`), and layers are sorted by
 //! index on merge.
+//!
+//! ## Failure model
+//!
+//! Every fallible surface returns a typed
+//! [`EngineError`](super::EngineError); the pool never panics outward.
+//! Failures are contained to the smallest unit that caused them:
+//!
+//! * **caller errors** (`InvalidSpec`, `InvalidWorkload`, `QueueFull`)
+//!   are rejected at [`SaEngineBuilder::build`]/[`SaEngine::submit`]
+//!   before any worker sees the job;
+//! * **tile failures** — a panicking or erroring tile item runs inside
+//!   `catch_unwind`; per [`TileFailurePolicy`] it either fails its
+//!   owning job with a typed error (`FailJob`, the default) or is
+//!   recorded as a `TileFault` on a partial report (`Partial`). Either
+//!   way every *other* job on the pool completes bit-identically;
+//! * **worker deaths** — a panic that escapes the per-item containment
+//!   kills only that worker thread; a drop guard accounts the item to
+//!   its job and respawns a replacement so the pool keeps its width;
+//! * **lifecycle** — submission runs through a bounded admission gate
+//!   ([`SaEngineBuilder::queue_capacity`] + [`AdmissionPolicy`]), jobs
+//!   carry optional deadlines, [`JobHandle::cancel`] stops the pool
+//!   from charging a job's remaining tiles, and [`SaEngine::drain`]
+//!   shuts down only after every admitted job has delivered.
+//!
+//! Mutex poisoning cannot wedge the pool: every lock is taken through a
+//! poison-recovering helper (the protected state is always left
+//! consistent because writers only replace whole values).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::coding::CodingStack;
 use crate::coordinator::{
@@ -45,10 +74,23 @@ use crate::coordinator::{
     TileCost,
 };
 use crate::sa::{Dataflow, SaConfig, TileBuffers};
-use crate::workload::{Layer, Network};
+use crate::workload::{Layer, LayerKind, Network};
 
 use super::backend::{BackendKind, EstimatorBackend};
+use super::error::{EngineError, EngineResult, TileFault};
+use super::fault::{FaultPlan, FaultStage};
 use super::registry::ConfigSet;
+
+/// Hard ceiling on the worker pool width; a request above this is a
+/// spec error, not a resource to exhaust.
+pub const MAX_THREADS: usize = 1024;
+
+/// Lock a mutex, recovering from poisoning. The pool's protected state
+/// stays consistent under unwinding (writers replace whole values), so
+/// a panic on another thread must not wedge every subsequent job.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Input data for a [`LayerJob`] when the caller supplies real tensors
 /// (e.g. activations captured from the e2e inference server) instead of
@@ -88,13 +130,130 @@ impl LayerJob {
     ) -> Self {
         LayerJob { layer, layer_index, data: Some(LayerData { feature_map, weights }) }
     }
+
+    /// Structural validation, run at the submit boundary so malformed
+    /// jobs never reach a worker.
+    pub fn validate(&self) -> EngineResult<()> {
+        validate_layer(&self.layer, self.data.as_ref())
+    }
 }
 
-/// Receiving side of one submitted job. The report arrives on an
-/// internal channel the moment the pool finishes the layer's last tile.
+/// Tensor lengths the lowering stage will index: feature map, weights.
+fn expected_data_lens(l: &Layer) -> (usize, usize) {
+    let g = l.gemm();
+    match l.kind {
+        LayerKind::Conv => (l.h * l.w * l.cin, g.k * g.n),
+        // one k-long filter per channel
+        LayerKind::Depthwise => (l.h * l.w * l.cin, l.cin * g.k),
+        // fm already is the row-major M×K A matrix
+        LayerKind::Dense | LayerKind::Gemm => (g.m * g.k, g.k * g.n),
+    }
+}
+
+/// Reject layers the lowering stage would panic on (division by a zero
+/// stride, out-of-bounds tensor indexing). Degenerate-but-well-defined
+/// shapes — e.g. a 0-channel depthwise, which lowers to zero GEMMs and
+/// a finite zeroed report — stay legal.
+fn validate_layer(layer: &Layer, data: Option<&LayerData>) -> EngineResult<()> {
+    let fail = |m: String| {
+        Err(EngineError::InvalidWorkload(format!("layer '{}': {m}", layer.name)))
+    };
+    if matches!(layer.kind, LayerKind::Conv | LayerKind::Depthwise)
+        && layer.stride == 0
+    {
+        return fail("stride must be >= 1".into());
+    }
+    if let Some(d) = data {
+        let (want_fm, want_w) = expected_data_lens(layer);
+        if d.feature_map.len() != want_fm {
+            return fail(format!(
+                "feature map has {} elements, expected {want_fm}",
+                d.feature_map.len()
+            ));
+        }
+        if d.weights.len() != want_w {
+            return fail(format!(
+                "weights have {} elements, expected {want_w}",
+                d.weights.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// What to do when a single tile item of a job fails (panic or typed
+/// error) while other items succeed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TileFailurePolicy {
+    /// The first failed tile fails the whole job with its typed error;
+    /// remaining queued items are skipped. The default.
+    #[default]
+    FailJob,
+    /// The job still delivers a [`LayerReport`] folded over the tiles
+    /// that succeeded, with every failure recorded in
+    /// `LayerReport::faults`. Aggregates cover only the priced items.
+    Partial,
+}
+
+/// What [`SaEngine::submit`] does when the bounded queue
+/// ([`SaEngineBuilder::queue_capacity`]) is at depth.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Block the submitting thread until a slot frees (backpressure).
+    /// The default.
+    #[default]
+    Block,
+    /// Fail fast with [`EngineError::QueueFull`].
+    Reject,
+}
+
+/// Per-job shared state: first error wins, delivery happens once.
+struct JobState {
+    deadline: Option<Instant>,
+    limit: Option<Duration>,
+    delivered: AtomicBool,
+    error: Mutex<Option<EngineError>>,
+}
+
+impl JobState {
+    fn new(timeout: Option<Duration>) -> Self {
+        JobState {
+            deadline: timeout.map(|t| Instant::now() + t),
+            limit: timeout,
+            delivered: AtomicBool::new(false),
+            error: Mutex::new(None),
+        }
+    }
+
+    /// Record a job-level failure; the first recorded error wins and is
+    /// returned (so racing failures agree on the outcome).
+    fn fail(&self, e: EngineError) -> EngineError {
+        lock_recover(&self.error).get_or_insert(e).clone()
+    }
+
+    /// The job's fatal error, if any — converting an expired deadline
+    /// into `Timeout` on first observation. Workers consult this before
+    /// and after pricing, so a dead job stops being charged.
+    fn dead(&self) -> Option<EngineError> {
+        if let Some(e) = lock_recover(&self.error).as_ref() {
+            return Some(e.clone());
+        }
+        match (self.deadline, self.limit) {
+            (Some(dl), Some(limit)) if Instant::now() >= dl => {
+                Some(self.fail(EngineError::Timeout { limit }))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Receiving side of one submitted job. The report (or its typed
+/// failure) is delivered on an internal channel the moment the pool
+/// finishes the layer's last tile.
 pub struct JobHandle {
     layer_index: usize,
-    rx: mpsc::Receiver<LayerReport>,
+    state: Arc<JobState>,
+    rx: mpsc::Receiver<EngineResult<LayerReport>>,
 }
 
 impl JobHandle {
@@ -102,22 +261,61 @@ impl JobHandle {
         self.layer_index
     }
 
-    /// Block until the report is ready.
-    pub fn wait(self) -> LayerReport {
-        self.rx.recv().expect("engine worker pool terminated")
-    }
-
-    /// Non-blocking poll; `None` while the job is still running. Panics
-    /// (like [`JobHandle::wait`]) if the pool died before replying, so
-    /// pollers can't spin forever on a dead pool.
-    pub fn try_wait(&self) -> Option<LayerReport> {
-        match self.rx.try_recv() {
-            Ok(report) => Some(report),
-            Err(mpsc::TryRecvError::Empty) => None,
-            Err(mpsc::TryRecvError::Disconnected) => {
-                panic!("engine worker pool terminated")
+    /// Block until the job resolves. A dead pool yields
+    /// [`EngineError::PoolShutdown`]; an expired per-job deadline yields
+    /// [`EngineError::Timeout`] even if a worker is wedged.
+    pub fn wait(self) -> EngineResult<LayerReport> {
+        let Some(deadline) = self.state.deadline else {
+            return match self.rx.recv() {
+                Ok(outcome) => outcome,
+                Err(_) => Err(EngineError::PoolShutdown),
+            };
+        };
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                // prefer a report that raced the deadline
+                if let Ok(outcome) = self.rx.try_recv() {
+                    return outcome;
+                }
+                let limit = self.state.limit.unwrap_or_default();
+                return Err(self.state.fail(EngineError::Timeout { limit }));
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(outcome) => return outcome,
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(EngineError::PoolShutdown)
+                }
             }
         }
+    }
+
+    /// Non-blocking poll; `Ok(None)` while the job is still running.
+    /// Resolves to the job's typed error if it has already failed (so
+    /// pollers can't spin forever on a dead pool or an expired
+    /// deadline).
+    pub fn try_wait(&self) -> EngineResult<Option<LayerReport>> {
+        match self.rx.try_recv() {
+            Ok(Ok(report)) => Ok(Some(report)),
+            Ok(Err(e)) => Err(e),
+            Err(mpsc::TryRecvError::Empty) => match self.state.dead() {
+                Some(e) => Err(e),
+                None => Ok(None),
+            },
+            Err(mpsc::TryRecvError::Disconnected) => Err(EngineError::PoolShutdown),
+        }
+    }
+
+    /// Cancel the job: queued work items are dropped unpriced and the
+    /// job resolves to [`EngineError::Cancelled`]. Returns `true` if
+    /// this call initiated the cancellation (best-effort: a job racing
+    /// to completion may still deliver its report).
+    pub fn cancel(&self) -> bool {
+        if self.state.delivered.load(Ordering::SeqCst) {
+            return false;
+        }
+        self.state.fail(EngineError::Cancelled) == EngineError::Cancelled
     }
 }
 
@@ -126,6 +324,8 @@ struct EngineShared {
     opts: AnalysisOptions,
     configs: ConfigSet,
     backend: Arc<dyn EstimatorBackend>,
+    fault: FaultPlan,
+    tile_failure: TileFailurePolicy,
 }
 
 impl EngineShared {
@@ -141,7 +341,7 @@ impl EngineShared {
         layer: &Layer,
         layer_index: usize,
         data: Option<LayerData>,
-    ) -> LayerReport {
+    ) -> EngineResult<LayerReport> {
         let (gemms, channel_scale) = match data {
             Some(d) => build_gemms_from_data(layer, d.feature_map, d.weights, &self.opts),
             None => build_layer_gemms(layer, layer_index, &self.opts),
@@ -166,13 +366,17 @@ struct LayerWork {
     /// The config set's stacks, in config order (what `estimate_many`
     /// prices per tile).
     stacks: Vec<CodingStack>,
-    reply: mpsc::Sender<LayerReport>,
+    reply: mpsc::Sender<EngineResult<LayerReport>>,
+    state: Arc<JobState>,
     /// One slot per tile item, written by whichever worker prices it;
     /// folded in slot (= plan) order at finalize, so the f64 sums are
     /// identical to the sequential path regardless of completion order.
     slots: Mutex<Vec<Option<Vec<TileCost>>>>,
-    /// Items not yet priced; the worker that takes this to zero folds
-    /// and delivers.
+    /// Failed items (panic payloads converted to typed errors), for the
+    /// [`TileFailurePolicy::Partial`] report.
+    faults: Mutex<Vec<TileFault>>,
+    /// Items not yet accounted; the worker that takes this to zero
+    /// delivers the outcome.
     remaining: AtomicUsize,
 }
 
@@ -192,7 +396,8 @@ struct LayerTask {
     layer: Layer,
     layer_index: usize,
     data: Option<LayerData>,
-    reply: mpsc::Sender<LayerReport>,
+    reply: mpsc::Sender<EngineResult<LayerReport>>,
+    state: Arc<JobState>,
 }
 
 /// Two-priority work queue: tile items go to the front, layer splits
@@ -213,35 +418,380 @@ impl TaskQueue {
 
     /// Queue a layer split or shutdown token behind everything pending.
     fn push_back(&self, t: Task) {
-        self.tasks.lock().unwrap().push_back(t);
+        lock_recover(&self.tasks).push_back(t);
         self.ready.notify_one();
     }
 
     /// Queue a tile item ahead of pending layer splits.
     fn push_front(&self, t: Task) {
-        self.tasks.lock().unwrap().push_front(t);
+        lock_recover(&self.tasks).push_front(t);
         self.ready.notify_one();
     }
 
     /// Block until a task is available.
     fn pop(&self) -> Task {
-        let mut q = self.tasks.lock().unwrap();
+        let mut q = lock_recover(&self.tasks);
         loop {
             if let Some(t) = q.pop_front() {
                 return t;
             }
-            q = self.ready.wait(q).unwrap();
+            q = self.ready.wait(q).unwrap_or_else(PoisonError::into_inner);
         }
     }
 }
 
+/// Bounded admission gate: `pending` counts jobs admitted but not yet
+/// delivered. Tile items never pass through here — only whole jobs —
+/// so admission can't deadlock the pool against its own fan-out.
+struct Admission {
+    capacity: Option<usize>,
+    policy: AdmissionPolicy,
+    pending: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl Admission {
+    fn new(capacity: Option<usize>, policy: AdmissionPolicy) -> Self {
+        Admission { capacity, policy, pending: Mutex::new(0), freed: Condvar::new() }
+    }
+
+    /// Take one slot, per the policy. `accepting` is rechecked after
+    /// every wakeup so blocked submitters observe shutdown/drain.
+    fn admit(&self, accepting: &AtomicBool) -> EngineResult<()> {
+        let mut p = lock_recover(&self.pending);
+        loop {
+            if !accepting.load(Ordering::SeqCst) {
+                return Err(EngineError::PoolShutdown);
+            }
+            match self.capacity {
+                Some(cap) if *p >= cap => match self.policy {
+                    AdmissionPolicy::Reject => {
+                        return Err(EngineError::QueueFull { capacity: cap })
+                    }
+                    AdmissionPolicy::Block => {
+                        p = self
+                            .freed
+                            .wait(p)
+                            .unwrap_or_else(PoisonError::into_inner);
+                    }
+                },
+                _ => {
+                    *p += 1;
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    /// Release one slot (called exactly once per delivered job).
+    fn release(&self) {
+        let mut p = lock_recover(&self.pending);
+        *p = p.saturating_sub(1);
+        drop(p);
+        self.freed.notify_all();
+    }
+
+    fn pending(&self) -> usize {
+        *lock_recover(&self.pending)
+    }
+
+    /// Wake blocked submitters (used when `accepting` flips off).
+    fn notify_all(&self) {
+        self.freed.notify_all();
+    }
+
+    /// Block until every admitted job has delivered.
+    fn wait_idle(&self) {
+        let mut p = lock_recover(&self.pending);
+        while *p > 0 {
+            p = self.freed.wait(p).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+/// Everything the pool's threads share.
+struct PoolInner {
+    shared: Arc<EngineShared>,
+    queue: TaskQueue,
+    admission: Admission,
+    /// Cleared by [`SaEngine::drain`]/`Drop`; gates new submissions.
+    accepting: AtomicBool,
+    /// Set by `Drop` before joining; suppresses worker respawn.
+    shutdown: AtomicBool,
+    /// Workers respawned after an uncontained panic (observable by
+    /// tests via [`SaEngine::respawned_workers`]).
+    respawned: AtomicUsize,
+    /// All spawned worker handles, including respawned replacements.
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    /// Configured pool width.
+    threads: usize,
+}
+
+fn spawn_worker(pool: &Arc<PoolInner>) -> JoinHandle<()> {
+    let pool = Arc::clone(pool);
+    std::thread::spawn(move || worker_loop(&pool))
+}
+
+fn worker_loop(pool: &Arc<PoolInner>) {
+    let _respawn = RespawnGuard { pool: Arc::clone(pool) };
+    // One scratch allocation set per worker, recycled across every tile
+    // it prices.
+    let mut scratch = TileBuffers::default();
+    loop {
+        match pool.queue.pop() {
+            Task::Shutdown => break,
+            Task::Layer(task) => split_layer(pool, task),
+            Task::Tile(work, idx) => run_tile(pool, &work, idx, &mut scratch),
+        }
+    }
+}
+
+/// Replaces a worker whose thread died to a panic that escaped the
+/// per-item containment, keeping the pool at its configured width. A
+/// clean (shutdown-token) exit is not panicking and does nothing.
+struct RespawnGuard {
+    pool: Arc<PoolInner>,
+}
+
+impl Drop for RespawnGuard {
+    fn drop(&mut self) {
+        if !std::thread::panicking() || self.pool.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let h = spawn_worker(&self.pool);
+        lock_recover(&self.pool.workers).push(h);
+        self.pool.respawned.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    match payload.downcast_ref::<&'static str>() {
+        Some(s) => (*s).to_string(),
+        None => match payload.downcast_ref::<String>() {
+            Some(s) => s.clone(),
+            None => "opaque panic payload".to_string(),
+        },
+    }
+}
+
+/// Resolve a job exactly once: send the outcome (a dropped handle just
+/// discards it) and release the admission slot.
+fn deliver(
+    pool: &PoolInner,
+    state: &JobState,
+    reply: &mpsc::Sender<EngineResult<LayerReport>>,
+    outcome: EngineResult<LayerReport>,
+) {
+    if state.delivered.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let _ = reply.send(outcome);
+    pool.admission.release();
+}
+
+/// Stage 3 for the tile-granular path: fold and resolve a split layer.
+/// Called by whoever accounts the last item (normal finish, skip, or
+/// unwind).
+fn deliver_work(pool: &PoolInner, work: &LayerWork) {
+    if work.state.delivered.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let outcome = match work.state.dead() {
+        Some(e) => Err(e),
+        None => {
+            let slots = std::mem::take(&mut *lock_recover(&work.slots));
+            let mut faults = std::mem::take(&mut *lock_recover(&work.faults));
+            faults.sort_by_key(|f| f.item);
+            // Under FailJob a recorded fault implies a job error, so a
+            // non-empty list here means Partial: fold what succeeded.
+            finalize_layer(
+                &work.layer,
+                work.layer_index,
+                &work.plan,
+                slots.into_iter().flatten(),
+                pool.shared.configs.as_slice(),
+                faults,
+            )
+        }
+    };
+    let _ = work.reply.send(outcome);
+    pool.admission.release();
+}
+
+/// Record one failed tile item; under [`TileFailurePolicy::FailJob`]
+/// this also fails the owning job.
+fn record_fault(shared: &EngineShared, work: &LayerWork, idx: usize, e: EngineError) {
+    lock_recover(&work.faults).push(TileFault { item: idx, error: e.clone() });
+    if shared.tile_failure == TileFailurePolicy::FailJob {
+        work.state.fail(e);
+    }
+}
+
+/// Accounts one tile item to its job exactly once — including when a
+/// panic is unwinding through `run_tile` (the worker-death path): the
+/// item is recorded as a fault and the last accounted item still
+/// delivers, so no job ever hangs on a dead worker.
+struct ItemGuard<'a> {
+    pool: &'a PoolInner,
+    work: &'a LayerWork,
+    idx: usize,
+}
+
+impl Drop for ItemGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            record_fault(
+                &self.pool.shared,
+                self.work,
+                self.idx,
+                EngineError::WorkerPanic {
+                    context: format!(
+                        "{}[{}] tile {}",
+                        self.work.layer.name, self.work.layer_index, self.idx
+                    ),
+                    message: "panic escaped the tile containment; worker respawned"
+                        .to_string(),
+                },
+            );
+        }
+        if self.work.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            deliver_work(self.pool, self.work);
+        }
+    }
+}
+
+/// Stage 1 on a worker: lower + sample the layer and fan one pool task
+/// out per sampled tile. Layers with no tiles (degenerate lowerings)
+/// finalize immediately. Planning failures (typed or panic) resolve the
+/// job with an error — no partial exists before tiles do.
+fn split_layer(pool: &Arc<PoolInner>, task: LayerTask) {
+    let LayerTask { layer, layer_index, data, reply, state } = task;
+    if let Some(e) = state.dead() {
+        deliver(pool, &state, &reply, Err(e));
+        return;
+    }
+    let shared = &pool.shared;
+    let planned = catch_unwind(AssertUnwindSafe(|| -> EngineResult<LayerPlan> {
+        shared.fault.fire(&layer.name, FaultStage::Plan, 0)?;
+        let (gemms, channel_scale) = match data {
+            Some(d) => {
+                build_gemms_from_data(&layer, d.feature_map, d.weights, &shared.opts)
+            }
+            None => build_layer_gemms(&layer, layer_index, &shared.opts),
+        };
+        Ok(plan_layer_gemms(gemms, channel_scale, layer_index, &shared.opts))
+    }));
+    let plan = match planned {
+        Ok(Ok(plan)) => plan,
+        Ok(Err(e)) => {
+            deliver(pool, &state, &reply, Err(state.fail(e)));
+            return;
+        }
+        Err(payload) => {
+            let e = EngineError::WorkerPanic {
+                context: format!("{}[{layer_index}] plan stage", layer.name),
+                message: panic_message(payload),
+            };
+            deliver(pool, &state, &reply, Err(state.fail(e)));
+            return;
+        }
+    };
+    let n_items = plan.items.len();
+    if n_items == 0 {
+        let outcome = finalize_layer(
+            &layer,
+            layer_index,
+            &plan,
+            std::iter::empty(),
+            shared.configs.as_slice(),
+            Vec::new(),
+        );
+        deliver(pool, &state, &reply, outcome);
+        return;
+    }
+    let work = Arc::new(LayerWork {
+        layer,
+        layer_index,
+        plan,
+        stacks: shared.stacks(),
+        reply,
+        state,
+        slots: Mutex::new((0..n_items).map(|_| None).collect()),
+        faults: Mutex::new(Vec::new()),
+        remaining: AtomicUsize::new(n_items),
+    });
+    for idx in 0..n_items {
+        pool.queue.push_front(Task::Tile(Arc::clone(&work), idx));
+    }
+}
+
+/// Stage 2 (and, for the last finisher, stage 3) on a worker. The
+/// pricing itself runs under `catch_unwind`; the guard accounts the
+/// item on every exit path, unwinding included.
+fn run_tile(pool: &PoolInner, work: &LayerWork, idx: usize, scratch: &mut TileBuffers) {
+    let _guard = ItemGuard { pool, work, idx };
+    // Dead job (cancelled / timed out / already failed): skip the
+    // pricing — the guard still accounts the item so the last one
+    // delivers the typed error.
+    if work.state.dead().is_some() {
+        return;
+    }
+    let shared = &pool.shared;
+    // Worker-stage faults fire OUTSIDE the containment below: a Panic
+    // site here unwinds through the guards, killing this worker thread
+    // (RespawnGuard replaces it) while the item is still accounted.
+    if let Err(e) = shared.fault.fire(&work.layer.name, FaultStage::Worker, idx) {
+        record_fault(shared, work, idx, e);
+        return;
+    }
+    let priced = catch_unwind(AssertUnwindSafe(|| -> EngineResult<Vec<TileCost>> {
+        shared.fault.fire(&work.layer.name, FaultStage::Price, idx)?;
+        price_tile_item(
+            &work.plan,
+            &work.plan.items[idx],
+            &work.stacks,
+            &shared.opts,
+            shared.backend.as_ref(),
+            scratch,
+        )
+    }));
+    match priced {
+        Ok(Ok(costs)) => {
+            lock_recover(&work.slots)[idx] = Some(costs);
+            // Deadline check after pricing too, so a Delay fault (or a
+            // genuinely slow tile) surfaces as Timeout and stops the
+            // pool from charging the job's remaining items.
+            let _ = work.state.dead();
+        }
+        Ok(Err(e)) => record_fault(shared, work, idx, e),
+        Err(payload) => record_fault(
+            shared,
+            work,
+            idx,
+            EngineError::WorkerPanic {
+                context: format!(
+                    "{}[{}] tile {}",
+                    work.layer.name, work.layer_index, idx
+                ),
+                message: panic_message(payload),
+            },
+        ),
+    }
+}
+
 /// Builder for [`SaEngine`]. Defaults: 16×16 paper SA, paper config set,
-/// analytic backend, one worker per available core.
+/// analytic backend, one worker per available core, unbounded admission,
+/// no timeout, [`TileFailurePolicy::FailJob`], no fault injection.
 pub struct SaEngineBuilder {
     opts: AnalysisOptions,
     configs: ConfigSet,
     backend: Arc<dyn EstimatorBackend>,
     threads: usize,
+    queue_capacity: Option<usize>,
+    admission: AdmissionPolicy,
+    timeout: Option<Duration>,
+    tile_failure: TileFailurePolicy,
+    fault_plan: FaultPlan,
 }
 
 impl Default for SaEngineBuilder {
@@ -251,12 +801,20 @@ impl Default for SaEngineBuilder {
             configs: ConfigSet::paper(),
             backend: BackendKind::Analytic.instantiate(),
             threads: default_threads(),
+            queue_capacity: None,
+            admission: AdmissionPolicy::default(),
+            timeout: None,
+            tile_failure: TileFailurePolicy::default(),
+            fault_plan: FaultPlan::none(),
         }
     }
 }
 
 fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(MAX_THREADS)
 }
 
 impl SaEngineBuilder {
@@ -314,124 +872,97 @@ impl SaEngineBuilder {
         self
     }
 
-    /// Worker pool width (clamped to ≥ 1).
+    /// Worker pool width. Validated by [`SaEngineBuilder::build`]:
+    /// `0` and values above [`MAX_THREADS`] are spec errors.
     pub fn threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
+        self.threads = threads;
         self
     }
 
-    /// Spawn the worker pool and finish the engine.
-    pub fn build(self) -> SaEngine {
+    /// Bound the submit queue to `capacity` undelivered jobs; at depth,
+    /// [`SaEngine::submit`] applies the [`AdmissionPolicy`]. Default:
+    /// unbounded. `0` is a spec error.
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.queue_capacity = Some(capacity);
+        self
+    }
+
+    /// What `submit` does at queue depth (default [`AdmissionPolicy::Block`]).
+    pub fn admission(mut self, policy: AdmissionPolicy) -> Self {
+        self.admission = policy;
+        self
+    }
+
+    /// Default per-job deadline, measured from submission. Overridable
+    /// per job via [`SaEngine::submit_with_timeout`].
+    pub fn default_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = Some(timeout);
+        self
+    }
+
+    /// How a failed tile item affects its job (default
+    /// [`TileFailurePolicy::FailJob`]).
+    pub fn tile_failure(mut self, policy: TileFailurePolicy) -> Self {
+        self.tile_failure = policy;
+        self
+    }
+
+    /// Install a deterministic [`FaultPlan`] (failure drills / tests).
+    /// Production builds simply never set one.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = plan;
+        self
+    }
+
+    /// Validate the configuration, spawn the worker pool and finish the
+    /// engine.
+    pub fn build(self) -> EngineResult<SaEngine> {
+        if self.threads == 0 {
+            return Err(EngineError::InvalidSpec(
+                "threads must be >= 1 (0 workers cannot make progress)".into(),
+            ));
+        }
+        if self.threads > MAX_THREADS {
+            return Err(EngineError::InvalidSpec(format!(
+                "threads {} exceeds the {MAX_THREADS}-worker ceiling",
+                self.threads
+            )));
+        }
+        if self.queue_capacity == Some(0) {
+            return Err(EngineError::InvalidSpec(
+                "queue capacity must be >= 1 (0 admits no job)".into(),
+            ));
+        }
         let shared = Arc::new(EngineShared {
             opts: self.opts,
             configs: self.configs,
             backend: self.backend,
+            fault: self.fault_plan,
+            tile_failure: self.tile_failure,
         });
-        let queue = Arc::new(TaskQueue::new());
-        let workers: Vec<JoinHandle<()>> = (0..self.threads.max(1))
-            .map(|_| {
-                let queue = Arc::clone(&queue);
-                let shared = Arc::clone(&shared);
-                std::thread::spawn(move || {
-                    // One scratch allocation set per worker, recycled
-                    // across every tile it prices.
-                    let mut scratch = TileBuffers::default();
-                    loop {
-                        match queue.pop() {
-                            Task::Shutdown => break,
-                            Task::Layer(job) => split_layer(&shared, job, &queue),
-                            Task::Tile(work, idx) => {
-                                run_tile(&shared, &work, idx, &mut scratch)
-                            }
-                        }
-                    }
-                })
-            })
-            .collect();
-        SaEngine { shared, queue: Some(queue), workers }
-    }
-}
-
-/// Stage 1 on a worker: lower + sample the layer and fan one pool task
-/// out per sampled tile. Layers with no tiles (degenerate lowerings)
-/// finalize immediately.
-fn split_layer(shared: &EngineShared, job: LayerTask, queue: &TaskQueue) {
-    let (gemms, channel_scale) = match job.data {
-        Some(d) => build_gemms_from_data(
-            &job.layer,
-            d.feature_map,
-            d.weights,
-            &shared.opts,
-        ),
-        None => build_layer_gemms(&job.layer, job.layer_index, &shared.opts),
-    };
-    let plan = plan_layer_gemms(gemms, channel_scale, job.layer_index, &shared.opts);
-    let n_items = plan.items.len();
-    if n_items == 0 {
-        let report = finalize_layer(
-            &job.layer,
-            job.layer_index,
-            &plan,
-            std::iter::empty(),
-            shared.configs.as_slice(),
-        );
-        // A dropped JobHandle just discards the report.
-        let _ = job.reply.send(report);
-        return;
-    }
-    let work = Arc::new(LayerWork {
-        layer: job.layer,
-        layer_index: job.layer_index,
-        plan,
-        stacks: shared.stacks(),
-        reply: job.reply,
-        slots: Mutex::new((0..n_items).map(|_| None).collect()),
-        remaining: AtomicUsize::new(n_items),
-    });
-    for idx in 0..n_items {
-        queue.push_front(Task::Tile(Arc::clone(&work), idx));
-    }
-}
-
-/// Stage 2 (and, for the last finisher, stage 3) on a worker.
-fn run_tile(
-    shared: &EngineShared,
-    work: &LayerWork,
-    idx: usize,
-    scratch: &mut TileBuffers,
-) {
-    let costs = price_tile_item(
-        &work.plan,
-        &work.plan.items[idx],
-        &work.stacks,
-        &shared.opts,
-        shared.backend.as_ref(),
-        scratch,
-    );
-    work.slots.lock().unwrap()[idx] = Some(costs);
-    if work.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-        // Last tile of the layer: fold every slot in plan order.
-        let slots = std::mem::take(&mut *work.slots.lock().unwrap());
-        let per_item = slots
-            .into_iter()
-            .map(|s| s.expect("every tile item was priced"));
-        let report = finalize_layer(
-            &work.layer,
-            work.layer_index,
-            &work.plan,
-            per_item,
-            shared.configs.as_slice(),
-        );
-        let _ = work.reply.send(report);
+        let pool = Arc::new(PoolInner {
+            shared,
+            queue: TaskQueue::new(),
+            admission: Admission::new(self.queue_capacity, self.admission),
+            accepting: AtomicBool::new(true),
+            shutdown: AtomicBool::new(false),
+            respawned: AtomicUsize::new(0),
+            workers: Mutex::new(Vec::new()),
+            threads: self.threads,
+        });
+        let handles: Vec<JoinHandle<()>> =
+            (0..self.threads).map(|_| spawn_worker(&pool)).collect();
+        lock_recover(&pool.workers).extend(handles);
+        Ok(SaEngine { pool, timeout: self.timeout })
     }
 }
 
 /// The unified power-analysis engine. See the module docs for the two
-/// call shapes; construct via [`SaEngine::builder`].
+/// call shapes and the failure model; construct via
+/// [`SaEngine::builder`].
 pub struct SaEngine {
-    shared: Arc<EngineShared>,
-    queue: Option<Arc<TaskQueue>>,
-    workers: Vec<JoinHandle<()>>,
+    pool: Arc<PoolInner>,
+    timeout: Option<Duration>,
 }
 
 impl SaEngine {
@@ -441,77 +972,133 @@ impl SaEngine {
 
     /// The engine's analysis options (read-only).
     pub fn options(&self) -> &AnalysisOptions {
-        &self.shared.opts
+        &self.pool.shared.opts
     }
 
     /// The engine's SA instance configuration.
     pub fn sa(&self) -> &SaConfig {
-        &self.shared.opts.sa
+        &self.pool.shared.opts.sa
     }
 
     /// The named configurations every report covers.
     pub fn configs(&self) -> &ConfigSet {
-        &self.shared.configs
+        &self.pool.shared.configs
     }
 
     /// Name of the active estimator backend.
     pub fn backend_name(&self) -> &'static str {
-        self.shared.backend.name()
+        self.pool.shared.backend.name()
     }
 
     /// The dataflow the engine models.
     pub fn dataflow(&self) -> Dataflow {
-        self.shared.opts.sa.dataflow
+        self.pool.shared.opts.sa.dataflow
     }
 
-    /// Worker pool width.
+    /// Configured worker pool width (kept constant across respawns).
     pub fn threads(&self) -> usize {
-        self.workers.len()
+        self.pool.threads
     }
 
-    /// Enqueue one layer job on the worker pool; the report is delivered
-    /// through the returned handle when done. The layer is split into
-    /// tile-granular work items internally (see the module docs), so a
-    /// single large layer still uses the whole pool.
-    pub fn submit(&self, job: LayerJob) -> JobHandle {
+    /// Jobs admitted but not yet delivered.
+    pub fn pending_jobs(&self) -> usize {
+        self.pool.admission.pending()
+    }
+
+    /// Workers respawned after an uncontained panic killed their
+    /// thread. Stays `0` unless something (e.g. a worker-stage fault
+    /// injection) defeats the per-item containment.
+    pub fn respawned_workers(&self) -> usize {
+        self.pool.respawned.load(Ordering::SeqCst)
+    }
+
+    /// Enqueue one layer job on the worker pool; the outcome is
+    /// delivered through the returned handle when done. The layer is
+    /// split into tile-granular work items internally (see the module
+    /// docs), so a single large layer still uses the whole pool.
+    ///
+    /// Validates the job, then passes the admission gate (blocking or
+    /// rejecting at the configured queue depth). The builder's default
+    /// timeout, if any, applies.
+    pub fn submit(&self, job: LayerJob) -> EngineResult<JobHandle> {
+        self.submit_with_timeout(job, self.timeout)
+    }
+
+    /// [`SaEngine::submit`] with an explicit per-job deadline override
+    /// (`None` = no deadline, regardless of the builder default).
+    pub fn submit_with_timeout(
+        &self,
+        job: LayerJob,
+        timeout: Option<Duration>,
+    ) -> EngineResult<JobHandle> {
+        job.validate()?;
+        let pool = &self.pool;
+        if !pool.accepting.load(Ordering::SeqCst) {
+            return Err(EngineError::PoolShutdown);
+        }
+        pool.admission.admit(&pool.accepting)?;
+        let state = Arc::new(JobState::new(timeout));
         let (reply, rx) = mpsc::channel();
         let layer_index = job.layer_index;
-        self.queue
-            .as_ref()
-            .expect("engine pool already shut down")
-            .push_back(Task::Layer(LayerTask {
-                layer: job.layer,
-                layer_index,
-                data: job.data,
-                reply,
-            }));
-        JobHandle { layer_index, rx }
+        pool.queue.push_back(Task::Layer(LayerTask {
+            layer: job.layer,
+            layer_index,
+            data: job.data,
+            reply,
+            state: Arc::clone(&state),
+        }));
+        Ok(JobHandle { layer_index, state, rx })
     }
 
     /// Analyze every layer of `net` (synthetic data) across the pool and
-    /// return the merged, layer-ordered report.
-    pub fn sweep(&self, net: &Network) -> SweepReport {
-        let handles: Vec<JobHandle> = net
-            .layers
-            .iter()
-            .enumerate()
-            .map(|(i, l)| self.submit(LayerJob::synthetic(l.clone(), i)))
-            .collect();
-        let mut layers: Vec<LayerReport> =
-            handles.into_iter().map(JobHandle::wait).collect();
+    /// return the merged, layer-ordered report. On the first failure the
+    /// remaining jobs are cancelled and the error is returned.
+    pub fn sweep(&self, net: &Network) -> EngineResult<SweepReport> {
+        let mut handles = Vec::with_capacity(net.layers.len());
+        for (i, l) in net.layers.iter().enumerate() {
+            match self.submit(LayerJob::synthetic(l.clone(), i)) {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    for h in &handles {
+                        h.cancel();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let mut layers = Vec::with_capacity(handles.len());
+        let mut first_err: Option<EngineError> = None;
+        for h in handles {
+            if first_err.is_some() {
+                h.cancel();
+                continue;
+            }
+            match h.wait() {
+                Ok(report) => layers.push(report),
+                Err(e) => first_err = Some(e),
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
         layers.sort_by_key(|l| l.layer_index);
-        SweepReport {
+        Ok(SweepReport {
             network: net.name.clone(),
             backend: self.backend_name().to_string(),
             dataflow: self.dataflow().name().to_string(),
             layers,
-        }
+        })
     }
 
     /// Analyze one layer synchronously on the caller's thread
     /// (synthetic data).
-    pub fn analyze_layer(&self, layer: &Layer, layer_index: usize) -> LayerReport {
-        self.shared.analyze(layer, layer_index, None)
+    pub fn analyze_layer(
+        &self,
+        layer: &Layer,
+        layer_index: usize,
+    ) -> EngineResult<LayerReport> {
+        validate_layer(layer, None)?;
+        self.pool.shared.analyze(layer, layer_index, None)
     }
 
     /// Analyze one layer synchronously with caller-provided tensors.
@@ -521,23 +1108,45 @@ impl SaEngine {
         layer_index: usize,
         feature_map: Vec<f32>,
         weights: Vec<f32>,
-    ) -> LayerReport {
-        self.shared
-            .analyze(layer, layer_index, Some(LayerData { feature_map, weights }))
+    ) -> EngineResult<LayerReport> {
+        let data = LayerData { feature_map, weights };
+        validate_layer(layer, Some(&data))?;
+        self.pool.shared.analyze(layer, layer_index, Some(data))
+    }
+
+    /// Graceful shutdown: stop accepting new jobs (blocked submitters
+    /// resolve to [`EngineError::PoolShutdown`]), wait until every
+    /// *admitted* job has delivered its outcome, then tear the pool
+    /// down.
+    pub fn drain(self) {
+        self.pool.accepting.store(false, Ordering::SeqCst);
+        self.pool.admission.notify_all();
+        self.pool.admission.wait_idle();
+        // Drop joins the workers.
     }
 }
 
 impl Drop for SaEngine {
     fn drop(&mut self) {
-        // One shutdown token per worker, queued behind all outstanding
-        // work; each worker consumes exactly one and exits.
-        if let Some(queue) = self.queue.take() {
-            for _ in &self.workers {
-                queue.push_back(Task::Shutdown);
+        self.pool.accepting.store(false, Ordering::SeqCst);
+        self.pool.shutdown.store(true, Ordering::SeqCst);
+        self.pool.admission.notify_all();
+        // One shutdown token per known worker handle, queued behind all
+        // outstanding work. Dead (panicked) handles join immediately and
+        // leave their token for a respawned replacement; the loop
+        // re-collects handles a racing respawn may have added.
+        loop {
+            let handles: Vec<JoinHandle<()>> =
+                std::mem::take(&mut *lock_recover(&self.pool.workers));
+            if handles.is_empty() {
+                break;
             }
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+            for _ in &handles {
+                self.pool.queue.push_back(Task::Shutdown);
+            }
+            for h in handles {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -554,29 +1163,75 @@ mod tests {
             .threads(threads)
             .backend(kind)
             .build()
+            .unwrap()
     }
 
     #[test]
     fn builder_defaults_match_paper_setup() {
-        let e = SaEngine::builder().build();
+        let e = SaEngine::builder().build().unwrap();
         assert_eq!((e.sa().rows, e.sa().cols), (16, 16));
         assert_eq!(e.configs().names(), ["baseline", "proposed"]);
         assert_eq!(e.backend_name(), "analytic");
         assert_eq!(e.dataflow(), Dataflow::WeightStationary);
         assert_eq!(e.options().seed, 0xCAFE);
         assert!(e.threads() >= 1);
+        assert_eq!(e.pending_jobs(), 0);
+        assert_eq!(e.respawned_workers(), 0);
+    }
+
+    #[test]
+    fn builder_validates_degenerate_configs() {
+        for (builder, what) in [
+            (SaEngine::builder().threads(0), "0 threads"),
+            (SaEngine::builder().threads(MAX_THREADS + 1), "absurd threads"),
+            (SaEngine::builder().queue_capacity(0), "0-capacity queue"),
+        ] {
+            match builder.build() {
+                Err(EngineError::InvalidSpec(_)) => {}
+                other => panic!(
+                    "{what} must be InvalidSpec, got {:?}",
+                    other.as_ref().err()
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn submit_rejects_malformed_jobs_at_the_boundary() {
+        let e = small_engine(1, BackendKind::Analytic);
+        let l = &tinycnn().layers[1];
+        // tensor length mismatches on the with_data path
+        let bad_fm = LayerJob::with_data(l.clone(), 1, vec![0.0; 3], vec![0.0; 3]);
+        match e.submit(bad_fm) {
+            Err(EngineError::InvalidWorkload(m)) => {
+                assert!(m.contains("feature map"), "{m}")
+            }
+            other => panic!("expected InvalidWorkload, got {:?}", other.err()),
+        }
+        // a zero stride would divide by zero during lowering
+        let mut zs = l.clone();
+        zs.stride = 0;
+        match e.submit(LayerJob::synthetic(zs, 0)) {
+            Err(EngineError::InvalidWorkload(m)) => assert!(m.contains("stride")),
+            other => panic!("expected InvalidWorkload, got {:?}", other.err()),
+        }
+        // the pool is unharmed by rejected submissions
+        assert_eq!(e.pending_jobs(), 0);
+        assert!(e.submit(LayerJob::synthetic(l.clone(), 1)).unwrap().wait().is_ok());
     }
 
     #[test]
     fn dataflow_option_reaches_reports_and_counts() {
         let net = tinycnn();
-        let ws = small_engine(2, BackendKind::Analytic).sweep(&net);
+        let ws = small_engine(2, BackendKind::Analytic).sweep(&net).unwrap();
         let os = SaEngine::builder()
             .max_tiles_per_layer(2)
             .threads(2)
             .dataflow(Dataflow::OutputStationary)
             .build()
-            .sweep(&net);
+            .unwrap()
+            .sweep(&net)
+            .unwrap();
         assert_eq!(ws.dataflow, "ws");
         assert_eq!(os.dataflow, "os");
         for (lw, lo) in ws.layers.iter().zip(&os.layers) {
@@ -598,8 +1253,8 @@ mod tests {
     #[test]
     fn sweep_is_ordered_and_thread_invariant() {
         let net = tinycnn();
-        let r1 = small_engine(1, BackendKind::Analytic).sweep(&net);
-        let r4 = small_engine(4, BackendKind::Analytic).sweep(&net);
+        let r1 = small_engine(1, BackendKind::Analytic).sweep(&net).unwrap();
+        let r4 = small_engine(4, BackendKind::Analytic).sweep(&net).unwrap();
         assert_eq!(r1.layers.len(), net.layers.len());
         for (i, l) in r1.layers.iter().enumerate() {
             assert_eq!(l.layer_index, i);
@@ -619,18 +1274,19 @@ mod tests {
             .iter()
             .enumerate()
             .rev()
-            .map(|(i, l)| e.submit(LayerJob::synthetic(l.clone(), i)))
+            .map(|(i, l)| e.submit(LayerJob::synthetic(l.clone(), i)).unwrap())
             .collect();
         for h in handles {
             let idx = h.layer_index();
-            let streamed = h.wait();
-            let sync = e.analyze_layer(&net.layers[idx], idx);
+            let streamed = h.wait().unwrap();
+            let sync = e.analyze_layer(&net.layers[idx], idx).unwrap();
             assert_eq!(streamed.layer_index, idx);
             assert_eq!(
                 streamed.energy_of("proposed").unwrap().total(),
                 sync.energy_of("proposed").unwrap().total()
             );
             assert_eq!(streamed.results[0].counts, sync.results[0].counts);
+            assert!(streamed.faults.is_empty());
         }
     }
 
@@ -646,8 +1302,11 @@ mod tests {
                 .max_tiles_per_layer(16)
                 .threads(threads)
                 .build()
+                .unwrap()
                 .submit(LayerJob::synthetic(layer.clone(), 1))
+                .unwrap()
                 .wait()
+                .unwrap()
         };
         let base = run(1);
         assert!(base.sampled_tiles > 1, "need a multi-tile layer");
@@ -668,8 +1327,8 @@ mod tests {
     #[test]
     fn cycle_backend_reproduces_analytic_counts() {
         let net = tinycnn();
-        let a = small_engine(2, BackendKind::Analytic).sweep(&net);
-        let c = small_engine(2, BackendKind::Cycle).sweep(&net);
+        let a = small_engine(2, BackendKind::Analytic).sweep(&net).unwrap();
+        let c = small_engine(2, BackendKind::Cycle).sweep(&net).unwrap();
         assert_eq!(c.backend, "cycle");
         for (la, lc) in a.layers.iter().zip(&c.layers) {
             for (ra, rc) in la.results.iter().zip(&lc.results) {
@@ -686,15 +1345,17 @@ mod tests {
         let e = small_engine(2, BackendKind::Analytic);
         let fm = crate::workload::gen_feature_map(l, 0xCAFE, 1);
         let w = crate::workload::gen_weights(l, 0xCAFE, 1);
-        let h = e.submit(LayerJob::with_data(l.clone(), 1, fm.clone(), w.clone()));
-        let streamed = h.wait();
-        let sync = e.analyze_layer_with_data(l, 1, fm, w);
+        let h = e
+            .submit(LayerJob::with_data(l.clone(), 1, fm.clone(), w.clone()))
+            .unwrap();
+        let streamed = h.wait().unwrap();
+        let sync = e.analyze_layer_with_data(l, 1, fm, w).unwrap();
         assert_eq!(
             streamed.energy_of("baseline").unwrap().total(),
             sync.energy_of("baseline").unwrap().total()
         );
         // synthetic path generates the same tensors for this layer/seed
-        let synth = e.analyze_layer(l, 1);
+        let synth = e.analyze_layer(l, 1).unwrap();
         assert_eq!(streamed.results[0].counts, synth.results[0].counts);
     }
 
@@ -712,12 +1373,31 @@ mod tests {
             .max_tiles_per_layer(2)
             .configs(set)
             .threads(2)
-            .build();
-        let r = e.analyze_layer(&net.layers[1], 1);
+            .build()
+            .unwrap();
+        let r = e.analyze_layer(&net.layers[1], 1).unwrap();
         assert_eq!(r.results.len(), 3);
         assert!(r.energy_of("proposed+w-zvcg").unwrap().total() > 0.0);
         // registry names remain addressable
         assert!(ConfigRegistry::lookup("proposed").is_some());
+    }
+
+    #[test]
+    fn cancel_resolves_to_cancelled_or_completed() {
+        let net = tinycnn();
+        let e = small_engine(2, BackendKind::Analytic);
+        let h = e.submit(LayerJob::synthetic(net.layers[1].clone(), 1)).unwrap();
+        h.cancel();
+        // The job may have raced to completion; both outcomes are legal,
+        // anything else is not.
+        match h.wait() {
+            Ok(_) | Err(EngineError::Cancelled) => {}
+            Err(e) => panic!("unexpected outcome {e:?}"),
+        }
+        // the pool serves subsequent jobs regardless
+        let r = e.submit(LayerJob::synthetic(net.layers[1].clone(), 1)).unwrap();
+        assert!(r.wait().is_ok());
+        assert_eq!(e.pending_jobs(), 0);
     }
 
     #[test]
@@ -727,8 +1407,24 @@ mod tests {
         for threads in [1, 4] {
             let e = small_engine(threads, BackendKind::Analytic);
             let net = tinycnn();
-            let _ = e.sweep(&net);
+            let _ = e.sweep(&net).unwrap();
             drop(e); // must not hang
+        }
+    }
+
+    #[test]
+    fn drain_completes_admitted_jobs_then_rejects() {
+        let net = tinycnn();
+        let e = small_engine(2, BackendKind::Analytic);
+        let handles: Vec<JobHandle> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| e.submit(LayerJob::synthetic(l.clone(), i)).unwrap())
+            .collect();
+        e.drain(); // waits for every admitted job to deliver
+        for h in handles {
+            assert!(h.wait().is_ok(), "admitted jobs must complete across drain");
         }
     }
 }

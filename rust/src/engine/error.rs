@@ -1,0 +1,210 @@
+//! Typed engine errors: the failure model of the job engine.
+//!
+//! Every fallible engine surface — [`SaEngineBuilder::build`],
+//! [`SaEngine::submit`]/[`SaEngine::sweep`], [`JobHandle::wait`], the
+//! [`EstimatorBackend`] estimation entry points and the
+//! coordinator's plan/price/finalize stages — returns
+//! [`EngineError`] instead of panicking. The variants partition the
+//! failure space the way the pool handles it:
+//!
+//! * **caller errors** ([`InvalidSpec`], [`InvalidWorkload`],
+//!   [`QueueFull`]) are rejected at the submit boundary, before any
+//!   worker sees the job;
+//! * **job errors** ([`Backend`], [`WorkerPanic`], [`Timeout`],
+//!   [`Cancelled`]) fail exactly one job — the pool keeps serving every
+//!   other job, bit-identically (asserted by
+//!   `rust/tests/engine_faults.rs` and the conformance suite);
+//! * **pool errors** ([`PoolShutdown`], [`Internal`]) mean the engine
+//!   itself can no longer answer.
+//!
+//! [`EngineError::exit_code`] gives each category a stable process exit
+//! code for the CLI.
+//!
+//! [`SaEngineBuilder::build`]: crate::engine::SaEngineBuilder::build
+//! [`SaEngine::submit`]: crate::engine::SaEngine::submit
+//! [`SaEngine::sweep`]: crate::engine::SaEngine::sweep
+//! [`JobHandle::wait`]: crate::engine::JobHandle::wait
+//! [`EstimatorBackend`]: crate::engine::EstimatorBackend
+//! [`InvalidSpec`]: EngineError::InvalidSpec
+//! [`InvalidWorkload`]: EngineError::InvalidWorkload
+//! [`QueueFull`]: EngineError::QueueFull
+//! [`Backend`]: EngineError::Backend
+//! [`WorkerPanic`]: EngineError::WorkerPanic
+//! [`Timeout`]: EngineError::Timeout
+//! [`Cancelled`]: EngineError::Cancelled
+//! [`PoolShutdown`]: EngineError::PoolShutdown
+//! [`Internal`]: EngineError::Internal
+
+use std::fmt;
+use std::time::Duration;
+
+/// `Result` specialized to the engine's typed error.
+pub type EngineResult<T> = Result<T, EngineError>;
+
+/// Everything that can go wrong between `submit` and `wait`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineError {
+    /// A configuration value (thread count, queue depth, fault spec,
+    /// coding spec) is out of range or unparseable.
+    InvalidSpec(String),
+    /// A submitted layer/workload is structurally invalid (zero GEMM
+    /// dimensions, tensor length mismatch).
+    InvalidWorkload(String),
+    /// An estimator backend failed or broke the batched contract.
+    Backend {
+        /// `EstimatorBackend::name()` of the failing backend.
+        backend: String,
+        message: String,
+    },
+    /// A worker panicked while executing part of this job. The panic was
+    /// contained: only this job failed; the pool (and every other job)
+    /// keeps running.
+    WorkerPanic {
+        /// Where the panic was caught (`layer[index]` plus the tile
+        /// item, when known).
+        context: String,
+        /// The panic payload, when it was a string.
+        message: String,
+    },
+    /// The worker pool has shut down (engine dropped or drained) and can
+    /// no longer accept or answer jobs.
+    PoolShutdown,
+    /// The job exceeded its deadline; queued tile items were dropped.
+    Timeout {
+        /// The per-job limit that was exceeded.
+        limit: Duration,
+    },
+    /// The job was cancelled via [`JobHandle::cancel`]; queued tile
+    /// items were dropped.
+    ///
+    /// [`JobHandle::cancel`]: crate::engine::JobHandle::cancel
+    Cancelled,
+    /// The bounded submit queue is at capacity and the admission policy
+    /// is [`AdmissionPolicy::Reject`].
+    ///
+    /// [`AdmissionPolicy::Reject`]: crate::engine::AdmissionPolicy::Reject
+    QueueFull {
+        /// The configured queue capacity that was hit.
+        capacity: usize,
+    },
+    /// An engine invariant broke (e.g. a mismatched fold length). A bug,
+    /// reported as data instead of a panic so one bad job cannot kill
+    /// the pool.
+    Internal(String),
+}
+
+impl EngineError {
+    /// Stable kebab-case tag of the variant (report provenance, logs).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EngineError::InvalidSpec(_) => "invalid-spec",
+            EngineError::InvalidWorkload(_) => "invalid-workload",
+            EngineError::Backend { .. } => "backend",
+            EngineError::WorkerPanic { .. } => "worker-panic",
+            EngineError::PoolShutdown => "pool-shutdown",
+            EngineError::Timeout { .. } => "timeout",
+            EngineError::Cancelled => "cancelled",
+            EngineError::QueueFull { .. } => "queue-full",
+            EngineError::Internal(_) => "internal",
+        }
+    }
+
+    /// Stable process exit code for the CLI (`main.rs`). `1` stays the
+    /// generic failure code; an invalid spec shares the usage-error
+    /// code `2` (it *is* a usage error); the runtime failure modes get
+    /// distinct codes from 3 up.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            EngineError::InvalidSpec(_) => 2,
+            EngineError::InvalidWorkload(_) => 3,
+            EngineError::Backend { .. } => 4,
+            EngineError::WorkerPanic { .. } => 5,
+            EngineError::PoolShutdown => 6,
+            EngineError::Timeout { .. } => 7,
+            EngineError::Cancelled => 8,
+            EngineError::QueueFull { .. } => 9,
+            EngineError::Internal(_) => 10,
+        }
+    }
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::InvalidSpec(m) => write!(f, "invalid spec: {m}"),
+            EngineError::InvalidWorkload(m) => write!(f, "invalid workload: {m}"),
+            EngineError::Backend { backend, message } => {
+                write!(f, "backend '{backend}' failed: {message}")
+            }
+            EngineError::WorkerPanic { context, message } => {
+                write!(f, "worker panic in {context}: {message}")
+            }
+            EngineError::PoolShutdown => write!(f, "engine worker pool is shut down"),
+            EngineError::Timeout { limit } => {
+                write!(f, "job exceeded its {limit:?} deadline")
+            }
+            EngineError::Cancelled => write!(f, "job cancelled"),
+            EngineError::QueueFull { capacity } => {
+                write!(f, "submit queue full (capacity {capacity})")
+            }
+            EngineError::Internal(m) => write!(f, "engine invariant broken: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// One failed tile item of a partial report (the
+/// [`TileFailurePolicy::Partial`] outcome): which plan item failed and
+/// why. Carried by `LayerReport::faults` and serialized by the report
+/// JSON when non-empty.
+///
+/// [`TileFailurePolicy::Partial`]: crate::engine::TileFailurePolicy
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileFault {
+    /// Plan-order index of the failed tile item.
+    pub item: usize,
+    pub error: EngineError,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_covers_every_variant() {
+        let cases: Vec<EngineError> = vec![
+            EngineError::InvalidSpec("threads 0".into()),
+            EngineError::InvalidWorkload("k == 0".into()),
+            EngineError::Backend { backend: "analytic".into(), message: "x".into() },
+            EngineError::WorkerPanic { context: "conv1[0] tile 2".into(), message: "boom".into() },
+            EngineError::PoolShutdown,
+            EngineError::Timeout { limit: Duration::from_millis(5) },
+            EngineError::Cancelled,
+            EngineError::QueueFull { capacity: 4 },
+            EngineError::Internal("fold mismatch".into()),
+        ];
+        for e in &cases {
+            assert!(!e.to_string().is_empty());
+            assert!(!e.kind().is_empty());
+        }
+        // exit codes are distinct per variant and never collide with the
+        // generic failure code 1
+        let mut codes: Vec<i32> = cases.iter().map(EngineError::exit_code).collect();
+        codes.sort_unstable();
+        codes.dedup();
+        assert_eq!(codes.len(), cases.len(), "exit codes must be distinct");
+        assert!(!codes.contains(&1));
+    }
+
+    #[test]
+    fn errors_are_send_sync_clone_eq() {
+        fn assert_bounds<T: Send + Sync + Clone + PartialEq + 'static>() {}
+        assert_bounds::<EngineError>();
+        assert_eq!(EngineError::Cancelled, EngineError::Cancelled);
+        assert_ne!(
+            EngineError::Cancelled,
+            EngineError::QueueFull { capacity: 1 }
+        );
+    }
+}

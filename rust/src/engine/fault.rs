@@ -1,0 +1,356 @@
+//! Deterministic fault injection for the job engine.
+//!
+//! A [`FaultPlan`] is a list of [`FaultSite`]s: *at the Nth tile item
+//! (plan order) of a named layer, at a given pipeline stage, do X* —
+//! where X is a panic, a typed backend error, or a delay. Because tile
+//! items are indexed in deterministic plan order (the same order the
+//! fold runs in), a plan fires at exactly the same work item on every
+//! run, regardless of thread count or scheduling: recovery tests assert
+//! on behavior, not on races. [`FaultPlan::seeded`] derives a
+//! pseudo-random — but seed-reproducible — site set for soak-style
+//! drills.
+//!
+//! Plans are installed with `SaEngineBuilder::fault_plan` (a failure
+//! drill/testing hook — production builds simply never set it; the
+//! pool's fault checks are two branch instructions per item when unset)
+//! and from the CLI via `simulate --fault-inject <spec>`.
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! plan  := site (';' site)*
+//! site  := kind '@' layer ':' tile ['@' stage]
+//! kind  := 'panic' | 'error' | 'delay:' millis
+//! layer := '*' | layer-name          (exact match; '*' = any layer)
+//! tile  := integer                   (plan-order tile item index)
+//! stage := 'plan' | 'price' | 'worker'   (default 'price')
+//! ```
+//!
+//! Examples: `panic@*:2` (panic pricing the third tile of any layer),
+//! `delay:50@conv1:0` (50 ms delay on conv1's first tile),
+//! `panic@*:0@worker` (panic *outside* the per-item containment, which
+//! exercises the worker-respawn path).
+
+use std::time::Duration;
+
+use super::error::EngineError;
+
+/// What an armed fault site does when it fires.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// `panic!` — exercises the `catch_unwind` containment (stage
+    /// `price`/`plan`) or the worker-respawn path (stage `worker`).
+    Panic,
+    /// Return a typed [`EngineError::Backend`] from the estimation, as
+    /// a failing backend would.
+    Error,
+    /// Sleep before pricing — exercises deadlines, backpressure and
+    /// cancellation windows.
+    Delay(Duration),
+}
+
+/// Which pipeline stage the fault fires in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultStage {
+    /// During layer planning (lowering + sampling); `tile` must be 0.
+    Plan,
+    /// During tile pricing, inside the per-item `catch_unwind`
+    /// containment. The default.
+    Price,
+    /// In the worker loop, *outside* the per-item containment: the
+    /// worker thread itself dies and must be respawned (the job still
+    /// fails cleanly via the completion guard).
+    Worker,
+}
+
+impl FaultStage {
+    fn name(self) -> &'static str {
+        match self {
+            FaultStage::Plan => "plan",
+            FaultStage::Price => "price",
+            FaultStage::Worker => "worker",
+        }
+    }
+}
+
+/// One armed fault: fire `kind` at `stage` of tile item `tile` of every
+/// layer matching `layer`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSite {
+    /// `None` matches any layer; `Some(name)` matches exactly.
+    pub layer: Option<String>,
+    /// Plan-order tile item index (0 for [`FaultStage::Plan`]).
+    pub tile: usize,
+    pub stage: FaultStage,
+    pub kind: FaultKind,
+}
+
+impl FaultSite {
+    fn matches(&self, layer: &str, stage: FaultStage, tile: usize) -> bool {
+        self.stage == stage
+            && self.tile == tile
+            && self.layer.as_deref().map_or(true, |l| l == layer)
+    }
+}
+
+/// A deterministic set of fault sites consulted by the worker pool.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    sites: Vec<FaultSite>,
+}
+
+impl FaultPlan {
+    /// An empty plan (never fires).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Build from explicit sites.
+    pub fn new(sites: Vec<FaultSite>) -> Self {
+        FaultPlan { sites }
+    }
+
+    /// One price-stage site: `kind` at tile `tile` of `layer`
+    /// (`None` = any layer).
+    pub fn at_tile(layer: Option<&str>, tile: usize, kind: FaultKind) -> Self {
+        FaultPlan::new(vec![FaultSite {
+            layer: layer.map(str::to_string),
+            tile,
+            stage: FaultStage::Price,
+            kind,
+        }])
+    }
+
+    /// Seed-reproducible pseudo-random plan: each of `count` sites picks
+    /// a tile index in `0..tile_span` from the seed. Same seed → same
+    /// plan, so even "random" drills replay exactly.
+    pub fn seeded(seed: u64, count: usize, tile_span: usize, kind: FaultKind) -> Self {
+        let mut rng = crate::util::Rng64::new(seed ^ 0xFA17);
+        let sites = (0..count)
+            .map(|_| FaultSite {
+                layer: None,
+                tile: (rng.next_u64() % tile_span.max(1) as u64) as usize,
+                stage: FaultStage::Price,
+                kind: kind.clone(),
+            })
+            .collect();
+        FaultPlan::new(sites)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    pub fn sites(&self) -> &[FaultSite] {
+        &self.sites
+    }
+
+    /// The first armed site matching this (layer, stage, tile item), if
+    /// any. Pure lookup — firing is the pool's job (see
+    /// [`FaultPlan::fire`]).
+    pub fn check(
+        &self,
+        layer: &str,
+        stage: FaultStage,
+        tile: usize,
+    ) -> Option<&FaultKind> {
+        self.sites
+            .iter()
+            .find(|s| s.matches(layer, stage, tile))
+            .map(|s| &s.kind)
+    }
+
+    /// Consult the plan and act: panic, sleep, or return the injected
+    /// typed error. `Ok(())` when no site fires (the overwhelmingly
+    /// common path: one `Vec::is_empty` check).
+    pub fn fire(
+        &self,
+        layer: &str,
+        stage: FaultStage,
+        tile: usize,
+    ) -> Result<(), EngineError> {
+        if self.sites.is_empty() {
+            return Ok(());
+        }
+        match self.check(layer, stage, tile) {
+            None => Ok(()),
+            Some(FaultKind::Panic) => panic!(
+                "fault-injected panic at {layer} tile {tile} ({} stage)",
+                stage.name()
+            ),
+            Some(FaultKind::Delay(d)) => {
+                std::thread::sleep(*d);
+                Ok(())
+            }
+            Some(FaultKind::Error) => Err(EngineError::Backend {
+                backend: "fault-inject".into(),
+                message: format!(
+                    "injected error at {layer} tile {tile} ({} stage)",
+                    stage.name()
+                ),
+            }),
+        }
+    }
+
+    /// Parse the `--fault-inject` spec grammar (see the module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan, EngineError> {
+        let bad = |m: String| EngineError::InvalidSpec(format!("fault spec '{spec}': {m}"));
+        let mut sites = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind_s, rest) = part
+                .split_once('@')
+                .ok_or_else(|| bad(format!("site '{part}' is missing '@'")))?;
+            let kind = match kind_s {
+                "panic" => FaultKind::Panic,
+                "error" => FaultKind::Error,
+                other => match other.strip_prefix("delay:") {
+                    Some(ms) => FaultKind::Delay(Duration::from_millis(
+                        ms.parse::<u64>().map_err(|e| {
+                            bad(format!("bad delay millis '{ms}' ({e})"))
+                        })?,
+                    )),
+                    None => {
+                        return Err(bad(format!(
+                            "unknown kind '{other}' (panic|error|delay:<ms>)"
+                        )))
+                    }
+                },
+            };
+            // rest = layer ':' tile ['@' stage]
+            let (site_s, stage) = match rest.split_once('@') {
+                None => (rest, FaultStage::Price),
+                Some((s, "plan")) => (s, FaultStage::Plan),
+                Some((s, "price")) => (s, FaultStage::Price),
+                Some((s, "worker")) => (s, FaultStage::Worker),
+                Some((_, other)) => {
+                    return Err(bad(format!(
+                        "unknown stage '{other}' (plan|price|worker)"
+                    )))
+                }
+            };
+            let (layer_s, tile_s) = site_s
+                .rsplit_once(':')
+                .ok_or_else(|| bad(format!("site '{part}' is missing ':<tile>'")))?;
+            let tile = tile_s
+                .parse::<usize>()
+                .map_err(|e| bad(format!("bad tile index '{tile_s}' ({e})")))?;
+            if stage == FaultStage::Plan && tile != 0 {
+                return Err(bad("plan-stage sites must use tile 0".into()));
+            }
+            let layer = match layer_s {
+                "*" => None,
+                "" => return Err(bad(format!("site '{part}' has an empty layer"))),
+                name => Some(name.to_string()),
+            };
+            sites.push(FaultSite { layer, tile, stage, kind });
+        }
+        if sites.is_empty() {
+            return Err(bad("no sites".into()));
+        }
+        Ok(FaultPlan::new(sites))
+    }
+
+    /// Render back to the spec grammar (round-trips through
+    /// [`FaultPlan::parse`]).
+    pub fn spec(&self) -> String {
+        self.sites
+            .iter()
+            .map(|s| {
+                let kind = match &s.kind {
+                    FaultKind::Panic => "panic".to_string(),
+                    FaultKind::Error => "error".to_string(),
+                    FaultKind::Delay(d) => format!("delay:{}", d.as_millis()),
+                };
+                let layer = s.layer.as_deref().unwrap_or("*");
+                let stage = match s.stage {
+                    FaultStage::Price => String::new(),
+                    other => format!("@{}", other.name()),
+                };
+                format!("{kind}@{layer}:{}{stage}", s.tile)
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_the_spec_grammar() {
+        for spec in [
+            "panic@*:2",
+            "error@fc:0",
+            "delay:50@conv1:3",
+            "panic@*:0@worker",
+            "error@blk1.qkv:0@plan",
+            "panic@*:2;delay:5@*:0;error@dw1:4",
+        ] {
+            let plan = FaultPlan::parse(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(plan.spec(), spec, "round trip");
+            assert_eq!(FaultPlan::parse(&plan.spec()).unwrap(), plan);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "panic",
+            "panic@*",
+            "panic@:2",
+            "boom@*:1",
+            "delay:@*:1",
+            "delay:xx@*:1",
+            "panic@*:notanumber",
+            "panic@*:1@nowhere",
+            "panic@*:1@plan", // plan stage requires tile 0
+        ] {
+            let err = FaultPlan::parse(bad).unwrap_err();
+            assert!(
+                matches!(err, EngineError::InvalidSpec(_)),
+                "'{bad}' must be InvalidSpec, got {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn check_matches_layer_stage_and_tile() {
+        let plan = FaultPlan::parse("error@conv1:2").unwrap();
+        assert!(plan.check("conv1", FaultStage::Price, 2).is_some());
+        assert!(plan.check("conv1", FaultStage::Price, 1).is_none());
+        assert!(plan.check("conv2", FaultStage::Price, 2).is_none());
+        assert!(plan.check("conv1", FaultStage::Plan, 2).is_none());
+        let any = FaultPlan::parse("error@*:0").unwrap();
+        assert!(any.check("anything", FaultStage::Price, 0).is_some());
+    }
+
+    #[test]
+    fn fire_returns_typed_error_and_sleeps() {
+        let plan = FaultPlan::parse("error@*:1;delay:1@*:2").unwrap();
+        assert_eq!(plan.fire("x", FaultStage::Price, 0), Ok(()));
+        let e = plan.fire("x", FaultStage::Price, 1).unwrap_err();
+        assert!(matches!(e, EngineError::Backend { .. }));
+        // the delay site just sleeps and succeeds
+        assert_eq!(plan.fire("x", FaultStage::Price, 2), Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "fault-injected panic")]
+    fn fire_panics_on_a_panic_site() {
+        let plan = FaultPlan::at_tile(None, 0, FaultKind::Panic);
+        let _ = plan.fire("x", FaultStage::Price, 0);
+    }
+
+    #[test]
+    fn seeded_plans_replay_exactly() {
+        let a = FaultPlan::seeded(42, 3, 16, FaultKind::Error);
+        let b = FaultPlan::seeded(42, 3, 16, FaultKind::Error);
+        assert_eq!(a, b);
+        assert_eq!(a.sites().len(), 3);
+        assert!(a.sites().iter().all(|s| s.tile < 16));
+        let c = FaultPlan::seeded(43, 3, 16, FaultKind::Error);
+        assert_ne!(a, c, "different seed, different plan (overwhelmingly)");
+    }
+}

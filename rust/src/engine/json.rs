@@ -34,6 +34,13 @@
 //! `SweepReport::streaming_activity_reduction_pct` — is an in-memory
 //! field only; the v3 document deliberately carries just the raw
 //! sampled ledger plus `sampled_tiles`/`total_tiles`.)
+//!
+//! Partial reports (the engine's `TileFailurePolicy::Partial` outcome)
+//! additionally carry a per-layer `"faults"` array of
+//! `{"item","kind","error"}` rows. The key is emitted **only when
+//! non-empty**, so every fully successful report renders byte-identical
+//! to before faults existed and the schema tag stays v3 (the clean
+//! shape is still pinned by the golden test).
 //! The bit-exactness migration contract: for every registry config the
 //! v3 counts equal the v2 counts field-for-field (the new comparator
 //! fields are 0 for every pre-stack design) — pinned by
@@ -217,6 +224,22 @@ impl LayerReport {
             "results",
             Json::Arr(self.results.iter().map(|r| r.to_json_value()).collect()),
         );
+        // Only partial reports carry faults; omitting the empty key
+        // keeps clean reports byte-identical to the pinned v3 golden.
+        if !self.faults.is_empty() {
+            let rows = self
+                .faults
+                .iter()
+                .map(|f| {
+                    let mut row = Json::object();
+                    row.push("item", f.item);
+                    row.push("kind", f.error.kind());
+                    row.push("error", f.error.to_string());
+                    row
+                })
+                .collect();
+            o.push("faults", Json::Arr(rows));
+        }
         o
     }
 
@@ -293,6 +316,37 @@ mod tests {
         let bad = r#"{"schema": "sa-lowpower.sweep-report.v99", "layers": []}"#;
         assert!(SweepDoc::parse(bad).is_err());
         assert!(SweepDoc::parse(r#"{"layers": []}"#).is_err());
+    }
+
+    #[test]
+    fn faults_key_is_emitted_only_when_non_empty() {
+        use crate::engine::{EngineError, TileFault};
+        let mut r = LayerReport {
+            layer_name: "conv1".into(),
+            layer_index: 0,
+            gemm: crate::workload::GemmShape { m: 4, k: 4, n: 4 },
+            input_zero_frac: 0.0,
+            sampled_tiles: 1,
+            total_tiles: 1,
+            results: Vec::new(),
+            faults: Vec::new(),
+        };
+        // clean report: no "faults" key at all (byte-stability with the
+        // pinned golden)
+        assert!(r.to_json_value().get("faults").is_none());
+        r.faults.push(TileFault {
+            item: 2,
+            error: EngineError::Backend {
+                backend: "fault-inject".into(),
+                message: "injected".into(),
+            },
+        });
+        let v = r.to_json_value();
+        let rows = v.get("faults").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("item").unwrap().as_u64(), Some(2));
+        assert_eq!(rows[0].get("kind").unwrap().as_str(), Some("backend"));
+        assert!(rows[0].get("error").unwrap().as_str().unwrap().contains("injected"));
     }
 
     #[test]

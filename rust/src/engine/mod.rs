@@ -1,7 +1,7 @@
 //! The unified power-analysis engine — the one public entry point for
 //! everything that estimates SA power.
 //!
-//! Built from four pieces:
+//! Built from six pieces:
 //!
 //! * [`registry`] — the typed configuration registry: one static table
 //!   ([`CONFIG_TABLE`]) of named **coding-stack descriptors** (each row
@@ -14,11 +14,20 @@
 //!   estimators (asymmetric floorplan, skewed pipeline — see PAPERS.md)
 //!   are one `impl` away. Sweeps call the batched
 //!   `EstimatorBackend::estimate_many` (count once, price many; default
-//!   = sequential loop for out-of-tree backends).
+//!   = sequential loop for out-of-tree backends). Estimation is
+//!   fallible: both entry points return [`EngineResult`].
+//! * [`error`] — the typed [`EngineError`] failure model: caller errors
+//!   rejected at the submit boundary, job errors contained to one job,
+//!   pool errors for a dead engine; stable CLI exit codes.
+//! * [`fault`] — deterministic fault injection ([`FaultPlan`]):
+//!   panic/error/delay at the Nth tile of a named layer, used by the
+//!   recovery tests and `simulate --fault-inject`.
 //! * [`core`] — [`SaEngine`] + builder: batch sweeps and the streaming
 //!   job API over one persistent worker pool with tile-granular
 //!   scheduling (layers split into per-tile work items, folded back in
-//!   deterministic plan order).
+//!   deterministic plan order), panic isolation per work item, bounded
+//!   admission ([`AdmissionPolicy`]), per-job deadlines,
+//!   [`JobHandle::cancel`] and graceful [`SaEngine::drain`].
 //! * [`json`] — serde-free JSON serialization of
 //!   [`SweepReport`](crate::coordinator::SweepReport) /
 //!   [`LayerReport`](crate::coordinator::LayerReport) /
@@ -43,8 +52,9 @@
 //!     .backend(BackendKind::Analytic)
 //!     .dataflow(Dataflow::WeightStationary)
 //!     .threads(8)
-//!     .build();
-//! let sweep = engine.sweep(&Network::by_name("resnet50").unwrap());
+//!     .build()
+//!     .expect("valid engine spec");
+//! let sweep = engine.sweep(&Network::by_name("resnet50").unwrap()).unwrap();
 //! println!("{:.1} %", sweep.overall_savings_pct("baseline", "proposed"));
 //! std::fs::write("sweep.json", sweep.to_json()).unwrap();
 //! ```
@@ -52,11 +62,18 @@
 mod backend;
 // `self::` disambiguates from the `core` crate under uniform paths.
 mod core;
+mod error;
+mod fault;
 mod json;
 mod registry;
 
 pub use self::backend::{AnalyticBackend, BackendKind, CycleBackend, EstimatorBackend};
-pub use self::core::{JobHandle, LayerData, LayerJob, SaEngine, SaEngineBuilder};
+pub use self::core::{
+    AdmissionPolicy, JobHandle, LayerData, LayerJob, SaEngine, SaEngineBuilder,
+    TileFailurePolicy, MAX_THREADS,
+};
+pub use self::error::{EngineError, EngineResult, TileFault};
+pub use self::fault::{FaultKind, FaultPlan, FaultSite, FaultStage};
 pub use self::json::{
     SweepDoc, SWEEP_REPORT_SCHEMA, SWEEP_REPORT_SCHEMA_V1, SWEEP_REPORT_SCHEMA_V2,
 };

@@ -26,7 +26,7 @@ use sa_lowpower::coordinator::{
 };
 use sa_lowpower::engine::{
     AnalyticBackend, BackendKind, ConfigRegistry, ConfigSet, CycleBackend,
-    EstimatorBackend, SaEngine,
+    EngineError, EstimatorBackend, FaultPlan, LayerJob, SaEngine,
 };
 use sa_lowpower::power::AreaModel;
 use sa_lowpower::report::{ablation_table, fig2_tables, fig45_table, headline_table, Table};
@@ -46,7 +46,13 @@ fn main() {
     };
     if let Err(e) = run(&args) {
         eprintln!("error: {e:#}");
-        std::process::exit(1);
+        // Typed engine failures carry stable exit codes (invalid-spec=2,
+        // …, internal=10); anything untyped is the generic 1.
+        let code = e
+            .downcast_ref::<EngineError>()
+            .map(EngineError::exit_code)
+            .unwrap_or(1);
+        std::process::exit(code);
     }
 }
 
@@ -89,6 +95,11 @@ fn usage() -> String {
   --dataflow one of: {dataflows}   (register movement: weight- vs output-stationary)
   --net      one of: {nets} (where applicable)
   --json-dir DIR                 write machine-readable sweep reports
+  --fault-inject SPEC            simulate only: arm deterministic faults
+             (grammar: <panic|error|delay:<ms>>@<layer|*>:<tile>[@<stage>],
+              stages plan|price|worker; ';'-separated sites)
+Typed engine failures exit with stable codes (invalid-spec=2 .. internal=10);
+see README 'Error handling & operational limits'.
 Reproduction of 'Low-Power Data Streaming in Systolic Arrays with Bus-Invert
 Coding and Zero-Value Clock Gating' (MOCAST 2023). See README.md.",
         configs = ConfigRegistry::name_list(),
@@ -149,12 +160,13 @@ fn configs_from(args: &Args, base: ConfigSet) -> Result<ConfigSet> {
 /// One configured engine per invocation: options, configs, backend and
 /// worker pool all come from the command line.
 fn engine_from(args: &Args, configs: ConfigSet) -> Result<SaEngine> {
-    Ok(SaEngine::builder()
+    let engine = SaEngine::builder()
         .options(opts_from(args)?)
         .configs(configs_from(args, configs)?)
         .backend(backend_from(args)?)
         .threads(threads_from(args)?)
-        .build())
+        .build()?;
+    Ok(engine)
 }
 
 fn maybe_csv(args: &Args, name: &str, t: &Table) -> Result<()> {
@@ -221,7 +233,7 @@ fn fig45(args: &Args, net_name: &str) -> Result<()> {
         engine.backend_name(),
         engine.dataflow()
     );
-    let sweep = engine.sweep(&net);
+    let sweep = engine.sweep(&net)?;
     let t = fig45_table(&sweep, engine.sa());
     t.print();
     println!();
@@ -248,8 +260,8 @@ fn headline(args: &Args) -> Result<()> {
     ])
     .map_err(|e| anyhow!(e))?;
     let engine = engine_from(args, ConfigSet::paper())?;
-    let resnet = engine.sweep(&Network::by_name("resnet50").unwrap());
-    let mobilenet = engine.sweep(&Network::by_name("mobilenet").unwrap());
+    let resnet = engine.sweep(&Network::by_name("resnet50").unwrap())?;
+    let mobilenet = engine.sweep(&Network::by_name("mobilenet").unwrap())?;
     println!("== Headline claims (paper §I / §IV) ==");
     let t = headline_table(&resnet, &mobilenet, engine.sa());
     t.print();
@@ -273,7 +285,7 @@ fn ablation(args: &Args) -> Result<()> {
         engine.backend_name(),
         engine.dataflow()
     );
-    let sweep = engine.sweep(&net);
+    let sweep = engine.sweep(&net)?;
     let t = ablation_table(&sweep, &engine.configs().names());
     t.print();
     maybe_csv(args, &format!("ablation_{name}"), &t)?;
@@ -323,6 +335,7 @@ fn stack_from(args: &Args, default_name: &str) -> Result<CodingStack> {
 fn simulate(args: &Args) -> Result<()> {
     args.validate(&[
         "m", "k", "n", "sparsity", "config", "coding", "seed", "backend", "dataflow",
+        "threads", "fault-inject",
     ])
     .map_err(|e| anyhow!(e))?;
     let m = args.get_parse("m", 16usize).map_err(|e| anyhow!(e))?;
@@ -346,15 +359,60 @@ fn simulate(args: &Args) -> Result<()> {
          backend {}, dataflow {dataflow} ==",
         kind.name()
     );
+
+    // --fault-inject: route the same GEMM through the engine's worker
+    // pool with the plan armed. The doomed job fails with a typed error
+    // while a clean resubmit on the *same* pool still succeeds —
+    // demonstrating containment — and the typed error then becomes the
+    // process exit code (the check.sh smoke run asserts on it).
+    if let Some(spec) = args.get("fault-inject") {
+        let plan = FaultPlan::parse(spec)?;
+        let engine = SaEngine::builder()
+            .seed(seed)
+            .configs(configs_from(args, ConfigSet::paper())?)
+            .backend(kind)
+            .dataflow(dataflow)
+            .threads(threads_from(args)?)
+            .fault_plan(plan)
+            .build()?;
+        let layer = sa_lowpower::workload::Layer::gemm_layer("sim", m, k, n, sp > 0.0);
+        let doomed = engine
+            .submit(LayerJob::with_data(layer.clone(), 0, a.clone(), b.clone()))?
+            .wait();
+        match doomed {
+            Ok(_) => println!(
+                "fault plan '{spec}' armed but did not fire on layer 'sim'; \
+                 continuing with the clean run"
+            ),
+            Err(e) => {
+                let clean = engine
+                    .submit(LayerJob::with_data(layer, 0, a, b))?
+                    .wait()?;
+                println!(
+                    "injected fault contained: job failed with [{}] {e}; clean \
+                     resubmit on the same pool priced {} configs",
+                    e.kind(),
+                    clean.results.len()
+                );
+                return Err(e.into());
+            }
+        }
+    }
+
     // Run both backends: the selected one produces the report, the other
     // cross-checks it (the backend contract says counts are bit-exact).
     let t0 = std::time::Instant::now();
-    let cycle = CycleBackend.estimate(&tile, &stack, dataflow);
+    let cycle = CycleBackend.estimate(&tile, &stack, dataflow)?;
     let t_cycle = t0.elapsed();
     let t1 = std::time::Instant::now();
-    let fast = AnalyticBackend.estimate(&tile, &stack, dataflow);
+    let fast = AnalyticBackend.estimate(&tile, &stack, dataflow)?;
     let t_fast = t1.elapsed();
-    assert_eq!(cycle, fast, "analytic model must equal cycle sim");
+    if cycle != fast {
+        bail!(
+            "backend cross-check failed: analytic and cycle-accurate counts \
+             diverge on the same tile (contract violation — see engine::backend)"
+        );
+    }
     println!("cycle-accurate sim: {t_cycle:?}; analytic model: {t_fast:?} (identical counts)");
     let counts = match kind {
         BackendKind::Analytic => fast,
@@ -529,7 +587,7 @@ fn pruning(args: &Args) -> Result<()> {
             CodingStack::parse("w:zvcg+bic-mantissa,i:zvcg").map_err(|e| anyhow!(e))?,
         ))
         .threads(1)
-        .build();
+        .build()?;
 
     println!("== Pruning extension (paper §III-B future work) on {name} ==");
     let mut t = Table::new([
@@ -548,7 +606,7 @@ fn pruning(args: &Args) -> Result<()> {
             let mut w = gen_weights(layer, seed, i);
             prune_weights(&mut w, prune);
             wz += w.iter().filter(|&&v| v == 0.0).count() as f64 / w.len() as f64;
-            let rep = engine.analyze_layer_with_data(layer, i, fm, w);
+            let rep = engine.analyze_layer_with_data(layer, i, fm, w)?;
             base += rep.energy_of("baseline").unwrap().total();
             prop += rep.energy_of("proposed").unwrap().total();
             propw += rep.energy_of("proposed+w-zvcg").unwrap().total();
@@ -592,10 +650,10 @@ fn sweep_size(args: &Args) -> Result<()> {
             .sa(SaConfig { rows: dim, cols: dim, ..SaConfig::default() })
             .configs(ConfigSet::paper())
             .threads(1)
-            .build();
+            .build()?;
         let (mut base, mut prop) = (0.0, 0.0);
         for &i in &picks {
-            let rep = engine.analyze_layer(&net.layers[i], i);
+            let rep = engine.analyze_layer(&net.layers[i], i)?;
             base += rep.energy_of("baseline").unwrap().total();
             prop += rep.energy_of("proposed").unwrap().total();
         }
@@ -637,8 +695,8 @@ fn transformer(args: &Args) -> Result<()> {
             .configs(configs_from(args, ConfigSet::paper())?)
             .backend(backend_from(args)?)
             .threads(threads_from(args)?)
-            .build();
-        let sweep = engine.sweep(&net);
+            .build()?;
+        let sweep = engine.sweep(&net)?;
         t.row([
             df.long_name().to_string(),
             format!("{:.3}", sweep.total_energy("baseline") * 1e-6),
@@ -675,7 +733,7 @@ fn e2e(args: &Args) -> Result<()> {
         .seed(seed)
         .max_tiles_per_layer(args.get_parse("tiles", 16usize).map_err(|e| anyhow!(e))?)
         .configs(ConfigSet::paper())
-        .build();
+        .build()?;
 
     println!("== e2e: XLA inference (AOT artifacts) + SA power analysis ==");
     let params = TinycnnParams::generate(seed);
@@ -704,16 +762,16 @@ fn e2e(args: &Args) -> Result<()> {
             if i >= resp.activations.len() {
                 break; // fc head: skip in per-request power detail
             }
-            handles.push(engine.submit(sa_lowpower::engine::LayerJob::with_data(
+            handles.push(engine.submit(LayerJob::with_data(
                 layer.clone(),
                 i,
                 fm.clone(),
                 params.gemm_weights(i).to_vec(),
-            )));
+            ))?);
             fm = resp.activations[i].clone();
         }
         for h in handles {
-            let rep = h.wait();
+            let rep = h.wait()?;
             total_base += rep.energy_of("baseline").unwrap().total();
             total_prop += rep.energy_of("proposed").unwrap().total();
         }

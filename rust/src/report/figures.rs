@@ -167,7 +167,9 @@ mod tests {
             .configs(ConfigSet::paper())
             .threads(2)
             .build()
+            .unwrap()
             .sweep(&tinycnn())
+            .unwrap()
     }
 
     #[test]

@@ -62,13 +62,28 @@ impl Json {
         Json::Obj(Vec::new())
     }
 
-    /// Append a key/value pair. Panics if `self` is not an object —
-    /// report builders construct objects statically, so a mismatch is a
-    /// programming error, not a data error.
+    /// Append a key/value pair to an object. On a non-object this is a
+    /// debug-asserted no-op: report builders construct objects
+    /// statically, so a mismatch is a programming error (caught by any
+    /// debug/test build) — but it must not panic a release worker that
+    /// is assembling a report. Callers that want the mismatch as data
+    /// use [`Json::try_push`].
     pub fn push(&mut self, key: &str, value: impl Into<Json>) {
+        let r = self.try_push(key, value);
+        debug_assert!(r.is_ok(), "Json::push on non-object (key '{key}')");
+    }
+
+    /// Append a key/value pair, reporting a non-object target instead
+    /// of panicking or dropping the value.
+    pub fn try_push(&mut self, key: &str, value: impl Into<Json>) -> Result<(), String> {
         match self {
-            Json::Obj(pairs) => pairs.push((key.to_string(), value.into())),
-            other => panic!("Json::push on non-object {other:?}"),
+            Json::Obj(pairs) => {
+                pairs.push((key.to_string(), value.into()));
+                Ok(())
+            }
+            other => Err(format!(
+                "Json::try_push of key '{key}' on non-object {other:?}"
+            )),
         }
     }
 
@@ -410,6 +425,28 @@ mod tests {
         assert_eq!(back.get("frac").unwrap().as_f64(), Some(0.25));
         assert_eq!(back.get("name").unwrap().as_str(), Some("sweep"));
         assert_eq!(back.get("arr").unwrap().idx(1).unwrap().as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn try_push_reports_non_object_targets() {
+        let mut obj = Json::object();
+        assert!(obj.try_push("k", 1u64).is_ok());
+        assert_eq!(obj.get("k").unwrap().as_u64(), Some(1));
+
+        let mut num = Json::from(3.0);
+        let err = num.try_push("k", 1u64).unwrap_err();
+        assert!(err.contains("non-object"), "{err}");
+        // The value is unchanged — no silent mutation on the error path.
+        assert_eq!(num, Json::from(3.0));
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "Json::push on non-object"))]
+    fn push_on_non_object_is_a_debug_assertion_and_release_noop() {
+        let mut arr = Json::Arr(Vec::new());
+        arr.push("k", 1u64);
+        // In release builds the push is a no-op instead of a panic.
+        assert_eq!(arr, Json::Arr(Vec::new()));
     }
 
     #[test]

@@ -16,8 +16,8 @@
 //! the zero-K rejection at the `Tile` boundary.
 
 use sa_lowpower::engine::{
-    AnalyticBackend, BackendKind, ConfigSet, CycleBackend, EstimatorBackend,
-    SaEngine,
+    AnalyticBackend, BackendKind, ConfigSet, CycleBackend, EngineError,
+    EstimatorBackend, FaultPlan, LayerJob, SaEngine, SweepDoc,
 };
 use sa_lowpower::sa::{
     analyze_tile, simulate_tile, simulate_tile_reference, Dataflow, Tile,
@@ -145,8 +145,8 @@ fn analytic_and_cycle_backends_agree_per_dataflow() {
         let t = random_tile(rng, m, k, n, pz_a, pz_b);
         for (name, cfg) in ConfigSet::all().iter() {
             for df in [WS, OS] {
-                let a = AnalyticBackend.estimate(&t, cfg, df);
-                let c = CycleBackend.estimate(&t, cfg, df);
+                let a = AnalyticBackend.estimate(&t, cfg, df).unwrap();
+                let c = CycleBackend.estimate(&t, cfg, df).unwrap();
                 assert_eq!(a, c, "'{name}' {df} {m}x{k}x{n}");
             }
         }
@@ -159,8 +159,8 @@ fn analytic_and_cycle_backends_agree_on_degenerate_tiles() {
     for t in degenerate_tiles(&mut rng) {
         for (name, cfg) in ConfigSet::all().iter() {
             for df in [WS, OS] {
-                let a = AnalyticBackend.estimate(&t, cfg, df);
-                let c = CycleBackend.estimate(&t, cfg, df);
+                let a = AnalyticBackend.estimate(&t, cfg, df).unwrap();
+                let c = CycleBackend.estimate(&t, cfg, df).unwrap();
                 assert_eq!(a, c, "'{name}' {df} {}x{}x{}", t.m, t.k, t.n);
             }
         }
@@ -227,7 +227,7 @@ fn composed_spec_stacks_pass_the_full_matrix() {
                 assert_eq!(fast.c, golden.c, "'{spec}' {df}");
                 assert_eq!(fast.c, want, "'{spec}' {df} vs f32 reference");
                 assert_eq!(
-                    AnalyticBackend.estimate(&t, &stack, df),
+                    AnalyticBackend.estimate(&t, &stack, df).unwrap(),
                     fast.counts,
                     "'{spec}' {df} analytic"
                 );
@@ -292,10 +292,10 @@ fn estimate_many_is_bit_exact_vs_sequential_and_reference() {
             let backends: [&dyn EstimatorBackend; 2] =
                 [&AnalyticBackend, &CycleBackend];
             for backend in backends {
-                let batched = backend.estimate_many(&t, &stacks, df);
+                let batched = backend.estimate_many(&t, &stacks, df).unwrap();
                 assert_eq!(batched.len(), stacks.len());
                 for (i, (name, stack)) in named.iter().enumerate() {
-                    let single = backend.estimate(&t, stack, df);
+                    let single = backend.estimate(&t, stack, df).unwrap();
                     assert_eq!(
                         batched[i],
                         single,
@@ -334,11 +334,11 @@ fn estimate_many_matches_on_random_composed_stacks() {
             let backends: [&dyn EstimatorBackend; 2] =
                 [&AnalyticBackend, &CycleBackend];
             for backend in backends {
-                let batched = backend.estimate_many(&t, &stacks, df);
+                let batched = backend.estimate_many(&t, &stacks, df).unwrap();
                 for (i, stack) in stacks.iter().enumerate() {
                     assert_eq!(
                         batched[i],
-                        backend.estimate(&t, stack, df),
+                        backend.estimate(&t, stack, df).unwrap(),
                         "stack '{}' {df} ({} backend)",
                         stack.spec(),
                         backend.name()
@@ -364,11 +364,11 @@ fn estimate_many_holds_on_degenerate_tiles() {
             let backends: [&dyn EstimatorBackend; 2] =
                 [&AnalyticBackend, &CycleBackend];
             for backend in backends {
-                let batched = backend.estimate_many(&t, &stacks, df);
+                let batched = backend.estimate_many(&t, &stacks, df).unwrap();
                 for (i, stack) in stacks.iter().enumerate() {
                     assert_eq!(
                         batched[i],
-                        backend.estimate(&t, stack, df),
+                        backend.estimate(&t, stack, df).unwrap(),
                         "{df} {}x{}x{} ({} backend)",
                         t.m,
                         t.k,
@@ -413,7 +413,9 @@ fn transformer_sweeps_agree_across_backends_and_dataflows() {
                 .dataflow(df)
                 .threads(2)
                 .build()
+                .unwrap()
                 .sweep(&net)
+                .unwrap()
         };
         let a = sweep_of(BackendKind::Analytic);
         let c = sweep_of(BackendKind::Cycle);
@@ -432,4 +434,81 @@ fn transformer_sweeps_agree_across_backends_and_dataflows() {
         }
         assert!(a.total_energy("baseline") > 0.0);
     }
+}
+
+// ---- robustness clause: failures never perturb concurrent results ----
+
+/// A failed (here: panicked) job sharing the pool with a sweep must not
+/// change one byte of that sweep's JSON relative to a fresh, fault-free
+/// pool — failure isolation is part of the determinism contract, not
+/// just an engine feature.
+#[test]
+fn faulted_job_never_perturbs_concurrent_sweep_json() {
+    use sa_lowpower::workload::Layer;
+    let net = Network::by_name("transformer").unwrap();
+    let engine_with = |fault: FaultPlan| {
+        SaEngine::builder()
+            .max_tiles_per_layer(2)
+            .configs(ConfigSet::paper())
+            .threads(3)
+            .fault_plan(fault)
+            .build()
+            .unwrap()
+    };
+
+    // Fault targets only the layer named "doomed" — absent from the net,
+    // so the sweep itself never matches a site.
+    let armed = engine_with(FaultPlan::parse("panic@doomed:0").unwrap());
+    let doomed = armed
+        .submit(LayerJob::synthetic(Layer::gemm_layer("doomed", 6, 8, 6, false), 99))
+        .unwrap();
+    let sweep = armed.sweep(&net).unwrap();
+    match doomed.wait() {
+        Err(EngineError::WorkerPanic { .. }) => {}
+        other => panic!("doomed job must fail with WorkerPanic, got {other:?}"),
+    }
+
+    let clean = engine_with(FaultPlan::none()).sweep(&net).unwrap();
+    assert_eq!(
+        sweep.to_json(),
+        clean.to_json(),
+        "sweep JSON must be byte-identical despite the concurrent fault"
+    );
+    // And the recovered pool still serves byte-identical work afterwards.
+    let again = armed.sweep(&net).unwrap();
+    assert_eq!(again.to_json(), clean.to_json());
+}
+
+// ---- rejection: malformed specs and documents fail typed, not loud ---
+
+#[test]
+fn malformed_fault_specs_and_jobs_are_rejected_with_typed_errors() {
+    use sa_lowpower::workload::Layer;
+    // Fault-plan grammar errors are InvalidSpec.
+    for bad in ["panic@x", "explode@*:0", "delay@*:0", "panic@*:zero"] {
+        match FaultPlan::parse(bad) {
+            Err(EngineError::InvalidSpec(_)) => {}
+            other => panic!("'{bad}' must be InvalidSpec, got {other:?}"),
+        }
+    }
+    // Workload errors are InvalidWorkload, raised at the submit boundary
+    // (never inside a worker).
+    let engine = SaEngine::builder()
+        .max_tiles_per_layer(1)
+        .threads(1)
+        .build()
+        .unwrap();
+    let l = Layer::gemm_layer("g", 4, 4, 4, false);
+    match engine.submit(LayerJob::with_data(l, 0, vec![0.0; 3], vec![0.0; 16])) {
+        Err(EngineError::InvalidWorkload(_)) => {}
+        other => panic!("short feature map must be InvalidWorkload, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_sweep_documents_are_rejected() {
+    // Truncated / non-JSON / wrong-schema documents all fail cleanly.
+    assert!(SweepDoc::parse("{\"schema\": \"sa-lowpower.sweep-report.v3\"").is_err());
+    assert!(SweepDoc::parse("not json at all").is_err());
+    assert!(SweepDoc::parse("{\"schema\": \"someone-elses.report.v9\"}").is_err());
 }

@@ -20,6 +20,7 @@ fn fast_engine(configs: ConfigSet, kind: BackendKind) -> SaEngine {
         .backend(kind)
         .threads(2)
         .build()
+        .unwrap()
 }
 
 /// A minimal hand-built report whose JSON rendering is fully predictable
@@ -59,6 +60,7 @@ fn handmade_report() -> SweepReport {
                 counts,
                 energy,
             }],
+            faults: Vec::new(),
         }],
     }
 }
@@ -152,6 +154,7 @@ fn handmade_transformer_report() -> SweepReport {
                     counts: qkv_counts,
                     energy: qkv_energy,
                 }],
+                faults: Vec::new(),
             },
             LayerReport {
                 layer_name: ffn_down.name.clone(),
@@ -168,6 +171,7 @@ fn handmade_transformer_report() -> SweepReport {
                     counts: ffn_counts,
                     energy: ffn_energy,
                 }],
+                faults: Vec::new(),
             },
         ],
     }
@@ -286,7 +290,8 @@ fn transformer_sweep_report_golden() {
 #[test]
 fn sweep_report_json_round_trips_from_a_real_sweep() {
     let net = tinycnn();
-    let sweep = fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net);
+    let sweep =
+        fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net).unwrap();
     let doc = Json::parse(&sweep.to_json()).expect("report must be valid JSON");
 
     assert_eq!(doc.get("schema").unwrap().as_str(), Some(SWEEP_REPORT_SCHEMA));
@@ -373,7 +378,9 @@ fn sweep_report_json_is_byte_identical_across_thread_counts() {
             .backend(kind)
             .threads(threads)
             .build()
+            .unwrap()
             .sweep(&net)
+            .unwrap()
             .to_json()
     };
     for kind in [BackendKind::Analytic, BackendKind::Cycle] {
@@ -400,7 +407,9 @@ fn scaled_streaming_toggles_flow_through_sweeps() {
         .configs(ConfigSet::paper())
         .threads(2)
         .build()
-        .sweep(&net);
+        .unwrap()
+        .sweep(&net)
+        .unwrap();
     for l in &sweep.layers {
         for r in &l.results {
             if l.sampled_tiles == l.total_tiles
@@ -439,7 +448,8 @@ fn write_json_creates_parent_dirs() {
 #[test]
 fn sweep_metrics_handle_unknown_config_names() {
     let net = tinycnn();
-    let sweep = fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net);
+    let sweep =
+        fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net).unwrap();
     // unknown names contribute zero energy → savings must be 0, not NaN
     assert_eq!(sweep.total_energy("nope"), 0.0);
     assert_eq!(sweep.overall_savings_pct("nope", "proposed"), 0.0);
@@ -451,7 +461,8 @@ fn sweep_metrics_handle_unknown_config_names() {
 #[test]
 fn sweep_metrics_are_zero_when_a_equals_b() {
     let net = tinycnn();
-    let sweep = fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net);
+    let sweep =
+        fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net).unwrap();
     assert_eq!(sweep.overall_savings_pct("proposed", "proposed"), 0.0);
     assert_eq!(
         sweep.streaming_activity_reduction_pct("proposed", "proposed"),
@@ -482,7 +493,8 @@ fn degenerate_layer_sweeps_to_finite_reports() {
         name: "degenerate".into(),
         layers: vec![Layer::depthwise("dw0", 0, 1, 8)],
     };
-    let sweep = fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net);
+    let sweep =
+        fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net).unwrap();
     let l = &sweep.layers[0];
     assert_eq!(l.input_zero_frac, 0.0);
     assert!(l.input_zero_frac.is_finite());
@@ -503,12 +515,12 @@ fn streaming_api_delivers_every_layer_of_a_network() {
         .layers
         .iter()
         .enumerate()
-        .map(|(i, l)| engine.submit(LayerJob::synthetic(l.clone(), i)))
+        .map(|(i, l)| engine.submit(LayerJob::synthetic(l.clone(), i)).unwrap())
         .collect();
-    let batch = engine.sweep(&net);
+    let batch = engine.sweep(&net).unwrap();
     for h in handles {
         let idx = h.layer_index();
-        let rep = h.wait();
+        let rep = h.wait().unwrap();
         assert_eq!(rep.layer_name, net.layers[idx].name);
         assert_eq!(
             rep.energy_of("proposed").unwrap().total(),
@@ -522,8 +534,8 @@ fn cycle_backend_sweep_matches_analytic_sweep() {
     // `--backend cycle` must reproduce the analytic sweep bit-exactly
     // (same counts, hence same energies) — only provenance differs.
     let net = tinycnn();
-    let a = fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net);
-    let c = fast_engine(ConfigSet::paper(), BackendKind::Cycle).sweep(&net);
+    let a = fast_engine(ConfigSet::paper(), BackendKind::Analytic).sweep(&net).unwrap();
+    let c = fast_engine(ConfigSet::paper(), BackendKind::Cycle).sweep(&net).unwrap();
     assert_eq!(a.backend, "analytic");
     assert_eq!(c.backend, "cycle");
     for (la, lc) in a.layers.iter().zip(&c.layers) {

@@ -1,0 +1,303 @@
+//! Robustness integration suite: deterministic fault injection against
+//! the live worker pool. Exercises the full failure partition — caller
+//! errors rejected at the submit boundary, job errors contained to one
+//! job, pool survival across panics — plus admission backpressure,
+//! deadlines, cancellation and graceful drain.
+//!
+//! The acceptance contract pinned here: a fault-injected panic at tile N
+//! yields a typed error (or partial report) for that job ONLY, and a
+//! subsequent job on the same pool is byte-identical to a fresh-pool
+//! run.
+
+use std::time::{Duration, Instant};
+
+use sa_lowpower::engine::{
+    AdmissionPolicy, ConfigSet, EngineError, FaultPlan, LayerJob, SaEngine,
+    TileFailurePolicy, MAX_THREADS,
+};
+use sa_lowpower::workload::{tinycnn, Layer};
+
+/// A layer big enough to split into several tile items on the default
+/// 16×16 array (64×32×64 GEMM → a 4×4 tile grid before sampling).
+fn victim_layer() -> Layer {
+    Layer::gemm_layer("victim", 64, 32, 64, false)
+}
+
+fn builder_with(fault: &str) -> sa_lowpower::engine::SaEngineBuilder {
+    SaEngine::builder()
+        .max_tiles_per_layer(4)
+        .configs(ConfigSet::paper())
+        .threads(2)
+        .fault_plan(FaultPlan::parse(fault).unwrap())
+}
+
+// ---- containment: one job fails, the pool and its peers don't -------
+
+#[test]
+fn panic_at_tile_n_fails_only_that_job_and_pool_output_stays_byte_exact() {
+    let net = tinycnn();
+    let armed = builder_with("panic@victim:1").build().unwrap();
+
+    // The doomed job: tile item 1 panics mid-pricing.
+    let doomed = armed.submit(LayerJob::synthetic(victim_layer(), 7)).unwrap();
+    match doomed.wait() {
+        Err(EngineError::WorkerPanic { context, .. }) => {
+            assert!(context.contains("victim"), "context names the layer: {context}");
+        }
+        other => panic!("expected WorkerPanic, got {other:?}"),
+    }
+
+    // Subsequent work on the SAME pool is byte-identical to a fresh,
+    // fault-free pool.
+    let survived = armed.sweep(&net).unwrap().to_json();
+    let fresh = SaEngine::builder()
+        .max_tiles_per_layer(4)
+        .configs(ConfigSet::paper())
+        .threads(2)
+        .build()
+        .unwrap()
+        .sweep(&net)
+        .unwrap()
+        .to_json();
+    assert_eq!(survived, fresh, "a contained panic must not perturb later jobs");
+}
+
+#[test]
+fn error_fault_fails_the_job_with_the_injected_backend_error() {
+    let e = builder_with("error@victim:0").build().unwrap();
+    let h = e.submit(LayerJob::synthetic(victim_layer(), 0)).unwrap();
+    match h.wait() {
+        Err(EngineError::Backend { backend, .. }) => {
+            assert_eq!(backend, "fault-inject");
+        }
+        other => panic!("expected injected Backend error, got {other:?}"),
+    }
+    // Jobs not matching the fault site are untouched.
+    let clean = Layer::gemm_layer("clean", 32, 16, 32, false);
+    assert!(e.submit(LayerJob::synthetic(clean, 1)).unwrap().wait().is_ok());
+}
+
+#[test]
+fn partial_policy_delivers_the_priced_tiles_and_records_the_faults() {
+    let e = builder_with("error@victim:1")
+        .tile_failure(TileFailurePolicy::Partial)
+        .build()
+        .unwrap();
+    let rep = e.submit(LayerJob::synthetic(victim_layer(), 0)).unwrap().wait()
+        .expect("Partial policy still delivers a report");
+    assert_eq!(rep.faults.len(), 1, "exactly the injected fault");
+    assert_eq!(rep.faults[0].item, 1);
+    assert!(matches!(
+        rep.faults[0].error,
+        EngineError::Backend { ref backend, .. } if backend == "fault-inject"
+    ));
+    // The partial report serializes its fault trail.
+    let json = rep.to_json();
+    assert!(json.contains("\"faults\""), "{json}");
+    assert!(json.contains("fault-inject"), "{json}");
+    // A clean run of the same layer carries no faults key at all.
+    let clean = builder_with("error@other:0").build().unwrap();
+    let rep = clean.submit(LayerJob::synthetic(victim_layer(), 0)).unwrap().wait().unwrap();
+    assert!(rep.faults.is_empty());
+    assert!(!rep.to_json().contains("\"faults\""));
+}
+
+#[test]
+fn worker_stage_panic_kills_the_thread_and_the_pool_respawns_it() {
+    // `@worker` fires OUTSIDE the per-item containment: the worker
+    // thread genuinely dies, the item is still accounted (no hang), the
+    // pool replaces the thread and keeps serving.
+    let e = builder_with("panic@victim:0@worker").build().unwrap();
+    assert_eq!(e.respawned_workers(), 0);
+    let h = e.submit(LayerJob::synthetic(victim_layer(), 0)).unwrap();
+    match h.wait() {
+        Err(EngineError::WorkerPanic { .. }) => {}
+        other => panic!("expected WorkerPanic, got {other:?}"),
+    }
+    let clean = Layer::gemm_layer("clean", 32, 16, 32, false);
+    assert!(e.submit(LayerJob::synthetic(clean, 1)).unwrap().wait().is_ok());
+    assert!(
+        e.respawned_workers() >= 1,
+        "the dead worker must be replaced, got {}",
+        e.respawned_workers()
+    );
+}
+
+// ---- deadlines, cancellation ----------------------------------------
+
+#[test]
+fn deadline_converts_a_wedged_job_into_timeout() {
+    let e = builder_with("delay:400@victim:0").build().unwrap();
+    let t0 = Instant::now();
+    let h = e
+        .submit_with_timeout(
+            LayerJob::synthetic(victim_layer(), 0),
+            Some(Duration::from_millis(60)),
+        )
+        .unwrap();
+    match h.wait() {
+        Err(EngineError::Timeout { limit }) => {
+            assert_eq!(limit, Duration::from_millis(60));
+        }
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    // wait() resolves at the deadline, not after the injected 400 ms.
+    assert!(t0.elapsed() < Duration::from_millis(350));
+}
+
+#[test]
+fn builder_default_timeout_applies_to_plain_submits() {
+    let e = builder_with("delay:400@victim:0")
+        .default_timeout(Duration::from_millis(50))
+        .build()
+        .unwrap();
+    let h = e.submit(LayerJob::synthetic(victim_layer(), 0)).unwrap();
+    assert!(matches!(h.wait(), Err(EngineError::Timeout { .. })));
+}
+
+#[test]
+fn cancelled_jobs_resolve_to_cancelled() {
+    let e = builder_with("delay:150@victim:0").build().unwrap();
+    let h = e.submit(LayerJob::synthetic(victim_layer(), 0)).unwrap();
+    h.cancel();
+    // Best-effort: a job racing to completion may still deliver.
+    match h.wait() {
+        Err(EngineError::Cancelled) | Ok(_) => {}
+        other => panic!("expected Cancelled or a raced report, got {other:?}"),
+    }
+    // The pool is unaffected.
+    let clean = Layer::gemm_layer("clean", 32, 16, 32, false);
+    assert!(e.submit(LayerJob::synthetic(clean, 1)).unwrap().wait().is_ok());
+}
+
+// ---- bounded admission ----------------------------------------------
+
+#[test]
+fn reject_policy_fails_fast_at_queue_depth() {
+    let e = builder_with("delay:150@*:0")
+        .threads(1)
+        .queue_capacity(1)
+        .admission(AdmissionPolicy::Reject)
+        .build()
+        .unwrap();
+    let first = e.submit(LayerJob::synthetic(victim_layer(), 0)).unwrap();
+    match e.submit(LayerJob::synthetic(victim_layer(), 1)) {
+        Err(EngineError::QueueFull { capacity }) => assert_eq!(capacity, 1),
+        other => panic!("expected QueueFull at depth, got {other:?}"),
+    }
+    assert!(first.wait().is_ok());
+    // The slot freed on delivery: admission works again.
+    assert!(e.submit(LayerJob::synthetic(victim_layer(), 2)).unwrap().wait().is_ok());
+}
+
+#[test]
+fn block_policy_applies_backpressure_until_a_slot_frees() {
+    let e = std::sync::Arc::new(
+        builder_with("delay:150@*:0")
+            .threads(1)
+            .queue_capacity(1)
+            .admission(AdmissionPolicy::Block)
+            .build()
+            .unwrap(),
+    );
+    let first = e.submit(LayerJob::synthetic(victim_layer(), 0)).unwrap();
+    let t0 = Instant::now();
+    let e2 = std::sync::Arc::clone(&e);
+    let blocked = std::thread::spawn(move || {
+        let h = e2.submit(LayerJob::synthetic(victim_layer(), 1)).unwrap();
+        (Instant::now(), h.wait())
+    });
+    assert!(first.wait().is_ok());
+    let (admitted_at, second) = blocked.join().unwrap();
+    assert!(second.is_ok());
+    // The second submit could not pass admission before the first job's
+    // injected 150 ms delay resolved and delivered.
+    assert!(
+        admitted_at.duration_since(t0) >= Duration::from_millis(100),
+        "blocked submit admitted after {:?}",
+        admitted_at.duration_since(t0)
+    );
+}
+
+#[test]
+fn drain_completes_every_admitted_job() {
+    let e = builder_with("delay:60@*:0").threads(2).build().unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|i| e.submit(LayerJob::synthetic(victim_layer(), i)).unwrap())
+        .collect();
+    e.drain();
+    for h in handles {
+        assert!(h.wait().is_ok(), "admitted jobs must complete across drain");
+    }
+}
+
+// ---- caller errors are rejected at the boundary ---------------------
+
+#[test]
+fn builder_rejects_degenerate_pool_specs() {
+    for (builder, what) in [
+        (SaEngine::builder().threads(0), "zero threads"),
+        (SaEngine::builder().threads(MAX_THREADS + 1), "absurd thread count"),
+        (SaEngine::builder().queue_capacity(0), "zero-capacity queue"),
+    ] {
+        match builder.build() {
+            Err(EngineError::InvalidSpec(_)) => {}
+            other => panic!("{what} must be InvalidSpec, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn submit_rejects_invalid_workloads_before_admission() {
+    let e = SaEngine::builder().threads(1).build().unwrap();
+    // zero-stride conv would divide by zero in lowering
+    let mut conv = Layer::conv("bad-stride", 3, 4, 4, 1, 8, true);
+    conv.stride = 0;
+    assert!(matches!(
+        e.submit(LayerJob::synthetic(conv, 0)),
+        Err(EngineError::InvalidWorkload(_))
+    ));
+    // tensor lengths must match the layer's lowering
+    let g = Layer::gemm_layer("g", 4, 4, 4, false);
+    assert!(matches!(
+        e.submit(LayerJob::with_data(g.clone(), 0, vec![0.0; 16], vec![0.0; 5])),
+        Err(EngineError::InvalidWorkload(_))
+    ));
+    // a rejected submit holds no admission slot
+    assert_eq!(e.pending_jobs(), 0);
+    // and a well-formed job still runs
+    assert!(e
+        .submit(LayerJob::with_data(g, 0, vec![0.5; 16], vec![0.25; 16]))
+        .unwrap()
+        .wait()
+        .is_ok());
+}
+
+// ---- typed errors carry stable operational metadata ------------------
+
+#[test]
+fn error_kinds_and_exit_codes_are_stable() {
+    let cases: Vec<(EngineError, &str, i32)> = vec![
+        (EngineError::InvalidSpec("x".into()), "invalid-spec", 2),
+        (EngineError::InvalidWorkload("x".into()), "invalid-workload", 3),
+        (
+            EngineError::Backend { backend: "b".into(), message: "m".into() },
+            "backend",
+            4,
+        ),
+        (
+            EngineError::WorkerPanic { context: "c".into(), message: "m".into() },
+            "worker-panic",
+            5,
+        ),
+        (EngineError::PoolShutdown, "pool-shutdown", 6),
+        (EngineError::Timeout { limit: Duration::from_secs(1) }, "timeout", 7),
+        (EngineError::Cancelled, "cancelled", 8),
+        (EngineError::QueueFull { capacity: 4 }, "queue-full", 9),
+        (EngineError::Internal("x".into()), "internal", 10),
+    ];
+    for (e, kind, code) in cases {
+        assert_eq!(e.kind(), kind, "{e}");
+        assert_eq!(e.exit_code(), code, "{e}");
+    }
+}

@@ -99,14 +99,16 @@ fn power_on_real_activations_shows_savings() {
     let engine = SaEngine::builder()
         .max_tiles_per_layer(8)
         .configs(ConfigSet::paper())
-        .build();
+        .build()
+        .unwrap();
     // layer 2 input = activation 1 (real, ~50 % zeros from ReLU)
     let rep = engine.analyze_layer_with_data(
         &net.layers[1],
         1,
         resp.activations[0].clone(),
         params.gemm_weights(1).to_vec(),
-    );
+    )
+    .unwrap();
     assert!(rep.input_zero_frac > 0.2, "zeros {}", rep.input_zero_frac);
     let s = rep.savings_pct("baseline", "proposed").unwrap();
     assert!(s > 1.0, "savings on real activations: {s}%");

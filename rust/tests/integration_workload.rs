@@ -12,6 +12,7 @@ fn fast_engine(configs: ConfigSet, threads: usize) -> SaEngine {
         .configs(configs)
         .threads(threads)
         .build()
+        .unwrap()
 }
 
 #[test]
@@ -45,7 +46,7 @@ fn every_resnet_layer_analyzes_cleanly() {
     let net = Network::by_name("resnet50").unwrap();
     let engine = fast_engine(ConfigSet::paper(), 1);
     for (i, layer) in net.layers.iter().enumerate() {
-        let r = engine.analyze_layer(layer, i);
+        let r = engine.analyze_layer(layer, i).unwrap();
         let base = r.energy_of("baseline").unwrap().total();
         let prop = r.energy_of("proposed").unwrap().total();
         assert!(base > 0.0, "layer {} base", layer.name);
@@ -61,7 +62,7 @@ fn every_resnet_layer_analyzes_cleanly() {
 #[test]
 fn mobilenet_sweep_produces_paper_shaped_results() {
     let net = Network::by_name("mobilenet").unwrap();
-    let sweep = fast_engine(ConfigSet::paper(), 4).sweep(&net);
+    let sweep = fast_engine(ConfigSet::paper(), 4).sweep(&net).unwrap();
     assert_eq!(sweep.layers.len(), net.layers.len());
     let overall = sweep.overall_savings_pct("baseline", "proposed");
     assert!(
@@ -79,7 +80,7 @@ fn ablation_ordering_matches_paper_arguments() {
     //  * exponent-only BIC saves less streaming activity than
     //    mantissa-only (Fig. 2 argument).
     let net = Network::by_name("tinycnn").unwrap();
-    let sweep = fast_engine(ConfigSet::ablation(), 4).sweep(&net);
+    let sweep = fast_engine(ConfigSet::ablation(), 4).sweep(&net).unwrap();
     let base = sweep.total_energy("baseline");
     let e = |n: &str| sweep.total_energy(n);
     assert!(e("proposed") < base);
@@ -111,7 +112,7 @@ fn ablation_ordering_matches_paper_arguments() {
 #[test]
 fn report_tables_render_for_real_sweeps() {
     let net = Network::by_name("tinycnn").unwrap();
-    let sweep = fast_engine(ConfigSet::paper(), 2).sweep(&net);
+    let sweep = fast_engine(ConfigSet::paper(), 2).sweep(&net).unwrap();
     let t = fig45_table(&sweep, &SaConfig::default());
     assert_eq!(t.rows.len(), net.layers.len());
     let csv = t.to_csv();
@@ -122,7 +123,7 @@ fn report_tables_render_for_real_sweeps() {
 
     let ablation_engine = fast_engine(ConfigSet::ablation(), 2);
     let names = ablation_engine.configs().names();
-    let sweep2 = ablation_engine.sweep(&net);
+    let sweep2 = ablation_engine.sweep(&net).unwrap();
     let a = ablation_table(&sweep2, &names);
     assert_eq!(a.rows.len(), names.len());
 }
@@ -133,7 +134,7 @@ fn transformer_sweep_produces_dense_stream_results() {
     // dense, so ZVCG gates far less than on ReLU CNNs and the proposed
     // savings shrink — but must never go negative (BIC still helps).
     let net = Network::by_name("transformer").unwrap();
-    let sweep = fast_engine(ConfigSet::paper(), 4).sweep(&net);
+    let sweep = fast_engine(ConfigSet::paper(), 4).sweep(&net).unwrap();
     assert_eq!(sweep.layers.len(), net.layers.len());
     let overall = sweep.overall_savings_pct("baseline", "proposed");
     assert!(

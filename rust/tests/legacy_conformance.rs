@@ -474,8 +474,8 @@ fn stack_engines_reproduce_legacy_counts_and_outputs() {
                 assert_eq!(fast.counts, legacy.counts, "fast counts: '{name}' {df}");
                 assert_eq!(fast.c, legacy.c, "fast outputs: '{name}' {df}");
                 // both estimator backends, per the acceptance criterion
-                let a = AnalyticBackend.estimate(&t, &stack, df);
-                let c = CycleBackend.estimate(&t, &stack, df);
+                let a = AnalyticBackend.estimate(&t, &stack, df).unwrap();
+                let c = CycleBackend.estimate(&t, &stack, df).unwrap();
                 assert_eq!(a, legacy.counts, "analytic backend: '{name}' {df}");
                 assert_eq!(c, legacy.counts, "cycle backend: '{name}' {df}");
             }
@@ -497,8 +497,8 @@ fn batched_estimation_reproduces_legacy_counts() {
         let cfgs = legacy_configs();
         let stacks: Vec<_> = cfgs.iter().map(|(_, c)| c.stack()).collect();
         for df in BOTH {
-            let a = AnalyticBackend.estimate_many(&t, &stacks, df);
-            let c = CycleBackend.estimate_many(&t, &stacks, df);
+            let a = AnalyticBackend.estimate_many(&t, &stacks, df).unwrap();
+            let c = CycleBackend.estimate_many(&t, &stacks, df).unwrap();
             for (i, (name, cfg)) in cfgs.iter().enumerate() {
                 let legacy = legacy_reference(&t, cfg, df);
                 assert_eq!(a[i], legacy.counts, "analytic batched: '{name}' {df}");
@@ -531,7 +531,7 @@ fn stack_engines_reproduce_legacy_on_degenerate_tiles() {
                 );
                 assert_eq!(fast.c, legacy.c, "'{name}' {df}");
                 assert_eq!(
-                    AnalyticBackend.estimate(t, &stack, df),
+                    AnalyticBackend.estimate(t, &stack, df).unwrap(),
                     legacy.counts,
                     "'{name}' {df}"
                 );
@@ -548,7 +548,7 @@ fn legacy_designs_never_charge_the_new_ledger_fields() {
     let t = random_tile(&mut rng, 5, 12, 5, 0.4, 0.2);
     for (name, cfg) in legacy_configs() {
         for df in BOTH {
-            let c = AnalyticBackend.estimate(&t, &cfg.stack(), df);
+            let c = AnalyticBackend.estimate(&t, &cfg.stack(), df).unwrap();
             assert_eq!(c.west_comparator_bit_cycles, 0, "'{name}' {df}");
             assert_eq!(c.north_comparator_bit_cycles, 0, "'{name}' {df}");
         }

@@ -129,8 +129,8 @@ fn backends_agree_bit_exactly() {
         let t = random_tile(rng, m, k, n, pz_a, pz_b);
         for cfg in all_configs() {
             for df in [WS, OS] {
-                let a = AnalyticBackend.estimate(&t, &cfg, df);
-                let c = CycleBackend.estimate(&t, &cfg, df);
+                let a = AnalyticBackend.estimate(&t, &cfg, df).unwrap();
+                let c = CycleBackend.estimate(&t, &cfg, df).unwrap();
                 assert_eq!(
                     a.streaming_toggles(),
                     c.streaming_toggles(),
@@ -501,7 +501,9 @@ fn input_zero_frac_stays_in_unit_interval() {
             .dataflow(df)
             .threads(2)
             .build()
-            .sweep(&net);
+            .unwrap()
+            .sweep(&net)
+            .unwrap();
         for l in &sweep.layers {
             assert!(
                 l.input_zero_frac.is_finite()
@@ -602,14 +604,13 @@ fn stack_charge_is_additive_across_edges() {
                 for backend in
                     [&AnalyticBackend as &dyn EstimatorBackend, &CycleBackend]
                 {
-                    let both = stream_side(&backend.estimate(&t, &combined, df));
-                    let ws = stream_side(&backend.estimate(&t, &w_only, df));
-                    let is = stream_side(&backend.estimate(&t, &i_only, df));
-                    let base = stream_side(&backend.estimate(
-                        &t,
-                        &CodingStack::baseline(),
-                        df,
-                    ));
+                    let both =
+                        stream_side(&backend.estimate(&t, &combined, df).unwrap());
+                    let ws = stream_side(&backend.estimate(&t, &w_only, df).unwrap());
+                    let is = stream_side(&backend.estimate(&t, &i_only, df).unwrap());
+                    let base = stream_side(
+                        &backend.estimate(&t, &CodingStack::baseline(), df).unwrap(),
+                    );
                     for f in 0..both.len() {
                         assert_eq!(
                             both[f],
@@ -645,10 +646,10 @@ fn commuting_codec_orders_charge_identically() {
             let sa = stack(a);
             let sb = stack(b);
             for df in [WS, OS] {
-                let ca = AnalyticBackend.estimate(&t, &sa, df);
-                let cb = AnalyticBackend.estimate(&t, &sb, df);
+                let ca = AnalyticBackend.estimate(&t, &sa, df).unwrap();
+                let cb = AnalyticBackend.estimate(&t, &sb, df).unwrap();
                 assert_eq!(ca, cb, "'{a}' vs '{b}' {df}");
-                let cyc_a = CycleBackend.estimate(&t, &sa, df);
+                let cyc_a = CycleBackend.estimate(&t, &sa, df).unwrap();
                 assert_eq!(cyc_a, ca, "'{a}' cycle vs analytic {df}");
             }
         }

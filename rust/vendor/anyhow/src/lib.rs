@@ -9,26 +9,33 @@
 //!
 //! * `{e}` displays the outermost message, `{e:#}` the full context
 //!   chain (`outer: inner: root`), `{e:?}` a `Caused by:` listing;
-//! * `?` converts any `std::error::Error + Send + Sync + 'static`;
+//! * `?` converts any `std::error::Error + Send + Sync + 'static`,
+//!   retaining the typed value for [`Error::downcast_ref`];
 //! * `Error` itself deliberately does **not** implement
 //!   `std::error::Error`, mirroring anyhow, so the blanket `From` impl
 //!   and the identity `From<Error>` never conflict.
 
+use std::any::Any;
 use std::fmt::{self, Display};
 
 /// `Result<T, anyhow::Error>`.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
-/// A dynamic error: a chain of context messages, outermost first.
+/// A dynamic error: a chain of context messages, outermost first, plus
+/// (when converted from a typed error) the original value for
+/// downcasting.
 pub struct Error {
     /// chain[0] is the outermost context; the last entry is the root.
     chain: Vec<String>,
+    /// The typed root error `?` converted this from, when any (message
+    /// errors have none). Supports [`Error::downcast_ref`].
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Construct from any displayable message.
     pub fn msg<M: Display>(message: M) -> Self {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], payload: None }
     }
 
     /// Wrap with an outer context message.
@@ -45,6 +52,13 @@ impl Error {
     /// The innermost (root-cause) message.
     pub fn root_cause(&self) -> &str {
         self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// The typed root error this was converted from, if it was an `E`.
+    /// Context wrapping does not erase the payload; errors built from
+    /// bare messages (`anyhow!`) have none.
+    pub fn downcast_ref<E: Any>(&self) -> Option<&E> {
+        self.payload.as_ref().and_then(|p| p.downcast_ref::<E>())
     }
 }
 
@@ -80,7 +94,7 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
             chain.push(s.to_string());
             src = s.source();
         }
-        Error { chain }
+        Error { chain, payload: Some(Box::new(e)) }
     }
 }
 
@@ -194,5 +208,17 @@ mod tests {
     fn error_is_send_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Error>();
+    }
+
+    #[test]
+    fn downcast_ref_recovers_the_typed_root() {
+        let e = Error::from(io_err());
+        let io = e.downcast_ref::<std::io::Error>().expect("payload retained");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        // context wrapping keeps the payload; plain messages have none
+        let wrapped = Error::from(io_err()).context("outer");
+        assert!(wrapped.downcast_ref::<std::io::Error>().is_some());
+        assert!(anyhow!("just text").downcast_ref::<std::io::Error>().is_none());
     }
 }
