@@ -13,7 +13,11 @@
 //! * **batched** — the shared `TileActivity` pass: each tile is counted
 //!   once and priced under every stack (1 worker);
 //! * **batched × N threads** — the same plus the engine's tile-granular
-//!   scheduling across all cores.
+//!   scheduling across all cores;
+//! * **warm-cache** — the batched engine behind a primed
+//!   content-addressed result cache (`CachePolicy::Memory`), so every
+//!   tile is a lookup instead of an estimation pass (1 worker; the
+//!   ceiling the `serve` loop approaches on repeated jobs).
 //!
 //! Results land in `BENCH_sweep.json` at the repo root (machine-
 //! readable; tracked across PRs — EXPERIMENTS.md §Perf reads it). The
@@ -27,7 +31,8 @@ use std::time::Duration;
 use sa_lowpower::activity::ActivityCounts;
 use sa_lowpower::coding::CodingStack;
 use sa_lowpower::engine::{
-    AnalyticBackend, ConfigSet, CycleBackend, EngineResult, EstimatorBackend, SaEngine,
+    AnalyticBackend, CachePolicy, ConfigSet, CycleBackend, EngineResult,
+    EstimatorBackend, SaEngine,
 };
 use sa_lowpower::sa::{Dataflow, Tile};
 use sa_lowpower::util::bench::{time_once, BenchSet, Measurement};
@@ -75,6 +80,11 @@ fn run_sweep(
         .threads(threads)
         .build()
         .expect("valid bench engine spec");
+    measure(&engine, net, label, set)
+}
+
+/// Time one sweep on an already-built engine and record the cell.
+fn measure(engine: &SaEngine, net: &Network, label: &str, set: &mut BenchSet) -> Cell {
     let (report, dt) = time_once(label, || engine.sweep(net).unwrap());
     let layers = report.layers.len();
     let tiles: usize = report.layers.iter().map(|l| l.sampled_tiles).sum();
@@ -153,13 +163,33 @@ fn main() {
                 ),
                 &mut set,
             );
+            // Warm-cache column: prime a cached engine with one cold
+            // sweep, then time the all-hits pass.
+            let cached_engine = SaEngine::builder()
+                .max_tiles_per_layer(tiles_per_layer)
+                .configs(configs.clone())
+                .backend_impl(fresh())
+                .threads(1)
+                .cache(CachePolicy::Memory { budget: 64 << 20 })
+                .build()
+                .expect("valid bench engine spec");
+            cached_engine.sweep(&net).unwrap();
+            let warm = measure(
+                &cached_engine,
+                &net,
+                &format!("sweep/resnet50/{set_name}/{backend_name}/warm-cache/t1"),
+                &mut set,
+            );
             assert_eq!(base.layers, batched.layers);
             assert_eq!(base.tiles, batched.tiles);
+            assert_eq!(base.tiles, warm.tiles);
             println!(
                 "    {set_name}/{backend_name}: batched speedup {:.2}x \
-                 (1 thread), {:.2}x ({threads_wide} threads)\n",
+                 (1 thread), {:.2}x ({threads_wide} threads), warm cache \
+                 {:.2}x over batched\n",
                 base.secs / batched.secs,
-                base.secs / wide.secs
+                base.secs / wide.secs,
+                batched.secs / warm.secs
             );
         }
     }

@@ -129,6 +129,40 @@ cargo run --release -- simulate \
     --m 8 --k 48 --n 8 --sparsity 0.5 2>&1 \
     | tee "$OUT_DIR/fault_inject_clean.log"
 
+echo "== serve loop smoke (sweep-as-a-service + result cache) =="
+# The same job spec piped twice: both jobs must produce one report line
+# each, the second must be served from the shared result store (nonzero
+# hits in its cache provenance), and the two reports must be
+# byte-identical once the run-varying cache-stats object is stripped —
+# the conformance clause, probed end-to-end through the binary.
+spec='net=tinycnn configs=paper backend=analytic tiles=2'
+printf '%s\n%s\n' "$spec" "$spec" \
+    | cargo run --release -- serve --threads 2 \
+    >"$OUT_DIR/serve_smoke.out" 2>"$OUT_DIR/serve_smoke.log"
+if [ "$(wc -l <"$OUT_DIR/serve_smoke.out")" -ne 2 ]; then
+    echo "FAIL: serve emitted $(wc -l <"$OUT_DIR/serve_smoke.out") lines for 2 jobs"
+    exit 1
+fi
+sed 's/"cache":{[^}]*},//' "$OUT_DIR/serve_smoke.out" \
+    | sort -u >"$OUT_DIR/serve_smoke.uniq"
+if [ "$(wc -l <"$OUT_DIR/serve_smoke.uniq")" -ne 1 ]; then
+    echo "FAIL: repeated serve jobs differ beyond their cache stats"
+    exit 1
+fi
+hits="$(sed -n '2p' "$OUT_DIR/serve_smoke.out" \
+    | grep -o '"hits":[0-9]*' | head -n1 | cut -d: -f2)"
+if [ -z "$hits" ] || [ "$hits" -eq 0 ]; then
+    echo "FAIL: second serve job reported no cache hits (got '${hits:-none}')"
+    exit 1
+fi
+# A malformed job line becomes a typed per-line error record on stdout
+# (kind = invalid-spec), never a process failure.
+printf 'net=nonexistent\n' \
+    | cargo run --release -- serve \
+    >"$OUT_DIR/serve_badjob.out" 2>>"$OUT_DIR/serve_smoke.log"
+grep -q '"schema":"sa-lowpower.serve-error.v1"' "$OUT_DIR/serve_badjob.out"
+grep -q '"kind":"invalid-spec"' "$OUT_DIR/serve_badjob.out"
+
 echo "== perf smoke (hot paths) =="
 cargo bench --bench perf_hotpath 2>&1 | tee "$OUT_DIR/perf_hotpath.log"
 

@@ -276,6 +276,15 @@ pub(crate) struct TileCost {
 /// under every stack at once through the backend's batched entry point.
 /// Returns one [`TileCost`] per stack, index-aligned with `stacks`.
 ///
+/// This call is the result cache's seam: when the engine runs with a
+/// `CachePolicy`, `backend` is the `engine::cache::CachingBackend`
+/// wrapper, so an all-hit tile skips `estimate_many` entirely and the
+/// counts come from the content-addressed store. Everything derived
+/// below the counts (energy via the energy model, the scale-
+/// extrapolated streaming toggles) is a deterministic function of
+/// counts × options, which is why cached and recomputed sweeps render
+/// byte-identically.
+///
 /// Backend failures — a returned error or a broken batched contract
 /// (wrong result count) — surface as [`EngineError::Backend`]: the
 /// extension surface out-of-tree backends implement must never fold as

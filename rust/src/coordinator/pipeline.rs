@@ -6,6 +6,8 @@
 //! streaming pool); this module keeps the report type and its derived
 //! metrics.
 
+use crate::engine::CacheStats;
+
 use super::LayerReport;
 
 /// Whole-network sweep result.
@@ -18,6 +20,12 @@ pub struct SweepReport {
     /// Short name of the dataflow the counts were produced under
     /// (`"ws"` / `"os"`; report provenance — see `sa::Dataflow`).
     pub dataflow: String,
+    /// Result-cache counters at sweep completion (report provenance;
+    /// `None` when the engine ran without a cache, and then absent
+    /// from the JSON — see `engine::cache`). Cached results are
+    /// byte-identical to recomputation, so this never changes the
+    /// numbers, only documents how they were obtained.
+    pub cache: Option<CacheStats>,
     pub layers: Vec<LayerReport>,
 }
 
@@ -184,6 +192,7 @@ mod tests {
             network: "unit".into(),
             backend: "analytic".into(),
             dataflow: "ws".into(),
+            cache: None,
             layers: vec![layer_with(0, 1.0, 1000, 900), layer_with(1, 10.0, 100, 10)],
         };
         let pct = r.streaming_activity_reduction_pct("baseline", "proposed");

@@ -1,0 +1,878 @@
+//! Content-addressed result cache: the engine's first stateful
+//! cross-job subsystem.
+//!
+//! ## Why caching is sound here
+//!
+//! Every estimator backend is a pure function of `(tile bit-pattern,
+//! coding stack, dataflow)` — that is the backend contract
+//! (`engine/backend.rs`), enforced bit-exactly by the conformance
+//! suite. Purity makes memoization *semantically invisible*: a cached
+//! [`ActivityCounts`] is byte-for-byte the value the backend would have
+//! recomputed, and everything downstream of the counts (energy
+//! breakdown, scaled streaming toggles — see
+//! `coordinator::analysis::price_tile_item`) is itself a deterministic
+//! function of counts × options, so sweep JSON stays byte-identical
+//! whether a result came from the simulator or the cache
+//! (`rust/tests/conformance.rs::cached_sweeps_are_byte_identical_to_cache_off`).
+//!
+//! The paper's workloads guarantee the redundancy that makes this
+//! worthwhile: im2col lowering emits repeated patches, weight tiles
+//! recur across sweep points, and a registry sweep re-prices the same
+//! tile under dozens of codec stacks.
+//!
+//! ## Key anatomy (content-addressed, two levels)
+//!
+//! * **Activity key** = `hash(key-schema-version, m, k, n, A bits,
+//!   B bits, dataflow name)` — the identity of one tile stream,
+//!   computed from the raw bf16 bus words ([`crate::bf16::as_bits`]),
+//!   not float values, so `-0.0`/`0.0` and NaN payloads key
+//!   distinctly, exactly as the buses see them.
+//! * **Config key** = `hash(activity key, canonical stack spec,
+//!   backend name)` — one priced result. The canonical rendering
+//!   ([`crate::coding::CodingStack::spec`]) is the *sole* key source:
+//!   `w:zvcg+bic-mantissa` and its re-parsed form collide by
+//!   construction, because both render to the same spec string.
+//!
+//! ## Store shape
+//!
+//! A sharded (by key) in-memory LRU with a byte-size budget and
+//! hit/miss/insert/eviction counters, optionally backed by an
+//! append-only on-disk record log with a versioned header: load on
+//! build (a truncated tail — torn final record from a crash — is
+//! dropped, whole records before it survive), append on insert, and a
+//! stale or foreign header starts the store fresh instead of mis-reading
+//! it. Policy selection is [`CachePolicy`] on
+//! [`SaEngineBuilder`](crate::engine::SaEngineBuilder); several engines
+//! can share one store (the `serve` loop does) via
+//! `SaEngineBuilder::cache_store`.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::mem::size_of;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::activity::ActivityCounts;
+use crate::bf16::as_bits;
+use crate::coding::CodingStack;
+use crate::sa::{Dataflow, Tile};
+use crate::util::hash::{Hash128, Hasher128};
+
+use super::backend::EstimatorBackend;
+use super::error::{EngineError, EngineResult};
+
+/// Bumped whenever key derivation changes (hash function, field order,
+/// bit-pattern encoding): a different version produces disjoint keys,
+/// so a persistent store written by older code is never mis-matched.
+const KEY_SCHEMA_VERSION: u64 = 1;
+
+/// The identity of one tile stream: dims + exact operand bus words +
+/// dataflow. Everything a backend's stack-invariant pass
+/// (`TileActivity`) depends on.
+pub fn activity_key(tile: &Tile, dataflow: Dataflow) -> Hash128 {
+    let mut h = Hasher128::new();
+    h.write_u64(KEY_SCHEMA_VERSION);
+    h.write_u64(tile.m as u64);
+    h.write_u64(tile.k as u64);
+    h.write_u64(tile.n as u64);
+    h.write_u16s(as_bits(&tile.a));
+    h.write_u16s(as_bits(&tile.b));
+    h.write_str(dataflow.name());
+    h.finish()
+}
+
+/// The identity of one priced result: activity key × canonical stack
+/// spec × backend kind. Canonical-spec rendering is the sole stack
+/// contribution, so a parsed-and-rerendered stack keys identically.
+pub fn config_key(activity: Hash128, stack: &CodingStack, backend: &str) -> Hash128 {
+    let mut h = Hasher128::new();
+    h.write_u64(activity.hi);
+    h.write_u64(activity.lo);
+    h.write_str(&stack.spec());
+    h.write_str(backend);
+    h.finish()
+}
+
+/// Result-cache policy for an engine, set on
+/// [`SaEngineBuilder::cache`](crate::engine::SaEngineBuilder::cache).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// No cache (the default): every tile is estimated by the backend.
+    #[default]
+    Off,
+    /// In-memory sharded LRU bounded by `budget` bytes.
+    Memory {
+        /// Total byte budget across all shards.
+        budget: usize,
+    },
+    /// [`CachePolicy::Memory`] plus an append-only record log under
+    /// `dir` (`cache.salcache`): loaded on build, appended on insert,
+    /// crash-tolerant on reload.
+    Persistent {
+        /// Total byte budget across all shards (memory side).
+        budget: usize,
+        /// Directory holding the record log (created if absent).
+        dir: PathBuf,
+    },
+}
+
+/// Cache effectiveness counters, surfaced in `SweepReport` provenance
+/// (`cache` key in the v3 JSON, present only when a cache is enabled).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the store.
+    pub hits: u64,
+    /// Lookups that fell through to the backend.
+    pub misses: u64,
+    /// Fresh results inserted.
+    pub insertions: u64,
+    /// Entries dropped by the LRU byte budget.
+    pub evictions: u64,
+    /// Bytes currently accounted to live entries.
+    pub bytes: u64,
+    /// Live entries.
+    pub entries: u64,
+}
+
+const NIL: usize = usize::MAX;
+const SHARD_COUNT: usize = 8;
+
+struct Entry {
+    key: u128,
+    counts: ActivityCounts,
+    prev: usize,
+    next: usize,
+}
+
+/// One lock domain: a slab-backed intrusive LRU list plus its index.
+struct Shard {
+    index: HashMap<u128, usize>,
+    slab: Vec<Entry>,
+    free: Vec<usize>,
+    /// Most-recently-used slab slot.
+    head: usize,
+    /// Least-recently-used slab slot (eviction victim).
+    tail: usize,
+    bytes: usize,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Shard {
+            index: HashMap::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            bytes: 0,
+        }
+    }
+
+    fn unlink(&mut self, slot: usize) {
+        let (prev, next) = (self.slab[slot].prev, self.slab[slot].next);
+        match prev {
+            NIL => self.head = next,
+            p => self.slab[p].next = next,
+        }
+        match next {
+            NIL => self.tail = prev,
+            n => self.slab[n].prev = prev,
+        }
+    }
+
+    fn push_front(&mut self, slot: usize) {
+        self.slab[slot].prev = NIL;
+        self.slab[slot].next = self.head;
+        match self.head {
+            NIL => self.tail = slot,
+            h => self.slab[h].prev = slot,
+        }
+        self.head = slot;
+    }
+
+    fn touch(&mut self, slot: usize) {
+        if self.head != slot {
+            self.unlink(slot);
+            self.push_front(slot);
+        }
+    }
+
+    fn get(&mut self, key: u128) -> Option<ActivityCounts> {
+        let slot = *self.index.get(&key)?;
+        self.touch(slot);
+        Some(self.slab[slot].counts.clone())
+    }
+
+    /// Insert (or refresh) `key`; returns how many entries the byte
+    /// budget evicted. The just-inserted entry is never its own victim:
+    /// a budget too small for even one entry degrades to a one-entry
+    /// cache rather than a useless one.
+    fn insert(&mut self, key: u128, counts: &ActivityCounts, budget: usize) -> (bool, u64) {
+        if let Some(&slot) = self.index.get(&key) {
+            self.touch(slot);
+            return (false, 0);
+        }
+        let entry = Entry { key, counts: clone_counts(counts), prev: NIL, next: NIL };
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slab[s] = entry;
+                s
+            }
+            None => {
+                self.slab.push(entry);
+                self.slab.len() - 1
+            }
+        };
+        self.index.insert(key, slot);
+        self.push_front(slot);
+        self.bytes += ENTRY_COST;
+        let mut evicted = 0;
+        while self.bytes > budget && self.index.len() > 1 {
+            let victim = self.tail;
+            self.unlink(victim);
+            self.index.remove(&self.slab[victim].key);
+            self.free.push(victim);
+            self.bytes -= ENTRY_COST;
+            evicted += 1;
+        }
+        (true, evicted)
+    }
+}
+
+fn clone_counts(c: &ActivityCounts) -> ActivityCounts {
+    c.clone()
+}
+
+/// Per-entry byte charge: the slab entry itself plus the index slot.
+/// An estimate of resident cost, not an exact allocator measurement —
+/// what matters is that the budget scales linearly in entries, so
+/// "budget for N entries" means N entries survive.
+const ENTRY_COST: usize = size_of::<Entry>() + size_of::<(u128, usize)>();
+
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // A panicking holder was inside pure LRU bookkeeping; the structure
+    // is valid (at worst an entry is mid-reorder), so recover the data.
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Sharded, byte-bounded, content-addressed store of priced
+/// [`ActivityCounts`], optionally persisted. Shared across engines via
+/// `Arc` (the `serve` loop keys many engines onto one store).
+pub struct ResultCache {
+    shards: [Mutex<Shard>; SHARD_COUNT],
+    /// Per-shard byte budget (total budget split evenly).
+    shard_budget: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    log: Option<Mutex<RecordLog>>,
+}
+
+impl std::fmt::Debug for ResultCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResultCache")
+            .field("stats", &self.stats())
+            .field("persistent", &self.log.is_some())
+            .finish()
+    }
+}
+
+impl ResultCache {
+    fn new_unshared(budget: usize) -> ResultCache {
+        ResultCache {
+            shards: std::array::from_fn(|_| Mutex::new(Shard::new())),
+            shard_budget: (budget / SHARD_COUNT).max(ENTRY_COST),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            log: None,
+        }
+    }
+
+    /// Purely in-memory store bounded by `budget` bytes.
+    pub fn memory(budget: usize) -> Arc<ResultCache> {
+        Arc::new(Self::new_unshared(budget))
+    }
+
+    /// Memory store backed by the append-only log `dir/cache.salcache`.
+    /// Existing whole records are loaded (a torn final record from a
+    /// crash is dropped and trimmed; a stale or foreign header starts
+    /// fresh); subsequent insertions append. Loads count neither as
+    /// hits nor insertions — stats measure *this* process's traffic.
+    pub fn persistent(budget: usize, dir: &Path) -> EngineResult<Arc<ResultCache>> {
+        let mut cache = ResultCache::new_unshared(budget);
+        let io_err = |op: &str, e: std::io::Error| {
+            EngineError::InvalidSpec(format!(
+                "cache dir '{}': {op}: {e}",
+                dir.display()
+            ))
+        };
+        std::fs::create_dir_all(dir).map_err(|e| io_err("create", e))?;
+        let path = dir.join(STORE_FILE);
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(&path)
+            .map_err(|e| io_err("open", e))?;
+        let mut raw = Vec::new();
+        file.read_to_end(&mut raw).map_err(|e| io_err("read", e))?;
+        match parse_header(&raw) {
+            Some(records) => {
+                let whole = (records.len() / RECORD_LEN) * RECORD_LEN;
+                for rec in records[..whole].chunks_exact(RECORD_LEN) {
+                    let (key, counts) = decode_record(rec);
+                    cache.insert_silent(key, &counts);
+                }
+                let valid_len = (HEADER_LEN + whole) as u64;
+                if valid_len < raw.len() as u64 {
+                    // Torn tail (crash mid-append): trim so the next
+                    // append starts on a record boundary.
+                    file.set_len(valid_len).map_err(|e| io_err("truncate", e))?;
+                }
+            }
+            // Empty file (fresh store), foreign magic, or a schema we
+            // no longer speak: never reinterpret the bytes — restart
+            // the log under the current header.
+            None => {
+                file.set_len(0).map_err(|e| io_err("truncate", e))?;
+                file.seek(SeekFrom::Start(0)).map_err(|e| io_err("seek", e))?;
+                file.write_all(&encode_header()).map_err(|e| io_err("write", e))?;
+            }
+        }
+        file.seek(SeekFrom::End(0)).map_err(|e| io_err("seek", e))?;
+        cache.log = Some(Mutex::new(RecordLog { file, ok: true }));
+        Ok(Arc::new(cache))
+    }
+
+    /// Resolve a policy into a store (None for [`CachePolicy::Off`]).
+    pub fn from_policy(policy: &CachePolicy) -> EngineResult<Option<Arc<ResultCache>>> {
+        match policy {
+            CachePolicy::Off => Ok(None),
+            CachePolicy::Memory { budget } => Ok(Some(ResultCache::memory(*budget))),
+            CachePolicy::Persistent { budget, dir } => {
+                ResultCache::persistent(*budget, dir).map(Some)
+            }
+        }
+    }
+
+    fn shard(&self, key: Hash128) -> &Mutex<Shard> {
+        // hi is fmix64-avalanched; its low bits are uniform.
+        &self.shards[(key.hi as usize) % SHARD_COUNT]
+    }
+
+    /// Look up one priced result. Counts a hit or a miss.
+    pub fn get(&self, key: Hash128) -> Option<ActivityCounts> {
+        let found = lock_recover(self.shard(key)).get(key.to_u128());
+        match found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Insert one priced result (idempotent; a present key is only
+    /// refreshed). Appends to the record log when persistent.
+    pub fn insert(&self, key: Hash128, counts: &ActivityCounts) {
+        if self.insert_silent(key, counts) {
+            self.insertions.fetch_add(1, Ordering::Relaxed);
+            if let Some(log) = &self.log {
+                lock_recover(log).append(key, counts);
+            }
+        }
+    }
+
+    /// Insert without stats or log traffic (the load-on-build path).
+    /// Returns whether the key was actually new.
+    fn insert_silent(&self, key: Hash128, counts: &ActivityCounts) -> bool {
+        let (fresh, evicted) =
+            lock_recover(self.shard(key)).insert(key.to_u128(), counts, self.shard_budget);
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+        fresh
+    }
+
+    /// Snapshot the effectiveness counters.
+    pub fn stats(&self) -> CacheStats {
+        let mut bytes = 0u64;
+        let mut entries = 0u64;
+        for s in &self.shards {
+            let s = lock_recover(s);
+            bytes += s.bytes as u64;
+            entries += s.index.len() as u64;
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes,
+            entries,
+        }
+    }
+
+    /// Live entry count across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| lock_recover(s).index.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The byte charge of one entry — size budgets in tests/benches as
+    /// `n * ResultCache::entry_cost()`.
+    pub const fn entry_cost() -> usize {
+        ENTRY_COST
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistent record log
+// ---------------------------------------------------------------------------
+
+const STORE_FILE: &str = "cache.salcache";
+const STORE_MAGIC: [u8; 4] = *b"SALC";
+/// Bumped with any record-layout or key-schema change.
+const STORE_VERSION: u32 = 1;
+const HEADER_LEN: usize = 16;
+/// key (16 bytes) + 23 × u64 activity counters.
+const RECORD_LEN: usize = 16 + COUNT_FIELDS * 8;
+const COUNT_FIELDS: usize = 23;
+
+struct RecordLog {
+    file: File,
+    /// Cleared on the first append failure: persistence is best-effort,
+    /// and a dead disk must not fail (or spam) otherwise-healthy sweeps.
+    ok: bool,
+}
+
+impl RecordLog {
+    fn append(&mut self, key: Hash128, counts: &ActivityCounts) {
+        if !self.ok {
+            return;
+        }
+        let mut rec = Vec::with_capacity(RECORD_LEN);
+        rec.extend_from_slice(&key.hi.to_le_bytes());
+        rec.extend_from_slice(&key.lo.to_le_bytes());
+        for w in counts_to_words(counts) {
+            rec.extend_from_slice(&w.to_le_bytes());
+        }
+        debug_assert_eq!(rec.len(), RECORD_LEN);
+        if self.file.write_all(&rec).and_then(|_| self.file.flush()).is_err() {
+            self.ok = false;
+        }
+    }
+}
+
+fn encode_header() -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0..4].copy_from_slice(&STORE_MAGIC);
+    h[4..8].copy_from_slice(&STORE_VERSION.to_le_bytes());
+    h[8..12].copy_from_slice(&(RECORD_LEN as u32).to_le_bytes());
+    // h[12..16] reserved, zero.
+    h
+}
+
+/// Validate the header; `Some(records)` is the byte region after it.
+/// `None` means foreign/stale/corrupt — the caller restarts the log.
+fn parse_header(raw: &[u8]) -> Option<&[u8]> {
+    if raw.len() < HEADER_LEN {
+        return None;
+    }
+    if raw[0..4] != STORE_MAGIC {
+        return None;
+    }
+    let version = u32::from_le_bytes(raw[4..8].try_into().unwrap());
+    let record_len = u32::from_le_bytes(raw[8..12].try_into().unwrap());
+    if version != STORE_VERSION || record_len as usize != RECORD_LEN {
+        return None;
+    }
+    Some(&raw[HEADER_LEN..])
+}
+
+fn decode_record(rec: &[u8]) -> (Hash128, ActivityCounts) {
+    let hi = u64::from_le_bytes(rec[0..8].try_into().unwrap());
+    let lo = u64::from_le_bytes(rec[8..16].try_into().unwrap());
+    let mut words = [0u64; COUNT_FIELDS];
+    for (i, w) in words.iter_mut().enumerate() {
+        let at = 16 + i * 8;
+        *w = u64::from_le_bytes(rec[at..at + 8].try_into().unwrap());
+    }
+    (Hash128 { hi, lo }, counts_from_words(&words))
+}
+
+/// Field order is the `activity::events` declaration order; any change
+/// there must bump [`STORE_VERSION`] (the exhaustive literal below
+/// breaks the build if a field is added or renamed, which is the
+/// reminder).
+fn counts_to_words(c: &ActivityCounts) -> [u64; COUNT_FIELDS] {
+    [
+        c.west_data_toggles,
+        c.west_clock_events,
+        c.west_sideband_toggles,
+        c.west_sideband_clock_events,
+        c.zero_detect_ops,
+        c.west_cg_cell_cycles,
+        c.west_comparator_bit_cycles,
+        c.north_data_toggles,
+        c.north_clock_events,
+        c.north_sideband_toggles,
+        c.north_sideband_clock_events,
+        c.encoder_ops,
+        c.decoder_toggles,
+        c.north_cg_cell_cycles,
+        c.north_comparator_bit_cycles,
+        c.mult_input_toggles,
+        c.active_macs,
+        c.gated_macs,
+        c.zero_product_macs,
+        c.acc_clock_events,
+        c.acc_cg_cell_cycles,
+        c.unload_values,
+        c.cycles,
+    ]
+}
+
+fn counts_from_words(w: &[u64; COUNT_FIELDS]) -> ActivityCounts {
+    ActivityCounts {
+        west_data_toggles: w[0],
+        west_clock_events: w[1],
+        west_sideband_toggles: w[2],
+        west_sideband_clock_events: w[3],
+        zero_detect_ops: w[4],
+        west_cg_cell_cycles: w[5],
+        west_comparator_bit_cycles: w[6],
+        north_data_toggles: w[7],
+        north_clock_events: w[8],
+        north_sideband_toggles: w[9],
+        north_sideband_clock_events: w[10],
+        encoder_ops: w[11],
+        decoder_toggles: w[12],
+        north_cg_cell_cycles: w[13],
+        north_comparator_bit_cycles: w[14],
+        mult_input_toggles: w[15],
+        active_macs: w[16],
+        gated_macs: w[17],
+        zero_product_macs: w[18],
+        acc_clock_events: w[19],
+        acc_cg_cell_cycles: w[20],
+        unload_values: w[21],
+        cycles: w[22],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Caching backend wrapper
+// ---------------------------------------------------------------------------
+
+/// Transparent memoizing wrapper installed around the configured
+/// backend when a cache is enabled: `name()` forwards (report
+/// provenance is unchanged), lookups hit the store, misses fall through
+/// to the wrapped backend and populate it. Because both the pooled
+/// price stage and the synchronous `analyze` path reach the backend
+/// through this one seam, cache hits skip `estimate_many` entirely.
+pub(crate) struct CachingBackend {
+    inner: Arc<dyn EstimatorBackend>,
+    cache: Arc<ResultCache>,
+}
+
+impl CachingBackend {
+    pub(crate) fn new(
+        inner: Arc<dyn EstimatorBackend>,
+        cache: Arc<ResultCache>,
+    ) -> Self {
+        CachingBackend { inner, cache }
+    }
+}
+
+impl EstimatorBackend for CachingBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn estimate(
+        &self,
+        tile: &Tile,
+        stack: &CodingStack,
+        dataflow: Dataflow,
+    ) -> EngineResult<ActivityCounts> {
+        let key = config_key(activity_key(tile, dataflow), stack, self.inner.name());
+        if let Some(counts) = self.cache.get(key) {
+            return Ok(counts);
+        }
+        let counts = self.inner.estimate(tile, stack, dataflow)?;
+        self.cache.insert(key, &counts);
+        Ok(counts)
+    }
+
+    /// All-hit batches return straight from the store. Any miss reruns
+    /// the inner batched pass for the *whole* batch — count-once/
+    /// price-many makes one shared pass cheaper than per-stack backfill
+    /// — and inserts only the keys that were absent. (Stats use lookup
+    /// semantics: a probe that found its key counts as a hit even when
+    /// a sibling stack's miss forces the batch to recompute.)
+    fn estimate_many(
+        &self,
+        tile: &Tile,
+        stacks: &[CodingStack],
+        dataflow: Dataflow,
+    ) -> EngineResult<Vec<ActivityCounts>> {
+        let akey = activity_key(tile, dataflow);
+        let keys: Vec<Hash128> = stacks
+            .iter()
+            .map(|s| config_key(akey, s, self.inner.name()))
+            .collect();
+        let cached: Vec<Option<ActivityCounts>> =
+            keys.iter().map(|&k| self.cache.get(k)).collect();
+        if cached.iter().all(Option::is_some) {
+            return Ok(cached.into_iter().map(Option::unwrap).collect());
+        }
+        let all = self.inner.estimate_many(tile, stacks, dataflow)?;
+        if all.len() == stacks.len() {
+            // (A wrong-length batch is the engine's contract violation
+            // to report — never cache it.)
+            for (i, counts) in all.iter().enumerate() {
+                if cached[i].is_none() {
+                    self.cache.insert(keys[i], counts);
+                }
+            }
+        }
+        Ok(all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ConfigSet;
+    use crate::sa::Tile;
+
+    fn tile(seed: u16) -> Tile {
+        let a: Vec<f32> = (0..12).map(|i| (i as f32 + seed as f32) * 0.25).collect();
+        let b: Vec<f32> = (0..12).map(|i| (i as f32 - seed as f32) * 0.5).collect();
+        Tile::from_f32(&a, &b, 3, 4, 3)
+    }
+
+    fn counts(tag: u64) -> ActivityCounts {
+        ActivityCounts { west_data_toggles: tag, cycles: tag + 1, ..Default::default() }
+    }
+
+    #[test]
+    fn canonical_spec_is_the_sole_stack_key_source() {
+        let configs = ConfigSet::all();
+        let t = tile(3);
+        let akey = activity_key(&t, Dataflow::WeightStationary);
+        for (_, stack) in configs.iter() {
+            let reparsed = CodingStack::parse(&stack.spec()).expect("roundtrip");
+            assert_eq!(
+                config_key(akey, stack, "analytic"),
+                config_key(akey, &reparsed, "analytic"),
+                "spec '{}' must key identically after re-parsing",
+                stack.spec()
+            );
+        }
+    }
+
+    #[test]
+    fn keys_separate_every_input_axis() {
+        let t = tile(1);
+        let ws = activity_key(&t, Dataflow::WeightStationary);
+        let os = activity_key(&t, Dataflow::OutputStationary);
+        assert_ne!(ws, os, "dataflow is part of tile identity");
+        assert_ne!(
+            activity_key(&tile(2), Dataflow::WeightStationary),
+            ws,
+            "operand bits are part of tile identity"
+        );
+        let stack = CodingStack::baseline();
+        assert_ne!(
+            config_key(ws, &stack, "analytic"),
+            config_key(ws, &stack, "cycle"),
+            "backend kind is part of result identity"
+        );
+        assert_ne!(
+            config_key(ws, &stack, "analytic"),
+            config_key(os, &stack, "analytic"),
+            "activity key is part of result identity"
+        );
+    }
+
+    #[test]
+    fn lru_respects_byte_budget_and_recency() {
+        // One shard in play is not guaranteed, so drive a single-shard
+        // scenario by hand.
+        let mut shard = Shard::new();
+        let budget = 3 * ENTRY_COST;
+        let mut evicted = 0;
+        for i in 0..5u64 {
+            let (fresh, e) = shard.insert(i as u128, &counts(i), budget);
+            assert!(fresh);
+            evicted += e;
+        }
+        // Budget holds 3: entries 0 and 1 are gone, 2..=4 survive.
+        assert_eq!(evicted, 2);
+        assert_eq!(shard.index.len(), 3);
+        assert_eq!(shard.bytes, 3 * ENTRY_COST);
+        assert!(shard.get(0).is_none());
+        assert!(shard.get(1).is_none());
+        for i in 2..5u64 {
+            assert_eq!(shard.get(i as u128), Some(counts(i)));
+        }
+        // Touch the would-be victim (2), insert one more: 3 is evicted
+        // instead — recency, not insertion order.
+        assert!(shard.get(2).is_some());
+        let (_, e) = shard.insert(5, &counts(5), budget);
+        assert_eq!(e, 1);
+        assert!(shard.get(3).is_none());
+        assert_eq!(shard.get(2), Some(counts(2)));
+        assert_eq!(shard.get(5), Some(counts(5)));
+    }
+
+    #[test]
+    fn a_starved_budget_degrades_to_one_entry_not_zero() {
+        let mut shard = Shard::new();
+        for i in 0..4u64 {
+            shard.insert(i as u128, &counts(i), 1);
+        }
+        assert_eq!(shard.index.len(), 1);
+        assert_eq!(shard.get(3), Some(counts(3)));
+    }
+
+    #[test]
+    fn store_counts_hits_misses_insertions() {
+        let cache = ResultCache::memory(1 << 20);
+        let k1 = Hash128 { hi: 7, lo: 9 };
+        let k2 = Hash128 { hi: 8, lo: 10 };
+        assert!(cache.get(k1).is_none());
+        cache.insert(k1, &counts(1));
+        cache.insert(k1, &counts(1)); // idempotent: one insertion
+        assert_eq!(cache.get(k1), Some(counts(1)));
+        assert!(cache.get(k2).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.insertions, s.evictions), (1, 2, 1, 0));
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.bytes, ENTRY_COST as u64);
+        assert_eq!(cache.len(), 1);
+        assert!(!cache.is_empty());
+    }
+
+    #[test]
+    fn persistent_store_round_trips_across_reopen() {
+        let dir = std::env::temp_dir().join(format!(
+            "salcache-rt-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let keys: Vec<Hash128> =
+            (0..10u64).map(|i| Hash128 { hi: i.wrapping_mul(0x9e37), lo: i }).collect();
+        {
+            let cache = ResultCache::persistent(1 << 20, &dir).unwrap();
+            for (i, &k) in keys.iter().enumerate() {
+                cache.insert(k, &counts(i as u64));
+            }
+            assert_eq!(cache.stats().insertions, 10);
+        }
+        let reopened = ResultCache::persistent(1 << 20, &dir).unwrap();
+        assert_eq!(reopened.len(), 10);
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(reopened.get(k), Some(counts(i as u64)), "key {i}");
+        }
+        // Loads are not traffic: only the 10 probe hits above count.
+        let s = reopened.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (10, 0, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_tail_is_dropped_and_trimmed() {
+        let dir = std::env::temp_dir().join(format!(
+            "salcache-tail-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let k = Hash128 { hi: 3, lo: 4 };
+        {
+            let cache = ResultCache::persistent(1 << 20, &dir).unwrap();
+            cache.insert(k, &counts(7));
+            cache.insert(Hash128 { hi: 5, lo: 6 }, &counts(8));
+        }
+        let path = dir.join(STORE_FILE);
+        // Crash mid-append: tear the final record.
+        let full = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(full as usize, HEADER_LEN + 2 * RECORD_LEN);
+        let file = OpenOptions::new().write(true).open(&path).unwrap();
+        file.set_len(full - (RECORD_LEN as u64) / 2).unwrap();
+        drop(file);
+
+        let reopened = ResultCache::persistent(1 << 20, &dir).unwrap();
+        assert_eq!(reopened.len(), 1, "whole record survives, torn tail dropped");
+        assert_eq!(reopened.get(k), Some(counts(7)));
+        // The reload trimmed the torn bytes: the log is back on a
+        // record boundary and keeps appending cleanly.
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len() as usize,
+            HEADER_LEN + RECORD_LEN
+        );
+        reopened.insert(Hash128 { hi: 9, lo: 9 }, &counts(9));
+        drop(reopened);
+        let third = ResultCache::persistent(1 << 20, &dir).unwrap();
+        assert_eq!(third.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_or_foreign_header_starts_fresh_not_misread() {
+        let dir = std::env::temp_dir().join(format!(
+            "salcache-hdr-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(STORE_FILE);
+        // A plausible-length file under a future schema version.
+        let mut stale = encode_header().to_vec();
+        stale[4..8].copy_from_slice(&(STORE_VERSION + 1).to_le_bytes());
+        stale.extend_from_slice(&vec![0xAB; 2 * RECORD_LEN]);
+        std::fs::write(&path, &stale).unwrap();
+
+        let cache = ResultCache::persistent(1 << 20, &dir).unwrap();
+        assert!(cache.is_empty(), "stale schema must be ignored, not decoded");
+        cache.insert(Hash128 { hi: 1, lo: 2 }, &counts(3));
+        drop(cache);
+        let reopened = ResultCache::persistent(1 << 20, &dir).unwrap();
+        assert_eq!(reopened.len(), 1, "restarted log is valid current-schema");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn record_codec_round_trips_every_field() {
+        let mut c = ActivityCounts::default();
+        for (i, w) in counts_to_words(&c).iter().enumerate() {
+            assert_eq!(*w, 0, "field {i}");
+        }
+        // Distinct primes per field expose any order swap.
+        let words: [u64; COUNT_FIELDS] =
+            std::array::from_fn(|i| (i as u64 + 2) * 7919);
+        c = counts_from_words(&words);
+        assert_eq!(counts_to_words(&c), words);
+        let mut rec = Vec::new();
+        let key = Hash128 { hi: u64::MAX, lo: 1 };
+        rec.extend_from_slice(&key.hi.to_le_bytes());
+        rec.extend_from_slice(&key.lo.to_le_bytes());
+        for w in words {
+            rec.extend_from_slice(&w.to_le_bytes());
+        }
+        let (k2, c2) = decode_record(&rec);
+        assert_eq!(k2, key);
+        assert_eq!(c2, c);
+    }
+}

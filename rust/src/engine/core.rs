@@ -77,6 +77,7 @@ use crate::sa::{Dataflow, SaConfig, TileBuffers};
 use crate::workload::{Layer, LayerKind, Network};
 
 use super::backend::{BackendKind, EstimatorBackend};
+use super::cache::{CachePolicy, CacheStats, CachingBackend, ResultCache};
 use super::error::{EngineError, EngineResult, TileFault};
 use super::fault::{FaultPlan, FaultStage};
 use super::registry::ConfigSet;
@@ -323,7 +324,14 @@ impl JobHandle {
 struct EngineShared {
     opts: AnalysisOptions,
     configs: ConfigSet,
+    /// The estimator every path prices through. When a cache is
+    /// enabled this is the [`CachingBackend`] wrapper around the
+    /// configured backend, so both the pooled price stage and the
+    /// synchronous `analyze` path consult the store through one seam.
     backend: Arc<dyn EstimatorBackend>,
+    /// The result store behind `backend`'s wrapper (stats access;
+    /// `None` when [`CachePolicy::Off`]).
+    cache: Option<Arc<ResultCache>>,
     fault: FaultPlan,
     tile_failure: TileFailurePolicy,
 }
@@ -792,6 +800,8 @@ pub struct SaEngineBuilder {
     timeout: Option<Duration>,
     tile_failure: TileFailurePolicy,
     fault_plan: FaultPlan,
+    cache: CachePolicy,
+    cache_store: Option<Arc<ResultCache>>,
 }
 
 impl Default for SaEngineBuilder {
@@ -806,6 +816,8 @@ impl Default for SaEngineBuilder {
             timeout: None,
             tile_failure: TileFailurePolicy::default(),
             fault_plan: FaultPlan::none(),
+            cache: CachePolicy::Off,
+            cache_store: None,
         }
     }
 }
@@ -914,6 +926,27 @@ impl SaEngineBuilder {
         self
     }
 
+    /// Result-cache policy (default [`CachePolicy::Off`]). With a
+    /// cache enabled, every estimator lookup is content-addressed
+    /// through the store first; hits skip `estimate_many` entirely and
+    /// are byte-identical to recomputation (see `engine::cache`).
+    /// [`CachePolicy::Persistent`] loads the on-disk log during
+    /// [`SaEngineBuilder::build`]; an unusable directory is an
+    /// [`EngineError::InvalidSpec`] at build time.
+    pub fn cache(mut self, policy: CachePolicy) -> Self {
+        self.cache = policy;
+        self
+    }
+
+    /// Share an existing result store (e.g. across the many engines of
+    /// one `serve` process). Takes precedence over
+    /// [`SaEngineBuilder::cache`]: the policy that built `store`
+    /// governs.
+    pub fn cache_store(mut self, store: Arc<ResultCache>) -> Self {
+        self.cache_store = Some(store);
+        self
+    }
+
     /// Validate the configuration, spawn the worker pool and finish the
     /// engine.
     pub fn build(self) -> EngineResult<SaEngine> {
@@ -933,10 +966,22 @@ impl SaEngineBuilder {
                 "queue capacity must be >= 1 (0 admits no job)".into(),
             ));
         }
+        let cache = match self.cache_store {
+            Some(store) => Some(store),
+            None => ResultCache::from_policy(&self.cache)?,
+        };
+        let backend = match &cache {
+            Some(store) => Arc::new(CachingBackend::new(
+                self.backend,
+                Arc::clone(store),
+            )) as Arc<dyn EstimatorBackend>,
+            None => self.backend,
+        };
         let shared = Arc::new(EngineShared {
             opts: self.opts,
             configs: self.configs,
-            backend: self.backend,
+            backend,
+            cache,
             fault: self.fault_plan,
             tile_failure: self.tile_failure,
         });
@@ -1032,6 +1077,19 @@ impl SaEngine {
         timeout: Option<Duration>,
     ) -> EngineResult<JobHandle> {
         job.validate()?;
+        if let Some(t) = timeout {
+            // Reject unmeetable deadlines at admission: a zero or
+            // sub-millisecond limit would expire every tile before the
+            // pool could touch it, surfacing as a baffling
+            // `Timeout{limit: 0}` after real queueing work. The caller
+            // error it actually is comes back immediately instead.
+            if t < Duration::from_millis(1) {
+                return Err(EngineError::InvalidSpec(format!(
+                    "timeout {t:?} is below the 1ms floor (a \
+                     sub-millisecond deadline cannot admit any work)"
+                )));
+            }
+        }
         let pool = &self.pool;
         if !pool.accepting.load(Ordering::SeqCst) {
             return Err(EngineError::PoolShutdown);
@@ -1050,13 +1108,32 @@ impl SaEngine {
         Ok(JobHandle { layer_index, state, rx })
     }
 
+    /// Cache effectiveness counters of the engine's result store;
+    /// `None` when the cache is [`CachePolicy::Off`]. A snapshot of the
+    /// *store* (shared stores aggregate every attached engine's
+    /// traffic).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.pool.shared.cache.as_ref().map(|c| c.stats())
+    }
+
     /// Analyze every layer of `net` (synthetic data) across the pool and
     /// return the merged, layer-ordered report. On the first failure the
     /// remaining jobs are cancelled and the error is returned.
     pub fn sweep(&self, net: &Network) -> EngineResult<SweepReport> {
+        self.sweep_with_timeout(net, self.timeout)
+    }
+
+    /// [`SaEngine::sweep`] with an explicit per-job deadline override
+    /// for every layer job (`None` = no deadline, regardless of the
+    /// builder default).
+    pub fn sweep_with_timeout(
+        &self,
+        net: &Network,
+        timeout: Option<Duration>,
+    ) -> EngineResult<SweepReport> {
         let mut handles = Vec::with_capacity(net.layers.len());
         for (i, l) in net.layers.iter().enumerate() {
-            match self.submit(LayerJob::synthetic(l.clone(), i)) {
+            match self.submit_with_timeout(LayerJob::synthetic(l.clone(), i), timeout) {
                 Ok(h) => handles.push(h),
                 Err(e) => {
                     for h in &handles {
@@ -1086,6 +1163,7 @@ impl SaEngine {
             network: net.name.clone(),
             backend: self.backend_name().to_string(),
             dataflow: self.dataflow().name().to_string(),
+            cache: self.cache_stats(),
             layers,
         })
     }
@@ -1218,6 +1296,102 @@ mod tests {
         // the pool is unharmed by rejected submissions
         assert_eq!(e.pending_jobs(), 0);
         assert!(e.submit(LayerJob::synthetic(l.clone(), 1)).unwrap().wait().is_ok());
+    }
+
+    #[test]
+    fn sub_millisecond_deadlines_are_rejected_at_admission() {
+        let e = small_engine(1, BackendKind::Analytic);
+        let l = &tinycnn().layers[1];
+        for t in [Duration::ZERO, Duration::from_micros(999)] {
+            match e.submit_with_timeout(LayerJob::synthetic(l.clone(), 1), Some(t)) {
+                Err(EngineError::InvalidSpec(m)) => {
+                    assert!(m.contains("1ms floor"), "{m}")
+                }
+                other => panic!(
+                    "timeout {t:?} must be InvalidSpec, got {:?}",
+                    other.err()
+                ),
+            }
+        }
+        // the builder-level default passes through the same gate
+        match SaEngine::builder()
+            .default_timeout(Duration::from_micros(1))
+            .build()
+            .unwrap()
+            .submit(LayerJob::synthetic(l.clone(), 1))
+        {
+            Err(EngineError::InvalidSpec(_)) => {}
+            other => panic!("expected InvalidSpec, got {:?}", other.err()),
+        }
+        // nothing was admitted, and the floor itself is admissible
+        assert_eq!(e.pending_jobs(), 0);
+        let h = e
+            .submit_with_timeout(
+                LayerJob::synthetic(l.clone(), 1),
+                Some(Duration::from_millis(1)),
+            )
+            .unwrap();
+        // Completing or timing out are both legal at the floor; either
+        // way the outcome is a clean typed delivery.
+        match h.wait() {
+            Ok(_) | Err(EngineError::Timeout { .. }) => {}
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+
+    #[test]
+    fn cache_policy_populates_the_store_and_reuses_it() {
+        let net = tinycnn();
+        let e = SaEngine::builder()
+            .max_tiles_per_layer(2)
+            .threads(2)
+            .cache(CachePolicy::Memory { budget: 16 << 20 })
+            .build()
+            .unwrap();
+        assert_eq!(
+            e.cache_stats(),
+            Some(CacheStats::default()),
+            "a fresh store has no traffic"
+        );
+        let cold = e.sweep(&net).unwrap();
+        let cold_stats = cold.cache.expect("cache provenance present");
+        assert!(cold_stats.insertions > 0);
+        assert!(cold_stats.misses > 0);
+        let warm = e.sweep(&net).unwrap();
+        let warm_stats = warm.cache.expect("cache provenance present");
+        assert!(warm_stats.hits > cold_stats.hits, "warm run must hit");
+        assert_eq!(
+            warm_stats.misses, cold_stats.misses,
+            "a repeated sweep misses nothing new"
+        );
+        assert_eq!(
+            warm_stats.insertions, cold_stats.insertions,
+            "a repeated sweep inserts nothing new"
+        );
+        // provenance is off when the cache is off
+        let plain = small_engine(2, BackendKind::Analytic);
+        assert_eq!(plain.cache_stats(), None);
+        assert!(plain.sweep(&net).unwrap().cache.is_none());
+    }
+
+    #[test]
+    fn engines_can_share_one_store() {
+        let net = tinycnn();
+        let store = ResultCache::memory(16 << 20);
+        let build = || {
+            SaEngine::builder()
+                .max_tiles_per_layer(2)
+                .threads(2)
+                .cache_store(Arc::clone(&store))
+                .build()
+                .unwrap()
+        };
+        let first = build().sweep(&net).unwrap().cache.unwrap();
+        assert!(first.insertions > 0);
+        // a *different* engine, same store: the work is already there
+        let second = build().sweep(&net).unwrap().cache.unwrap();
+        assert_eq!(second.insertions, first.insertions);
+        assert!(second.hits > first.hits);
     }
 
     #[test]

@@ -40,7 +40,13 @@
 //! `{"item","kind","error"}` rows. The key is emitted **only when
 //! non-empty**, so every fully successful report renders byte-identical
 //! to before faults existed and the schema tag stays v3 (the clean
-//! shape is still pinned by the golden test).
+//! shape is still pinned by the golden test). Reports produced with a
+//! result cache enabled carry a top-level
+//! `"cache": {"hits","misses","evictions","bytes"}` provenance object
+//! under the same convention — emitted **only when a cache ran**, so
+//! cache-off reports stay byte-identical to the golden, and cached
+//! numbers are byte-identical to recomputed ones by the cache's design
+//! (`engine::cache`).
 //! The bit-exactness migration contract: for every registry config the
 //! v3 counts equal the v2 counts field-for-field (the new comparator
 //! fields are 0 for every pre-stack design) — pinned by
@@ -256,6 +262,18 @@ impl SweepReport {
         o.push("network", self.network.as_str());
         o.push("backend", self.backend.as_str());
         o.push("dataflow", self.dataflow.as_str());
+        // Cache provenance only when a cache ran (the `faults`
+        // convention): cache-off reports stay byte-identical to the
+        // pinned v3 golden, and cached numbers are byte-identical to
+        // recomputed ones, so this key documents *how*, never *what*.
+        if let Some(c) = &self.cache {
+            let mut stats = Json::object();
+            stats.push("hits", c.hits);
+            stats.push("misses", c.misses);
+            stats.push("evictions", c.evictions);
+            stats.push("bytes", c.bytes);
+            o.push("cache", stats);
+        }
         o.push(
             "layers",
             Json::Arr(self.layers.iter().map(|l| l.to_json_value()).collect()),
@@ -304,6 +322,7 @@ mod tests {
             network: "unit".into(),
             backend: "cycle".into(),
             dataflow: "os".into(),
+            cache: None,
             layers: Vec::new(),
         };
         let doc = SweepDoc::parse(&report.to_json()).unwrap();
@@ -347,6 +366,51 @@ mod tests {
         assert_eq!(rows[0].get("item").unwrap().as_u64(), Some(2));
         assert_eq!(rows[0].get("kind").unwrap().as_str(), Some("backend"));
         assert!(rows[0].get("error").unwrap().as_str().unwrap().contains("injected"));
+    }
+
+    #[test]
+    fn cache_key_is_emitted_only_when_enabled() {
+        use crate::engine::CacheStats;
+        let mut report = SweepReport {
+            network: "unit".into(),
+            backend: "analytic".into(),
+            dataflow: "ws".into(),
+            cache: None,
+            layers: Vec::new(),
+        };
+        // cache off: no key (byte-stability with the pinned golden)
+        assert!(report.to_json_value().get("cache").is_none());
+        report.cache = Some(CacheStats {
+            hits: 12,
+            misses: 3,
+            insertions: 3,
+            evictions: 1,
+            bytes: 4096,
+            entries: 2,
+        });
+        let v = report.to_json_value();
+        let c = v.get("cache").expect("cache provenance");
+        assert_eq!(c.get("hits").unwrap().as_u64(), Some(12));
+        assert_eq!(c.get("misses").unwrap().as_u64(), Some(3));
+        assert_eq!(c.get("evictions").unwrap().as_u64(), Some(1));
+        assert_eq!(c.get("bytes").unwrap().as_u64(), Some(4096));
+        // the provenance object is the four advertised counters, no more
+        match c {
+            Json::Obj(pairs) => assert_eq!(pairs.len(), 4),
+            other => panic!("expected object, got {other:?}"),
+        }
+        // and it lands between provenance and payload in key order
+        match &v {
+            Json::Obj(pairs) => {
+                let keys: Vec<&str> =
+                    pairs.iter().map(|(k, _)| k.as_str()).collect();
+                assert_eq!(
+                    keys,
+                    ["schema", "network", "backend", "dataflow", "cache", "layers"]
+                );
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
     }
 
     #[test]

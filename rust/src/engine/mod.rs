@@ -1,7 +1,7 @@
 //! The unified power-analysis engine — the one public entry point for
 //! everything that estimates SA power.
 //!
-//! Built from six pieces:
+//! Built from eight pieces:
 //!
 //! * [`registry`] — the typed configuration registry: one static table
 //!   ([`CONFIG_TABLE`]) of named **coding-stack descriptors** (each row
@@ -28,6 +28,18 @@
 //!   deterministic plan order), panic isolation per work item, bounded
 //!   admission ([`AdmissionPolicy`]), per-job deadlines,
 //!   [`JobHandle::cancel`] and graceful [`SaEngine::drain`].
+//! * [`cache`] — the content-addressed result cache ([`ResultCache`]):
+//!   tile activity keyed by (bit-pattern × dataflow), priced results by
+//!   (activity key × canonical stack spec × backend kind); a sharded
+//!   byte-budgeted LRU, optionally persisted to a crash-tolerant
+//!   append-only log, selected per engine via [`CachePolicy`]. Cache
+//!   hits skip `estimate_many` entirely and are byte-identical to
+//!   recomputation.
+//! * [`serve`] — sweep-as-a-service: the loop behind the `serve` CLI
+//!   subcommand. Line-delimited [`JobSpec`]s in, one compact v3 report
+//!   JSON line per job out, engines keyed per (backend × dataflow ×
+//!   configs × sampling) over one shared result store; job failures
+//!   become per-line error records instead of process exit.
 //! * [`json`] — serde-free JSON serialization of
 //!   [`SweepReport`](crate::coordinator::SweepReport) /
 //!   [`LayerReport`](crate::coordinator::LayerReport) /
@@ -60,14 +72,19 @@
 //! ```
 
 mod backend;
+mod cache;
 // `self::` disambiguates from the `core` crate under uniform paths.
 mod core;
 mod error;
 mod fault;
 mod json;
 mod registry;
+mod serve;
 
 pub use self::backend::{AnalyticBackend, BackendKind, CycleBackend, EstimatorBackend};
+pub use self::cache::{
+    activity_key, config_key, CachePolicy, CacheStats, ResultCache,
+};
 pub use self::core::{
     AdmissionPolicy, JobHandle, LayerData, LayerJob, SaEngine, SaEngineBuilder,
     TileFailurePolicy, MAX_THREADS,
@@ -78,3 +95,6 @@ pub use self::json::{
     SweepDoc, SWEEP_REPORT_SCHEMA, SWEEP_REPORT_SCHEMA_V1, SWEEP_REPORT_SCHEMA_V2,
 };
 pub use self::registry::{ConfigEntry, ConfigRegistry, ConfigSet, CONFIG_TABLE};
+pub use self::serve::{
+    serve_loop, JobSpec, ServeOptions, ServeSummary, SERVE_ERROR_SCHEMA,
+};

@@ -1,0 +1,464 @@
+//! Sweep-as-a-service: the loop behind the `serve` CLI subcommand.
+//!
+//! Reads line-delimited job specs from a reader (the CLI wires stdin),
+//! runs each as a full-network sweep on a pool of persistent engines,
+//! and streams exactly one compact JSON line per job to a writer (the
+//! CLI wires stdout): a v3 sweep-report document on success (with cache
+//! provenance — see `engine::cache`), or a
+//! [`SERVE_ERROR_SCHEMA`] record on failure. Job failures are **data**,
+//! not process exits: a malformed spec or a timed-out sweep produces an
+//! error line carrying the [`EngineError::kind`] tag, and the loop
+//! keeps serving. The loop drains cleanly on EOF and on a hung-up
+//! consumer (EPIPE from a closed pipe — `head -1` downstream must not
+//! crash the service).
+//!
+//! ## Job-spec grammar
+//!
+//! One job per line; blank lines and `#` comments are skipped. A spec
+//! is whitespace-separated `key=value` tokens, order-free:
+//!
+//! ```text
+//! net=<resnet50|mobilenet|tinycnn|transformer>   (required)
+//! configs=<paper|ablation|all|name;name;...>     (default paper)
+//! dataflow=<ws|os>                               (default ws)
+//! backend=<analytic|cycle>                       (default analytic)
+//! tiles=<max tiles per layer GEMM>               (default 8)
+//! seed=<u64 synthetic-data seed>                 (default engine default)
+//! timeout_ms=<per-layer-job deadline>            (default none; >= 1)
+//! ```
+//!
+//! `configs` entries are registry names or canonical `--coding` specs,
+//! separated by `;` (a spec itself may contain `,` between edges, so
+//! the list separator must differ).
+//!
+//! ## Engine reuse and the shared store
+//!
+//! Engines are keyed by every axis that shapes their results (backend ×
+//! dataflow × configs × tiles × seed) and kept for the life of the
+//! loop, so repeated jobs reuse warm worker pools. All engines share
+//! **one** result store, so a tile priced for one job is a cache hit
+//! for every later job that streams the same bits — across dataflows
+//! and backends the keys differ by construction, so sharing is safe.
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::workload::Network;
+
+use super::backend::BackendKind;
+use super::cache::{CachePolicy, CacheStats, ResultCache};
+use super::core::SaEngine;
+use super::error::{EngineError, EngineResult};
+use super::registry::ConfigSet;
+use crate::coordinator::SweepReport;
+use crate::sa::Dataflow;
+
+/// Schema tag of per-job error records emitted by [`serve_loop`].
+pub const SERVE_ERROR_SCHEMA: &str = "sa-lowpower.serve-error.v1";
+
+/// One parsed job line. See the module docs for the grammar.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Workload network name ([`Network::by_name`]).
+    pub net: String,
+    /// `;`-separated registry names / coding specs, or a set keyword.
+    pub configs: String,
+    pub backend: BackendKind,
+    pub dataflow: Dataflow,
+    /// Max tiles sampled per layer GEMM.
+    pub tiles: usize,
+    /// Synthetic-data seed (`None` = the engine default).
+    pub seed: Option<u64>,
+    /// Per-layer-job deadline (subject to the engine's 1ms floor).
+    pub timeout: Option<Duration>,
+}
+
+impl JobSpec {
+    /// Parse one non-empty job line. Every failure is
+    /// [`EngineError::InvalidSpec`] with the offending token named.
+    pub fn parse(line: &str) -> EngineResult<JobSpec> {
+        let bad = |m: String| EngineError::InvalidSpec(m);
+        let mut spec = JobSpec {
+            net: String::new(),
+            configs: "paper".to_string(),
+            backend: BackendKind::Analytic,
+            dataflow: Dataflow::WeightStationary,
+            tiles: 8,
+            seed: None,
+            timeout: None,
+        };
+        for token in line.split_whitespace() {
+            let (key, value) = token.split_once('=').ok_or_else(|| {
+                bad(format!(
+                    "job token '{token}' is not key=value (keys: net, \
+                     configs, dataflow, backend, tiles, seed, timeout_ms)"
+                ))
+            })?;
+            match key {
+                "net" => spec.net = value.to_string(),
+                "configs" => spec.configs = value.to_string(),
+                "backend" => {
+                    spec.backend = value.parse::<BackendKind>().map_err(bad)?
+                }
+                "dataflow" => {
+                    spec.dataflow = value.parse::<Dataflow>().map_err(bad)?
+                }
+                "tiles" => {
+                    spec.tiles = value.parse::<usize>().map_err(|e| {
+                        bad(format!("tiles '{value}': {e}"))
+                    })?;
+                    if spec.tiles == 0 {
+                        return Err(bad("tiles must be >= 1".to_string()));
+                    }
+                }
+                "seed" => {
+                    spec.seed = Some(value.parse::<u64>().map_err(|e| {
+                        bad(format!("seed '{value}': {e}"))
+                    })?)
+                }
+                "timeout_ms" => {
+                    let ms = value.parse::<u64>().map_err(|e| {
+                        bad(format!("timeout_ms '{value}': {e}"))
+                    })?;
+                    spec.timeout = Some(Duration::from_millis(ms));
+                }
+                other => {
+                    return Err(bad(format!(
+                        "unknown job key '{other}' (keys: net, configs, \
+                         dataflow, backend, tiles, seed, timeout_ms)"
+                    )))
+                }
+            }
+        }
+        if spec.net.is_empty() {
+            return Err(bad("job spec is missing net=<network>".to_string()));
+        }
+        Ok(spec)
+    }
+
+    /// Resolve the `configs` value into a [`ConfigSet`].
+    pub fn config_set(&self) -> EngineResult<ConfigSet> {
+        match self.configs.as_str() {
+            "paper" => Ok(ConfigSet::paper()),
+            "ablation" => Ok(ConfigSet::ablation()),
+            "all" => Ok(ConfigSet::all()),
+            list => ConfigSet::from_names(list.split(';'))
+                .map_err(EngineError::InvalidSpec),
+        }
+    }
+
+    /// The engine-pool key: every axis that shapes this job's engine.
+    fn engine_key(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{:?}",
+            self.backend.name(),
+            self.dataflow.name(),
+            self.configs,
+            self.tiles,
+            self.seed
+        )
+    }
+}
+
+/// Configuration of one [`serve_loop`] run.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Worker threads per engine.
+    pub threads: usize,
+    /// The shared result store's policy. The default `serve` CLI runs
+    /// [`CachePolicy::Memory`] so repeated jobs hit; pass
+    /// [`CachePolicy::Off`] to benchmark cold costs.
+    pub cache: CachePolicy,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            threads: 2,
+            cache: CachePolicy::Memory { budget: 64 << 20 },
+        }
+    }
+}
+
+/// What one [`serve_loop`] run did (logged by the CLI on exit, to
+/// stderr — stdout carries only report lines).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeSummary {
+    /// Job lines consumed (comments and blanks excluded).
+    pub jobs: u64,
+    /// Jobs that produced a report line.
+    pub completed: u64,
+    /// Jobs that produced an error record.
+    pub failed: u64,
+    /// Final counters of the shared store (`None` under
+    /// [`CachePolicy::Off`]).
+    pub cache: Option<CacheStats>,
+}
+
+/// Run the service loop until `input` reaches EOF or `output` hangs up.
+///
+/// Only *setup* failures (an unusable persistent-cache directory) are
+/// returned as errors; per-job failures stream as error records. I/O
+/// errors on `output` (EPIPE after a consumer exits) end the loop
+/// cleanly — by then nobody is listening.
+pub fn serve_loop<R: BufRead, W: Write>(
+    input: R,
+    mut output: W,
+    opts: &ServeOptions,
+) -> EngineResult<ServeSummary> {
+    let store = ResultCache::from_policy(&opts.cache)?;
+    let mut engines: HashMap<String, SaEngine> = HashMap::new();
+    let mut summary = ServeSummary::default();
+    for (line_no, line) in input.lines().enumerate() {
+        let line = match line {
+            Ok(l) => l,
+            // A read error on stdin (closed terminal, broken upstream
+            // pipe) is EOF for our purposes: drain, don't crash.
+            Err(_) => break,
+        };
+        let text = line.trim();
+        if text.is_empty() || text.starts_with('#') {
+            continue;
+        }
+        summary.jobs += 1;
+        let outcome = JobSpec::parse(text)
+            .and_then(|spec| run_job(&mut engines, &store, opts.threads, &spec));
+        let rendered = match outcome {
+            Ok(report) => {
+                summary.completed += 1;
+                report.to_json_value().render_compact()
+            }
+            Err(e) => {
+                summary.failed += 1;
+                error_record(line_no + 1, text, &e)
+            }
+        };
+        // One line per job, flushed so a consumer pipeline sees it
+        // immediately; a write failure means the consumer hung up.
+        if writeln!(output, "{rendered}").and_then(|_| output.flush()).is_err() {
+            break;
+        }
+    }
+    summary.cache = store.as_ref().map(|s| s.stats());
+    Ok(summary)
+}
+
+/// Run one job, building (and keeping) its engine on first use. Every
+/// engine shares `store`, so later jobs hit results priced by earlier
+/// ones.
+fn run_job(
+    engines: &mut HashMap<String, SaEngine>,
+    store: &Option<Arc<ResultCache>>,
+    threads: usize,
+    spec: &JobSpec,
+) -> EngineResult<SweepReport> {
+    let net = Network::by_name(&spec.net).ok_or_else(|| {
+        EngineError::InvalidSpec(format!(
+            "unknown network '{}'; available: {}",
+            spec.net,
+            Network::name_list()
+        ))
+    })?;
+    let key = spec.engine_key();
+    if !engines.contains_key(&key) {
+        let mut builder = SaEngine::builder()
+            .max_tiles_per_layer(spec.tiles)
+            .configs(spec.config_set()?)
+            .backend(spec.backend)
+            .dataflow(spec.dataflow)
+            .threads(threads);
+        if let Some(seed) = spec.seed {
+            builder = builder.seed(seed);
+        }
+        if let Some(store) = store {
+            builder = builder.cache_store(Arc::clone(store));
+        }
+        engines.insert(key.clone(), builder.build()?);
+    }
+    let engine = &engines[&key];
+    engine.sweep_with_timeout(&net, spec.timeout)
+}
+
+/// One failure as a data record: which input line, what kind
+/// ([`EngineError::kind`] — the same stable tags the CLI maps to exit
+/// codes), the message, and the spec text for correlation.
+fn error_record(line_no: usize, spec_text: &str, e: &EngineError) -> String {
+    let mut o = Json::object();
+    o.push("schema", SERVE_ERROR_SCHEMA);
+    o.push("line", line_no);
+    o.push("kind", e.kind());
+    o.push("error", e.to_string());
+    o.push("spec", spec_text);
+    o.render_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serve_str(input: &str, opts: &ServeOptions) -> (Vec<String>, ServeSummary) {
+        let mut out: Vec<u8> = Vec::new();
+        let summary = serve_loop(input.as_bytes(), &mut out, opts).unwrap();
+        let lines = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(str::to_string)
+            .collect();
+        (lines, summary)
+    }
+
+    fn small() -> ServeOptions {
+        ServeOptions { threads: 2, cache: CachePolicy::Memory { budget: 32 << 20 } }
+    }
+
+    #[test]
+    fn job_spec_grammar_round_trips() {
+        let spec = JobSpec::parse(
+            "net=tinycnn configs=baseline;proposed dataflow=os \
+             backend=cycle tiles=2 seed=7 timeout_ms=5000",
+        )
+        .unwrap();
+        assert_eq!(spec.net, "tinycnn");
+        assert_eq!(spec.backend, BackendKind::Cycle);
+        assert_eq!(spec.dataflow, Dataflow::OutputStationary);
+        assert_eq!(spec.tiles, 2);
+        assert_eq!(spec.seed, Some(7));
+        assert_eq!(spec.timeout, Some(Duration::from_millis(5000)));
+        assert_eq!(spec.config_set().unwrap().names(), ["baseline", "proposed"]);
+
+        // defaults
+        let d = JobSpec::parse("net=tinycnn").unwrap();
+        assert_eq!(d.backend, BackendKind::Analytic);
+        assert_eq!(d.dataflow, Dataflow::WeightStationary);
+        assert_eq!(d.configs, "paper");
+        assert_eq!((d.tiles, d.seed, d.timeout), (8, None, None));
+
+        // a coding spec with commas survives the `;` list separator
+        let s = JobSpec::parse("net=tinycnn configs=baseline;w:zvcg,i:zvcg").unwrap();
+        let names = s.config_set().unwrap().names();
+        assert_eq!(names.len(), 2);
+        assert!(names[1].contains("zvcg"), "{names:?}");
+    }
+
+    #[test]
+    fn job_spec_rejections_are_invalid_spec() {
+        for (line, what) in [
+            ("tinycnn", "bare token"),
+            ("net=tinycnn backend=quantum", "unknown backend"),
+            ("net=tinycnn dataflow=diagonal", "unknown dataflow"),
+            ("net=tinycnn tiles=0", "zero tiles"),
+            ("net=tinycnn tiles=lots", "non-numeric tiles"),
+            ("net=tinycnn color=red", "unknown key"),
+            ("configs=paper", "missing net"),
+        ] {
+            match JobSpec::parse(line) {
+                Err(EngineError::InvalidSpec(_)) => {}
+                other => panic!("{what} must be InvalidSpec, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn serve_streams_one_line_per_job_and_warm_jobs_hit() {
+        let input = "\
+# two identical jobs: the second must be served from the cache
+net=tinycnn tiles=2
+
+net=tinycnn tiles=2
+";
+        let (lines, summary) = serve_str(input, &small());
+        assert_eq!(lines.len(), 2);
+        assert_eq!((summary.jobs, summary.completed, summary.failed), (2, 2, 0));
+        let first = Json::parse(&lines[0]).unwrap();
+        let second = Json::parse(&lines[1]).unwrap();
+        assert_eq!(
+            first.get("schema").unwrap().as_str(),
+            Some(crate::engine::SWEEP_REPORT_SCHEMA)
+        );
+        let hits = |v: &Json| {
+            v.get("cache").unwrap().get("hits").unwrap().as_u64().unwrap()
+        };
+        assert!(hits(&second) > hits(&first), "warm job must report cache hits");
+        assert!(hits(&second) > 0);
+        // identical payloads modulo the cache provenance object
+        let strip = |v: &Json| match v {
+            Json::Obj(pairs) => Json::Obj(
+                pairs.iter().filter(|(k, _)| k != "cache").cloned().collect(),
+            ),
+            other => other.clone(),
+        };
+        assert_eq!(strip(&first), strip(&second), "cached == recomputed");
+        assert!(summary.cache.unwrap().hits > 0);
+    }
+
+    #[test]
+    fn job_failures_are_records_not_exits() {
+        let input = "\
+net=tinycnn tiles=1
+net=atlantis
+nonsense line here
+net=tinycnn tiles=1
+";
+        let (lines, summary) = serve_str(input, &small());
+        assert_eq!(lines.len(), 4, "every job answers, failures included");
+        assert_eq!((summary.jobs, summary.completed, summary.failed), (4, 2, 2));
+        let err = Json::parse(&lines[1]).unwrap();
+        assert_eq!(err.get("schema").unwrap().as_str(), Some(SERVE_ERROR_SCHEMA));
+        assert_eq!(err.get("kind").unwrap().as_str(), Some("invalid-spec"));
+        assert_eq!(err.get("line").unwrap().as_u64(), Some(2));
+        assert!(err.get("error").unwrap().as_str().unwrap().contains("atlantis"));
+        assert_eq!(err.get("spec").unwrap().as_str(), Some("net=atlantis"));
+        let err2 = Json::parse(&lines[2]).unwrap();
+        assert_eq!(err2.get("kind").unwrap().as_str(), Some("invalid-spec"));
+        // the loop kept serving after the failures
+        let last = Json::parse(&lines[3]).unwrap();
+        assert_eq!(last.get("network").unwrap().as_str(), Some("tinycnn"));
+    }
+
+    #[test]
+    fn engines_are_reused_per_axis_and_share_the_store() {
+        // Same tile bits under two config sets: the second job's
+        // engine differs (different key) but shares the store, so the
+        // overlapping "baseline"/"proposed" results hit.
+        let input = "\
+net=tinycnn tiles=2 configs=paper
+net=tinycnn tiles=2 configs=all
+";
+        let (lines, summary) = serve_str(input, &small());
+        assert_eq!((summary.completed, summary.failed), (2, 0));
+        let second = Json::parse(&lines[1]).unwrap();
+        let hits = second.get("cache").unwrap().get("hits").unwrap().as_u64();
+        assert!(hits.unwrap() > 0, "shared store must serve across engines");
+    }
+
+    #[test]
+    fn a_hung_up_consumer_ends_the_loop_cleanly() {
+        struct Closed;
+        impl Write for Closed {
+            fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::from(std::io::ErrorKind::BrokenPipe))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let input = "net=tinycnn tiles=1\nnet=tinycnn tiles=1\n";
+        let summary =
+            serve_loop(input.as_bytes(), &mut Closed, &small()).unwrap();
+        // first job ran, its write failed, the loop stopped — no panic,
+        // no error, no second job
+        assert_eq!(summary.jobs, 1);
+    }
+
+    #[test]
+    fn cache_off_serves_without_provenance() {
+        let opts = ServeOptions { threads: 1, cache: CachePolicy::Off };
+        let (lines, summary) = serve_str("net=tinycnn tiles=1\n", &opts);
+        let v = Json::parse(&lines[0]).unwrap();
+        assert!(v.get("cache").is_none());
+        assert_eq!(summary.cache, None);
+    }
+}

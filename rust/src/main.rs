@@ -12,6 +12,8 @@
 //! sa-lowpower simulate  [--m N] [--k N] [--n N] [--sparsity F] [--config C]
 //!                       [--backend analytic|cycle]
 //! sa-lowpower e2e       [--requests N] [--artifacts DIR] [--seed N]
+//! sa-lowpower serve     [--threads N] [--cache off|memory|persistent]
+//!                       [--cache-budget BYTES] [--cache-dir DIR]
 //! ```
 //!
 //! All power estimation routes through [`sa_lowpower::engine::SaEngine`];
@@ -25,8 +27,9 @@ use sa_lowpower::coordinator::{
     synthetic_image, AnalysisOptions, InferenceServer, SweepReport, TinycnnParams,
 };
 use sa_lowpower::engine::{
-    AnalyticBackend, BackendKind, ConfigRegistry, ConfigSet, CycleBackend,
-    EngineError, EstimatorBackend, FaultPlan, LayerJob, SaEngine,
+    serve_loop, AnalyticBackend, BackendKind, CachePolicy, ConfigRegistry,
+    ConfigSet, CycleBackend, EngineError, EstimatorBackend, FaultPlan, LayerJob,
+    SaEngine, ServeOptions,
 };
 use sa_lowpower::power::AreaModel;
 use sa_lowpower::report::{ablation_table, fig2_tables, fig45_table, headline_table, Table};
@@ -66,6 +69,7 @@ fn run(args: &Args) -> Result<()> {
         Some("area") => area(args),
         Some("simulate") => simulate(args),
         Some("e2e") => e2e(args),
+        Some("serve") => serve(args),
         Some("transformer") => transformer(args),
         Some("trace") => trace(args),
         Some("ddcg") => ddcg(args),
@@ -85,7 +89,7 @@ fn usage() -> String {
     format!(
         "usage: sa-lowpower <subcommand> [options]
   fig2 | fig4 | fig5 | headline | ablation | area   paper figures/claims
-  simulate | e2e | trace                            drivers
+  simulate | e2e | trace | serve                    drivers
   ddcg | pruning | sweep-size | transformer         extension experiments
   --config   one of: {configs}
   --coding   a composed codec-stack spec, e.g. 'w:zvcg+bic-mantissa,i:zvcg'
@@ -98,6 +102,10 @@ fn usage() -> String {
   --fault-inject SPEC            simulate only: arm deterministic faults
              (grammar: <panic|error|delay:<ms>>@<layer|*>:<tile>[@<stage>],
               stages plan|price|worker; ';'-separated sites)
+  --cache    serve only: off|memory|persistent result cache
+             (with --cache-budget BYTES and --cache-dir DIR);
+             job specs are 'key=value' lines on stdin, e.g.
+             'net=resnet50 configs=paper backend=analytic tiles=4'
 Typed engine failures exit with stable codes (invalid-spec=2 .. internal=10);
 see README 'Error handling & operational limits'.
 Reproduction of 'Low-Power Data Streaming in Systolic Arrays with Bus-Invert
@@ -787,6 +795,44 @@ fn e2e(args: &Args) -> Result<()> {
         server.metrics.requests(),
         server.metrics.mean_latency(),
         server.metrics.max_latency()
+    );
+    Ok(())
+}
+
+/// `serve`: sweep-as-a-service. Line-delimited job specs on stdin, one
+/// compact v3 report JSON line per job on stdout; job failures become
+/// per-line error records instead of process exit. All jobs share one
+/// content-addressed result store, so repeated shapes are priced once.
+/// See `engine::serve` and README "Running as a service".
+fn serve(args: &Args) -> Result<()> {
+    args.validate(&["threads", "cache", "cache-budget", "cache-dir"])
+        .map_err(|e| anyhow!(e))?;
+    let threads = args.get_parse("threads", 2usize).map_err(|e| anyhow!(e))?;
+    let budget =
+        args.get_parse("cache-budget", 64usize << 20).map_err(|e| anyhow!(e))?;
+    let cache = match args.get_or("cache", "memory") {
+        "off" => CachePolicy::Off,
+        "memory" => CachePolicy::Memory { budget },
+        "persistent" => CachePolicy::Persistent {
+            budget,
+            dir: args.get_or("cache-dir", ".sa-lowpower-cache").into(),
+        },
+        other => bail!("--cache must be off|memory|persistent, got '{other}'"),
+    };
+    let opts = ServeOptions { threads, cache };
+    // Summary and diagnostics go to stderr: stdout carries only report /
+    // error-record lines so the output stays machine-consumable.
+    let summary = serve_loop(std::io::stdin().lock(), std::io::stdout().lock(), &opts)?;
+    let cache_note = match summary.cache {
+        Some(c) => format!(
+            "; cache: {} hits, {} misses, {} evictions, {} entries, {} bytes",
+            c.hits, c.misses, c.evictions, c.entries, c.bytes
+        ),
+        None => String::new(),
+    };
+    eprintln!(
+        "serve: {} jobs, {} completed, {} failed{cache_note}",
+        summary.jobs, summary.completed, summary.failed
     );
     Ok(())
 }

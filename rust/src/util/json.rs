@@ -187,6 +187,48 @@ impl Json {
         }
     }
 
+    /// Render as single-line JSON (no whitespace, no trailing newline):
+    /// one value per line for line-delimited streams (the `serve`
+    /// loop). Scalar rendering is shared with [`Json::render`], so the
+    /// two forms are whitespace-reshapes of the same bytes —
+    /// `parse(render_compact(v)) == parse(render(v))`.
+    pub fn render_compact(&self) -> String {
+        let mut out = String::new();
+        self.render_compact_into(&mut out);
+        out
+    }
+
+    fn render_compact_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => render_num(*v, out),
+            Json::Str(s) => render_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_compact_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_str(k, out);
+                    out.push(':');
+                    v.render_compact_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     /// Parse a JSON document (the subset this crate emits plus standard
     /// escapes). Errors carry the byte offset of the problem.
     pub fn parse(text: &str) -> Result<Json, String> {
@@ -497,6 +539,29 @@ mod tests {
         assert!(Json::parse("{\"a\" 1}").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn compact_rendering_is_a_whitespace_reshape() {
+        let mut obj = Json::object();
+        obj.push("name", "serve");
+        obj.push("count", 42u64);
+        obj.push("arr", Json::Arr(vec![Json::from(1u64), Json::from(2.5)]));
+        obj.push("empty", Json::Arr(vec![]));
+        obj.push("nested", {
+            let mut n = Json::object();
+            n.push("s", "a\"b\n");
+            n
+        });
+        let compact = obj.render_compact();
+        assert!(!compact.contains('\n'), "{compact}");
+        assert_eq!(
+            compact,
+            r#"{"name":"serve","count":42,"arr":[1,2.5],"empty":[],"nested":{"s":"a\"b\n"}}"#
+        );
+        // same tree through either renderer
+        assert_eq!(Json::parse(&compact).unwrap(), Json::parse(&obj.render()).unwrap());
+        assert_eq!(Json::object().render_compact(), "{}");
     }
 
     #[test]

@@ -436,6 +436,64 @@ fn transformer_sweeps_agree_across_backends_and_dataflows() {
     }
 }
 
+// ---- cache clause: hits are byte-identical to recomputation ----------
+
+/// The result-cache contract (see `engine/cache.rs`): a sweep served
+/// from the cache renders the same report, byte for byte, as the same
+/// sweep recomputed — across the full backend × dataflow matrix. Only
+/// the provenance stats may differ, so the clause nulls them out before
+/// comparing and asserts on them separately.
+#[test]
+fn cached_sweeps_are_byte_identical_to_cache_off() {
+    use sa_lowpower::engine::CachePolicy;
+    let net = Network::by_name("transformer").unwrap();
+    for kind in [BackendKind::Analytic, BackendKind::Cycle] {
+        for df in [WS, OS] {
+            let engine_with = |cache: CachePolicy| {
+                SaEngine::builder()
+                    .max_tiles_per_layer(1)
+                    .backend(kind)
+                    .dataflow(df)
+                    .threads(2)
+                    .cache(cache)
+                    .build()
+                    .unwrap()
+            };
+            let off = engine_with(CachePolicy::Off).sweep(&net).unwrap();
+            assert!(off.cache.is_none(), "cache-off sweeps carry no stats");
+
+            // One cached engine, swept cold then warm.
+            let cached = engine_with(CachePolicy::Memory { budget: 16 << 20 });
+            let mut cold = cached.sweep(&net).unwrap();
+            let mut warm = cached.sweep(&net).unwrap();
+
+            let cold_stats = cold.cache.take().unwrap();
+            let warm_stats = warm.cache.take().unwrap();
+            assert!(cold_stats.misses > 0, "{kind:?} {df}: cold run must miss");
+            // Stats are cumulative over the engine's store: the warm
+            // sweep adds hits but not a single new miss or insertion.
+            assert!(
+                warm_stats.hits > cold_stats.hits,
+                "{kind:?} {df}: warm run must hit (warm {warm_stats:?} vs \
+                 cold {cold_stats:?})"
+            );
+            assert_eq!(
+                warm_stats.misses, cold_stats.misses,
+                "{kind:?} {df}: warm run must add no misses"
+            );
+            assert_eq!(
+                warm_stats.insertions, cold_stats.insertions,
+                "{kind:?} {df}: warm run must insert nothing"
+            );
+
+            // With provenance nulled, all three runs are byte-identical:
+            // a cache hit is indistinguishable from recomputation.
+            assert_eq!(off.to_json(), cold.to_json(), "{kind:?} {df} cold");
+            assert_eq!(off.to_json(), warm.to_json(), "{kind:?} {df} warm");
+        }
+    }
+}
+
 // ---- robustness clause: failures never perturb concurrent results ----
 
 /// A failed (here: panicked) job sharing the pool with a sweep must not

@@ -43,6 +43,7 @@ fn handmade_report() -> SweepReport {
         network: "unit".into(),
         backend: "analytic".into(),
         dataflow: "ws".into(),
+        cache: None,
         layers: vec![LayerReport {
             layer_name: "conv1".into(),
             layer_index: 0,
@@ -138,6 +139,7 @@ fn handmade_transformer_report() -> SweepReport {
         network: net.name.clone(),
         backend: "cycle".into(),
         dataflow: "os".into(),
+        cache: None,
         layers: vec![
             LayerReport {
                 layer_name: qkv.name.clone(),
@@ -477,6 +479,7 @@ fn sweep_metrics_survive_zero_energy_baseline() {
         network: "empty".into(),
         backend: "analytic".into(),
         dataflow: "ws".into(),
+        cache: None,
         layers: Vec::new(),
     };
     assert_eq!(empty.overall_savings_pct("baseline", "proposed"), 0.0);
