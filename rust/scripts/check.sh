@@ -133,8 +133,12 @@ echo "== serve loop smoke (sweep-as-a-service + result cache) =="
 # The same job spec piped twice: both jobs must produce one report line
 # each, the second must be served from the shared result store (nonzero
 # hits in its cache provenance), and the two reports must be
-# byte-identical once the run-varying cache-stats object is stripped —
-# the conformance clause, probed end-to-end through the binary.
+# byte-identical once the run-varying keys — the "line" tag and the
+# cache-stats object — are stripped: the conformance clause, probed
+# end-to-end through the binary.
+strip_run_varying() {
+    sed -e 's/"line":[0-9]*,//' -e 's/"cache":{[^}]*},//' "$@"
+}
 spec='net=tinycnn configs=paper backend=analytic tiles=2'
 printf '%s\n%s\n' "$spec" "$spec" \
     | cargo run --release -- serve --threads 2 \
@@ -143,10 +147,10 @@ if [ "$(wc -l <"$OUT_DIR/serve_smoke.out")" -ne 2 ]; then
     echo "FAIL: serve emitted $(wc -l <"$OUT_DIR/serve_smoke.out") lines for 2 jobs"
     exit 1
 fi
-sed 's/"cache":{[^}]*},//' "$OUT_DIR/serve_smoke.out" \
+strip_run_varying "$OUT_DIR/serve_smoke.out" \
     | sort -u >"$OUT_DIR/serve_smoke.uniq"
 if [ "$(wc -l <"$OUT_DIR/serve_smoke.uniq")" -ne 1 ]; then
-    echo "FAIL: repeated serve jobs differ beyond their cache stats"
+    echo "FAIL: repeated serve jobs differ beyond their line tag + cache stats"
     exit 1
 fi
 hits="$(sed -n '2p' "$OUT_DIR/serve_smoke.out" \
@@ -160,8 +164,75 @@ fi
 printf 'net=nonexistent\n' \
     | cargo run --release -- serve \
     >"$OUT_DIR/serve_badjob.out" 2>>"$OUT_DIR/serve_smoke.log"
-grep -q '"schema":"sa-lowpower.serve-error.v1"' "$OUT_DIR/serve_badjob.out"
+grep -q '"schema":"sa-lowpower.serve-error.v2"' "$OUT_DIR/serve_badjob.out"
 grep -q '"kind":"invalid-spec"' "$OUT_DIR/serve_badjob.out"
+
+echo "== concurrent serve smoke (--jobs 4 == --jobs 1, line for line) =="
+# Overlap must change only arrival order, never content: the same mixed
+# input (reports + one failure) under --jobs 4, sorted back into input
+# order by the per-line "line" tag and stripped of run-varying keys,
+# must be byte-identical to the sequential --jobs 1 run.
+SA_BIN="$RUST_DIR/target/release/sa-lowpower"
+{
+    printf 'net=tinycnn configs=paper backend=analytic tiles=2\n'
+    printf 'net=tinycnn configs=proposed;baseline tiles=2\n'
+    printf 'net=nonexistent\n'
+    printf 'net=tinycnn configs=baseline;proposed tiles=2\n'
+    printf 'net=tinycnn configs=paper backend=cycle tiles=2\n'
+} >"$OUT_DIR/serve_jobs.in"
+"$SA_BIN" serve --threads 2 --jobs 1 <"$OUT_DIR/serve_jobs.in" \
+    >"$OUT_DIR/serve_seq.out" 2>>"$OUT_DIR/serve_smoke.log"
+"$SA_BIN" serve --threads 2 --jobs 4 <"$OUT_DIR/serve_jobs.in" \
+    >"$OUT_DIR/serve_par.out" 2>>"$OUT_DIR/serve_smoke.log"
+# Key each line by its "line" tag, numeric-sort, drop the key: input order.
+sed 's/^.*"line":\([0-9]*\).*$/\1 &/' "$OUT_DIR/serve_par.out" \
+    | sort -n | cut -d' ' -f2- >"$OUT_DIR/serve_par.sorted"
+strip_run_varying "$OUT_DIR/serve_seq.out" >"$OUT_DIR/serve_seq.stripped"
+strip_run_varying "$OUT_DIR/serve_par.sorted" >"$OUT_DIR/serve_par.stripped"
+if ! cmp -s "$OUT_DIR/serve_seq.stripped" "$OUT_DIR/serve_par.stripped"; then
+    echo "FAIL: --jobs 4 output (sorted by line tag) differs from --jobs 1"
+    diff "$OUT_DIR/serve_seq.stripped" "$OUT_DIR/serve_par.stripped" || true
+    exit 1
+fi
+
+echo "== two-process shared-store smoke (advisory-locked persistent cache) =="
+# Two serve processes appending to one --cache-dir concurrently must
+# both run to completion and leave a whole-record log (lock-file
+# serialized appends, no torn records), which a third process can load
+# and serve hits from.
+STORE_DIR="$OUT_DIR/serve_store"
+rm -rf "$STORE_DIR"
+mkdir -p "$STORE_DIR"
+"$SA_BIN" serve --threads 2 --jobs 2 --cache persistent --cache-dir "$STORE_DIR" \
+    <"$OUT_DIR/serve_jobs.in" >"$OUT_DIR/serve_store_a.out" \
+    2>>"$OUT_DIR/serve_smoke.log" &
+pid_a=$!
+"$SA_BIN" serve --threads 2 --jobs 2 --cache persistent --cache-dir "$STORE_DIR" \
+    <"$OUT_DIR/serve_jobs.in" >"$OUT_DIR/serve_store_b.out" \
+    2>>"$OUT_DIR/serve_smoke.log" &
+pid_b=$!
+wait "$pid_a"
+wait "$pid_b"
+store_file="$STORE_DIR/cache.salcache"
+if [ ! -f "$store_file" ]; then
+    echo "FAIL: shared serve processes left no persistent store"
+    exit 1
+fi
+size="$(wc -c <"$store_file")"
+if [ "$size" -lt 16 ] || [ $(( (size - 16) % 200 )) -ne 0 ]; then
+    echo "FAIL: store is $size bytes — not a header plus whole records"
+    exit 1
+fi
+# A third process warm-starts from the shared log: first job already hits.
+printf 'net=tinycnn configs=paper backend=analytic tiles=2\n' \
+    | "$SA_BIN" serve --threads 2 --cache persistent --cache-dir "$STORE_DIR" \
+    >"$OUT_DIR/serve_store_c.out" 2>>"$OUT_DIR/serve_smoke.log"
+warm_hits="$(grep -o '"hits":[0-9]*' "$OUT_DIR/serve_store_c.out" \
+    | head -n1 | cut -d: -f2)"
+if [ -z "$warm_hits" ] || [ "$warm_hits" -eq 0 ]; then
+    echo "FAIL: warm-start from shared store got no hits (got '${warm_hits:-none}')"
+    exit 1
+fi
 
 echo "== perf smoke (hot paths) =="
 cargo bench --bench perf_hotpath 2>&1 | tee "$OUT_DIR/perf_hotpath.log"

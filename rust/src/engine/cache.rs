@@ -45,6 +45,24 @@
 //! [`SaEngineBuilder`](crate::engine::SaEngineBuilder); several engines
 //! can share one store (the `serve` loop does) via
 //! `SaEngineBuilder::cache_store`.
+//!
+//! ## Multiple writers
+//!
+//! Several *processes* may point `--cache-dir` at one directory. The
+//! record log is guarded by an advisory flock-style lock **file**
+//! (`cache.salcache.lock`, created with `O_EXCL`, deleted on release —
+//! std-only, no platform lock syscalls): the load-and-trim pass and
+//! every record append run under it, so records from concurrent
+//! writers interleave whole, never torn (each append re-seeks to the
+//! real end of file under the lock before writing). A lock left behind
+//! by a crashed process is stolen once it is older than
+//! [`STALE_LOCK_SECS`]. Locking is best-effort by design: a process
+//! that cannot take the lock at **load** degrades to a memory-only
+//! store ([`PersistenceMode::Degraded`], one stderr warning) rather
+//! than failing the run; an append that cannot take it counts a
+//! [`CacheStats::persist_failures`] for the lost record and moves on.
+//! Loads are point-in-time — records another process appends later are
+//! simply recomputed on miss, never clobbered.
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
@@ -53,6 +71,7 @@ use std::mem::size_of;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
 
 use crate::activity::ActivityCounts;
 use crate::bf16::as_bits;
@@ -134,6 +153,27 @@ pub struct CacheStats {
     pub bytes: u64,
     /// Live entries.
     pub entries: u64,
+    /// Records that could not be appended to the persistent log (write
+    /// failure, or the advisory lock stayed contended): each is a
+    /// priced result the *next* process will have to recompute.
+    /// Persistence is best-effort, so these never fail a sweep — but
+    /// they must not die silently either (the pre-counter bug: the log
+    /// went dead on the first failed write with no signal anywhere).
+    pub persist_failures: u64,
+}
+
+/// Where a store's persistence stands (see the module docs on
+/// multiple writers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PersistenceMode {
+    /// No record log was requested ([`CachePolicy::Off`] /
+    /// [`CachePolicy::Memory`]).
+    Off,
+    /// The record log is attached: loaded at build, appended on insert.
+    Active,
+    /// A log was requested but the advisory lock stayed contended at
+    /// load, so this process runs memory-only (warned once on stderr).
+    Degraded,
 }
 
 const NIL: usize = usize::MAX;
@@ -268,7 +308,11 @@ pub struct ResultCache {
     misses: AtomicU64,
     insertions: AtomicU64,
     evictions: AtomicU64,
+    persist_failures: AtomicU64,
     log: Option<Mutex<RecordLog>>,
+    /// True when a log was requested but load-time locking failed
+    /// (`log` is `None` and the store runs memory-only).
+    degraded: bool,
 }
 
 impl std::fmt::Debug for ResultCache {
@@ -289,7 +333,9 @@ impl ResultCache {
             misses: AtomicU64::new(0),
             insertions: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            persist_failures: AtomicU64::new(0),
             log: None,
+            degraded: false,
         }
     }
 
@@ -303,7 +349,23 @@ impl ResultCache {
     /// crash is dropped and trimmed; a stale or foreign header starts
     /// fresh); subsequent insertions append. Loads count neither as
     /// hits nor insertions — stats measure *this* process's traffic.
+    ///
+    /// The load runs under the advisory lock file, so several processes
+    /// may share `dir` (see the module docs). If the lock stays
+    /// contended past the retry budget the store degrades to
+    /// memory-only ([`PersistenceMode::Degraded`]) with one stderr
+    /// warning — a shared-store pile-up must not fail the run.
     pub fn persistent(budget: usize, dir: &Path) -> EngineResult<Arc<ResultCache>> {
+        Self::persistent_with_lock_tries(budget, dir, LOAD_LOCK_TRIES)
+    }
+
+    /// [`ResultCache::persistent`] with an explicit lock retry budget
+    /// (tests drive the degraded path without the full 2s wait).
+    pub(crate) fn persistent_with_lock_tries(
+        budget: usize,
+        dir: &Path,
+        lock_tries: u32,
+    ) -> EngineResult<Arc<ResultCache>> {
         let mut cache = ResultCache::new_unshared(budget);
         let io_err = |op: &str, e: std::io::Error| {
             EngineError::InvalidSpec(format!(
@@ -313,6 +375,21 @@ impl ResultCache {
         };
         std::fs::create_dir_all(dir).map_err(|e| io_err("create", e))?;
         let path = dir.join(STORE_FILE);
+        let lock_path = dir.join(LOCK_FILE);
+        let lock = match LockFile::acquire(&lock_path, lock_tries) {
+            Some(l) => l,
+            None => {
+                eprintln!(
+                    "warning: [cache-lock] '{}' stayed held through {} \
+                     attempts; persistence disabled for this process \
+                     (memory-only store)",
+                    lock_path.display(),
+                    lock_tries,
+                );
+                cache.degraded = true;
+                return Ok(Arc::new(cache));
+            }
+        };
         let mut file = OpenOptions::new()
             .read(true)
             .write(true)
@@ -331,7 +408,9 @@ impl ResultCache {
                 let valid_len = (HEADER_LEN + whole) as u64;
                 if valid_len < raw.len() as u64 {
                     // Torn tail (crash mid-append): trim so the next
-                    // append starts on a record boundary.
+                    // append starts on a record boundary. Safe under
+                    // the lock — a concurrent writer re-seeks to the
+                    // trimmed end before its next record.
                     file.set_len(valid_len).map_err(|e| io_err("truncate", e))?;
                 }
             }
@@ -344,8 +423,14 @@ impl ResultCache {
                 file.write_all(&encode_header()).map_err(|e| io_err("write", e))?;
             }
         }
-        file.seek(SeekFrom::End(0)).map_err(|e| io_err("seek", e))?;
-        cache.log = Some(Mutex::new(RecordLog { file, ok: true }));
+        drop(lock);
+        cache.log = Some(Mutex::new(RecordLog {
+            file,
+            path,
+            lock_path,
+            ok: true,
+            warned: false,
+        }));
         Ok(Arc::new(cache))
     }
 
@@ -381,7 +466,12 @@ impl ResultCache {
         if self.insert_silent(key, counts) {
             self.insertions.fetch_add(1, Ordering::Relaxed);
             if let Some(log) = &self.log {
-                lock_recover(log).append(key, counts);
+                if !lock_recover(log).append(key, counts) {
+                    // The record is live in memory but lost to the log:
+                    // the next process recomputes it. Counted so the
+                    // drain summary can say persistence is limping.
+                    self.persist_failures.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
     }
@@ -413,6 +503,30 @@ impl ResultCache {
             evictions: self.evictions.load(Ordering::Relaxed),
             bytes,
             entries,
+            persist_failures: self.persist_failures.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Where this store's persistence stands (see the module docs on
+    /// multiple writers).
+    pub fn persistence_mode(&self) -> PersistenceMode {
+        if self.log.is_some() {
+            PersistenceMode::Active
+        } else if self.degraded {
+            PersistenceMode::Degraded
+        } else {
+            PersistenceMode::Off
+        }
+    }
+
+    /// Swap the log's file handle for a read-only one, so every later
+    /// append fails at the write — the portable way for tests to drive
+    /// the persist-failure path without unplugging a disk.
+    #[cfg(test)]
+    pub(crate) fn break_log_for_test(&self) {
+        if let Some(log) = &self.log {
+            let mut l = lock_recover(log);
+            l.file = File::open(&l.path).expect("reopen store read-only");
         }
     }
 
@@ -445,18 +559,111 @@ const HEADER_LEN: usize = 16;
 const RECORD_LEN: usize = 16 + COUNT_FIELDS * 8;
 const COUNT_FIELDS: usize = 23;
 
+/// Advisory lock file guarding the record log (module docs: "Multiple
+/// writers"). Lives next to [`STORE_FILE`] in the cache dir.
+const LOCK_FILE: &str = "cache.salcache.lock";
+/// A lock file older than this is presumed abandoned by a crashed
+/// process and stolen. Appends hold the lock for one small write, loads
+/// for one read pass — both orders of magnitude below this.
+pub const STALE_LOCK_SECS: u64 = 30;
+/// Load-time lock retries (× [`LOCK_RETRY_SLEEP_MS`] ≈ 2 s budget).
+const LOAD_LOCK_TRIES: u32 = 200;
+/// Append-time lock retries — shorter: a lost record only costs the
+/// next process a recompute, so an append must not stall a worker.
+const APPEND_LOCK_TRIES: u32 = 25;
+const LOCK_RETRY_SLEEP_MS: u64 = 10;
+
+/// An acquired advisory lock: a file created with `create_new`
+/// (`O_EXCL` — atomic on every platform std supports), holding the
+/// owner pid for post-mortem debugging, removed on drop. `O_EXCL`
+/// creation is the mutual exclusion; no byte-range locking syscalls are
+/// involved, so this works wherever the filesystem does.
+struct LockFile {
+    path: PathBuf,
+}
+
+impl LockFile {
+    /// Try to take the lock, retrying up to `tries` times with
+    /// [`LOCK_RETRY_SLEEP_MS`] sleeps. A stale lock (mtime older than
+    /// [`STALE_LOCK_SECS`]) is removed and the attempt retried.
+    fn acquire(path: &Path, tries: u32) -> Option<LockFile> {
+        for attempt in 0..tries.max(1) {
+            match OpenOptions::new().write(true).create_new(true).open(path) {
+                Ok(mut f) => {
+                    // Owner pid, best-effort: diagnostic only.
+                    let _ = write!(f, "{}", std::process::id());
+                    return Some(LockFile { path: path.to_path_buf() });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if lock_is_stale(path) {
+                        // Steal: remove and retry immediately. Two
+                        // stealers can race, but the loser just sees
+                        // AlreadyExists again next attempt.
+                        let _ = std::fs::remove_file(path);
+                        continue;
+                    }
+                    if attempt + 1 < tries {
+                        std::thread::sleep(Duration::from_millis(
+                            LOCK_RETRY_SLEEP_MS,
+                        ));
+                    }
+                }
+                // Unreachable dir, permissions: retrying cannot help.
+                Err(_) => return None,
+            }
+        }
+        None
+    }
+}
+
+impl Drop for LockFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+fn lock_is_stale(path: &Path) -> bool {
+    match std::fs::metadata(path).and_then(|m| m.modified()) {
+        Ok(mtime) => match mtime.elapsed() {
+            Ok(age) => age > Duration::from_secs(STALE_LOCK_SECS),
+            // mtime in the future (clock skew): not provably stale.
+            Err(_) => false,
+        },
+        // Vanished between the failed create and here — the holder
+        // released it; not stale, just retry.
+        Err(_) => false,
+    }
+}
+
 struct RecordLog {
     file: File,
-    /// Cleared on the first append failure: persistence is best-effort,
-    /// and a dead disk must not fail (or spam) otherwise-healthy sweeps.
+    /// The store file (named in warnings; re-opened read-only by the
+    /// test fault hook).
+    path: PathBuf,
+    /// The advisory lock guarding cross-process appends.
+    lock_path: PathBuf,
+    /// Cleared on the first append *write* failure: a dead disk must
+    /// not fail (or spam) otherwise-healthy sweeps. A contended lock
+    /// does NOT clear it — contention is transient, the disk is fine.
     ok: bool,
+    /// One stderr warning per log, whatever goes wrong first.
+    warned: bool,
 }
 
 impl RecordLog {
-    fn append(&mut self, key: Hash128, counts: &ActivityCounts) {
+    /// Append one record under the advisory lock; `false` means the
+    /// record was not persisted (the caller counts it).
+    fn append(&mut self, key: Hash128, counts: &ActivityCounts) -> bool {
         if !self.ok {
-            return;
+            return false;
         }
+        let lock = match LockFile::acquire(&self.lock_path, APPEND_LOCK_TRIES) {
+            Some(l) => l,
+            None => {
+                self.warn_once("advisory lock stayed contended; record dropped");
+                return false;
+            }
+        };
         let mut rec = Vec::with_capacity(RECORD_LEN);
         rec.extend_from_slice(&key.hi.to_le_bytes());
         rec.extend_from_slice(&key.lo.to_le_bytes());
@@ -464,8 +671,31 @@ impl RecordLog {
             rec.extend_from_slice(&w.to_le_bytes());
         }
         debug_assert_eq!(rec.len(), RECORD_LEN);
-        if self.file.write_all(&rec).and_then(|_| self.file.flush()).is_err() {
+        // Re-seek under the lock: another process may have appended (or
+        // trimmed a torn tail) since our last write, and a record must
+        // start exactly at the current end to stay whole.
+        let wrote = self
+            .file
+            .seek(SeekFrom::End(0))
+            .and_then(|_| self.file.write_all(&rec))
+            .and_then(|_| self.file.flush());
+        drop(lock);
+        if wrote.is_err() {
             self.ok = false;
+            self.warn_once("write failed; persistence disabled for this log");
+            return false;
+        }
+        true
+    }
+
+    fn warn_once(&mut self, what: &str) {
+        if !self.warned {
+            self.warned = true;
+            eprintln!(
+                "warning: [cache-persist] '{}': {what} (results stay \
+                 correct; later processes recompute unpersisted records)",
+                self.path.display()
+            );
         }
     }
 }
@@ -822,9 +1052,120 @@ mod tests {
             HEADER_LEN + RECORD_LEN
         );
         reopened.insert(Hash128 { hi: 9, lo: 9 }, &counts(9));
+        // A healthy recovery persists every record it is asked to: the
+        // failure counter stays clean through trim-and-resume.
+        assert_eq!(reopened.stats().persist_failures, 0);
+        assert_eq!(reopened.persistence_mode(), PersistenceMode::Active);
         drop(reopened);
         let third = ResultCache::persistent(1 << 20, &dir).unwrap();
         assert_eq!(third.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn persist_failures_are_counted_and_warned_not_fatal() {
+        let dir = std::env::temp_dir().join(format!(
+            "salcache-pf-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ResultCache::persistent(1 << 20, &dir).unwrap();
+        cache.insert(Hash128 { hi: 1, lo: 1 }, &counts(1));
+        assert_eq!(cache.stats().persist_failures, 0);
+        // Kill the log's write path: every later append fails, every
+        // lost record is counted, and the memory side keeps serving.
+        cache.break_log_for_test();
+        cache.insert(Hash128 { hi: 2, lo: 2 }, &counts(2));
+        cache.insert(Hash128 { hi: 3, lo: 3 }, &counts(3));
+        let s = cache.stats();
+        assert_eq!(s.persist_failures, 2, "each unpersisted record counts");
+        assert_eq!(s.insertions, 3, "memory insertions unaffected");
+        assert_eq!(cache.get(Hash128 { hi: 2, lo: 2 }), Some(counts(2)));
+        drop(cache);
+        // Only the pre-failure record survives on disk.
+        let reopened = ResultCache::persistent(1 << 20, &dir).unwrap();
+        assert_eq!(reopened.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn two_handles_share_one_store_without_tearing_records() {
+        let dir = std::env::temp_dir().join(format!(
+            "salcache-share-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        // Two independent handles on one dir — the in-process stand-in
+        // for two serve processes sharing --cache-dir: separate File
+        // handles, separate cursors, mutual exclusion only through the
+        // advisory lock.
+        let a = ResultCache::persistent(1 << 20, &dir).unwrap();
+        let b = ResultCache::persistent(1 << 20, &dir).unwrap();
+        assert_eq!(a.persistence_mode(), PersistenceMode::Active);
+        assert_eq!(b.persistence_mode(), PersistenceMode::Active);
+        const PER_HANDLE: u64 = 40;
+        let writer = |c: Arc<ResultCache>, base: u64| {
+            std::thread::spawn(move || {
+                for i in 0..PER_HANDLE {
+                    c.insert(Hash128 { hi: base + i, lo: i }, &counts(base + i));
+                }
+            })
+        };
+        let ta = writer(Arc::clone(&a), 1_000);
+        let tb = writer(Arc::clone(&b), 2_000);
+        ta.join().unwrap();
+        tb.join().unwrap();
+        assert_eq!(a.stats().persist_failures, 0);
+        assert_eq!(b.stats().persist_failures, 0);
+        drop(a);
+        drop(b);
+        // Every record from both writers is on disk, whole: the file is
+        // exactly header + N records, and a fresh load sees all N.
+        let path = dir.join(STORE_FILE);
+        let len = std::fs::metadata(&path).unwrap().len() as usize;
+        assert_eq!(len, HEADER_LEN + 2 * PER_HANDLE as usize * RECORD_LEN);
+        let reopened = ResultCache::persistent(1 << 20, &dir).unwrap();
+        assert_eq!(reopened.len(), 2 * PER_HANDLE as usize);
+        for base in [1_000u64, 2_000] {
+            for i in 0..PER_HANDLE {
+                assert_eq!(
+                    reopened.get(Hash128 { hi: base + i, lo: i }),
+                    Some(counts(base + i)),
+                    "record {base}+{i} must load whole"
+                );
+            }
+        }
+        // Both writers released the advisory lock.
+        assert!(!dir.join(LOCK_FILE).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn contended_load_lock_degrades_to_memory_only() {
+        let dir = std::env::temp_dir().join(format!(
+            "salcache-lock-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // A fresh (non-stale) foreign lock that never releases.
+        std::fs::write(dir.join(LOCK_FILE), b"424242").unwrap();
+        let cache =
+            ResultCache::persistent_with_lock_tries(1 << 20, &dir, 3).unwrap();
+        assert_eq!(cache.persistence_mode(), PersistenceMode::Degraded);
+        // Memory-only but fully functional; nothing reaches disk.
+        cache.insert(Hash128 { hi: 5, lo: 5 }, &counts(5));
+        assert_eq!(cache.get(Hash128 { hi: 5, lo: 5 }), Some(counts(5)));
+        assert_eq!(cache.stats().persist_failures, 0, "no log, no failures");
+        assert!(!dir.join(STORE_FILE).exists(), "degraded store never wrote");
+        drop(cache);
+        // Once the foreign lock is gone, the same dir persists again.
+        std::fs::remove_file(dir.join(LOCK_FILE)).unwrap();
+        let healthy = ResultCache::persistent(1 << 20, &dir).unwrap();
+        assert_eq!(healthy.persistence_mode(), PersistenceMode::Active);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

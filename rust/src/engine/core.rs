@@ -1005,10 +1005,25 @@ impl SaEngineBuilder {
 /// The unified power-analysis engine. See the module docs for the two
 /// call shapes and the failure model; construct via
 /// [`SaEngine::builder`].
+///
+/// `SaEngine` is `Send + Sync`: every entry point takes `&self`, so one
+/// engine (typically behind an `Arc`) may serve sweeps from several
+/// threads at once — the concurrent serve loop leans on this to share
+/// pooled engines across overlapped jobs. The bound is asserted at
+/// compile time below, so a non-`Sync` field can never silently remove
+/// it.
 pub struct SaEngine {
     pool: Arc<PoolInner>,
     timeout: Option<Duration>,
 }
+
+/// Compile-time proof of the concurrency contract documented on
+/// [`SaEngine`] (the serve scheduler shares engines across job
+/// threads).
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<SaEngine>()
+};
 
 impl SaEngine {
     pub fn builder() -> SaEngineBuilder {
@@ -1600,5 +1615,30 @@ mod tests {
         for h in handles {
             assert!(h.wait().is_ok(), "admitted jobs must complete across drain");
         }
+    }
+
+    #[test]
+    fn concurrent_sweeps_on_one_shared_engine_agree() {
+        // The serve scheduler runs overlapped jobs against pooled
+        // engines: several threads sweeping one `Arc<SaEngine>` at
+        // once. Every caller must get the same deterministic report a
+        // solo sweep produces.
+        let engine = Arc::new(small_engine(2, BackendKind::Analytic));
+        let net = tinycnn();
+        let reference = engine.sweep(&net).unwrap().to_json();
+        let reports: Vec<String> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let engine = Arc::clone(&engine);
+                    let net = net.clone();
+                    scope.spawn(move || engine.sweep(&net).unwrap().to_json())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for report in reports {
+            assert_eq!(report, reference, "concurrent sweep must match solo");
+        }
+        drop(engine); // the last Arc tears the shared pool down cleanly
     }
 }

@@ -46,7 +46,14 @@
 //! under the same convention — emitted **only when a cache ran**, so
 //! cache-off reports stay byte-identical to the golden, and cached
 //! numbers are byte-identical to recomputed ones by the cache's design
-//! (`engine::cache`).
+//! (`engine::cache`). Within that object, `"persist_failures"` appears
+//! only when records were lost to the persistent log (non-zero) — a
+//! healthy store renders the same four counters it always has. Reports
+//! emitted by the `serve` loop additionally carry a top-level `"line"`
+//! key (the job's 1-based input line, placed right after `"schema"`)
+//! under the same only-when-present convention: file-based sweep
+//! reports never carry it, so goldens stay byte-exact, and the schema
+//! tag stays v3.
 //! The bit-exactness migration contract: for every registry config the
 //! v3 counts equal the v2 counts field-for-field (the new comparator
 //! fields are 0 for every pre-stack design) — pinned by
@@ -272,6 +279,11 @@ impl SweepReport {
             stats.push("misses", c.misses);
             stats.push("evictions", c.evictions);
             stats.push("bytes", c.bytes);
+            // only a store that lost records reports the fact — the
+            // healthy shape stays byte-identical to pre-counter reports
+            if c.persist_failures > 0 {
+                stats.push("persist_failures", c.persist_failures);
+            }
             o.push("cache", stats);
         }
         o.push(
@@ -387,6 +399,7 @@ mod tests {
             evictions: 1,
             bytes: 4096,
             entries: 2,
+            persist_failures: 0,
         });
         let v = report.to_json_value();
         let c = v.get("cache").expect("cache provenance");
@@ -394,9 +407,18 @@ mod tests {
         assert_eq!(c.get("misses").unwrap().as_u64(), Some(3));
         assert_eq!(c.get("evictions").unwrap().as_u64(), Some(1));
         assert_eq!(c.get("bytes").unwrap().as_u64(), Some(4096));
-        // the provenance object is the four advertised counters, no more
+        // a healthy store renders the four advertised counters, no more
         match c {
             Json::Obj(pairs) => assert_eq!(pairs.len(), 4),
+            other => panic!("expected object, got {other:?}"),
+        }
+        // a store that lost records says so, in the same object
+        report.cache.as_mut().unwrap().persist_failures = 2;
+        let v2 = report.to_json_value();
+        let c2 = v2.get("cache").unwrap();
+        assert_eq!(c2.get("persist_failures").unwrap().as_u64(), Some(2));
+        match c2 {
+            Json::Obj(pairs) => assert_eq!(pairs.len(), 5),
             other => panic!("expected object, got {other:?}"),
         }
         // and it lands between provenance and payload in key order

@@ -37,9 +37,14 @@
 //!   recomputation.
 //! * [`serve`] — sweep-as-a-service: the loop behind the `serve` CLI
 //!   subcommand. Line-delimited [`JobSpec`]s in, one compact v3 report
-//!   JSON line per job out, engines keyed per (backend × dataflow ×
-//!   configs × sampling) over one shared result store; job failures
-//!   become per-line error records instead of process exit.
+//!   JSON line per job out — overlapped up to `--jobs` at a time, each
+//!   line tagged with its input line number; engines keyed per
+//!   (backend × dataflow × canonical configs × sampling) in a bounded
+//!   LRU over one shared result store; job failures become per-line
+//!   error records instead of process exit.
+//! * [`telemetry`] — fixed-bucket [`Histogram`]s (per-job wall latency,
+//!   per-job cache hit rate) and the [`SERVE_SUMMARY_SCHEMA`] document
+//!   rendered by `serve --summary-json`.
 //! * [`json`] — serde-free JSON serialization of
 //!   [`SweepReport`](crate::coordinator::SweepReport) /
 //!   [`LayerReport`](crate::coordinator::LayerReport) /
@@ -80,10 +85,11 @@ mod fault;
 mod json;
 mod registry;
 mod serve;
+mod telemetry;
 
 pub use self::backend::{AnalyticBackend, BackendKind, CycleBackend, EstimatorBackend};
 pub use self::cache::{
-    activity_key, config_key, CachePolicy, CacheStats, ResultCache,
+    activity_key, config_key, CachePolicy, CacheStats, PersistenceMode, ResultCache,
 };
 pub use self::core::{
     AdmissionPolicy, JobHandle, LayerData, LayerJob, SaEngine, SaEngineBuilder,
@@ -96,5 +102,7 @@ pub use self::json::{
 };
 pub use self::registry::{ConfigEntry, ConfigRegistry, ConfigSet, CONFIG_TABLE};
 pub use self::serve::{
-    serve_loop, JobSpec, ServeOptions, ServeSummary, SERVE_ERROR_SCHEMA,
+    serve_loop, JobSpec, ServeOptions, ServeSummary, DEFAULT_ENGINE_CAP,
+    SERVE_ERROR_SCHEMA, SERVE_ERROR_SCHEMA_V1,
 };
+pub use self::telemetry::{Histogram, SERVE_SUMMARY_SCHEMA};

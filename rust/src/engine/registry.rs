@@ -161,6 +161,15 @@ impl ConfigRegistry {
         Self::resolve(s).map(|(_, stack)| stack)
     }
 
+    /// Table position of a *canonical* name (`None` for ad-hoc spec
+    /// names, which live outside the table). This is the tiebreak the
+    /// serve loop sorts canonicalized config sets by: registry rows
+    /// keep their table order, ad-hoc specs sort after them — so every
+    /// spelling of one set produces one column order and one engine.
+    pub fn position(name: &str) -> Option<usize> {
+        CONFIG_TABLE.iter().position(|e| e.name == name)
+    }
+
     /// Canonical names, in table order.
     pub fn names() -> impl Iterator<Item = &'static str> {
         CONFIG_TABLE.iter().map(|e| e.name)
@@ -377,6 +386,15 @@ mod tests {
             ConfigSet::paper().with("baseline", CodingStack::baseline())
         });
         assert!(dup.is_err(), "duplicate name must panic");
+    }
+
+    #[test]
+    fn position_orders_canonical_names_and_rejects_the_rest() {
+        assert_eq!(ConfigRegistry::position("baseline"), Some(0));
+        assert_eq!(ConfigRegistry::position("proposed"), Some(1));
+        // aliases and ad-hoc specs are not table rows
+        assert_eq!(ConfigRegistry::position("conventional"), None);
+        assert_eq!(ConfigRegistry::position("w:zvcg"), None);
     }
 
     #[test]

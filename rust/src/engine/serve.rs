@@ -29,22 +29,68 @@
 //!
 //! `configs` entries are registry names or canonical `--coding` specs,
 //! separated by `;` (a spec itself may contain `,` between edges, so
-//! the list separator must differ).
+//! the list separator must differ). The list is a **set**: entries are
+//! canonicalized through [`ConfigRegistry::resolve`], deduplicated, and
+//! ordered canonically (registry rows in table order first, ad-hoc
+//! specs after, sorted by name) — so `configs=paper`,
+//! `configs=baseline;proposed`, and `configs=proposed;conventional` are
+//! the same job shape, share one engine, and render identical report
+//! columns.
+//!
+//! ## Overlapped jobs (`--jobs`)
+//!
+//! With `jobs > 1` the loop runs scatter/gather: the reader admits up
+//! to `jobs` specs into flight at once, each runs on its own thread
+//! against the engine pool, and a single gather thread owns the writer
+//! and streams outcome lines in **completion order**. Each job is
+//! internally deterministic (tile-granular fold order, pinned since the
+//! tile-scheduler PR), so only the interleaving varies between runs.
+//! To let consumers reassociate interleaved output, every report and
+//! error line carries a top-level `"line"` field — the 1-based input
+//! line number of its job spec. On report documents the tag sits right
+//! after `"schema"` and is an optional key in the same sense as
+//! `"cache"`: file-based sweep reports never carry it, so existing
+//! goldens stay byte-exact. Sorting a run's output by `"line"` and
+//! dropping the run-varying `"cache"` objects reproduces the
+//! sequential (`jobs = 1`) output byte-for-byte.
+//!
+//! The serve-error record is bumped to v2 by the same change: the
+//! fields are unchanged, but v2 declares that records may interleave
+//! with reports out of input order and that `"line"` is the join key.
 //!
 //! ## Engine reuse and the shared store
 //!
 //! Engines are keyed by every axis that shapes their results (backend ×
-//! dataflow × configs × tiles × seed) and kept for the life of the
-//! loop, so repeated jobs reuse warm worker pools. All engines share
-//! **one** result store, so a tile priced for one job is a cache hit
-//! for every later job that streams the same bits — across dataflows
-//! and backends the keys differ by construction, so sharing is safe.
+//! dataflow × canonical config names × tiles × seed) and pooled in a
+//! small LRU (capacity [`ServeOptions::engine_cap`], default
+//! [`DEFAULT_ENGINE_CAP`]) — a traffic mix with per-client seeds no
+//! longer accretes worker pools forever. An evicted engine is dropped
+//! *outside* the pool lock once its last in-flight job releases it;
+//! dropping an engine drains it (queued work completes, workers join),
+//! so eviction never abandons running jobs. All engines share **one**
+//! result store, so a tile priced for one job is a cache hit for every
+//! later job that streams the same bits — across dataflows and
+//! backends the keys differ by construction, so sharing is safe.
+//!
+//! ## Telemetry
+//!
+//! The drain summary carries per-job wall-latency and cache hit-rate
+//! histograms ([`Histogram`], fixed log-spaced/decile buckets) next to
+//! the counters, and distinguishes `completed` (the sweep ran) from
+//! `delivered` (its report line reached the consumer). Per-job hit
+//! rate is sampled as the shared store's hits/misses delta around the
+//! job: exact at `jobs = 1`, attribution-approximate under overlap
+//! (concurrent jobs' deltas can mix) — it is telemetry, not a
+//! conformance surface. [`ServeSummary::to_json_value`] renders the
+//! whole summary as a [`SERVE_SUMMARY_SCHEMA`] document for the CLI's
+//! `--summary-json`.
 
-use std::collections::HashMap;
 use std::io::{BufRead, Write};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
+use crate::coding::CodingStack;
 use crate::util::json::Json;
 use crate::workload::Network;
 
@@ -52,12 +98,22 @@ use super::backend::BackendKind;
 use super::cache::{CachePolicy, CacheStats, ResultCache};
 use super::core::SaEngine;
 use super::error::{EngineError, EngineResult};
-use super::registry::ConfigSet;
+use super::registry::{ConfigRegistry, ConfigSet};
+use super::telemetry::{Histogram, SERVE_SUMMARY_SCHEMA};
 use crate::coordinator::SweepReport;
 use crate::sa::Dataflow;
 
 /// Schema tag of per-job error records emitted by [`serve_loop`].
-pub const SERVE_ERROR_SCHEMA: &str = "sa-lowpower.serve-error.v1";
+/// v2 records are field-compatible with v1; the bump signals that the
+/// loop may emit them interleaved with reports out of input order, with
+/// `"line"` as the join key (see the module docs).
+pub const SERVE_ERROR_SCHEMA: &str = "sa-lowpower.serve-error.v2";
+
+/// The pre-concurrency error-record tag (strict input-order output).
+pub const SERVE_ERROR_SCHEMA_V1: &str = "sa-lowpower.serve-error.v1";
+
+/// Default engine-pool LRU capacity ([`ServeOptions::engine_cap`]).
+pub const DEFAULT_ENGINE_CAP: usize = 8;
 
 /// One parsed job line. See the module docs for the grammar.
 #[derive(Clone, Debug, PartialEq)]
@@ -139,24 +195,56 @@ impl JobSpec {
         Ok(spec)
     }
 
-    /// Resolve the `configs` value into a [`ConfigSet`].
+    /// Resolve the `configs` value into a canonical [`ConfigSet`]:
+    /// every entry canonicalized by [`ConfigRegistry::resolve`],
+    /// duplicates (including alias spellings of one row) collapsed,
+    /// and the set ordered canonically — registry rows in table order,
+    /// ad-hoc specs after them sorted by canonical spec string. Every
+    /// spelling of one set therefore produces one engine key and one
+    /// report column order.
     pub fn config_set(&self) -> EngineResult<ConfigSet> {
         match self.configs.as_str() {
             "paper" => Ok(ConfigSet::paper()),
             "ablation" => Ok(ConfigSet::ablation()),
             "all" => Ok(ConfigSet::all()),
-            list => ConfigSet::from_names(list.split(';'))
-                .map_err(EngineError::InvalidSpec),
+            list => {
+                let mut resolved: Vec<(String, CodingStack)> = Vec::new();
+                for part in list.split(';') {
+                    let part = part.trim();
+                    if part.is_empty() {
+                        continue;
+                    }
+                    let (name, stack) = ConfigRegistry::resolve(part)
+                        .map_err(EngineError::InvalidSpec)?;
+                    if !resolved.iter().any(|(n, _)| n == &name) {
+                        resolved.push((name, stack));
+                    }
+                }
+                if resolved.is_empty() {
+                    return Err(EngineError::InvalidSpec(format!(
+                        "configs '{list}' resolves to no entries"
+                    )));
+                }
+                let rank = |n: &str| {
+                    (ConfigRegistry::position(n).unwrap_or(usize::MAX), n)
+                };
+                resolved.sort_by(|a, b| rank(&a.0).cmp(&rank(&b.0)));
+                Ok(resolved
+                    .into_iter()
+                    .fold(ConfigSet::empty(), |set, (n, s)| set.with(n, s)))
+            }
         }
     }
 
     /// The engine-pool key: every axis that shapes this job's engine.
-    fn engine_key(&self) -> String {
+    /// Keyed on the *canonical* set names (not the raw `configs` text),
+    /// so spelling variants of one set share one engine.
+    fn engine_key(&self, set: &ConfigSet) -> String {
         format!(
             "{}|{}|{}|{}|{:?}",
             self.backend.name(),
             self.dataflow.name(),
-            self.configs,
+            set.names().join(";"),
             self.tiles,
             self.seed
         )
@@ -168,6 +256,13 @@ impl JobSpec {
 pub struct ServeOptions {
     /// Worker threads per engine.
     pub threads: usize,
+    /// Max jobs in flight at once (the scatter/gather window; CLI
+    /// `--jobs`). `1` (the default) serves strictly in input order,
+    /// exactly like the pre-concurrency loop.
+    pub jobs: usize,
+    /// Engine-pool LRU capacity (CLI `--engine-cap`). Keys beyond the
+    /// cap evict the least-recently-used engine.
+    pub engine_cap: usize,
     /// The shared result store's policy. The default `serve` CLI runs
     /// [`CachePolicy::Memory`] so repeated jobs hit; pass
     /// [`CachePolicy::Off`] to benchmark cold costs.
@@ -178,6 +273,8 @@ impl Default for ServeOptions {
     fn default() -> Self {
         ServeOptions {
             threads: 2,
+            jobs: 1,
+            engine_cap: DEFAULT_ENGINE_CAP,
             cache: CachePolicy::Memory { budget: 64 << 20 },
         }
     }
@@ -185,76 +282,338 @@ impl Default for ServeOptions {
 
 /// What one [`serve_loop`] run did (logged by the CLI on exit, to
 /// stderr — stdout carries only report lines).
-#[derive(Clone, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServeSummary {
     /// Job lines consumed (comments and blanks excluded).
     pub jobs: u64,
-    /// Jobs that produced a report line.
+    /// Jobs whose sweep produced a report.
     pub completed: u64,
+    /// Report/error lines that actually reached the consumer. A job
+    /// computed after the consumer hung up is `completed` (the work
+    /// happened, its results are in the shared store) but not
+    /// `delivered`.
+    pub delivered: u64,
     /// Jobs that produced an error record.
     pub failed: u64,
+    /// Engines built over the run's lifetime.
+    pub engines_built: u64,
+    /// Engines evicted by the pool LRU (each drained on release).
+    pub engines_evicted: u64,
     /// Final counters of the shared store (`None` under
     /// [`CachePolicy::Off`]).
     pub cache: Option<CacheStats>,
+    /// Per-job wall latency (parse through outcome render).
+    pub latency: Histogram,
+    /// Per-job store hit rate (completed jobs with a store only; see
+    /// the module docs for the attribution caveat under overlap).
+    pub hit_rate: Histogram,
+}
+
+impl Default for ServeSummary {
+    fn default() -> Self {
+        ServeSummary {
+            jobs: 0,
+            completed: 0,
+            delivered: 0,
+            failed: 0,
+            engines_built: 0,
+            engines_evicted: 0,
+            cache: None,
+            latency: Histogram::latency_ms(),
+            hit_rate: Histogram::hit_rate_pct(),
+        }
+    }
+}
+
+impl ServeSummary {
+    /// The machine-readable summary document ([`SERVE_SUMMARY_SCHEMA`],
+    /// CLI `--summary-json`). Carries the full histogram ladders and,
+    /// when a store ran, its complete counters — `persist_failures`
+    /// included only when non-zero, the `"cache"`-key convention.
+    pub fn to_json_value(&self) -> Json {
+        let mut o = Json::object();
+        o.push("schema", SERVE_SUMMARY_SCHEMA);
+        o.push("jobs", self.jobs);
+        o.push("completed", self.completed);
+        o.push("delivered", self.delivered);
+        o.push("failed", self.failed);
+        o.push("engines_built", self.engines_built);
+        o.push("engines_evicted", self.engines_evicted);
+        o.push("latency_ms", self.latency.to_json_value());
+        o.push("hit_rate_pct", self.hit_rate.to_json_value());
+        if let Some(c) = &self.cache {
+            let mut stats = Json::object();
+            stats.push("hits", c.hits);
+            stats.push("misses", c.misses);
+            stats.push("insertions", c.insertions);
+            stats.push("evictions", c.evictions);
+            stats.push("entries", c.entries);
+            stats.push("bytes", c.bytes);
+            if c.persist_failures > 0 {
+                stats.push("persist_failures", c.persist_failures);
+            }
+            o.push("cache", stats);
+        }
+        o
+    }
+}
+
+/// The bounded engine LRU behind one serve run. `entries` is ordered
+/// least- to most-recently used; engines are shared with in-flight
+/// jobs via `Arc`, so eviction removes an engine from the pool without
+/// yanking it from under a running sweep.
+struct EnginePool {
+    cap: usize,
+    entries: Vec<(String, Arc<SaEngine>)>,
+    built: u64,
+    evicted: u64,
+}
+
+impl EnginePool {
+    fn new(cap: usize) -> EnginePool {
+        EnginePool { cap, entries: Vec::new(), built: 0, evicted: 0 }
+    }
+}
+
+/// Check an engine out of the pool, building it on a miss (one lookup —
+/// the entry is moved to the MRU slot either way). Builds happen under
+/// the pool lock on purpose: concurrent jobs hitting one cold key wait
+/// for the first build instead of racing to spawn duplicate worker
+/// pools. The evicted engine (if any) is dropped *after* the lock is
+/// released — if no in-flight job still holds it, that drop drains it
+/// (queued work completes, workers join), which must not stall other
+/// checkouts.
+fn checkout(
+    pool: &Mutex<EnginePool>,
+    key: &str,
+    build: impl FnOnce() -> EngineResult<SaEngine>,
+) -> EngineResult<Arc<SaEngine>> {
+    let mut p = pool.lock().unwrap();
+    if let Some(at) = p.entries.iter().position(|(k, _)| k == key) {
+        let entry = p.entries.remove(at);
+        let engine = Arc::clone(&entry.1);
+        p.entries.push(entry);
+        return Ok(engine);
+    }
+    let engine = Arc::new(build()?);
+    p.built += 1;
+    let evicted = if p.entries.len() >= p.cap {
+        p.evicted += 1;
+        Some(p.entries.remove(0).1)
+    } else {
+        None
+    };
+    p.entries.push((key.to_string(), Arc::clone(&engine)));
+    drop(p);
+    drop(evicted);
+    Ok(engine)
+}
+
+/// One job's result crossing from a job thread to the gather thread.
+struct JobOutcome {
+    /// Report (`true`) vs error record (`false`).
+    ok: bool,
+    /// The compact output line, already tagged with `"line"`.
+    rendered: String,
+    latency_ms: f64,
+    /// Store hits/misses delta around the sweep, as a percentage
+    /// (`None` for failures and store-less runs).
+    hit_rate_pct: Option<f64>,
+}
+
+impl JobOutcome {
+    fn report(
+        line_no: usize,
+        report: &SweepReport,
+        hit_rate_pct: Option<f64>,
+        started: Instant,
+    ) -> JobOutcome {
+        let mut v = report.to_json_value();
+        v.insert_after("schema", "line", line_no);
+        JobOutcome {
+            ok: true,
+            rendered: v.render_compact(),
+            latency_ms: started.elapsed().as_secs_f64() * 1e3,
+            hit_rate_pct,
+        }
+    }
+
+    fn errored(
+        line_no: usize,
+        spec_text: &str,
+        e: &EngineError,
+        started: Instant,
+    ) -> JobOutcome {
+        JobOutcome {
+            ok: false,
+            rendered: error_record(line_no, spec_text, e),
+            latency_ms: started.elapsed().as_secs_f64() * 1e3,
+            hit_rate_pct: None,
+        }
+    }
 }
 
 /// Run the service loop until `input` reaches EOF or `output` hangs up.
 ///
 /// Only *setup* failures (an unusable persistent-cache directory) are
 /// returned as errors; per-job failures stream as error records. I/O
-/// errors on `output` (EPIPE after a consumer exits) end the loop
-/// cleanly — by then nobody is listening.
-pub fn serve_loop<R: BufRead, W: Write>(
+/// errors on `output` (EPIPE after a consumer exits) stop delivery and
+/// admission cleanly — jobs already in flight still complete (their
+/// results land in the shared store) but are not delivered.
+pub fn serve_loop<R: BufRead, W: Write + Send>(
     input: R,
-    mut output: W,
+    output: W,
     opts: &ServeOptions,
 ) -> EngineResult<ServeSummary> {
     let store = ResultCache::from_policy(&opts.cache)?;
-    let mut engines: HashMap<String, SaEngine> = HashMap::new();
+    let window_cap = opts.jobs.max(1);
+    let threads = opts.threads;
+    let pool = Mutex::new(EnginePool::new(opts.engine_cap.max(1)));
+    let hung_up = AtomicBool::new(false);
+    let in_flight = Mutex::new(0usize);
+    let slot_freed = Condvar::new();
+
     let mut summary = ServeSummary::default();
-    for (line_no, line) in input.lines().enumerate() {
-        let line = match line {
-            Ok(l) => l,
-            // A read error on stdin (closed terminal, broken upstream
-            // pipe) is EOF for our purposes: drain, don't crash.
-            Err(_) => break,
-        };
-        let text = line.trim();
-        if text.is_empty() || text.starts_with('#') {
-            continue;
-        }
-        summary.jobs += 1;
-        let outcome = JobSpec::parse(text)
-            .and_then(|spec| run_job(&mut engines, &store, opts.threads, &spec));
-        let rendered = match outcome {
-            Ok(report) => {
-                summary.completed += 1;
-                report.to_json_value().render_compact()
+    let (completed, delivered, failed, latency, hit_rate) =
+        std::thread::scope(|scope| {
+            let (tx, rx) = mpsc::channel::<JobOutcome>();
+            let (pool, store) = (&pool, &store);
+            let (hung, window, freed) = (&hung_up, &in_flight, &slot_freed);
+
+            // The gather thread owns the writer: outcome lines stream in
+            // completion order through one place, counters and histograms
+            // update for every computed job whether or not its line could
+            // be written, and — crucially for backpressure — the window
+            // slot is freed *here*, after the write attempt. At jobs = 1
+            // the reader therefore cannot admit job N+1 before job N's
+            // delivery (or hang-up) is a settled fact.
+            let gather = scope.spawn(move || {
+                let mut output = output;
+                let (mut completed, mut delivered, mut failed) = (0u64, 0u64, 0u64);
+                let mut latency = Histogram::latency_ms();
+                let mut hit_rate = Histogram::hit_rate_pct();
+                while let Ok(outcome) = rx.recv() {
+                    if outcome.ok {
+                        completed += 1;
+                    } else {
+                        failed += 1;
+                    }
+                    latency.record(outcome.latency_ms);
+                    if let Some(pct) = outcome.hit_rate_pct {
+                        hit_rate.record(pct);
+                    }
+                    if !hung.load(Ordering::SeqCst) {
+                        let wrote = writeln!(output, "{}", outcome.rendered)
+                            .and_then(|_| output.flush());
+                        if wrote.is_ok() {
+                            delivered += 1;
+                        } else {
+                            hung.store(true, Ordering::SeqCst);
+                        }
+                    }
+                    let mut n = window.lock().unwrap();
+                    *n -= 1;
+                    drop(n);
+                    freed.notify_all();
+                }
+                (completed, delivered, failed, latency, hit_rate)
+            });
+
+            for (line_no, line) in input.lines().enumerate() {
+                let line = match line {
+                    Ok(l) => l,
+                    // A read error on stdin (closed terminal, broken
+                    // upstream pipe) is EOF for our purposes: drain,
+                    // don't crash.
+                    Err(_) => break,
+                };
+                let text = line.trim();
+                if text.is_empty() || text.starts_with('#') {
+                    continue;
+                }
+                // Admission: wait for a free window slot. A hang-up
+                // observed here (or while waiting) stops admission
+                // before this job is counted.
+                {
+                    let mut n = window.lock().unwrap();
+                    while *n >= window_cap && !hung.load(Ordering::SeqCst) {
+                        n = freed.wait(n).unwrap();
+                    }
+                    if hung.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    *n += 1;
+                }
+                summary.jobs += 1;
+                let started = Instant::now();
+                match JobSpec::parse(text) {
+                    // A parse failure is an outcome too: it occupies the
+                    // slot it was admitted under and flows through the
+                    // gather thread, so counting, tagging, and ordering
+                    // stay uniform across success and failure.
+                    Err(e) => {
+                        let _ = tx.send(JobOutcome::errored(
+                            line_no + 1,
+                            text,
+                            &e,
+                            started,
+                        ));
+                    }
+                    Ok(spec) => {
+                        let tx = tx.clone();
+                        let text = text.to_string();
+                        scope.spawn(move || {
+                            let outcome =
+                                match run_job(pool, store, threads, &spec) {
+                                    Ok((report, rate)) => JobOutcome::report(
+                                        line_no + 1,
+                                        &report,
+                                        rate,
+                                        started,
+                                    ),
+                                    Err(e) => JobOutcome::errored(
+                                        line_no + 1,
+                                        &text,
+                                        &e,
+                                        started,
+                                    ),
+                                };
+                            let _ = tx.send(outcome);
+                        });
+                    }
+                }
             }
-            Err(e) => {
-                summary.failed += 1;
-                error_record(line_no + 1, text, &e)
-            }
-        };
-        // One line per job, flushed so a consumer pipeline sees it
-        // immediately; a write failure means the consumer hung up.
-        if writeln!(output, "{rendered}").and_then(|_| output.flush()).is_err() {
-            break;
-        }
-    }
+            drop(tx);
+            gather.join().expect("serve gather thread panicked")
+        });
+
+    summary.completed = completed;
+    summary.delivered = delivered;
+    summary.failed = failed;
+    summary.latency = latency;
+    summary.hit_rate = hit_rate;
+    let pool = pool.into_inner().unwrap();
+    summary.engines_built = pool.built;
+    summary.engines_evicted = pool.evicted;
+    // Dropping the pool drains every remaining engine (all jobs are
+    // joined, so each Arc here is the last one).
+    drop(pool);
     summary.cache = store.as_ref().map(|s| s.stats());
     Ok(summary)
 }
 
-/// Run one job, building (and keeping) its engine on first use. Every
-/// engine shares `store`, so later jobs hit results priced by earlier
-/// ones.
+/// Run one job: resolve its canonical config set, check its engine out
+/// of the pool (building on first use), and sweep. Every engine shares
+/// `store`, so later jobs hit results priced by earlier ones. Returns
+/// the report plus the job's store hits/misses delta as a hit-rate
+/// percentage (`None` without a store or when the job touched no
+/// store entry).
 fn run_job(
-    engines: &mut HashMap<String, SaEngine>,
+    pool: &Mutex<EnginePool>,
     store: &Option<Arc<ResultCache>>,
     threads: usize,
     spec: &JobSpec,
-) -> EngineResult<SweepReport> {
+) -> EngineResult<(SweepReport, Option<f64>)> {
     let net = Network::by_name(&spec.net).ok_or_else(|| {
         EngineError::InvalidSpec(format!(
             "unknown network '{}'; available: {}",
@@ -262,11 +621,12 @@ fn run_job(
             Network::name_list()
         ))
     })?;
-    let key = spec.engine_key();
-    if !engines.contains_key(&key) {
+    let set = spec.config_set()?;
+    let key = spec.engine_key(&set);
+    let engine = checkout(pool, &key, || {
         let mut builder = SaEngine::builder()
             .max_tiles_per_layer(spec.tiles)
-            .configs(spec.config_set()?)
+            .configs(set)
             .backend(spec.backend)
             .dataflow(spec.dataflow)
             .threads(threads);
@@ -276,10 +636,18 @@ fn run_job(
         if let Some(store) = store {
             builder = builder.cache_store(Arc::clone(store));
         }
-        engines.insert(key.clone(), builder.build()?);
-    }
-    let engine = &engines[&key];
-    engine.sweep_with_timeout(&net, spec.timeout)
+        builder.build()
+    })?;
+    let before = store.as_ref().map(|s| s.stats());
+    let report = engine.sweep_with_timeout(&net, spec.timeout)?;
+    let rate = before.and_then(|b| {
+        let after = store.as_ref().unwrap().stats();
+        let hits = after.hits.saturating_sub(b.hits);
+        let misses = after.misses.saturating_sub(b.misses);
+        let touched = hits + misses;
+        (touched > 0).then(|| 100.0 * hits as f64 / touched as f64)
+    });
+    Ok((report, rate))
 }
 
 /// One failure as a data record: which input line, what kind
@@ -311,7 +679,29 @@ mod tests {
     }
 
     fn small() -> ServeOptions {
-        ServeOptions { threads: 2, cache: CachePolicy::Memory { budget: 32 << 20 } }
+        ServeOptions {
+            threads: 2,
+            cache: CachePolicy::Memory { budget: 32 << 20 },
+            ..ServeOptions::default()
+        }
+    }
+
+    /// A parsed output line with the run-varying keys (`line`, `cache`)
+    /// removed — the payload that must be identical across schedules.
+    fn stripped(line: &str) -> Json {
+        match Json::parse(line).unwrap() {
+            Json::Obj(pairs) => Json::Obj(
+                pairs
+                    .into_iter()
+                    .filter(|(k, _)| k != "cache" && k != "line")
+                    .collect(),
+            ),
+            other => other,
+        }
+    }
+
+    fn line_tag(line: &str) -> u64 {
+        Json::parse(line).unwrap().get("line").unwrap().as_u64().unwrap()
     }
 
     #[test]
@@ -359,6 +749,38 @@ mod tests {
                 other => panic!("{what} must be InvalidSpec, got {other:?}"),
             }
         }
+        // an all-separator configs list resolves to nothing
+        let empty = JobSpec::parse("net=tinycnn configs=;").unwrap();
+        assert!(matches!(
+            empty.config_set(),
+            Err(EngineError::InvalidSpec(_))
+        ));
+    }
+
+    #[test]
+    fn engine_keys_canonicalize_config_spellings() {
+        let key = |configs: &str| {
+            let spec =
+                JobSpec::parse(&format!("net=tinycnn configs={configs}")).unwrap();
+            let set = spec.config_set().unwrap();
+            (set.names(), spec.engine_key(&set))
+        };
+        let (names, canonical) = key("paper");
+        assert_eq!(names, ["baseline", "proposed"]);
+        // reorderings, aliases, and duplicates all collapse to one key
+        for spelling in [
+            "baseline;proposed",
+            "proposed;baseline",
+            "proposed;conventional",
+            "baseline;proposed;conventional",
+        ] {
+            assert_eq!(key(spelling), (names.clone(), canonical.clone()), "{spelling}");
+        }
+        // ad-hoc specs sort after registry rows, by canonical spec
+        let (names, _) = key("w:zvcg;baseline");
+        assert_eq!(names, ["baseline", "w:zvcg"]);
+        // different sets still key differently
+        assert_ne!(key("baseline").1, canonical);
     }
 
     #[test]
@@ -372,26 +794,33 @@ net=tinycnn tiles=2
         let (lines, summary) = serve_str(input, &small());
         assert_eq!(lines.len(), 2);
         assert_eq!((summary.jobs, summary.completed, summary.failed), (2, 2, 0));
+        assert_eq!(summary.delivered, 2, "both lines reached the consumer");
         let first = Json::parse(&lines[0]).unwrap();
         let second = Json::parse(&lines[1]).unwrap();
         assert_eq!(
             first.get("schema").unwrap().as_str(),
             Some(crate::engine::SWEEP_REPORT_SCHEMA)
         );
+        // the "line" tag names each job's 1-based input line, right
+        // after the schema tag
+        assert_eq!(first.get("line").unwrap().as_u64(), Some(2));
+        assert_eq!(second.get("line").unwrap().as_u64(), Some(4));
+        match &first {
+            Json::Obj(pairs) => assert_eq!(pairs[1].0, "line"),
+            other => panic!("expected object, got {other:?}"),
+        }
         let hits = |v: &Json| {
             v.get("cache").unwrap().get("hits").unwrap().as_u64().unwrap()
         };
         assert!(hits(&second) > hits(&first), "warm job must report cache hits");
         assert!(hits(&second) > 0);
-        // identical payloads modulo the cache provenance object
-        let strip = |v: &Json| match v {
-            Json::Obj(pairs) => Json::Obj(
-                pairs.iter().filter(|(k, _)| k != "cache").cloned().collect(),
-            ),
-            other => other.clone(),
-        };
-        assert_eq!(strip(&first), strip(&second), "cached == recomputed");
+        // identical payloads modulo the run-varying keys
+        assert_eq!(stripped(&lines[0]), stripped(&lines[1]), "cached == recomputed");
         assert!(summary.cache.unwrap().hits > 0);
+        // telemetry: both jobs sampled; the warm job ran 100 % hot
+        assert_eq!(summary.latency.count(), 2);
+        assert_eq!(summary.hit_rate.count(), 2);
+        assert_eq!(summary.hit_rate.count_at(100.0), 1);
     }
 
     #[test]
@@ -416,6 +845,9 @@ net=tinycnn tiles=1
         // the loop kept serving after the failures
         let last = Json::parse(&lines[3]).unwrap();
         assert_eq!(last.get("network").unwrap().as_str(), Some("tinycnn"));
+        // failures are latency samples too, but never hit-rate samples
+        assert_eq!(summary.latency.count(), 4);
+        assert!(summary.hit_rate.count() <= 2);
     }
 
     #[test]
@@ -426,16 +858,82 @@ net=tinycnn tiles=1
         let input = "\
 net=tinycnn tiles=2 configs=paper
 net=tinycnn tiles=2 configs=all
+net=tinycnn tiles=2 configs=proposed;conventional
 ";
         let (lines, summary) = serve_str(input, &small());
-        assert_eq!((summary.completed, summary.failed), (2, 0));
+        assert_eq!((summary.completed, summary.failed), (3, 0));
         let second = Json::parse(&lines[1]).unwrap();
         let hits = second.get("cache").unwrap().get("hits").unwrap().as_u64();
         assert!(hits.unwrap() > 0, "shared store must serve across engines");
+        // job 3 spells job 1's set differently: same canonical key, so
+        // only two engines were ever built
+        assert_eq!(summary.engines_built, 2);
+        assert_eq!(summary.engines_evicted, 0);
+        assert_eq!(stripped(&lines[0]), stripped(&lines[2]));
     }
 
     #[test]
-    fn a_hung_up_consumer_ends_the_loop_cleanly() {
+    fn engine_pool_is_a_bounded_lru() {
+        // cap 1: seed=2 evicts seed=1's engine, the third job rebuilds
+        // seed=1 (evicting seed=2), the fourth reuses it.
+        let input = "\
+net=tinycnn tiles=1 seed=1
+net=tinycnn tiles=1 seed=2
+net=tinycnn tiles=1 seed=1
+net=tinycnn tiles=1 seed=1
+";
+        let opts = ServeOptions { engine_cap: 1, ..small() };
+        let (lines, summary) = serve_str(input, &opts);
+        assert_eq!((summary.completed, summary.failed), (4, 0));
+        assert_eq!(summary.engines_built, 3);
+        assert_eq!(summary.engines_evicted, 2);
+        // eviction + rebuild reproduces the original results exactly
+        assert_eq!(stripped(&lines[0]), stripped(&lines[2]));
+        assert_eq!(stripped(&lines[2]), stripped(&lines[3]));
+    }
+
+    #[test]
+    fn overlapped_jobs_match_the_sequential_run_line_for_line() {
+        // A mixed workload: distinct engine keys, repeats, failures.
+        let input = "\
+net=tinycnn tiles=2 configs=paper
+net=tinycnn tiles=1 configs=baseline
+net=atlantis
+net=tinycnn tiles=2 configs=paper
+net=tinycnn tiles=1 dataflow=os
+nonsense
+net=tinycnn tiles=1 seed=3
+net=tinycnn tiles=1 seed=4
+";
+        let (seq_lines, seq) =
+            serve_str(input, &ServeOptions { jobs: 1, ..small() });
+        let (par_lines, par) =
+            serve_str(input, &ServeOptions { jobs: 4, ..small() });
+        assert_eq!(seq_lines.len(), 8);
+        assert_eq!(par_lines.len(), 8);
+        assert_eq!((par.jobs, par.completed, par.failed), (seq.jobs, seq.completed, seq.failed));
+        assert_eq!(par.delivered, seq.delivered);
+        // sequential output is already in line order
+        let seq_tags: Vec<u64> = seq_lines.iter().map(|l| line_tag(l)).collect();
+        assert_eq!(seq_tags, [1, 2, 3, 4, 5, 6, 7, 8]);
+        // sorted by the "line" tag and stripped of the run-varying
+        // keys, the overlapped run is byte-identical to the sequential
+        // one (per-job determinism + canonical config ordering)
+        let mut par_sorted: Vec<&String> = par_lines.iter().collect();
+        par_sorted.sort_by_key(|l| line_tag(l));
+        for (s, p) in seq_lines.iter().zip(&par_sorted) {
+            assert_eq!(line_tag(s), line_tag(p));
+            assert_eq!(
+                stripped(s).render_compact(),
+                stripped(p).render_compact(),
+                "line {} must match across schedules",
+                line_tag(s)
+            );
+        }
+    }
+
+    #[test]
+    fn a_hung_up_consumer_stops_admission_but_counts_computed_work() {
         struct Closed;
         impl Write for Closed {
             fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
@@ -446,19 +944,59 @@ net=tinycnn tiles=2 configs=all
             }
         }
         let input = "net=tinycnn tiles=1\nnet=tinycnn tiles=1\n";
-        let summary =
-            serve_loop(input.as_bytes(), &mut Closed, &small()).unwrap();
-        // first job ran, its write failed, the loop stopped — no panic,
-        // no error, no second job
-        assert_eq!(summary.jobs, 1);
+        let summary = serve_loop(input.as_bytes(), Closed, &small()).unwrap();
+        // The first job ran to completion — its sweep is real work and
+        // its results are in the store — but its line never reached the
+        // consumer, and the second job was never admitted.
+        assert_eq!(summary.jobs, 1, "no admission after hang-up");
+        assert_eq!(summary.completed, 1, "the in-flight job still computed");
+        assert_eq!(summary.delivered, 0, "nothing was delivered");
+        assert_eq!(summary.failed, 0);
     }
 
     #[test]
     fn cache_off_serves_without_provenance() {
-        let opts = ServeOptions { threads: 1, cache: CachePolicy::Off };
+        let opts = ServeOptions {
+            threads: 1,
+            cache: CachePolicy::Off,
+            ..ServeOptions::default()
+        };
         let (lines, summary) = serve_str("net=tinycnn tiles=1\n", &opts);
         let v = Json::parse(&lines[0]).unwrap();
         assert!(v.get("cache").is_none());
+        // the "line" tag is a serve-level key, present with or without
+        // a store
+        assert_eq!(v.get("line").unwrap().as_u64(), Some(1));
         assert_eq!(summary.cache, None);
+        assert_eq!(summary.hit_rate.count(), 0, "no store, no hit-rate samples");
+    }
+
+    #[test]
+    fn serve_summary_document_carries_counters_and_ladders() {
+        let input = "\
+net=tinycnn tiles=2
+net=tinycnn tiles=2
+net=atlantis
+";
+        let (_, summary) = serve_str(input, &small());
+        let v = summary.to_json_value();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some(SERVE_SUMMARY_SCHEMA));
+        assert_eq!(v.get("jobs").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("completed").unwrap().as_u64(), Some(2));
+        assert_eq!(v.get("delivered").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("failed").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("engines_built").unwrap().as_u64(), Some(1));
+        let lat = v.get("latency_ms").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_u64(), Some(3));
+        assert_eq!(lat.get("unit").unwrap().as_str(), Some("ms"));
+        let hr = v.get("hit_rate_pct").unwrap();
+        assert_eq!(hr.get("count").unwrap().as_u64(), Some(2));
+        // a healthy run reports its store without a persist_failures key
+        let cache = v.get("cache").unwrap();
+        assert!(cache.get("hits").unwrap().as_u64().unwrap() > 0);
+        assert!(cache.get("persist_failures").is_none());
+        // the document round-trips through the parser
+        let reparsed = Json::parse(&v.render()).unwrap();
+        assert_eq!(reparsed, v);
     }
 }

@@ -1,0 +1,270 @@
+//! Serve-loop telemetry: fixed-bucket histograms for per-job wall
+//! latency and per-job cache hit rate, plus the machine-readable
+//! summary document schema.
+//!
+//! The drain summary used to be four counters; at production traffic
+//! that hides everything capacity planning needs (is p99 drifting? are
+//! cold jobs starving warm ones? is the store actually hitting?). A
+//! [`Histogram`] here is deliberately primitive — a fixed, *static*
+//! bucket ladder and saturating counters — so recording is a few adds
+//! on the gather thread, the rendered shape is byte-stable for tests,
+//! and two summaries are mergeable bucket-by-bucket if a supervisor
+//! ever aggregates across serve processes.
+//!
+//! Two ladders are built in:
+//!
+//! * [`Histogram::latency_ms`] — log-spaced (powers of two) millisecond
+//!   upper bounds from 0.25 ms to 16.4 s. Log spacing matches how
+//!   latency degrades: resolution where jobs are fast, coverage where
+//!   they are pathological.
+//! * [`Histogram::hit_rate_pct`] — ten linear decile buckets over a
+//!   0–100 % hit rate. Rates are bounded, so deciles read naturally
+//!   ("how many jobs ran mostly warm?").
+//!
+//! Rendering: [`Histogram::render`] is the compact one-line stderr form
+//! (non-empty buckets only); [`Histogram::to_json_value`] is the full
+//! ladder for the `--summary-json` document
+//! ([`SERVE_SUMMARY_SCHEMA`], assembled by `engine::serve`).
+
+use crate::util::json::Json;
+
+/// Schema tag of the `--summary-json` document written after a
+/// [`serve_loop`](crate::engine::serve_loop) run.
+pub const SERVE_SUMMARY_SCHEMA: &str = "sa-lowpower.serve-summary.v1";
+
+/// Log-spaced (×2) millisecond upper bounds: 0.25 ms .. 16.4 s, then
+/// an overflow bucket. 17 bounds cover five decades of job latency.
+const LATENCY_BOUNDS_MS: &[f64] = &[
+    0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0,
+    1024.0, 2048.0, 4096.0, 8192.0, 16384.0,
+];
+
+/// Decile upper bounds for a 0–100 % rate. 100 % lands in the last
+/// real bucket; the overflow bucket stays empty by construction.
+const HIT_RATE_BOUNDS_PCT: &[f64] =
+    &[10.0, 20.0, 30.0, 40.0, 50.0, 60.0, 70.0, 80.0, 90.0, 100.0];
+
+/// A fixed-bucket histogram over `f64` samples: static upper bounds,
+/// one overflow bucket, plus min/mean/max of the raw samples (bucket
+/// counts alone hide the tails inside the last bucket).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    /// What one sample measures (`"ms"`, `"%"`) — labels rendering.
+    unit: &'static str,
+    /// Static upper bounds, ascending. A sample lands in the first
+    /// bucket whose bound is >= the sample.
+    bounds: &'static [f64],
+    /// `bounds.len() + 1` counters; the last is the overflow bucket.
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    fn with_bounds(unit: &'static str, bounds: &'static [f64]) -> Histogram {
+        Histogram {
+            unit,
+            bounds,
+            counts: vec![0; bounds.len() + 1],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Per-job wall-latency ladder (log-spaced milliseconds).
+    pub fn latency_ms() -> Histogram {
+        Self::with_bounds("ms", LATENCY_BOUNDS_MS)
+    }
+
+    /// Per-job cache hit-rate ladder (percent deciles).
+    pub fn hit_rate_pct() -> Histogram {
+        Self::with_bounds("%", HIT_RATE_BOUNDS_PCT)
+    }
+
+    /// Record one sample. Non-finite samples are dropped (they would
+    /// poison min/mean/max and belong to no bucket).
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let slot = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[slot] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean of the raw samples (`None` when empty).
+    pub fn mean(&self) -> Option<f64> {
+        (self.total > 0).then(|| self.sum / self.total as f64)
+    }
+
+    /// Count in the bucket `v` would land in (test/assert helper).
+    pub fn count_at(&self, v: f64) -> u64 {
+        let slot = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[slot]
+    }
+
+    /// One-line stderr form: non-empty buckets only, e.g.
+    /// `<=1ms:3 <=4ms:2 >16384ms:1 (n=6 min 0.8 mean 3.1 max 20000)`.
+    /// Returns `"(none)"` when no samples were recorded.
+    pub fn render(&self) -> String {
+        if self.total == 0 {
+            return "(none)".to_string();
+        }
+        let mut parts: Vec<String> = Vec::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            match self.bounds.get(i) {
+                Some(b) => parts.push(format!("<={}{}:{c}", trim_f64(*b), self.unit)),
+                None => parts.push(format!(
+                    ">{}{}:{c}",
+                    trim_f64(*self.bounds.last().unwrap()),
+                    self.unit
+                )),
+            }
+        }
+        format!(
+            "{} (n={} min {} mean {} max {})",
+            parts.join(" "),
+            self.total,
+            trim_f64(self.min),
+            trim_f64(self.sum / self.total as f64),
+            trim_f64(self.max),
+        )
+    }
+
+    /// Full ladder as JSON: every bucket (empty ones included, so
+    /// documents from different runs align), the overflow count, and
+    /// the raw-sample aggregates (only when samples exist — JSON has
+    /// no `Infinity` for an empty min/max).
+    pub fn to_json_value(&self) -> Json {
+        let mut o = Json::object();
+        o.push("unit", self.unit);
+        let buckets = self
+            .bounds
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                let mut row = Json::object();
+                row.push("le", b);
+                row.push("count", self.counts[i]);
+                row
+            })
+            .collect();
+        o.push("buckets", Json::Arr(buckets));
+        o.push("overflow", self.counts[self.bounds.len()]);
+        o.push("count", self.total);
+        if self.total > 0 {
+            o.push("min", self.min);
+            o.push("mean", self.sum / self.total as f64);
+            o.push("max", self.max);
+        }
+        o
+    }
+}
+
+/// `0.25` renders as `0.25`, `1024.0` as `1024` — bucket labels stay
+/// readable without a float formatter detour.
+fn trim_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_land_in_log_spaced_buckets() {
+        let mut h = Histogram::latency_ms();
+        assert_eq!(h.render(), "(none)");
+        h.record(0.2); // <= 0.25
+        h.record(0.9); // <= 1
+        h.record(1.0); // <= 1 (inclusive upper bound)
+        h.record(900.0); // <= 1024
+        h.record(1e9); // overflow
+        h.record(f64::NAN); // dropped
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.count_at(0.25), 1);
+        assert_eq!(h.count_at(1.0), 2);
+        assert_eq!(h.count_at(1024.0), 1);
+        assert_eq!(h.count_at(1e9), 1);
+        let s = h.render();
+        assert!(s.contains("<=1ms:2"), "{s}");
+        assert!(s.contains(">16384ms:1"), "{s}");
+        assert!(s.contains("n=5"), "{s}");
+    }
+
+    #[test]
+    fn hit_rate_deciles_cover_the_closed_range() {
+        let mut h = Histogram::hit_rate_pct();
+        h.record(0.0); // <= 10
+        h.record(10.0); // <= 10
+        h.record(55.0); // <= 60
+        h.record(100.0); // <= 100, not overflow
+        assert_eq!(h.count_at(10.0), 2);
+        assert_eq!(h.count_at(60.0), 1);
+        assert_eq!(h.count_at(100.0), 1);
+        assert_eq!(h.count_at(101.0), 0, "overflow bucket stays empty");
+        assert_eq!(h.mean(), Some(165.0 / 4.0));
+    }
+
+    #[test]
+    fn json_ladder_is_complete_and_aggregates_only_when_sampled() {
+        let empty = Histogram::hit_rate_pct().to_json_value();
+        assert_eq!(empty.get("count").unwrap().as_u64(), Some(0));
+        assert!(empty.get("min").is_none(), "no aggregates without samples");
+        assert_eq!(empty.get("buckets").unwrap().as_arr().unwrap().len(), 10);
+
+        let mut h = Histogram::latency_ms();
+        h.record(3.0);
+        h.record(5.0);
+        let v = h.to_json_value();
+        assert_eq!(v.get("unit").unwrap().as_str(), Some("ms"));
+        assert_eq!(v.get("count").unwrap().as_u64(), Some(2));
+        assert_eq!(v.get("min").unwrap().as_f64(), Some(3.0));
+        assert_eq!(v.get("max").unwrap().as_f64(), Some(5.0));
+        assert_eq!(v.get("mean").unwrap().as_f64(), Some(4.0));
+        assert_eq!(v.get("overflow").unwrap().as_u64(), Some(0));
+        let buckets = v.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), LATENCY_BOUNDS_MS.len());
+        // the 4ms bucket holds the 3.0 sample, the 8ms bucket the 5.0
+        let at = |le: f64| {
+            buckets
+                .iter()
+                .find(|b| b.get("le").unwrap().as_f64() == Some(le))
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_u64()
+                .unwrap()
+        };
+        assert_eq!(at(4.0), 1);
+        assert_eq!(at(8.0), 1);
+        assert_eq!(at(16.0), 0);
+    }
+}

@@ -12,8 +12,10 @@
 //! sa-lowpower simulate  [--m N] [--k N] [--n N] [--sparsity F] [--config C]
 //!                       [--backend analytic|cycle]
 //! sa-lowpower e2e       [--requests N] [--artifacts DIR] [--seed N]
-//! sa-lowpower serve     [--threads N] [--cache off|memory|persistent]
+//! sa-lowpower serve     [--jobs N] [--threads N] [--engine-cap N]
+//!                       [--cache off|memory|persistent]
 //!                       [--cache-budget BYTES] [--cache-dir DIR]
+//!                       [--summary-json PATH]
 //! ```
 //!
 //! All power estimation routes through [`sa_lowpower::engine::SaEngine`];
@@ -29,7 +31,7 @@ use sa_lowpower::coordinator::{
 use sa_lowpower::engine::{
     serve_loop, AnalyticBackend, BackendKind, CachePolicy, ConfigRegistry,
     ConfigSet, CycleBackend, EngineError, EstimatorBackend, FaultPlan, LayerJob,
-    SaEngine, ServeOptions,
+    SaEngine, ServeOptions, DEFAULT_ENGINE_CAP,
 };
 use sa_lowpower::power::AreaModel;
 use sa_lowpower::report::{ablation_table, fig2_tables, fig45_table, headline_table, Table};
@@ -106,6 +108,11 @@ fn usage() -> String {
              (with --cache-budget BYTES and --cache-dir DIR);
              job specs are 'key=value' lines on stdin, e.g.
              'net=resnet50 configs=paper backend=analytic tiles=4'
+  --jobs N   serve only: overlap up to N jobs (default 1 = strict input
+             order; output lines carry a \"line\" tag for reassociation)
+  --engine-cap N                 serve only: engine-pool LRU capacity
+  --summary-json PATH            serve only: write the drain summary
+             (counters + latency/hit-rate histograms) as JSON
 Typed engine failures exit with stable codes (invalid-spec=2 .. internal=10);
 see README 'Error handling & operational limits'.
 Reproduction of 'Low-Power Data Streaming in Systolic Arrays with Bus-Invert
@@ -800,14 +807,28 @@ fn e2e(args: &Args) -> Result<()> {
 }
 
 /// `serve`: sweep-as-a-service. Line-delimited job specs on stdin, one
-/// compact v3 report JSON line per job on stdout; job failures become
-/// per-line error records instead of process exit. All jobs share one
-/// content-addressed result store, so repeated shapes are priced once.
-/// See `engine::serve` and README "Running as a service".
+/// compact v3 report JSON line per job on stdout (tagged with its input
+/// line number; up to `--jobs` overlapped at a time); job failures
+/// become per-line error records instead of process exit. All jobs
+/// share one content-addressed result store, so repeated shapes are
+/// priced once. See `engine::serve` and README "Running as a service".
 fn serve(args: &Args) -> Result<()> {
-    args.validate(&["threads", "cache", "cache-budget", "cache-dir"])
-        .map_err(|e| anyhow!(e))?;
+    args.validate(&[
+        "threads", "jobs", "engine-cap", "cache", "cache-budget", "cache-dir",
+        "summary-json",
+    ])
+    .map_err(|e| anyhow!(e))?;
     let threads = args.get_parse("threads", 2usize).map_err(|e| anyhow!(e))?;
+    let jobs = args.get_parse("jobs", 1usize).map_err(|e| anyhow!(e))?;
+    if jobs == 0 {
+        bail!("--jobs must be >= 1");
+    }
+    let engine_cap = args
+        .get_parse("engine-cap", DEFAULT_ENGINE_CAP)
+        .map_err(|e| anyhow!(e))?;
+    if engine_cap == 0 {
+        bail!("--engine-cap must be >= 1");
+    }
     let budget =
         args.get_parse("cache-budget", 64usize << 20).map_err(|e| anyhow!(e))?;
     let cache = match args.get_or("cache", "memory") {
@@ -819,20 +840,40 @@ fn serve(args: &Args) -> Result<()> {
         },
         other => bail!("--cache must be off|memory|persistent, got '{other}'"),
     };
-    let opts = ServeOptions { threads, cache };
+    let opts = ServeOptions { threads, jobs, engine_cap, cache };
     // Summary and diagnostics go to stderr: stdout carries only report /
-    // error-record lines so the output stays machine-consumable.
-    let summary = serve_loop(std::io::stdin().lock(), std::io::stdout().lock(), &opts)?;
+    // error-record lines so the output stays machine-consumable. The
+    // writer is handed to a gather thread inside the loop, so it must be
+    // the Send-able handle, not a StdoutLock.
+    let summary = serve_loop(std::io::stdin().lock(), std::io::stdout(), &opts)?;
     let cache_note = match summary.cache {
-        Some(c) => format!(
-            "; cache: {} hits, {} misses, {} evictions, {} entries, {} bytes",
-            c.hits, c.misses, c.evictions, c.entries, c.bytes
-        ),
+        Some(c) => {
+            let lost = if c.persist_failures > 0 {
+                format!(", {} persist failures", c.persist_failures)
+            } else {
+                String::new()
+            };
+            format!(
+                "; cache: {} hits, {} misses, {} evictions, {} entries, {} bytes{lost}",
+                c.hits, c.misses, c.evictions, c.entries, c.bytes
+            )
+        }
         None => String::new(),
     };
     eprintln!(
-        "serve: {} jobs, {} completed, {} failed{cache_note}",
-        summary.jobs, summary.completed, summary.failed
+        "serve: {} jobs, {} completed, {} delivered, {} failed; engines: {} built, {} evicted{cache_note}",
+        summary.jobs,
+        summary.completed,
+        summary.delivered,
+        summary.failed,
+        summary.engines_built,
+        summary.engines_evicted
     );
+    eprintln!("serve: latency  {}", summary.latency.render());
+    eprintln!("serve: hit-rate {}", summary.hit_rate.render());
+    if let Some(path) = args.get("summary-json") {
+        std::fs::write(path, summary.to_json_value().render())
+            .map_err(|e| anyhow!("--summary-json '{path}': {e}"))?;
+    }
     Ok(())
 }

@@ -87,6 +87,41 @@ impl Json {
         }
     }
 
+    /// Insert a key/value pair immediately after `anchor` in an
+    /// object, or append when `anchor` is absent. The positioned form
+    /// of [`Json::push`], for optional provenance keys that must land
+    /// at a fixed spot in a byte-stable document (the serve loop's
+    /// `"line"` tag goes right after `"schema"`). Same non-object
+    /// contract as `push`: debug-asserted no-op.
+    pub fn insert_after(&mut self, anchor: &str, key: &str, value: impl Into<Json>) {
+        let r = self.try_insert_after(anchor, key, value);
+        debug_assert!(r.is_ok(), "Json::insert_after on non-object (key '{key}')");
+    }
+
+    /// [`Json::insert_after`], reporting a non-object target instead of
+    /// panicking or dropping the value.
+    pub fn try_insert_after(
+        &mut self,
+        anchor: &str,
+        key: &str,
+        value: impl Into<Json>,
+    ) -> Result<(), String> {
+        match self {
+            Json::Obj(pairs) => {
+                let at = pairs
+                    .iter()
+                    .position(|(k, _)| k == anchor)
+                    .map(|i| i + 1)
+                    .unwrap_or(pairs.len());
+                pairs.insert(at, (key.to_string(), value.into()));
+                Ok(())
+            }
+            other => Err(format!(
+                "Json::try_insert_after of key '{key}' on non-object {other:?}"
+            )),
+        }
+    }
+
     /// Object field lookup.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
@@ -467,6 +502,32 @@ mod tests {
         assert_eq!(back.get("frac").unwrap().as_f64(), Some(0.25));
         assert_eq!(back.get("name").unwrap().as_str(), Some("sweep"));
         assert_eq!(back.get("arr").unwrap().idx(1).unwrap().as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn insert_after_positions_and_appends() {
+        let mut obj = Json::object();
+        obj.push("schema", "x.v1");
+        obj.push("layers", Json::Arr(vec![]));
+        obj.insert_after("schema", "line", 7u64);
+        match &obj {
+            Json::Obj(pairs) => {
+                let keys: Vec<&str> = pairs.iter().map(|(k, _)| k.as_str()).collect();
+                assert_eq!(keys, ["schema", "line", "layers"]);
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
+        // absent anchor appends instead of dropping the value
+        obj.insert_after("nope", "tail", true);
+        assert_eq!(obj.get("tail"), Some(&Json::Bool(true)));
+        match &obj {
+            Json::Obj(pairs) => assert_eq!(pairs.last().unwrap().0, "tail"),
+            other => panic!("expected object, got {other:?}"),
+        }
+        // non-object targets are reported, not mutated
+        let mut num = Json::from(1.0);
+        assert!(num.try_insert_after("a", "b", 1u64).is_err());
+        assert_eq!(num, Json::from(1.0));
     }
 
     #[test]
