@@ -2,20 +2,31 @@
 # CI-friendly smoke check: lint, build, test, example smoke, short perf
 # run, artifacts kept.
 #
-#   rust/scripts/check.sh [output-dir]
+#   rust/scripts/check.sh [--sanitize] [output-dir]
 #
 # Runs formatting + clippy lints (hard failures where the components are
-# installed), the tier-1 gate (release build + full test suite), the
-# quickstart example as an API smoke test (so example breakage fails this
-# script, not a user), and a short hot-path benchmark, archiving logs and
+# installed), the repo-native sa-lint static-analysis gate (hard failure
+# — findings mean the tree drifted from its own contracts), the tier-1
+# gate (release build + full test suite), the quickstart example as an
+# API smoke test (so example breakage fails this script, not a user),
+# and a short hot-path benchmark, archiving logs, lint-report.json and
 # the machine-readable BENCH_perf_hotpath.json under the output directory
 # (default: ci-out/ at the repo root).
+#
+# --sanitize additionally runs the concurrency-sensitive unit tests
+# (util::hash, engine::cache) under nightly ThreadSanitizer and Miri,
+# soft-skipping each when the toolchain component is not installed.
 
 set -euo pipefail
 
 SCRIPT_DIR="$(cd "$(dirname "${BASH_SOURCE[0]}")" && pwd)"
 RUST_DIR="$(dirname "$SCRIPT_DIR")"
 REPO_ROOT="$(dirname "$RUST_DIR")"
+SANITIZE=0
+if [ "${1:-}" = "--sanitize" ]; then
+    SANITIZE=1
+    shift
+fi
 OUT_DIR="${1:-$REPO_ROOT/ci-out}"
 
 mkdir -p "$OUT_DIR"
@@ -40,8 +51,42 @@ fi
 echo "== build (release) =="
 cargo build --release 2>&1 | tee "$OUT_DIR/build.log"
 
+echo "== sa-lint (repo-native static analysis) =="
+# Eight rules over the tree's own contracts (panic paths, lock
+# discipline, schema tags, error table, registry, test registration —
+# see README §"Static analysis"). Findings fail the run before any
+# test executes; the lint-report.v1 document is archived next to the
+# other artifacts.
+cargo run --release --bin sa-lint -- \
+    --json "$OUT_DIR/lint-report.json" 2>&1 | tee "$OUT_DIR/lint.log"
+grep -q '"schema": "sa-lowpower.lint-report.v1"' "$OUT_DIR/lint-report.json"
+
 echo "== tests =="
 cargo test -q 2>&1 | tee "$OUT_DIR/test.log"
+
+if [ "$SANITIZE" -eq 1 ]; then
+    echo "== sanitize (nightly TSan + Miri on hash/cache unit tests) =="
+    # The lock-free hash and the advisory-locked cache are where a data
+    # race would corrupt results silently; drill exactly those tests
+    # under the race detectors. Each detector soft-skips when its
+    # toolchain component is absent (offline/stable-only environments).
+    if rustup run nightly cargo --version >/dev/null 2>&1; then
+        RUSTFLAGS="-Z sanitizer=thread" rustup run nightly \
+            cargo test util::hash engine::cache 2>&1 \
+            | tee "$OUT_DIR/tsan.log" \
+            || { echo "FAIL: ThreadSanitizer run reported errors"; exit 1; }
+    else
+        echo "SKIP: nightly toolchain not installed (TSan needs -Z flags)" \
+            | tee "$OUT_DIR/tsan.log"
+    fi
+    if rustup run nightly cargo miri --version >/dev/null 2>&1; then
+        rustup run nightly cargo miri test util::hash engine::cache 2>&1 \
+            | tee "$OUT_DIR/miri.log" \
+            || { echo "FAIL: Miri run reported errors"; exit 1; }
+    else
+        echo "SKIP: miri component not installed" | tee "$OUT_DIR/miri.log"
+    fi
+fi
 
 echo "== example smoke (quickstart: public API end-to-end) =="
 cargo run --release --example quickstart 2>&1 | tee "$OUT_DIR/quickstart.log"
@@ -142,7 +187,12 @@ strip_run_varying() {
 spec='net=tinycnn configs=paper backend=analytic tiles=2'
 printf '%s\n%s\n' "$spec" "$spec" \
     | cargo run --release -- serve --threads 2 \
+        --summary-json "$OUT_DIR/serve_summary.json" \
     >"$OUT_DIR/serve_smoke.out" 2>"$OUT_DIR/serve_smoke.log"
+# The drain summary document is schema-tagged and internally consistent
+# with the per-line reports (2 jobs in, 2 completed).
+grep -q '"schema": "sa-lowpower.serve-summary.v1"' "$OUT_DIR/serve_summary.json"
+grep -q '"jobs": 2' "$OUT_DIR/serve_summary.json"
 if [ "$(wc -l <"$OUT_DIR/serve_smoke.out")" -ne 2 ]; then
     echo "FAIL: serve emitted $(wc -l <"$OUT_DIR/serve_smoke.out") lines for 2 jobs"
     exit 1

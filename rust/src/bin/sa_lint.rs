@@ -1,0 +1,130 @@
+//! `sa-lint` — the repo-native invariant checker (see README §"Static
+//! analysis" and `src/lint/`).
+//!
+//! ```text
+//! sa-lint [--root DIR] [--json PATH] [PATH_PREFIX...]
+//! ```
+//!
+//! * `--root DIR` — repo root; default: ascend from the current
+//!   directory to the first ancestor holding both `README.md` and
+//!   `rust/`.
+//! * `--json PATH` — also write the `sa-lowpower.lint-report.v1`
+//!   document to `PATH`.
+//! * `PATH_PREFIX` — restrict *file-scoped* findings to files whose
+//!   repo-relative path (with or without the leading `rust/`) starts
+//!   with a given prefix, e.g. `src/ tests/ scripts/`. Findings on the
+//!   cross-cutting sinks (README, Cargo.toml, goldens, CI scripts) are
+//!   always reported: a consistency break is real whichever side of it
+//!   you scoped to.
+//!
+//! Exit codes: 0 clean, 1 findings, 2 internal error (unreadable tree,
+//! bad arguments, unwritable report).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use sa_lowpower::lint;
+
+struct Args {
+    root: Option<PathBuf>,
+    json: Option<PathBuf>,
+    prefixes: Vec<String>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args { root: None, json: None, prefixes: Vec::new() };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => {
+                let v = it.next().ok_or("--root needs a directory argument")?;
+                args.root = Some(PathBuf::from(v));
+            }
+            "--json" => {
+                let v = it.next().ok_or("--json needs a file argument")?;
+                args.json = Some(PathBuf::from(v));
+            }
+            "--help" | "-h" => {
+                println!(
+                    "usage: sa-lint [--root DIR] [--json PATH] [PATH_PREFIX...]\n\
+                     exit codes: 0 clean, 1 findings, 2 internal error"
+                );
+                std::process::exit(0);
+            }
+            flag if flag.starts_with('-') => {
+                return Err(format!("unknown flag `{flag}` (try --help)"));
+            }
+            prefix => args.prefixes.push(prefix.trim_start_matches("./").to_string()),
+        }
+    }
+    Ok(args)
+}
+
+/// Ascend from the current directory to the first ancestor that looks
+/// like the repo root (holds `README.md` and `rust/`).
+fn find_root() -> Result<PathBuf, String> {
+    let mut dir = std::env::current_dir().map_err(|e| format!("getcwd: {e}"))?;
+    loop {
+        if dir.join("README.md").is_file() && dir.join("rust").is_dir() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            return Err(
+                "no repo root found (no ancestor with README.md + rust/); \
+                 pass --root DIR"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// Does `file` fall under one of the user's path prefixes? Prefixes are
+/// matched against the repo-relative path both as-is and with the
+/// leading `rust/` stripped, so `sa-lint src/` works from either the
+/// repo root or `rust/`.
+fn matches_prefix(file: &str, prefixes: &[String]) -> bool {
+    prefixes.iter().any(|p| {
+        file.starts_with(p.as_str())
+            || file
+                .strip_prefix("rust/")
+                .map(|r| r.starts_with(p.as_str()))
+                .unwrap_or(false)
+    })
+}
+
+fn run() -> Result<ExitCode, String> {
+    let args = parse_args()?;
+    let root = match args.root {
+        Some(r) => r,
+        None => find_root()?,
+    };
+    let ctx = lint::load_repo(&root)?;
+    let mut findings = lint::run(&ctx);
+    if !args.prefixes.is_empty() {
+        let rs_paths: Vec<&str> = ctx.files.iter().map(|f| f.path.as_str()).collect();
+        findings.retain(|f| {
+            // Sinks (README, Cargo.toml, goldens, scripts) always pass;
+            // only findings on scanned .rs files are prefix-scoped.
+            let file_scoped = rs_paths.contains(&f.file.as_str());
+            !file_scoped || matches_prefix(&f.file, &args.prefixes)
+        });
+    }
+    let files_scanned = ctx.files.len();
+    print!("{}", lint::render_human(&findings, files_scanned));
+    if let Some(path) = &args.json {
+        let doc = lint::report_json(&findings, files_scanned);
+        std::fs::write(path, doc.render())
+            .map_err(|e| format!("writing {}: {e}", path.display()))?;
+    }
+    Ok(if findings.is_empty() { ExitCode::SUCCESS } else { ExitCode::from(1) })
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("sa-lint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

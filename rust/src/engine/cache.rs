@@ -56,7 +56,10 @@
 //! writers interleave whole, never torn (each append re-seeks to the
 //! real end of file under the lock before writing). A lock left behind
 //! by a crashed process is stolen once it is older than
-//! [`STALE_LOCK_SECS`]. Locking is best-effort by design: a process
+//! [`STALE_LOCK_SECS`] — with the `pid:nanos` payload re-verified
+//! unchanged immediately before removal, so a live lock whose owner
+//! pid was merely reused is never evicted (steals are counted in
+//! [`CacheStats::lock_steals`]). Locking is best-effort by design: a process
 //! that cannot take the lock at **load** degrades to a memory-only
 //! store ([`PersistenceMode::Degraded`], one stderr warning) rather
 //! than failing the run; an append that cannot take it counts a
@@ -70,14 +73,15 @@ use std::io::{Read, Seek, SeekFrom, Write};
 use std::mem::size_of;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
 use crate::activity::ActivityCounts;
 use crate::bf16::as_bits;
 use crate::coding::CodingStack;
 use crate::sa::{Dataflow, Tile};
 use crate::util::hash::{Hash128, Hasher128};
+use crate::util::sync::lock_recover;
 
 use super::backend::EstimatorBackend;
 use super::error::{EngineError, EngineResult};
@@ -160,6 +164,12 @@ pub struct CacheStats {
     /// they must not die silently either (the pre-counter bug: the log
     /// went dead on the first failed write with no signal anywhere).
     pub persist_failures: u64,
+    /// Stale advisory locks this process stole (payload re-verified
+    /// unchanged immediately before removal, so a live holder whose
+    /// pid happened to be reused is never evicted). Always 0 in a
+    /// healthy fleet; nonzero means some process crashed while holding
+    /// the lock and its remains were cleaned up.
+    pub lock_steals: u64,
 }
 
 /// Where a store's persistence stands (see the module docs on
@@ -291,12 +301,6 @@ fn clone_counts(c: &ActivityCounts) -> ActivityCounts {
 /// "budget for N entries" means N entries survive.
 const ENTRY_COST: usize = size_of::<Entry>() + size_of::<(u128, usize)>();
 
-fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    // A panicking holder was inside pure LRU bookkeeping; the structure
-    // is valid (at worst an entry is mid-reorder), so recover the data.
-    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
-}
-
 /// Sharded, byte-bounded, content-addressed store of priced
 /// [`ActivityCounts`], optionally persisted. Shared across engines via
 /// `Arc` (the `serve` loop keys many engines onto one store).
@@ -309,6 +313,7 @@ pub struct ResultCache {
     insertions: AtomicU64,
     evictions: AtomicU64,
     persist_failures: AtomicU64,
+    lock_steals: AtomicU64,
     log: Option<Mutex<RecordLog>>,
     /// True when a log was requested but load-time locking failed
     /// (`log` is `None` and the store runs memory-only).
@@ -334,6 +339,7 @@ impl ResultCache {
             insertions: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             persist_failures: AtomicU64::new(0),
+            lock_steals: AtomicU64::new(0),
             log: None,
             degraded: false,
         }
@@ -376,7 +382,7 @@ impl ResultCache {
         std::fs::create_dir_all(dir).map_err(|e| io_err("create", e))?;
         let path = dir.join(STORE_FILE);
         let lock_path = dir.join(LOCK_FILE);
-        let lock = match LockFile::acquire(&lock_path, lock_tries) {
+        let lock = match LockFile::acquire(&lock_path, lock_tries, &cache.lock_steals) {
             Some(l) => l,
             None => {
                 eprintln!(
@@ -466,7 +472,7 @@ impl ResultCache {
         if self.insert_silent(key, counts) {
             self.insertions.fetch_add(1, Ordering::Relaxed);
             if let Some(log) = &self.log {
-                if !lock_recover(log).append(key, counts) {
+                if !lock_recover(log).append(key, counts, &self.lock_steals) {
                     // The record is live in memory but lost to the log:
                     // the next process recomputes it. Counted so the
                     // drain summary can say persistence is limping.
@@ -504,6 +510,7 @@ impl ResultCache {
             bytes,
             entries,
             persist_failures: self.persist_failures.load(Ordering::Relaxed),
+            lock_steals: self.lock_steals.load(Ordering::Relaxed),
         }
     }
 
@@ -574,32 +581,65 @@ const APPEND_LOCK_TRIES: u32 = 25;
 const LOCK_RETRY_SLEEP_MS: u64 = 10;
 
 /// An acquired advisory lock: a file created with `create_new`
-/// (`O_EXCL` — atomic on every platform std supports), holding the
-/// owner pid for post-mortem debugging, removed on drop. `O_EXCL`
-/// creation is the mutual exclusion; no byte-range locking syscalls are
-/// involved, so this works wherever the filesystem does.
+/// (`O_EXCL` — atomic on every platform std supports), holding a
+/// `pid:nanos` payload, removed on drop. `O_EXCL` creation is the
+/// mutual exclusion; no byte-range locking syscalls are involved, so
+/// this works wherever the filesystem does.
+///
+/// The payload exists for the stale-steal path: a pid alone is not an
+/// identity (the OS reuses pids, so "that pid is gone" — or worse,
+/// "that pid is alive" — proves nothing about *this* lock). The
+/// creation-time nanosecond stamp makes every lock instance's payload
+/// distinct, and [`steal_verified`] re-reads it immediately before
+/// removal: if the bytes changed, a different holder took the lock
+/// between the staleness check and the steal, and the steal is
+/// aborted.
 struct LockFile {
     path: PathBuf,
+}
+
+/// `pid:nanos-since-epoch` — distinct per lock instance (two locks from
+/// one process differ in the stamp; a reused pid differs too).
+fn lock_payload() -> String {
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default()
+        .as_nanos();
+    format!("{}:{}", std::process::id(), nanos)
 }
 
 impl LockFile {
     /// Try to take the lock, retrying up to `tries` times with
     /// [`LOCK_RETRY_SLEEP_MS`] sleeps. A stale lock (mtime older than
-    /// [`STALE_LOCK_SECS`]) is removed and the attempt retried.
-    fn acquire(path: &Path, tries: u32) -> Option<LockFile> {
+    /// [`STALE_LOCK_SECS`], payload verified unchanged) is removed —
+    /// counted in `steals` — and the attempt retried.
+    fn acquire(path: &Path, tries: u32, steals: &AtomicU64) -> Option<LockFile> {
+        Self::acquire_with_ttl(path, tries, steals, Duration::from_secs(STALE_LOCK_SECS))
+    }
+
+    /// [`LockFile::acquire`] with an explicit staleness TTL (tests use
+    /// a tiny TTL to exercise the steal path without a 30 s wait).
+    fn acquire_with_ttl(
+        path: &Path,
+        tries: u32,
+        steals: &AtomicU64,
+        ttl: Duration,
+    ) -> Option<LockFile> {
         for attempt in 0..tries.max(1) {
             match OpenOptions::new().write(true).create_new(true).open(path) {
                 Ok(mut f) => {
-                    // Owner pid, best-effort: diagnostic only.
-                    let _ = write!(f, "{}", std::process::id());
+                    // Best-effort payload; the steal path tolerates
+                    // foreign or empty payloads (bytes only compared
+                    // for equality, never parsed).
+                    let _ = write!(f, "{}", lock_payload());
                     return Some(LockFile { path: path.to_path_buf() });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                    if lock_is_stale(path) {
-                        // Steal: remove and retry immediately. Two
-                        // stealers can race, but the loser just sees
-                        // AlreadyExists again next attempt.
-                        let _ = std::fs::remove_file(path);
+                    if try_steal_stale_with(path, ttl) {
+                        // Two stealers can race; only the one whose
+                        // verified remove ran counts, and the loser
+                        // just sees AlreadyExists again next attempt.
+                        steals.fetch_add(1, Ordering::Relaxed);
                         continue;
                     }
                     if attempt + 1 < tries {
@@ -622,10 +662,10 @@ impl Drop for LockFile {
     }
 }
 
-fn lock_is_stale(path: &Path) -> bool {
+fn lock_is_stale_with(path: &Path, ttl: Duration) -> bool {
     match std::fs::metadata(path).and_then(|m| m.modified()) {
         Ok(mtime) => match mtime.elapsed() {
-            Ok(age) => age > Duration::from_secs(STALE_LOCK_SECS),
+            Ok(age) => age > ttl,
             // mtime in the future (clock skew): not provably stale.
             Err(_) => false,
         },
@@ -633,6 +673,33 @@ fn lock_is_stale(path: &Path) -> bool {
         // released it; not stale, just retry.
         Err(_) => false,
     }
+}
+
+/// Steal `path` if it still looks exactly like the stale lock we
+/// observed: re-read the payload and remove only when the bytes are
+/// unchanged. A holder that released-and-reacquired (or any new
+/// holder) rewrote the payload — its nanosecond stamp differs even if
+/// the pid was reused — so a live lock is never evicted here.
+/// `true` means the remove ran.
+fn steal_verified(path: &Path, observed: &[u8]) -> bool {
+    match std::fs::read(path) {
+        Ok(now) if now == observed => std::fs::remove_file(path).is_ok(),
+        // Changed or vanished: someone else is ahead of us; back off.
+        _ => false,
+    }
+}
+
+/// The full steal protocol: observe the payload, check staleness, then
+/// [`steal_verified`]. Returns `true` when the lock was removed.
+fn try_steal_stale_with(path: &Path, ttl: Duration) -> bool {
+    let observed = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(_) => return false,
+    };
+    if !lock_is_stale_with(path, ttl) {
+        return false;
+    }
+    steal_verified(path, &observed)
 }
 
 struct RecordLog {
@@ -652,12 +719,13 @@ struct RecordLog {
 
 impl RecordLog {
     /// Append one record under the advisory lock; `false` means the
-    /// record was not persisted (the caller counts it).
-    fn append(&mut self, key: Hash128, counts: &ActivityCounts) -> bool {
+    /// record was not persisted (the caller counts it). Stale-lock
+    /// steals along the way land in `steals`.
+    fn append(&mut self, key: Hash128, counts: &ActivityCounts, steals: &AtomicU64) -> bool {
         if !self.ok {
             return false;
         }
-        let lock = match LockFile::acquire(&self.lock_path, APPEND_LOCK_TRIES) {
+        let lock = match LockFile::acquire(&self.lock_path, APPEND_LOCK_TRIES, steals) {
             Some(l) => l,
             None => {
                 self.warn_once("advisory lock stayed contended; record dropped");
@@ -709,6 +777,23 @@ fn encode_header() -> [u8; HEADER_LEN] {
     h
 }
 
+/// Little-endian u32 at the start of `b` (callers guarantee length; a
+/// short slice reads as what is there, zero-extended — no panic path).
+fn le_u32(b: &[u8]) -> u32 {
+    let mut buf = [0u8; 4];
+    let n = b.len().min(4);
+    buf[..n].copy_from_slice(&b[..n]);
+    u32::from_le_bytes(buf)
+}
+
+/// Little-endian u64 at the start of `b` (same contract as [`le_u32`]).
+fn le_u64(b: &[u8]) -> u64 {
+    let mut buf = [0u8; 8];
+    let n = b.len().min(8);
+    buf[..n].copy_from_slice(&b[..n]);
+    u64::from_le_bytes(buf)
+}
+
 /// Validate the header; `Some(records)` is the byte region after it.
 /// `None` means foreign/stale/corrupt — the caller restarts the log.
 fn parse_header(raw: &[u8]) -> Option<&[u8]> {
@@ -718,8 +803,8 @@ fn parse_header(raw: &[u8]) -> Option<&[u8]> {
     if raw[0..4] != STORE_MAGIC {
         return None;
     }
-    let version = u32::from_le_bytes(raw[4..8].try_into().unwrap());
-    let record_len = u32::from_le_bytes(raw[8..12].try_into().unwrap());
+    let version = le_u32(&raw[4..8]);
+    let record_len = le_u32(&raw[8..12]);
     if version != STORE_VERSION || record_len as usize != RECORD_LEN {
         return None;
     }
@@ -727,12 +812,12 @@ fn parse_header(raw: &[u8]) -> Option<&[u8]> {
 }
 
 fn decode_record(rec: &[u8]) -> (Hash128, ActivityCounts) {
-    let hi = u64::from_le_bytes(rec[0..8].try_into().unwrap());
-    let lo = u64::from_le_bytes(rec[8..16].try_into().unwrap());
+    let hi = le_u64(&rec[0..8]);
+    let lo = le_u64(&rec[8..16]);
     let mut words = [0u64; COUNT_FIELDS];
     for (i, w) in words.iter_mut().enumerate() {
         let at = 16 + i * 8;
-        *w = u64::from_le_bytes(rec[at..at + 8].try_into().unwrap());
+        *w = le_u64(&rec[at..at + 8]);
     }
     (Hash128 { hi, lo }, counts_from_words(&words))
 }
@@ -1166,6 +1251,76 @@ mod tests {
         std::fs::remove_file(dir.join(LOCK_FILE)).unwrap();
         let healthy = ResultCache::persistent(1 << 20, &dir).unwrap();
         assert_eq!(healthy.persistence_mode(), PersistenceMode::Active);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_lock_is_stolen_verified_and_counted() {
+        let dir = std::env::temp_dir().join(format!(
+            "salcache-steal-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(LOCK_FILE);
+        // Remains of a crashed holder (arbitrary foreign payload).
+        std::fs::write(&p, b"31337:123456789").unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        let steals = AtomicU64::new(0);
+        let lock =
+            LockFile::acquire_with_ttl(&p, 3, &steals, Duration::from_millis(5));
+        assert!(lock.is_some(), "stale lock must be stolen and reacquired");
+        assert_eq!(steals.load(Ordering::Relaxed), 1, "exactly one steal counted");
+        // The new payload is ours: pid:nanos.
+        let payload = std::fs::read_to_string(&p).unwrap();
+        let pid = format!("{}:", std::process::id());
+        assert!(payload.starts_with(&pid), "payload '{payload}' not ours");
+        drop(lock);
+        assert!(!p.exists(), "release removes the lock file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fresh_lock_is_never_stolen() {
+        let dir = std::env::temp_dir().join(format!(
+            "salcache-nosteal-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(LOCK_FILE);
+        std::fs::write(&p, b"31337:123456789").unwrap();
+        let steals = AtomicU64::new(0);
+        let lock =
+            LockFile::acquire_with_ttl(&p, 2, &steals, Duration::from_secs(3600));
+        assert!(lock.is_none(), "a fresh lock stays held");
+        assert_eq!(steals.load(Ordering::Relaxed), 0);
+        assert_eq!(std::fs::read(&p).unwrap(), b"31337:123456789", "untouched");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mutated_payload_aborts_the_steal() {
+        let dir = std::env::temp_dir().join(format!(
+            "salcache-reverify-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(LOCK_FILE);
+        std::fs::write(&p, b"100:1").unwrap();
+        // Between our staleness observation and the remove, the lock
+        // changed hands (same pid even — reuse): payload differs, so
+        // the verified steal must refuse.
+        std::fs::write(&p, b"100:2").unwrap();
+        assert!(!steal_verified(&p, b"100:1"), "changed payload aborts steal");
+        assert!(p.exists(), "the live holder's lock survives");
+        // With the payload we actually observe now, the steal runs.
+        assert!(steal_verified(&p, b"100:2"));
+        assert!(!p.exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

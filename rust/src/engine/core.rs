@@ -63,7 +63,9 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::sync::{lock_recover, wait_recover};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -85,13 +87,6 @@ use super::registry::ConfigSet;
 /// Hard ceiling on the worker pool width; a request above this is a
 /// spec error, not a resource to exhaust.
 pub const MAX_THREADS: usize = 1024;
-
-/// Lock a mutex, recovering from poisoning. The pool's protected state
-/// stays consistent under unwinding (writers replace whole values), so
-/// a panic on another thread must not wedge every subsequent job.
-fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
 
 /// Input data for a [`LayerJob`] when the caller supplies real tensors
 /// (e.g. activations captured from the e2e inference server) instead of
@@ -443,7 +438,7 @@ impl TaskQueue {
             if let Some(t) = q.pop_front() {
                 return t;
             }
-            q = self.ready.wait(q).unwrap_or_else(PoisonError::into_inner);
+            q = wait_recover(&self.ready, q);
         }
     }
 }
@@ -477,10 +472,7 @@ impl Admission {
                         return Err(EngineError::QueueFull { capacity: cap })
                     }
                     AdmissionPolicy::Block => {
-                        p = self
-                            .freed
-                            .wait(p)
-                            .unwrap_or_else(PoisonError::into_inner);
+                        p = wait_recover(&self.freed, p);
                     }
                 },
                 _ => {
@@ -512,7 +504,7 @@ impl Admission {
     fn wait_idle(&self) {
         let mut p = lock_recover(&self.pending);
         while *p > 0 {
-            p = self.freed.wait(p).unwrap_or_else(PoisonError::into_inner);
+            p = wait_recover(&self.freed, p);
         }
     }
 }

@@ -174,6 +174,7 @@ impl FaultPlan {
         }
         match self.check(layer, stage, tile) {
             None => Ok(()),
+            // sa-lint: allow(no-panic-path) reason="the Panic fault IS the injected failure; per-tile containment of exactly this panic is the feature under test (engine_faults.rs)"
             Some(FaultKind::Panic) => panic!(
                 "fault-injected panic at {layer} tile {tile} ({} stage)",
                 stage.name()

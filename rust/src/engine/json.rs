@@ -47,8 +47,10 @@
 //! cache-off reports stay byte-identical to the golden, and cached
 //! numbers are byte-identical to recomputed ones by the cache's design
 //! (`engine::cache`). Within that object, `"persist_failures"` appears
-//! only when records were lost to the persistent log (non-zero) — a
-//! healthy store renders the same four counters it always has. Reports
+//! only when records were lost to the persistent log and
+//! `"lock_steals"` only when a stale advisory lock was stolen (both
+//! non-zero only) — a healthy store renders the same four counters it
+//! always has. Reports
 //! emitted by the `serve` loop additionally carry a top-level `"line"`
 //! key (the job's 1-based input line, placed right after `"schema"`)
 //! under the same only-when-present convention: file-based sweep
@@ -284,6 +286,9 @@ impl SweepReport {
             if c.persist_failures > 0 {
                 stats.push("persist_failures", c.persist_failures);
             }
+            if c.lock_steals > 0 {
+                stats.push("lock_steals", c.lock_steals);
+            }
             o.push("cache", stats);
         }
         o.push(
@@ -400,6 +405,7 @@ mod tests {
             bytes: 4096,
             entries: 2,
             persist_failures: 0,
+            lock_steals: 0,
         });
         let v = report.to_json_value();
         let c = v.get("cache").expect("cache provenance");
@@ -419,6 +425,15 @@ mod tests {
         assert_eq!(c2.get("persist_failures").unwrap().as_u64(), Some(2));
         match c2 {
             Json::Obj(pairs) => assert_eq!(pairs.len(), 5),
+            other => panic!("expected object, got {other:?}"),
+        }
+        // same convention for stolen stale locks
+        report.cache.as_mut().unwrap().lock_steals = 1;
+        let v3 = report.to_json_value();
+        let c3 = v3.get("cache").unwrap();
+        assert_eq!(c3.get("lock_steals").unwrap().as_u64(), Some(1));
+        match c3 {
+            Json::Obj(pairs) => assert_eq!(pairs.len(), 6),
             other => panic!("expected object, got {other:?}"),
         }
         // and it lands between provenance and payload in key order

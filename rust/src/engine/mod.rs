@@ -103,6 +103,6 @@ pub use self::json::{
 pub use self::registry::{ConfigEntry, ConfigRegistry, ConfigSet, CONFIG_TABLE};
 pub use self::serve::{
     serve_loop, JobSpec, ServeOptions, ServeSummary, DEFAULT_ENGINE_CAP,
-    SERVE_ERROR_SCHEMA, SERVE_ERROR_SCHEMA_V1,
+    SERVE_ERROR_SCHEMA,
 };
 pub use self::telemetry::{Histogram, SERVE_SUMMARY_SCHEMA};

@@ -92,6 +92,7 @@ use std::time::{Duration, Instant};
 
 use crate::coding::CodingStack;
 use crate::util::json::Json;
+use crate::util::sync::{lock_recover, wait_recover};
 use crate::workload::Network;
 
 use super::backend::BackendKind;
@@ -108,9 +109,6 @@ use crate::sa::Dataflow;
 /// loop may emit them interleaved with reports out of input order, with
 /// `"line"` as the join key (see the module docs).
 pub const SERVE_ERROR_SCHEMA: &str = "sa-lowpower.serve-error.v2";
-
-/// The pre-concurrency error-record tag (strict input-order output).
-pub const SERVE_ERROR_SCHEMA_V1: &str = "sa-lowpower.serve-error.v1";
 
 /// Default engine-pool LRU capacity ([`ServeOptions::engine_cap`]).
 pub const DEFAULT_ENGINE_CAP: usize = 8;
@@ -329,7 +327,8 @@ impl ServeSummary {
     /// The machine-readable summary document ([`SERVE_SUMMARY_SCHEMA`],
     /// CLI `--summary-json`). Carries the full histogram ladders and,
     /// when a store ran, its complete counters — `persist_failures`
-    /// included only when non-zero, the `"cache"`-key convention.
+    /// and `lock_steals` included only when non-zero, the `"cache"`-key
+    /// convention.
     pub fn to_json_value(&self) -> Json {
         let mut o = Json::object();
         o.push("schema", SERVE_SUMMARY_SCHEMA);
@@ -351,6 +350,9 @@ impl ServeSummary {
             stats.push("bytes", c.bytes);
             if c.persist_failures > 0 {
                 stats.push("persist_failures", c.persist_failures);
+            }
+            if c.lock_steals > 0 {
+                stats.push("lock_steals", c.lock_steals);
             }
             o.push("cache", stats);
         }
@@ -388,7 +390,7 @@ fn checkout(
     key: &str,
     build: impl FnOnce() -> EngineResult<SaEngine>,
 ) -> EngineResult<Arc<SaEngine>> {
-    let mut p = pool.lock().unwrap();
+    let mut p = lock_recover(pool);
     if let Some(at) = p.entries.iter().position(|(k, _)| k == key) {
         let entry = p.entries.remove(at);
         let engine = Arc::clone(&entry.1);
@@ -474,7 +476,7 @@ pub fn serve_loop<R: BufRead, W: Write + Send>(
     let slot_freed = Condvar::new();
 
     let mut summary = ServeSummary::default();
-    let (completed, delivered, failed, latency, hit_rate) =
+    let gathered: EngineResult<_> =
         std::thread::scope(|scope| {
             let (tx, rx) = mpsc::channel::<JobOutcome>();
             let (pool, store) = (&pool, &store);
@@ -511,7 +513,7 @@ pub fn serve_loop<R: BufRead, W: Write + Send>(
                             hung.store(true, Ordering::SeqCst);
                         }
                     }
-                    let mut n = window.lock().unwrap();
+                    let mut n = lock_recover(window);
                     *n -= 1;
                     drop(n);
                     freed.notify_all();
@@ -535,9 +537,9 @@ pub fn serve_loop<R: BufRead, W: Write + Send>(
                 // observed here (or while waiting) stops admission
                 // before this job is counted.
                 {
-                    let mut n = window.lock().unwrap();
+                    let mut n = lock_recover(window);
                     while *n >= window_cap && !hung.load(Ordering::SeqCst) {
-                        n = freed.wait(n).unwrap();
+                        n = wait_recover(freed, n);
                     }
                     if hung.load(Ordering::SeqCst) {
                         break;
@@ -584,15 +586,23 @@ pub fn serve_loop<R: BufRead, W: Write + Send>(
                 }
             }
             drop(tx);
-            gather.join().expect("serve gather thread panicked")
+            // The gather closure has no panic site of its own, but a
+            // panic must still surface as a typed error, not a second
+            // panic on the serve path.
+            gather.join().map_err(|_| {
+                EngineError::Internal("serve gather thread panicked".to_string())
+            })
         });
+    let (completed, delivered, failed, latency, hit_rate) = gathered?;
 
     summary.completed = completed;
     summary.delivered = delivered;
     summary.failed = failed;
     summary.latency = latency;
     summary.hit_rate = hit_rate;
-    let pool = pool.into_inner().unwrap();
+    // A poisoned pool mutex only means some job thread panicked while
+    // touching the LRU list; the entries themselves are whole.
+    let pool = pool.into_inner().unwrap_or_else(|p| p.into_inner());
     summary.engines_built = pool.built;
     summary.engines_evicted = pool.evicted;
     // Dropping the pool drains every remaining engine (all jobs are
@@ -640,13 +650,16 @@ fn run_job(
     })?;
     let before = store.as_ref().map(|s| s.stats());
     let report = engine.sweep_with_timeout(&net, spec.timeout)?;
-    let rate = before.and_then(|b| {
-        let after = store.as_ref().unwrap().stats();
-        let hits = after.hits.saturating_sub(b.hits);
-        let misses = after.misses.saturating_sub(b.misses);
-        let touched = hits + misses;
-        (touched > 0).then(|| 100.0 * hits as f64 / touched as f64)
-    });
+    let rate = match (before, store.as_ref()) {
+        (Some(b), Some(s)) => {
+            let after = s.stats();
+            let hits = after.hits.saturating_sub(b.hits);
+            let misses = after.misses.saturating_sub(b.misses);
+            let touched = hits + misses;
+            (touched > 0).then(|| 100.0 * hits as f64 / touched as f64)
+        }
+        _ => None,
+    };
     Ok((report, rate))
 }
 
@@ -991,10 +1004,21 @@ net=atlantis
         assert_eq!(lat.get("unit").unwrap().as_str(), Some("ms"));
         let hr = v.get("hit_rate_pct").unwrap();
         assert_eq!(hr.get("count").unwrap().as_u64(), Some(2));
-        // a healthy run reports its store without a persist_failures key
+        // a healthy run reports its store without the trouble keys
         let cache = v.get("cache").unwrap();
         assert!(cache.get("hits").unwrap().as_u64().unwrap() > 0);
         assert!(cache.get("persist_failures").is_none());
+        assert!(cache.get("lock_steals").is_none());
+        // ...and a troubled one carries both, like persist_failures
+        let mut troubled = summary.clone();
+        if let Some(c) = troubled.cache.as_mut() {
+            c.lock_steals = 3;
+        }
+        let tv = troubled.to_json_value();
+        assert_eq!(
+            tv.get("cache").unwrap().get("lock_steals").unwrap().as_u64(),
+            Some(3)
+        );
         // the document round-trips through the parser
         let reparsed = Json::parse(&v.render()).unwrap();
         assert_eq!(reparsed, v);

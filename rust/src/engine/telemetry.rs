@@ -131,17 +131,14 @@ impl Histogram {
             return "(none)".to_string();
         }
         let mut parts: Vec<String> = Vec::new();
+        let top = self.bounds.last().copied().unwrap_or(0.0);
         for (i, &c) in self.counts.iter().enumerate() {
             if c == 0 {
                 continue;
             }
             match self.bounds.get(i) {
                 Some(b) => parts.push(format!("<={}{}:{c}", trim_f64(*b), self.unit)),
-                None => parts.push(format!(
-                    ">{}{}:{c}",
-                    trim_f64(*self.bounds.last().unwrap()),
-                    self.unit
-                )),
+                None => parts.push(format!(">{}{}:{c}", trim_f64(top), self.unit)),
             }
         }
         format!(
@@ -266,5 +263,79 @@ mod tests {
         assert_eq!(at(4.0), 1);
         assert_eq!(at(8.0), 1);
         assert_eq!(at(16.0), 0);
+    }
+
+    #[test]
+    fn zero_duration_jobs_land_in_the_first_bucket() {
+        // A cache-hit job can take less time than the clock resolves:
+        // 0.0 is a legal sample, not a degenerate one.
+        let mut h = Histogram::latency_ms();
+        h.record(0.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.count_at(0.0), 1, "0.0 <= first bound");
+        let v = h.to_json_value();
+        let first = v.get("buckets").unwrap().idx(0).unwrap();
+        assert_eq!(first.get("le").unwrap().as_f64(), Some(0.25));
+        assert_eq!(first.get("count").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("min").unwrap().as_f64(), Some(0.0));
+        assert_eq!(v.get("mean").unwrap().as_f64(), Some(0.0));
+        let s = h.render();
+        assert!(s.contains("<=0.25ms:1"), "{s}");
+        assert!(s.contains("min 0 mean 0 max 0"), "{s}");
+    }
+
+    #[test]
+    fn past_top_bucket_samples_count_as_overflow_everywhere() {
+        let mut h = Histogram::latency_ms();
+        let top = *LATENCY_BOUNDS_MS.last().unwrap();
+        h.record(top); // inclusive: NOT overflow
+        h.record(top + 0.001); // barely past: overflow
+        h.record(f64::MAX); // extreme: overflow, no panic, no lost count
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.count_at(top), 1);
+        assert_eq!(h.count_at(f64::MAX), 2);
+        let v = h.to_json_value();
+        assert_eq!(v.get("overflow").unwrap().as_u64(), Some(2));
+        let s = h.render();
+        assert!(s.contains(">16384ms:2"), "{s}");
+    }
+
+    #[test]
+    fn hit_rate_exact_bounds_zero_and_hundred() {
+        // All-miss and all-hit jobs produce exactly 0.0 and 100.0 —
+        // both must land inside the ladder, never in overflow.
+        let mut h = Histogram::hit_rate_pct();
+        h.record(0.0);
+        h.record(100.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.count_at(0.0), 1, "0.0 in the first decile");
+        assert_eq!(h.count_at(100.0), 1, "100.0 in the last decile");
+        let v = h.to_json_value();
+        assert_eq!(v.get("overflow").unwrap().as_u64(), Some(0));
+        assert_eq!(v.get("min").unwrap().as_f64(), Some(0.0));
+        assert_eq!(v.get("max").unwrap().as_f64(), Some(100.0));
+        assert_eq!(v.get("mean").unwrap().as_f64(), Some(50.0));
+    }
+
+    #[test]
+    fn empty_drain_summary_renders_cleanly() {
+        // A serve run that admitted zero jobs drains straight away:
+        // both ladders render "(none)" and the JSON document still
+        // carries complete (all-zero) ladders.
+        use super::super::serve::ServeSummary;
+        let summary = ServeSummary::default();
+        assert_eq!(summary.latency.render(), "(none)");
+        assert_eq!(summary.hit_rate.render(), "(none)");
+        let v = summary.to_json_value();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some(SERVE_SUMMARY_SCHEMA));
+        assert_eq!(v.get("jobs").unwrap().as_u64(), Some(0));
+        let lat = v.get("latency_ms").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_u64(), Some(0));
+        assert!(lat.get("min").is_none(), "no aggregates from zero samples");
+        assert_eq!(
+            lat.get("buckets").unwrap().as_arr().unwrap().len(),
+            LATENCY_BOUNDS_MS.len()
+        );
+        assert!(v.get("cache").is_none(), "no store, no cache object");
     }
 }

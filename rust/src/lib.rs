@@ -30,12 +30,15 @@
 //!   (the worker pool now lives behind [`engine`]).
 //! * [`report`] — table / CSV emitters for the paper's figures.
 //! * [`util`] — in-tree RNG, CLI, bench and property-test harnesses.
+//! * [`lint`] — the `sa-lint` static-analysis pass: lexer, rule engine,
+//!   pragma allowlisting (see README §"Static analysis").
 
 pub mod activity;
 pub mod bf16;
 pub mod coding;
 pub mod coordinator;
 pub mod engine;
+pub mod lint;
 pub mod power;
 pub mod report;
 pub mod runtime;

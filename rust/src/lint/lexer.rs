@@ -1,0 +1,558 @@
+//! A minimal hand-rolled Rust lexer for `sa-lint`.
+//!
+//! This is not a compiler front end: it tokenizes just well enough for
+//! the rule engine to reason lexically — identifiers, string/char
+//! literals, numbers, lifetimes and single-character punctuation, with
+//! comments stripped (but scanned for suppression pragmas). Three
+//! structural post-passes annotate the token stream:
+//!
+//! * **test regions** — tokens inside an item carrying `#[cfg(test)]`
+//!   are flagged `in_test`, so rules that police production code skip
+//!   test modules and `#[cfg(test)]` helper fns;
+//! * **fn spans** — every `fn name { … }` body's token range, so rules
+//!   can ask "what is the enclosing function?" (rule 2's `lock_recover`
+//!   exemption, rule 4's guard-mention check);
+//! * **pragmas** — `// sa-lint: allow(<rule>) reason="…"` comments,
+//!   collected with their line numbers for the suppression pass.
+//!
+//! Known approximations (all conservative for our rules): raw strings
+//! support up to any number of `#`s, lifetimes are distinguished from
+//! char literals by lookahead, and multi-character operators arrive as
+//! single-character punctuation tokens (patterns match accordingly).
+
+/// Token class. Comments never appear in the stream (see [`Pragma`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    /// String literal (normal, raw, or byte); `text` is the raw body
+    /// between the quotes, escapes unprocessed.
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    Num,
+    /// Lifetime (`'a`), including the quote in `text`.
+    Lifetime,
+    /// One punctuation character (`::` is two `Punct` tokens).
+    Punct,
+}
+
+/// One lexical token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    /// Inside an item gated by `#[cfg(test)]` (post-pass).
+    pub in_test: bool,
+}
+
+impl Tok {
+    pub fn is(&self, kind: TokKind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.is(TokKind::Ident, name)
+    }
+}
+
+/// One `sa-lint:` suppression comment.
+///
+/// Grammar: `// sa-lint: allow(<rule-id>) reason="<non-empty text>"`.
+/// A pragma suppresses findings of `rule` reported on its own line or
+/// the line directly below it. A pragma without a non-empty reason is
+/// itself reported (`invalid-pragma`) and suppresses nothing.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    pub line: u32,
+    /// The rule id inside `allow(...)` (may be empty if malformed).
+    pub rule: String,
+    /// A non-empty `reason="..."` was present.
+    pub has_reason: bool,
+}
+
+/// The token range of one `fn` body (inclusive of both braces).
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    /// Index of the opening `{` token.
+    pub start: usize,
+    /// Index of the matching `}` token.
+    pub end: usize,
+}
+
+/// A lexed source file: code tokens, suppression pragmas, fn spans.
+#[derive(Debug, Default)]
+pub struct LexedFile {
+    pub toks: Vec<Tok>,
+    pub pragmas: Vec<Pragma>,
+    pub fns: Vec<FnSpan>,
+}
+
+impl LexedFile {
+    /// Innermost `fn` whose body contains token `idx`.
+    pub fn enclosing_fn(&self, idx: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.start <= idx && idx <= f.end)
+            .min_by_key(|f| f.end - f.start)
+    }
+}
+
+/// Lex one file. Never fails: unrecognized bytes become `Punct` tokens,
+/// so a partially-invalid file still yields a usable stream.
+pub fn lex(src: &str) -> LexedFile {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut pragmas: Vec<Pragma> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let n = b.len();
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also `///`, `//!`): scan for a pragma, drop.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            if let Some(p) = parse_pragma(&text, line) {
+                pragmas.push(p);
+            }
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw / byte-raw string: r"…", r#"…"#, br"…", …
+        if (c == 'r' || c == 'b') && raw_string_at(&b, i) {
+            let mut j = i + 1;
+            if b[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            // b[j] == '"' guaranteed by raw_string_at
+            j += 1;
+            let body_start = j;
+            let start_line = line;
+            'scan: while j < n {
+                if b[j] == '\n' {
+                    line += 1;
+                } else if b[j] == '"' {
+                    let mut k = 0usize;
+                    while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        break 'scan;
+                    }
+                }
+                j += 1;
+            }
+            let body: String = b[body_start..j.min(n)].iter().collect();
+            toks.push(Tok { kind: TokKind::Str, text: body, line: start_line, in_test: false });
+            i = (j + 1 + hashes).min(n);
+            continue;
+        }
+        // Byte string / byte char: b"…" / b'…'
+        if c == 'b' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '\'') {
+            i += 1;
+            // fall through to the quote handling below on next loop? No:
+            // handle inline by rewriting c.
+            let q = b[i];
+            let (tok, ni, nl) = scan_quoted(&b, i, line, q);
+            toks.push(tok);
+            i = ni;
+            line = nl;
+            continue;
+        }
+        // Normal string.
+        if c == '"' {
+            let (tok, ni, nl) = scan_quoted(&b, i, line, '"');
+            toks.push(tok);
+            i = ni;
+            line = nl;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let next = b.get(i + 1).copied().unwrap_or(' ');
+            let after = b.get(i + 2).copied().unwrap_or(' ');
+            let is_lifetime =
+                (next.is_alphabetic() || next == '_') && after != '\'' && next != '\\';
+            if is_lifetime {
+                let start = i;
+                i += 1;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: b[start..i].iter().collect(),
+                    line,
+                    in_test: false,
+                });
+            } else {
+                let (tok, ni, nl) = scan_quoted(&b, i, line, '\'');
+                toks.push(tok);
+                i = ni;
+                line = nl;
+            }
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[start..i].iter().collect(),
+                line,
+                in_test: false,
+            });
+            continue;
+        }
+        // Number (a `.` joins only when followed by a digit, so `0..9`
+        // lexes as num, punct, punct, num).
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n
+                && (b[i].is_alphanumeric()
+                    || b[i] == '_'
+                    || (b[i] == '.'
+                        && b.get(i + 1).map(|d| d.is_ascii_digit()).unwrap_or(false)
+                        && !b[start..i].iter().any(|&d| d == '.')))
+            {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: b[start..i].iter().collect(),
+                line,
+                in_test: false,
+            });
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line, in_test: false });
+        i += 1;
+    }
+    let mut lexed = LexedFile { toks, pragmas, fns: Vec::new() };
+    mark_test_regions(&mut lexed.toks);
+    lexed.fns = find_fn_spans(&lexed.toks);
+    lexed
+}
+
+/// Is position `i` (at `r` or `b`) the start of a raw string literal?
+fn raw_string_at(b: &[char], i: usize) -> bool {
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+        if j >= b.len() || b[j] != 'r' {
+            return false;
+        }
+    }
+    // b[j] == 'r'
+    j += 1;
+    while j < b.len() && b[j] == '#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == '"'
+}
+
+/// Scan a quoted literal starting at the opening quote `b[i] == q`.
+/// Returns (token, next index, next line).
+fn scan_quoted(b: &[char], i: usize, mut line: u32, q: char) -> (Tok, usize, u32) {
+    let start_line = line;
+    let n = b.len();
+    let mut j = i + 1;
+    let body_start = j;
+    while j < n {
+        if b[j] == '\\' {
+            j += 2;
+            continue;
+        }
+        if b[j] == '\n' {
+            line += 1;
+        } else if b[j] == q {
+            break;
+        }
+        j += 1;
+    }
+    let body: String = b[body_start..j.min(n)].iter().collect();
+    let kind = if q == '"' { TokKind::Str } else { TokKind::Char };
+    (Tok { kind, text: body, line: start_line, in_test: false }, (j + 1).min(n), line)
+}
+
+/// `// sa-lint: allow(rule) reason="…"` — or `None` if the comment is
+/// not a pragma at all. A pragma must be a *standalone* plain comment:
+/// the text directly after `//` (whitespace aside) is `sa-lint:`. Doc
+/// comments (`///`, `//!`) and prose that merely *mentions* the pragma
+/// grammar therefore never parse as pragmas.
+fn parse_pragma(comment: &str, line: u32) -> Option<Pragma> {
+    let body = comment.strip_prefix("//")?;
+    let rest = body.trim_start().strip_prefix("sa-lint:")?;
+    let rest = rest.trim_start();
+    let rule = match rest.strip_prefix("allow(") {
+        Some(r) => r.split(')').next().unwrap_or("").trim().to_string(),
+        None => String::new(),
+    };
+    let has_reason = match rest.find("reason=\"") {
+        Some(p) => {
+            let body = &rest[p + "reason=\"".len()..];
+            body.split('"').next().map(|r| !r.trim().is_empty()).unwrap_or(false)
+        }
+        None => false,
+    };
+    Some(Pragma { line, rule, has_reason })
+}
+
+/// Flag tokens inside `#[cfg(test)]`-gated items. After the attribute
+/// (and any further `#[…]` attributes), the item extends to the
+/// matching `}` of its first body brace — or to the first `;` at
+/// nesting depth zero for brace-less items (`use`, `type`).
+fn mark_test_regions(toks: &mut [Tok]) {
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if toks[i].is_punct('#')
+            && i + 1 < n
+            && toks[i + 1].is_punct('[')
+            && is_cfg_test_attr(toks, i + 1)
+        {
+            let attr_start = i;
+            // Skip this and any following attributes.
+            let mut j = skip_attr(toks, i + 1);
+            while j + 1 < n && toks[j].is_punct('#') && toks[j + 1].is_punct('[') {
+                j = skip_attr(toks, j + 1);
+            }
+            // Find the item body: first `{` outside parens, or `;`.
+            let mut paren = 0i32;
+            let mut end = j;
+            while end < n {
+                let t = &toks[end];
+                if t.is_punct('(') {
+                    paren += 1;
+                } else if t.is_punct(')') {
+                    paren -= 1;
+                } else if paren == 0 && t.is_punct(';') {
+                    break;
+                } else if paren == 0 && t.is_punct('{') {
+                    end = match_brace(toks, end);
+                    break;
+                }
+                end += 1;
+            }
+            let end = end.min(n - 1);
+            for t in toks[attr_start..=end].iter_mut() {
+                t.in_test = true;
+            }
+            i = end + 1;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+/// Does the attribute starting at the `[` token `open` contain
+/// `cfg ( … test … )`? (`cfg(not(test))` gates *production* code and
+/// must not match.)
+fn is_cfg_test_attr(toks: &[Tok], open: usize) -> bool {
+    let close = skip_attr(toks, open);
+    let span = &toks[open..close.min(toks.len())];
+    span.iter().any(|t| t.is_ident("cfg"))
+        && span.iter().any(|t| t.is_ident("test"))
+        && !span.iter().any(|t| t.is_ident("not"))
+}
+
+/// Given the index of an attribute's `[`, return the index just past
+/// its matching `]`.
+fn skip_attr(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < toks.len() {
+        if toks[i].is_punct('[') {
+            depth += 1;
+        } else if toks[i].is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// Index of the `}` matching the `{` at `open` (or the last token).
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < toks.len() {
+        if toks[i].is_punct('{') {
+            depth += 1;
+        } else if toks[i].is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Every `fn name … { … }` body span. Bodyless signatures (trait
+/// methods ending in `;`) are skipped.
+fn find_fn_spans(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    let n = toks.len();
+    for i in 0..n {
+        if !toks[i].is_ident("fn") {
+            continue;
+        }
+        let Some(name_tok) = toks.get(i + 1) else { continue };
+        if name_tok.kind != TokKind::Ident {
+            continue;
+        }
+        // Find the body `{` outside any parens (the argument list, a
+        // `where` clause's bounds); stop at `;` (no body).
+        let mut paren = 0i32;
+        let mut j = i + 2;
+        let mut open = None;
+        while j < n {
+            let t = &toks[j];
+            if t.is_punct('(') {
+                paren += 1;
+            } else if t.is_punct(')') {
+                paren -= 1;
+            } else if paren == 0 && t.is_punct(';') {
+                break;
+            } else if paren == 0 && t.is_punct('{') {
+                open = Some(j);
+                break;
+            }
+            j += 1;
+        }
+        if let Some(open) = open {
+            let close = match_brace(toks, open);
+            spans.push(FnSpan { name: name_tok.text.clone(), start: open, end: close });
+        }
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idents_strings_numbers_and_puncts() {
+        let f = lex("let x = foo(\"a b\", 0..10, 'c', 'a_lt);");
+        let idents: Vec<&str> = f
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, ["let", "x", "foo"]);
+        assert!(f.toks.iter().any(|t| t.is(TokKind::Str, "a b")));
+        assert!(f.toks.iter().any(|t| t.is(TokKind::Num, "0")));
+        assert!(f.toks.iter().any(|t| t.is(TokKind::Num, "10")));
+        assert!(f.toks.iter().any(|t| t.is(TokKind::Char, "c")));
+        assert!(f.toks.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "'a_lt"));
+    }
+
+    #[test]
+    fn comments_are_stripped_and_raw_strings_survive() {
+        let f = lex("// line panic!\n/* block /* nested */ unwrap() */ r#\"raw \"quote\"\"# x");
+        assert!(!f.toks.iter().any(|t| t.is_ident("panic")));
+        assert!(!f.toks.iter().any(|t| t.is_ident("unwrap")));
+        assert!(f.toks.iter().any(|t| t.kind == TokKind::Str && t.text.contains("raw")));
+        let x = f.toks.iter().find(|t| t.is_ident("x")).unwrap();
+        assert_eq!(x.line, 2, "line counting through comments");
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let f = lex(r#"let s = "a\"b"; done"#);
+        assert!(f.toks.iter().any(|t| t.kind == TokKind::Str && t.text == "a\\\"b"));
+        assert!(f.toks.iter().any(|t| t.is_ident("done")));
+    }
+
+    #[test]
+    fn cfg_test_items_are_flagged() {
+        let src = "fn live() { a(); }\n\
+                   #[cfg(test)]\nmod tests {\n fn t() { b(); }\n}\n\
+                   fn live2() { c(); }\n\
+                   #[cfg(test)]\nfn helper(x: usize) { d(); }\n\
+                   fn live3() { e(); }";
+        let f = lex(src);
+        let flag = |name: &str| f.toks.iter().find(|t| t.is_ident(name)).unwrap().in_test;
+        assert!(!flag("a"));
+        assert!(flag("b"));
+        assert!(!flag("c"));
+        assert!(flag("d"));
+        assert!(!flag("e"));
+    }
+
+    #[test]
+    fn fn_spans_are_innermost() {
+        let f = lex("fn outer() { fn inner() { x(); } y(); }");
+        let xi = f.toks.iter().position(|t| t.is_ident("x")).unwrap();
+        let yi = f.toks.iter().position(|t| t.is_ident("y")).unwrap();
+        assert_eq!(f.enclosing_fn(xi).unwrap().name, "inner");
+        assert_eq!(f.enclosing_fn(yi).unwrap().name, "outer");
+    }
+
+    #[test]
+    fn pragma_grammar() {
+        let f = lex(
+            "// sa-lint: allow(no-panic-path) reason=\"intentional\"\n\
+             // sa-lint: allow(raw-lock)\n\
+             // just a comment\n",
+        );
+        assert_eq!(f.pragmas.len(), 2);
+        assert_eq!(f.pragmas[0].rule, "no-panic-path");
+        assert!(f.pragmas[0].has_reason);
+        assert_eq!(f.pragmas[0].line, 1);
+        assert_eq!(f.pragmas[1].rule, "raw-lock");
+        assert!(!f.pragmas[1].has_reason);
+    }
+}

@@ -1,0 +1,434 @@
+//! `sa-lint`: a repo-native static-analysis pass over the engine's
+//! concurrency and schema contracts.
+//!
+//! PRs 6–8 accumulated invariants that existed only as prose ("no
+//! panics on the submit/wait path", "every lock goes through
+//! `lock_recover`", "schema tags match the goldens"). This module turns
+//! them into mechanical checks: a hand-rolled lexer ([`lexer`]), eight
+//! rules ([`rules`]), and a runner that applies pragma suppression and
+//! renders findings human-readable or as a
+//! [`LINT_REPORT_SCHEMA`]-tagged JSON document.
+//!
+//! The pass is deliberately *targeted* the way the source paper
+//! targets encoding where switching activity is high: rules 1–4 scan
+//! only the modules where a silent violation corrupts results
+//! (`engine/`, `coordinator/`, `sa/`), while rules 5–8 are repo-wide
+//! consistency checks.
+//!
+//! Allowlisting: `// sa-lint: allow(<rule-id>) reason="..."` on the
+//! finding's line or the line directly above suppresses it. A pragma
+//! without a non-empty reason (or naming an unknown rule) is itself a
+//! finding and suppresses nothing.
+//!
+//! No external crates: the module walker is `std::fs`, the JSON writer
+//! is `util::json`.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+pub use lexer::{lex, LexedFile};
+
+/// Schema tag for the JSON report (`sa-lint --json PATH`).
+pub const LINT_REPORT_SCHEMA: &str = "sa-lowpower.lint-report.v1";
+
+/// One diagnostic: which rule, where, what the line says, and why it
+/// matters.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Repo-root-relative path (e.g. `rust/src/engine/serve.rs`).
+    pub file: String,
+    pub line: u32,
+    /// The offending source line, trimmed (may be empty for findings
+    /// about absent things, e.g. a missing README table row).
+    pub snippet: String,
+    pub why: String,
+}
+
+impl Finding {
+    /// `file:line: [rule] why` plus the snippet when there is one.
+    pub fn render(&self) -> String {
+        let mut s = format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.why);
+        if !self.snippet.is_empty() {
+            s.push_str("\n    | ");
+            s.push_str(&self.snippet);
+        }
+        s
+    }
+
+    fn to_json_value(&self) -> Json {
+        let mut o = Json::object();
+        o.push("rule", self.rule);
+        o.push("file", self.file.as_str());
+        o.push("line", u64::from(self.line));
+        o.push("snippet", self.snippet.as_str());
+        o.push("why", self.why.as_str());
+        o
+    }
+}
+
+/// One lexed Rust source file.
+pub struct SourceFile {
+    /// Repo-root-relative path.
+    pub path: String,
+    pub text: String,
+    pub lex: LexedFile,
+}
+
+impl SourceFile {
+    pub fn parse(path: impl Into<String>, text: impl Into<String>) -> SourceFile {
+        let text = text.into();
+        let lex = lex(&text);
+        SourceFile { path: path.into(), text, lex }
+    }
+
+    /// Build a finding anchored at `line`, pulling the snippet from the
+    /// source text (trimmed, capped).
+    pub fn finding(&self, rule: &'static str, line: u32, why: String) -> Finding {
+        let snippet = self
+            .text
+            .lines()
+            .nth(line.saturating_sub(1) as usize)
+            .map(|l| {
+                let t = l.trim();
+                if t.len() > 96 {
+                    let cut = (0..=96).rev().find(|&i| t.is_char_boundary(i)).unwrap_or(0);
+                    format!("{}…", &t[..cut])
+                } else {
+                    t.to_string()
+                }
+            })
+            .unwrap_or_default();
+        Finding { rule, file: self.path.clone(), line, snippet, why }
+    }
+}
+
+/// Everything a rule can look at. The fixture suite builds these by
+/// hand; the binary builds one with [`load_repo`].
+#[derive(Default)]
+pub struct LintContext {
+    /// Lexed `.rs` files (src tree + top-level integration tests).
+    pub files: Vec<SourceFile>,
+    /// `(path, text)` of goldens under `rust/tests/golden/`.
+    pub goldens: Vec<(String, String)>,
+    /// `(path, text)` of `check.sh` and `ci.yml` (schema-tag sinks).
+    pub scripts: Vec<(String, String)>,
+    /// `(path, text)` of `rust/Cargo.toml`.
+    pub cargo_toml: Option<(String, String)>,
+    /// `(path, text)` of the top-level `README.md`.
+    pub readme: Option<(String, String)>,
+    /// File stems under `rust/benches/` (must be `[[bench]]`-registered).
+    pub bench_files: Vec<String>,
+    /// Paths (into `files`) of top-level integration test files.
+    pub test_files: Vec<String>,
+}
+
+/// Walk the repo rooted at `root` into a [`LintContext`].
+///
+/// Scope: `rust/src/**/*.rs`, `rust/tests/*.rs` (top level only — the
+/// deliberately-violating corpus under `rust/tests/lint_fixtures/` is
+/// excluded), goldens, `check.sh`, `ci.yml`, `Cargo.toml`, `README.md`,
+/// bench stems. Paths in the context are repo-root-relative with `/`
+/// separators, in sorted order, so reports are byte-stable.
+pub fn load_repo(root: &Path) -> Result<LintContext, String> {
+    let mut ctx = LintContext::default();
+    let rel = |p: &Path| -> String {
+        p.strip_prefix(root)
+            .unwrap_or(p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/")
+    };
+    let read = |p: &Path| -> Result<String, String> {
+        fs::read_to_string(p).map_err(|e| format!("{}: {e}", p.display()))
+    };
+
+    // rust/src/**/*.rs (recursive).
+    let mut src_files = Vec::new();
+    collect_rs(&root.join("rust/src"), &mut src_files)?;
+    src_files.sort();
+    for p in &src_files {
+        ctx.files.push(SourceFile::parse(rel(p), read(p)?));
+    }
+
+    // rust/tests/*.rs — top level only.
+    let tests_dir = root.join("rust/tests");
+    let mut test_paths = Vec::new();
+    if let Ok(rd) = fs::read_dir(&tests_dir) {
+        for entry in rd.flatten() {
+            let p = entry.path();
+            if p.is_file() && p.extension().map(|e| e == "rs").unwrap_or(false) {
+                test_paths.push(p);
+            }
+        }
+    }
+    test_paths.sort();
+    for p in &test_paths {
+        let path = rel(p);
+        ctx.test_files.push(path.clone());
+        ctx.files.push(SourceFile::parse(path, read(p)?));
+    }
+
+    // Goldens.
+    let mut goldens = Vec::new();
+    if let Ok(rd) = fs::read_dir(tests_dir.join("golden")) {
+        for entry in rd.flatten() {
+            let p = entry.path();
+            if p.is_file() && p.extension().map(|e| e == "json").unwrap_or(false) {
+                goldens.push(p);
+            }
+        }
+    }
+    goldens.sort();
+    for p in &goldens {
+        ctx.goldens.push((rel(p), read(p)?));
+    }
+
+    // Schema-tag sinks outside the goldens: the CI smoke greps.
+    for p in [root.join("rust/scripts/check.sh"), root.join(".github/workflows/ci.yml")] {
+        if p.is_file() {
+            ctx.scripts.push((rel(&p), read(&p)?));
+        }
+    }
+
+    let cargo = root.join("rust/Cargo.toml");
+    if cargo.is_file() {
+        ctx.cargo_toml = Some((rel(&cargo), read(&cargo)?));
+    }
+    let readme = root.join("README.md");
+    if readme.is_file() {
+        ctx.readme = Some((rel(&readme), read(&readme)?));
+    }
+
+    let mut benches = Vec::new();
+    if let Ok(rd) = fs::read_dir(root.join("rust/benches")) {
+        for entry in rd.flatten() {
+            let p = entry.path();
+            if p.is_file() && p.extension().map(|e| e == "rs").unwrap_or(false) {
+                if let Some(stem) = p.file_stem() {
+                    benches.push(stem.to_string_lossy().into_owned());
+                }
+            }
+        }
+    }
+    benches.sort();
+    ctx.bench_files = benches;
+    Ok(ctx)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) => return Err(format!("{}: {e}", dir.display())),
+    };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule over `ctx`, report invalid pragmas, apply pragma
+/// suppression, and return the surviving findings sorted by
+/// `(file, line, rule)`.
+pub fn run(ctx: &LintContext) -> Vec<Finding> {
+    let mut found = rules::run_all(ctx);
+    for f in &ctx.files {
+        for p in &f.lex.pragmas {
+            let known = rules::RULES.iter().any(|(id, _)| *id == p.rule);
+            if !p.has_reason {
+                found.push(f.finding(
+                    "invalid-pragma",
+                    p.line,
+                    format!(
+                        "sa-lint pragma for `{}` has no reason=\"...\" — an \
+                         unexplained allowlist entry suppresses nothing",
+                        p.rule
+                    ),
+                ));
+            } else if !known {
+                found.push(f.finding(
+                    "invalid-pragma",
+                    p.line,
+                    format!("sa-lint pragma names unknown rule `{}`", p.rule),
+                ));
+            }
+        }
+    }
+    found.retain(|fi| !suppressed(ctx, fi));
+    found.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    found
+}
+
+/// A finding is suppressed by a well-formed pragma for its rule on the
+/// same line or the line directly above. `invalid-pragma` findings are
+/// never suppressible.
+fn suppressed(ctx: &LintContext, fi: &Finding) -> bool {
+    if fi.rule == "invalid-pragma" {
+        return false;
+    }
+    let Some(f) = ctx.files.iter().find(|f| f.path == fi.file) else {
+        return false;
+    };
+    f.lex.pragmas.iter().any(|p| {
+        p.has_reason
+            && p.rule == fi.rule
+            && (p.line == fi.line || p.line + 1 == fi.line)
+    })
+}
+
+/// Assemble the `sa-lowpower.lint-report.v1` document.
+pub fn report_json(findings: &[Finding], files_scanned: usize) -> Json {
+    let mut per_rule: Vec<(&str, u64)> = Vec::new();
+    for f in findings {
+        match per_rule.iter_mut().find(|(r, _)| *r == f.rule) {
+            Some((_, n)) => *n += 1,
+            None => per_rule.push((f.rule, 1)),
+        }
+    }
+    let mut doc = Json::object();
+    doc.push("schema", LINT_REPORT_SCHEMA);
+    doc.push("files_scanned", files_scanned);
+    doc.push("count", findings.len());
+    let mut by_rule = Json::object();
+    for (r, n) in per_rule {
+        by_rule.push(r, n);
+    }
+    doc.push("by_rule", by_rule);
+    doc.push(
+        "findings",
+        Json::Arr(findings.iter().map(Finding::to_json_value).collect()),
+    );
+    doc
+}
+
+/// Human rendering: one block per finding plus a trailer line.
+pub fn render_human(findings: &[Finding], files_scanned: usize) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&f.render());
+        out.push('\n');
+    }
+    if findings.is_empty() {
+        out.push_str(&format!(
+            "sa-lint: clean ({files_scanned} files, {} rules)\n",
+            rules::RULES.len()
+        ));
+    } else {
+        out.push_str(&format!(
+            "sa-lint: {} finding(s) across {files_scanned} files\n",
+            findings.len()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_of(path: &str, src: &str) -> LintContext {
+        LintContext {
+            files: vec![SourceFile::parse(path, src)],
+            ..LintContext::default()
+        }
+    }
+
+    #[test]
+    fn pragma_suppresses_same_and_next_line_only() {
+        let src = "\
+fn f(v: Option<u32>) -> u32 {
+    // sa-lint: allow(no-panic-path) reason=\"test pins the suppression window\"
+    v.unwrap()
+}
+fn g(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+";
+        let ctx = ctx_of("rust/src/engine/x.rs", src);
+        let out = run(&ctx);
+        assert_eq!(out.len(), 1, "{out:#?}");
+        assert_eq!(out[0].rule, "no-panic-path");
+        assert_eq!(out[0].line, 6);
+    }
+
+    #[test]
+    fn pragma_without_reason_is_a_finding_and_suppresses_nothing() {
+        let src = "\
+fn f(v: Option<u32>) -> u32 {
+    // sa-lint: allow(no-panic-path)
+    v.unwrap()
+}
+";
+        let ctx = ctx_of("rust/src/engine/x.rs", src);
+        let out = run(&ctx);
+        let rules: Vec<&str> = out.iter().map(|f| f.rule).collect();
+        assert!(rules.contains(&"invalid-pragma"), "{out:#?}");
+        assert!(rules.contains(&"no-panic-path"), "{out:#?}");
+    }
+
+    #[test]
+    fn pragma_for_unknown_rule_is_flagged() {
+        let src = "// sa-lint: allow(no-such-rule) reason=\"typo\"\nfn f() {}\n";
+        let ctx = ctx_of("rust/src/engine/x.rs", src);
+        let out = run(&ctx);
+        assert_eq!(out.len(), 1, "{out:#?}");
+        assert_eq!(out[0].rule, "invalid-pragma");
+        assert!(out[0].why.contains("no-such-rule"));
+    }
+
+    #[test]
+    fn report_shape_and_schema() {
+        let ctx = ctx_of(
+            "rust/src/engine/x.rs",
+            "fn f(v: Option<u32>) -> u32 { v.unwrap() }\n",
+        );
+        let out = run(&ctx);
+        let doc = report_json(&out, ctx.files.len());
+        assert_eq!(doc.get("schema").and_then(|s| s.as_str()), Some(LINT_REPORT_SCHEMA));
+        assert_eq!(doc.get("count").and_then(|c| c.as_u64()), Some(1));
+        assert_eq!(
+            doc.get("by_rule")
+                .and_then(|b| b.get("no-panic-path"))
+                .and_then(|n| n.as_u64()),
+            Some(1)
+        );
+        let f = doc.get("findings").and_then(|a| a.idx(0)).expect("one finding");
+        assert_eq!(f.get("file").and_then(|s| s.as_str()), Some("rust/src/engine/x.rs"));
+        assert_eq!(f.get("line").and_then(|n| n.as_u64()), Some(1));
+        // The rendered doc parses back (writer/parser round trip).
+        let parsed = Json::parse(&doc.render()).expect("report parses");
+        assert_eq!(parsed, doc);
+    }
+
+    #[test]
+    fn findings_sorted_and_human_trailer() {
+        let src = "\
+fn f(v: Option<u32>) -> u32 {
+    let a = v.unwrap();
+    let b = v.unwrap();
+    a + b
+}
+";
+        let ctx = ctx_of("rust/src/engine/x.rs", src);
+        let out = run(&ctx);
+        assert_eq!(out.len(), 2);
+        assert!(out[0].line < out[1].line);
+        let human = render_human(&out, 1);
+        assert!(human.contains("sa-lint: 2 finding(s)"), "{human}");
+        let clean = render_human(&[], 3);
+        assert!(clean.contains("sa-lint: clean (3 files"), "{clean}");
+    }
+}

@@ -1,0 +1,836 @@
+//! The `sa-lint` rule set: eight checks encoding the repo's real
+//! contracts (see the module docs in `lint/mod.rs` and README
+//! §"Static analysis").
+//!
+//! Each rule is a plain function from [`LintContext`] to findings, so
+//! the fixture suite (`rust/tests/lint_rules.rs`) can drive any rule
+//! against a synthetic context in isolation. Findings returned here are
+//! *pre-suppression*: the runner in `lint/mod.rs` applies pragma
+//! suppression afterwards.
+
+use super::lexer::{LexedFile, TokKind};
+use super::{Finding, LintContext, SourceFile};
+
+/// `(id, why-it-exists)` for every rule, in report order.
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "no-panic-path",
+        "unwrap/expect/panic!/unreachable! are forbidden on the engine, \
+         coordinator and sa pricing paths — a panic there is contained per \
+         tile at best and kills a worker at worst; failures must flow as \
+         EngineError",
+    ),
+    (
+        "raw-lock",
+        "every Mutex lock in engine code goes through util::sync::lock_recover \
+         so a poisoned lock is recovered instead of unwrapped into a panic",
+    ),
+    (
+        "io-under-lock",
+        "no file I/O and no drop of a non-guard value while a lock guard is \
+         held (the PR 8 drain-on-evict invariant: evicted engines drop \
+         outside the pool lock)",
+    ),
+    (
+        "catch-unwind-guard",
+        "a catch_unwind must sit next to the accounting that keeps the pool \
+         consistent on unwind (ItemGuard / RespawnGuard / deliver)",
+    ),
+    (
+        "schema-tags",
+        "every sa-lowpower.<name>.v<N> schema tag in src/ must be pinned by a \
+         golden or a CI smoke grep, and every pinned tag must still exist in \
+         src/ — unpinned tags drift silently",
+    ),
+    (
+        "error-table-sync",
+        "EngineError variants, kind() arms, exit_code() arms and the README \
+         error table must agree — the exit codes are a public CLI contract",
+    ),
+    (
+        "registry-hygiene",
+        "CONFIG_TABLE names and aliases must be unique and every row spec \
+         must stay inside the --coding grammar's token set",
+    ),
+    (
+        "test-registration",
+        "every bench must be registered in Cargo.toml and every integration \
+         test file must contain at least one #[test] — unregistered files \
+         silently stop running",
+    ),
+];
+
+/// Run every rule. Order matches [`RULES`].
+pub fn run_all(ctx: &LintContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    out.extend(no_panic_path(ctx));
+    out.extend(raw_lock(ctx));
+    out.extend(io_under_lock(ctx));
+    out.extend(catch_unwind_guard(ctx));
+    out.extend(schema_tags(ctx));
+    out.extend(error_table_sync(ctx));
+    out.extend(registry_hygiene(ctx));
+    out.extend(test_registration(ctx));
+    out
+}
+
+fn path_in(file: &SourceFile, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| file.path.contains(d))
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: no-panic-path
+// ---------------------------------------------------------------------------
+
+const PANIC_PATH_DIRS: &[&str] = &["src/engine/", "src/coordinator/", "src/sa/"];
+
+/// Forbid `.unwrap()`, `.expect(…)`, `panic!` and `unreachable!` in
+/// `engine/`, `coordinator/` and `sa/` production code. `unwrap_or*`
+/// and friends are distinct identifiers and never match.
+pub fn no_panic_path(ctx: &LintContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in ctx.files.iter().filter(|f| path_in(f, PANIC_PATH_DIRS)) {
+        let toks = &f.lex.toks;
+        for i in 0..toks.len() {
+            let t = &toks[i];
+            if t.in_test || t.kind != TokKind::Ident {
+                continue;
+            }
+            let prev_dot = i > 0 && toks[i - 1].is_punct('.');
+            let next = toks.get(i + 1);
+            let method_call =
+                prev_dot && next.map(|n| n.is_punct('(')).unwrap_or(false);
+            let bad = match t.text.as_str() {
+                "unwrap" | "expect" if method_call => true,
+                "panic" | "unreachable" => {
+                    next.map(|n| n.is_punct('!')).unwrap_or(false)
+                }
+                _ => false,
+            };
+            if bad {
+                out.push(f.finding(
+                    "no-panic-path",
+                    t.line,
+                    format!(
+                        "`{}` on an engine/coordinator/sa path; return an \
+                         EngineError (or add a reasoned pragma for a \
+                         provably-unreachable site)",
+                        t.text
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: raw-lock
+// ---------------------------------------------------------------------------
+
+/// Flag `.lock(` in `src/engine/` outside a fn named `lock_recover`.
+pub fn raw_lock(ctx: &LintContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in ctx.files.iter().filter(|f| path_in(f, &["src/engine/"])) {
+        let toks = &f.lex.toks;
+        for i in 1..toks.len() {
+            let t = &toks[i];
+            if t.in_test || !t.is_ident("lock") {
+                continue;
+            }
+            if !toks[i - 1].is_punct('.') {
+                continue;
+            }
+            if !toks.get(i + 1).map(|n| n.is_punct('(')).unwrap_or(false) {
+                continue;
+            }
+            if f.lex.enclosing_fn(i).map(|s| s.name == "lock_recover").unwrap_or(false) {
+                continue;
+            }
+            out.push(f.finding(
+                "raw-lock",
+                t.line,
+                "raw `.lock()` in engine code; use util::sync::lock_recover \
+                 (poison-recovering) instead"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: io-under-lock
+// ---------------------------------------------------------------------------
+
+const IO_METHODS: &[&str] = &[
+    "write_all",
+    "read_to_end",
+    "read_to_string",
+    "flush",
+    "set_len",
+    "seek",
+    "sync_all",
+    "sync_data",
+];
+
+/// Lexically track `let g = lock_recover(…)` (or raw `.lock()`) guard
+/// bindings per function and flag, while any guard is live: file I/O
+/// (`File::` / `OpenOptions::` / `std::fs::` / write-family methods)
+/// and `drop(x)` of anything that is not the guard itself. A guard dies
+/// at `drop(g)` or when its block closes.
+pub fn io_under_lock(ctx: &LintContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in ctx.files.iter().filter(|f| path_in(f, &["src/engine/"])) {
+        let toks = &f.lex.toks;
+        // (guard name, brace depth at binding)
+        let mut guards: Vec<(String, i32)> = Vec::new();
+        let mut depth = 0i32;
+        let mut i = 0usize;
+        while i < toks.len() {
+            let t = &toks[i];
+            if t.is_punct('{') {
+                depth += 1;
+            } else if t.is_punct('}') {
+                depth -= 1;
+                guards.retain(|(_, d)| *d <= depth);
+            }
+            if t.in_test {
+                i += 1;
+                continue;
+            }
+            // Guard binding: `let [mut] g = lock_recover(` or a RHS
+            // whose first call chain contains `.lock(`.
+            if t.is_ident("let") {
+                let mut j = i + 1;
+                if toks.get(j).map(|x| x.is_ident("mut")).unwrap_or(false) {
+                    j += 1;
+                }
+                let name = match toks.get(j) {
+                    Some(n) if n.kind == TokKind::Ident => n.text.clone(),
+                    _ => {
+                        i += 1;
+                        continue;
+                    }
+                };
+                if toks.get(j + 1).map(|x| x.is_punct('=')).unwrap_or(false) {
+                    // Inspect the RHS up to `;` at this nesting level.
+                    let mut k = j + 2;
+                    let mut nest = 0i32;
+                    let mut is_guard =
+                        toks.get(k).map(|x| x.is_ident("lock_recover")).unwrap_or(false);
+                    while k < toks.len() {
+                        let r = &toks[k];
+                        if r.is_punct('(') || r.is_punct('{') || r.is_punct('[') {
+                            nest += 1;
+                        } else if r.is_punct(')') || r.is_punct('}') || r.is_punct(']') {
+                            nest -= 1;
+                        } else if nest == 0 && r.is_punct(';') {
+                            break;
+                        } else if r.is_ident("lock")
+                            && k > 0
+                            && toks[k - 1].is_punct('.')
+                            && toks.get(k + 1).map(|x| x.is_punct('(')).unwrap_or(false)
+                        {
+                            is_guard = true;
+                        }
+                        k += 1;
+                    }
+                    if is_guard {
+                        guards.push((name, depth));
+                    }
+                }
+                i += 1;
+                continue;
+            }
+            if !guards.is_empty() {
+                // drop(x): ends the guard's life if x is a guard,
+                // otherwise it is the flagged drain-on-evict violation.
+                if t.is_ident("drop")
+                    && toks.get(i + 1).map(|x| x.is_punct('(')).unwrap_or(false)
+                {
+                    if let Some(arg) = toks.get(i + 2) {
+                        if arg.kind == TokKind::Ident
+                            && toks.get(i + 3).map(|x| x.is_punct(')')).unwrap_or(false)
+                        {
+                            if let Some(at) =
+                                guards.iter().position(|(g, _)| *g == arg.text)
+                            {
+                                guards.remove(at);
+                            } else {
+                                out.push(f.finding(
+                                    "io-under-lock",
+                                    t.line,
+                                    format!(
+                                        "`drop({})` while the lock guard `{}` \
+                                         is held; release the lock first \
+                                         (drain-on-evict invariant)",
+                                        arg.text,
+                                        guards
+                                            .last()
+                                            .map(|(g, _)| g.as_str())
+                                            .unwrap_or("?")
+                                    ),
+                                ));
+                            }
+                            i += 4;
+                            continue;
+                        }
+                    }
+                }
+                let held = || {
+                    guards.last().map(|(g, _)| g.clone()).unwrap_or_default()
+                };
+                let io = if (t.is_ident("File") || t.is_ident("OpenOptions"))
+                    && toks.get(i + 1).map(|x| x.is_punct(':')).unwrap_or(false)
+                    && toks.get(i + 2).map(|x| x.is_punct(':')).unwrap_or(false)
+                {
+                    Some(format!("{}::…", t.text))
+                } else if t.is_ident("fs")
+                    && i > 0
+                    && toks[i - 1].is_punct(':')
+                    && toks.get(i + 1).map(|x| x.is_punct(':')).unwrap_or(false)
+                {
+                    Some("std::fs::…".to_string())
+                } else if t.kind == TokKind::Ident
+                    && IO_METHODS.contains(&t.text.as_str())
+                    && i > 0
+                    && toks[i - 1].is_punct('.')
+                    && toks.get(i + 1).map(|x| x.is_punct('(')).unwrap_or(false)
+                {
+                    Some(format!(".{}(…)", t.text))
+                } else {
+                    None
+                };
+                if let Some(what) = io {
+                    out.push(f.finding(
+                        "io-under-lock",
+                        t.line,
+                        format!(
+                            "file I/O ({what}) while the lock guard `{}` is \
+                             held; do the I/O outside the critical section",
+                            held()
+                        ),
+                    ));
+                }
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: catch-unwind-guard
+// ---------------------------------------------------------------------------
+
+const UNWIND_GUARD_MENTIONS: &[&str] = &["ItemGuard", "RespawnGuard", "respawn", "deliver"];
+
+/// Every `catch_unwind` in engine/coordinator code must live in a fn
+/// that also mentions the unwind-accounting machinery.
+pub fn catch_unwind_guard(ctx: &LintContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let dirs = ["src/engine/", "src/coordinator/"];
+    for f in ctx.files.iter().filter(|f| path_in(f, &dirs)) {
+        let toks = &f.lex.toks;
+        for i in 0..toks.len() {
+            let t = &toks[i];
+            if t.in_test || !t.is_ident("catch_unwind") {
+                continue;
+            }
+            // Skip the `use std::panic::{catch_unwind, …}` import.
+            if toks.get(i + 1).map(|n| n.is_punct(',') || n.is_punct('}')).unwrap_or(true)
+            {
+                continue;
+            }
+            let Some(span) = f.lex.enclosing_fn(i) else {
+                out.push(f.finding(
+                    "catch-unwind-guard",
+                    t.line,
+                    "catch_unwind outside any fn body".to_string(),
+                ));
+                continue;
+            };
+            let mentions = toks[span.start..=span.end].iter().any(|x| {
+                x.kind == TokKind::Ident
+                    && UNWIND_GUARD_MENTIONS.contains(&x.text.as_str())
+            });
+            if !mentions {
+                out.push(f.finding(
+                    "catch-unwind-guard",
+                    t.line,
+                    format!(
+                        "catch_unwind in `{}` with no ItemGuard/RespawnGuard/\
+                         respawn/deliver in the same fn — who accounts the \
+                         item if the closure unwinds?",
+                        span.name
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: schema-tags
+// ---------------------------------------------------------------------------
+
+/// Extract every `sa-lowpower.<name>.v<digits>` tag from a string.
+pub fn extract_tags(text: &str) -> Vec<(String, u32)> {
+    let mut tags = Vec::new();
+    let prefix = "sa-lowpower.";
+    let mut from = 0usize;
+    while let Some(rel) = text[from..].find(prefix) {
+        let start = from + rel;
+        let rest = &text[start + prefix.len()..];
+        let name_len = rest
+            .find(|c: char| !(c.is_ascii_alphanumeric() || c == '-' || c == '_'))
+            .unwrap_or(rest.len());
+        let after = &rest[name_len..];
+        if name_len > 0 && after.starts_with(".v") {
+            let digits: String =
+                after[2..].chars().take_while(|c| c.is_ascii_digit()).collect();
+            if !digits.is_empty() {
+                let tag = format!(
+                    "{prefix}{}.v{digits}",
+                    &rest[..name_len]
+                );
+                let line = 1 + text[..start].matches('\n').count() as u32;
+                tags.push((tag, line));
+            }
+        }
+        from = start + prefix.len();
+    }
+    tags
+}
+
+/// Schema tags in `src/` string literals (non-test) must appear in a
+/// golden or a `check.sh`/`ci.yml` grep — and vice versa.
+pub fn schema_tags(ctx: &LintContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // Source side: (tag, file, line).
+    let mut src_tags: Vec<(String, &SourceFile, u32)> = Vec::new();
+    for f in ctx.files.iter().filter(|f| f.path.contains("/src/")) {
+        for t in f.lex.toks.iter().filter(|t| !t.in_test && t.kind == TokKind::Str) {
+            for (tag, _) in extract_tags(&t.text) {
+                src_tags.push((tag, f, t.line));
+            }
+        }
+    }
+    // Sink side: goldens + scripts, raw text.
+    let sinks: Vec<(&str, &str)> = ctx
+        .goldens
+        .iter()
+        .chain(ctx.scripts.iter())
+        .map(|(p, t)| (p.as_str(), t.as_str()))
+        .collect();
+    let sink_has = |tag: &str| sinks.iter().any(|(_, text)| text.contains(tag));
+    for (tag, f, line) in &src_tags {
+        if !sink_has(tag) {
+            out.push(f.finding(
+                "schema-tags",
+                *line,
+                format!(
+                    "schema tag `{tag}` is emitted by src/ but pinned by no \
+                     golden under rust/tests/golden/ and no check.sh/ci.yml \
+                     grep — dead constant or missing coverage"
+                ),
+            ));
+        }
+    }
+    for (path, text) in &sinks {
+        for (tag, line) in extract_tags(text) {
+            let in_src = src_tags.iter().any(|(t, _, _)| *t == tag);
+            if !in_src {
+                out.push(Finding {
+                    rule: "schema-tags",
+                    file: path.to_string(),
+                    line,
+                    snippet: tag.clone(),
+                    why: format!(
+                        "`{tag}` is pinned here but no src/ string literal \
+                         produces it — the producer was removed or renamed"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 6: error-table-sync
+// ---------------------------------------------------------------------------
+
+/// Cross-check `EngineError` variants against `kind()`, `exit_code()`
+/// and the README's variant/kind/exit table.
+pub fn error_table_sync(ctx: &LintContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(err) = ctx.files.iter().find(|f| f.path.ends_with("engine/error.rs")) else {
+        return out;
+    };
+    let variants = enum_variants(&err.lex, "EngineError");
+    let kinds = match_arms(&err.lex, "kind", TokKind::Str);
+    let exits = match_arms(&err.lex, "exit_code", TokKind::Num);
+    let mut flag = |line: u32, why: String| {
+        out.push(err.finding("error-table-sync", line, why));
+    };
+    for (v, line) in &variants {
+        if !kinds.iter().any(|(kv, _, _)| kv == v) {
+            flag(*line, format!("variant `{v}` has no kind() arm"));
+        }
+        if !exits.iter().any(|(ev, _, _)| ev == v) {
+            flag(*line, format!("variant `{v}` has no exit_code() arm"));
+        }
+    }
+    for (v, _, line) in kinds.iter().chain(exits.iter()) {
+        if !variants.iter().any(|(vv, _)| vv == v) {
+            flag(*line, format!("match arm names `{v}`, which is not a variant"));
+        }
+    }
+    // README table: rows after a header containing variant/kind/exit.
+    let Some((readme_path, readme)) = &ctx.readme else { return out };
+    let mut rows: Vec<(String, String, i64, u32)> = Vec::new();
+    let mut in_table = false;
+    for (i, l) in readme.lines().enumerate() {
+        let line_no = i as u32 + 1;
+        let lt = l.trim();
+        if lt.starts_with('|') && lt.contains("variant") && lt.contains("exit") {
+            in_table = true;
+            continue;
+        }
+        if !in_table {
+            continue;
+        }
+        if !lt.starts_with('|') {
+            in_table = false;
+            continue;
+        }
+        let cells: Vec<&str> = lt.trim_matches('|').split('|').map(str::trim).collect();
+        if cells.len() < 3 {
+            continue;
+        }
+        let unquote = |c: &str| c.trim_matches('`').to_string();
+        if let Ok(code) = cells[2].parse::<i64>() {
+            rows.push((unquote(cells[0]), unquote(cells[1]), code, line_no));
+        }
+    }
+    let mut readme_flag = |line: u32, why: String| {
+        out.push(Finding {
+            rule: "error-table-sync",
+            file: readme_path.clone(),
+            line,
+            snippet: String::new(),
+            why,
+        });
+    };
+    if rows.is_empty() {
+        readme_flag(
+            1,
+            "README has no variant/kind/exit error table (or the header no \
+             longer says 'variant … exit')"
+                .to_string(),
+        );
+        return out;
+    }
+    for (v, line) in &variants {
+        if !rows.iter().any(|(rv, _, _, _)| rv == v) {
+            readme_flag(
+                rows[0].3,
+                format!("variant `{v}` is missing from the README error table"),
+            );
+        }
+    }
+    for (rv, rk, rcode, rline) in &rows {
+        if !variants.iter().any(|(v, _)| v == rv) {
+            readme_flag(*rline, format!("README row `{rv}` is not an EngineError variant"));
+            continue;
+        }
+        if let Some((_, k, _)) = kinds.iter().find(|(v, _, _)| v == rv) {
+            if k != rk {
+                readme_flag(
+                    *rline,
+                    format!("README kind for `{rv}` is `{rk}` but kind() says `{k}`"),
+                );
+            }
+        }
+        if let Some((_, e, _)) = exits.iter().find(|(v, _, _)| v == rv) {
+            if e.parse::<i64>().ok() != Some(*rcode) {
+                readme_flag(
+                    *rline,
+                    format!(
+                        "README exit code for `{rv}` is {rcode} but exit_code() \
+                         says {e}"
+                    ),
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Variant idents of `enum <name> { … }` with their lines.
+fn enum_variants(lex: &LexedFile, name: &str) -> Vec<(String, u32)> {
+    let toks = &lex.toks;
+    let mut vars = Vec::new();
+    let Some(at) = (0..toks.len()).find(|&i| {
+        toks[i].is_ident("enum")
+            && toks.get(i + 1).map(|t| t.is_ident(name)).unwrap_or(false)
+    }) else {
+        return vars;
+    };
+    let Some(open) = (at..toks.len()).find(|&i| toks[i].is_punct('{')) else {
+        return vars;
+    };
+    let mut depth = 0i32;
+    let mut paren = 0i32;
+    let mut expecting = true; // next depth-1 ident is a variant name
+    for i in open..toks.len() {
+        let t = &toks[i];
+        if t.is_punct('{') {
+            depth += 1;
+            continue;
+        }
+        if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+            if depth == 1 {
+                expecting = false; // just closed a struct-variant body
+            }
+            continue;
+        }
+        if t.is_punct('(') {
+            paren += 1;
+            continue;
+        }
+        if t.is_punct(')') {
+            paren -= 1;
+            continue;
+        }
+        if depth == 1 && paren == 0 {
+            if t.is_punct(',') {
+                expecting = true;
+            } else if expecting && t.kind == TokKind::Ident {
+                vars.push((t.text.clone(), t.line));
+                expecting = false;
+            }
+        }
+    }
+    vars
+}
+
+/// `(variant, arm value, line)` for arms shaped
+/// `EngineError::V … => <value>` inside fn `fn_name`.
+fn match_arms(lex: &LexedFile, fn_name: &str, value_kind: TokKind) -> Vec<(String, String, u32)> {
+    let mut arms = Vec::new();
+    let Some(span) = lex.fns.iter().find(|f| f.name == fn_name) else {
+        return arms;
+    };
+    let toks = &lex.toks;
+    let mut i = span.start;
+    while i + 3 <= span.end {
+        if toks[i].is_ident("EngineError")
+            && toks[i + 1].is_punct(':')
+            && toks[i + 2].is_punct(':')
+            && toks[i + 3].kind == TokKind::Ident
+        {
+            let variant = toks[i + 3].text.clone();
+            let line = toks[i + 3].line;
+            // Scan to `=>` then take the next token of the wanted kind.
+            let mut j = i + 4;
+            while j + 1 <= span.end {
+                if toks[j].is_punct('=') && toks[j + 1].is_punct('>') {
+                    if let Some(v) = toks.get(j + 2) {
+                        if v.kind == value_kind {
+                            arms.push((variant.clone(), v.text.clone(), line));
+                        }
+                    }
+                    break;
+                }
+                j += 1;
+            }
+            i = j;
+        }
+        i += 1;
+    }
+    arms
+}
+
+// ---------------------------------------------------------------------------
+// Rule 7: registry-hygiene
+// ---------------------------------------------------------------------------
+
+const SPEC_EDGES: &[&str] = &["w", "weights", "north", "i", "inputs", "west"];
+const BIC_MODES: &[&str] = &["mantissa", "full", "segmented", "exponent"];
+const DDCG_GROUPS: &[&str] = &["1", "2", "4", "8", "16"];
+
+/// Validate one `--coding` spec string against the grammar's token set
+/// (textual check — the real parser is `coding::stack`).
+pub fn validate_spec(spec: &str) -> Result<(), String> {
+    if spec == "baseline" {
+        return Ok(());
+    }
+    for clause in spec.split(',') {
+        let Some((edge, stack)) = clause.split_once(':') else {
+            return Err(format!("clause `{clause}` is not edge:stack"));
+        };
+        if !SPEC_EDGES.contains(&edge) {
+            return Err(format!("unknown edge `{edge}` (want one of {SPEC_EDGES:?})"));
+        }
+        for codec in stack.split('+') {
+            let base = codec.strip_suffix("-mt").unwrap_or(codec);
+            let ok = base == "zvcg"
+                || base
+                    .strip_prefix("bic-")
+                    .map(|m| BIC_MODES.contains(&m))
+                    .unwrap_or(false)
+                || base
+                    .strip_prefix("ddcg16-g")
+                    .map(|g| DDCG_GROUPS.contains(&g))
+                    .unwrap_or(false);
+            if !ok {
+                return Err(format!("unknown codec `{codec}`"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `CONFIG_TABLE` names/aliases unique; every row spec inside the
+/// grammar's token set.
+pub fn registry_hygiene(ctx: &LintContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(reg) = ctx.files.iter().find(|f| f.path.ends_with("engine/registry.rs"))
+    else {
+        return out;
+    };
+    let toks = &reg.lex.toks;
+    let Some(at) = toks
+        .iter()
+        .position(|t| !t.in_test && t.is_ident("CONFIG_TABLE"))
+    else {
+        return out;
+    };
+    // Bound the walk to the table's initializer (`= ... ;` at nesting
+    // depth 0): `name:`/`spec:` tokens elsewhere in the file (fn params,
+    // struct fields) must not read as table rows.
+    let Some(eq) = (at..toks.len()).find(|&i| toks[i].is_punct('=')) else {
+        return out;
+    };
+    let mut end = toks.len();
+    let mut nest = 0i32;
+    for i in eq + 1..toks.len() {
+        let t = &toks[i];
+        if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+            nest += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+            nest -= 1;
+        } else if nest == 0 && t.is_punct(';') {
+            end = i;
+            break;
+        }
+    }
+    // Walk the initializer: collect `name:`/`aliases:`/`spec:` strings.
+    let mut seen: Vec<(String, u32)> = Vec::new();
+    let mut i = eq;
+    while i + 2 < end {
+        let t = &toks[i];
+        let field = t.kind == TokKind::Ident
+            && toks[i + 1].is_punct(':');
+        if field && (t.text == "name" || t.text == "aliases") {
+            // name: "x"   |   aliases: &["a", "b"]
+            for j in i + 2..end {
+                match toks[j].kind {
+                    TokKind::Str => {
+                        let v = toks[j].text.clone();
+                        if let Some((_, first)) = seen.iter().find(|(s, _)| *s == v) {
+                            out.push(reg.finding(
+                                "registry-hygiene",
+                                toks[j].line,
+                                format!(
+                                    "name/alias `{v}` already used (line {first}) \
+                                     — lookups are first-match, the duplicate is \
+                                     unreachable"
+                                ),
+                            ));
+                        } else {
+                            seen.push((v, toks[j].line));
+                        }
+                        if t.text == "name" {
+                            break;
+                        }
+                    }
+                    _ if toks[j].is_punct(']') || toks[j].is_punct(',') && t.text == "name" =>
+                    {
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+        } else if field && t.text == "spec" {
+            if let Some(s) = toks.get(i + 2) {
+                if s.kind == TokKind::Str {
+                    if let Err(e) = validate_spec(&s.text) {
+                        out.push(reg.finding(
+                            "registry-hygiene",
+                            s.line,
+                            format!("spec `{}` fails the grammar token check: {e}", s.text),
+                        ));
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 8: test-registration
+// ---------------------------------------------------------------------------
+
+/// Every bench has a `[[bench]]` entry; every top-level integration
+/// test file contains at least one `#[test]`.
+pub fn test_registration(ctx: &LintContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if let Some((cargo_path, cargo)) = &ctx.cargo_toml {
+        for stem in &ctx.bench_files {
+            let needle = format!("name = \"{stem}\"");
+            if !cargo.contains(&needle) {
+                out.push(Finding {
+                    rule: "test-registration",
+                    file: cargo_path.clone(),
+                    line: 1,
+                    snippet: format!("[[bench]] name = \"{stem}\""),
+                    why: format!(
+                        "benches/{stem}.rs has no [[bench]] entry in Cargo.toml \
+                         (harness = false benches are not auto-discovered)"
+                    ),
+                });
+            }
+        }
+    }
+    for path in &ctx.test_files {
+        let Some(f) = ctx.files.iter().find(|f| &f.path == path) else { continue };
+        let toks = &f.lex.toks;
+        let has_test = (0..toks.len()).any(|i| {
+            toks[i].is_punct('#')
+                && toks.get(i + 1).map(|t| t.is_punct('[')).unwrap_or(false)
+                && toks.get(i + 2).map(|t| t.is_ident("test")).unwrap_or(false)
+                && toks.get(i + 3).map(|t| t.is_punct(']')).unwrap_or(false)
+        });
+        if !has_test {
+            out.push(f.finding(
+                "test-registration",
+                1,
+                "integration test file contains no #[test] — it compiles to an \
+                 empty test binary and asserts nothing"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}

@@ -175,8 +175,8 @@ impl<'t> TileActivity<'t> {
     /// dataflow: each accumulator sums its non-zero products in
     /// ascending-k order, exactly the order of both cycle engines.
     pub fn outputs(&mut self) -> &[f32] {
-        if self.outputs.is_none() {
-            let tile = self.tile;
+        let tile = self.tile;
+        self.outputs.get_or_insert_with(|| {
             let (m, k, n) = (tile.m, tile.k, tile.n);
             let mut acc = vec![0f32; m * n];
             for i in 0..m {
@@ -193,9 +193,8 @@ impl<'t> TileActivity<'t> {
                     acc[i * n + j] = sum;
                 }
             }
-            self.outputs = Some(acc);
-        }
-        self.outputs.as_deref().unwrap()
+            acc
+        })
     }
 
     /// MAC-side ledger for one gate combination, cached across stacks.

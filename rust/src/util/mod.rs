@@ -11,5 +11,6 @@ pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 
 pub use rng::Rng64;

@@ -1,0 +1,63 @@
+//! Poison-recovering lock helpers, shared by the engine pool, the
+//! result cache and the serve loop.
+//!
+//! Lock poisoning is Rust's way of saying "a thread panicked while
+//! holding this" — but every engine-side critical section here guards
+//! counters and maps that stay internally consistent at each await
+//! point, and panics are already contained per tile by the worker-pool
+//! `catch_unwind` + respawn machinery. Propagating the poison as a
+//! second panic would turn one contained fault into a pool-wide
+//! outage, so every lock in `engine/` goes through [`lock_recover`]
+//! (enforced by the `raw-lock` rule of `sa-lint`).
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering the guard if a panicking thread poisoned it.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv`, recovering the reacquired guard on poison — the
+/// condvar-side companion of [`lock_recover`].
+pub fn wait_recover<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn lock_recover_recovers_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn wait_recover_wakes_and_returns_guard() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let waker = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            *lock_recover(m) = true;
+            cv.notify_all();
+        });
+        let (m, cv) = &*pair;
+        let mut g = lock_recover(m);
+        while !*g {
+            g = wait_recover(cv, g);
+        }
+        drop(g);
+        waker.join().expect("waker thread");
+    }
+}

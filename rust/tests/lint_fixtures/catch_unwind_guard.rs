@@ -1,0 +1,22 @@
+// Fixture: rule `catch-unwind-guard`. Lexed under a synthetic
+// `rust/src/engine/` path by lint_rules.rs; never compiled.
+// Expected finding: line 11 (catch_unwind with no guard machinery in
+// the enclosing fn body). The import line (8) is ignored, the guarded
+// fn (line 14) is clean because `ItemGuard` appears in its body, and
+// the pragma'd call (line 21) is suppressed.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+pub fn bare(job: impl FnOnce() + std::panic::UnwindSafe) {
+    let _ = catch_unwind(job);
+}
+
+pub fn guarded(job: impl FnOnce() + std::panic::UnwindSafe) {
+    let _guard = ItemGuard;
+    let _ = catch_unwind(job);
+}
+
+pub fn audited(job: impl FnOnce() + std::panic::UnwindSafe) {
+    // sa-lint: allow(catch-unwind-guard) reason="fixture proves pragma suppression"
+    let _ = catch_unwind(job);
+}

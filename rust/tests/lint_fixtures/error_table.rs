@@ -1,0 +1,29 @@
+// Fixture: rule `error-table-sync`. Lexed under the synthetic path
+// `rust/src/engine/error.rs` by lint_rules.rs; never compiled. The
+// harness pairs it with a synthetic README whose table carries a wrong
+// exit code for `Internal`. Expected findings: line 9 (`Timeout` has
+// no kind() arm) plus the README row mismatch.
+
+pub enum EngineError {
+    InvalidSpec(String),
+    Timeout,
+    Internal(String),
+}
+
+impl EngineError {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EngineError::InvalidSpec(_) => "invalid-spec",
+            EngineError::Internal(_) => "internal",
+            _ => "unknown",
+        }
+    }
+
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            EngineError::InvalidSpec(_) => 2,
+            EngineError::Timeout => 7,
+            EngineError::Internal(_) => 10,
+        }
+    }
+}

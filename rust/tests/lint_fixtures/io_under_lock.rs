@@ -1,0 +1,22 @@
+// Fixture: rule `io-under-lock`. Lexed under a synthetic
+// `rust/src/engine/` path by lint_rules.rs; never compiled.
+// Expected findings: line 10 (file open while the `g` guard is held)
+// and line 11 (drop of a non-guard while the guard is held). After
+// `drop(g)` the same operations (lines 13-14) must stay silent, as
+// must the pragma'd write (line 20).
+
+pub fn flush_under_lock(m: &std::sync::Mutex<u32>, engine: Vec<u8>) {
+    let g = lock_recover(m);
+    File::create("state.bin");
+    drop(engine);
+    drop(g);
+    File::create("state2.bin");
+    drop(m);
+}
+
+pub fn audited_flush(m: &std::sync::Mutex<u32>) {
+    let g = lock_recover(m);
+    // sa-lint: allow(io-under-lock) reason="fixture proves pragma suppression"
+    File::create("state.bin");
+    drop(g);
+}

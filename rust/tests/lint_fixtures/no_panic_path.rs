@@ -1,0 +1,37 @@
+// Fixture: rule `no-panic-path`. The drill harness (lint_rules.rs)
+// lexes this under a synthetic `rust/src/engine/` path; it is never
+// compiled. Expected findings: lines 7, 11, 15, 19. The pragma'd site
+// (line 24) and everything under #[cfg(test)] must stay silent.
+
+pub fn risky(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn message(v: Result<u32, String>) -> u32 {
+    v.expect("must hold")
+}
+
+pub fn explode() {
+    panic!("boom");
+}
+
+pub fn never() {
+    unreachable!();
+}
+
+pub fn allowed(v: Option<u32>) -> u32 {
+    // sa-lint: allow(no-panic-path) reason="fixture proves pragma suppression"
+    v.unwrap()
+}
+
+pub fn fine(v: Option<u32>) -> u32 {
+    v.unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        assert_eq!(Some(1).unwrap(), 1);
+    }
+}

@@ -1,0 +1,8 @@
+// Fixture: rule `test-registration`. Registered by lint_rules.rs as a
+// synthetic top-level integration test file; never compiled. It
+// contains no #[test], so the rule fires at line 1. A well-formed
+// pragma on line 1 of a variant copy suppresses it.
+
+pub fn helper_only() -> u32 {
+    42
+}

@@ -1,0 +1,20 @@
+// Fixture: rule `raw-lock`. Lexed under a synthetic `rust/src/engine/`
+// path by lint_rules.rs; never compiled. Expected finding: line 7.
+// The body of a fn literally named `lock_recover` (line 13) and the
+// pragma'd call (line 18) must stay silent.
+
+pub fn checkout(m: &std::sync::Mutex<u32>) -> u32 {
+    let g = m.lock().unwrap_or_else(|e| e.into_inner());
+    *g
+}
+
+pub fn lock_recover(m: &std::sync::Mutex<u32>) -> u32 {
+    // Exempt: this IS the recovery shim the rule points callers at.
+    *m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+pub fn audited(m: &std::sync::Mutex<u32>) -> u32 {
+    // sa-lint: allow(raw-lock) reason="fixture proves pragma suppression"
+    let g = m.lock().unwrap_or_else(|e| e.into_inner());
+    *g
+}

@@ -1,0 +1,22 @@
+// Fixture: rule `registry-hygiene`. Lexed under the synthetic path
+// `rust/src/engine/registry.rs` by lint_rules.rs; never compiled.
+// Expected findings: line 16 (alias `base` duplicates line 15's) and
+// line 17 (spec `w:frobnicate` is outside the --coding grammar).
+// The `name:` fn parameter in `by_name` (line 20) must NOT read as a
+// table row — the walker is bounded to the initializer.
+
+pub struct ConfigRow {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub spec: &'static str,
+}
+
+pub const CONFIG_TABLE: &[ConfigRow] = &[
+    ConfigRow { name: "baseline", aliases: &["base"], spec: "baseline" },
+    ConfigRow { name: "bic", aliases: &["base"], spec: "w:bic-mantissa" },
+    ConfigRow { name: "broken", aliases: &[], spec: "w:frobnicate" },
+];
+
+pub fn by_name(name: &str) -> Option<&'static ConfigRow> {
+    CONFIG_TABLE.iter().find(|r| r.name == name)
+}

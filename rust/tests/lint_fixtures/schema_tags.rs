@@ -1,0 +1,10 @@
+// Fixture: rule `schema-tags`. Lexed under a synthetic `rust/src/`
+// path by lint_rules.rs alongside a synthetic golden that pins
+// "sa-lowpower.fixture-pinned.v1" plus an orphan
+// "sa-lowpower.fixture-orphan.v3" that no source file emits.
+// Expected findings: line 8 (ghost tag with no golden/script sink)
+// and one sink-side finding for the orphan tag. Line 10 is clean.
+
+pub const GHOST_SCHEMA: &str = "sa-lowpower.fixture-ghost.v2";
+
+pub const PINNED_SCHEMA: &str = "sa-lowpower.fixture-pinned.v1";

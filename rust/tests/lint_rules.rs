@@ -1,0 +1,312 @@
+//! Drill every `sa-lint` rule against the deliberately-violating
+//! corpus under `tests/lint_fixtures/`, proving (a) each rule fires at
+//! exactly the expected lines, (b) pragma suppression works per rule,
+//! and (c) the real tree is clean.
+//!
+//! Fixtures are *read*, never compiled: each is lexed under a synthetic
+//! repo path chosen to land inside the rule's scope (e.g.
+//! `rust/src/engine/…`).
+
+use std::path::Path;
+
+use sa_lowpower::lint::{load_repo, render_human, run, Finding, LintContext, SourceFile};
+
+fn fixture(name: &str) -> String {
+    let p = format!("{}/tests/lint_fixtures/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("{p}: {e}"))
+}
+
+fn ctx_one(path: &str, text: &str) -> LintContext {
+    LintContext {
+        files: vec![SourceFile::parse(path, text)],
+        ..LintContext::default()
+    }
+}
+
+/// Lines of `out` findings carrying `rule`, sorted.
+fn lines(out: &[Finding], rule: &str) -> Vec<u32> {
+    let mut v: Vec<u32> =
+        out.iter().filter(|f| f.rule == rule).map(|f| f.line).collect();
+    v.sort_unstable();
+    v
+}
+
+/// Insert `inserted` as a new line *before* 1-based `line`.
+fn insert_before(text: &str, line: u32, inserted: &str) -> String {
+    let mut out = String::new();
+    for (i, l) in text.lines().enumerate() {
+        if i as u32 + 1 == line {
+            out.push_str(inserted);
+            out.push('\n');
+        }
+        out.push_str(l);
+        out.push('\n');
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: no-panic-path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn no_panic_path_fires_on_each_form_and_respects_pragma_and_tests() {
+    let text = fixture("no_panic_path.rs");
+    let out = run(&ctx_one("rust/src/engine/fixture.rs", &text));
+    // unwrap / expect / panic! / unreachable!; the pragma'd unwrap (24)
+    // and the #[cfg(test)] unwrap are silent.
+    assert_eq!(lines(&out, "no-panic-path"), vec![7, 11, 15, 19], "{out:#?}");
+    assert!(out.iter().all(|f| f.rule == "no-panic-path"), "{out:#?}");
+}
+
+#[test]
+fn no_panic_path_is_scoped_to_engine_coordinator_sa() {
+    let text = fixture("no_panic_path.rs");
+    // Same violations under util/ are out of scope.
+    let out = run(&ctx_one("rust/src/util/fixture.rs", &text));
+    assert!(out.is_empty(), "{out:#?}");
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: raw-lock
+// ---------------------------------------------------------------------------
+
+#[test]
+fn raw_lock_fires_outside_lock_recover_and_respects_pragma() {
+    let text = fixture("raw_lock.rs");
+    let out = run(&ctx_one("rust/src/engine/fixture.rs", &text));
+    // Line 7 fires; line 13 is inside fn lock_recover (exempt); line 18
+    // is pragma'd.
+    assert_eq!(lines(&out, "raw-lock"), vec![7], "{out:#?}");
+    assert!(out.iter().all(|f| f.rule == "raw-lock"), "{out:#?}");
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: io-under-lock
+// ---------------------------------------------------------------------------
+
+#[test]
+fn io_under_lock_fires_while_guard_held_and_clears_on_drop() {
+    let text = fixture("io_under_lock.rs");
+    let out = run(&ctx_one("rust/src/engine/fixture.rs", &text));
+    // Line 10: File:: open under the guard. Line 11: drop(engine) under
+    // the guard. Lines 13-14 (after drop(g)) and the pragma'd line 20
+    // are silent.
+    assert_eq!(lines(&out, "io-under-lock"), vec![10, 11], "{out:#?}");
+    assert!(out.iter().all(|f| f.rule == "io-under-lock"), "{out:#?}");
+}
+
+// ---------------------------------------------------------------------------
+// Rule 4: catch-unwind-guard
+// ---------------------------------------------------------------------------
+
+#[test]
+fn catch_unwind_guard_fires_unguarded_and_skips_imports() {
+    let text = fixture("catch_unwind_guard.rs");
+    let out = run(&ctx_one("rust/src/engine/fixture.rs", &text));
+    // Line 11 (fn bare) fires; the import (8), the guarded fn (16) and
+    // the pragma'd call (21) are silent.
+    assert_eq!(lines(&out, "catch-unwind-guard"), vec![11], "{out:#?}");
+    assert!(out.iter().all(|f| f.rule == "catch-unwind-guard"), "{out:#?}");
+}
+
+// ---------------------------------------------------------------------------
+// Rule 5: schema-tags
+// ---------------------------------------------------------------------------
+
+fn schema_ctx(src_text: &str) -> LintContext {
+    let mut ctx = ctx_one("rust/src/fixture.rs", src_text);
+    ctx.goldens.push((
+        "rust/tests/golden/fixture.json".to_string(),
+        concat!(
+            "{\n",
+            "  \"schema\": \"sa-lowpower.fixture-pinned.v1\",\n",
+            "  \"orphan\": \"sa-lowpower.fixture-orphan.v3\"\n",
+            "}\n"
+        )
+        .to_string(),
+    ));
+    ctx
+}
+
+#[test]
+fn schema_tags_flags_ghost_and_orphan_but_not_pinned() {
+    let text = fixture("schema_tags.rs");
+    let out = run(&schema_ctx(&text));
+    assert_eq!(out.len(), 2, "{out:#?}");
+    // Ghost: emitted by src, pinned nowhere — flagged at the const.
+    let ghost = &out[0];
+    assert_eq!(ghost.rule, "schema-tags");
+    assert_eq!(ghost.file, "rust/src/fixture.rs");
+    assert_eq!(ghost.line, 8);
+    assert!(ghost.why.contains("fixture-ghost.v2"), "{ghost:#?}");
+    // Orphan: pinned by the golden, produced by no src string.
+    let orphan = &out[1];
+    assert_eq!(orphan.rule, "schema-tags");
+    assert_eq!(orphan.file, "rust/tests/golden/fixture.json");
+    assert!(orphan.why.contains("fixture-orphan.v3"), "{orphan:#?}");
+}
+
+#[test]
+fn schema_tags_pragma_suppresses_the_src_side() {
+    let text = fixture("schema_tags.rs");
+    let patched = insert_before(
+        &text,
+        8,
+        "// sa-lint: allow(schema-tags) reason=\"fixture proves pragma suppression\"",
+    );
+    let out = run(&schema_ctx(&patched));
+    // Only the golden-side orphan survives (goldens carry no pragmas).
+    assert_eq!(out.len(), 1, "{out:#?}");
+    assert_eq!(out[0].file, "rust/tests/golden/fixture.json");
+}
+
+// ---------------------------------------------------------------------------
+// Rule 6: error-table-sync
+// ---------------------------------------------------------------------------
+
+const FIXTURE_README: &str = "\
+# Errors
+
+| variant | kind | exit |
+|---|---|---|
+| `InvalidSpec` | `invalid-spec` | 2 |
+| `Timeout` | `timeout` | 7 |
+| `Internal` | `internal` | 9 |
+";
+
+fn error_ctx(src_text: &str) -> LintContext {
+    let mut ctx = ctx_one("rust/src/engine/error.rs", src_text);
+    ctx.readme = Some(("README.md".to_string(), FIXTURE_README.to_string()));
+    ctx
+}
+
+#[test]
+fn error_table_sync_flags_missing_arm_and_readme_drift() {
+    let text = fixture("error_table.rs");
+    let out = run(&error_ctx(&text));
+    assert_eq!(out.len(), 2, "{out:#?}");
+    // `Timeout` (line 9) has an exit_code() arm but no kind() arm.
+    assert_eq!(out[0].rule, "error-table-sync");
+    assert_eq!(out[0].file, "README.md");
+    assert_eq!(out[0].line, 7, "README `Internal` row carries exit 9, code says 10");
+    assert!(out[0].why.contains("exit code"), "{out:#?}");
+    assert_eq!(out[1].rule, "error-table-sync");
+    assert_eq!(out[1].file, "rust/src/engine/error.rs");
+    assert_eq!(out[1].line, 9);
+    assert!(out[1].why.contains("no kind() arm"), "{out:#?}");
+}
+
+#[test]
+fn error_table_sync_pragma_suppresses_the_variant_finding() {
+    let text = fixture("error_table.rs");
+    let patched = insert_before(
+        &text,
+        9,
+        "    // sa-lint: allow(error-table-sync) reason=\"fixture proves pragma suppression\"",
+    );
+    let out = run(&error_ctx(&patched));
+    // Only the README drift survives (the README carries no pragmas).
+    assert_eq!(out.len(), 1, "{out:#?}");
+    assert_eq!(out[0].file, "README.md");
+}
+
+// ---------------------------------------------------------------------------
+// Rule 7: registry-hygiene
+// ---------------------------------------------------------------------------
+
+#[test]
+fn registry_hygiene_flags_duplicate_alias_and_bad_spec() {
+    let text = fixture("registry.rs");
+    let out = run(&ctx_one("rust/src/engine/registry.rs", &text));
+    // Line 16: alias `base` duplicates line 15's. Line 17: spec
+    // `w:frobnicate` fails the grammar check. The `name:` fn param in
+    // by_name must NOT be read as a table row.
+    assert_eq!(lines(&out, "registry-hygiene"), vec![16, 17], "{out:#?}");
+    assert!(out.iter().all(|f| f.rule == "registry-hygiene"), "{out:#?}");
+    assert!(out.iter().any(|f| f.why.contains("already used")), "{out:#?}");
+    assert!(out.iter().any(|f| f.why.contains("frobnicate")), "{out:#?}");
+}
+
+#[test]
+fn registry_hygiene_pragma_suppresses_per_line() {
+    let text = fixture("registry.rs");
+    let patched = insert_before(
+        &text,
+        16,
+        "    // sa-lint: allow(registry-hygiene) reason=\"fixture proves pragma suppression\"",
+    );
+    let out = run(&ctx_one("rust/src/engine/registry.rs", &patched));
+    // The duplicate-alias finding is suppressed; the bad spec (now on
+    // line 18 after the insertion) still fires.
+    assert_eq!(lines(&out, "registry-hygiene"), vec![18], "{out:#?}");
+}
+
+// ---------------------------------------------------------------------------
+// Rule 8: test-registration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn test_registration_flags_testless_file_and_unregistered_bench() {
+    let text = fixture("no_tests.rs");
+    let path = "rust/tests/fixture_no_tests.rs";
+    let mut ctx = ctx_one(path, &text);
+    ctx.test_files.push(path.to_string());
+    ctx.cargo_toml = Some((
+        "rust/Cargo.toml".to_string(),
+        "[package]\nname = \"sa-lowpower\"\n".to_string(),
+    ));
+    ctx.bench_files.push("ghost_bench".to_string());
+    let out = run(&ctx);
+    assert_eq!(out.len(), 2, "{out:#?}");
+    assert!(
+        out.iter().any(|f| f.rule == "test-registration"
+            && f.file == "rust/Cargo.toml"
+            && f.why.contains("ghost_bench")),
+        "{out:#?}"
+    );
+    assert!(
+        out.iter().any(|f| f.rule == "test-registration"
+            && f.file == path
+            && f.line == 1),
+        "{out:#?}"
+    );
+}
+
+#[test]
+fn test_registration_pragma_on_line_one_suppresses() {
+    let text = fixture("no_tests.rs");
+    let patched = insert_before(
+        &text,
+        1,
+        "// sa-lint: allow(test-registration) reason=\"fixture proves pragma suppression\"",
+    );
+    let path = "rust/tests/fixture_no_tests.rs";
+    let mut ctx = ctx_one(path, &patched);
+    ctx.test_files.push(path.to_string());
+    let out = run(&ctx);
+    assert!(out.is_empty(), "{out:#?}");
+}
+
+// ---------------------------------------------------------------------------
+// The real tree is clean
+// ---------------------------------------------------------------------------
+
+#[test]
+fn the_real_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent");
+    let ctx = load_repo(root).expect("walk the repo");
+    assert!(
+        ctx.files.len() > 20,
+        "repo walk looks truncated: {} files",
+        ctx.files.len()
+    );
+    let out = run(&ctx);
+    assert!(
+        out.is_empty(),
+        "sa-lint findings on the real tree:\n{}",
+        render_human(&out, ctx.files.len())
+    );
+}
