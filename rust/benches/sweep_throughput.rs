@@ -17,13 +17,22 @@
 //! * **warm-cache** — the batched engine behind a primed
 //!   content-addressed result cache (`CachePolicy::Memory`), so every
 //!   tile is a lookup instead of an estimation pass (1 worker; the
-//!   ceiling the `serve` loop approaches on repeated jobs).
+//!   ceiling the `serve` loop approaches on repeated jobs);
+//! * **interpreter** — the batched engine with the fused pricing
+//!   kernels disabled (the `--no-specialize` path), so every stack is
+//!   priced through the generic `StreamCodec` interpreter (1 worker).
+//!   The batched/t1-over-interpreter ratio is the specialization
+//!   speedup; both cells are bit-identical by the conformance suite.
 //!
 //! Results land in `BENCH_sweep.json` at the repo root (machine-
 //! readable; tracked across PRs — EXPERIMENTS.md §Perf reads it). The
 //! acceptance bar for the refactor is ≥2× ablation-set throughput of
 //! batched over per-config on the cycle backend; the measured ratios
 //! are printed per cell.
+//!
+//! Set `SWEEP_SMOKE=1` to run the same matrix on `tinycnn` with one
+//! tile per layer — a seconds-long smoke pass for CI that still writes
+//! `BENCH_sweep.json`.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -31,8 +40,8 @@ use std::time::Duration;
 use sa_lowpower::activity::ActivityCounts;
 use sa_lowpower::coding::CodingStack;
 use sa_lowpower::engine::{
-    AnalyticBackend, CachePolicy, ConfigSet, CycleBackend, EngineResult,
-    EstimatorBackend, SaEngine,
+    AnalyticBackend, BackendKind, CachePolicy, ConfigSet, CycleBackend,
+    EngineResult, EstimatorBackend, SaEngine,
 };
 use sa_lowpower::sa::{Dataflow, Tile};
 use sa_lowpower::util::bench::{time_once, BenchSet, Measurement};
@@ -109,14 +118,17 @@ fn measure(engine: &SaEngine, net: &Network, label: &str, set: &mut BenchSet) ->
 }
 
 fn main() {
-    let tiles_per_layer = 2;
+    // SWEEP_SMOKE=1: CI smoke mode — same matrix, tiny workload.
+    let smoke = std::env::var_os("SWEEP_SMOKE").is_some();
+    let (net_name, tiles_per_layer) =
+        if smoke { ("tinycnn", 1) } else { ("resnet50", 2) };
     let threads_wide =
         std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    let net = Network::by_name("resnet50").unwrap();
+    let net = Network::by_name(net_name).unwrap();
     let mut set = BenchSet::new();
 
     println!(
-        "=== sweep throughput: per-config vs batched (resnet50, {} tiles/layer) ===\n",
+        "=== sweep throughput: per-config vs batched ({net_name}, {} tiles/layer) ===\n",
         tiles_per_layer
     );
 
@@ -124,6 +136,10 @@ fn main() {
         [("paper", ConfigSet::paper()), ("ablation", ConfigSet::ablation())]
     {
         for backend_name in ["analytic", "cycle"] {
+            let kind = match backend_name {
+                "analytic" => BackendKind::Analytic,
+                _ => BackendKind::Cycle,
+            };
             let fresh = || -> Arc<dyn EstimatorBackend> {
                 match backend_name {
                     "analytic" => Arc::new(AnalyticBackend),
@@ -140,7 +156,7 @@ fn main() {
                 per_config,
                 1,
                 tiles_per_layer,
-                &format!("sweep/resnet50/{set_name}/{backend_name}/per-config/t1"),
+                &format!("sweep/{net_name}/{set_name}/{backend_name}/per-config/t1"),
                 &mut set,
             );
             let batched = run_sweep(
@@ -149,7 +165,7 @@ fn main() {
                 fresh(),
                 1,
                 tiles_per_layer,
-                &format!("sweep/resnet50/{set_name}/{backend_name}/batched/t1"),
+                &format!("sweep/{net_name}/{set_name}/{backend_name}/batched/t1"),
                 &mut set,
             );
             let wide = run_sweep(
@@ -159,7 +175,7 @@ fn main() {
                 threads_wide,
                 tiles_per_layer,
                 &format!(
-                    "sweep/resnet50/{set_name}/{backend_name}/batched/t{threads_wide}"
+                    "sweep/{net_name}/{set_name}/{backend_name}/batched/t{threads_wide}"
                 ),
                 &mut set,
             );
@@ -177,19 +193,42 @@ fn main() {
             let warm = measure(
                 &cached_engine,
                 &net,
-                &format!("sweep/resnet50/{set_name}/{backend_name}/warm-cache/t1"),
+                &format!("sweep/{net_name}/{set_name}/{backend_name}/warm-cache/t1"),
+                &mut set,
+            );
+            // Interpreter column: the same batched/t1 engine shape with
+            // the fused pricing kernels turned off (`--no-specialize`),
+            // so every stack is priced by the generic codec
+            // interpreter. Built via `.specialize(false).backend(kind)`
+            // rather than `backend_impl` so the result provenance
+            // (`ConfigResult::specialized`) stays truthful.
+            let interp_engine = SaEngine::builder()
+                .max_tiles_per_layer(tiles_per_layer)
+                .configs(configs.clone())
+                .specialize(false)
+                .backend(kind)
+                .threads(1)
+                .build()
+                .expect("valid bench engine spec");
+            let interp = measure(
+                &interp_engine,
+                &net,
+                &format!("sweep/{net_name}/{set_name}/{backend_name}/interpreter/t1"),
                 &mut set,
             );
             assert_eq!(base.layers, batched.layers);
             assert_eq!(base.tiles, batched.tiles);
             assert_eq!(base.tiles, warm.tiles);
+            assert_eq!(base.tiles, interp.tiles);
             println!(
                 "    {set_name}/{backend_name}: batched speedup {:.2}x \
                  (1 thread), {:.2}x ({threads_wide} threads), warm cache \
-                 {:.2}x over batched\n",
+                 {:.2}x over batched, specialized kernels {:.2}x over \
+                 interpreter\n",
                 base.secs / batched.secs,
                 base.secs / wide.secs,
-                batched.secs / warm.secs
+                batched.secs / warm.secs,
+                interp.secs / batched.secs
             );
         }
     }

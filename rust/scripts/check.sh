@@ -52,11 +52,11 @@ echo "== build (release) =="
 cargo build --release 2>&1 | tee "$OUT_DIR/build.log"
 
 echo "== sa-lint (repo-native static analysis) =="
-# Eight rules over the tree's own contracts (panic paths, lock
-# discipline, schema tags, error table, registry, test registration —
-# see README §"Static analysis"). Findings fail the run before any
-# test executes; the lint-report.v1 document is archived next to the
-# other artifacts.
+# Nine rules over the tree's own contracts (panic paths, lock
+# discipline, schema tags, error table, registry, test registration,
+# kernel registration — see README §"Static analysis"). Findings fail
+# the run before any test executes; the lint-report.v1 document is
+# archived next to the other artifacts.
 cargo run --release --bin sa-lint -- \
     --json "$OUT_DIR/lint-report.json" 2>&1 | tee "$OUT_DIR/lint.log"
 grep -q '"schema": "sa-lowpower.lint-report.v1"' "$OUT_DIR/lint-report.json"
@@ -133,6 +133,15 @@ for coding in \
         done
     done
 done
+# The specialization escape hatch end-to-end: the same composed-stack
+# simulate under --no-specialize must still pass the internal
+# analytic == cycle cross-check (fused and interpreter paths are
+# bit-identical by contract, so the flag can only change speed).
+cargo run --release -- simulate \
+    --m 6 --k 32 --n 6 --sparsity 0.5 \
+    --coding "w:zvcg+bic-mantissa+ddcg16-g8,i:ddcg16-g4" \
+    --no-specialize 2>&1 \
+    | tee "$OUT_DIR/coding_no_specialize.log"
 # A composed stack rides along a real sweep (extra report column + v3
 # JSON artifact with per-stream stack provenance).
 cargo run --release -- ablation \
@@ -293,9 +302,11 @@ if [ -f "$REPO_ROOT/BENCH_perf_hotpath.json" ]; then
 fi
 
 echo "== sweep throughput (count-once/price-many vs per-config) =="
-# Per-config vs batched vs multi-threaded batched, paper + ablation
-# sets, both backends; emits BENCH_sweep.json at the repo root so the
-# sweep-throughput trajectory is tracked across PRs.
+# Per-config vs batched vs multi-threaded batched vs warm-cache vs
+# interpreter (fused kernels disabled), paper + ablation sets, both
+# backends; emits BENCH_sweep.json at the repo root so the
+# sweep-throughput and specialization trajectories are tracked across
+# PRs.
 cargo bench --bench sweep_throughput 2>&1 | tee "$OUT_DIR/sweep_throughput.log"
 
 if [ -f "$REPO_ROOT/BENCH_sweep.json" ]; then

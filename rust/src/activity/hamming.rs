@@ -9,11 +9,14 @@
 //! * [`ham16_packed`]`(pack(a0..a3), pack(b0..b3))` `==`
 //!   `Σ` [`ham16`]`(ai, bi)` — XOR and popcount distribute over disjoint
 //!   16-bit lanes of a `u64`, so four bus words are processed per
-//!   popcount with **bit-identical** totals;
+//!   popcount with **bit-identical** totals; [`ham16_packed8`] extends
+//!   the same identity to eight lanes of a `u128` (the slice walkers'
+//!   wide inner step);
 //! * [`ham16_slice`]`(a, b)` `==` `Σ_i ham16(a[i], b[i])` for every
 //!   length, alignment and tail;
 //! * [`ham16_slice_masked`] restricts every lane to the same 16-bit line
-//!   mask (the mask is broadcast to all four lanes of the packed word);
+//!   mask (the mask is broadcast to every lane of the packed word), and
+//!   runs the identical wide-unrolled walk as [`ham16_slice`];
 //! * lane packing is endianness-agnostic: both operands are read with
 //!   the same `read_unaligned` order and XOR/popcount are permutation-
 //!   invariant, so the total never depends on byte order.
@@ -72,6 +75,13 @@ pub const fn broadcast_mask(mask: u16) -> u64 {
     (mask as u64) * 0x0001_0001_0001_0001
 }
 
+/// Broadcast a 16-bit line mask to all eight lanes of a wide packed
+/// word.
+#[inline]
+pub const fn broadcast_mask128(mask: u16) -> u128 {
+    (mask as u128) * 0x0001_0001_0001_0001_0001_0001_0001_0001
+}
+
 /// Hamming distance between two packed 4-lane words: exactly
 /// `Σ ham16(a_lane, b_lane)` (XOR/popcount have no cross-lane carries).
 #[inline]
@@ -86,6 +96,21 @@ pub fn ham16_packed_masked(a: u64, b: u64, mask64: u64) -> u32 {
     ((a ^ b) & mask64).count_ones()
 }
 
+/// Hamming distance between two wide packed 8-lane words: exactly
+/// `Σ ham16(a_lane, b_lane)`, as for [`ham16_packed`] — XOR/popcount
+/// carry nothing across the 16-bit lane boundaries of a `u128` either.
+#[inline]
+pub fn ham16_packed8(a: u128, b: u128) -> u32 {
+    (a ^ b).count_ones()
+}
+
+/// Masked wide packed Hamming distance; `mask128` is usually
+/// [`broadcast_mask128`]`(line_mask)`.
+#[inline]
+pub fn ham16_packed8_masked(a: u128, b: u128, mask128: u128) -> u32 {
+    ((a ^ b) & mask128).count_ones()
+}
+
 /// Read 4 u16 lanes starting at element `i` as one (possibly unaligned)
 /// u64. Caller guarantees `i + 4 <= len`.
 #[inline]
@@ -95,60 +120,96 @@ unsafe fn load4(p: *const u16, i: usize) -> u64 {
     unsafe { p.add(i).cast::<u64>().read_unaligned() }
 }
 
+/// Read 8 u16 lanes starting at element `i` as one (possibly unaligned)
+/// u128. Caller guarantees `i + 8 <= len`.
+#[inline]
+unsafe fn load8(p: *const u16, i: usize) -> u128 {
+    // SAFETY: caller guarantees i+8 elements are in bounds;
+    // read_unaligned has no alignment requirement.
+    unsafe { p.add(i).cast::<u128>().read_unaligned() }
+}
+
 /// Total Hamming distance between two equal-length u16 slices.
 ///
-/// Word-packed hot path: 4 lanes per XOR+popcount, 4 independent
-/// accumulators for instruction-level parallelism, unaligned u64 loads
-/// straight from the slice memory (no per-lane shift/or assembly).
-/// Bit-identical to the scalar sum for every length and alignment.
+/// Wide-packed hot path: 8 lanes per XOR+popcount (`u128` chunks), 4
+/// independent accumulators for instruction-level parallelism (32 lanes
+/// per unrolled iteration), then a 4-lane u64 step and a scalar tail.
+/// Loads are unaligned reads straight from the slice memory (no
+/// per-lane shift/or assembly). Bit-identical to the scalar sum for
+/// every length and alignment.
 pub fn ham16_slice(a: &[u16], b: &[u16]) -> u64 {
     assert_eq!(a.len(), b.len());
     let n = a.len();
-    let words = n / 4;
-    let quads = words / 4;
+    let octs = n / 8;
+    let wides = octs / 4;
     let (mut t0, mut t1, mut t2, mut t3) = (0u64, 0u64, 0u64, 0u64);
     let (pa, pb) = (a.as_ptr(), b.as_ptr());
-    // SAFETY: every load4 below reads lanes [i, i+4) with i+4 <= words*4
-    // <= n, in bounds of both slices (equal length asserted above).
+    let mut i = octs * 8;
+    // SAFETY: every load8 below reads lanes [i, i+8) with i+8 <= octs*8
+    // <= n, and the load4 step runs only when i+4 <= n — all in bounds
+    // of both slices (equal length asserted above).
     unsafe {
-        for q in 0..quads {
-            let i = q * 16;
-            t0 += ham16_packed(load4(pa, i), load4(pb, i)) as u64;
-            t1 += ham16_packed(load4(pa, i + 4), load4(pb, i + 4)) as u64;
-            t2 += ham16_packed(load4(pa, i + 8), load4(pb, i + 8)) as u64;
-            t3 += ham16_packed(load4(pa, i + 12), load4(pb, i + 12)) as u64;
+        for w in 0..wides {
+            let i = w * 32;
+            t0 += ham16_packed8(load8(pa, i), load8(pb, i)) as u64;
+            t1 += ham16_packed8(load8(pa, i + 8), load8(pb, i + 8)) as u64;
+            t2 += ham16_packed8(load8(pa, i + 16), load8(pb, i + 16)) as u64;
+            t3 += ham16_packed8(load8(pa, i + 24), load8(pb, i + 24)) as u64;
         }
-        for w in quads * 4..words {
-            let i = w * 4;
-            t0 += ham16_packed(load4(pa, i), load4(pb, i)) as u64;
+        for o in wides * 4..octs {
+            t0 += ham16_packed8(load8(pa, o * 8), load8(pb, o * 8)) as u64;
+        }
+        if i + 4 <= n {
+            t1 += ham16_packed(load4(pa, i), load4(pb, i)) as u64;
+            i += 4;
         }
     }
     let mut total = t0 + t1 + t2 + t3;
-    for i in words * 4..n {
-        total += ham16(a[i], b[i]) as u64;
+    for j in i..n {
+        total += ham16(a[j], b[j]) as u64;
     }
     total
 }
 
 /// Masked total Hamming distance between two equal-length u16 slices:
-/// `Σ_i ham16_masked(a[i], b[i], mask)`, word-packed.
+/// `Σ_i ham16_masked(a[i], b[i], mask)` — the identical wide-unrolled
+/// walk as [`ham16_slice`] (8-lane `u128` chunks, 4 ILP accumulators,
+/// 4-lane step, scalar tail) with the mask broadcast to every lane.
 pub fn ham16_slice_masked(a: &[u16], b: &[u16], mask: u16) -> u64 {
     assert_eq!(a.len(), b.len());
     let n = a.len();
-    let words = n / 4;
+    let octs = n / 8;
+    let wides = octs / 4;
+    let m128 = broadcast_mask128(mask);
     let m64 = broadcast_mask(mask);
-    let mut total = 0u64;
+    let (mut t0, mut t1, mut t2, mut t3) = (0u64, 0u64, 0u64, 0u64);
     let (pa, pb) = (a.as_ptr(), b.as_ptr());
-    // SAFETY: as in ham16_slice — all packed reads stay within `words*4
-    // <= n` elements of both equal-length slices.
+    let mut i = octs * 8;
+    // SAFETY: as in ham16_slice — every packed read stays within the
+    // first `n` elements of both equal-length slices.
     unsafe {
-        for w in 0..words {
-            let i = w * 4;
-            total += ham16_packed_masked(load4(pa, i), load4(pb, i), m64) as u64;
+        for w in 0..wides {
+            let i = w * 32;
+            t0 += ham16_packed8_masked(load8(pa, i), load8(pb, i), m128) as u64;
+            t1 += ham16_packed8_masked(load8(pa, i + 8), load8(pb, i + 8), m128)
+                as u64;
+            t2 += ham16_packed8_masked(load8(pa, i + 16), load8(pb, i + 16), m128)
+                as u64;
+            t3 += ham16_packed8_masked(load8(pa, i + 24), load8(pb, i + 24), m128)
+                as u64;
+        }
+        for o in wides * 4..octs {
+            t0 += ham16_packed8_masked(load8(pa, o * 8), load8(pb, o * 8), m128)
+                as u64;
+        }
+        if i + 4 <= n {
+            t1 += ham16_packed_masked(load4(pa, i), load4(pb, i), m64) as u64;
+            i += 4;
         }
     }
-    for i in words * 4..n {
-        total += ham16_masked(a[i], b[i], mask) as u64;
+    let mut total = t0 + t1 + t2 + t3;
+    for j in i..n {
+        total += ham16_masked(a[j], b[j], mask) as u64;
     }
     total
 }
@@ -229,13 +290,38 @@ mod tests {
     }
 
     #[test]
+    fn packed8_equals_lane_sum() {
+        check("ham16_packed8 == Σ ham16", 500, |rng| {
+            let mut a = [0u16; 8];
+            let mut b = [0u16; 8];
+            for i in 0..8 {
+                a[i] = rng.next_u32() as u16;
+                b[i] = rng.next_u32() as u16;
+            }
+            let wide = |w: [u16; 8]| -> u128 {
+                (pack4([w[0], w[1], w[2], w[3]]) as u128)
+                    | ((pack4([w[4], w[5], w[6], w[7]]) as u128) << 64)
+            };
+            let want: u32 = (0..8).map(|i| ham16(a[i], b[i])).sum();
+            assert_eq!(ham16_packed8(wide(a), wide(b)), want);
+            let mask = rng.next_u32() as u16;
+            let want_m: u32 = (0..8).map(|i| ham16_masked(a[i], b[i], mask)).sum();
+            assert_eq!(
+                ham16_packed8_masked(wide(a), wide(b), broadcast_mask128(mask)),
+                want_m
+            );
+        });
+    }
+
+    #[test]
     fn slice_matches_scalar_on_unaligned_subslices() {
-        // Exercise every alignment phase of the unaligned u64 loads.
+        // Exercise every alignment phase of the unaligned wide loads
+        // (u128 main step, u64 step, scalar tail).
         check("packed hamming on offset slices", 100, |rng| {
-            let n = 64 + rng.below(64);
+            let n = 128 + rng.below(64);
             let a: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
             let b: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
-            for off in 0..4.min(n) {
+            for off in 0..8.min(n) {
                 let (sa, sb) = (&a[off..], &b[off..]);
                 let want: u64 = sa
                     .iter()
@@ -249,8 +335,10 @@ mod tests {
 
     #[test]
     fn masked_slice_matches_scalar() {
+        // Lengths from 0 through several wide iterations, so every path
+        // (32-lane unroll, 8-lane loop, 4-lane step, scalar tail) is hit.
         check("packed masked hamming == scalar", 200, |rng| {
-            let n = rng.below(70);
+            let n = rng.below(170);
             let mask = rng.next_u32() as u16;
             let a: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
             let b: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
@@ -260,6 +348,32 @@ mod tests {
                 .map(|(&x, &y)| ham16_masked(x, y, mask) as u64)
                 .sum();
             assert_eq!(ham16_slice_masked(&a, &b, mask), want);
+        });
+    }
+
+    #[test]
+    fn masked_slice_matches_scalar_on_unaligned_subslices() {
+        // The masked walker shares ham16_slice's unrolled structure;
+        // pin it against the scalar ham16_masked fold on every
+        // alignment phase too.
+        check("packed masked hamming on offset slices", 100, |rng| {
+            let n = 128 + rng.below(64);
+            let mask = rng.next_u32() as u16;
+            let a: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+            let b: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+            for off in 0..8.min(n) {
+                let (sa, sb) = (&a[off..], &b[off..]);
+                let want: u64 = sa
+                    .iter()
+                    .zip(sb)
+                    .map(|(&x, &y)| ham16_masked(x, y, mask) as u64)
+                    .sum();
+                assert_eq!(
+                    ham16_slice_masked(sa, sb, mask),
+                    want,
+                    "offset {off}"
+                );
+            }
         });
     }
 }

@@ -12,6 +12,11 @@
 //! exponent BIC, weight-side ZVCG, DDCG, min-transitions policies) is a
 //! different stack, not a different engine.
 //!
+//! Stacks built purely from in-tree codecs additionally compile to
+//! fused, monomorphized lane kernels via [`specialize`] — the pricing
+//! hot path; the generic interpreter remains the semantic anchor and
+//! the fallback for out-of-tree codecs.
+//!
 //! [`SaCodingConfig`] is the deprecated closed pre-stack struct, kept
 //! only as a lowering shim.
 
@@ -19,6 +24,7 @@ mod bic;
 mod codec;
 mod config;
 mod ddcg;
+mod specialize;
 mod stack;
 mod zvcg;
 
@@ -26,5 +32,6 @@ pub use bic::*;
 pub use codec::*;
 pub use config::*;
 pub use ddcg::*;
+pub use specialize::*;
 pub use stack::*;
 pub use zvcg::*;

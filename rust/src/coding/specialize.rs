@@ -1,0 +1,474 @@
+//! `specialize(stack)` — compile a coding stack to fused lane kernels.
+//!
+//! The generic pricing path walks every lane word through an
+//! [`super::EdgeCoder`] stage chain: one `Box<dyn LaneCoder>` virtual
+//! call per codec per word, a [`super::codec::CodedWord`] materialized
+//! per stage, and a per-word stage-list walk. That interpreter is the
+//! conformance anchor — it executes *any* valid stack — but the stacks
+//! that dominate paper figures, CNN/transformer sweeps, and serve
+//! traffic are a handful of shapes built from the three in-tree codec
+//! roles. This module recognizes those shapes by codec name and lowers
+//! each edge to a monomorphized [`EdgeKernel`]: a single generic-free
+//! pass over the packed lane stream with no per-word dispatch, no
+//! `CodedWord`, and wide (`u128`-chunk) popcounts wherever the walk is
+//! data-independent.
+//!
+//! ## Recognized shapes
+//!
+//! Edge validation guarantees at most one codec per role, and
+//! gate-before-transform ordering, so the whole shape space per edge is
+//! `{zvcg?} × {bic(mode, policy)?} × {ddcg16-g<N>?}` — the eight
+//! [`KERNEL_SHAPES`]. Recognition is by codec *name* (names round-trip
+//! through `codec_by_name`, so the name pins the exact semantics); any
+//! out-of-tree codec makes [`specialize`] return `None` and the caller
+//! silently falls back to the interpreter.
+//!
+//! ## The bit-exactness contract
+//!
+//! Every kernel reproduces the interpreter's per-word accumulator
+//! semantics exactly — [`LaneTotals`] is the same tuple the generic
+//! walk in `sa::activity_ir` folds, and `rust/tests/conformance.rs`
+//! proves specialized == generic (counts and f32 outputs) over registry
+//! and random composed stacks on both dataflows and backends. A new
+//! kernel shape is only admissible with a matching conformance clause
+//! (`sa-lint`'s `kernel-registration` check enforces that every name in
+//! [`KERNEL_SHAPES`] appears in the conformance suite).
+
+use crate::activity::{ham16_masked, ham16_slice};
+use crate::bf16::{as_bits, Bf16};
+
+use super::bic::{BicMode, BicPolicy};
+use super::codec::{CodecRole, LoadOverhead};
+use super::ddcg::changed_group_bits;
+use super::stack::{CodingStack, EdgeStack};
+
+/// The eight edge shapes the specializer compiles, indexed by
+/// `gates | bic << 1 | ddcg << 2`. Every name here must be exercised by
+/// a specialized-vs-generic clause in `rust/tests/conformance.rs`
+/// (enforced by `sa-lint`'s `kernel-registration` rule).
+pub const KERNEL_SHAPES: [&str; 8] = [
+    "plain",
+    "zvcg",
+    "bic",
+    "zvcg+bic",
+    "ddcg",
+    "zvcg+ddcg",
+    "bic+ddcg",
+    "zvcg+bic+ddcg",
+];
+
+/// Raw per-lane stream totals, before any register/fanout scaling:
+/// exactly the accumulators of the interpreter's per-word loop (the
+/// `lane_counts` walk in `sa::activity_ir`), so the charge arithmetic
+/// downstream is shared verbatim between the two paths.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LaneTotals {
+    /// Data-line toggles per register (post-transform word stream).
+    pub raw_toggles: u64,
+    /// FF clock events per register (16/load, reduced by a clock gate).
+    pub clock_bits: u64,
+    /// Register load slots (non-gated values).
+    pub loads: u64,
+    /// Transform sideband (inv-line) toggles.
+    pub inv_toggles: u64,
+    /// Per-tap decoder XOR toggles (masked data lines + inv lines).
+    pub dec_toggles: u64,
+    /// is-zero sideband toggles (value-gated edges only).
+    pub zero_sb_toggles: u64,
+    /// Gate-decision evaluations (one per raw word per value gate).
+    pub zero_detect_ops: u64,
+    /// Bus-encoder evaluations (one per surviving word per transform).
+    pub encoder_ops: u64,
+}
+
+/// Monomorphized BIC state machine for one lane: the segment table and
+/// inversion rule resolved once at specialization time.
+#[derive(Clone, Copy, Debug)]
+struct BicKernel {
+    segs: &'static [u16],
+    min_transitions: bool,
+}
+
+/// A fused, monomorphized lane kernel for one edge: single pass over
+/// the packed lane stream, no per-word virtual dispatch, survivor
+/// compaction into a caller-recycled scratch arena, wide popcounts on
+/// the data-independent walks. Construct via [`specialize`].
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeKernel {
+    gates: bool,
+    bic: Option<BicKernel>,
+    ddcg_group_bits: Option<usize>,
+    mask: u16,
+    lines: u64,
+    over: LoadOverhead,
+}
+
+impl EdgeKernel {
+    /// Does this edge value-gate (registers freeze on zeros)?
+    pub fn gates(&self) -> bool {
+        self.gates
+    }
+
+    /// Transform sideband lines clocked per load.
+    pub fn coded_lines(&self) -> u64 {
+        self.lines
+    }
+
+    /// Per-load register overheads of the clock-gate codec (if any).
+    pub fn load_overhead(&self) -> LoadOverhead {
+        self.over
+    }
+
+    /// Which of the [`KERNEL_SHAPES`] this kernel is.
+    pub fn shape_name(&self) -> &'static str {
+        let idx = self.gates as usize
+            | (self.bic.is_some() as usize) << 1
+            | (self.ddcg_group_bits.is_some() as usize) << 2;
+        KERNEL_SHAPES[idx]
+    }
+
+    /// One fused pass over a raw lane stream. `scratch` is the survivor
+    /// compaction arena — cleared and reused, never shrunk, so pricing
+    /// many lanes/stacks through one kernel set allocates nothing after
+    /// warm-up. Bit-identical to folding the interpreter walk into
+    /// [`LaneTotals`] (the conformance-tested contract).
+    pub fn lane_totals(&self, raw: &[Bf16], scratch: &mut Vec<u16>) -> LaneTotals {
+        let mut t = match self.bic {
+            Some(bic) => self.run_bic(raw, bic),
+            None => self.run_plain(raw, scratch),
+        };
+        if self.gates {
+            t.zero_detect_ops = raw.len() as u64;
+        }
+        t
+    }
+
+    /// Transform-free shapes: the surviving word stream is the raw
+    /// stream (optionally compacted past the gated zeros), so data
+    /// toggles collapse to a self-shifted wide slice popcount and only
+    /// the DDCG group comparison stays scalar.
+    fn run_plain(&self, raw: &[Bf16], scratch: &mut Vec<u16>) -> LaneTotals {
+        let mut t = LaneTotals::default();
+        let bits: &[u16] = if self.gates {
+            scratch.clear();
+            let mut prev_zero = false;
+            for &v in raw {
+                let z = v.is_zero();
+                t.zero_sb_toggles += (z != prev_zero) as u64;
+                prev_zero = z;
+                if !z {
+                    scratch.push(v.0);
+                }
+            }
+            &scratch[..]
+        } else {
+            as_bits(raw)
+        };
+        t.loads = bits.len() as u64;
+        // Σ ham(prev, cur) from reset 0 == reset→first plus the slice
+        // distance between the stream and itself shifted by one slot.
+        t.raw_toggles = match bits {
+            [] => 0,
+            [first, rest @ ..] => {
+                first.count_ones() as u64
+                    + ham16_slice(&bits[..rest.len()], &bits[1..])
+            }
+        };
+        t.clock_bits = match self.ddcg_group_bits {
+            Some(g) => {
+                let mut clocked = 0u64;
+                let mut prev = 0u16;
+                for &w in bits {
+                    clocked += changed_group_bits(prev, w, g);
+                    prev = w;
+                }
+                clocked
+            }
+            None => 16 * t.loads,
+        };
+        t
+    }
+
+    /// BIC shapes: the encoder's prev-transmitted state makes the walk
+    /// sequential, so this is one flat scalar loop with the segment
+    /// table inlined — gate check, encode, sideband/decoder/data/clock
+    /// accounting fused per surviving word, no stage chain.
+    fn run_bic(&self, raw: &[Bf16], bic: BicKernel) -> LaneTotals {
+        let mut t = LaneTotals::default();
+        // prev_tx/prev_inv double as the previous bus word/sideband:
+        // gated words advance neither the encoder nor the registers.
+        let mut prev_tx = 0u16;
+        let mut prev_inv = 0u8;
+        let mut prev_zero = false;
+        for &v in raw {
+            if self.gates {
+                let z = v.is_zero();
+                t.zero_sb_toggles += (z != prev_zero) as u64;
+                prev_zero = z;
+                if z {
+                    continue;
+                }
+            }
+            let mut tx = v.0;
+            let mut inv = 0u8;
+            for (s, &mask) in bic.segs.iter().enumerate() {
+                let width = mask.count_ones();
+                let d_plain = ((prev_tx ^ v.0) & mask).count_ones();
+                let invert = if bic.min_transitions {
+                    let prev_inv_bit = (prev_inv >> s) & 1;
+                    let d_inv = width - d_plain;
+                    let cost_plain = d_plain + (prev_inv_bit != 0) as u32;
+                    let cost_inv = d_inv + (prev_inv_bit != 1) as u32;
+                    cost_inv < cost_plain
+                } else {
+                    2 * d_plain > width
+                };
+                if invert {
+                    tx ^= mask;
+                    inv |= 1 << s;
+                }
+            }
+            let inv_diff = (prev_inv ^ inv).count_ones() as u64;
+            t.inv_toggles += inv_diff;
+            t.dec_toggles +=
+                ham16_masked(prev_tx, tx, self.mask) as u64 + inv_diff;
+            t.raw_toggles += (prev_tx ^ tx).count_ones() as u64;
+            t.clock_bits += match self.ddcg_group_bits {
+                Some(g) => changed_group_bits(prev_tx, tx, g),
+                None => 16,
+            };
+            prev_tx = tx;
+            prev_inv = inv;
+            t.loads += 1;
+        }
+        t.encoder_ops = t.loads;
+        t
+    }
+}
+
+/// The compiled form of a full [`CodingStack`]: one fused kernel per
+/// edge.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecializedStack {
+    /// West edge (input streams) kernel.
+    pub west: EdgeKernel,
+    /// North edge (weight streams) kernel.
+    pub north: EdgeKernel,
+}
+
+/// Resolve a BIC codec base name back to its mode (the inverse of
+/// `BicMode::name`, over the codable modes).
+fn bic_mode_by_name(base: &str) -> Option<BicMode> {
+    [
+        BicMode::MantissaOnly,
+        BicMode::FullBus,
+        BicMode::Segmented,
+        BicMode::ExponentOnly,
+    ]
+    .into_iter()
+    .find(|mode| mode.name() == base)
+}
+
+/// Lower one edge stack to a fused kernel, or `None` when any codec on
+/// the edge is not an in-tree name.
+fn specialize_edge(edge: &EdgeStack) -> Option<EdgeKernel> {
+    let mut gates = false;
+    let mut bic = None;
+    let mut ddcg_group_bits = None;
+    for codec in edge.codecs() {
+        let name = codec.name();
+        match codec.role() {
+            CodecRole::ValueGate => {
+                if name != "zvcg" {
+                    return None;
+                }
+                gates = true;
+            }
+            CodecRole::Transform => {
+                let (base, policy) = match name.strip_suffix("-mt") {
+                    Some(base) => (base, BicPolicy::MinTransitions),
+                    None => (name.as_str(), BicPolicy::Classic),
+                };
+                let mode = bic_mode_by_name(base)?;
+                bic = Some(BicKernel {
+                    segs: mode.segments(),
+                    min_transitions: policy == BicPolicy::MinTransitions,
+                });
+            }
+            CodecRole::ClockGate => {
+                let g: usize =
+                    name.strip_prefix("ddcg16-g")?.parse().ok()?;
+                if g == 0 || 16 % g != 0 {
+                    return None;
+                }
+                ddcg_group_bits = Some(g);
+            }
+        }
+    }
+    Some(EdgeKernel {
+        gates,
+        bic,
+        ddcg_group_bits,
+        mask: edge.cover_mask(),
+        lines: edge.coded_lines() as u64,
+        over: edge.load_overhead(),
+    })
+}
+
+/// Compile a coding stack to fused per-edge kernels. Returns `None` —
+/// and the pricing paths silently keep the generic interpreter — when
+/// either edge carries a codec the specializer does not recognize.
+pub fn specialize(stack: &CodingStack) -> Option<SpecializedStack> {
+    Some(SpecializedStack {
+        west: specialize_edge(&stack.west)?,
+        north: specialize_edge(&stack.north)?,
+    })
+}
+
+/// Would [`specialize`] compile this stack? (Provenance reporting.)
+pub fn specializes(stack: &CodingStack) -> bool {
+    specialize(stack).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Rng64;
+
+    /// Fold the generic interpreter walk into LaneTotals — the literal
+    /// per-word loop of `sa::activity_ir::lane_counts`.
+    fn interpret(edge: &EdgeStack, raw: &[Bf16]) -> LaneTotals {
+        let gates = edge.gates();
+        let codes = edge.codes();
+        let mask = edge.cover_mask();
+        let clock_gate = edge.clock_gate().cloned();
+        let mut coder = edge.coder();
+        let mut t = LaneTotals::default();
+        let mut prev_word = 0u16;
+        let mut prev_sb = 0u8;
+        let mut prev_zero = false;
+        for &v in raw {
+            let slot = coder.next(v);
+            if gates {
+                t.zero_sb_toggles += (slot.gated != prev_zero) as u64;
+                prev_zero = slot.gated;
+                if slot.gated {
+                    continue;
+                }
+            }
+            assert_eq!(edge.decode(slot.word, slot.sideband).0, v.0);
+            if codes {
+                let inv_diff = (prev_sb ^ slot.sideband).count_ones() as u64;
+                t.inv_toggles += inv_diff;
+                t.dec_toggles +=
+                    ham16_masked(prev_word, slot.word.0, mask) as u64 + inv_diff;
+                prev_sb = slot.sideband;
+            }
+            t.raw_toggles += (prev_word ^ slot.word.0).count_ones() as u64;
+            t.clock_bits += match &clock_gate {
+                Some(cg) => cg.load_clock_bits(prev_word, slot.word.0),
+                None => 16,
+            };
+            prev_word = slot.word.0;
+            t.loads += 1;
+        }
+        let ops = coder.ops();
+        t.zero_detect_ops = ops.zero_detect_ops;
+        t.encoder_ops = ops.encoder_ops;
+        t
+    }
+
+    fn random_stream(rng: &mut Rng64, n: usize, pz: f64) -> Vec<Bf16> {
+        (0..n)
+            .map(|_| {
+                if rng.chance(pz) {
+                    Bf16::ZERO
+                } else {
+                    Bf16::from_f32(rng.normal() as f32)
+                }
+            })
+            .collect()
+    }
+
+    /// One representative edge spec per kernel shape, shape-name order.
+    const SHAPE_SPECS: [(&str, &str); 8] = [
+        ("plain", ""),
+        ("zvcg", "zvcg"),
+        ("bic", "bic-mantissa"),
+        ("zvcg+bic", "zvcg+bic-full-mt"),
+        ("ddcg", "ddcg16-g4"),
+        ("zvcg+ddcg", "zvcg+ddcg16-g8"),
+        ("bic+ddcg", "bic-segmented+ddcg16-g2"),
+        ("zvcg+bic+ddcg", "zvcg+bic-exponent-mt+ddcg16-g1"),
+    ];
+
+    fn edge_of(spec: &str) -> EdgeStack {
+        if spec.is_empty() {
+            EdgeStack::empty()
+        } else {
+            EdgeStack::parse(spec).unwrap()
+        }
+    }
+
+    #[test]
+    fn every_shape_specializes_under_its_name() {
+        for (shape, spec) in SHAPE_SPECS {
+            let kernel = specialize_edge(&edge_of(spec))
+                .unwrap_or_else(|| panic!("'{spec}' must specialize"));
+            assert_eq!(kernel.shape_name(), shape, "spec '{spec}'");
+        }
+    }
+
+    #[test]
+    fn kernels_match_the_interpreter_lane_for_lane() {
+        check("fused kernel == interpreter LaneTotals", 40, |rng| {
+            let n = rng.below(96);
+            let pz = rng.uniform();
+            let raw = random_stream(rng, n, pz);
+            let mut scratch = Vec::new();
+            for (shape, spec) in SHAPE_SPECS {
+                let edge = edge_of(spec);
+                let kernel = specialize_edge(&edge).unwrap();
+                assert_eq!(
+                    kernel.lane_totals(&raw, &mut scratch),
+                    interpret(&edge, &raw),
+                    "shape {shape}, n={n}, pz={pz:.2}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn all_registry_family_stacks_specialize() {
+        for spec in [
+            "baseline",
+            "w:bic-mantissa,i:zvcg",
+            "w:bic-mantissa",
+            "i:zvcg",
+            "w:bic-full,i:zvcg",
+            "w:bic-segmented,i:zvcg",
+            "w:bic-exponent,i:zvcg",
+            "w:ddcg16-g4,i:ddcg16-g4",
+            "w:zvcg+bic-mantissa-mt+ddcg16-g8,i:zvcg+bic-full",
+        ] {
+            let stack = CodingStack::parse(spec).unwrap();
+            assert!(specializes(&stack), "'{spec}' must specialize");
+        }
+    }
+
+    #[test]
+    fn scratch_arena_is_recycled_not_reallocated() {
+        let mut rng = Rng64::new(11);
+        let raw = random_stream(&mut rng, 64, 0.5);
+        let kernel = specialize_edge(&edge_of("zvcg")).unwrap();
+        let mut scratch = Vec::new();
+        kernel.lane_totals(&raw, &mut scratch);
+        let cap = scratch.capacity();
+        assert!(cap > 0);
+        for _ in 0..8 {
+            kernel.lane_totals(&raw, &mut scratch);
+        }
+        assert_eq!(scratch.capacity(), cap, "steady-state must not grow");
+    }
+}

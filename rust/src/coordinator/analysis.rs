@@ -23,7 +23,7 @@
 //! worker pool and folds identically.
 
 use crate::activity::ActivityCounts;
-use crate::coding::CodingStack;
+use crate::coding::{specializes, CodingStack};
 use crate::engine::{EngineError, EngineResult, EstimatorBackend, TileFault};
 use crate::power::EnergyBreakdown;
 use crate::sa::{SaConfig, TileBuffers};
@@ -42,6 +42,12 @@ pub struct AnalysisOptions {
     pub max_tiles_per_layer: usize,
     /// Max depthwise channels analyzed per layer (scaled up).
     pub max_dw_channels: usize,
+    /// Compile recognized coding stacks to fused lane kernels
+    /// (`coding::specialize`). On by default; `--no-specialize` clears
+    /// it to force the generic `StreamCodec` interpreter. Results are
+    /// bit-identical either way (conformance-pinned) — the flag exists
+    /// for conformance forcing and perf triage.
+    pub specialize: bool,
     /// SA geometry + models.
     pub sa: SaConfig,
 }
@@ -52,6 +58,7 @@ impl Default for AnalysisOptions {
             seed: 0xCAFE,
             max_tiles_per_layer: 64,
             max_dw_channels: 4,
+            specialize: true,
             sa: SaConfig::default(),
         }
     }
@@ -75,6 +82,13 @@ pub struct ConfigResult {
     /// must use this field — see
     /// `SweepReport::streaming_activity_reduction_pct`.
     pub scaled_streaming_toggles: f64,
+    /// Which pricing path produced this row: `true` when the run had
+    /// specialization enabled *and* the stack compiled to fused kernels
+    /// (`coding::specialize`), `false` when the generic interpreter ran
+    /// (out-of-tree stack, or `--no-specialize`). In-memory provenance
+    /// for perf triage; not part of the v3 report schema (the two paths
+    /// are bit-identical by contract).
+    pub specialized: bool,
 }
 
 /// Per-layer analysis output.
@@ -338,6 +352,7 @@ pub(crate) fn finalize_layer(
     per_item: impl IntoIterator<Item = Vec<TileCost>>,
     configs: &[(String, CodingStack)],
     faults: Vec<TileFault>,
+    specialized_pricing: bool,
 ) -> EngineResult<LayerReport> {
     let mut agg: Vec<(ActivityCounts, EnergyBreakdown, f64)> =
         configs.iter().map(|_| Default::default()).collect();
@@ -361,6 +376,7 @@ pub(crate) fn finalize_layer(
         .iter()
         .zip(agg)
         .map(|((name, stack), (counts, energy, scaled))| ConfigResult {
+            specialized: specialized_pricing && specializes(stack),
             stack: stack.clone(),
             config_name: name.clone(),
             counts,
@@ -408,7 +424,15 @@ pub fn analyze_gemms_with(
             price_tile_item(&plan, item, &stacks, opts, backend, &mut scratch)
         })
         .collect::<EngineResult<_>>()?;
-    finalize_layer(layer, layer_idx, &plan, per_item, configs, Vec::new())
+    finalize_layer(
+        layer,
+        layer_idx,
+        &plan,
+        per_item,
+        configs,
+        Vec::new(),
+        opts.specialize,
+    )
 }
 
 #[cfg(test)]

@@ -166,6 +166,7 @@ mod tests {
             },
             energy: Default::default(),
             scaled_streaming_toggles: scale * raw as f64,
+            specialized: false,
         };
         LayerReport {
             layer_name: format!("l{index}"),

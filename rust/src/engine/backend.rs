@@ -58,8 +58,8 @@ use std::sync::Arc;
 use crate::activity::ActivityCounts;
 use crate::coding::CodingStack;
 use crate::sa::{
-    analyze_tile, analyze_tile_many, simulate_tile, Dataflow, Tile,
-    TileActivity,
+    analyze_tile, analyze_tile_many, analyze_tile_many_with,
+    analyze_tile_with, simulate_tile, Dataflow, Tile, TileActivity,
 };
 
 use super::error::{EngineError, EngineResult};
@@ -161,6 +161,71 @@ impl EstimatorBackend for CycleBackend {
     }
 }
 
+/// [`AnalyticBackend`] with the fused-kernel fast path disabled: every
+/// stack is priced by the generic `StreamCodec` interpreter
+/// (`--no-specialize`). Bit-identical to [`AnalyticBackend`] by the
+/// conformance contract — this variant exists so conformance can force
+/// the interpreter and perf triage can measure it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InterpreterAnalyticBackend;
+
+impl EstimatorBackend for InterpreterAnalyticBackend {
+    fn name(&self) -> &'static str {
+        "analytic-interpreter"
+    }
+
+    fn estimate(
+        &self,
+        tile: &Tile,
+        stack: &CodingStack,
+        dataflow: Dataflow,
+    ) -> EngineResult<ActivityCounts> {
+        Ok(analyze_tile_with(tile, stack, dataflow, false))
+    }
+
+    fn estimate_many(
+        &self,
+        tile: &Tile,
+        stacks: &[CodingStack],
+        dataflow: Dataflow,
+    ) -> EngineResult<Vec<ActivityCounts>> {
+        Ok(analyze_tile_many_with(tile, stacks, dataflow, false))
+    }
+}
+
+/// [`CycleBackend`] with the fused-kernel fast path disabled on its
+/// batched `TileActivity` pass (`--no-specialize`). The per-tile
+/// `simulate_tile` path is the literal register-level walk and never
+/// specializes in the first place.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InterpreterCycleBackend;
+
+impl EstimatorBackend for InterpreterCycleBackend {
+    fn name(&self) -> &'static str {
+        "cycle-interpreter"
+    }
+
+    fn estimate(
+        &self,
+        tile: &Tile,
+        stack: &CodingStack,
+        dataflow: Dataflow,
+    ) -> EngineResult<ActivityCounts> {
+        Ok(simulate_tile(tile, stack, dataflow).counts)
+    }
+
+    fn estimate_many(
+        &self,
+        tile: &Tile,
+        stacks: &[CodingStack],
+        dataflow: Dataflow,
+    ) -> EngineResult<Vec<ActivityCounts>> {
+        let mut ir = TileActivity::new(tile, dataflow);
+        ir.set_specialize(false);
+        Ok(stacks.iter().map(|s| ir.price(s)).collect())
+    }
+}
+
 /// Built-in backend selector (the CLI's `--backend analytic|cycle`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum BackendKind {
@@ -188,11 +253,21 @@ impl BackendKind {
             .join("|")
     }
 
-    /// Instantiate the backend behind a shared handle.
+    /// Instantiate the backend behind a shared handle (fused-kernel
+    /// fast path enabled — the default everywhere).
     pub fn instantiate(self) -> Arc<dyn EstimatorBackend> {
-        match self {
-            BackendKind::Analytic => Arc::new(AnalyticBackend),
-            BackendKind::Cycle => Arc::new(CycleBackend),
+        self.instantiate_with(true)
+    }
+
+    /// Instantiate with the fused-kernel fast path enabled or disabled
+    /// (`specialize = false` is the `--no-specialize` interpreter-forced
+    /// variant; results are bit-identical by the conformance contract).
+    pub fn instantiate_with(self, specialize: bool) -> Arc<dyn EstimatorBackend> {
+        match (self, specialize) {
+            (BackendKind::Analytic, true) => Arc::new(AnalyticBackend),
+            (BackendKind::Cycle, true) => Arc::new(CycleBackend),
+            (BackendKind::Analytic, false) => Arc::new(InterpreterAnalyticBackend),
+            (BackendKind::Cycle, false) => Arc::new(InterpreterCycleBackend),
         }
     }
 }
@@ -327,6 +402,46 @@ mod tests {
             EngineError::Backend { backend, .. } => assert_eq!(backend, "always-fails"),
             other => panic!("expected Backend error, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn interpreter_variants_are_bit_exact_vs_specialized() {
+        let t = small_tile();
+        let stacks: Vec<CodingStack> = crate::engine::ConfigSet::ablation()
+            .iter()
+            .map(|(_, s)| s.clone())
+            .collect();
+        for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
+            assert_eq!(
+                AnalyticBackend.estimate_many(&t, &stacks, df).unwrap(),
+                InterpreterAnalyticBackend.estimate_many(&t, &stacks, df).unwrap(),
+                "{df}"
+            );
+            assert_eq!(
+                CycleBackend.estimate_many(&t, &stacks, df).unwrap(),
+                InterpreterCycleBackend.estimate_many(&t, &stacks, df).unwrap(),
+                "{df}"
+            );
+            for stack in &stacks {
+                assert_eq!(
+                    AnalyticBackend.estimate(&t, stack, df).unwrap(),
+                    InterpreterAnalyticBackend.estimate(&t, stack, df).unwrap()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn instantiate_with_selects_the_interpreter_variants() {
+        assert_eq!(BackendKind::Analytic.instantiate_with(true).name(), "analytic");
+        assert_eq!(
+            BackendKind::Analytic.instantiate_with(false).name(),
+            "analytic-interpreter"
+        );
+        assert_eq!(
+            BackendKind::Cycle.instantiate_with(false).name(),
+            "cycle-interpreter"
+        );
     }
 
     #[test]

@@ -611,6 +611,7 @@ fn deliver_work(pool: &PoolInner, work: &LayerWork) {
                 slots.into_iter().flatten(),
                 pool.shared.configs.as_slice(),
                 faults,
+                pool.shared.opts.specialize,
             )
         }
     };
@@ -705,6 +706,7 @@ fn split_layer(pool: &Arc<PoolInner>, task: LayerTask) {
             std::iter::empty(),
             shared.configs.as_slice(),
             Vec::new(),
+            shared.opts.specialize,
         );
         deliver(pool, &state, &reply, outcome);
         return;
@@ -786,6 +788,12 @@ pub struct SaEngineBuilder {
     opts: AnalysisOptions,
     configs: ConfigSet,
     backend: Arc<dyn EstimatorBackend>,
+    /// `Some(kind)` while the backend is a built-in selection: `build`
+    /// re-instantiates it against the final `opts.specialize`, so
+    /// `.backend(...)` and `.specialize(...)` compose in either order.
+    /// Cleared by [`SaEngineBuilder::backend_impl`] (an external
+    /// estimator is used exactly as provided).
+    backend_kind: Option<BackendKind>,
     threads: usize,
     queue_capacity: Option<usize>,
     admission: AdmissionPolicy,
@@ -802,6 +810,7 @@ impl Default for SaEngineBuilder {
             opts: AnalysisOptions::default(),
             configs: ConfigSet::paper(),
             backend: BackendKind::Analytic.instantiate(),
+            backend_kind: Some(BackendKind::Analytic),
             threads: default_threads(),
             queue_capacity: None,
             admission: AdmissionPolicy::default(),
@@ -867,12 +876,26 @@ impl SaEngineBuilder {
     /// Select a built-in backend.
     pub fn backend(mut self, kind: BackendKind) -> Self {
         self.backend = kind.instantiate();
+        self.backend_kind = Some(kind);
         self
     }
 
-    /// Plug an external estimator implementation.
+    /// Plug an external estimator implementation. The engine uses it
+    /// exactly as provided — [`SaEngineBuilder::specialize`] does not
+    /// rewire an external backend.
     pub fn backend_impl(mut self, backend: Arc<dyn EstimatorBackend>) -> Self {
         self.backend = backend;
+        self.backend_kind = None;
+        self
+    }
+
+    /// Enable/disable the fused-kernel pricing fast path
+    /// (`coding::specialize`; `--no-specialize` on the CLI). Default
+    /// on. Only affects built-in backends selected via
+    /// [`SaEngineBuilder::backend`]; results are bit-identical either
+    /// way — the switch exists for conformance forcing and perf triage.
+    pub fn specialize(mut self, on: bool) -> Self {
+        self.opts.specialize = on;
         self
     }
 
@@ -962,12 +985,18 @@ impl SaEngineBuilder {
             Some(store) => Some(store),
             None => ResultCache::from_policy(&self.cache)?,
         };
+        // Built-in backends are re-instantiated here so the final
+        // `opts.specialize` governs regardless of builder-call order.
+        let base = match self.backend_kind {
+            Some(kind) => kind.instantiate_with(self.opts.specialize),
+            None => self.backend,
+        };
         let backend = match &cache {
             Some(store) => Arc::new(CachingBackend::new(
-                self.backend,
+                base,
                 Arc::clone(store),
             )) as Arc<dyn EstimatorBackend>,
-            None => self.backend,
+            None => base,
         };
         let shared = Arc::new(EngineShared {
             opts: self.opts,
@@ -1503,6 +1532,37 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn specialize_toggle_is_bit_identical_and_composes_with_backend() {
+        let net = tinycnn();
+        let fused = small_engine(2, BackendKind::Analytic).sweep(&net).unwrap();
+        // `.specialize(false)` before `.backend(...)`: build() must still
+        // honor the toggle (re-instantiation against the final opts).
+        let interp_engine = SaEngine::builder()
+            .max_tiles_per_layer(2)
+            .threads(2)
+            .specialize(false)
+            .backend(BackendKind::Analytic)
+            .build()
+            .unwrap();
+        assert_eq!(interp_engine.backend_name(), "analytic-interpreter");
+        let interp = interp_engine.sweep(&net).unwrap();
+        for (lf, li) in fused.layers.iter().zip(&interp.layers) {
+            for (rf, ri) in lf.results.iter().zip(&li.results) {
+                assert_eq!(rf.counts, ri.counts, "layer {}", lf.layer_name);
+                assert_eq!(rf.energy, ri.energy, "layer {}", lf.layer_name);
+                // provenance: registry stacks compile when enabled, and
+                // nothing is marked specialized when disabled
+                assert!(rf.specialized, "{} should compile", rf.config_name);
+                assert!(!ri.specialized, "{} forced generic", ri.config_name);
+            }
+        }
+        assert_eq!(
+            fused.total_energy("proposed"),
+            interp.total_energy("proposed")
+        );
     }
 
     #[test]

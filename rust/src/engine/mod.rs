@@ -87,7 +87,10 @@ mod registry;
 mod serve;
 mod telemetry;
 
-pub use self::backend::{AnalyticBackend, BackendKind, CycleBackend, EstimatorBackend};
+pub use self::backend::{
+    AnalyticBackend, BackendKind, CycleBackend, EstimatorBackend,
+    InterpreterAnalyticBackend, InterpreterCycleBackend,
+};
 pub use self::cache::{
     activity_key, config_key, CachePolicy, CacheStats, PersistenceMode, ResultCache,
 };

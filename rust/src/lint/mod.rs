@@ -4,7 +4,7 @@
 //! PRs 6–8 accumulated invariants that existed only as prose ("no
 //! panics on the submit/wait path", "every lock goes through
 //! `lock_recover`", "schema tags match the goldens"). This module turns
-//! them into mechanical checks: a hand-rolled lexer ([`lexer`]), eight
+//! them into mechanical checks: a hand-rolled lexer ([`lexer`]), nine
 //! rules ([`rules`]), and a runner that applies pragma suppression and
 //! renders findings human-readable or as a
 //! [`LINT_REPORT_SCHEMA`]-tagged JSON document.
@@ -12,7 +12,7 @@
 //! The pass is deliberately *targeted* the way the source paper
 //! targets encoding where switching activity is high: rules 1–4 scan
 //! only the modules where a silent violation corrupts results
-//! (`engine/`, `coordinator/`, `sa/`), while rules 5–8 are repo-wide
+//! (`engine/`, `coordinator/`, `sa/`), while rules 5–9 are repo-wide
 //! consistency checks.
 //!
 //! Allowlisting: `// sa-lint: allow(<rule-id>) reason="..."` on the

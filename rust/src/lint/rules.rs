@@ -1,4 +1,4 @@
-//! The `sa-lint` rule set: eight checks encoding the repo's real
+//! The `sa-lint` rule set: nine checks encoding the repo's real
 //! contracts (see the module docs in `lint/mod.rs` and README
 //! §"Static analysis").
 //!
@@ -58,6 +58,12 @@ pub const RULES: &[(&str, &str)] = &[
          test file must contain at least one #[test] — unregistered files \
          silently stop running",
     ),
+    (
+        "kernel-registration",
+        "every specialized kernel shape in coding::specialize's KERNEL_SHAPES \
+         must be named in rust/tests/conformance.rs — a shape without a \
+         fused-vs-interpreter differential clause is an unproven fast path",
+    ),
 ];
 
 /// Run every rule. Order matches [`RULES`].
@@ -71,6 +77,7 @@ pub fn run_all(ctx: &LintContext) -> Vec<Finding> {
     out.extend(error_table_sync(ctx));
     out.extend(registry_hygiene(ctx));
     out.extend(test_registration(ctx));
+    out.extend(kernel_registration(ctx));
     out
 }
 
@@ -829,6 +836,77 @@ pub fn test_registration(ctx: &LintContext) -> Vec<Finding> {
                 "integration test file contains no #[test] — it compiles to an \
                  empty test binary and asserts nothing"
                     .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule 9: kernel-registration
+// ---------------------------------------------------------------------------
+
+/// Every shape name in the `KERNEL_SHAPES` const of
+/// `coding/specialize.rs` must appear as a string literal in the
+/// conformance suite (`rust/tests/conformance.rs`) — that suite is
+/// where each specialized kernel is proven bit-exact against the
+/// generic codec interpreter, so a shape absent from it is a fast path
+/// nothing differentials.
+pub fn kernel_registration(ctx: &LintContext) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(spec) =
+        ctx.files.iter().find(|f| f.path.ends_with("coding/specialize.rs"))
+    else {
+        return out;
+    };
+    let toks = &spec.lex.toks;
+    let Some(at) = toks
+        .iter()
+        .position(|t| !t.in_test && t.is_ident("KERNEL_SHAPES"))
+    else {
+        return out;
+    };
+    // Bound the walk to the const initializer (`= … ;` at nesting 0);
+    // the `;` inside the `[&str; N]` type annotation sits before the
+    // `=` and never terminates the walk.
+    let Some(eq) = (at..toks.len()).find(|&i| toks[i].is_punct('=')) else {
+        return out;
+    };
+    let mut shapes: Vec<(String, u32)> = Vec::new();
+    let mut nest = 0i32;
+    for i in eq + 1..toks.len() {
+        let t = &toks[i];
+        if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+            nest += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+            nest -= 1;
+        } else if nest == 0 && t.is_punct(';') {
+            break;
+        } else if t.kind == TokKind::Str {
+            shapes.push((t.text.clone(), t.line));
+        }
+    }
+    // Conformance side: any string literal equal to the shape name
+    // (test code included — the clauses live in #[test] fns).
+    let conf = ctx.files.iter().find(|f| f.path.ends_with("conformance.rs"));
+    for (shape, line) in &shapes {
+        let named = conf
+            .map(|c| {
+                c.lex
+                    .toks
+                    .iter()
+                    .any(|t| t.kind == TokKind::Str && t.text == *shape)
+            })
+            .unwrap_or(false);
+        if !named {
+            out.push(spec.finding(
+                "kernel-registration",
+                *line,
+                format!(
+                    "specialized kernel shape `{shape}` is not named in \
+                     rust/tests/conformance.rs — every KERNEL_SHAPES entry \
+                     needs a fused-vs-interpreter differential clause"
+                ),
             ));
         }
     }

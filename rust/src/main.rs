@@ -29,9 +29,9 @@ use sa_lowpower::coordinator::{
     synthetic_image, AnalysisOptions, InferenceServer, SweepReport, TinycnnParams,
 };
 use sa_lowpower::engine::{
-    serve_loop, AnalyticBackend, BackendKind, CachePolicy, ConfigRegistry,
-    ConfigSet, CycleBackend, EngineError, EstimatorBackend, FaultPlan, LayerJob,
-    SaEngine, ServeOptions, DEFAULT_ENGINE_CAP,
+    serve_loop, BackendKind, CachePolicy, ConfigRegistry, ConfigSet, EngineError,
+    EstimatorBackend, FaultPlan, LayerJob, SaEngine, ServeOptions,
+    DEFAULT_ENGINE_CAP,
 };
 use sa_lowpower::power::AreaModel;
 use sa_lowpower::report::{ablation_table, fig2_tables, fig45_table, headline_table, Table};
@@ -101,6 +101,8 @@ fn usage() -> String {
   --dataflow one of: {dataflows}   (register movement: weight- vs output-stationary)
   --net      one of: {nets} (where applicable)
   --json-dir DIR                 write machine-readable sweep reports
+  --no-specialize                force the generic codec interpreter instead of
+             the fused pricing kernels (bit-identical results; perf triage)
   --fault-inject SPEC            simulate only: arm deterministic faults
              (grammar: <panic|error|delay:<ms>>@<layer|*>:<tile>[@<stage>],
               stages plan|price|worker; ';'-separated sites)
@@ -129,6 +131,7 @@ fn opts_from(args: &Args) -> Result<AnalysisOptions> {
         seed: args.get_parse("seed", 0xCAFEu64).map_err(|e| anyhow!(e))?,
         max_tiles_per_layer: args.get_parse("tiles", 64usize).map_err(|e| anyhow!(e))?,
         max_dw_channels: args.get_parse("dw-channels", 4usize).map_err(|e| anyhow!(e))?,
+        specialize: !args.flag("no-specialize"),
         sa: SaConfig { dataflow: dataflow_from(args)?, ..SaConfig::default() },
     })
 }
@@ -236,7 +239,7 @@ fn fig2(args: &Args) -> Result<()> {
 fn fig45(args: &Args, net_name: &str) -> Result<()> {
     args.validate(&[
         "tiles", "threads", "seed", "csv-dir", "json-dir", "dw-channels", "backend",
-        "dataflow", "coding",
+        "dataflow", "coding", "no-specialize",
     ])
     .map_err(|e| anyhow!(e))?;
     let engine = engine_from(args, ConfigSet::paper())?;
@@ -271,7 +274,7 @@ fn fig45(args: &Args, net_name: &str) -> Result<()> {
 fn headline(args: &Args) -> Result<()> {
     args.validate(&[
         "tiles", "threads", "seed", "csv-dir", "json-dir", "dw-channels", "backend",
-        "dataflow", "coding",
+        "dataflow", "coding", "no-specialize",
     ])
     .map_err(|e| anyhow!(e))?;
     let engine = engine_from(args, ConfigSet::paper())?;
@@ -289,7 +292,7 @@ fn headline(args: &Args) -> Result<()> {
 fn ablation(args: &Args) -> Result<()> {
     args.validate(&[
         "net", "tiles", "threads", "seed", "csv-dir", "json-dir", "dw-channels",
-        "backend", "dataflow", "coding",
+        "backend", "dataflow", "coding", "no-specialize",
     ])
     .map_err(|e| anyhow!(e))?;
     let engine = engine_from(args, ConfigSet::ablation())?;
@@ -350,7 +353,7 @@ fn stack_from(args: &Args, default_name: &str) -> Result<CodingStack> {
 fn simulate(args: &Args) -> Result<()> {
     args.validate(&[
         "m", "k", "n", "sparsity", "config", "coding", "seed", "backend", "dataflow",
-        "threads", "fault-inject",
+        "threads", "fault-inject", "no-specialize",
     ])
     .map_err(|e| anyhow!(e))?;
     let m = args.get_parse("m", 16usize).map_err(|e| anyhow!(e))?;
@@ -369,6 +372,7 @@ fn simulate(args: &Args) -> Result<()> {
 
     let kind = backend_from(args)?;
     let dataflow = dataflow_from(args)?;
+    let specialize = !args.flag("no-specialize");
     println!(
         "== simulate: {m}x{k}x{n} tile, sparsity {sp}, stack {stack}, \
          backend {}, dataflow {dataflow} ==",
@@ -386,6 +390,7 @@ fn simulate(args: &Args) -> Result<()> {
             .seed(seed)
             .configs(configs_from(args, ConfigSet::paper())?)
             .backend(kind)
+            .specialize(specialize)
             .dataflow(dataflow)
             .threads(threads_from(args)?)
             .fault_plan(plan)
@@ -417,10 +422,14 @@ fn simulate(args: &Args) -> Result<()> {
     // Run both backends: the selected one produces the report, the other
     // cross-checks it (the backend contract says counts are bit-exact).
     let t0 = std::time::Instant::now();
-    let cycle = CycleBackend.estimate(&tile, &stack, dataflow)?;
+    let cycle = BackendKind::Cycle
+        .instantiate_with(specialize)
+        .estimate(&tile, &stack, dataflow)?;
     let t_cycle = t0.elapsed();
     let t1 = std::time::Instant::now();
-    let fast = AnalyticBackend.estimate(&tile, &stack, dataflow)?;
+    let fast = BackendKind::Analytic
+        .instantiate_with(specialize)
+        .estimate(&tile, &stack, dataflow)?;
     let t_fast = t1.elapsed();
     if cycle != fast {
         bail!(
@@ -692,7 +701,7 @@ fn sweep_size(args: &Args) -> Result<()> {
 fn transformer(args: &Args) -> Result<()> {
     args.validate(&[
         "tiles", "threads", "seed", "csv-dir", "json-dir", "dw-channels", "backend",
-        "coding",
+        "coding", "no-specialize",
     ])
     .map_err(|e| anyhow!(e))?;
     let net = Network::by_name("transformer").unwrap();

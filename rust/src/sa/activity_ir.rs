@@ -54,7 +54,10 @@ use crate::activity::{
     ham16_masked, ham16_slice, ham_bf16, stream_toggles, ActivityCounts,
 };
 use crate::bf16::{as_bits, Bf16};
-use crate::coding::{CodingStack, EdgeStack};
+use crate::coding::{
+    specialize, CodingStack, EdgeStack, LaneTotals, LoadOverhead,
+    SpecializedStack,
+};
 
 use super::{Dataflow, Tile};
 
@@ -83,6 +86,12 @@ pub struct TileActivity<'t> {
     mac: [Option<MacSide>; 4],
     /// Lazy functional result C = A×B (f32 accumulation).
     outputs: Option<Vec<f32>>,
+    /// Compile recognized stacks to fused lane kernels in [`Self::price`]
+    /// (on by default; the `--no-specialize` escape hatch clears it).
+    specialize: bool,
+    /// Survivor-compaction arena recycled across lanes and stacks by the
+    /// fused kernels.
+    scratch: Vec<u16>,
 }
 
 impl<'t> TileActivity<'t> {
@@ -98,7 +107,16 @@ impl<'t> TileActivity<'t> {
             nnz_b: (0..k).map(|kk| tile.nnz_b_row(kk)).collect(),
             mac: [None; 4],
             outputs: None,
+            specialize: true,
+            scratch: Vec::new(),
         }
+    }
+
+    /// Enable or disable the fused-kernel fast path of [`Self::price`]
+    /// (`--no-specialize`). Pricing results are bit-identical either
+    /// way; disabling forces the generic interpreter.
+    pub fn set_specialize(&mut self, on: bool) {
+        self.specialize = on;
     }
 
     /// The dataflow this activity was counted under.
@@ -116,17 +134,28 @@ impl<'t> TileActivity<'t> {
     /// attach the cached MAC-side ledger for the stack's gate
     /// combination. Bit-identical to a from-scratch estimate of the same
     /// `(tile, stack, dataflow)` triple.
+    ///
+    /// Recognized stacks run through the fused monomorphized kernels of
+    /// [`specialize`]; anything else (and everything, under
+    /// `--no-specialize`) takes [`Self::price_generic`]. The two paths
+    /// are conformance-pinned bit-identical.
     pub fn price(&mut self, stack: &CodingStack) -> ActivityCounts {
-        let (m, k, n) = (self.tile.m, self.tile.k, self.tile.n);
-        let mut c = ActivityCounts::default();
+        if self.specialize {
+            if let Some(kernels) = specialize(stack) {
+                return self.price_specialized(stack, &kernels);
+            }
+        }
+        self.price_generic(stack)
+    }
 
-        // Register/bus charge factor per lane: one register per PE
-        // passed (WS pipelines) vs a single edge drive register (OS
-        // buses). The per-PE decoder taps are the fanout either way.
-        let (west_regs, north_regs) = match self.dataflow {
-            Dataflow::WeightStationary => (n as u64, m as u64),
-            Dataflow::OutputStationary => (1, 1),
-        };
+    /// The generic interpreter path: every lane word walks the stack's
+    /// codec stage chain. Semantic anchor for [`Self::price`] and the
+    /// only path for out-of-tree codecs; public so conformance can force
+    /// it regardless of the specialize flag.
+    pub fn price_generic(&mut self, stack: &CodingStack) -> ActivityCounts {
+        let (m, n) = (self.tile.m, self.tile.n);
+        let mut c = ActivityCounts::default();
+        let (west_regs, north_regs) = self.reg_factors();
 
         // ---------------- West (input) lanes ----------------
         for i in 0..m {
@@ -154,7 +183,77 @@ impl<'t> TileActivity<'t> {
             );
         }
 
-        // ---------------- MAC side: shared per gate combo -------------
+        self.attach_shared(stack, c)
+    }
+
+    /// The fused-kernel path: identical structure to
+    /// [`Self::price_generic`], with each lane walked by the stack's
+    /// compiled [`SpecializedStack`] kernels instead of the interpreter
+    /// (single generic-free pass per lane, wide popcounts, the scratch
+    /// arena recycled across lanes). The per-lane totals feed the same
+    /// [`charge_lane`] arithmetic, so only the per-word walk differs.
+    fn price_specialized(
+        &mut self,
+        stack: &CodingStack,
+        kernels: &SpecializedStack,
+    ) -> ActivityCounts {
+        let (m, k, n) = (self.tile.m, self.tile.k, self.tile.n);
+        let mut c = ActivityCounts::default();
+        let (west_regs, north_regs) = self.reg_factors();
+
+        for i in 0..m {
+            let t = kernels.west.lane_totals(self.tile.a_row(i), &mut self.scratch);
+            charge_lane(
+                &t,
+                k as u64,
+                kernels.west.gates(),
+                kernels.west.coded_lines(),
+                kernels.west.load_overhead(),
+                west_regs,
+                n as u64,
+                LaneSide::West,
+                &mut c,
+            );
+        }
+        for j in 0..n {
+            let t =
+                kernels.north.lane_totals(self.tile.b_col(j), &mut self.scratch);
+            charge_lane(
+                &t,
+                k as u64,
+                kernels.north.gates(),
+                kernels.north.coded_lines(),
+                kernels.north.load_overhead(),
+                north_regs,
+                m as u64,
+                LaneSide::North,
+                &mut c,
+            );
+        }
+
+        self.attach_shared(stack, c)
+    }
+
+    /// Register/bus charge factor per lane: one register per PE passed
+    /// (WS pipelines) vs a single edge drive register (OS buses). The
+    /// per-PE decoder taps are the fanout either way.
+    fn reg_factors(&self) -> (u64, u64) {
+        match self.dataflow {
+            Dataflow::WeightStationary => {
+                (self.tile.n as u64, self.tile.m as u64)
+            }
+            Dataflow::OutputStationary => (1, 1),
+        }
+    }
+
+    /// The stack-shape-independent tail of pricing: the cached MAC-side
+    /// ledger for the stack's gate combination plus unload/cycle totals.
+    fn attach_shared(
+        &mut self,
+        stack: &CodingStack,
+        mut c: ActivityCounts,
+    ) -> ActivityCounts {
+        let (m, k, n) = (self.tile.m, self.tile.k, self.tile.n);
         let mac = self.mac_side(stack.west.gates(), stack.north.gates());
         c.active_macs = mac.active_macs;
         c.gated_macs = mac.gated_macs;
@@ -250,11 +349,13 @@ enum LaneSide {
 }
 
 /// Stream counts for one lane (a West row or a North column), charged
-/// to the matching side of the ledger. `regs` is the register/bus
-/// charge factor (registers per lane under WS, 1 under OS); `dec_taps`
-/// is the number of per-PE XOR-decoder taps on the lane (the PE count
-/// either way). Single pass through the edge's codec stack — one coder
-/// allocation per lane, nothing per word; this is the sweep hot path.
+/// to the matching side of the ledger via [`charge_lane`]. `regs` is
+/// the register/bus charge factor (registers per lane under WS, 1 under
+/// OS); `dec_taps` is the number of per-PE XOR-decoder taps on the lane
+/// (the PE count either way). Single interpreter pass through the
+/// edge's codec stack — one coder allocation per lane, nothing per
+/// word. (The specialized kernels replace only this walk; they produce
+/// the same [`LaneTotals`] and share [`charge_lane`].)
 fn lane_counts(
     raw: &[Bf16],
     edge: &EdgeStack,
@@ -277,17 +378,12 @@ fn lane_counts(
     let mut prev_word = 0u16;
     let mut prev_sb = 0u8;
     let mut prev_zero = false;
-    let mut raw_toggles = 0u64; // data-line toggles per register
-    let mut clock_bits = 0u64; // FF clock events per register
-    let mut loads = 0u64; // register load slots (non-gated values)
-    let mut inv_toggles = 0u64;
-    let mut dec_toggles = 0u64;
-    let mut zero_sb_toggles = 0u64;
+    let mut t = LaneTotals::default();
 
     for &v in raw {
         let slot = coder.next(v);
         if gates {
-            zero_sb_toggles += (slot.gated != prev_zero) as u64;
+            t.zero_sb_toggles += (slot.gated != prev_zero) as u64;
             prev_zero = slot.gated;
             if slot.gated {
                 continue; // pipeline frozen: nothing loads
@@ -296,37 +392,60 @@ fn lane_counts(
         debug_assert_eq!(edge.decode(slot.word, slot.sideband).0, v.0);
         if codes {
             let inv_diff = (prev_sb ^ slot.sideband).count_ones() as u64;
-            inv_toggles += inv_diff;
-            dec_toggles +=
+            t.inv_toggles += inv_diff;
+            t.dec_toggles +=
                 ham16_masked(prev_word, slot.word.0, mask) as u64 + inv_diff;
             prev_sb = slot.sideband;
         }
-        raw_toggles += (prev_word ^ slot.word.0).count_ones() as u64;
-        clock_bits += match clock_gate {
+        t.raw_toggles += (prev_word ^ slot.word.0).count_ones() as u64;
+        t.clock_bits += match clock_gate {
             Some(cg) => cg.load_clock_bits(prev_word, slot.word.0),
             None => 16,
         };
         prev_word = slot.word.0;
-        loads += 1;
+        t.loads += 1;
     }
 
     let ops = coder.ops();
-    c.zero_detect_ops += ops.zero_detect_ops;
-    c.encoder_ops += ops.encoder_ops;
+    t.zero_detect_ops = ops.zero_detect_ops;
+    t.encoder_ops = ops.encoder_ops;
 
-    let data_toggles = regs * raw_toggles;
-    let data_clocks = regs * clock_bits;
-    let inv_sideband_toggles = regs * inv_toggles;
-    let inv_sideband_clocks = regs * lines * loads;
-    let decoder_toggles = dec_taps * dec_toggles;
+    charge_lane(&t, k, gates, lines, over, regs, dec_taps, side, c);
+}
+
+/// Scale one lane's stream totals by its register/fanout factors and
+/// charge them to the matching side of the ledger. Shared verbatim by
+/// the interpreter walk ([`lane_counts`]) and the fused kernels, so the
+/// two pricing paths can only differ in the per-word walk — which the
+/// conformance suite pins bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn charge_lane(
+    t: &LaneTotals,
+    k: u64,
+    gates: bool,
+    lines: u64,
+    over: LoadOverhead,
+    regs: u64,
+    dec_taps: u64,
+    side: LaneSide,
+    c: &mut ActivityCounts,
+) {
+    c.zero_detect_ops += t.zero_detect_ops;
+    c.encoder_ops += t.encoder_ops;
+
+    let data_toggles = regs * t.raw_toggles;
+    let data_clocks = regs * t.clock_bits;
+    let inv_sideband_toggles = regs * t.inv_toggles;
+    let inv_sideband_clocks = regs * lines * t.loads;
+    let decoder_toggles = dec_taps * t.dec_toggles;
     // Register clock-gate codecs (DDCG): comparator + per-group ICG burn
     // on every load slot of every register.
-    let cmp_bit_cycles = regs * over.comparator_bit_cycles * loads;
-    let load_cg_cycles = regs * over.cg_cell_cycles * loads;
+    let cmp_bit_cycles = regs * over.comparator_bit_cycles * t.loads;
+    let load_cg_cycles = regs * over.cg_cell_cycles * t.loads;
 
     // is-zero sideband: always clocked, one bit; ICG burns every slot.
     let (zero_sb_toggles, zero_sb_clocks, gate_cg_cycles) = if gates {
-        (regs * zero_sb_toggles, regs * k, regs * k)
+        (regs * t.zero_sb_toggles, regs * k, regs * k)
     } else {
         (0, 0, 0)
     };
@@ -553,6 +672,30 @@ mod tests {
                 let sim = simulate_tile(&t, &CodingStack::baseline(), df);
                 assert_eq!(ir.outputs(), &sim.c[..], "{df}");
                 assert_eq!(ir.outputs(), &t.reference_result()[..], "{df}");
+            }
+        });
+    }
+
+    #[test]
+    fn specialized_and_generic_pricing_agree() {
+        // price() compiles registry stacks to fused kernels;
+        // price_generic() interprets. Same TileActivity, same stacks,
+        // bit-identical ledgers — and set_specialize(false) must route
+        // price() itself through the interpreter.
+        check("fused price == interpreted price", 10, |rng| {
+            let (m, k, n) =
+                (1 + rng.below(6), 1 + rng.below(16), 1 + rng.below(6));
+            let t = random_tile(rng, m, k, n, rng.uniform(), 0.3);
+            for df in BOTH {
+                let mut fused = TileActivity::new(&t, df);
+                let mut forced = TileActivity::new(&t, df);
+                forced.set_specialize(false);
+                for e in ConfigRegistry::entries() {
+                    let stack = e.stack();
+                    let fast = fused.price(&stack);
+                    assert_eq!(fast, fused.price_generic(&stack), "{}", e.name);
+                    assert_eq!(fast, forced.price(&stack), "{}", e.name);
+                }
             }
         });
     }

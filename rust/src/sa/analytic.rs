@@ -30,12 +30,29 @@ use crate::coding::CodingStack;
 use super::{Dataflow, Tile, TileActivity};
 
 /// Exact activity counts for one tile under a coding stack and dataflow.
+/// Recognized stacks run through the fused kernels of
+/// `coding::specialize`; see [`analyze_tile_with`] to force the generic
+/// interpreter (`--no-specialize`). Results are bit-identical either
+/// way.
 pub fn analyze_tile(
     tile: &Tile,
     stack: &CodingStack,
     dataflow: Dataflow,
 ) -> ActivityCounts {
-    TileActivity::new(tile, dataflow).price(stack)
+    analyze_tile_with(tile, stack, dataflow, true)
+}
+
+/// [`analyze_tile`] with the fused-kernel fast path explicitly enabled
+/// or disabled.
+pub fn analyze_tile_with(
+    tile: &Tile,
+    stack: &CodingStack,
+    dataflow: Dataflow,
+    specialize: bool,
+) -> ActivityCounts {
+    let mut ir = TileActivity::new(tile, dataflow);
+    ir.set_specialize(specialize);
+    ir.price(stack)
 }
 
 /// Batched [`analyze_tile`]: count the tile once, price every stack in
@@ -47,7 +64,19 @@ pub fn analyze_tile_many(
     stacks: &[CodingStack],
     dataflow: Dataflow,
 ) -> Vec<ActivityCounts> {
+    analyze_tile_many_with(tile, stacks, dataflow, true)
+}
+
+/// [`analyze_tile_many`] with the fused-kernel fast path explicitly
+/// enabled or disabled.
+pub fn analyze_tile_many_with(
+    tile: &Tile,
+    stacks: &[CodingStack],
+    dataflow: Dataflow,
+    specialize: bool,
+) -> Vec<ActivityCounts> {
     let mut ir = TileActivity::new(tile, dataflow);
+    ir.set_specialize(specialize);
     stacks.iter().map(|s| ir.price(s)).collect()
 }
 

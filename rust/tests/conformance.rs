@@ -381,6 +381,228 @@ fn estimate_many_holds_on_degenerate_tiles() {
     }
 }
 
+// ---- specialized kernels: fused pricing == generic interpreter -------
+
+use sa_lowpower::bf16::Bf16;
+use sa_lowpower::coding::{
+    specialize, specializes, AreaFootprint, CodecRole, CodedWord, CodingStack,
+    EdgeStack, LaneCoder, StreamCodec, KERNEL_SHAPES,
+};
+use sa_lowpower::engine::{InterpreterAnalyticBackend, InterpreterCycleBackend};
+use std::sync::Arc;
+
+/// One full-stack spec per specialized kernel shape, keyed by the
+/// [`KERNEL_SHAPES`] name both of its edges compile to. Every shape the
+/// compiler ships must be named here — `sa-lint`'s `kernel-registration`
+/// rule checks that each `KERNEL_SHAPES` string appears in this file, so
+/// a new kernel cannot land without a conformance stack exercising it.
+const SHAPE_STACKS: [(&str, &str); 8] = [
+    ("plain", "baseline"),
+    ("zvcg", "w:zvcg,i:zvcg"),
+    ("bic", "w:bic-mantissa,i:bic-full-mt"),
+    ("zvcg+bic", "w:zvcg+bic-segmented,i:zvcg+bic-exponent-mt"),
+    ("ddcg", "w:ddcg16-g4,i:ddcg16-g1"),
+    ("zvcg+ddcg", "w:zvcg+ddcg16-g8,i:zvcg+ddcg16-g16"),
+    ("bic+ddcg", "w:bic-full+ddcg16-g2,i:bic-mantissa-mt+ddcg16-g4"),
+    ("zvcg+bic+ddcg", "w:zvcg+bic-exponent+ddcg16-g8,i:zvcg+bic-mantissa+ddcg16-g2"),
+];
+
+#[test]
+fn every_kernel_shape_is_named_and_specializes() {
+    let mut seen: Vec<&str> = Vec::new();
+    for (shape, spec) in SHAPE_STACKS {
+        assert!(KERNEL_SHAPES.contains(&shape), "'{shape}' is not a kernel shape");
+        let stack = CodingStack::parse(spec).unwrap();
+        assert!(specializes(&stack), "'{spec}' must compile");
+        let kernels = specialize(&stack).unwrap();
+        assert_eq!(kernels.west.shape_name(), shape, "'{spec}' west edge");
+        assert_eq!(kernels.north.shape_name(), shape, "'{spec}' north edge");
+        seen.push(shape);
+    }
+    for shape in KERNEL_SHAPES {
+        assert!(seen.contains(&shape), "shape '{shape}' has no conformance stack");
+    }
+}
+
+/// The tentpole contract: for every kernel shape and every registry
+/// stack, the fused specialized pricing equals the generic `StreamCodec`
+/// interpreter — full ledgers, both dataflows, both backend families —
+/// and both equal the literal per-cycle reference.
+#[test]
+fn specialized_pricing_matches_the_interpreter_on_every_shape() {
+    check("fused kernels == StreamCodec interpreter", 10, |rng| {
+        let (m, k, n) = (1 + rng.below(6), 1 + rng.below(18), 1 + rng.below(6));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.5;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        let mut stacks: Vec<(String, CodingStack)> = SHAPE_STACKS
+            .iter()
+            .map(|(_, spec)| (spec.to_string(), CodingStack::parse(spec).unwrap()))
+            .collect();
+        for (name, stack) in ConfigSet::all().iter() {
+            stacks.push((name.clone(), stack.clone()));
+        }
+        for (name, stack) in &stacks {
+            for df in [WS, OS] {
+                let fused = AnalyticBackend.estimate(&t, stack, df).unwrap();
+                let interp =
+                    InterpreterAnalyticBackend.estimate(&t, stack, df).unwrap();
+                assert_eq!(fused, interp, "'{name}' {df} analytic");
+                assert_eq!(
+                    CycleBackend.estimate_many(&t, &[stack.clone()], df).unwrap(),
+                    InterpreterCycleBackend
+                        .estimate_many(&t, &[stack.clone()], df)
+                        .unwrap(),
+                    "'{name}' {df} cycle (batched)"
+                );
+                assert_eq!(
+                    fused,
+                    simulate_tile_reference(&t, stack, df).counts,
+                    "'{name}' {df} vs literal reference"
+                );
+            }
+        }
+    });
+}
+
+/// Same differential over *random composed* stacks (any gate/BIC/DDCG
+/// combination the spec grammar admits on either edge) — the fused path
+/// must match the interpreter on stacks nobody hand-picked.
+#[test]
+fn specialized_pricing_matches_the_interpreter_on_random_stacks() {
+    check("fused == interpreter on random composed stacks", 12, |rng| {
+        let (m, k, n) = (1 + rng.below(6), 1 + rng.below(16), 1 + rng.below(6));
+        let pz_a = rng.uniform();
+        let pz_b = rng.uniform() * 0.5;
+        let t = random_tile(rng, m, k, n, pz_a, pz_b);
+        let stacks: Vec<CodingStack> = (0..4).map(|_| random_stack(rng)).collect();
+        // every grammar-built stack is made of in-tree codecs only
+        for stack in &stacks {
+            assert!(specializes(stack), "'{}' must compile", stack.spec());
+        }
+        for df in [WS, OS] {
+            assert_eq!(
+                AnalyticBackend.estimate_many(&t, &stacks, df).unwrap(),
+                InterpreterAnalyticBackend.estimate_many(&t, &stacks, df).unwrap(),
+                "{df} analytic batched"
+            );
+            assert_eq!(
+                CycleBackend.estimate_many(&t, &stacks, df).unwrap(),
+                InterpreterCycleBackend.estimate_many(&t, &stacks, df).unwrap(),
+                "{df} cycle batched"
+            );
+            for stack in &stacks {
+                assert_eq!(
+                    AnalyticBackend.estimate(&t, stack, df).unwrap(),
+                    InterpreterAnalyticBackend.estimate(&t, stack, df).unwrap(),
+                    "'{}' {df}",
+                    stack.spec()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn specialized_pricing_holds_on_degenerate_tiles() {
+    let mut rng = Rng64::new(0xF00D);
+    let stacks: Vec<CodingStack> = SHAPE_STACKS
+        .iter()
+        .map(|(_, spec)| CodingStack::parse(spec).unwrap())
+        .collect();
+    for t in degenerate_tiles(&mut rng) {
+        for df in [WS, OS] {
+            assert_eq!(
+                AnalyticBackend.estimate_many(&t, &stacks, df).unwrap(),
+                InterpreterAnalyticBackend.estimate_many(&t, &stacks, df).unwrap(),
+                "{df} {}x{}x{}",
+                t.m,
+                t.k,
+                t.n
+            );
+            assert_eq!(
+                CycleBackend.estimate_many(&t, &stacks, df).unwrap(),
+                InterpreterCycleBackend.estimate_many(&t, &stacks, df).unwrap(),
+                "{df} {}x{}x{} cycle",
+                t.m,
+                t.k,
+                t.n
+            );
+        }
+    }
+}
+
+/// An out-of-tree transform the specializer has never heard of: XORs a
+/// fixed mask onto the low byte (self-inverse, so `decode∘encode` is the
+/// identity). Exists to prove the fallback path, not to save power.
+#[derive(Debug)]
+struct XorScramble;
+
+const SCRAMBLE_MASK: u16 = 0x00A5;
+
+struct XorScrambleLane;
+
+impl LaneCoder for XorScrambleLane {
+    fn encode(&mut self, word: Bf16) -> CodedWord {
+        CodedWord::Tx { word: Bf16::from_bits(word.0 ^ SCRAMBLE_MASK), sideband: 0 }
+    }
+}
+
+impl StreamCodec for XorScramble {
+    fn name(&self) -> String {
+        "xor-scramble".into()
+    }
+
+    fn role(&self) -> CodecRole {
+        CodecRole::Transform
+    }
+
+    fn cover_mask(&self) -> u16 {
+        SCRAMBLE_MASK
+    }
+
+    fn begin(&self) -> Box<dyn LaneCoder> {
+        Box::new(XorScrambleLane)
+    }
+
+    fn decode(&self, word: Bf16, _sideband: u8) -> Bf16 {
+        Bf16::from_bits(word.0 ^ SCRAMBLE_MASK)
+    }
+
+    fn area(&self) -> AreaFootprint {
+        AreaFootprint::default()
+    }
+}
+
+/// A specialize miss must be silent: an unknown codec makes the stack
+/// uncompilable, `specialize` returns `None`, and the default backends
+/// transparently price through the generic interpreter — matching the
+/// interpreter-forced variants and the literal reference exactly.
+#[test]
+fn unknown_codecs_fall_back_to_the_generic_interpreter() {
+    let west =
+        EdgeStack::from_codecs(vec![Arc::new(XorScramble) as Arc<dyn StreamCodec>])
+            .unwrap();
+    let stack = CodingStack { west, north: EdgeStack::empty() };
+    assert!(!specializes(&stack), "out-of-tree codec must not compile");
+    assert!(specialize(&stack).is_none());
+
+    let mut rng = Rng64::new(0xABAD);
+    let t = random_tile(&mut rng, 4, 12, 4, 0.4, 0.2);
+    for df in [WS, OS] {
+        let fused = AnalyticBackend.estimate(&t, &stack, df).unwrap();
+        let interp = InterpreterAnalyticBackend.estimate(&t, &stack, df).unwrap();
+        assert_eq!(fused, interp, "{df}: fallback must be bit-identical");
+        assert_eq!(
+            fused,
+            simulate_tile_reference(&t, &stack, df).counts,
+            "{df}: fallback vs literal reference"
+        );
+        // and the f32 outputs survive the scramble (decode∘encode = id)
+        assert_eq!(simulate_tile(&t, &stack, df).c, t.reference_result(), "{df}");
+    }
+}
+
 // ---- boundary: zero-K tiles are rejected at construction -------------
 
 #[test]

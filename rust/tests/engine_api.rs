@@ -60,6 +60,7 @@ fn handmade_report() -> SweepReport {
                 scaled_streaming_toggles: 2.0 * counts.streaming_toggles() as f64,
                 counts,
                 energy,
+                specialized: false,
             }],
             faults: Vec::new(),
         }],
@@ -155,6 +156,7 @@ fn handmade_transformer_report() -> SweepReport {
                         * qkv_counts.streaming_toggles() as f64,
                     counts: qkv_counts,
                     energy: qkv_energy,
+                    specialized: false,
                 }],
                 faults: Vec::new(),
             },
@@ -172,6 +174,7 @@ fn handmade_transformer_report() -> SweepReport {
                         * ffn_counts.streaming_toggles() as f64,
                     counts: ffn_counts,
                     energy: ffn_energy,
+                    specialized: false,
                 }],
                 faults: Vec::new(),
             },

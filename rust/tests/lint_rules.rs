@@ -289,6 +289,71 @@ fn test_registration_pragma_on_line_one_suppresses() {
 }
 
 // ---------------------------------------------------------------------------
+// Rule 9: kernel-registration
+// ---------------------------------------------------------------------------
+
+const FIXTURE_SHAPES: &str = "\
+/// Fixture shape table (the `;` in the type annotation must not
+/// terminate the initializer walk).
+pub const KERNEL_SHAPES: [&str; 3] = [
+    \"plain\",
+    \"zvcg\",
+    \"zvcg+bic\",
+];
+";
+
+fn kernel_ctx(conformance: Option<&str>) -> LintContext {
+    kernel_ctx_with(FIXTURE_SHAPES, conformance)
+}
+
+fn kernel_ctx_with(shapes: &str, conformance: Option<&str>) -> LintContext {
+    let mut files =
+        vec![SourceFile::parse("rust/src/coding/specialize.rs", shapes)];
+    if let Some(text) = conformance {
+        files.push(SourceFile::parse("rust/tests/conformance.rs", text));
+    }
+    LintContext { files, ..LintContext::default() }
+}
+
+#[test]
+fn kernel_registration_flags_shapes_missing_from_conformance() {
+    // The conformance fixture names two of the three shapes; the third
+    // ("zvcg+bic", line 6 of the shape table) must be flagged. A
+    // mention buried inside a longer literal does not count.
+    let conf = "const S: [&str; 3] = [\"plain\", \"zvcg\", \"w:zvcg+bic-x\"];\n";
+    let out = run(&kernel_ctx(Some(conf)));
+    assert_eq!(lines(&out, "kernel-registration"), vec![6], "{out:#?}");
+    assert!(out.iter().all(|f| f.rule == "kernel-registration"), "{out:#?}");
+    assert!(out[0].why.contains("zvcg+bic"), "{out:#?}");
+    assert_eq!(out[0].file, "rust/src/coding/specialize.rs");
+}
+
+#[test]
+fn kernel_registration_clean_when_every_shape_is_named() {
+    let conf = "const S: [&str; 3] = [\"plain\", \"zvcg\", \"zvcg+bic\"];\n";
+    let out = run(&kernel_ctx(Some(conf)));
+    assert!(out.is_empty(), "{out:#?}");
+}
+
+#[test]
+fn kernel_registration_flags_every_shape_without_a_conformance_file() {
+    let out = run(&kernel_ctx(None));
+    assert_eq!(lines(&out, "kernel-registration"), vec![4, 5, 6], "{out:#?}");
+}
+
+#[test]
+fn kernel_registration_pragma_suppresses_per_line() {
+    let patched = insert_before(
+        FIXTURE_SHAPES,
+        6,
+        "    // sa-lint: allow(kernel-registration) reason=\"fixture proves pragma suppression\"",
+    );
+    let conf = "const S: [&str; 2] = [\"plain\", \"zvcg\"];\n";
+    let out = run(&kernel_ctx_with(&patched, Some(conf)));
+    assert!(out.is_empty(), "{out:#?}");
+}
+
+// ---------------------------------------------------------------------------
 // The real tree is clean
 // ---------------------------------------------------------------------------
 
